@@ -1,0 +1,46 @@
+//! End-to-end serving benchmark: the full L3 stack (router -> batcher ->
+//! engine) under different engines, batch limits and worker counts.
+//! This is the measured companion to Fig. 11 / §5.4.3 on this machine.
+//!
+//!     cargo bench --bench e2e_serving
+
+use spa_gcn::coordinator::server::{serve_workload, ServeConfig};
+use spa_gcn::util::bench::time_once;
+
+fn run(engine: &str, queries: usize, workers: usize, batch_max: usize) -> anyhow::Result<()> {
+    let cfg = ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        engine: engine.into(),
+        queries,
+        workers,
+        batch_max,
+        batch_timeout_us: 200,
+        seed: 77,
+    };
+    let label = format!("serve {engine} q={queries} w={workers} b={batch_max}");
+    let (t, _) = time_once(&label, || serve_workload(&cfg).unwrap());
+    // rows: 0 scored, 3 throughput, 5 p50, 7 p99, 8 mean batch
+    println!(
+        "    -> scored {}  throughput {} q/s  p50 {} ms  p99 {} ms  mean batch {}\n",
+        t.rows[0][1], t.rows[3][1], t.rows[5][1], t.rows[7][1], t.rows[8][1]
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== engine comparison (measured on this machine) ==");
+    for engine in ["native", "xla", "xla-fused"] {
+        run(engine, 2000, 1, 64)?;
+    }
+
+    println!("== batching sweep on the PJRT engine (real Fig. 11) ==");
+    for b in [1usize, 4, 16, 64] {
+        run("xla", 1000, 1, b)?;
+    }
+
+    println!("== worker scaling (native engine; 2-core machine) ==");
+    for w in [1usize, 2] {
+        run("native", 2000, w, 64)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate paper Fig. 11 (query batching) — simulated sweep plus
+//! the real measured PJRT batching curve on this machine.
+//!
+//!     cargo bench --bench fig11
+use spa_gcn::report::tables::{fig11, replication, Context};
+use spa_gcn::util::bench::time_once;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Context::load(std::path::Path::new("artifacts"))?;
+    let (t, _) = time_once("fig11 (256 queries, with PJRT)", || fig11(&ctx, 256, true));
+    println!("\n{}", t.render());
+    let (r, _) = time_once("replication (§5.4.3)", || replication(&ctx, 128));
+    println!("\n{}", r.render());
+    Ok(())
+}

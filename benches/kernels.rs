@@ -1,0 +1,79 @@
+//! Micro-benchmarks of the hot paths in every layer the rust side owns:
+//! reference numerics (NativeEngine's inner loops), encoding, edge
+//! reordering, the cycle simulator itself, and exact GED.
+//!
+//!     cargo bench --bench kernels
+
+use spa_gcn::ged::exact_ged;
+use spa_gcn::graph::encode::encode;
+use spa_gcn::graph::generate::{generate, Family};
+use spa_gcn::graph::normalize::normalized_edges;
+use spa_gcn::graph::reorder::reorder_edges;
+use spa_gcn::nn::linalg::matmul;
+use spa_gcn::nn::simgnn::{gcn_forward, simgnn_forward};
+use spa_gcn::report::tables::Context;
+use spa_gcn::sim::config::ArchConfig;
+use spa_gcn::sim::ft::{nonzero_stream, sparse_ft_cycles};
+use spa_gcn::sim::gcn::simulate_query;
+use spa_gcn::sim::platform::U280;
+use spa_gcn::util::bench::bench;
+use spa_gcn::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Context::load(std::path::Path::new("artifacts"))?;
+    let cfg = &ctx.cfg;
+    let mut rng = Rng::new(0xbe9c);
+    let g1 = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    let g2 = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    let e1 = encode(&g1, cfg.n_max, cfg.num_labels)?;
+    let e2 = encode(&g2, cfg.n_max, cfg.num_labels)?;
+
+    println!("-- L3 native numerics (NativeEngine hot path) --");
+    let a: Vec<f32> = (0..32 * 64).map(|i| (i % 7) as f32 * 0.1).collect();
+    let b: Vec<f32> = (0..64 * 32).map(|i| (i % 5) as f32 * 0.1).collect();
+    bench("matmul 32x64x32 (dense)", || {
+        std::hint::black_box(matmul(&a, &b, 32, 64, 32));
+    });
+    bench("gcn_forward (3 layers, one graph)", || {
+        std::hint::black_box(gcn_forward(cfg, &ctx.weights, &e1));
+    });
+    bench("simgnn_forward (full pair)", || {
+        std::hint::black_box(simgnn_forward(cfg, &ctx.weights, &e1, &e2));
+    });
+
+    println!("\n-- preprocessing (the paper's offline host steps) --");
+    bench("encode (normalize A' + one-hot + pad)", || {
+        std::hint::black_box(encode(&g1, cfg.n_max, cfg.num_labels).unwrap());
+    });
+    let edges = normalized_edges(&g1);
+    bench("edge reorder (RAW window L=7)", || {
+        std::hint::black_box(reorder_edges(&edges, 7));
+    });
+
+    println!("\n-- cycle simulator --");
+    let trace = gcn_forward(cfg, &ctx.weights, &e1);
+    let stream = nonzero_stream(&trace.layer_inputs[1], e1.num_nodes, cfg.filters[0]);
+    let params = ArchConfig::spa_gcn().layers[1];
+    bench("sparse FT arbiter sim (layer 2)", || {
+        std::hint::black_box(sparse_ft_cycles(&stream, 32, &params, 7, 4));
+    });
+    let arch = ArchConfig::spa_gcn();
+    let tr2 = gcn_forward(cfg, &ctx.weights, &e2);
+    bench("simulate_query (full SimGNN pipeline)", || {
+        std::hint::black_box(simulate_query(
+            cfg,
+            &arch,
+            &U280,
+            (&g1, &e1, &trace),
+            (&g2, &e2, &tr2),
+        ));
+    });
+
+    println!("\n-- exact GED (the NP-complete ground truth) --");
+    let t1 = generate(&mut rng, Family::ErdosRenyi { n: 6, p_millis: 300 }, 32, 8);
+    let t2g = generate(&mut rng, Family::ErdosRenyi { n: 6, p_millis: 300 }, 32, 8);
+    bench("exact GED (6-node pair, A*)", || {
+        std::hint::black_box(exact_ged(&t1, &t2g, 1_000_000));
+    });
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Table 4 (GCN architecture ablation on U280)
+//! on the full-size workload and time the simulator itself.
+//!
+//!     cargo bench --bench table4
+use spa_gcn::report::tables::{table4, Context};
+use spa_gcn::util::bench::time_once;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Context::load(std::path::Path::new("artifacts"))?;
+    let (t, secs) = time_once("table4 (400 queries)", || table4(&ctx, 400));
+    println!("\n{}", t.render());
+    println!("simulator throughput: {:.0} simulated queries/s (3 variants x 400 queries)", 3.0 * 400.0 / secs);
+    Ok(())
+}

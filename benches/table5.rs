@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Table 5 (SPA-GCN across KU15P/U50/U280).
+//!
+//!     cargo bench --bench table5
+use spa_gcn::report::tables::{table5, Context};
+use spa_gcn::util::bench::time_once;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Context::load(std::path::Path::new("artifacts"))?;
+    let (t, _) = time_once("table5 (400 queries)", || table5(&ctx, 400));
+    println!("\n{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Table 6 (FPGA-sim vs CPU vs GPU, plus the real
+//! measured rust-native and PJRT engines on this machine).
+//!
+//!     cargo bench --bench table6
+use spa_gcn::report::tables::{table6, Context};
+use spa_gcn::util::bench::time_once;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Context::load(std::path::Path::new("artifacts"))?;
+    let (t, _) = time_once("table6 (300 queries, with PJRT)", || table6(&ctx, 300, true));
+    println!("\n{}", t.render());
+    Ok(())
+}

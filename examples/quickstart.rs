@@ -1,0 +1,65 @@
+//! Quickstart: load the AOT artifacts, score one graph pair on the PJRT
+//! runtime, and cross-check against the independent rust numerics.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use spa_gcn::graph::encode::{encode, PackedBatch};
+use spa_gcn::graph::generate::{generate, perturb, Family};
+use spa_gcn::nn::simgnn::simgnn_score;
+use spa_gcn::nn::weights::Weights;
+use spa_gcn::runtime::pjrt::XlaEngine;
+use spa_gcn::runtime::Engine;
+use spa_gcn::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from("artifacts");
+
+    // 1. Load the compiled SimGNN (HLO text -> PJRT executable).
+    let mut engine = XlaEngine::load(&artifacts)?;
+    println!(
+        "loaded SimGNN artifacts on platform '{}' (batch sizes {:?})",
+        engine.platform(),
+        engine.supported_batch_sizes()
+    );
+    let cfg = engine.meta().config.clone();
+
+    // 2. Make a query: an AIDS-like molecule and a 6-edit perturbation.
+    let mut rng = Rng::new(7);
+    let g1 = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    let g2 = perturb(&mut rng, &g1, 6, cfg.n_max, cfg.num_labels);
+    println!(
+        "graph 1: {} nodes / {} edges; graph 2 (6 edits): {} nodes / {} edges",
+        g1.num_nodes(),
+        g1.num_edges(),
+        g2.num_nodes(),
+        g2.num_edges()
+    );
+
+    // 3. Encode + score on the accelerator runtime.
+    let e1 = encode(&g1, cfg.n_max, cfg.num_labels)?;
+    let e2 = encode(&g2, cfg.n_max, cfg.num_labels)?;
+    let batch = PackedBatch::pack(&[(e1.clone(), e2.clone())], 1);
+    let scores = engine.score_batch(&batch)?;
+    println!("PJRT similarity score: {:.6}", scores[0]);
+
+    // 4. Cross-check with the independent rust reference numerics.
+    let weights = Weights::load(&cfg, &artifacts)?;
+    let native = simgnn_score(&cfg, &weights, &e1, &e2);
+    println!("native similarity score: {native:.6}");
+    anyhow::ensure!(
+        (scores[0] - native).abs() < 1e-4,
+        "engines disagree: {} vs {native}",
+        scores[0]
+    );
+
+    // 5. An identical pair should score strictly higher than the edited one.
+    let same = PackedBatch::pack(&[(e1.clone(), e1.clone())], 1);
+    let same_score = engine.score_batch(&same)?[0];
+    println!("identical-pair score:    {same_score:.6}");
+    println!(
+        "ranking check: identical {} edited pair",
+        if same_score > scores[0] { ">" } else { "<= (unexpected)" }
+    );
+    println!("quickstart OK");
+    Ok(())
+}

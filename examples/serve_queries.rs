@@ -1,0 +1,70 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §5, EXPERIMENTS.md §E2E).
+//!
+//! Serves a realistic workload through the full production stack —
+//! synthetic AIDS-like database -> admission router -> dynamic batcher ->
+//! AOT-compiled SimGNN on the PJRT runtime — and reports latency and
+//! throughput, proving all three layers compose: L1 Pallas kernels and
+//! the L2 jax model live inside the HLO artifacts, and L3 (this process)
+//! never touches python.
+//!
+//!     make artifacts && cargo run --release --example serve_queries
+//!
+//! Flags: --queries N (default 10000, the paper's §5.1 query count),
+//!        --engine xla|native|sim, --batch-max B, --workers K.
+
+use std::collections::HashMap;
+
+use spa_gcn::coordinator::server::{serve_workload, ServeConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut flags: HashMap<String, String> = HashMap::new();
+    let mut iter = std::env::args().skip(1);
+    while let Some(a) = iter.next() {
+        if let Some(k) = a.strip_prefix("--") {
+            flags.insert(k.to_string(), iter.next().unwrap_or_default());
+        }
+    }
+    let get = |k: &str, d: usize| -> usize {
+        flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    };
+
+    let engine = flags.get("engine").cloned().unwrap_or_else(|| "xla".into());
+    let queries = get("queries", 10_000);
+    // Batch sweep first (the Fig. 11 experiment on the real runtime) ...
+    println!("== batching sweep on the real {engine} runtime ==");
+    for batch_max in [1usize, 4, 16, 64] {
+        let cfg = ServeConfig {
+            artifacts_dir: "artifacts".into(),
+            engine: engine.clone(),
+            queries: (queries / 8).max(64),
+            workers: 1,
+            batch_max,
+            batch_timeout_us: 200,
+            seed: 11,
+        };
+        let t = serve_workload(&cfg)?;
+        // rows: scored/rejected/errors/throughput/mean/p50/p95/p99/batch
+        let tput = &t.rows[3][1];
+        let p50 = &t.rows[5][1];
+        let p99 = &t.rows[7][1];
+        println!(
+            "batch_max={batch_max:<3} -> throughput {tput:>8} q/s, p50 {p50} ms, p99 {p99} ms"
+        );
+    }
+
+    // ... then the full serving run.
+    let cfg = ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        engine,
+        queries,
+        workers: get("workers", 1),
+        batch_max: get("batch-max", 64),
+        batch_timeout_us: get("batch-timeout-us", 200) as u64,
+        seed: 42,
+    };
+    println!("\n== full serving run: {} queries ==", cfg.queries);
+    let report = serve_workload(&cfg)?;
+    println!("{}", report.render());
+    println!("serve_queries OK (record this table in EXPERIMENTS.md §E2E)");
+    Ok(())
+}

@@ -1,0 +1,209 @@
+"""AOT compile path: python runs ONCE here, never on the request path.
+
+Emits into artifacts/:
+  * simgnn_b{B}.hlo.txt  — full SimGNN pipeline, batch B, weights baked in
+  * gcn3_b1.hlo.txt      — GCN stage only (node embeddings), for quickstart
+  * weights.bin/json     — trained weights (rust nn/ + simulator consume)
+  * meta.json            — config, artifact manifest, sparsity stats
+  * train_log.json       — loss curve of the build-time training run
+and into tests/golden/:
+  * simgnn_golden.json   — deterministic inputs + oracle outputs for rust
+
+Interchange format is HLO TEXT (not .serialize()): jax>=0.5 emits protos
+with 64-bit instruction ids that xla_extension 0.5.1 rejects; the HLO text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import ARTIFACT_BATCH_SIZES, DEFAULT_CONFIG, ModelConfig
+from .graphgen import make_pair_dataset
+from .model import gcn_embed, init_params, simgnn_batch, simgnn_batch_ref
+from .train import save_log, train
+from .weights import load_weights, save_weights
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "constant({...})" not in text, "HLO printer elided constants"
+    return text
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_simgnn(params, cfg: ModelConfig, batch: int,
+                 fused: bool = False) -> str:
+    """Lower the batched SimGNN forward.
+
+    fused=False: the Pallas-kernel path (interpret=True) — faithful L1,
+      the artifact a TPU deployment would compile from the same source.
+    fused=True: the pure-jnp path (identical math, test-asserted equal) —
+      XLA fuses it into batched GEMMs, which is the fast form for the CPU
+      PJRT backend (interpret-mode Pallas pays a per-grid-step loop with
+      full-tensor updates on CPU). See EXPERIMENTS.md §Perf (L2).
+    """
+    n, l = cfg.n_max, cfg.num_labels
+
+    def fn(a1, h1, m1, a2, h2, m2):
+        if fused:
+            return (simgnn_batch_ref(params, cfg, a1, h1, m1, a2, h2, m2),)
+        return (simgnn_batch(params, cfg, a1, h1, m1, a2, h2, m2),)
+
+    lowered = jax.jit(fn).lower(
+        _spec(batch, n, n), _spec(batch, n, l), _spec(batch, n),
+        _spec(batch, n, n), _spec(batch, n, l), _spec(batch, n),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_gcn3(params, cfg: ModelConfig, batch: int) -> str:
+    n, l = cfg.n_max, cfg.num_labels
+
+    def fn(a, h, m):
+        return (gcn_embed(params, cfg, a, h, m),)
+
+    lowered = jax.jit(fn).lower(_spec(batch, n, n), _spec(batch, n, l),
+                                _spec(batch, n))
+    return to_hlo_text(lowered)
+
+
+def measure_sparsity(params, cfg: ModelConfig, num_pairs: int = 64,
+                     seed: int = 11) -> dict:
+    """§3.4 reproduction: sparsity of the inputs to GCN layers 2 and 3.
+
+    Paper reports 52% / 47% on AIDS-drawn graphs (zeros among the features
+    of *real* nodes after ReLU).
+    """
+    rng = np.random.RandomState(seed)
+    (a1, h1, m1, *_), _ = make_pair_dataset(rng, cfg, num_pairs)
+    a1, h1, m1 = jnp.array(a1), jnp.array(h1), jnp.array(m1)
+    from .kernels import gcn_layer
+
+    stats = {}
+    x = h1
+    for i in range(3):
+        x = gcn_layer(a1, x, params["gcn_w"][i], params["gcn_b"][i], m1,
+                      relu=cfg.relu_mask[i])
+        real = np.asarray(m1).sum() * x.shape[2]
+        zeros = float(((np.asarray(x) == 0.0) * np.asarray(m1)[:, :, None]).sum())
+        if i < 2:  # sparsity of input to layer i+2
+            stats[f"layer{i + 2}_input_sparsity"] = float(zeros / real)
+    h0_real = np.asarray(m1).sum() * h1.shape[2]
+    h0_zeros = float(((np.asarray(h1) == 0.0) * np.asarray(m1)[:, :, None]).sum())
+    stats["layer1_input_sparsity"] = float(h0_zeros / h0_real)  # one-hot
+    return stats
+
+
+def emit_golden(params, cfg: ModelConfig, path: str, num_pairs: int = 6,
+                seed: int = 3) -> None:
+    """Deterministic input/output vectors for the rust test-suite."""
+    rng = np.random.RandomState(seed)
+    data, y = make_pair_dataset(rng, cfg, num_pairs)
+    inputs = tuple(jnp.array(d) for d in data)
+    scores = np.asarray(simgnn_batch_ref(params, cfg, *inputs))
+    scores_pallas = np.asarray(simgnn_batch(params, cfg, *inputs))
+    assert np.allclose(scores, scores_pallas, atol=1e-5), "pallas != oracle"
+    emb1 = np.asarray(gcn_embed(params, cfg, inputs[0], inputs[1], inputs[2]))
+    doc = {
+        "config": cfg.to_json_dict(),
+        "num_pairs": num_pairs,
+        "a1": np.asarray(data[0]).reshape(-1).tolist(),
+        "h1": np.asarray(data[1]).reshape(-1).tolist(),
+        "m1": np.asarray(data[2]).reshape(-1).tolist(),
+        "a2": np.asarray(data[3]).reshape(-1).tolist(),
+        "h2": np.asarray(data[4]).reshape(-1).tolist(),
+        "m2": np.asarray(data[5]).reshape(-1).tolist(),
+        "scores": scores.tolist(),
+        "embeddings1": emb1.reshape(-1).tolist(),
+        "edit_targets": np.asarray(y).tolist(),
+    }
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    print(f"[aot] wrote golden vectors ({num_pairs} pairs) to {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--golden", default="../tests/golden/simgnn_golden.json")
+    ap.add_argument("--train-steps", type=int, default=800)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="use seeded init instead of training")
+    ap.add_argument("--reuse-weights", action="store_true",
+                    help="load existing weights.bin instead of retraining")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    cfg = DEFAULT_CONFIG
+    if args.reuse_weights and os.path.exists(os.path.join(out, "weights.bin")):
+        print("[aot] reusing existing weights.bin")
+        params = load_weights(cfg, out)
+    elif args.skip_train:
+        print("[aot] using seeded init (skip-train)")
+        params = init_params(cfg)
+    else:
+        print(f"[aot] training SimGNN for {args.train_steps} steps ...")
+        params, log_doc = train(cfg, steps=args.train_steps)
+        save_log(log_doc, os.path.join(out, "train_log.json"))
+
+    save_weights(params, cfg, out)
+    print("[aot] wrote weights.bin / weights.json")
+
+    artifacts = []
+    for b in ARTIFACT_BATCH_SIZES:
+        for fused in (False, True):
+            text = lower_simgnn(params, cfg, b, fused=fused)
+            kind = "simgnn_fused" if fused else "simgnn"
+            name = f"{kind}_b{b}.hlo.txt"
+            with open(os.path.join(out, name), "w") as f:
+                f.write(text)
+            artifacts.append({"name": name, "kind": kind, "batch": b,
+                              "inputs": ["a1", "h1", "m1", "a2", "h2", "m2"],
+                              "outputs": ["scores"]})
+            print(f"[aot] wrote {name} ({len(text)} chars)")
+    text = lower_gcn3(params, cfg, 1)
+    with open(os.path.join(out, "gcn3_b1.hlo.txt"), "w") as f:
+        f.write(text)
+    artifacts.append({"name": "gcn3_b1.hlo.txt", "kind": "gcn3", "batch": 1,
+                      "inputs": ["a", "h", "m"], "outputs": ["embeddings"]})
+    print(f"[aot] wrote gcn3_b1.hlo.txt ({len(text)} chars)")
+
+    sparsity = measure_sparsity(params, cfg)
+    print(f"[aot] sparsity stats: {sparsity}")
+
+    meta = {
+        "config": cfg.to_json_dict(),
+        "artifact_batch_sizes": list(ARTIFACT_BATCH_SIZES),
+        "artifacts": artifacts,
+        "sparsity": sparsity,
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print("[aot] wrote meta.json")
+
+    emit_golden(params, cfg, args.golden)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,95 @@
+"""Shared model/shape configuration for the SPA-GCN SimGNN reproduction.
+
+This is the single source of truth for every static shape that crosses the
+python->rust AOT boundary. `aot.py` serializes it into artifacts/meta.json;
+the rust side (`rust/src/nn/config.rs`) parses that file and must agree.
+
+Defaults follow the reference SimGNN implementation
+(benedekrozemberczki/SimGNN) scaled to the dimensions used throughout the
+SPA-GCN paper's discussion of small graphs: three GCN layers, a
+global-context attention pooling stage, a neural tensor network with K
+similarity slices, and a small fully-connected scorer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration of the SimGNN pipeline.
+
+    Attributes:
+      n_max: padded node count. Graphs with more nodes are rejected by the
+        rust router. AIDS graphs have 25.6 nodes on average (paper §5.1),
+        so 32 keeps padding waste low while staying MXU/SIMD friendly.
+      num_labels: one-hot node-label vocabulary (29 distinct atom types in
+        the AIDS antiviral screen dataset as used by SimGNN).
+      filters: output feature count of each of the three GCN layers.
+      relu_mask: whether each GCN layer ends in ReLU. The paper exploits
+        post-ReLU sparsity of the inputs to layers 2 and 3 (52%/47%,
+        §3.4), which requires ReLU on layers 1 and 2.
+      ntn_k: number of NTN similarity slices (hyper-parameter K in Eq. 4).
+      fc_dims: hidden dims of the fully-connected reduction stage; the
+        final layer to a scalar + sigmoid is implicit.
+    """
+
+    n_max: int = 32
+    num_labels: int = 29
+    filters: Tuple[int, int, int] = (64, 32, 16)
+    relu_mask: Tuple[bool, bool, bool] = (True, True, False)
+    ntn_k: int = 16
+    fc_dims: Tuple[int, ...] = (16, 8)
+    seed: int = 20210521  # arbitrary but fixed: SPA-GCN arXiv submission date
+
+    @property
+    def feature_dims(self) -> List[int]:
+        """Per-layer input feature dims: [num_labels, f1, f2]."""
+        return [self.num_labels, self.filters[0], self.filters[1]]
+
+    @property
+    def embed_dim(self) -> int:
+        """Graph-level embedding dim F (output of GCN stage / Att)."""
+        return self.filters[-1]
+
+    def to_json_dict(self) -> dict:
+        return {
+            "n_max": self.n_max,
+            "num_labels": self.num_labels,
+            "filters": list(self.filters),
+            "relu_mask": list(self.relu_mask),
+            "ntn_k": self.ntn_k,
+            "fc_dims": list(self.fc_dims),
+            "seed": self.seed,
+        }
+
+    @staticmethod
+    def from_json_dict(d: dict) -> "ModelConfig":
+        return ModelConfig(
+            n_max=int(d["n_max"]),
+            num_labels=int(d["num_labels"]),
+            filters=tuple(d["filters"]),
+            relu_mask=tuple(bool(x) for x in d["relu_mask"]),
+            ntn_k=int(d["ntn_k"]),
+            fc_dims=tuple(d["fc_dims"]),
+            seed=int(d["seed"]),
+        )
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json_dict(), f, indent=2)
+
+    @staticmethod
+    def load(path: str) -> "ModelConfig":
+        with open(path) as f:
+            return ModelConfig.from_json_dict(json.load(f))
+
+
+DEFAULT_CONFIG = ModelConfig()
+
+# Batch sizes for which `aot.py` emits a pre-lowered HLO artifact. The rust
+# batcher picks the largest artifact <= pending queries and loops.
+ARTIFACT_BATCH_SIZES = (1, 4, 16, 64)

@@ -1,0 +1,5 @@
+"""L1 Pallas kernels for the SPA-GCN / SimGNN reproduction."""
+from . import ref  # noqa: F401
+from .att import attention_pool  # noqa: F401
+from .gcn import gcn_layer  # noqa: F401
+from .ntn import ntn  # noqa: F401

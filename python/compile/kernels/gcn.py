@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: one fused GCN layer (Feature Transformation +
+Aggregation + bias + ReLU) over a batch of padded small graphs.
+
+This is the compute hot-spot of the paper (§2.1, §3): per layer
+    out = relu(A' @ (H @ W) + b)
+with the paper's chosen association A' x (H x W), which keeps both matmuls
+sparse-dense (§3, "we have chosen the latter since it results in a fewer
+number of operations").
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper streams H
+column-major through DF x SIMD MAC arrays with FIFOs between MULT and ACG
+modules. On a TPU the analogous schedule is: keep the whole per-graph
+working set (A' 32x32, H 32x64, W 64x64 worst case, ~49 KiB) resident in
+VMEM and issue both matmuls back-to-back on the MXU, one grid step per
+graph in the batch — the leading grid dimension plays the role of the
+paper's query-level parallelism (§5.4.3). Zero-skipping is not profitable
+on a systolic MXU, so sparsity exploitation lives in the cycle simulator
+(rust/src/sim) that models the FPGA.
+
+The kernel MUST be lowered with interpret=True in this environment: real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gcn_layer_kernel(a_ref, h_ref, w_ref, b_ref, m_ref, o_ref, *, relu: bool):
+    """Body for one grid step = one graph of the batch.
+
+    Block shapes: a (1,n,n), h (1,n,fin), w (fin,fout), b (fout,),
+    m (1,n), o (1,n,fout).
+    """
+    a = a_ref[0]
+    h = h_ref[0]
+    w = w_ref[...]
+    b = b_ref[...]
+    m = m_ref[0]
+    # Feature Transformation (paper's MULT + ACC units): X = H @ W.
+    x = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    # Aggregation (paper's ACG unit): weighted gather over neighbors.
+    agg = jnp.dot(a, x, preferred_element_type=jnp.float32)
+    # Bias is masked so padded rows remain exactly zero (padding invariant).
+    out = agg + m[:, None] * b[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    else:
+        out = out * m[:, None]
+    o_ref[0] = out
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "interpret"))
+def gcn_layer(a_norm, h, w, b, mask, relu: bool = True, interpret: bool = True):
+    """Batched fused GCN layer.
+
+    Args:
+      a_norm: (B, n, n) normalized padded adjacency A'.
+      h: (B, n, f_in) node embeddings.
+      w: (f_in, f_out) layer weight (shared across the batch — the data
+        reuse the paper exploits by caching W on-chip).
+      b: (f_out,) bias.
+      mask: (B, n) 1.0 for real nodes.
+      relu: apply ReLU (layers 1-2 in SimGNN) or just mask (layer 3).
+
+    Returns:
+      (B, n, f_out) output embeddings; padded rows are exactly zero.
+    """
+    bsz, n, f_in = h.shape
+    f_out = w.shape[1]
+    kernel = functools.partial(_gcn_layer_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, f_in), lambda i: (i, 0, 0)),
+            pl.BlockSpec((f_in, f_out), lambda i: (0, 0)),
+            pl.BlockSpec((f_out,), lambda i: (0,)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, f_out), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n, f_out), jnp.float32),
+        interpret=interpret,
+    )(a_norm, h, w, b, mask)

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: SimGNN neural tensor network (paper §4.3, Eq. 4).
+
+Per pair of graph embeddings:
+    s_k = relu(hG1^T W_k hG2 + V_k . [hG1; hG2] + b_k),  k = 1..K
+
+The paper notes this stage is "a series of fixed-size MVMs" and keeps it
+deliberately small; here it is one grid step per pair with the K slices
+evaluated as a single (K*F, F) matmul against hG2 followed by a dot with
+hG1 — a shape the MXU handles in one pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ntn_kernel(h1_ref, h2_ref, w_ref, v_ref, b_ref, o_ref):
+    h1 = h1_ref[0]      # (F,)
+    h2 = h2_ref[0]      # (F,)
+    w = w_ref[...]      # (K, F, F)
+    v = v_ref[...]      # (K, 2F)
+    b = b_ref[...]      # (K,)
+    k, f, _ = w.shape
+    # Bilinear term: fold K into the row dimension for a single MXU pass.
+    wh2 = jnp.dot(w.reshape(k * f, f), h2,
+                  preferred_element_type=jnp.float32).reshape(k, f)
+    bilinear = jnp.dot(wh2, h1, preferred_element_type=jnp.float32)
+    linear = jnp.dot(v, jnp.concatenate([h1, h2]),
+                     preferred_element_type=jnp.float32)
+    o_ref[0] = jnp.maximum(bilinear + linear + b, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ntn(hg1, hg2, w_ntn, v, b, interpret: bool = True):
+    """Batched NTN: (B, F) x (B, F) -> (B, K) similarity slices."""
+    bsz, f = hg1.shape
+    k = w_ntn.shape[0]
+    return pl.pallas_call(
+        _ntn_kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, f), lambda i: (i, 0)),
+            pl.BlockSpec((1, f), lambda i: (i, 0)),
+            pl.BlockSpec((k, f, f), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k, 2 * f), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, k), jnp.float32),
+        interpret=interpret,
+    )(hg1, hg2, w_ntn, v, b)

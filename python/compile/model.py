@@ -1,0 +1,110 @@
+"""L2: the SimGNN compute graph in JAX, calling the L1 Pallas kernels.
+
+Two entry points:
+  * `simgnn_batch(params, cfg, ...)`  — batched pair scoring used for the
+    AOT artifacts that the rust runtime executes (Pallas kernels inside).
+  * `simgnn_batch_ref(...)`           — identical math on the pure-jnp
+    oracle (`kernels.ref`), used for training (autodiff does not flow
+    through `pallas_call` without a custom VJP) and as the test oracle.
+
+Parameter manifest order is FIXED and shared with rust via
+artifacts/weights.json — see weights.py.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .kernels import attention_pool, gcn_layer, ntn, ref
+
+Params = Dict[str, object]
+
+
+def _glorot(rng: np.random.RandomState, shape) -> np.ndarray:
+    fan_in, fan_out = shape[0], shape[-1]
+    limit = np.sqrt(6.0 / (fan_in + fan_out))
+    return rng.uniform(-limit, limit, size=shape).astype(np.float32)
+
+
+def init_params(cfg: ModelConfig) -> Params:
+    """Deterministic Glorot init from cfg.seed (shared with tests)."""
+    rng = np.random.RandomState(cfg.seed)
+    f1, f2, f3 = cfg.filters
+    k = cfg.ntn_k
+    dims_in = [cfg.num_labels, f1, f2]
+    dims_out = [f1, f2, f3]
+    params: Params = {
+        "gcn_w": [jnp.array(_glorot(rng, (i, o))) for i, o in zip(dims_in, dims_out)],
+        "gcn_b": [jnp.array(np.zeros(o, np.float32)) for o in dims_out],
+        "att_w": jnp.array(_glorot(rng, (f3, f3))),
+        "ntn_w": jnp.array(
+            np.stack([_glorot(rng, (f3, f3)) for _ in range(k)])
+        ),
+        "ntn_v": jnp.array(_glorot(rng, (k, 2 * f3))),
+        "ntn_b": jnp.array(np.zeros(k, np.float32)),
+    }
+    fc_ws: List[jnp.ndarray] = []
+    fc_bs: List[jnp.ndarray] = []
+    d = k
+    for h in cfg.fc_dims:
+        fc_ws.append(jnp.array(_glorot(rng, (d, h))))
+        fc_bs.append(jnp.array(np.zeros(h, np.float32)))
+        d = h
+    params["fc_w"] = fc_ws
+    params["fc_b"] = fc_bs
+    params["out_w"] = jnp.array(_glorot(rng, (d, 1)))
+    params["out_b"] = jnp.array(np.zeros(1, np.float32))
+    return params
+
+
+def _fcn_batch(params: Params, s: jnp.ndarray) -> jnp.ndarray:
+    """Final FC reduction, batched: (B, K) -> (B,) similarity in (0,1)."""
+    x = s
+    for w, b in zip(params["fc_w"], params["fc_b"]):
+        x = jnp.maximum(x @ w + b[None, :], 0.0)
+    logit = (x @ params["out_w"] + params["out_b"])[:, 0]
+    return 1.0 / (1.0 + jnp.exp(-logit))
+
+
+def gcn_embed(params: Params, cfg: ModelConfig, a, h, m,
+              interpret: bool = True) -> jnp.ndarray:
+    """The GCN stage (paper §3): 3 fused Pallas layers -> (B, n, F)."""
+    x = h
+    for i in range(3):
+        x = gcn_layer(a, x, params["gcn_w"][i], params["gcn_b"][i], m,
+                      relu=cfg.relu_mask[i], interpret=interpret)
+    return x
+
+
+def simgnn_batch(params: Params, cfg: ModelConfig,
+                 a1, h1, m1, a2, h2, m2, interpret: bool = True) -> jnp.ndarray:
+    """Full SimGNN pipeline on B padded pairs -> (B,) scores.
+
+    Mirrors the paper's stage structure (Fig. 7): GCN x3 -> Att -> NTN ->
+    FCN. The two graphs share the GCN/Att weights exactly as the paper's
+    accelerator reuses one GCN module for both graphs of a query (§4.2).
+    """
+    e1 = gcn_embed(params, cfg, a1, h1, m1, interpret)
+    e2 = gcn_embed(params, cfg, a2, h2, m2, interpret)
+    hg1 = attention_pool(e1, params["att_w"], m1, interpret=interpret)
+    hg2 = attention_pool(e2, params["att_w"], m2, interpret=interpret)
+    s = ntn(hg1, hg2, params["ntn_w"], params["ntn_v"], params["ntn_b"],
+            interpret=interpret)
+    return _fcn_batch(params, s)
+
+
+def simgnn_pair_ref(params: Params, cfg: ModelConfig, a1, h1, m1, a2, h2, m2):
+    """Single-pair oracle forward (differentiable; used by train.py)."""
+    return ref.simgnn_pair(params, a1, h1, m1, a2, h2, m2, cfg.relu_mask)
+
+
+def simgnn_batch_ref(params: Params, cfg: ModelConfig, a1, h1, m1, a2, h2, m2):
+    """Batched oracle forward via vmap (differentiable)."""
+    fn = lambda A1, H1, M1, A2, H2, M2: simgnn_pair_ref(
+        params, cfg, A1, H1, M1, A2, H2, M2)
+    return jax.vmap(fn)(a1, h1, m1, a2, h2, m2)

@@ -1,0 +1,113 @@
+"""Weight serialization shared between python (producer) and rust (consumer).
+
+Format:
+  * weights.bin  — all tensors as little-endian f32, concatenated in
+    MANIFEST order, no header.
+  * weights.json — manifest: [{"name", "shape", "offset"}], offset in
+    *floats* from the start of the file.
+
+The manifest order is fixed so the rust loader (rust/src/nn/weights.rs)
+can also be used without the JSON (defensive double-check: it validates
+offsets against shapes).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .model import Params
+
+
+def manifest_entries(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """The fixed (name, shape) manifest for a given config."""
+    f3 = cfg.filters[-1]
+    k = cfg.ntn_k
+    dims_in = [cfg.num_labels, cfg.filters[0], cfg.filters[1]]
+    entries: List[Tuple[str, Tuple[int, ...]]] = []
+    for i in range(3):
+        entries.append((f"gcn_w{i}", (dims_in[i], cfg.filters[i])))
+        entries.append((f"gcn_b{i}", (cfg.filters[i],)))
+    entries.append(("att_w", (f3, f3)))
+    entries.append(("ntn_w", (k, f3, f3)))
+    entries.append(("ntn_v", (k, 2 * f3)))
+    entries.append(("ntn_b", (k,)))
+    d = k
+    for i, h in enumerate(cfg.fc_dims):
+        entries.append((f"fc_w{i}", (d, h)))
+        entries.append((f"fc_b{i}", (h,)))
+        d = h
+    entries.append(("out_w", (d, 1)))
+    entries.append(("out_b", (1,)))
+    return entries
+
+
+def _flatten_in_manifest_order(params: Params, cfg: ModelConfig):
+    tensors = []
+    for i in range(3):
+        tensors.append((f"gcn_w{i}", params["gcn_w"][i]))
+        tensors.append((f"gcn_b{i}", params["gcn_b"][i]))
+    tensors.append(("att_w", params["att_w"]))
+    tensors.append(("ntn_w", params["ntn_w"]))
+    tensors.append(("ntn_v", params["ntn_v"]))
+    tensors.append(("ntn_b", params["ntn_b"]))
+    for i in range(len(cfg.fc_dims)):
+        tensors.append((f"fc_w{i}", params["fc_w"][i]))
+        tensors.append((f"fc_b{i}", params["fc_b"][i]))
+    tensors.append(("out_w", params["out_w"]))
+    tensors.append(("out_b", params["out_b"]))
+    return tensors
+
+
+def save_weights(params: Params, cfg: ModelConfig, out_dir: str) -> dict:
+    """Write weights.bin + weights.json into out_dir; return the manifest."""
+    tensors = _flatten_in_manifest_order(params, cfg)
+    expected = manifest_entries(cfg)
+    manifest = []
+    offset = 0
+    blobs = []
+    for (name, arr), (exp_name, exp_shape) in zip(tensors, expected):
+        assert name == exp_name, (name, exp_name)
+        a = np.asarray(arr, dtype=np.float32)
+        assert a.shape == tuple(exp_shape), (name, a.shape, exp_shape)
+        manifest.append({"name": name, "shape": list(a.shape), "offset": offset})
+        offset += a.size
+        blobs.append(a.reshape(-1))
+    flat = np.concatenate(blobs).astype("<f4")
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        f.write(flat.tobytes())
+    doc = {"total_floats": int(offset), "tensors": manifest}
+    with open(os.path.join(out_dir, "weights.json"), "w") as f:
+        json.dump(doc, f, indent=1)
+    return doc
+
+
+def load_weights(cfg: ModelConfig, out_dir: str) -> Params:
+    """Read weights.bin back into a Params dict (inverse of save_weights)."""
+    flat = np.fromfile(os.path.join(out_dir, "weights.bin"), dtype="<f4")
+    entries = manifest_entries(cfg)
+    arrays = {}
+    offset = 0
+    for name, shape in entries:
+        size = int(np.prod(shape))
+        arrays[name] = jnp.array(flat[offset:offset + size].reshape(shape))
+        offset += size
+    assert offset == flat.size, (offset, flat.size)
+    params: Params = {
+        "gcn_w": [arrays[f"gcn_w{i}"] for i in range(3)],
+        "gcn_b": [arrays[f"gcn_b{i}"] for i in range(3)],
+        "att_w": arrays["att_w"],
+        "ntn_w": arrays["ntn_w"],
+        "ntn_v": arrays["ntn_v"],
+        "ntn_b": arrays["ntn_b"],
+        "fc_w": [arrays[f"fc_w{i}"] for i in range(len(cfg.fc_dims))],
+        "fc_b": [arrays[f"fc_b{i}"] for i in range(len(cfg.fc_dims))],
+        "out_w": arrays["out_w"],
+        "out_b": arrays["out_b"],
+    }
+    return params

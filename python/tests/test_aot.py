@@ -1,0 +1,99 @@
+"""AOT path: artifacts exist, parse, and agree with meta.json + weights IO."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import ARTIFACT_BATCH_SIZES, ModelConfig
+from compile.model import init_params, simgnn_batch
+from compile.weights import load_weights, manifest_entries, save_weights
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "meta.json")),
+    reason="run `make artifacts` first",
+)
+
+
+def test_meta_lists_all_artifacts():
+    with open(os.path.join(ART, "meta.json")) as f:
+        meta = json.load(f)
+    names = {a["name"] for a in meta["artifacts"]}
+    for b in ARTIFACT_BATCH_SIZES:
+        assert f"simgnn_b{b}.hlo.txt" in names
+    assert "gcn3_b1.hlo.txt" in names
+    for n in names:
+        assert os.path.exists(os.path.join(ART, n)), n
+
+
+def test_hlo_text_well_formed():
+    with open(os.path.join(ART, "simgnn_b1.hlo.txt")) as f:
+        text = f.read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # 6 parameters: a1 h1 m1 a2 h2 m2
+    assert text.count("parameter(") >= 6
+
+
+def test_weights_roundtrip(tmp_path):
+    cfg = ModelConfig()
+    params = init_params(cfg)
+    save_weights(params, cfg, str(tmp_path))
+    loaded = load_weights(cfg, str(tmp_path))
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(params["gcn_w"][i]),
+                                      np.asarray(loaded["gcn_w"][i]))
+    np.testing.assert_array_equal(np.asarray(params["ntn_w"]),
+                                  np.asarray(loaded["ntn_w"]))
+    np.testing.assert_array_equal(np.asarray(params["out_w"]),
+                                  np.asarray(loaded["out_w"]))
+
+
+def test_manifest_matches_bin_size():
+    cfg = ModelConfig()
+    with open(os.path.join(ART, "weights.json")) as f:
+        doc = json.load(f)
+    entries = manifest_entries(cfg)
+    assert [t["name"] for t in doc["tensors"]] == [n for n, _ in entries]
+    total = sum(int(np.prod(s)) for _, s in entries)
+    assert doc["total_floats"] == total
+    size = os.path.getsize(os.path.join(ART, "weights.bin"))
+    assert size == 4 * total
+
+
+def test_sparsity_stats_match_paper_shape():
+    """§3.4: the paper reports 52%/47% sparsity into GCN layers 2/3; our
+    synthetic AIDS-like data should land in the same regime (30-80%)."""
+    with open(os.path.join(ART, "meta.json")) as f:
+        meta = json.load(f)
+    s2 = meta["sparsity"]["layer2_input_sparsity"]
+    s3 = meta["sparsity"]["layer3_input_sparsity"]
+    assert 0.3 <= s2 <= 0.8, s2
+    assert 0.3 <= s3 <= 0.8, s3
+    assert meta["sparsity"]["layer1_input_sparsity"] > 0.9  # one-hot
+
+
+def test_golden_scores_reproducible():
+    """Re-running the trained weights on the golden inputs reproduces the
+    stored scores (guards against weight/golden drift)."""
+    golden_path = os.path.join(os.path.dirname(__file__), "..", "..",
+                               "tests", "golden", "simgnn_golden.json")
+    with open(golden_path) as f:
+        g = json.load(f)
+    cfg = ModelConfig.from_json_dict(g["config"])
+    params = load_weights(cfg, ART)
+    n_pairs = g["num_pairs"]
+    n, l = cfg.n_max, cfg.num_labels
+    shape = lambda flat, *s: jnp.array(np.array(flat, np.float32).reshape(*s))
+    a1 = shape(g["a1"], n_pairs, n, n)
+    h1 = shape(g["h1"], n_pairs, n, l)
+    m1 = shape(g["m1"], n_pairs, n)
+    a2 = shape(g["a2"], n_pairs, n, n)
+    h2 = shape(g["h2"], n_pairs, n, l)
+    m2 = shape(g["m2"], n_pairs, n)
+    scores = np.asarray(simgnn_batch(params, cfg, a1, h1, m1, a2, h2, m2))
+    np.testing.assert_allclose(scores, np.array(g["scores"]), atol=1e-5)

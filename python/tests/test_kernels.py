@@ -1,0 +1,145 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, sparsity rates and batch sizes — the CORE
+correctness signal for the kernels that end up inside the AOT artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import ModelConfig
+from compile.kernels import attention_pool, gcn_layer, ntn, ref
+
+CFG = ModelConfig()
+
+
+def random_graph_tensors(rng, bsz, n, f_in, sparsity=0.0):
+    """Random padded (a_norm, h, mask) batch with per-graph real-node count."""
+    a = np.zeros((bsz, n, n), np.float32)
+    h = rng.randn(bsz, n, f_in).astype(np.float32)
+    mask = np.zeros((bsz, n), np.float32)
+    for i in range(bsz):
+        real = rng.randint(2, n + 1)
+        mask[i, :real] = 1.0
+        adj = (rng.rand(n, n) < 0.15).astype(np.float32)
+        adj = np.maximum(adj, adj.T)
+        np.fill_diagonal(adj, 0.0)
+        a[i] = np.asarray(
+            ref.normalize_adjacency(jnp.array(adj), jnp.array(mask[i])))
+    if sparsity > 0:
+        h *= (rng.rand(*h.shape) >= sparsity)
+    h *= mask[:, :, None]
+    return a, h, mask
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bsz=st.integers(1, 4),
+    n=st.sampled_from([4, 8, 16, 32]),
+    f_in=st.sampled_from([8, 29, 64]),
+    f_out=st.sampled_from([8, 16, 32]),
+    relu=st.booleans(),
+    sparsity=st.sampled_from([0.0, 0.5, 0.9]),
+)
+def test_gcn_layer_matches_ref(bsz, n, f_in, f_out, relu, sparsity):
+    rng = np.random.RandomState(bsz * 1000 + n * 10 + f_in + f_out)
+    a, h, mask = random_graph_tensors(rng, bsz, n, f_in, sparsity)
+    w = rng.randn(f_in, f_out).astype(np.float32)
+    b = rng.randn(f_out).astype(np.float32)
+    got = np.asarray(gcn_layer(jnp.array(a), jnp.array(h), jnp.array(w),
+                               jnp.array(b), jnp.array(mask), relu=relu))
+    want = np.stack([
+        np.asarray(ref.gcn_layer(jnp.array(a[i]), jnp.array(h[i]),
+                                 jnp.array(w), jnp.array(b), relu,
+                                 jnp.array(mask[i])))
+        for i in range(bsz)
+    ])
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(bsz=st.integers(1, 4), n=st.sampled_from([4, 16, 32]),
+       f=st.sampled_from([8, 16, 32]))
+def test_attention_pool_matches_ref(bsz, n, f):
+    rng = np.random.RandomState(bsz * 77 + n + f)
+    h = rng.randn(bsz, n, f).astype(np.float32)
+    mask = np.zeros((bsz, n), np.float32)
+    for i in range(bsz):
+        mask[i, : rng.randint(1, n + 1)] = 1.0
+    h *= mask[:, :, None]
+    w = rng.randn(f, f).astype(np.float32)
+    got = np.asarray(attention_pool(jnp.array(h), jnp.array(w),
+                                    jnp.array(mask)))
+    want = np.stack([
+        np.asarray(ref.attention_pool(jnp.array(h[i]), jnp.array(w),
+                                      jnp.array(mask[i])))
+        for i in range(bsz)
+    ])
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(bsz=st.integers(1, 4), f=st.sampled_from([4, 16, 32]),
+       k=st.sampled_from([1, 8, 16]))
+def test_ntn_matches_ref(bsz, f, k):
+    rng = np.random.RandomState(bsz + f * 3 + k * 7)
+    hg1 = rng.randn(bsz, f).astype(np.float32)
+    hg2 = rng.randn(bsz, f).astype(np.float32)
+    w = rng.randn(k, f, f).astype(np.float32)
+    v = rng.randn(k, 2 * f).astype(np.float32)
+    b = rng.randn(k).astype(np.float32)
+    got = np.asarray(ntn(jnp.array(hg1), jnp.array(hg2), jnp.array(w),
+                         jnp.array(v), jnp.array(b)))
+    want = np.stack([
+        np.asarray(ref.ntn(jnp.array(hg1[i]), jnp.array(hg2[i]),
+                           jnp.array(w), jnp.array(v), jnp.array(b)))
+        for i in range(bsz)
+    ])
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_gcn_layer_padding_is_inert():
+    """Padded rows stay exactly zero through the kernel."""
+    rng = np.random.RandomState(0)
+    a, h, mask = random_graph_tensors(rng, 2, 32, 29)
+    w = rng.randn(29, 16).astype(np.float32)
+    b = rng.randn(16).astype(np.float32)
+    out = np.asarray(gcn_layer(jnp.array(a), jnp.array(h), jnp.array(w),
+                               jnp.array(b), jnp.array(mask), relu=True))
+    pad = (1.0 - mask)[:, :, None]
+    assert np.all(out * pad == 0.0)
+
+
+def test_gcn_layer_equals_dense_unmasked():
+    """With a full mask the kernel equals the plain dense formula."""
+    rng = np.random.RandomState(1)
+    n, f_in, f_out = 8, 8, 8
+    adj = (rng.rand(n, n) < 0.3).astype(np.float32)
+    adj = np.maximum(adj, adj.T)
+    np.fill_diagonal(adj, 0.0)
+    mask = np.ones(n, np.float32)
+    a = np.asarray(ref.normalize_adjacency(jnp.array(adj), jnp.array(mask)))
+    h = rng.randn(n, f_in).astype(np.float32)
+    w = rng.randn(f_in, f_out).astype(np.float32)
+    b = rng.randn(f_out).astype(np.float32)
+    out = np.asarray(gcn_layer(jnp.array(a[None]), jnp.array(h[None]),
+                               jnp.array(w), jnp.array(b),
+                               jnp.array(mask[None]), relu=False))[0]
+    want = a @ (h @ w) + b[None, :]
+    np.testing.assert_allclose(out, want, atol=1e-4, rtol=1e-4)
+
+
+def test_normalize_adjacency_symmetric_rows():
+    """A' of an undirected graph is symmetric with unit spectral props."""
+    rng = np.random.RandomState(5)
+    n = 16
+    adj = (rng.rand(n, n) < 0.2).astype(np.float32)
+    adj = np.maximum(adj, adj.T)
+    np.fill_diagonal(adj, 0.0)
+    mask = np.ones(n, np.float32)
+    a = np.asarray(ref.normalize_adjacency(jnp.array(adj), jnp.array(mask)))
+    np.testing.assert_allclose(a, a.T, atol=1e-6)
+    # isolated-node-free graph: every diagonal entry is 1/deg~ > 0
+    assert np.all(np.diag(a) > 0)

@@ -1,0 +1,220 @@
+//! Dynamic batcher: the L3 analogue of the paper's query batching
+//! (§5.4.3 / Fig. 11). Accumulates queries until either the maximum
+//! batch size is reached or the oldest enqueued query has waited past
+//! the timeout — the standard size-or-deadline policy (vLLM-style).
+//!
+//! Implemented as a pure state machine (`push`/`poll` driven by explicit
+//! timestamps) so the invariants are property-testable without threads:
+//!   * a flushed batch never exceeds `max_batch`;
+//!   * queries leave in arrival order;
+//!   * no query waits longer than `timeout` past its arrival before its
+//!     batch is eligible for flush.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::query::Query;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub timeout: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 64,
+            timeout: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Size-or-deadline batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: VecDeque<Query>,
+    oldest_arrival: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Batcher {
+            policy,
+            pending: VecDeque::new(),
+            oldest_arrival: None,
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Enqueue a query (arriving at `now`); returns a full batch if the
+    /// size threshold was reached.
+    pub fn push(&mut self, q: Query, now: Instant) -> Option<Vec<Query>> {
+        if self.pending.is_empty() {
+            self.oldest_arrival = Some(now);
+        }
+        self.pending.push_back(q);
+        if self.pending.len() >= self.policy.max_batch {
+            return self.drain();
+        }
+        None
+    }
+
+    /// Deadline check: flush if the oldest query has waited >= timeout.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<Query>> {
+        match self.oldest_arrival {
+            Some(t0) if now.duration_since(t0) >= self.policy.timeout => self.drain(),
+            _ => None,
+        }
+    }
+
+    /// Unconditional flush (shutdown path).
+    pub fn flush(&mut self) -> Option<Vec<Query>> {
+        self.drain()
+    }
+
+    /// Time until the current deadline fires (for the worker's
+    /// recv_timeout), or None when empty.
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest_arrival.map(|t0| {
+            (t0 + self.policy.timeout)
+                .checked_duration_since(now)
+                .unwrap_or(Duration::ZERO)
+        })
+    }
+
+    fn drain(&mut self) -> Option<Vec<Query>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let take = self.pending.len().min(self.policy.max_batch);
+        let batch: Vec<Query> = self.pending.drain(..take).collect();
+        self.oldest_arrival = if self.pending.is_empty() {
+            None
+        } else {
+            // Conservative: restart the clock for the remainder now.
+            Some(Instant::now())
+        };
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn q(id: u64) -> Query {
+        let g = Graph::new(2, vec![(0, 1)], vec![0, 0]);
+        Query::new(id, g.clone(), g)
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            timeout: Duration::from_secs(10),
+        });
+        let now = Instant::now();
+        assert!(b.push(q(0), now).is_none());
+        assert!(b.push(q(1), now).is_none());
+        let batch = b.push(q(2), now).expect("should flush at 3");
+        assert_eq!(batch.iter().map(|x| x.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            timeout: Duration::from_micros(50),
+        });
+        let t0 = Instant::now();
+        b.push(q(0), t0);
+        assert!(b.poll(t0).is_none(), "deadline not reached yet");
+        let later = t0 + Duration::from_micros(60);
+        let batch = b.poll(later).expect("deadline flush");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn flush_drains_everything_in_order() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 10,
+            timeout: Duration::from_secs(1),
+        });
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push(q(i), now);
+        }
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.iter().map(|x| x.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn property_never_exceeds_max_and_preserves_order() {
+        check(
+            "batcher-order",
+            60,
+            |rng: &mut Rng| {
+                let max_batch = rng.range(1, 8);
+                let ops: Vec<u8> = (0..rng.range(1, 40)).map(|_| rng.below(3) as u8).collect();
+                (max_batch, ops)
+            },
+            |(max_batch, ops)| {
+                let mut b = Batcher::new(BatchPolicy {
+                    max_batch: *max_batch,
+                    timeout: Duration::from_micros(10),
+                });
+                let mut next_id = 0u64;
+                let mut out = Vec::new();
+                let t0 = Instant::now();
+                let mut now = t0;
+                for op in ops {
+                    match op {
+                        0 => {
+                            if let Some(batch) = b.push(q(next_id), now) {
+                                if batch.len() > *max_batch {
+                                    return Err("batch too big".into());
+                                }
+                                out.extend(batch.iter().map(|x| x.id));
+                            }
+                            next_id += 1;
+                        }
+                        1 => {
+                            now += Duration::from_micros(15);
+                            if let Some(batch) = b.poll(now) {
+                                if batch.len() > *max_batch {
+                                    return Err("batch too big".into());
+                                }
+                                out.extend(batch.iter().map(|x| x.id));
+                            }
+                        }
+                        _ => {
+                            if let Some(batch) = b.flush() {
+                                out.extend(batch.iter().map(|x| x.id));
+                            }
+                        }
+                    }
+                }
+                if let Some(batch) = b.flush() {
+                    out.extend(batch.iter().map(|x| x.id));
+                }
+                // all ids delivered exactly once, in order
+                let want: Vec<u64> = (0..next_id).collect();
+                if out != want {
+                    return Err(format!("order violated: {out:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! Open-loop load generation: Poisson arrivals at a target rate, the
+//! standard serving-systems methodology for latency-under-load curves
+//! (closed-loop flooding — what `serve_workload` does — measures peak
+//! throughput but inflates tail latency with queueing delay).
+
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Rng;
+
+/// Poisson arrival schedule: exponential inter-arrival gaps at `rate_qps`.
+pub fn poisson_schedule(rng: &mut Rng, rate_qps: f64, count: usize) -> Vec<Duration> {
+    assert!(rate_qps > 0.0);
+    let mut at = 0.0f64;
+    (0..count)
+        .map(|_| {
+            let u = rng.f64().max(1e-12);
+            at += -u.ln() / rate_qps; // Exp(rate) gap
+            Duration::from_secs_f64(at)
+        })
+        .collect()
+}
+
+/// Busy-wait-free pacer: sleeps until each scheduled offset from `start`.
+pub struct Pacer {
+    start: Instant,
+}
+
+impl Pacer {
+    pub fn new() -> Self {
+        Pacer {
+            start: Instant::now(),
+        }
+    }
+
+    /// Wait until `offset` past the pacer's start; returns the lateness
+    /// (how far behind schedule we are), useful to detect overload.
+    pub fn wait_until(&self, offset: Duration) -> Duration {
+        let target = self.start + offset;
+        let now = Instant::now();
+        if let Some(remaining) = target.checked_duration_since(now) {
+            std::thread::sleep(remaining);
+            Duration::ZERO
+        } else {
+            now.duration_since(target)
+        }
+    }
+}
+
+impl Default for Pacer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate_is_correct() {
+        let mut rng = Rng::new(101);
+        let rate = 1000.0;
+        let n = 5000;
+        let sched = poisson_schedule(&mut rng, rate, n);
+        let total = sched.last().unwrap().as_secs_f64();
+        let observed = n as f64 / total;
+        assert!(
+            (observed - rate).abs() / rate < 0.1,
+            "observed rate {observed} vs target {rate}"
+        );
+        // strictly increasing
+        for w in sched.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn exponential_gaps_have_cv_about_one() {
+        let mut rng = Rng::new(102);
+        let sched = poisson_schedule(&mut rng, 500.0, 4000);
+        let gaps: Vec<f64> = sched
+            .windows(2)
+            .map(|w| (w[1] - w[0]).as_secs_f64())
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.15, "cv {cv} should be ~1 for Poisson");
+    }
+
+    #[test]
+    fn pacer_reports_lateness_when_behind() {
+        let p = Pacer::new();
+        std::thread::sleep(Duration::from_millis(5));
+        let late = p.wait_until(Duration::from_millis(1));
+        assert!(late >= Duration::from_millis(3));
+        let on_time = p.wait_until(Duration::from_millis(20));
+        assert_eq!(on_time, Duration::ZERO);
+    }
+}

@@ -1,0 +1,124 @@
+//! Serving metrics: latency distribution, batch-size histogram,
+//! throughput and rejection counters.
+
+use std::time::Instant;
+
+use crate::util::stats::Samples;
+
+#[derive(Debug)]
+pub struct Metrics {
+    pub latency_us: Samples,
+    pub batch_sizes: Samples,
+    pub scored: u64,
+    pub rejected: u64,
+    pub engine_errors: u64,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            latency_us: Samples::new(),
+            batch_sizes: Samples::new(),
+            scored: 0,
+            rejected: 0,
+            engine_errors: 0,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record(&mut self, r: &super::query::QueryResult) {
+        match &r.outcome {
+            super::query::Outcome::Score(_) => {
+                self.scored += 1;
+                self.latency_us.push(r.latency_us);
+                self.batch_sizes.push(r.batch_size as f64);
+            }
+            super::query::Outcome::Rejected(_) => self.rejected += 1,
+            super::query::Outcome::EngineError(_) => self.engine_errors += 1,
+        }
+    }
+
+    pub fn throughput_qps(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.scored as f64 / secs
+        }
+    }
+
+    /// Render as a report table.
+    pub fn render_table(&self, title: &str) -> crate::report::Table {
+        use crate::report::{fmt, Table};
+        let mut t = Table::new(title, &["Metric", "Value"]);
+        t.row(vec!["queries scored".into(), format!("{}", self.scored)]);
+        t.row(vec!["queries rejected".into(), format!("{}", self.rejected)]);
+        t.row(vec!["engine errors".into(), format!("{}", self.engine_errors)]);
+        t.row(vec!["throughput (query/s)".into(), fmt(self.throughput_qps())]);
+        t.row(vec![
+            "latency mean (ms)".into(),
+            fmt(self.latency_us.mean() / 1000.0),
+        ]);
+        t.row(vec![
+            "latency p50 (ms)".into(),
+            fmt(self.latency_us.percentile(50.0) / 1000.0),
+        ]);
+        t.row(vec![
+            "latency p95 (ms)".into(),
+            fmt(self.latency_us.percentile(95.0) / 1000.0),
+        ]);
+        t.row(vec![
+            "latency p99 (ms)".into(),
+            fmt(self.latency_us.percentile(99.0) / 1000.0),
+        ]);
+        t.row(vec![
+            "mean batch size".into(),
+            fmt(self.batch_sizes.mean()),
+        ]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::query::{Outcome, QueryResult};
+    use super::*;
+
+    fn res(outcome: Outcome) -> QueryResult {
+        QueryResult {
+            id: 0,
+            outcome,
+            latency_us: 100.0,
+            batch_size: 4,
+        }
+    }
+
+    #[test]
+    fn counters_split_by_outcome() {
+        let mut m = Metrics::new();
+        m.record(&res(Outcome::Score(0.5)));
+        m.record(&res(Outcome::Rejected(
+            super::super::query::RejectReason::ShuttingDown,
+        )));
+        m.record(&res(Outcome::EngineError("x".into())));
+        assert_eq!(m.scored, 1);
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.engine_errors, 1);
+        assert_eq!(m.latency_us.len(), 1);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut m = Metrics::new();
+        m.record(&res(Outcome::Score(0.9)));
+        let t = m.render_table("serve metrics");
+        assert!(t.render().contains("queries scored"));
+    }
+}

@@ -1,0 +1,10 @@
+//! L3 serving coordinator: admission router, dynamic batcher, worker
+//! pool, metrics. The paper's system contribution viewed as a serving
+//! problem: many small graph-pair queries, batched to amortize per-launch
+//! overheads (Fig. 11), replicated across workers (§5.4.3).
+pub mod batcher;
+pub mod load;
+pub mod metrics;
+pub mod query;
+pub mod router;
+pub mod server;

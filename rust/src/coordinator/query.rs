@@ -1,0 +1,111 @@
+//! Query and result types flowing through the serving coordinator.
+
+use std::time::Instant;
+
+use crate::graph::Graph;
+
+/// A graph-similarity query (the unit of work, paper §5.1).
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub id: u64,
+    pub g1: Graph,
+    pub g2: Graph,
+    pub submitted: Instant,
+}
+
+impl Query {
+    pub fn new(id: u64, g1: Graph, g2: Graph) -> Self {
+        Query {
+            id,
+            g1,
+            g2,
+            submitted: Instant::now(),
+        }
+    }
+}
+
+/// Why a query was rejected before reaching an engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectReason {
+    TooManyNodes { nodes: usize, n_max: usize },
+    LabelOutOfRange { label: u16, num_labels: usize },
+    ShuttingDown,
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::TooManyNodes { nodes, n_max } => {
+                write!(f, "graph has {nodes} nodes > artifact limit {n_max}")
+            }
+            RejectReason::LabelOutOfRange { label, num_labels } => {
+                write!(f, "label {label} >= vocab {num_labels}")
+            }
+            RejectReason::ShuttingDown => write!(f, "coordinator shutting down"),
+        }
+    }
+}
+
+/// Outcome of one query.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    Score(f32),
+    Rejected(RejectReason),
+    EngineError(String),
+}
+
+/// Completed query with timing.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    pub id: u64,
+    pub outcome: Outcome,
+    /// submit -> completion latency, µs.
+    pub latency_us: f64,
+    /// Size of the batch this query was executed in (0 for rejects).
+    pub batch_size: usize,
+}
+
+impl QueryResult {
+    pub fn score(&self) -> Option<f32> {
+        match self.outcome {
+            Outcome::Score(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn is_rejected(&self) -> bool {
+        matches!(self.outcome, Outcome::Rejected(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reject_reasons_display() {
+        let r = RejectReason::TooManyNodes { nodes: 40, n_max: 32 };
+        assert!(r.to_string().contains("40"));
+        let r = RejectReason::LabelOutOfRange { label: 31, num_labels: 29 };
+        assert!(r.to_string().contains("31"));
+    }
+
+    #[test]
+    fn result_accessors() {
+        let r = QueryResult {
+            id: 1,
+            outcome: Outcome::Score(0.5),
+            latency_us: 10.0,
+            batch_size: 4,
+        };
+        assert_eq!(r.score(), Some(0.5));
+        assert!(!r.is_rejected());
+        let r = QueryResult {
+            id: 2,
+            outcome: Outcome::Rejected(RejectReason::ShuttingDown),
+            latency_us: 1.0,
+            batch_size: 0,
+        };
+        assert_eq!(r.score(), None);
+        assert!(r.is_rejected());
+    }
+}

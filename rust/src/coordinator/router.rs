@@ -1,0 +1,145 @@
+//! Admission control + worker routing.
+//!
+//! The router validates queries against the artifact shape limits (the
+//! fixed n_max/num_labels the AOT HLO was compiled for — oversize graphs
+//! must be rejected, not silently truncated) and distributes admitted
+//! queries round-robin across worker queues.
+
+use std::sync::mpsc::SyncSender;
+
+use crate::graph::Graph;
+use crate::nn::config::ModelConfig;
+
+use super::query::{Outcome, Query, QueryResult, RejectReason};
+
+/// Validate a query against the model's static shapes.
+pub fn validate(cfg: &ModelConfig, g1: &Graph, g2: &Graph) -> Result<(), RejectReason> {
+    for g in [g1, g2] {
+        if g.num_nodes() > cfg.n_max {
+            return Err(RejectReason::TooManyNodes {
+                nodes: g.num_nodes(),
+                n_max: cfg.n_max,
+            });
+        }
+        if let Some(&bad) = g.labels().iter().find(|&&l| (l as usize) >= cfg.num_labels) {
+            return Err(RejectReason::LabelOutOfRange {
+                label: bad,
+                num_labels: cfg.num_labels,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Round-robin router over worker input queues.
+pub struct Router {
+    cfg: ModelConfig,
+    workers: Vec<SyncSender<Query>>,
+    next: usize,
+    pub admitted: u64,
+    pub rejected: u64,
+}
+
+impl Router {
+    pub fn new(cfg: ModelConfig, workers: Vec<SyncSender<Query>>) -> Self {
+        assert!(!workers.is_empty(), "router needs at least one worker");
+        Router {
+            cfg,
+            workers,
+            next: 0,
+            admitted: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Route one query; invalid queries produce an immediate rejection
+    /// result instead of reaching a worker.
+    pub fn route(&mut self, q: Query) -> Option<QueryResult> {
+        if let Err(reason) = validate(&self.cfg, &q.g1, &q.g2) {
+            self.rejected += 1;
+            return Some(QueryResult {
+                id: q.id,
+                outcome: Outcome::Rejected(reason),
+                latency_us: q.submitted.elapsed().as_secs_f64() * 1e6,
+                batch_size: 0,
+            });
+        }
+        let w = self.next;
+        self.next = (self.next + 1) % self.workers.len();
+        self.admitted += 1;
+        if self.workers[w].send(q).is_err() {
+            // Worker gone (shutdown race): surface as engine error.
+            self.admitted -= 1;
+            self.rejected += 1;
+            return Some(QueryResult {
+                id: u64::MAX,
+                outcome: Outcome::Rejected(RejectReason::ShuttingDown),
+                latency_us: 0.0,
+                batch_size: 0,
+            });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            n_max: 8,
+            num_labels: 4,
+            ..ModelConfig::default()
+        }
+    }
+
+    fn graph(n: usize, label: u16) -> Graph {
+        Graph::new(n, (1..n).map(|v| (0u16, v as u16)).collect(), vec![label; n])
+    }
+
+    #[test]
+    fn validate_rejects_oversize() {
+        let c = cfg();
+        let ok = graph(5, 1);
+        let big = graph(12, 1);
+        assert!(validate(&c, &ok, &ok).is_ok());
+        assert!(matches!(
+            validate(&c, &ok, &big),
+            Err(RejectReason::TooManyNodes { .. })
+        ));
+        let badlabel = graph(4, 9);
+        assert!(matches!(
+            validate(&c, &badlabel, &ok),
+            Err(RejectReason::LabelOutOfRange { .. })
+        ));
+    }
+
+    #[test]
+    fn round_robin_distribution() {
+        let (tx1, rx1) = sync_channel(16);
+        let (tx2, rx2) = sync_channel(16);
+        let mut r = Router::new(cfg(), vec![tx1, tx2]);
+        for i in 0..6 {
+            let g = graph(4, 1);
+            assert!(r.route(Query::new(i, g.clone(), g)).is_none());
+        }
+        assert_eq!(r.admitted, 6);
+        let c1 = rx1.try_iter().count();
+        let c2 = rx2.try_iter().count();
+        assert_eq!((c1, c2), (3, 3));
+    }
+
+    #[test]
+    fn invalid_query_rejected_inline() {
+        let (tx, _rx) = sync_channel(4);
+        let mut r = Router::new(cfg(), vec![tx]);
+        let g = graph(4, 1);
+        let big = graph(20, 1);
+        let res = r.route(Query::new(7, g, big)).expect("rejection");
+        assert!(res.is_rejected());
+        assert_eq!(res.id, 7);
+        assert_eq!(r.rejected, 1);
+    }
+}

@@ -1,0 +1,248 @@
+//! Bipartite GED approximation (Riesen & Bunke style) — the "Hungarian"
+//! baseline from SimGNN's evaluation: build a node-assignment cost matrix
+//! (substitution / deletion / insertion with a local degree+label
+//! heuristic), solve it optimally with the O(n^3) Hungarian algorithm
+//! (Jonker-Volgenant shortest augmenting path), then score the *induced*
+//! edit path — which makes the result a valid GED upper bound.
+
+use crate::graph::Graph;
+
+/// Solve the square assignment problem; returns (assignment, total cost)
+/// where `assignment[row] = col`. O(n^3) shortest augmenting path.
+pub fn hungarian(cost: &[Vec<f64>]) -> (Vec<usize>, f64) {
+    let n = cost.len();
+    if n == 0 {
+        return (Vec::new(), 0.0);
+    }
+    for row in cost {
+        assert_eq!(row.len(), n, "cost matrix must be square");
+    }
+    const INF: f64 = f64::INFINITY;
+    // 1-indexed potentials/links per the classic formulation.
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[col] = row matched to col
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut assignment = vec![0usize; n];
+    let mut total = 0.0;
+    for j in 1..=n {
+        if p[j] != 0 {
+            assignment[p[j] - 1] = j - 1;
+            total += cost[p[j] - 1][j - 1];
+        }
+    }
+    (assignment, total)
+}
+
+/// Induced edit cost of a full g1 -> g2 node mapping: label substitutions
+/// + node deletions/insertions + exact edge mismatch. Any mapping gives a
+/// valid GED upper bound.
+fn induced_cost(g1: &Graph, g2: &Graph, mapping: &[Option<u16>]) -> f64 {
+    let mut cost = 0.0;
+    let mut used = vec![false; g2.num_nodes()];
+    for (i, m) in mapping.iter().enumerate() {
+        match m {
+            Some(j) => {
+                used[*j as usize] = true;
+                if g1.labels()[i] != g2.labels()[*j as usize] {
+                    cost += 1.0;
+                }
+            }
+            None => cost += 1.0, // deletion
+        }
+    }
+    cost += used.iter().filter(|&&x| !x).count() as f64; // insertions
+    // Edge terms: g1 edges not preserved + g2 edges not covered.
+    for &(a, b) in g1.edges() {
+        let ok = matches!(
+            (mapping[a as usize], mapping[b as usize]),
+            (Some(x), Some(y)) if g2.has_edge(x, y)
+        );
+        if !ok {
+            cost += 1.0;
+        }
+    }
+    for &(x, y) in g2.edges() {
+        let covered = mapping.iter().enumerate().any(|(a, m)| {
+            m == &Some(x)
+                && mapping
+                    .iter()
+                    .enumerate()
+                    .any(|(b, m2)| m2 == &Some(y) && g1.has_edge(a as u16, b as u16))
+        });
+        if !covered {
+            cost += 1.0;
+        }
+    }
+    cost
+}
+
+/// Bipartite GED upper bound: Hungarian assignment on the
+/// label+half-degree-difference cost matrix, scored by the induced edit
+/// path.
+pub fn hungarian_ged(g1: &Graph, g2: &Graph) -> f64 {
+    let n1 = g1.num_nodes();
+    let n2 = g2.num_nodes();
+    let n = n1 + n2;
+    if n == 0 {
+        return 0.0;
+    }
+    let d1 = g1.degrees();
+    let d2 = g2.degrees();
+    // (n1+n2) x (n1+n2) matrix: rows = g1 nodes then n2 "insert" slots,
+    // cols = g2 nodes then n1 "delete" slots (Riesen-Bunke construction).
+    let mut cost = vec![vec![0.0f64; n]; n];
+    for i in 0..n1 {
+        for j in 0..n2 {
+            let label = if g1.labels()[i] == g2.labels()[j] { 0.0 } else { 1.0 };
+            let degree = (d1[i] as f64 - d2[j] as f64).abs() / 2.0;
+            cost[i][j] = label + degree;
+        }
+        for j in 0..n1 {
+            cost[i][n2 + j] = if i == j {
+                1.0 + d1[i] as f64 / 2.0 // delete node i + its edges
+            } else {
+                f64::INFINITY / 4.0
+            };
+        }
+    }
+    for i in 0..n2 {
+        for j in 0..n2 {
+            cost[n1 + i][j] = if i == j {
+                1.0 + d2[i] as f64 / 2.0 // insert node i + its edges
+            } else {
+                f64::INFINITY / 4.0
+            };
+        }
+        for j in 0..n1 {
+            cost[n1 + i][n2 + j] = 0.0; // dummy-dummy
+        }
+    }
+    let (assignment, _) = hungarian(&cost);
+    let mapping: Vec<Option<u16>> = (0..n1)
+        .map(|i| {
+            let j = assignment[i];
+            if j < n2 {
+                Some(j as u16)
+            } else {
+                None
+            }
+        })
+        .collect();
+    induced_cost(g1, g2, &mapping)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::exact_ged;
+    use super::*;
+    use crate::graph::generate::{generate, perturb, Family};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hungarian_solves_known_assignment() {
+        // cost = [[4,1,3],[2,0,5],[3,2,2]] -> optimal 1+2+2 = 5
+        let c = vec![
+            vec![4.0, 1.0, 3.0],
+            vec![2.0, 0.0, 5.0],
+            vec![3.0, 2.0, 2.0],
+        ];
+        let (a, total) = hungarian(&c);
+        assert_eq!(total, 5.0);
+        // assignment must be a permutation
+        let mut seen = vec![false; 3];
+        for &j in &a {
+            assert!(!seen[j]);
+            seen[j] = true;
+        }
+    }
+
+    #[test]
+    fn hungarian_identity_matrix() {
+        let c = vec![
+            vec![0.0, 1.0, 1.0],
+            vec![1.0, 0.0, 1.0],
+            vec![1.0, 1.0, 0.0],
+        ];
+        let (a, total) = hungarian(&c);
+        assert_eq!(total, 0.0);
+        assert_eq!(a, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn upper_bounds_exact_ged() {
+        let mut rng = Rng::new(121);
+        for _ in 0..15 {
+            let f = Family::ErdosRenyi { n: 6, p_millis: 300 };
+            let a = generate(&mut rng, f, 8, 4);
+            let k = rng.below(4);
+            let b = perturb(&mut rng, &a, k, 8, 4);
+            let exact = exact_ged(&a, &b, 2_000_000).unwrap();
+            let hun = hungarian_ged(&a, &b);
+            assert!(hun >= exact - 1e-9, "hungarian {hun} < exact {exact}");
+        }
+    }
+
+    #[test]
+    fn identical_graphs_cost_zero() {
+        let mut rng = Rng::new(122);
+        let g = generate(&mut rng, Family::ErdosRenyi { n: 7, p_millis: 300 }, 8, 4);
+        assert_eq!(hungarian_ged(&g, &g), 0.0);
+    }
+
+    #[test]
+    fn handles_size_mismatch() {
+        let a = Graph::new(2, vec![(0, 1)], vec![1, 1]);
+        let b = Graph::new(4, vec![(0, 1), (1, 2), (2, 3)], vec![1, 1, 1, 1]);
+        let hun = hungarian_ged(&a, &b);
+        let exact = exact_ged(&a, &b, 1_000_000).unwrap();
+        assert!(hun >= exact - 1e-9);
+        assert!(hun <= exact + 6.0, "hun {hun} far above exact {exact}");
+    }
+}

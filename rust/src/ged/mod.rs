@@ -1,0 +1,281 @@
+//! Exact Graph Edit Distance for tiny graphs.
+//!
+//! SimGNN's whole point (paper §1) is that exact GED is NP-complete and
+//! intractable beyond ~10 nodes; the network learns to approximate it.
+//! To *evaluate* that approximation (examples/ged_search.rs) we need the
+//! exact value on small graphs, so this module implements the standard
+//! A* search over node-assignment prefixes with an admissible label-
+//! mismatch lower bound (uniform cost model: node substitution/insertion/
+//! deletion and edge insertion/deletion all cost 1 — the cost model used
+//! by the GED literature the paper cites [46, 75] and by SimGNN's AIDS
+//! benchmarks).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::graph::Graph;
+
+/// Search node: a prefix assignment of g1 nodes to g2 nodes (or deletion).
+#[derive(Debug, Clone)]
+struct State {
+    /// mapping[i] = Some(j): g1 node i -> g2 node j; None = deleted.
+    mapping: Vec<Option<u16>>,
+    g: f64,
+    f: f64,
+    /// Terminal state: `g` already includes the completion cost (insertion
+    /// of unused g2 nodes and their edges). A* may only return when it
+    /// POPS a terminal state — returning at first complete mapping would
+    /// be unsound because completion adds cost beyond the popped `f`.
+    done: bool,
+}
+
+impl PartialEq for State {
+    fn eq(&self, other: &Self) -> bool {
+        self.f == other.f
+    }
+}
+impl Eq for State {}
+impl PartialOrd for State {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for State {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on f
+        other.f.partial_cmp(&self.f).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Edge-cost contribution of assigning g1 node `i` -> `j` given the
+/// existing prefix: for every already-mapped neighbor relation, edges must
+/// match or cost 1 each.
+fn edge_delta(g1: &Graph, g2: &Graph, mapping: &[Option<u16>], i: usize, j: Option<u16>) -> f64 {
+    let mut cost = 0.0;
+    for (p, &mp) in mapping.iter().enumerate() {
+        let e1 = g1.has_edge(p as u16, i as u16);
+        let e2 = match (mp, j) {
+            (Some(a), Some(b)) => g2.has_edge(a, b),
+            _ => false,
+        };
+        if e1 != e2 {
+            cost += 1.0;
+        }
+    }
+    cost
+}
+
+/// Admissible lower bound for the unmapped remainder: label-multiset
+/// mismatch between g1's unassigned nodes and g2's unused nodes, plus the
+/// node-count difference. (Ignores edges entirely, hence admissible.)
+fn remainder_lb(g1: &Graph, g2: &Graph, mapping: &[Option<u16>]) -> f64 {
+    let assigned = mapping.len();
+    let mut used = vec![false; g2.num_nodes()];
+    for m in mapping.iter().flatten() {
+        used[*m as usize] = true;
+    }
+    let mut c1 = std::collections::HashMap::<u16, i64>::new();
+    for i in assigned..g1.num_nodes() {
+        *c1.entry(g1.labels()[i]).or_default() += 1;
+    }
+    let mut c2 = std::collections::HashMap::<u16, i64>::new();
+    for (j, &u) in used.iter().enumerate() {
+        if !u {
+            *c2.entry(g2.labels()[j]).or_default() += 1;
+        }
+    }
+    let n1 = (g1.num_nodes() - assigned) as i64;
+    let n2: i64 = c2.values().sum();
+    // Max-matching on labels: matched same-label pairs cost 0, other
+    // matched pairs cost 1 (substitution), unmatched cost 1 (ins/del).
+    let mut same = 0i64;
+    for (lab, &a) in &c1 {
+        if let Some(&b) = c2.get(lab) {
+            same += a.min(b);
+        }
+    }
+    let matched = n1.min(n2);
+    let substitutions = matched - same.min(matched);
+    let insdel = (n1 - n2).abs();
+    (substitutions + insdel) as f64
+}
+
+/// Exact GED via A*. `limit` bounds the expanded-state count; returns None
+/// if exceeded (caller should fall back to an approximation).
+pub fn exact_ged(g1: &Graph, g2: &Graph, limit: usize) -> Option<f64> {
+    // Order so the outer (assigned) graph is the smaller one: fewer levels.
+    if g1.num_nodes() > g2.num_nodes() {
+        return exact_ged(g2, g1, limit);
+    }
+    let mut heap = BinaryHeap::new();
+    heap.push(State {
+        mapping: Vec::new(),
+        g: 0.0,
+        f: remainder_lb(g1, g2, &[]),
+        done: false,
+    });
+    let mut expanded = 0usize;
+    while let Some(state) = heap.pop() {
+        expanded += 1;
+        if expanded > limit {
+            return None;
+        }
+        if state.done {
+            return Some(state.g);
+        }
+        let i = state.mapping.len();
+        if i == g1.num_nodes() {
+            // All g1 nodes decided; remaining g2 nodes are insertions, and
+            // their incident edges (to used nodes or each other) too.
+            // Re-queue as a terminal state: it may only win when its TOTAL
+            // cost is minimal among all frontier states.
+            let mut used = vec![false; g2.num_nodes()];
+            for m in state.mapping.iter().flatten() {
+                used[*m as usize] = true;
+            }
+            let mut cost = state.g;
+            for j in 0..g2.num_nodes() {
+                if !used[j] {
+                    cost += 1.0; // node insertion
+                }
+            }
+            for &(a, b) in g2.edges() {
+                if !used[a as usize] || !used[b as usize] {
+                    cost += 1.0; // edge insertion
+                }
+            }
+            heap.push(State {
+                mapping: state.mapping,
+                g: cost,
+                f: cost,
+                done: true,
+            });
+            continue;
+        }
+        // Option A: substitute i -> each unused j.
+        let mut used = vec![false; g2.num_nodes()];
+        for m in state.mapping.iter().flatten() {
+            used[*m as usize] = true;
+        }
+        for j in 0..g2.num_nodes() {
+            if used[j] {
+                continue;
+            }
+            let label_cost = if g1.labels()[i] == g2.labels()[j] {
+                0.0
+            } else {
+                1.0
+            };
+            let g = state.g + label_cost + edge_delta(g1, g2, &state.mapping, i, Some(j as u16));
+            let mut mapping = state.mapping.clone();
+            mapping.push(Some(j as u16));
+            let f = g + remainder_lb(g1, g2, &mapping);
+            heap.push(State { mapping, g, f, done: false });
+        }
+        // Option B: delete node i (plus its edges to mapped prefix).
+        let g = state.g + 1.0 + edge_delta(g1, g2, &state.mapping, i, None);
+        let mut mapping = state.mapping.clone();
+        mapping.push(None);
+        let f = g + remainder_lb(g1, g2, &mapping);
+        heap.push(State { mapping, g, f, done: false });
+    }
+    None
+}
+
+/// Normalized similarity from an edit distance, the SimGNN target:
+/// exp(-2 GED / (|V1| + |V2|)).
+pub fn ged_similarity(ged: f64, n1: usize, n2: usize) -> f64 {
+    (-2.0 * ged / (n1 + n2) as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{generate, perturb, Family};
+    use crate::util::rng::Rng;
+
+    fn g(n: usize, edges: &[(u16, u16)], labels: &[u16]) -> Graph {
+        Graph::new(n, edges.to_vec(), labels.to_vec())
+    }
+
+    #[test]
+    fn identical_graphs_have_zero_ged() {
+        let a = g(4, &[(0, 1), (1, 2), (2, 3)], &[1, 2, 3, 4]);
+        assert_eq!(exact_ged(&a, &a, 100_000), Some(0.0));
+    }
+
+    #[test]
+    fn single_relabel_costs_one() {
+        let a = g(3, &[(0, 1), (1, 2)], &[1, 2, 3]);
+        let b = g(3, &[(0, 1), (1, 2)], &[1, 2, 9]);
+        assert_eq!(exact_ged(&a, &b, 100_000), Some(1.0));
+    }
+
+    #[test]
+    fn single_edge_delete_costs_one() {
+        let a = g(3, &[(0, 1), (1, 2), (0, 2)], &[1, 1, 1]);
+        let b = g(3, &[(0, 1), (1, 2)], &[1, 1, 1]);
+        assert_eq!(exact_ged(&a, &b, 100_000), Some(1.0));
+    }
+
+    #[test]
+    fn node_insert_with_edge_costs_two() {
+        let a = g(2, &[(0, 1)], &[1, 1]);
+        let b = g(3, &[(0, 1), (1, 2)], &[1, 1, 1]);
+        // insert node (1) + insert edge (1)
+        assert_eq!(exact_ged(&a, &b, 100_000), Some(2.0));
+    }
+
+    #[test]
+    fn ged_is_symmetric() {
+        let mut rng = Rng::new(41);
+        for _ in 0..5 {
+            let a = generate(&mut rng, Family::ErdosRenyi { n: 6, p_millis: 300 }, 8, 4);
+            let b = generate(&mut rng, Family::ErdosRenyi { n: 7, p_millis: 300 }, 8, 4);
+            let ab = exact_ged(&a, &b, 500_000);
+            let ba = exact_ged(&b, &a, 500_000);
+            assert_eq!(ab, ba);
+        }
+    }
+
+    #[test]
+    fn perturbation_upper_bounds_ged() {
+        let mut rng = Rng::new(42);
+        for _ in 0..10 {
+            let a = generate(&mut rng, Family::ErdosRenyi { n: 6, p_millis: 250 }, 8, 4);
+            let k = rng.below(4);
+            let b = perturb(&mut rng, &a, k, 8, 4);
+            if let Some(d) = exact_ged(&a, &b, 500_000) {
+                // each perturbation op costs at most 2 (node insert = node+edge)
+                assert!(
+                    d <= 2.0 * k as f64 + 1e-9,
+                    "ged {d} exceeds bound for k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_inequality_on_small_samples() {
+        let mut rng = Rng::new(43);
+        let f = Family::ErdosRenyi { n: 5, p_millis: 300 };
+        for _ in 0..5 {
+            let a = generate(&mut rng, f, 8, 3);
+            let b = generate(&mut rng, f, 8, 3);
+            let c = generate(&mut rng, f, 8, 3);
+            let ab = exact_ged(&a, &b, 500_000).unwrap();
+            let bc = exact_ged(&b, &c, 500_000).unwrap();
+            let ac = exact_ged(&a, &c, 500_000).unwrap();
+            assert!(ac <= ab + bc + 1e-9, "triangle violated: {ac} > {ab}+{bc}");
+        }
+    }
+
+    #[test]
+    fn similarity_normalization() {
+        assert_eq!(ged_similarity(0.0, 5, 5), 1.0);
+        assert!(ged_similarity(5.0, 5, 5) < 0.4);
+    }
+}
+
+pub mod heuristics;
+pub mod hungarian;

@@ -1,0 +1,174 @@
+//! Padding + one-hot encoding: `Graph` -> the dense tensors the AOT HLO
+//! artifacts take as input (DESIGN.md "Fixed shapes / padding").
+
+use super::normalize::normalized_dense;
+use super::Graph;
+
+/// A graph encoded as padded dense tensors (all row-major f32).
+#[derive(Debug, Clone)]
+pub struct EncodedGraph {
+    /// Normalized adjacency A', n_max * n_max.
+    pub a_norm: Vec<f32>,
+    /// One-hot node features, n_max * num_labels.
+    pub h0: Vec<f32>,
+    /// Real-node mask, n_max.
+    pub mask: Vec<f32>,
+    /// Real node count (pre-padding).
+    pub num_nodes: usize,
+    /// Undirected edge count (pre-padding, without self-loops).
+    pub num_edges: usize,
+}
+
+/// Errors produced when a graph cannot be encoded for the fixed shapes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EncodeError {
+    TooManyNodes { nodes: usize, n_max: usize },
+    LabelOutOfRange { label: u16, num_labels: usize },
+}
+
+impl std::fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EncodeError::TooManyNodes { nodes, n_max } => {
+                write!(f, "graph has {nodes} nodes, artifact limit is {n_max}")
+            }
+            EncodeError::LabelOutOfRange { label, num_labels } => {
+                write!(f, "node label {label} out of range (vocab {num_labels})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EncodeError {}
+
+/// Encode one graph into padded tensors.
+pub fn encode(g: &Graph, n_max: usize, num_labels: usize) -> Result<EncodedGraph, EncodeError> {
+    if g.num_nodes() > n_max {
+        return Err(EncodeError::TooManyNodes {
+            nodes: g.num_nodes(),
+            n_max,
+        });
+    }
+    if let Some(&bad) = g.labels().iter().find(|&&l| l as usize >= num_labels) {
+        return Err(EncodeError::LabelOutOfRange {
+            label: bad,
+            num_labels,
+        });
+    }
+    let mut h0 = vec![0.0f32; n_max * num_labels];
+    for (i, &lab) in g.labels().iter().enumerate() {
+        h0[i * num_labels + lab as usize] = 1.0;
+    }
+    let mut mask = vec![0.0f32; n_max];
+    for m in mask.iter_mut().take(g.num_nodes()) {
+        *m = 1.0;
+    }
+    Ok(EncodedGraph {
+        a_norm: normalized_dense(g, n_max),
+        h0,
+        mask,
+        num_nodes: g.num_nodes(),
+        num_edges: g.num_edges(),
+    })
+}
+
+/// Batch of encoded pairs packed contiguously for one PJRT execute call.
+#[derive(Debug, Clone)]
+pub struct PackedBatch {
+    pub batch: usize,
+    pub n_max: usize,
+    pub num_labels: usize,
+    pub a1: Vec<f32>,
+    pub h1: Vec<f32>,
+    pub m1: Vec<f32>,
+    pub a2: Vec<f32>,
+    pub h2: Vec<f32>,
+    pub m2: Vec<f32>,
+}
+
+impl PackedBatch {
+    /// Pack `pairs.len()` encoded pairs into batch tensors of logical batch
+    /// size `batch` (>= pairs.len(); the tail is zero padding whose scores
+    /// are discarded by the caller).
+    pub fn pack(pairs: &[(EncodedGraph, EncodedGraph)], batch: usize) -> Self {
+        assert!(!pairs.is_empty() && pairs.len() <= batch);
+        let n = pairs[0].0.mask.len();
+        let l = pairs[0].0.h0.len() / n;
+        let mut pb = PackedBatch {
+            batch,
+            n_max: n,
+            num_labels: l,
+            a1: vec![0.0; batch * n * n],
+            h1: vec![0.0; batch * n * l],
+            m1: vec![0.0; batch * n],
+            a2: vec![0.0; batch * n * n],
+            h2: vec![0.0; batch * n * l],
+            m2: vec![0.0; batch * n],
+        };
+        for (i, (g1, g2)) in pairs.iter().enumerate() {
+            pb.a1[i * n * n..(i + 1) * n * n].copy_from_slice(&g1.a_norm);
+            pb.h1[i * n * l..(i + 1) * n * l].copy_from_slice(&g1.h0);
+            pb.m1[i * n..(i + 1) * n].copy_from_slice(&g1.mask);
+            pb.a2[i * n * n..(i + 1) * n * n].copy_from_slice(&g2.a_norm);
+            pb.h2[i * n * l..(i + 1) * n * l].copy_from_slice(&g2.h0);
+            pb.m2[i * n..(i + 1) * n].copy_from_slice(&g2.mask);
+        }
+        // Zero-padded tail graphs have empty masks; every stage treats them
+        // as 0-node graphs and produces a harmless score.
+        pb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{generate, Family};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn encode_shapes_and_padding() {
+        let g = Graph::new(3, vec![(0, 1), (1, 2)], vec![2, 0, 5]);
+        let e = encode(&g, 8, 29).unwrap();
+        assert_eq!(e.a_norm.len(), 64);
+        assert_eq!(e.h0.len(), 8 * 29);
+        assert_eq!(e.mask, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(e.h0[0 * 29 + 2], 1.0);
+        assert_eq!(e.h0[1 * 29 + 0], 1.0);
+        assert_eq!(e.h0[2 * 29 + 5], 1.0);
+        // exactly one 1 per real row, all-zero pad rows
+        for i in 0..8 {
+            let row: f32 = e.h0[i * 29..(i + 1) * 29].iter().sum();
+            assert_eq!(row, if i < 3 { 1.0 } else { 0.0 });
+        }
+    }
+
+    #[test]
+    fn rejects_oversize_and_bad_labels() {
+        let g = Graph::new(5, vec![(0, 1)], vec![0; 5]);
+        assert!(matches!(
+            encode(&g, 4, 29),
+            Err(EncodeError::TooManyNodes { .. })
+        ));
+        let g = Graph::new(2, vec![(0, 1)], vec![0, 40]);
+        assert!(matches!(
+            encode(&g, 4, 29),
+            Err(EncodeError::LabelOutOfRange { .. })
+        ));
+    }
+
+    #[test]
+    fn pack_layout_roundtrip() {
+        let mut rng = Rng::new(1);
+        let g1 = generate(&mut rng, Family::Aids, 32, 29);
+        let g2 = generate(&mut rng, Family::Aids, 32, 29);
+        let e1 = encode(&g1, 32, 29).unwrap();
+        let e2 = encode(&g2, 32, 29).unwrap();
+        let pb = PackedBatch::pack(&[(e1.clone(), e2.clone())], 4);
+        assert_eq!(pb.a1.len(), 4 * 32 * 32);
+        assert_eq!(&pb.a1[..32 * 32], e1.a_norm.as_slice());
+        assert_eq!(&pb.m2[..32], e2.mask.as_slice());
+        // tail is zero
+        assert!(pb.a1[32 * 32..].iter().all(|&x| x == 0.0));
+        assert!(pb.m1[32..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,191 @@
+//! Graph-database serialization: a compact binary format for synthetic
+//! corpora (so benches/examples can reuse one fixed database) plus an
+//! edge-list text export for interop with external graph tools.
+//!
+//! Binary layout (little-endian):
+//!   magic "SPAG" | u32 version | u32 graph_count
+//!   per graph: u16 n | u16 m | n x u16 labels | m x (u16, u16) edges
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::dataset::GraphDb;
+use super::generate::Family;
+use super::Graph;
+
+const MAGIC: &[u8; 4] = b"SPAG";
+const VERSION: u32 = 1;
+
+fn w16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Serialize a database to bytes.
+pub fn to_bytes(db: &GraphDb) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    w32(&mut out, VERSION);
+    w32(&mut out, db.graphs.len() as u32);
+    for g in &db.graphs {
+        w16(&mut out, g.num_nodes() as u16);
+        w16(&mut out, g.num_edges() as u16);
+        for &l in g.labels() {
+            w16(&mut out, l);
+        }
+        for &(u, v) in g.edges() {
+            w16(&mut out, u);
+            w16(&mut out, v);
+        }
+    }
+    out
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn r16(&mut self) -> Result<u16> {
+        let b = self
+            .buf
+            .get(self.pos..self.pos + 2)
+            .context("truncated graph db")?;
+        self.pos += 2;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    fn r32(&mut self) -> Result<u32> {
+        let b = self
+            .buf
+            .get(self.pos..self.pos + 4)
+            .context("truncated graph db")?;
+        self.pos += 4;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+/// Deserialize a database (validates magic/version/bounds).
+pub fn from_bytes(buf: &[u8]) -> Result<GraphDb> {
+    anyhow::ensure!(buf.len() >= 12 && &buf[..4] == MAGIC, "bad magic");
+    let mut r = Reader { buf, pos: 4 };
+    let version = r.r32()?;
+    anyhow::ensure!(version == VERSION, "unsupported version {version}");
+    let count = r.r32()? as usize;
+    anyhow::ensure!(count < 10_000_000, "implausible graph count {count}");
+    let mut graphs = Vec::with_capacity(count);
+    for _ in 0..count {
+        let n = r.r16()? as usize;
+        let m = r.r16()? as usize;
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            labels.push(r.r16()?);
+        }
+        let mut edges = Vec::with_capacity(m);
+        for _ in 0..m {
+            let u = r.r16()?;
+            let v = r.r16()?;
+            anyhow::ensure!((u as usize) < n && (v as usize) < n, "edge out of range");
+            edges.push((u, v));
+        }
+        graphs.push(Graph::new(n, edges, labels));
+    }
+    anyhow::ensure!(r.pos == buf.len(), "trailing bytes in graph db");
+    Ok(GraphDb {
+        graphs,
+        family: Family::Aids, // family is not serialized; informational only
+    })
+}
+
+pub fn save(db: &GraphDb, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&to_bytes(db))?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<GraphDb> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    from_bytes(&buf)
+}
+
+/// Export one graph as a labeled edge-list text (one "u v" per line after
+/// a "#labels ..." header) for external tooling.
+pub fn to_edge_list(g: &Graph) -> String {
+    let mut s = String::new();
+    s.push_str("# nodes ");
+    s.push_str(&g.num_nodes().to_string());
+    s.push_str("\n# labels");
+    for &l in g.labels() {
+        s.push(' ');
+        s.push_str(&l.to_string());
+    }
+    s.push('\n');
+    for &(u, v) in g.edges() {
+        s.push_str(&format!("{u} {v}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dataset::GraphDb;
+    use crate::graph::generate::Family;
+    use crate::util::rng::Rng;
+
+    fn db() -> GraphDb {
+        let mut rng = Rng::new(111);
+        GraphDb::synthesize(&mut rng, Family::Aids, 20, 32, 29)
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        let d = db();
+        let bytes = to_bytes(&d);
+        let d2 = from_bytes(&bytes).unwrap();
+        assert_eq!(d.graphs.len(), d2.graphs.len());
+        for (a, b) in d.graphs.iter().zip(d2.graphs.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let d = db();
+        let mut bytes = to_bytes(&d);
+        assert!(from_bytes(&bytes[..6]).is_err()); // truncated
+        bytes[0] = b'X';
+        assert!(from_bytes(&bytes).is_err()); // bad magic
+        let mut bytes2 = to_bytes(&d);
+        bytes2.push(0); // trailing byte
+        assert!(from_bytes(&bytes2).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let d = db();
+        let path = std::env::temp_dir().join("spa_gcn_io_test.bin");
+        save(&d, &path).unwrap();
+        let d2 = load(&path).unwrap();
+        assert_eq!(d.graphs, d2.graphs);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn edge_list_format() {
+        let g = Graph::new(3, vec![(0, 1), (1, 2)], vec![5, 6, 7]);
+        let s = to_edge_list(&g);
+        assert!(s.contains("# nodes 3"));
+        assert!(s.contains("# labels 5 6 7"));
+        assert!(s.contains("0 1\n"));
+        assert!(s.contains("1 2\n"));
+    }
+}

@@ -1,0 +1,168 @@
+//! Graph substrate: small labeled undirected graphs, normalization (Eq. 2),
+//! synthetic dataset generators, padding/one-hot encoding for the AOT
+//! artifacts, and the paper's offline edge-reordering preprocessing.
+
+pub mod dataset;
+pub mod io;
+pub mod encode;
+pub mod generate;
+pub mod normalize;
+pub mod reorder;
+
+/// A small undirected labeled graph.
+///
+/// Invariants (enforced by `Graph::new`):
+///  * edges are deduplicated, self-loop-free and stored as (min, max);
+///  * `labels.len() == n`;
+///  * all endpoints < n.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    n: usize,
+    edges: Vec<(u16, u16)>,
+    labels: Vec<u16>,
+}
+
+impl Graph {
+    pub fn new(n: usize, edges: Vec<(u16, u16)>, labels: Vec<u16>) -> Self {
+        assert_eq!(labels.len(), n, "labels must cover all nodes");
+        let mut norm: Vec<(u16, u16)> = edges
+            .into_iter()
+            .filter(|&(u, v)| u != v)
+            .map(|(u, v)| (u.min(v), u.max(v)))
+            .collect();
+        norm.sort_unstable();
+        norm.dedup();
+        for &(u, v) in &norm {
+            assert!((v as usize) < n, "edge ({u},{v}) out of range for n={n}");
+        }
+        Graph {
+            n,
+            edges: norm,
+            labels,
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn edges(&self) -> &[(u16, u16)] {
+        &self.edges
+    }
+
+    pub fn labels(&self) -> &[u16] {
+        &self.labels
+    }
+
+    pub fn has_edge(&self, u: u16, v: u16) -> bool {
+        let key = (u.min(v), u.max(v));
+        self.edges.binary_search(&key).is_ok()
+    }
+
+    /// Node degrees (without self-loops).
+    pub fn degrees(&self) -> Vec<usize> {
+        let mut deg = vec![0usize; self.n];
+        for &(u, v) in &self.edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        deg
+    }
+
+    /// Adjacency lists.
+    pub fn adjacency(&self) -> Vec<Vec<u16>> {
+        let mut adj = vec![Vec::new(); self.n];
+        for &(u, v) in &self.edges {
+            adj[u as usize].push(v);
+            adj[v as usize].push(u);
+        }
+        adj
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let adj = self.adjacency();
+        let mut seen = vec![false; self.n];
+        let mut queue = std::collections::VecDeque::from([0u16]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in &adj[u as usize] {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Directed edge list with both orientations plus self-loops — the
+    /// stream format the paper feeds the Aggregation engine (§3.2.2):
+    /// each entry is (dst, src, weight) with A'[dst][src] as weight.
+    pub fn directed_edges_with_self_loops(&self) -> Vec<(u16, u16)> {
+        let mut out = Vec::with_capacity(self.edges.len() * 2 + self.n);
+        for &(u, v) in &self.edges {
+            out.push((u, v));
+            out.push((v, u));
+        }
+        for i in 0..self.n as u16 {
+            out.push((i, i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> Graph {
+        Graph::new(3, vec![(0, 1), (1, 2)], vec![0, 1, 2])
+    }
+
+    #[test]
+    fn normalizes_edges() {
+        let g = Graph::new(3, vec![(1, 0), (1, 0), (2, 1), (2, 2)], vec![0, 0, 0]);
+        assert_eq!(g.edges(), &[(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn degrees_and_adjacency() {
+        let g = path3();
+        assert_eq!(g.degrees(), vec![1, 2, 1]);
+        assert_eq!(g.adjacency()[1], vec![0, 2]);
+        assert!(g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 2));
+    }
+
+    #[test]
+    fn connectivity() {
+        assert!(path3().is_connected());
+        let g = Graph::new(4, vec![(0, 1), (2, 3)], vec![0; 4]);
+        assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn directed_stream_has_self_loops() {
+        let g = path3();
+        let stream = g.directed_edges_with_self_loops();
+        assert_eq!(stream.len(), 2 * 2 + 3);
+        assert!(stream.contains(&(2, 2)));
+        assert!(stream.contains(&(0, 1)) && stream.contains(&(1, 0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_bad_edges() {
+        Graph::new(2, vec![(0, 5)], vec![0, 0]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Adjacency normalization (paper Eq. 2):
+//!     Ã = A + I,  D̃_ii = Σ_j Ã_ij,  A' = D̃^{-1/2} Ã D̃^{-1/2}
+//!
+//! Two output forms:
+//!  * dense padded matrix — input tensor for the AOT HLO artifacts;
+//!  * weighted COO edge stream — what the paper streams to the FPGA's
+//!    Aggregation engine ("we prune this matrix and only pass its non-zero
+//!    elements, which represent edges", §3.2.2).
+
+use super::Graph;
+
+/// A weighted directed edge of the normalized adjacency: dst <- src.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WEdge {
+    pub dst: u16,
+    pub src: u16,
+    pub w: f32,
+}
+
+/// Dense normalized adjacency padded to `n_max` (row-major, n_max * n_max).
+/// Padded rows/cols are zero, so padding is inert downstream.
+pub fn normalized_dense(g: &Graph, n_max: usize) -> Vec<f32> {
+    assert!(g.num_nodes() <= n_max);
+    let n = g.num_nodes();
+    let mut deg = vec![1.0f64; n]; // self-loop contributes 1 to every degree
+    for &(u, v) in g.edges() {
+        deg[u as usize] += 1.0;
+        deg[v as usize] += 1.0;
+    }
+    let inv_sqrt: Vec<f64> = deg.iter().map(|d| 1.0 / d.sqrt()).collect();
+    let mut a = vec![0.0f32; n_max * n_max];
+    for i in 0..n {
+        a[i * n_max + i] = (inv_sqrt[i] * inv_sqrt[i]) as f32;
+    }
+    for &(u, v) in g.edges() {
+        let (u, v) = (u as usize, v as usize);
+        let w = (inv_sqrt[u] * inv_sqrt[v]) as f32;
+        a[u * n_max + v] = w;
+        a[v * n_max + u] = w;
+    }
+    a
+}
+
+/// Weighted COO stream of A' non-zeros (both directions + self-loops),
+/// ordered by (dst, src). This is the edge stream the Aggregation engine
+/// consumes; `reorder::reorder_edges` rearranges it for the RAW window.
+pub fn normalized_edges(g: &Graph) -> Vec<WEdge> {
+    let n = g.num_nodes();
+    let mut deg = vec![1.0f64; n];
+    for &(u, v) in g.edges() {
+        deg[u as usize] += 1.0;
+        deg[v as usize] += 1.0;
+    }
+    let inv_sqrt: Vec<f64> = deg.iter().map(|d| 1.0 / d.sqrt()).collect();
+    let mut out = Vec::with_capacity(g.num_edges() * 2 + n);
+    for i in 0..n {
+        out.push(WEdge {
+            dst: i as u16,
+            src: i as u16,
+            w: (inv_sqrt[i] * inv_sqrt[i]) as f32,
+        });
+    }
+    for &(u, v) in g.edges() {
+        let w = (inv_sqrt[u as usize] * inv_sqrt[v as usize]) as f32;
+        out.push(WEdge { dst: u, src: v, w });
+        out.push(WEdge { dst: v, src: u, w });
+    }
+    out.sort_by_key(|e| (e.dst, e.src));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> Graph {
+        Graph::new(3, vec![(0, 1), (1, 2)], vec![0, 0, 0])
+    }
+
+    #[test]
+    fn dense_matches_hand_computation() {
+        // path 0-1-2: deg~ = [2,3,2]
+        let a = normalized_dense(&path3(), 4);
+        let d = [2.0f64, 3.0, 2.0];
+        assert!((a[0] as f64 - 1.0 / d[0]).abs() < 1e-6); // (0,0)
+        assert!((a[1] as f64 - 1.0 / (d[0] * d[1]).sqrt()).abs() < 1e-6); // (0,1)
+        assert_eq!(a[2], 0.0); // (0,2) no edge
+        assert_eq!(a[3], 0.0); // padding col
+        assert_eq!(a[12], 0.0); // padding row
+    }
+
+    #[test]
+    fn dense_is_symmetric() {
+        let g = Graph::new(
+            5,
+            vec![(0, 1), (0, 2), (1, 3), (2, 3), (3, 4)],
+            vec![0; 5],
+        );
+        let n = 8;
+        let a = normalized_dense(&g, n);
+        for i in 0..n {
+            for j in 0..n {
+                assert!((a[i * n + j] - a[j * n + i]).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn edges_match_dense() {
+        let g = Graph::new(4, vec![(0, 1), (1, 2), (2, 3), (0, 3)], vec![0; 4]);
+        let n = 4;
+        let dense = normalized_dense(&g, n);
+        let edges = normalized_edges(&g);
+        let mut rebuilt = vec![0.0f32; n * n];
+        for e in &edges {
+            rebuilt[e.dst as usize * n + e.src as usize] = e.w;
+        }
+        assert_eq!(dense, rebuilt);
+        // count: 2|E| + n entries
+        assert_eq!(edges.len(), 2 * g.num_edges() + g.num_nodes());
+    }
+
+    #[test]
+    fn rows_of_anorm_sum_leq_one_ish() {
+        // For a regular-ish graph, row sums of A' are bounded by 1 + eps.
+        let g = path3();
+        let a = normalized_dense(&g, 3);
+        for i in 0..3 {
+            let row: f32 = (0..3).map(|j| a[i * 3 + j]).sum();
+            assert!(row <= 1.2, "row {i} sums to {row}");
+        }
+    }
+}

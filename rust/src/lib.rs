@@ -1,0 +1,13 @@
+//! SPA-GCN: efficient and flexible GCN accelerator for small graphs, with
+//! a SimGNN graph-similarity serving application.
+//!
+//! Reproduction of Sohrabizadeh, Chi & Cong (2021) as a three-layer
+//! rust + JAX + Pallas system — see DESIGN.md for the architecture map.
+pub mod coordinator;
+pub mod ged;
+pub mod graph;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,192 @@
+//! spa-gcn CLI: the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   report <name>   regenerate a paper table/figure (table3, table4,
+//!                   table5, table6, fig10, fig11, replication, sparsity,
+//!                   crosscheck, all)
+//!   serve           run the serving coordinator on a synthetic workload
+//!   gen             synthesize a graph database and print its statistics
+//!   ged             exact-GED demo on tiny graphs
+//!
+//! Flags are simple `--key value` pairs (no external CLI crate offline).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use spa_gcn::coordinator::server::{serve_workload, ServeConfig};
+use spa_gcn::ged::{exact_ged, ged_similarity};
+use spa_gcn::graph::dataset::GraphDb;
+use spa_gcn::graph::generate::{generate, Family};
+use spa_gcn::report::tables::{self, Context};
+use spa_gcn::util::json::arr;
+use spa_gcn::util::rng::Rng;
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut iter = std::env::args().skip(1).peekable();
+    while let Some(a) = iter.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = if iter.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                iter.next().unwrap()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn flag(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.flag(key, &default.to_string())
+            .parse()
+            .unwrap_or(default)
+    }
+    fn bool(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: spa-gcn <command>\n\
+         \n  report <table3|table4|table5|table6|fig10|fig11|replication|sparsity|accuracy|energy|fifo|crosscheck|all>\n\
+         \t[--queries N] [--no-pjrt] [--artifacts DIR] [--json OUT.json]\n\
+         \n  serve [--queries N] [--engine xla|native|sim] [--workers K] [--batch-max B]\n\
+         \t[--batch-timeout-us T] [--artifacts DIR]\n\
+         \n  gen [--family aids|linux|imdb] [--count N]\n\
+         \n  ged [--nodes N] [--pairs P]"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = parse_args();
+    let Some(cmd) = args.positional.first() else {
+        usage()
+    };
+    match cmd.as_str() {
+        "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
+        "gen" => cmd_gen(&args),
+        "ged" => cmd_ged(&args),
+        _ => usage(),
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.flag("artifacts", "artifacts"))
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let name = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let queries = args.usize("queries", 64);
+    let with_pjrt = !args.bool("no-pjrt");
+    let ctx = Context::load(&artifacts_dir(args))?;
+    let mut tables_out = Vec::new();
+    let mut run = |t: spa_gcn::report::Table| {
+        println!("{}", t.render());
+        tables_out.push(t);
+    };
+    match name {
+        "table3" => run(tables::table3()),
+        "table4" => run(tables::table4(&ctx, queries)),
+        "table5" => run(tables::table5(&ctx, queries)),
+        "table6" => run(tables::table6(&ctx, queries, with_pjrt)),
+        "fig10" => run(tables::fig10(&ctx)),
+        "fig11" => run(tables::fig11(&ctx, queries, with_pjrt)),
+        "replication" => run(tables::replication(&ctx, queries)),
+        "sparsity" => run(tables::sparsity(&ctx, queries)),
+        "crosscheck" => run(tables::crosscheck(&ctx)),
+        "accuracy" => run(tables::accuracy(&ctx, queries.min(64))),
+        "energy" => run(tables::energy(&ctx, queries)),
+        "fifo" => run(tables::fifo_ablation(&ctx, queries.min(32))),
+        "all" => {
+            run(tables::table3());
+            run(tables::table4(&ctx, queries));
+            run(tables::table5(&ctx, queries));
+            run(tables::table6(&ctx, queries, with_pjrt));
+            run(tables::fig10(&ctx));
+            run(tables::fig11(&ctx, queries, with_pjrt));
+            run(tables::replication(&ctx, queries));
+            run(tables::sparsity(&ctx, queries));
+            run(tables::energy(&ctx, queries));
+            run(tables::fifo_ablation(&ctx, queries.min(32)));
+            run(tables::accuracy(&ctx, queries.min(48)));
+        }
+        _ => usage(),
+    }
+    if let Some(path) = args.flags.get("json") {
+        let doc = arr(tables_out.iter().map(|t| t.to_json()).collect());
+        std::fs::write(path, doc.to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = ServeConfig {
+        artifacts_dir: artifacts_dir(args),
+        engine: args.flag("engine", "xla"),
+        queries: args.usize("queries", 1000),
+        workers: args.usize("workers", 1),
+        batch_max: args.usize("batch-max", 64),
+        batch_timeout_us: args.usize("batch-timeout-us", 200) as u64,
+        seed: args.usize("seed", 42) as u64,
+    };
+    let report = serve_workload(&cfg)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+    let family = match args.flag("family", "aids").as_str() {
+        "aids" => Family::Aids,
+        "linux" => Family::Linux,
+        "imdb" => Family::Imdb,
+        other => anyhow::bail!("unknown family {other}"),
+    };
+    let count = args.usize("count", 1000);
+    let mut rng = Rng::new(args.usize("seed", 1) as u64);
+    let db = GraphDb::synthesize(&mut rng, family, count, 32, 29);
+    let (n, m) = db.stats();
+    println!(
+        "family={:?} graphs={} mean_nodes={:.1} mean_edges={:.1}",
+        family, count, n, m
+    );
+    println!("(paper AIDS reference: 25.6 nodes, 27.6 edges)");
+    Ok(())
+}
+
+fn cmd_ged(args: &Args) -> anyhow::Result<()> {
+    let n = args.usize("nodes", 7);
+    let pairs = args.usize("pairs", 5);
+    let mut rng = Rng::new(9);
+    for i in 0..pairs {
+        let g1 = generate(&mut rng, Family::ErdosRenyi { n, p_millis: 300 }, 32, 8);
+        let g2 = generate(&mut rng, Family::ErdosRenyi { n, p_millis: 300 }, 32, 8);
+        match exact_ged(&g1, &g2, 2_000_000) {
+            Some(d) => println!(
+                "pair {i}: GED = {d}, normalized similarity = {:.4}",
+                ged_similarity(d, g1.num_nodes(), g2.num_nodes())
+            ),
+            None => println!("pair {i}: A* exceeded state limit"),
+        }
+    }
+    Ok(())
+}

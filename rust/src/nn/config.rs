@@ -1,0 +1,143 @@
+//! Model configuration mirrored from python/compile/config.py via
+//! artifacts/meta.json. The two sides must agree on every static shape.
+
+use std::path::Path;
+
+use crate::util::json::{parse, Json};
+
+/// Static SimGNN configuration (see python/compile/config.py for docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub n_max: usize,
+    pub num_labels: usize,
+    pub filters: [usize; 3],
+    pub relu_mask: [bool; 3],
+    pub ntn_k: usize,
+    pub fc_dims: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            n_max: 32,
+            num_labels: 29,
+            filters: [64, 32, 16],
+            relu_mask: [true, true, false],
+            ntn_k: 16,
+            fc_dims: vec![16, 8],
+            seed: 20210521,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// Graph-level embedding dimension F.
+    pub fn embed_dim(&self) -> usize {
+        self.filters[2]
+    }
+
+    /// Per-layer input feature dims [num_labels, f1, f2].
+    pub fn feature_dims(&self) -> [usize; 3] {
+        [self.num_labels, self.filters[0], self.filters[1]]
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let filters = v
+            .get("filters")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing filters"))?;
+        let relu = v
+            .get("relu_mask")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing relu_mask"))?;
+        anyhow::ensure!(filters.len() == 3 && relu.len() == 3, "bad config arity");
+        Ok(ModelConfig {
+            n_max: v.get("n_max").as_usize().unwrap_or(32),
+            num_labels: v.get("num_labels").as_usize().unwrap_or(29),
+            filters: [
+                filters[0].as_usize().unwrap(),
+                filters[1].as_usize().unwrap(),
+                filters[2].as_usize().unwrap(),
+            ],
+            relu_mask: [
+                relu[0].as_bool().unwrap_or(true),
+                relu[1].as_bool().unwrap_or(true),
+                relu[2].as_bool().unwrap_or(false),
+            ],
+            ntn_k: v.get("ntn_k").as_usize().unwrap_or(16),
+            fc_dims: v
+                .get("fc_dims")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_else(|| vec![16, 8]),
+            seed: v.get("seed").as_f64().unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+/// artifacts/meta.json: config + artifact manifest + measured sparsity.
+#[derive(Debug, Clone)]
+pub struct ArtifactsMeta {
+    pub config: ModelConfig,
+    pub batch_sizes: Vec<usize>,
+    pub sparsity_l2: f64,
+    pub sparsity_l3: f64,
+}
+
+impl ArtifactsMeta {
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(artifacts_dir.join("meta.json"))?;
+        let v = parse(&text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        let config = ModelConfig::from_json(v.get("config"))?;
+        let batch_sizes = v
+            .get("artifact_batch_sizes")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_else(|| vec![1]);
+        Ok(ArtifactsMeta {
+            config,
+            batch_sizes,
+            sparsity_l2: v
+                .get("sparsity")
+                .get("layer2_input_sparsity")
+                .as_f64()
+                .unwrap_or(0.5),
+            sparsity_l3: v
+                .get("sparsity")
+                .get("layer3_input_sparsity")
+                .as_f64()
+                .unwrap_or(0.5),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_python_defaults() {
+        let c = ModelConfig::default();
+        assert_eq!(c.n_max, 32);
+        assert_eq!(c.num_labels, 29);
+        assert_eq!(c.filters, [64, 32, 16]);
+        assert_eq!(c.embed_dim(), 16);
+        assert_eq!(c.feature_dims(), [29, 64, 32]);
+    }
+
+    #[test]
+    fn parse_config_json() {
+        let v = parse(
+            r#"{"n_max": 16, "num_labels": 8, "filters": [4, 4, 2],
+                "relu_mask": [true, false, false], "ntn_k": 4,
+                "fc_dims": [4], "seed": 1}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&v).unwrap();
+        assert_eq!(c.n_max, 16);
+        assert_eq!(c.filters, [4, 4, 2]);
+        assert_eq!(c.relu_mask, [true, false, false]);
+        assert_eq!(c.fc_dims, vec![4]);
+    }
+}

@@ -1,0 +1,122 @@
+//! Small dense f32 linear algebra for the independent rust reference
+//! (nn::simgnn) and the simulator's functional model. Row-major, no
+//! external BLAS — the matrices here are at most 64x64.
+
+/// out[m,n] = a[m,k] @ b[k,n]  (row-major, accumulate in f32).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "a shape");
+    assert_eq!(b.len(), k * n, "b shape");
+    let mut out = vec![0.0f32; m * n];
+    // ikj loop order: streams b row-wise, vectorizer-friendly.
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // sparse-friendly: skip zero activations
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// out[m] = a[m,n] @ x[n]
+pub fn matvec(a: &[f32], x: &[f32], m: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    (0..m)
+        .map(|i| {
+            a[i * n..(i + 1) * n]
+                .iter()
+                .zip(x.iter())
+                .map(|(&av, &xv)| av * xv)
+                .sum()
+        })
+        .collect()
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(&x, &y)| x * y).sum()
+}
+
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+pub fn tanh_vec(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+/// Fraction of exact zeros in a slice (sparsity measurement, §3.4).
+pub fn sparsity(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().filter(|&&v| v == 0.0).count() as f64 / x.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let i = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &i, 2, 2, 2), a);
+        assert_eq!(matmul(&i, &a, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        // (1x3) @ (3x2)
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        assert_eq!(matmul(&a, &b, 1, 3, 2), vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let x = vec![7.0, 8.0];
+        assert_eq!(matvec(&a, &x, 3, 2), matmul(&a, &x, 3, 2, 1));
+    }
+
+    #[test]
+    fn activations() {
+        let mut v = vec![-1.0, 0.5];
+        relu_inplace(&mut v);
+        assert_eq!(v, vec![0.0, 0.5]);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(10.0) > 0.99);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        assert_eq!(sparsity(&[0.0, 1.0, 0.0, 2.0]), 0.5);
+        assert_eq!(sparsity(&[]), 0.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Independent rust reference numerics for SimGNN + config/weight loaders.
+pub mod config;
+pub mod linalg;
+pub mod simgnn;
+pub mod weights;

@@ -1,0 +1,313 @@
+//! Independent rust reference implementation of the SimGNN forward pass.
+//!
+//! This is the third implementation of the same math (after the Pallas
+//! kernels and the jnp oracle) and serves three roles:
+//!  * golden cross-check against python (tests/golden/simgnn_golden.json);
+//!  * the functional model inside the cycle simulator (sim/), which needs
+//!    per-stage intermediates and real sparsity counts;
+//!  * the measured CPU baseline engine (runtime/native.rs).
+
+use crate::graph::encode::EncodedGraph;
+
+use super::config::ModelConfig;
+use super::linalg::{dot, matmul, matvec, relu_inplace, sigmoid, sparsity};
+use super::weights::Weights;
+
+/// Per-stage intermediates of one graph's GCN pass (used by the simulator
+/// to drive cycle counts with *real* data sparsity).
+#[derive(Debug, Clone)]
+pub struct GcnTrace {
+    /// Input to each layer (h0, h1, h2), row-major n_max x f_in.
+    pub layer_inputs: Vec<Vec<f32>>,
+    /// Final node embeddings, n_max x F.
+    pub embeddings: Vec<f32>,
+    /// Sparsity (fraction of zeros) of each layer input over real rows.
+    pub input_sparsity: Vec<f64>,
+}
+
+/// Run the 3-layer GCN stage on one encoded graph.
+pub fn gcn_forward(cfg: &ModelConfig, w: &Weights, g: &EncodedGraph) -> GcnTrace {
+    let n = cfg.n_max;
+    let mut h = g.h0.clone();
+    let mut layer_inputs = Vec::with_capacity(3);
+    let mut input_sparsity = Vec::with_capacity(3);
+    let dims_in = cfg.feature_dims();
+    for layer in 0..3 {
+        let f_in = dims_in[layer];
+        let f_out = cfg.filters[layer];
+        // Sparsity over real rows only (paper counts real-node features).
+        let real_rows = g.num_nodes;
+        input_sparsity.push(sparsity(&h[..real_rows * f_in]));
+        layer_inputs.push(h.clone());
+        // Feature Transformation: X = H @ W  (n x f_out)
+        let x = matmul(&h, &w.gcn_w[layer], n, f_in, f_out);
+        // Aggregation: A' @ X
+        let mut agg = matmul(&g.a_norm, &x, n, n, f_out);
+        // Masked bias + activation
+        for i in 0..n {
+            let m = g.mask[i];
+            for j in 0..f_out {
+                agg[i * f_out + j] += m * w.gcn_b[layer][j];
+            }
+        }
+        if cfg.relu_mask[layer] {
+            relu_inplace(&mut agg);
+        } else {
+            for i in 0..n {
+                if g.mask[i] == 0.0 {
+                    for j in 0..f_out {
+                        agg[i * f_out + j] = 0.0;
+                    }
+                }
+            }
+        }
+        h = agg;
+    }
+    GcnTrace {
+        embeddings: h.clone(),
+        layer_inputs,
+        input_sparsity,
+    }
+}
+
+/// Attention pooling (Eq. 3) on node embeddings -> graph embedding (F,).
+pub fn attention_pool(cfg: &ModelConfig, w: &Weights, emb: &[f32], mask: &[f32]) -> Vec<f32> {
+    let n = cfg.n_max;
+    let f = cfg.embed_dim();
+    let count: f32 = mask.iter().sum::<f32>().max(1.0);
+    let mut mean = vec![0.0f32; f];
+    for i in 0..n {
+        if mask[i] != 0.0 {
+            for j in 0..f {
+                mean[j] += emb[i * f + j];
+            }
+        }
+    }
+    for v in mean.iter_mut() {
+        *v /= count;
+    }
+    let mut c = matvec(&w.att_w, &mean, f, f);
+    for v in c.iter_mut() {
+        *v = v.tanh();
+    }
+    let mut out = vec![0.0f32; f];
+    for i in 0..n {
+        if mask[i] == 0.0 {
+            continue;
+        }
+        let row = &emb[i * f..(i + 1) * f];
+        let a = sigmoid(dot(row, &c));
+        for j in 0..f {
+            out[j] += a * row[j];
+        }
+    }
+    out
+}
+
+/// NTN (Eq. 4) -> K similarity slices.
+pub fn ntn_forward(cfg: &ModelConfig, w: &Weights, hg1: &[f32], hg2: &[f32]) -> Vec<f32> {
+    let f = cfg.embed_dim();
+    let k = cfg.ntn_k;
+    let mut out = vec![0.0f32; k];
+    for slice in 0..k {
+        let wk = &w.ntn_w[slice * f * f..(slice + 1) * f * f];
+        // hg1^T W_k hg2
+        let wh2 = matvec(wk, hg2, f, f);
+        let bilinear = dot(hg1, &wh2);
+        let vk = &w.ntn_v[slice * 2 * f..(slice + 1) * 2 * f];
+        let linear = dot(&vk[..f], hg1) + dot(&vk[f..], hg2);
+        out[slice] = (bilinear + linear + w.ntn_b[slice]).max(0.0);
+    }
+    out
+}
+
+/// FCN scorer -> similarity in (0, 1).
+pub fn fcn_forward(cfg: &ModelConfig, w: &Weights, s: &[f32]) -> f32 {
+    let mut x = s.to_vec();
+    let mut d = cfg.ntn_k;
+    for (fw, fb) in w.fc_w.iter().zip(w.fc_b.iter()) {
+        let h = fb.len();
+        // x (1 x d) @ fw (d x h)
+        let mut y = matmul(&x, fw, 1, d, h);
+        for (v, &b) in y.iter_mut().zip(fb.iter()) {
+            *v += b;
+        }
+        relu_inplace(&mut y);
+        x = y;
+        d = h;
+    }
+    let logit = dot(&x, &w.out_w) + w.out_b[0];
+    sigmoid(logit)
+}
+
+/// Full per-pair forward with all intermediates exposed.
+#[derive(Debug, Clone)]
+pub struct PairTrace {
+    pub trace1: GcnTrace,
+    pub trace2: GcnTrace,
+    pub hg1: Vec<f32>,
+    pub hg2: Vec<f32>,
+    pub ntn_out: Vec<f32>,
+    pub score: f32,
+}
+
+/// Score one encoded pair (the NativeEngine hot path).
+pub fn simgnn_forward(
+    cfg: &ModelConfig,
+    w: &Weights,
+    g1: &EncodedGraph,
+    g2: &EncodedGraph,
+) -> PairTrace {
+    let trace1 = gcn_forward(cfg, w, g1);
+    let trace2 = gcn_forward(cfg, w, g2);
+    let hg1 = attention_pool(cfg, w, &trace1.embeddings, &g1.mask);
+    let hg2 = attention_pool(cfg, w, &trace2.embeddings, &g2.mask);
+    let ntn_out = ntn_forward(cfg, w, &hg1, &hg2);
+    let score = fcn_forward(cfg, w, &ntn_out);
+    PairTrace {
+        trace1,
+        trace2,
+        hg1,
+        hg2,
+        ntn_out,
+        score,
+    }
+}
+
+/// Score only (skips cloning intermediates where possible).
+pub fn simgnn_score(
+    cfg: &ModelConfig,
+    w: &Weights,
+    g1: &EncodedGraph,
+    g2: &EncodedGraph,
+) -> f32 {
+    simgnn_forward(cfg, w, g1, g2).score
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::encode::encode;
+    use crate::graph::generate::{generate, Family};
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            n_max: 8,
+            num_labels: 4,
+            filters: [4, 4, 4],
+            relu_mask: [true, true, false],
+            ntn_k: 4,
+            fc_dims: vec![4],
+            seed: 0,
+        }
+    }
+
+    fn const_weights(cfg: &ModelConfig, v: f32) -> Weights {
+        let dims_in = cfg.feature_dims();
+        let f = cfg.embed_dim();
+        let k = cfg.ntn_k;
+        let mut fc_w = Vec::new();
+        let mut fc_b = Vec::new();
+        let mut d = k;
+        for &h in &cfg.fc_dims {
+            fc_w.push(vec![v; d * h]);
+            fc_b.push(vec![0.0; h]);
+            d = h;
+        }
+        Weights {
+            gcn_w: [
+                vec![v; dims_in[0] * cfg.filters[0]],
+                vec![v; dims_in[1] * cfg.filters[1]],
+                vec![v; dims_in[2] * cfg.filters[2]],
+            ],
+            gcn_b: [
+                vec![0.0; cfg.filters[0]],
+                vec![0.0; cfg.filters[1]],
+                vec![0.0; cfg.filters[2]],
+            ],
+            att_w: vec![v; f * f],
+            ntn_w: vec![v; k * f * f],
+            ntn_v: vec![v; k * 2 * f],
+            ntn_b: vec![0.0; k],
+            fc_w,
+            fc_b,
+            out_w: vec![v; d],
+            out_b: vec![0.0],
+        }
+    }
+
+    #[test]
+    fn padded_rows_stay_zero() {
+        let cfg = tiny_cfg();
+        let w = const_weights(&cfg, 0.1);
+        let mut rng = Rng::new(51);
+        let g = generate(&mut rng, Family::ErdosRenyi { n: 5, p_millis: 300 }, 8, 4);
+        let e = encode(&g, cfg.n_max, cfg.num_labels).unwrap();
+        let t = gcn_forward(&cfg, &w, &e);
+        let f = cfg.embed_dim();
+        for i in g.num_nodes()..cfg.n_max {
+            for j in 0..f {
+                assert_eq!(t.embeddings[i * f + j], 0.0, "pad row {i} leaked");
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_pair_is_symmetric_score() {
+        // NTN is not symmetric in general, but identical graphs must give
+        // identical embeddings, so score(g,g) is deterministic and the
+        // bilinear term is symmetric under hg1 == hg2.
+        let cfg = tiny_cfg();
+        let w = const_weights(&cfg, 0.05);
+        let mut rng = Rng::new(52);
+        let g = generate(&mut rng, Family::ErdosRenyi { n: 6, p_millis: 300 }, 8, 4);
+        let e = encode(&g, cfg.n_max, cfg.num_labels).unwrap();
+        let s1 = simgnn_score(&cfg, &w, &e, &e);
+        let s2 = simgnn_score(&cfg, &w, &e, &e);
+        assert_eq!(s1, s2);
+        assert!(s1 > 0.0 && s1 < 1.0);
+    }
+
+    #[test]
+    fn score_in_unit_interval_random_weights() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(53);
+        let mut w = const_weights(&cfg, 0.0);
+        let fill = |v: &mut Vec<f32>, rng: &mut Rng| {
+            for x in v.iter_mut() {
+                *x = (rng.f32() - 0.5) * 0.8;
+            }
+        };
+        for i in 0..3 {
+            fill(&mut w.gcn_w[i], &mut rng);
+        }
+        fill(&mut w.att_w, &mut rng);
+        fill(&mut w.ntn_w, &mut rng);
+        fill(&mut w.ntn_v, &mut rng);
+        for fw in w.fc_w.iter_mut() {
+            fill(fw, &mut rng);
+        }
+        fill(&mut w.out_w, &mut rng);
+        for _ in 0..10 {
+            let g1 = generate(&mut rng, Family::ErdosRenyi { n: 6, p_millis: 250 }, 8, 4);
+            let g2 = generate(&mut rng, Family::ErdosRenyi { n: 7, p_millis: 250 }, 8, 4);
+            let e1 = encode(&g1, cfg.n_max, cfg.num_labels).unwrap();
+            let e2 = encode(&g2, cfg.n_max, cfg.num_labels).unwrap();
+            let s = simgnn_score(&cfg, &w, &e1, &e2);
+            assert!(s > 0.0 && s < 1.0, "score {s} out of range");
+        }
+    }
+
+    #[test]
+    fn one_hot_input_sparsity_is_high() {
+        let cfg = tiny_cfg();
+        let w = const_weights(&cfg, 0.1);
+        let mut rng = Rng::new(54);
+        let g = generate(&mut rng, Family::ErdosRenyi { n: 8, p_millis: 300 }, 8, 4);
+        let e = encode(&g, cfg.n_max, cfg.num_labels).unwrap();
+        let t = gcn_forward(&cfg, &w, &e);
+        // one-hot rows: (num_labels-1)/num_labels zeros
+        assert!(t.input_sparsity[0] >= 0.7, "{}", t.input_sparsity[0]);
+    }
+}

@@ -1,0 +1,190 @@
+//! Loader for artifacts/weights.bin + weights.json (see
+//! python/compile/weights.py for the format). Offsets from the JSON
+//! manifest are validated against the shapes implied by the config —
+//! a mismatch means the python and rust sides disagree and must fail loudly.
+
+use std::path::Path;
+
+use crate::util::json::parse;
+
+use super::config::ModelConfig;
+
+/// All SimGNN weights as flat row-major f32 tensors.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub gcn_w: [Vec<f32>; 3],
+    pub gcn_b: [Vec<f32>; 3],
+    pub att_w: Vec<f32>,       // (F, F)
+    pub ntn_w: Vec<f32>,       // (K, F, F)
+    pub ntn_v: Vec<f32>,       // (K, 2F)
+    pub ntn_b: Vec<f32>,       // (K,)
+    pub fc_w: Vec<Vec<f32>>,   // [(d_i, d_{i+1})]
+    pub fc_b: Vec<Vec<f32>>,   // [(d_{i+1},)]
+    pub out_w: Vec<f32>,       // (d_last, 1)
+    pub out_b: Vec<f32>,       // (1,)
+}
+
+/// The fixed manifest (name, shape) for a config — MUST mirror
+/// python/compile/weights.py::manifest_entries.
+pub fn manifest_entries(cfg: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let f3 = cfg.embed_dim();
+    let k = cfg.ntn_k;
+    let dims_in = cfg.feature_dims();
+    let mut entries = Vec::new();
+    for i in 0..3 {
+        entries.push((format!("gcn_w{i}"), vec![dims_in[i], cfg.filters[i]]));
+        entries.push((format!("gcn_b{i}"), vec![cfg.filters[i]]));
+    }
+    entries.push(("att_w".into(), vec![f3, f3]));
+    entries.push(("ntn_w".into(), vec![k, f3, f3]));
+    entries.push(("ntn_v".into(), vec![k, 2 * f3]));
+    entries.push(("ntn_b".into(), vec![k]));
+    let mut d = k;
+    for (i, &h) in cfg.fc_dims.iter().enumerate() {
+        entries.push((format!("fc_w{i}"), vec![d, h]));
+        entries.push((format!("fc_b{i}"), vec![h]));
+        d = h;
+    }
+    entries.push(("out_w".into(), vec![d, 1]));
+    entries.push(("out_b".into(), vec![1]));
+    entries
+}
+
+fn read_f32_le(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "weights.bin length not /4");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl Weights {
+    /// Load and validate weights from an artifacts directory.
+    pub fn load(cfg: &ModelConfig, artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let flat = read_f32_le(&artifacts_dir.join("weights.bin"))?;
+        let entries = manifest_entries(cfg);
+        // Cross-check the JSON manifest if present.
+        let manifest_path = artifacts_dir.join("weights.json");
+        if manifest_path.exists() {
+            let doc = parse(&std::fs::read_to_string(&manifest_path)?)
+                .map_err(|e| anyhow::anyhow!("weights.json: {e}"))?;
+            let tensors = doc
+                .get("tensors")
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("weights.json missing tensors"))?;
+            anyhow::ensure!(
+                tensors.len() == entries.len(),
+                "manifest arity mismatch: json {} vs config {}",
+                tensors.len(),
+                entries.len()
+            );
+            let mut offset = 0usize;
+            for (t, (name, shape)) in tensors.iter().zip(entries.iter()) {
+                anyhow::ensure!(
+                    t.get("name").as_str() == Some(name.as_str()),
+                    "manifest order mismatch at {name}"
+                );
+                let jshape: Vec<usize> = t
+                    .get("shape")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default();
+                anyhow::ensure!(&jshape == shape, "shape mismatch for {name}");
+                anyhow::ensure!(
+                    t.get("offset").as_usize() == Some(offset),
+                    "offset mismatch for {name}"
+                );
+                offset += shape.iter().product::<usize>();
+            }
+        }
+        let total: usize = entries
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        anyhow::ensure!(
+            flat.len() == total,
+            "weights.bin has {} floats, config implies {total}",
+            flat.len()
+        );
+        let mut cursor = 0usize;
+        let mut take = |shape: &[usize]| {
+            let size: usize = shape.iter().product();
+            let out = flat[cursor..cursor + size].to_vec();
+            cursor += size;
+            out
+        };
+        let gcn_w0 = take(&entries[0].1);
+        let gcn_b0 = take(&entries[1].1);
+        let gcn_w1 = take(&entries[2].1);
+        let gcn_b1 = take(&entries[3].1);
+        let gcn_w2 = take(&entries[4].1);
+        let gcn_b2 = take(&entries[5].1);
+        let f3 = cfg.embed_dim();
+        let k = cfg.ntn_k;
+        let att_w = take(&[f3, f3]);
+        let ntn_w = take(&[k, f3, f3]);
+        let ntn_v = take(&[k, 2 * f3]);
+        let ntn_b = take(&[k]);
+        let mut fc_w = Vec::new();
+        let mut fc_b = Vec::new();
+        let mut d = k;
+        for &h in &cfg.fc_dims {
+            fc_w.push(take(&[d, h]));
+            fc_b.push(take(&[h]));
+            d = h;
+        }
+        let out_w = take(&[d, 1]);
+        let out_b = take(&[1]);
+        assert_eq!(cursor, flat.len());
+        Ok(Weights {
+            gcn_w: [gcn_w0, gcn_w1, gcn_w2],
+            gcn_b: [gcn_b0, gcn_b1, gcn_b2],
+            att_w,
+            ntn_w,
+            ntn_v,
+            ntn_b,
+            fc_w,
+            fc_b,
+            out_w,
+            out_b,
+        })
+    }
+
+    /// Count of weight-matrix zeros — the simulator uses weight density for
+    /// MULT workload estimates (weights are dense post-training, unlike
+    /// activations).
+    pub fn total_parameters(&self) -> usize {
+        self.gcn_w.iter().map(|v| v.len()).sum::<usize>()
+            + self.gcn_b.iter().map(|v| v.len()).sum::<usize>()
+            + self.att_w.len()
+            + self.ntn_w.len()
+            + self.ntn_v.len()
+            + self.ntn_b.len()
+            + self.fc_w.iter().map(|v| v.len()).sum::<usize>()
+            + self.fc_b.iter().map(|v| v.len()).sum::<usize>()
+            + self.out_w.len()
+            + self.out_b.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_matches_python_layout() {
+        let cfg = ModelConfig::default();
+        let entries = manifest_entries(&cfg);
+        assert_eq!(entries[0], ("gcn_w0".into(), vec![29, 64]));
+        assert_eq!(entries[6], ("att_w".into(), vec![16, 16]));
+        assert_eq!(entries[7], ("ntn_w".into(), vec![16, 16, 16]));
+        let total: usize = entries
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        // 29*64+64 + 64*32+32 + 32*16+16 + 256 + 4096 + 512 + 16
+        //   + 16*16+16 + 16*8+8 + 8 + 1
+        assert_eq!(total, 9825);
+    }
+}

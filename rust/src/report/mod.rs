@@ -1,0 +1,137 @@
+//! Report harness: regenerates every table and figure of the paper's
+//! evaluation section (§5) from the cycle simulator, the analytical
+//! baselines and the real measured engines. Shared by the CLI
+//! (`spa-gcn report <name>`) and the benches.
+
+pub mod tables;
+
+use std::fmt::Write as _;
+
+/// A rendered report table: header + rows, printable as aligned text and
+/// serializable to JSON for EXPERIMENTS.md tooling.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: &str) {
+        self.notes.push(s.to_string());
+    }
+
+    /// Render as aligned monospace text.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.columns, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "  note: {n}");
+        }
+        out
+    }
+
+    /// Serialize to a JSON value (for machine-readable report dumps).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr, obj, s, Json};
+        obj(vec![
+            ("title", s(&self.title)),
+            (
+                "columns",
+                arr(self.columns.iter().map(|c| s(c)).collect()),
+            ),
+            (
+                "rows",
+                arr(self
+                    .rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| s(c)).collect()))
+                    .collect()),
+            ),
+            ("notes", arr(self.notes.iter().map(|n| s(n)).collect())),
+        ])
+    }
+}
+
+/// Format a float with sensible precision for report cells.
+pub fn fmt(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 0.1 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bee"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        t.note("hello");
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("a    bee"));
+        assert!(r.contains("note: hello"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn rejects_bad_rows() {
+        let mut t = Table::new("demo", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn fmt_precision() {
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(1234.6), "1235");
+        assert_eq!(fmt(12.34), "12.3");
+        assert_eq!(fmt(0.3274), "0.327");
+        assert_eq!(fmt(0.0123), "0.0123");
+    }
+}

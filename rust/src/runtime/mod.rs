@@ -1,0 +1,66 @@
+//! Execution engines for scoring graph-pair batches.
+//!
+//! The coordinator (L3) is engine-agnostic: it batches queries into
+//! `PackedBatch`es and hands them to an `Engine`. Three engines exist:
+//!
+//!  * [`pjrt::XlaEngine`] — the production path: loads the AOT-compiled
+//!    HLO text artifacts (L2 jax model + L1 Pallas kernels) and executes
+//!    them on the PJRT CPU client. Python is never involved.
+//!  * [`native::NativeEngine`] — the independent rust reference numerics;
+//!    doubles as the "PyG-CPU"-style measured baseline.
+//!  * `sim::engine::SimEngine` — functional result + FPGA cycle report
+//!    from the SPA-GCN cycle simulator (defined in the sim module).
+
+pub mod native;
+pub mod pjrt;
+
+use crate::graph::encode::PackedBatch;
+
+/// Thread-safe constructor for engines; workers call it in-thread.
+pub type EngineFactory = std::sync::Arc<dyn Fn() -> anyhow::Result<Box<dyn Engine>> + Send + Sync>;
+
+/// A batch-scoring backend.
+///
+/// Note: deliberately NOT `Send` — the xla crate's PJRT handles are
+/// `Rc`-based. Worker threads construct their own engine via an
+/// `EngineFactory` (which IS Send) inside the thread.
+pub trait Engine {
+    /// Human-readable engine name for logs/metrics.
+    fn name(&self) -> &str;
+
+    /// Batch sizes this engine can execute directly. The batcher selects
+    /// from these; `score_batch` must receive one of them.
+    fn supported_batch_sizes(&self) -> Vec<usize>;
+
+    /// Score `batch.batch` pairs; returns one similarity per slot
+    /// (padding slots included — caller truncates).
+    fn score_batch(&mut self, batch: &PackedBatch) -> anyhow::Result<Vec<f32>>;
+}
+
+/// Pick the smallest supported batch size >= `pending`, or the largest
+/// available if `pending` exceeds them all (the caller then loops).
+pub fn pick_batch_size(supported: &[usize], pending: usize) -> usize {
+    let mut sizes = supported.to_vec();
+    sizes.sort_unstable();
+    for &s in &sizes {
+        if s >= pending {
+            return s;
+        }
+    }
+    *sizes.last().expect("engine supports no batch sizes")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_batch_rounds_up() {
+        let sizes = vec![1, 4, 16, 64];
+        assert_eq!(pick_batch_size(&sizes, 1), 1);
+        assert_eq!(pick_batch_size(&sizes, 3), 4);
+        assert_eq!(pick_batch_size(&sizes, 16), 16);
+        assert_eq!(pick_batch_size(&sizes, 17), 64);
+        assert_eq!(pick_batch_size(&sizes, 1000), 64);
+    }
+}

@@ -1,0 +1,174 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once on the CPU
+//! client, execute from the rust hot path. Mirrors the paper's deployment
+//! model: the FPGA bitstream (here: compiled PJRT executable) is built
+//! offline, the host only feeds inputs and collects outputs.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): xla_extension 0.5.1 rejects jax>=0.5
+//! serialized protos (64-bit ids), the text parser reassigns ids.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::graph::encode::PackedBatch;
+use crate::nn::config::ArtifactsMeta;
+
+use super::Engine;
+
+/// One compiled SimGNN executable (fixed batch size).
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+}
+
+/// Timing breakdown of one execute call (for Fig. 11-style analyses).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecTiming {
+    /// Host-side input literal construction ("DMA write" analogue), µs.
+    pub upload_us: f64,
+    /// Device execute, µs.
+    pub execute_us: f64,
+    /// Output literal -> host vec ("DMA read" analogue), µs.
+    pub download_us: f64,
+}
+
+/// The production engine: PJRT CPU client + per-batch-size executables.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    executables: BTreeMap<usize, Compiled>,
+    meta: ArtifactsMeta,
+    artifacts_dir: PathBuf,
+    /// Timing of the most recent `score_batch` call.
+    pub last_timing: ExecTiming,
+}
+
+impl XlaEngine {
+    /// Load every simgnn_b*.hlo.txt listed in meta.json and compile them
+    /// (the Pallas-kernel artifacts — the TPU-faithful path).
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        Self::load_variant(artifacts_dir, "simgnn")
+    }
+
+    /// Load the fused (pure-jnp, XLA-GEMM) artifact flavor — identical
+    /// math, ~an order of magnitude faster on the CPU PJRT backend
+    /// because interpret-mode Pallas lowers to per-grid-step loops there
+    /// (EXPERIMENTS.md §Perf L2).
+    pub fn load_fused(artifacts_dir: &Path) -> Result<Self> {
+        Self::load_variant(artifacts_dir, "simgnn_fused")
+    }
+
+    /// Load a named artifact prefix ("simgnn" | "simgnn_fused").
+    pub fn load_variant(artifacts_dir: &Path, prefix: &str) -> Result<Self> {
+        let meta = ArtifactsMeta::load(artifacts_dir)
+            .context("loading artifacts/meta.json (run `make artifacts`)")?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = BTreeMap::new();
+        for &b in &meta.batch_sizes {
+            let path = artifacts_dir.join(format!("{prefix}_b{b}.hlo.txt"));
+            if !path.exists() && prefix != "simgnn" {
+                continue; // older artifact sets may lack the fused flavor
+            }
+            let exe = compile_hlo_text(&client, &path)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            executables.insert(b, Compiled { exe, batch: b });
+        }
+        anyhow::ensure!(!executables.is_empty(), "no artifacts found for {prefix}");
+        Ok(XlaEngine {
+            client,
+            executables,
+            meta,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            last_timing: ExecTiming::default(),
+        })
+    }
+
+    pub fn meta(&self) -> &ArtifactsMeta {
+        &self.meta
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile + run the gcn3 (embeddings-only) artifact once; used by the
+    /// quickstart example.
+    pub fn gcn3_embeddings(&self, a: &[f32], h: &[f32], m: &[f32]) -> Result<Vec<f32>> {
+        let n = self.meta.config.n_max;
+        let l = self.meta.config.num_labels;
+        let path = self.artifacts_dir.join("gcn3_b1.hlo.txt");
+        let exe = compile_hlo_text(&self.client, &path)?;
+        let lits = [
+            lit3(a, 1, n, n)?,
+            lit3(h, 1, n, l)?,
+            lit2(m, 1, n)?,
+        ];
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+}
+
+fn compile_hlo_text(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+fn lit3(data: &[f32], b: usize, r: usize, c: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == b * r * c, "literal shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[b as i64, r as i64, c as i64])?)
+}
+
+fn lit2(data: &[f32], b: usize, r: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == b * r, "literal shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[b as i64, r as i64])?)
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &str {
+        "xla-pjrt"
+    }
+
+    fn supported_batch_sizes(&self) -> Vec<usize> {
+        self.executables.keys().copied().collect()
+    }
+
+    fn score_batch(&mut self, batch: &PackedBatch) -> Result<Vec<f32>> {
+        let compiled = self
+            .executables
+            .get(&batch.batch)
+            .with_context(|| format!("no artifact for batch size {}", batch.batch))?;
+        debug_assert_eq!(compiled.batch, batch.batch);
+        let (b, n, l) = (batch.batch, batch.n_max, batch.num_labels);
+
+        let t0 = Instant::now();
+        let lits = [
+            lit3(&batch.a1, b, n, n)?,
+            lit3(&batch.h1, b, n, l)?,
+            lit2(&batch.m1, b, n)?,
+            lit3(&batch.a2, b, n, n)?,
+            lit3(&batch.h2, b, n, l)?,
+            lit2(&batch.m2, b, n)?,
+        ];
+        let t1 = Instant::now();
+        let result = compiled.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let t2 = Instant::now();
+        let scores = result.to_tuple1()?.to_vec::<f32>()?;
+        let t3 = Instant::now();
+        self.last_timing = ExecTiming {
+            upload_us: (t1 - t0).as_secs_f64() * 1e6,
+            execute_us: (t2 - t1).as_secs_f64() * 1e6,
+            download_us: (t3 - t2).as_secs_f64() * 1e6,
+        };
+        anyhow::ensure!(scores.len() == b, "expected {b} scores, got {}", scores.len());
+        Ok(scores)
+    }
+}

@@ -1,0 +1,97 @@
+//! Cycle model of the Aggregation engine (paper §3.2.2).
+//!
+//! The engine streams the (pre-processed) weighted edge list of A' and,
+//! per edge, updates all `f_out` features of the destination node using
+//! `SIMD_Agg` feature lanes — feature-level parallelism only (edge-level
+//! parallelism would bank-conflict on random destinations). The offline
+//! reordering (graph::reorder) guarantees II=1; a non-reordered stream
+//! pays RAW stalls, which this model charges explicitly.
+
+use crate::graph::normalize::WEdge;
+use crate::graph::reorder::raw_stall_cycles;
+
+use super::config::LayerParams;
+
+/// Result of one Aggregation pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AggCycles {
+    pub busy: u64,
+    pub raw_stalls: u64,
+    pub edges: u64,
+}
+
+/// Cycles for aggregating `edges` (already includes both directions and
+/// self-loops) into `f_out`-wide features.
+pub fn agg_cycles(
+    edges: &[WEdge],
+    f_out: usize,
+    p: &LayerParams,
+    l_add: usize,
+    reordered: bool,
+) -> AggCycles {
+    let per_edge = f_out.div_ceil(p.simd_agg) as u64;
+    let stalls = if reordered {
+        0
+    } else {
+        // Each stall in edge-issue terms blocks `per_edge` engine cycles.
+        raw_stall_cycles(edges, l_add.div_ceil(per_edge as usize)) as u64 * per_edge
+    };
+    let busy = edges.len() as u64 * per_edge + stalls + l_add as u64;
+    AggCycles {
+        busy,
+        raw_stalls: stalls,
+        edges: edges.len() as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{generate, Family};
+    use crate::graph::normalize::normalized_edges;
+    use crate::graph::reorder::reorder_edges;
+    use crate::sim::config::LayerParams;
+    use crate::util::rng::Rng;
+
+    fn params(simd_agg: usize) -> LayerParams {
+        LayerParams {
+            simd_ft: 16,
+            simd_agg,
+            df: 8,
+            p: 0,
+        }
+    }
+
+    #[test]
+    fn reordered_stream_is_stall_free() {
+        let mut rng = Rng::new(61);
+        let g = generate(&mut rng, Family::Aids, 32, 29);
+        let edges = normalized_edges(&g);
+        let r = reorder_edges(&edges, 8);
+        let c = agg_cycles(&r.edges, 64, &params(32), 7, true);
+        assert_eq!(c.raw_stalls, 0);
+        assert_eq!(c.busy, edges.len() as u64 * 2 + 7);
+    }
+
+    #[test]
+    fn sorted_stream_pays_stalls() {
+        let mut rng = Rng::new(62);
+        let g = generate(&mut rng, Family::Aids, 32, 29);
+        let edges = normalized_edges(&g); // dst-sorted: worst case
+        let c = agg_cycles(&edges, 64, &params(32), 7, false);
+        assert!(c.raw_stalls > 0);
+        let r = reorder_edges(&edges, 8);
+        let c2 = agg_cycles(&r.edges, 64, &params(32), 7, true);
+        assert!(c2.busy < c.busy);
+    }
+
+    #[test]
+    fn wider_simd_reduces_busy() {
+        let mut rng = Rng::new(63);
+        let g = generate(&mut rng, Family::Aids, 32, 29);
+        let edges = reorder_edges(&normalized_edges(&g), 8).edges;
+        let narrow = agg_cycles(&edges, 64, &params(16), 7, true);
+        let wide = agg_cycles(&edges, 64, &params(64), 7, true);
+        assert!(wide.busy < narrow.busy);
+    }
+}

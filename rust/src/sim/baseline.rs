@@ -1,0 +1,168 @@
+//! Analytical CPU / GPU execution models for the Table 6 comparison.
+//!
+//! These encode the mechanism the paper measured rather than guessing
+//! absolute speeds:
+//!
+//!  * **PyG-CPU** (Xeon E5-2699 v4): per-PyTorch-op dispatch overhead
+//!    dominates small-graph kernels; MKL GEMMs on 32xF matrices run far
+//!    below peak. The paper measured 5.85 ms kernel / 9.27 ms E2E.
+//!  * **PyG-GPU** (V100): nvprof showed 225 kernel launches per query,
+//!    ~4.6 KFLOP per kernel, <=6% SM utilization (mostly 1 SM of 80) —
+//!    launch overhead exceeds compute, so the GPU is *slower* than the
+//!    CPU (9.68 ms kernel / 13.7 ms E2E).
+//!
+//! Model constants are calibrated to those published measurements and
+//! used to regenerate Table 6's *shape*; the real measured rust-native
+//! and PJRT-CPU engines provide the grounded companion numbers.
+
+/// Workload description of one SimGNN query.
+#[derive(Debug, Clone, Copy)]
+pub struct QueryWork {
+    /// Total FLOPs of the query (2 graphs through GCN + Att + NTN + FCN).
+    pub flops: f64,
+    /// Framework ops dispatched per query (PyG: scatter + mm + act per
+    /// layer per graph, plus attention/NTN/FCN glue).
+    pub torch_ops: u32,
+    /// CUDA kernels launched per query (paper nvprof: 225).
+    pub cuda_kernels: u32,
+}
+
+impl QueryWork {
+    /// FLOP count from the model dims and mean graph size.
+    pub fn from_dims(n: usize, filters: [usize; 3], num_labels: usize, k: usize) -> QueryWork {
+        let f = filters[2];
+        let mut flops = 0f64;
+        let dims_in = [num_labels, filters[0], filters[1]];
+        for l in 0..3 {
+            // H@W + A'@X per graph
+            flops += 2.0 * (n * dims_in[l] * filters[l]) as f64;
+            flops += 2.0 * (n * n * filters[l]) as f64;
+        }
+        flops *= 2.0; // two graphs
+        flops += 2.0 * 2.0 * (f * f * n) as f64; // attention MVMs
+        flops += 2.0 * (k * f * f + k * 2 * f) as f64; // NTN
+        flops += 2.0 * (k * 16 + 16 * 8) as f64; // FCN
+        QueryWork {
+            flops,
+            torch_ops: 70,     // ~11 ops x 6 layer-graphs + glue
+            cuda_kernels: 225, // paper §5.4.2
+        }
+    }
+}
+
+/// CPU model (PyG on a 22-core Xeon at 2.2 GHz).
+#[derive(Debug, Clone, Copy)]
+pub struct CpuModel {
+    /// Effective GEMM throughput on tiny matrices, GFLOP/s. Peak AVX2 FMA
+    /// on 22 cores is ~1.5 TFLOP/s; tiny matrices with scatter/gather in
+    /// between reach a fraction of a percent of that.
+    pub eff_gflops: f64,
+    /// Per-op framework dispatch cost, µs (PyTorch eager).
+    pub dispatch_us: f64,
+    /// Python-side per-query E2E overhead, ms (data prep + profiler gap).
+    pub e2e_extra_ms: f64,
+}
+
+impl Default for CpuModel {
+    fn default() -> Self {
+        CpuModel {
+            eff_gflops: 1.6,
+            dispatch_us: 62.0,
+            e2e_extra_ms: 3.4,
+        }
+    }
+}
+
+impl CpuModel {
+    pub fn kernel_ms(&self, w: &QueryWork) -> f64 {
+        w.flops / (self.eff_gflops * 1e6) + w.torch_ops as f64 * self.dispatch_us / 1e3
+    }
+    pub fn e2e_ms(&self, w: &QueryWork) -> f64 {
+        self.kernel_ms(w) + self.e2e_extra_ms
+    }
+}
+
+/// GPU model (PyG on a V100, coarse-grained execution).
+#[derive(Debug, Clone, Copy)]
+pub struct GpuModel {
+    /// Per-kernel launch + sync overhead, µs (cudaLaunchKernel + driver).
+    pub launch_us: f64,
+    /// Achieved throughput per kernel: the paper saw 1 SM used; one SM
+    /// at 1.3 GHz with partial occupancy on 4.6 KFLOP kernels.
+    pub eff_gflops: f64,
+    /// Host-side per-query overhead (python + transfers), ms.
+    pub e2e_extra_ms: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        GpuModel {
+            launch_us: 41.0,
+            eff_gflops: 25.0,
+            e2e_extra_ms: 4.0,
+        }
+    }
+}
+
+impl GpuModel {
+    pub fn kernel_ms(&self, w: &QueryWork) -> f64 {
+        let launch = w.cuda_kernels as f64 * self.launch_us / 1e3;
+        let compute = w.flops / (self.eff_gflops * 1e6);
+        launch + compute
+    }
+    pub fn e2e_ms(&self, w: &QueryWork) -> f64 {
+        self.kernel_ms(w) + self.e2e_extra_ms
+    }
+    /// Fraction of kernel time that is launch overhead (paper: dominant).
+    pub fn launch_fraction(&self, w: &QueryWork) -> f64 {
+        let launch = w.cuda_kernels as f64 * self.launch_us / 1e3;
+        launch / self.kernel_ms(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn work() -> QueryWork {
+        QueryWork::from_dims(26, [64, 32, 16], 29, 16)
+    }
+
+    #[test]
+    fn cpu_lands_near_paper_numbers() {
+        let m = CpuModel::default();
+        let k = m.kernel_ms(&work());
+        // paper: 5.85 ms kernel; we require the same order of magnitude.
+        assert!((3.0..=9.0).contains(&k), "cpu kernel {k} ms");
+        let e = m.e2e_ms(&work());
+        assert!((6.0..=13.0).contains(&e), "cpu e2e {e} ms");
+    }
+
+    #[test]
+    fn gpu_is_slower_than_cpu() {
+        // The paper's headline pathology: coarse-grained execution makes
+        // the V100 SLOWER than the Xeon on 10-node graphs.
+        let w = work();
+        let cpu = CpuModel::default();
+        let gpu = GpuModel::default();
+        assert!(gpu.kernel_ms(&w) > cpu.kernel_ms(&w));
+        assert!((7.0..=13.0).contains(&gpu.kernel_ms(&w)), "{}", gpu.kernel_ms(&w));
+    }
+
+    #[test]
+    fn gpu_time_is_launch_dominated() {
+        let gpu = GpuModel::default();
+        assert!(
+            gpu.launch_fraction(&work()) > 0.9,
+            "launch fraction {}",
+            gpu.launch_fraction(&work())
+        );
+    }
+
+    #[test]
+    fn flop_count_scales_with_graph_size() {
+        let small = QueryWork::from_dims(10, [64, 32, 16], 29, 16);
+        let big = QueryWork::from_dims(30, [64, 32, 16], 29, 16);
+        assert!(big.flops > 2.0 * small.flops);
+    }
+}

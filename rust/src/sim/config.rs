@@ -1,0 +1,143 @@
+//! Architecture parameters of the SPA-GCN accelerator (paper Table 2) and
+//! the three design points evaluated in Table 4.
+
+/// Per-GCN-layer parallelization parameters (paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerParams {
+    /// SIMD factor of the Feature Transformation step (output-feature
+    /// lanes per PE).
+    pub simd_ft: usize,
+    /// SIMD factor of the Aggregation step (feature lanes; node-level
+    /// parallelism is deliberately absent there, §3.2.2).
+    pub simd_agg: usize,
+    /// Duplication factor: number of SIMD PEs in the FT step (node-level
+    /// parallelism).
+    pub df: usize,
+    /// Number of input FIFOs feeding the sparse-dispatch arbiter (only
+    /// meaningful when the architecture prunes zeros, §3.4).
+    pub p: usize,
+}
+
+/// Which architecture variant of Table 4 is being simulated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArchVariant {
+    /// One set of modules reused for all layers; dense FT; sparse Agg.
+    Baseline,
+    /// Dedicated modules per layer connected by FIFOs (dataflow).
+    InterLayerPipeline,
+    /// Inter-layer pipeline + zero-pruning FT with P-FIFO arbiter.
+    ExtendedSparsity,
+}
+
+/// Full accelerator configuration.
+#[derive(Debug, Clone)]
+pub struct ArchConfig {
+    pub variant: ArchVariant,
+    /// Per-layer params; for `Baseline` only `layers[0]` is used (one
+    /// shared module).
+    pub layers: [LayerParams; 3],
+    /// SIMD factor of the Att stage MVM (kept small, §4.2).
+    pub att_simd: usize,
+    /// SIMD factor of the NTN stage MVMs (§4.3).
+    pub ntn_simd: usize,
+    /// Zero-pruning FIFO width at the ACG output (elements/cycle), §3.4.
+    pub prune_width: usize,
+}
+
+impl ArchConfig {
+    /// Table 4 row 1: "Baseline" — shared hardware, SIMD_FT 16,
+    /// SIMD_Agg 32, DF 8.
+    pub fn baseline() -> Self {
+        let l = LayerParams {
+            simd_ft: 16,
+            simd_agg: 32,
+            df: 8,
+            p: 0,
+        };
+        ArchConfig {
+            variant: ArchVariant::Baseline,
+            layers: [l, l, l],
+            att_simd: 8,
+            ntn_simd: 8,
+            prune_width: 0,
+        }
+    }
+
+    /// Table 4 row 2: "+Inter-Layer Pipeline" — per-layer modules,
+    /// SIMD_FT 32/16/16, SIMD_Agg 32/32/16, DF 8/8/8.
+    pub fn inter_layer() -> Self {
+        ArchConfig {
+            variant: ArchVariant::InterLayerPipeline,
+            layers: [
+                LayerParams { simd_ft: 32, simd_agg: 32, df: 8, p: 0 },
+                LayerParams { simd_ft: 16, simd_agg: 32, df: 8, p: 0 },
+                LayerParams { simd_ft: 16, simd_agg: 16, df: 8, p: 0 },
+            ],
+            att_simd: 8,
+            ntn_simd: 8,
+            prune_width: 0,
+        }
+    }
+
+    /// Table 4 row 3: "+Extended Sparsity" — SIMD_FT 32/32/16,
+    /// SIMD_Agg 32/32/16, DF 2/1/1, P 8/2/2.
+    pub fn extended_sparsity() -> Self {
+        ArchConfig {
+            variant: ArchVariant::ExtendedSparsity,
+            layers: [
+                LayerParams { simd_ft: 32, simd_agg: 32, df: 2, p: 8 },
+                LayerParams { simd_ft: 32, simd_agg: 32, df: 1, p: 2 },
+                LayerParams { simd_ft: 16, simd_agg: 16, df: 1, p: 2 },
+            ],
+            att_simd: 8,
+            ntn_simd: 8,
+            prune_width: 4,
+        }
+    }
+
+    /// The design point used for the full-SimGNN evaluation (Table 5/6).
+    pub fn spa_gcn() -> Self {
+        Self::extended_sparsity()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.variant {
+            ArchVariant::Baseline => "baseline",
+            ArchVariant::InterLayerPipeline => "+inter-layer-pipeline",
+            ArchVariant::ExtendedSparsity => "+extended-sparsity",
+        }
+    }
+
+    /// Sparse FT (zero-pruning + arbiter) enabled?
+    pub fn sparse_ft(&self) -> bool {
+        self.variant == ArchVariant::ExtendedSparsity
+    }
+
+    /// Dedicated per-layer modules (dataflow across layers)?
+    pub fn dataflow(&self) -> bool {
+        self.variant != ArchVariant::Baseline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table4() {
+        let b = ArchConfig::baseline();
+        assert_eq!(b.layers[0].simd_ft, 16);
+        assert_eq!(b.layers[0].df, 8);
+        assert!(!b.sparse_ft() && !b.dataflow());
+
+        let il = ArchConfig::inter_layer();
+        assert_eq!(il.layers[0].simd_ft, 32);
+        assert_eq!(il.layers[2].simd_agg, 16);
+        assert!(il.dataflow() && !il.sparse_ft());
+
+        let es = ArchConfig::extended_sparsity();
+        assert_eq!(es.layers[0].p, 8);
+        assert_eq!(es.layers[1].df, 1);
+        assert!(es.dataflow() && es.sparse_ft());
+    }
+}

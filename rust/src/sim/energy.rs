@@ -1,0 +1,85 @@
+//! Energy model: Table 3 quotes TDPs for the HBM cards (U50 75 W, U280
+//! 225 W); the paper argues FPGAs win on efficiency as well as latency.
+//! This model combines a platform TDP share (proportional to resource
+//! utilization, plus static overhead) with the kernel time to estimate
+//! energy per query — the standard back-of-envelope the FPGA literature
+//! uses when no power measurement exists.
+
+use super::platform::Platform;
+use super::resources::Resources;
+
+/// Platform TDP in watts (Table 3 references + vendor datasheets).
+pub fn tdp_watts(p: &Platform) -> f64 {
+    match p.name {
+        "KU15P" => 40.0,  // Kintex US+ typical board power
+        "U50" => 75.0,    // paper §5.2
+        "U280" => 225.0,  // paper §5.2
+        _ => 100.0,
+    }
+}
+
+/// Estimated board power for a design: static floor + dynamic share
+/// proportional to LUT+DSP utilization (simple affine model).
+pub fn design_power_watts(p: &Platform, r: &Resources) -> f64 {
+    let util = r.utilization(p);
+    let activity = (util[0] + util[2]) / 200.0; // mean of LUT and DSP fractions
+    let tdp = tdp_watts(p);
+    0.25 * tdp + 0.75 * tdp * activity.min(1.0)
+}
+
+/// Energy per query in millijoules.
+pub fn energy_per_query_mj(p: &Platform, r: &Resources, kernel_ms: f64) -> f64 {
+    design_power_watts(p, r) * kernel_ms
+}
+
+/// Reference points for the comparison: Xeon E5-2699v4 TDP 145 W, V100
+/// TDP 300 W (paper's baseline hardware).
+pub fn cpu_energy_per_query_mj(kernel_ms: f64) -> f64 {
+    145.0 * kernel_ms
+}
+
+pub fn gpu_energy_per_query_mj(kernel_ms: f64) -> f64 {
+    300.0 * kernel_ms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::platform::{KU15P, U280, U50};
+
+    fn small_design() -> Resources {
+        Resources {
+            dsp: 660.0,
+            bram18: 324.0,
+            uram: 0.0,
+            lut: 150_000.0,
+            ff: 90_000.0,
+        }
+    }
+
+    #[test]
+    fn power_between_static_floor_and_tdp() {
+        for p in [&KU15P, &U50, &U280] {
+            let w = design_power_watts(p, &small_design());
+            assert!(w >= 0.25 * tdp_watts(p) - 1e-9);
+            assert!(w <= tdp_watts(p));
+        }
+    }
+
+    #[test]
+    fn fpga_beats_cpu_and_gpu_on_energy() {
+        // paper's narrative: ~18x faster at a fraction of the power.
+        let r = small_design();
+        let fpga = energy_per_query_mj(&U280, &r, 0.327);
+        let cpu = cpu_energy_per_query_mj(5.85);
+        let gpu = gpu_energy_per_query_mj(9.68);
+        assert!(fpga < cpu / 10.0, "fpga {fpga} mJ vs cpu {cpu} mJ");
+        assert!(fpga < gpu / 10.0, "fpga {fpga} mJ vs gpu {gpu} mJ");
+    }
+
+    #[test]
+    fn u50_lower_power_than_u280() {
+        let r = small_design();
+        assert!(design_power_watts(&U50, &r) < design_power_watts(&U280, &r));
+    }
+}

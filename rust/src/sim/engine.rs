@@ -1,0 +1,237 @@
+//! SimEngine: functional scores (via the rust reference numerics) plus an
+//! accumulated FPGA cycle report. Lets the coordinator and benches drive
+//! the cycle simulator with exactly the workload the serving path sees.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::graph::encode::{encode, EncodedGraph, PackedBatch};
+use crate::graph::Graph;
+use crate::nn::config::{ArtifactsMeta, ModelConfig};
+use crate::nn::simgnn::simgnn_forward;
+use crate::nn::weights::Weights;
+use crate::runtime::Engine;
+
+use super::config::ArchConfig;
+use super::gcn::{kernel_ms, simulate_query, QueryCycles};
+use super::platform::Platform;
+
+/// Aggregate simulation statistics over all queries processed.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    pub queries: u64,
+    pub total_interval_cycles: u64,
+    pub total_latency_cycles: u64,
+    pub ft_elements: u64,
+    pub ft_bubbles: u64,
+    pub ft_starve: u64,
+    pub agg_edges: u64,
+    pub pad_rows: u64,
+}
+
+impl SimStats {
+    fn absorb(&mut self, qc: &QueryCycles) {
+        self.queries += 1;
+        self.total_interval_cycles += qc.interval;
+        self.total_latency_cycles += qc.latency;
+        for gcn in [&qc.gcn1, &qc.gcn2] {
+            for l in &gcn.layers {
+                self.ft_elements += l.ft.elements;
+                self.ft_bubbles += l.ft.raw_bubbles;
+                self.ft_starve += l.ft.starve_cycles;
+                self.agg_edges += l.agg.edges;
+                self.pad_rows += l.ft.pad_rows;
+            }
+        }
+    }
+
+    /// Mean steady-state kernel time per query, ms.
+    pub fn mean_kernel_ms(&self, plat: &Platform, arch: &ArchConfig) -> f64 {
+        if self.queries == 0 {
+            return 0.0;
+        }
+        kernel_ms(
+            self.total_interval_cycles / self.queries,
+            plat,
+            arch.variant,
+        )
+    }
+}
+
+/// Cycle-simulating engine (functionally identical to NativeEngine).
+pub struct SimEngine {
+    cfg: ModelConfig,
+    weights: Weights,
+    arch: ArchConfig,
+    plat: Platform,
+    pub stats: SimStats,
+}
+
+impl SimEngine {
+    pub fn load(artifacts_dir: &Path, arch: ArchConfig, plat: Platform) -> Result<Self> {
+        let meta = ArtifactsMeta::load(artifacts_dir)
+            .context("loading artifacts/meta.json (run `make artifacts`)")?;
+        let weights = Weights::load(&meta.config, artifacts_dir)?;
+        Ok(SimEngine {
+            cfg: meta.config,
+            weights,
+            arch,
+            plat,
+            stats: SimStats::default(),
+        })
+    }
+
+    pub fn new(cfg: ModelConfig, weights: Weights, arch: ArchConfig, plat: Platform) -> Self {
+        SimEngine {
+            cfg,
+            weights,
+            arch,
+            plat,
+            stats: SimStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn arch(&self) -> &ArchConfig {
+        &self.arch
+    }
+
+    pub fn platform(&self) -> &Platform {
+        &self.plat
+    }
+
+    /// Score one query AND simulate its cycles (returns score + cycles).
+    pub fn run_query(&mut self, g1: &Graph, g2: &Graph) -> Result<(f32, QueryCycles)> {
+        let e1 = encode(g1, self.cfg.n_max, self.cfg.num_labels)?;
+        let e2 = encode(g2, self.cfg.n_max, self.cfg.num_labels)?;
+        let (score, qc) = self.run_encoded(g1, &e1, g2, &e2)?;
+        Ok((score, qc))
+    }
+
+    /// Score + simulate with pre-encoded graphs (stats absorbed). The
+    /// forward pass is computed ONCE and its traces drive the cycle sim
+    /// (perf pass: this path previously ran the GCN forward twice).
+    pub fn run_encoded(
+        &mut self,
+        g1: &Graph,
+        e1: &EncodedGraph,
+        g2: &Graph,
+        e2: &EncodedGraph,
+    ) -> Result<(f32, QueryCycles)> {
+        let trace = simgnn_forward(&self.cfg, &self.weights, e1, e2);
+        let qc = simulate_query(
+            &self.cfg,
+            &self.arch,
+            &self.plat,
+            (g1, e1, &trace.trace1),
+            (g2, e2, &trace.trace2),
+        );
+        self.stats.absorb(&qc);
+        Ok((trace.score, qc))
+    }
+}
+
+impl Engine for SimEngine {
+    fn name(&self) -> &str {
+        "spa-gcn-sim"
+    }
+
+    fn supported_batch_sizes(&self) -> Vec<usize> {
+        vec![1, 4, 16, 64]
+    }
+
+    /// Functional scoring of a packed batch (cycle stats are NOT absorbed
+    /// on this path — PackedBatch has no Graph structure; use `run_query`
+    /// for simulation-aware serving).
+    fn score_batch(&mut self, batch: &PackedBatch) -> Result<Vec<f32>> {
+        let n = batch.n_max;
+        let l = batch.num_labels;
+        let mut out = Vec::with_capacity(batch.batch);
+        for i in 0..batch.batch {
+            let grab = |a: &[f32], h: &[f32], m: &[f32]| EncodedGraph {
+                a_norm: a[i * n * n..(i + 1) * n * n].to_vec(),
+                h0: h[i * n * l..(i + 1) * n * l].to_vec(),
+                mask: m[i * n..(i + 1) * n].to_vec(),
+                num_nodes: m[i * n..(i + 1) * n].iter().filter(|&&x| x != 0.0).count(),
+                num_edges: 0,
+            };
+            let e1 = grab(&batch.a1, &batch.h1, &batch.m1);
+            let e2 = grab(&batch.a2, &batch.h2, &batch.m2);
+            out.push(simgnn_forward(&self.cfg, &self.weights, &e1, &e2).score);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{generate, Family};
+    use crate::sim::platform::U280;
+    use crate::util::rng::Rng;
+
+    fn tiny_engine() -> SimEngine {
+        let cfg = ModelConfig {
+            n_max: 8,
+            num_labels: 4,
+            filters: [4, 4, 4],
+            relu_mask: [true, true, false],
+            ntn_k: 4,
+            fc_dims: vec![4],
+            seed: 0,
+        };
+        let mut rng = Rng::new(81);
+        let mut v = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| (rng.f32() - 0.5) * 0.5).collect()
+        };
+        let w = Weights {
+            gcn_w: [v(16), v(16), v(16)],
+            gcn_b: [vec![0.05; 4], vec![0.05; 4], vec![0.05; 4]],
+            att_w: v(16),
+            ntn_w: v(64),
+            ntn_v: v(32),
+            ntn_b: vec![0.0; 4],
+            fc_w: vec![v(16)],
+            fc_b: vec![vec![0.0; 4]],
+            out_w: v(4),
+            out_b: vec![0.0],
+        };
+        SimEngine::new(cfg, w, ArchConfig::spa_gcn(), U280)
+    }
+
+    #[test]
+    fn run_query_accumulates_stats() {
+        let mut eng = tiny_engine();
+        let mut rng = Rng::new(82);
+        let f = Family::ErdosRenyi { n: 6, p_millis: 300 };
+        for _ in 0..3 {
+            let g1 = generate(&mut rng, f, 8, 4);
+            let g2 = generate(&mut rng, f, 8, 4);
+            let (score, qc) = eng.run_query(&g1, &g2).unwrap();
+            assert!(score > 0.0 && score < 1.0);
+            assert!(qc.interval > 0);
+        }
+        assert_eq!(eng.stats.queries, 3);
+        assert!(eng.stats.agg_edges > 0);
+        assert!(eng.stats.mean_kernel_ms(&U280, &ArchConfig::spa_gcn()) > 0.0);
+    }
+
+    #[test]
+    fn sim_scores_match_native_reference() {
+        let mut eng = tiny_engine();
+        let mut rng = Rng::new(83);
+        let f = Family::ErdosRenyi { n: 5, p_millis: 300 };
+        let g1 = generate(&mut rng, f, 8, 4);
+        let g2 = generate(&mut rng, f, 8, 4);
+        let e1 = encode(&g1, 8, 4).unwrap();
+        let e2 = encode(&g2, 8, 4).unwrap();
+        let (score, _) = eng.run_query(&g1, &g2).unwrap();
+        let direct = simgnn_forward(eng.config(), &eng.weights, &e1, &e2).score;
+        assert_eq!(score, direct);
+        assert_eq!(eng.stats.queries, 1, "forward+sim must run exactly once");
+    }
+}

@@ -1,0 +1,319 @@
+//! Whole-accelerator cycle composition: per-layer GCN modules, the Att /
+//! NTN / FCN stages, and the three dataflow levels of §4.4.
+//!
+//! Simulation is driven by REAL data: the layer input matrices (and hence
+//! the exact non-zero structure the pruning units see) come from the rust
+//! reference forward (`nn::simgnn::gcn_forward`), and the edge stream is
+//! the actual pre-processed (reordered) weighted adjacency of the query's
+//! graphs.
+
+use crate::graph::encode::EncodedGraph;
+use crate::graph::normalize::normalized_edges;
+use crate::graph::reorder::reorder_edges;
+use crate::graph::Graph;
+use crate::nn::config::ModelConfig;
+use crate::nn::simgnn::GcnTrace;
+
+use super::agg::{agg_cycles, AggCycles};
+use super::config::{ArchConfig, ArchVariant};
+use super::ft::{dense_ft_cycles, nonzero_stream, sparse_ft_cycles, FtCycles};
+use super::platform::Platform;
+
+/// Cycle accounting for one GCN layer of one graph.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerCycles {
+    pub ft: FtCycles,
+    pub agg: AggCycles,
+}
+
+impl LayerCycles {
+    /// Busy time of the layer's ACG module (ACC mirrors the FT stream,
+    /// then Aggregation runs on the committed buffer — §3.2.3).
+    pub fn acg_busy(&self) -> u64 {
+        self.ft.busy + self.agg.busy
+    }
+}
+
+/// Cycle accounting for the full GCN stage on one graph.
+#[derive(Debug, Clone, Default)]
+pub struct GcnCycles {
+    pub layers: [LayerCycles; 3],
+    /// Off-chip roundtrip cycles between layers (baseline variant only).
+    pub interlayer_transfer: u64,
+    /// Steady-state initiation interval per graph (throughput^-1).
+    pub interval: u64,
+    /// Fill latency for one graph (first-result latency).
+    pub latency: u64,
+}
+
+/// Simulate the GCN stage for one graph under `arch` on `plat`.
+///
+/// `trace` supplies the real per-layer input data (sparsity structure).
+pub fn simulate_gcn(
+    cfg: &ModelConfig,
+    arch: &ArchConfig,
+    plat: &Platform,
+    graph: &Graph,
+    enc: &EncodedGraph,
+    trace: &GcnTrace,
+) -> GcnCycles {
+    let l_add = plat.add_latency;
+    let dims_in = cfg.feature_dims();
+    let edges = normalized_edges(graph);
+    let reordered = reorder_edges(&edges, l_add).edges;
+
+    let mut layers = [LayerCycles::default(); 3];
+    for l in 0..3 {
+        let p = if arch.dataflow() {
+            arch.layers[l]
+        } else {
+            arch.layers[0] // baseline: one shared module
+        };
+        let f_in = dims_in[l];
+        let f_out = cfg.filters[l];
+        let ft = if arch.sparse_ft() {
+            let stream = nonzero_stream(&trace.layer_inputs[l], enc.num_nodes, f_in);
+            // Layer 1 streams pruned one-hot inputs from memory (fast);
+            // later layers are fed by the previous ACG's pruning unit.
+            let feed = if l == 0 {
+                usize::MAX
+            } else {
+                arch.prune_width.max(1)
+            };
+            sparse_ft_cycles(&stream, f_out, &p, l_add, feed)
+        } else {
+            dense_ft_cycles(enc.num_nodes, f_in, f_out, &p, l_add)
+        };
+        let agg = agg_cycles(&reordered, f_out, &p, l_add, true);
+        layers[l] = LayerCycles { ft, agg };
+    }
+
+    // Baseline: intermediate H written to and re-read from global memory.
+    let transfer = if arch.dataflow() {
+        0
+    } else {
+        let freq = plat.achieved_freq_mhz(arch.variant);
+        let bpc = plat.stream_bytes_per_cycle(freq, 4);
+        let mut bytes = 0f64;
+        for l in 0..2 {
+            bytes += (cfg.n_max * cfg.filters[l] * 4 * 2) as f64; // write+read
+        }
+        // burst initiation per transfer (4 transfers), ~64 cycles each
+        (bytes / bpc).ceil() as u64 + 4 * 64
+    };
+
+    let (interval, latency) = if arch.dataflow() {
+        let max_acg = layers.iter().map(|l| l.acg_busy()).max().unwrap();
+        let sum: u64 = layers.iter().map(|l| l.acg_busy()).sum();
+        (max_acg, sum)
+    } else {
+        let sum: u64 = layers.iter().map(|l| l.acg_busy()).sum();
+        (sum + transfer, sum + transfer)
+    };
+
+    GcnCycles {
+        layers,
+        interlayer_transfer: transfer,
+        interval,
+        latency,
+    }
+}
+
+/// Cycle accounting for the non-GCN SimGNN stages (closed-form models —
+/// the paper deliberately under-parallelizes these, §4.1).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageCycles {
+    pub att: u64,
+    pub ntn: u64,
+    pub fcn: u64,
+}
+
+/// Fixed per-activation-unit pipeline latency (tanh/exp from the HLS math
+/// library, §4.2).
+const ACT_LATENCY: u64 = 18;
+
+pub fn stage_cycles(cfg: &ModelConfig, arch: &ArchConfig, n_real: usize) -> StageCycles {
+    let f = cfg.embed_dim() as u64;
+    let n = n_real as u64;
+    let k = cfg.ntn_k as u64;
+    let att_simd = arch.att_simd as u64;
+    let ntn_simd = arch.ntn_simd as u64;
+    // Att (Eq. 5 form): W_att . H as one MVM per node column (F*F MACs
+    // each) + sigmoid scores + weighted sum H x a.
+    let att = (f * f).div_ceil(att_simd) * n      // sum(W.H, 2)
+        + ACT_LATENCY                              // tanh
+        + n * f.div_ceil(att_simd) + ACT_LATENCY   // h_n . c + sigmoid
+        + n * f.div_ceil(att_simd);                // H x a
+    // NTN: K slices of (F x F MVM + dot) + V [2F] + bias.
+    let ntn = k * (f * f).div_ceil(ntn_simd) + k * (2 * f).div_ceil(ntn_simd) + ACT_LATENCY;
+    // FCN: chain of small MVMs + sigmoid.
+    let mut fcn = 0u64;
+    let mut d = k;
+    for &h in &cfg.fc_dims {
+        fcn += (d * h as u64).div_ceil(ntn_simd);
+        d = h as u64;
+    }
+    fcn += d + ACT_LATENCY;
+    StageCycles { att, ntn, fcn }
+}
+
+/// Whole-pipeline cycle accounting for one query (two graphs).
+#[derive(Debug, Clone, Default)]
+pub struct QueryCycles {
+    pub gcn1: GcnCycles,
+    pub gcn2: GcnCycles,
+    pub stages: StageCycles,
+    /// Input streaming cycles (edges + pruned features over the memory
+    /// channels), overlapped with compute by the dataflow prefetcher.
+    pub input_stream: u64,
+    /// Steady-state interval between query completions.
+    pub interval: u64,
+    /// One-query latency.
+    pub latency: u64,
+}
+
+/// Simulate one full SimGNN query under `arch` on `plat`.
+///
+/// Composition (§4.4): the GCN module is shared by the two graphs of a
+/// query (serial), Att overlaps GCN of the other graph, NTN+FCN overlap
+/// the GCN stage of the next query. Steady state is therefore bounded by
+/// the GCN stage: interval = gcn1.interval + gcn2.interval.
+pub fn simulate_query(
+    cfg: &ModelConfig,
+    arch: &ArchConfig,
+    plat: &Platform,
+    q1: (&Graph, &EncodedGraph, &GcnTrace),
+    q2: (&Graph, &EncodedGraph, &GcnTrace),
+) -> QueryCycles {
+    let gcn1 = simulate_gcn(cfg, arch, plat, q1.0, q1.1, q1.2);
+    let gcn2 = simulate_gcn(cfg, arch, plat, q2.0, q2.1, q2.2);
+    let n_real = q1.1.num_nodes.max(q2.1.num_nodes);
+    let stages = stage_cycles(cfg, arch, n_real);
+
+    // Input streaming: edge stream (8 B/entry) + pruned one-hot features
+    // (8 B/entry: value+address packing, §3.4).
+    let freq = plat.achieved_freq_mhz(arch.variant);
+    let bpc = plat.stream_bytes_per_cycle(freq, 4);
+    let in_bytes = ((q1.0.num_edges() * 2 + q1.0.num_nodes())
+        + (q2.0.num_edges() * 2 + q2.0.num_nodes())) as f64
+        * 8.0
+        + (q1.0.num_nodes() + q2.0.num_nodes()) as f64 * 8.0;
+    let input_stream = (in_bytes / bpc).ceil() as u64 + 64;
+
+    let gcn_total = gcn1.interval + gcn2.interval;
+    let (interval, latency) = if arch.dataflow() {
+        // Level-1/2 dataflow: Att overlaps GCN, NTN_FCN overlaps next
+        // query; prefetch overlaps compute.
+        let interval = gcn_total
+            .max(stages.att + stages.ntn + stages.fcn)
+            .max(input_stream);
+        let latency = gcn1.latency + gcn2.latency + stages.att + stages.ntn + stages.fcn;
+        (interval, latency)
+    } else {
+        // Baseline: everything serial.
+        let total = gcn_total + 2 * stages.att + stages.ntn + stages.fcn + input_stream;
+        (total, total)
+    };
+
+    QueryCycles {
+        gcn1,
+        gcn2,
+        stages,
+        input_stream,
+        interval,
+        latency,
+    }
+}
+
+/// Convenience: kernel milliseconds for a steady-state query stream.
+pub fn kernel_ms(cycles_interval: u64, plat: &Platform, variant: ArchVariant) -> f64 {
+    cycles_interval as f64 / (plat.achieved_freq_mhz(variant) * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::encode::encode;
+    use crate::graph::generate::{generate, Family};
+    use crate::nn::simgnn::gcn_forward;
+    use crate::nn::weights::Weights;
+    use crate::sim::platform::U280;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (ModelConfig, Weights, Graph, EncodedGraph, GcnTrace) {
+        let cfg = ModelConfig::default();
+        // pseudo-random weights with ~50% post-ReLU sparsity
+        let mut rng = Rng::new(71);
+        let mut vecr = |len: usize, s: f32| -> Vec<f32> {
+            (0..len).map(|_| (rng.f32() - 0.5) * s).collect()
+        };
+        let dims_in = cfg.feature_dims();
+        let w = Weights {
+            gcn_w: [
+                vecr(dims_in[0] * cfg.filters[0], 0.5),
+                vecr(dims_in[1] * cfg.filters[1], 0.5),
+                vecr(dims_in[2] * cfg.filters[2], 0.5),
+            ],
+            gcn_b: [
+                vec![0.0; cfg.filters[0]],
+                vec![0.0; cfg.filters[1]],
+                vec![0.0; cfg.filters[2]],
+            ],
+            att_w: vecr(16 * 16, 0.5),
+            ntn_w: vecr(16 * 256, 0.5),
+            ntn_v: vecr(16 * 32, 0.5),
+            ntn_b: vec![0.0; 16],
+            fc_w: vec![vecr(256, 0.5), vecr(128, 0.5)],
+            fc_b: vec![vec![0.0; 16], vec![0.0; 8]],
+            out_w: vecr(8, 0.5),
+            out_b: vec![0.0],
+        };
+        let mut rng2 = Rng::new(72);
+        let g = generate(&mut rng2, Family::Aids, 32, 29);
+        let e = encode(&g, cfg.n_max, cfg.num_labels).unwrap();
+        let t = gcn_forward(&cfg, &w, &e);
+        (cfg, w, g, e, t)
+    }
+
+    #[test]
+    fn dataflow_beats_baseline_interval() {
+        let (cfg, _w, g, e, t) = setup();
+        let base = simulate_gcn(&cfg, &ArchConfig::baseline(), &U280, &g, &e, &t);
+        let il = simulate_gcn(&cfg, &ArchConfig::inter_layer(), &U280, &g, &e, &t);
+        assert!(
+            il.interval < base.interval,
+            "inter-layer {} !< baseline {}",
+            il.interval,
+            base.interval
+        );
+        // baseline pays off-chip roundtrips
+        assert!(base.interlayer_transfer > 0);
+        assert_eq!(il.interlayer_transfer, 0);
+    }
+
+    #[test]
+    fn sparse_uses_fewer_ft_elements() {
+        let (cfg, _w, g, e, t) = setup();
+        let il = simulate_gcn(&cfg, &ArchConfig::inter_layer(), &U280, &g, &e, &t);
+        let es = simulate_gcn(&cfg, &ArchConfig::extended_sparsity(), &U280, &g, &e, &t);
+        // layer 1 input is one-hot: sparse processes ~n elements instead
+        // of n*29.
+        assert!(es.layers[0].ft.elements * 10 < il.layers[0].ft.elements);
+    }
+
+    #[test]
+    fn query_interval_dominated_by_gcn() {
+        let (cfg, _w, g, e, t) = setup();
+        let arch = ArchConfig::spa_gcn();
+        let qc = simulate_query(&cfg, &arch, &U280, (&g, &e, &t), (&g, &e, &t));
+        assert_eq!(qc.interval, qc.gcn1.interval + qc.gcn2.interval);
+        assert!(qc.latency >= qc.interval);
+    }
+
+    #[test]
+    fn kernel_ms_scales_with_freq() {
+        let c = 300_000u64;
+        let ms = kernel_ms(c, &U280, ArchVariant::ExtendedSparsity);
+        assert!((ms - 1.0).abs() < 0.05, "300k cycles @300MHz ~ 1ms, got {ms}");
+    }
+}

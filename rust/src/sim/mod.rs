@@ -1,0 +1,19 @@
+//! The SPA-GCN accelerator cycle simulator (DESIGN.md S9-S12).
+//!
+//! Models the paper's architecture at the scheduling level: the dense and
+//! sparse Feature-Transformation engines (with the P-FIFO arbiter and
+//! RAW-bubble control unit of §3.4), the edge-streaming Aggregation
+//! engine (§3.2.2), per-layer dataflow composition (§3.3), the Att / NTN
+//! / FCN stages (§4), FPGA resources (Fig. 10), host overheads + batching
+//! (Fig. 11) and analytical CPU/GPU baselines (Table 6).
+pub mod agg;
+pub mod baseline;
+pub mod config;
+pub mod dataflow;
+pub mod e2e;
+pub mod energy;
+pub mod engine;
+pub mod ft;
+pub mod gcn;
+pub mod platform;
+pub mod resources;

