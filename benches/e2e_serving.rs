@@ -1,46 +1,83 @@
-//! End-to-end serving benchmark: the full L3 stack (router -> batcher ->
-//! engine) under different engines, batch limits and worker counts.
-//! This is the measured companion to Fig. 11 / §5.4.3 on this machine.
+//! End-to-end serving benchmark: the full L3 staged pipeline (admission
+//! -> batcher -> encoder -> executor -> responder) under different
+//! engines, batch limits, worker counts and pipeline depths. This is the
+//! measured companion to Fig. 11 / §5.4.3 on this machine, plus the
+//! host-side overlap experiment: pipelined (encode of batch k+1
+//! concurrent with execute of batch k) vs the fused sequential baseline.
 //!
 //!     cargo bench --bench e2e_serving
 
 use spa_gcn::coordinator::server::{serve_workload, ServeConfig};
 use spa_gcn::util::bench::time_once;
 
-fn run(engine: &str, queries: usize, workers: usize, batch_max: usize) -> anyhow::Result<()> {
+/// Run one serve config and print the headline numbers plus the
+/// per-stage latency split; returns the offered throughput (query/s).
+fn run(
+    engine: &str,
+    queries: usize,
+    workers: usize,
+    batch_max: usize,
+    depth: usize,
+) -> anyhow::Result<f64> {
     let cfg = ServeConfig {
-        artifacts_dir: "artifacts".into(),
         engine: engine.into(),
         queries,
         workers,
         batch_max,
         batch_timeout_us: 200,
         seed: 77,
+        pipeline_depth: depth,
+        ..ServeConfig::default()
     };
-    let label = format!("serve {engine} q={queries} w={workers} b={batch_max}");
+    let label = format!("serve {engine} q={queries} w={workers} b={batch_max} d={depth}");
     let (t, _) = time_once(&label, || serve_workload(&cfg).unwrap());
-    // rows: 0 scored, 3 throughput, 5 p50, 7 p99, 8 mean batch
+    let g = |k: &str| t.get(k).unwrap_or("-").to_string();
     println!(
-        "    -> scored {}  throughput {} q/s  p50 {} ms  p99 {} ms  mean batch {}\n",
-        t.rows[0][1], t.rows[3][1], t.rows[5][1], t.rows[7][1], t.rows[8][1]
+        "    -> scored {}  throughput {} q/s  p50 {} ms  p99 {} ms  mean batch {}",
+        g("queries scored"),
+        g("throughput (query/s)"),
+        g("latency p50 (ms)"),
+        g("latency p99 (ms)"),
+        g("mean batch size"),
     );
-    Ok(())
+    println!(
+        "       stage split: queue {} ms  encode {} ms  execute {} ms\n",
+        g("queue wait mean (ms)"),
+        g("encode mean (ms)"),
+        g("execute mean (ms)"),
+    );
+    let tput = t
+        .get("offered throughput (query/s)")
+        .ok_or_else(|| anyhow::anyhow!("serve table missing offered-throughput row"))?;
+    Ok(tput.parse()?)
 }
 
 fn main() -> anyhow::Result<()> {
     println!("== engine comparison (measured on this machine) ==");
     for engine in ["native", "xla", "xla-fused"] {
-        run(engine, 2000, 1, 64)?;
+        run(engine, 2000, 1, 64, 2)?;
     }
 
     println!("== batching sweep on the PJRT engine (real Fig. 11) ==");
     for b in [1usize, 4, 16, 64] {
-        run("xla", 1000, 1, b)?;
+        run("xla", 1000, 1, b, 2)?;
     }
 
     println!("== worker scaling (native engine; 2-core machine) ==");
     for w in [1usize, 2] {
-        run("native", 2000, w, 64)?;
+        run("native", 2000, w, 64, 2)?;
     }
+
+    println!("== encode/execute overlap: pipelined vs fused-sequential ==");
+    let sequential = run("native", 2000, 1, 64, 0)?;
+    let pipelined = run("native", 2000, 1, 64, 2)?;
+    println!(
+        "overlap speedup: {:.2}x (pipelined {pipelined:.0} q/s vs sequential {sequential:.0} q/s)",
+        if sequential > 0.0 {
+            pipelined / sequential
+        } else {
+            0.0
+        }
+    );
     Ok(())
 }

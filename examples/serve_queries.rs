@@ -1,16 +1,18 @@
 //! END-TO-END VALIDATION DRIVER (DESIGN.md §5, EXPERIMENTS.md §E2E).
 //!
 //! Serves a realistic workload through the full production stack —
-//! synthetic AIDS-like database -> admission router -> dynamic batcher ->
-//! AOT-compiled SimGNN on the PJRT runtime — and reports latency and
-//! throughput, proving all three layers compose: L1 Pallas kernels and
-//! the L2 jax model live inside the HLO artifacts, and L3 (this process)
-//! never touches python.
+//! synthetic AIDS-like database -> staged pipeline (admission -> batcher
+//! -> encoder -> executor -> responder) -> AOT-compiled SimGNN on the
+//! PJRT runtime — and reports latency, throughput and the per-stage
+//! latency split, proving all three layers compose: L1 Pallas kernels
+//! and the L2 jax model live inside the HLO artifacts, and L3 (this
+//! process) never touches python.
 //!
 //!     make artifacts && cargo run --release --example serve_queries
 //!
 //! Flags: --queries N (default 10000, the paper's §5.1 query count),
-//!        --engine xla|native|sim, --batch-max B, --workers K.
+//!        --engine xla|native|sim, --batch-max B, --workers K,
+//!        --pipeline-depth D (0 = sequential encode+execute baseline).
 
 use std::collections::HashMap;
 
@@ -34,33 +36,38 @@ fn main() -> anyhow::Result<()> {
     println!("== batching sweep on the real {engine} runtime ==");
     for batch_max in [1usize, 4, 16, 64] {
         let cfg = ServeConfig {
-            artifacts_dir: "artifacts".into(),
             engine: engine.clone(),
             queries: (queries / 8).max(64),
             workers: 1,
             batch_max,
             batch_timeout_us: 200,
             seed: 11,
+            ..ServeConfig::default()
         };
         let t = serve_workload(&cfg)?;
-        // rows: scored/rejected/errors/throughput/mean/p50/p95/p99/batch
-        let tput = &t.rows[3][1];
-        let p50 = &t.rows[5][1];
-        let p99 = &t.rows[7][1];
+        let g = |k: &str| t.get(k).unwrap_or("-").to_string();
         println!(
-            "batch_max={batch_max:<3} -> throughput {tput:>8} q/s, p50 {p50} ms, p99 {p99} ms"
+            "batch_max={batch_max:<3} -> throughput {:>8} q/s, p50 {} ms, p99 {} ms \
+             (queue {} / encode {} / execute {} ms)",
+            g("throughput (query/s)"),
+            g("latency p50 (ms)"),
+            g("latency p99 (ms)"),
+            g("queue wait mean (ms)"),
+            g("encode mean (ms)"),
+            g("execute mean (ms)"),
         );
     }
 
-    // ... then the full serving run.
+    // ... then the full serving run through the staged pipeline.
     let cfg = ServeConfig {
-        artifacts_dir: "artifacts".into(),
         engine,
         queries,
         workers: get("workers", 1),
         batch_max: get("batch-max", 64),
         batch_timeout_us: get("batch-timeout-us", 200) as u64,
         seed: 42,
+        pipeline_depth: get("pipeline-depth", 2),
+        ..ServeConfig::default()
     };
     println!("\n== full serving run: {} queries ==", cfg.queries);
     let report = serve_workload(&cfg)?;

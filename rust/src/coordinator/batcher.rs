@@ -3,8 +3,9 @@
 //! batch size is reached or the oldest enqueued query has waited past
 //! the timeout — the standard size-or-deadline policy (vLLM-style).
 //!
-//! Implemented as a pure state machine (`push`/`poll` driven by explicit
-//! timestamps) so the invariants are property-testable without threads:
+//! Implemented as a pure state machine (`push`/`push_all`/`poll`/`flush`
+//! driven by explicit timestamps — no internal clock reads) so the
+//! invariants are property-testable without threads:
 //!   * a flushed batch never exceeds `max_batch`;
 //!   * queries leave in arrival order;
 //!   * no query waits longer than `timeout` past its arrival before its
@@ -52,6 +53,10 @@ impl Batcher {
         self.pending.len()
     }
 
+    pub fn max_batch(&self) -> usize {
+        self.policy.max_batch
+    }
+
     /// Enqueue a query (arriving at `now`); returns a full batch if the
     /// size threshold was reached.
     pub fn push(&mut self, q: Query, now: Instant) -> Option<Vec<Query>> {
@@ -60,22 +65,46 @@ impl Batcher {
         }
         self.pending.push_back(q);
         if self.pending.len() >= self.policy.max_batch {
-            return self.drain();
+            return self.drain(now);
         }
         None
+    }
+
+    /// Enqueue a burst (all arriving at `now`); returns every full batch
+    /// released. A leftover remainder smaller than `max_batch` stays
+    /// pending with its deadline restarted at `now`.
+    pub fn push_all(
+        &mut self,
+        qs: impl IntoIterator<Item = Query>,
+        now: Instant,
+    ) -> Vec<Vec<Query>> {
+        let was_empty = self.pending.is_empty();
+        self.pending.extend(qs);
+        if was_empty && !self.pending.is_empty() {
+            self.oldest_arrival = Some(now);
+        }
+        let mut out = Vec::new();
+        while self.pending.len() >= self.policy.max_batch {
+            match self.drain(now) {
+                Some(b) => out.push(b),
+                None => break,
+            }
+        }
+        out
     }
 
     /// Deadline check: flush if the oldest query has waited >= timeout.
     pub fn poll(&mut self, now: Instant) -> Option<Vec<Query>> {
         match self.oldest_arrival {
-            Some(t0) if now.duration_since(t0) >= self.policy.timeout => self.drain(),
+            Some(t0) if now.duration_since(t0) >= self.policy.timeout => self.drain(now),
             _ => None,
         }
     }
 
-    /// Unconditional flush (shutdown path).
-    pub fn flush(&mut self) -> Option<Vec<Query>> {
-        self.drain()
+    /// Unconditional flush (shutdown path); callers loop until `None` —
+    /// each call releases at most `max_batch` queries.
+    pub fn flush(&mut self, now: Instant) -> Option<Vec<Query>> {
+        self.drain(now)
     }
 
     /// Time until the current deadline fires (for the worker's
@@ -88,7 +117,7 @@ impl Batcher {
         })
     }
 
-    fn drain(&mut self) -> Option<Vec<Query>> {
+    fn drain(&mut self, now: Instant) -> Option<Vec<Query>> {
         if self.pending.is_empty() {
             return None;
         }
@@ -97,8 +126,10 @@ impl Batcher {
         self.oldest_arrival = if self.pending.is_empty() {
             None
         } else {
-            // Conservative: restart the clock for the remainder now.
-            Some(Instant::now())
+            // Conservative: restart the clock for the remainder at the
+            // caller-supplied drain time (keeps the state machine pure —
+            // no hidden clock reads, so deadlines are property-testable).
+            Some(now)
         };
         Some(batch)
     }
@@ -154,9 +185,30 @@ mod tests {
         for i in 0..5 {
             b.push(q(i), now);
         }
-        let batch = b.flush().unwrap();
+        let batch = b.flush(now).unwrap();
         assert_eq!(batch.iter().map(|x| x.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
-        assert!(b.flush().is_none());
+        assert!(b.flush(now).is_none());
+    }
+
+    #[test]
+    fn remainder_deadline_restarts_from_drain_time() {
+        let timeout = Duration::from_micros(100);
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            timeout,
+        });
+        let t0 = Instant::now();
+        // Burst of 7 at t0: two full batches out, remainder of 1 pending.
+        let batches = b.push_all((0..7).map(q), t0);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(b.pending(), 1);
+        // The remainder's deadline is measured from the drain time t0 —
+        // with no hidden Instant::now() inside drain this is exact.
+        assert_eq!(b.time_to_deadline(t0), Some(timeout));
+        assert!(b.poll(t0 + timeout - Duration::from_micros(1)).is_none());
+        let rem = b.poll(t0 + timeout).expect("remainder deadline flush");
+        assert_eq!(rem.iter().map(|x| x.id).collect::<Vec<_>>(), vec![6]);
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]
@@ -166,19 +218,22 @@ mod tests {
             60,
             |rng: &mut Rng| {
                 let max_batch = rng.range(1, 8);
-                let ops: Vec<u8> = (0..rng.range(1, 40)).map(|_| rng.below(3) as u8).collect();
+                let ops: Vec<(u8, u8)> = (0..rng.range(1, 40))
+                    .map(|_| (rng.below(4) as u8, rng.range(1, 12) as u8))
+                    .collect();
                 (max_batch, ops)
             },
             |(max_batch, ops)| {
+                let timeout = Duration::from_micros(10);
                 let mut b = Batcher::new(BatchPolicy {
                     max_batch: *max_batch,
-                    timeout: Duration::from_micros(10),
+                    timeout,
                 });
                 let mut next_id = 0u64;
                 let mut out = Vec::new();
                 let t0 = Instant::now();
                 let mut now = t0;
-                for op in ops {
+                for (op, arg) in ops {
                     match op {
                         0 => {
                             if let Some(batch) = b.push(q(next_id), now) {
@@ -198,14 +253,41 @@ mod tests {
                                 out.extend(batch.iter().map(|x| x.id));
                             }
                         }
+                        2 => {
+                            // Burst push: the op that leaves a remainder.
+                            let burst: Vec<Query> =
+                                (0..*arg as u64).map(|i| q(next_id + i)).collect();
+                            next_id += *arg as u64;
+                            let released = b.push_all(burst, now);
+                            for batch in released {
+                                if batch.len() > *max_batch {
+                                    return Err("batch too big".into());
+                                }
+                                out.extend(batch.iter().map(|x| x.id));
+                            }
+                            // Leftover-remainder deadline: whatever stays
+                            // pending after a burst is due no later than
+                            // `now + timeout` (exactly that when drains
+                            // restarted the clock).
+                            if b.pending() > 0 {
+                                match b.time_to_deadline(now) {
+                                    Some(d) if d <= timeout => {}
+                                    other => {
+                                        return Err(format!(
+                                            "remainder deadline {other:?} exceeds timeout"
+                                        ))
+                                    }
+                                }
+                            }
+                        }
                         _ => {
-                            if let Some(batch) = b.flush() {
+                            if let Some(batch) = b.flush(now) {
                                 out.extend(batch.iter().map(|x| x.id));
                             }
                         }
                     }
                 }
-                if let Some(batch) = b.flush() {
+                while let Some(batch) = b.flush(now) {
                     out.extend(batch.iter().map(|x| x.id));
                 }
                 // all ids delivered exactly once, in order

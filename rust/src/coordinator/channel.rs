@@ -1,0 +1,323 @@
+//! Named bounded channels: the software analogue of the paper's FIFO
+//! streams between accelerator stages.
+//!
+//! Every inter-stage queue in the serving pipeline is a `NamedChannel`:
+//! a bounded `sync_channel` plus a name, a capacity, occupancy gauges
+//! (current/peak depth, sent/dropped counters) and an explicit send
+//! policy. The gauges are what let the serve report show *where* a
+//! pipeline stalls — the same per-FIFO occupancy visibility LW-GCN and
+//! Accel-GCN use to diagnose accelerator pipeline bubbles, recovered
+//! here for the host-side pipeline.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvError, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What a sender does when the channel is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SendPolicy {
+    /// Block until space frees up (backpressure; must-deliver traffic).
+    Block,
+    /// Return the value to the caller immediately (caller decides).
+    Try,
+    /// Drop the value, count it, and log the first occurrence (load
+    /// shedding for traffic where freshness beats completeness).
+    DropWithLog,
+}
+
+/// Live occupancy counters for one channel, shared by all its senders
+/// and its receiver. Relaxed atomics: these are statistics, not
+/// synchronization.
+#[derive(Debug)]
+pub struct ChannelStats {
+    name: String,
+    capacity: usize,
+    depth: AtomicUsize,
+    max_depth: AtomicUsize,
+    sent: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl ChannelStats {
+    fn new(name: &str, capacity: usize) -> Self {
+        ChannelStats {
+            name: name.to_string(),
+            capacity,
+            depth: AtomicUsize::new(0),
+            max_depth: AtomicUsize::new(0),
+            sent: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Called BEFORE the underlying send so the gauge increment always
+    /// precedes the receiver's decrement (else a fast consumer could
+    /// underflow `depth`). Returns the provisional depth; the caller
+    /// commits it to `max_depth` only once the send is known to have
+    /// gone through (or, for blocking sends, is about to park — blocked
+    /// senders are deliberately part of the peak).
+    fn note_send(&self) -> usize {
+        self.sent.fetch_add(1, Ordering::Relaxed);
+        self.depth.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn commit_depth(&self, provisional: usize) {
+        self.max_depth.fetch_max(provisional, Ordering::Relaxed);
+    }
+
+    /// Undo a `note_send` whose send did not go through.
+    fn unsend(&self) {
+        self.sent.fetch_sub(1, Ordering::Relaxed);
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn note_recv(&self) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Returns the post-increment drop count.
+    fn note_drop(&self) -> u64 {
+        self.dropped.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn snapshot(&self) -> ChannelSnapshot {
+        ChannelSnapshot {
+            name: self.name.clone(),
+            capacity: self.capacity,
+            sent: self.sent.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            max_depth: self.max_depth.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a channel's counters, for reports.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChannelSnapshot {
+    pub name: String,
+    pub capacity: usize,
+    pub sent: u64,
+    pub dropped: u64,
+    /// Peak occupancy observed over the channel's lifetime. The gauge
+    /// counts buffered items plus senders mid-send (the increment happens
+    /// before the blocking send, so it can exceed `capacity` by the
+    /// number of blocked senders, and a lone handed-over item already
+    /// reads 1). Interpretation: a peak of 2+ on a stage-feeding channel
+    /// means work queued up while the consumer was busy — the witness
+    /// that producer and consumer stages genuinely ran concurrently;
+    /// a peak of 0-1 means the consumer was never behind.
+    pub max_depth: usize,
+}
+
+/// Outcome of a [`NamedSender::send`].
+#[derive(Debug)]
+pub enum SendResult<T> {
+    Sent,
+    /// `Try` policy only: channel full, value handed back.
+    Full(T),
+    /// `DropWithLog` policy only: channel full, value dropped + counted.
+    Dropped,
+    /// Receiver gone; value handed back.
+    Disconnected(T),
+}
+
+impl<T> SendResult<T> {
+    pub fn is_sent(&self) -> bool {
+        matches!(self, SendResult::Sent)
+    }
+}
+
+/// Sending half. Clonable; all clones share the same stats.
+pub struct NamedSender<T> {
+    tx: SyncSender<T>,
+    policy: SendPolicy,
+    stats: Arc<ChannelStats>,
+}
+
+impl<T> Clone for NamedSender<T> {
+    fn clone(&self) -> Self {
+        NamedSender {
+            tx: self.tx.clone(),
+            policy: self.policy,
+            stats: Arc::clone(&self.stats),
+        }
+    }
+}
+
+impl<T> NamedSender<T> {
+    pub fn send(&self, v: T) -> SendResult<T> {
+        let provisional = self.stats.note_send();
+        match self.policy {
+            SendPolicy::Block => {
+                // Peak includes senders parked on a full channel: that
+                // backpressure is exactly what the gauge should show.
+                self.stats.commit_depth(provisional);
+                match self.tx.send(v) {
+                    Ok(()) => SendResult::Sent,
+                    Err(e) => {
+                        self.stats.unsend();
+                        SendResult::Disconnected(e.0)
+                    }
+                }
+            }
+            SendPolicy::Try | SendPolicy::DropWithLog => match self.tx.try_send(v) {
+                Ok(()) => {
+                    self.stats.commit_depth(provisional);
+                    SendResult::Sent
+                }
+                Err(TrySendError::Full(v)) => {
+                    // Failed attempt: retract without touching max_depth,
+                    // so peaks never count items that were never queued.
+                    self.stats.unsend();
+                    if self.policy == SendPolicy::Try {
+                        SendResult::Full(v)
+                    } else {
+                        if self.stats.note_drop() == 1 {
+                            eprintln!(
+                                "channel '{}' full (cap {}): dropping (further drops counted silently)",
+                                self.stats.name, self.stats.capacity
+                            );
+                        }
+                        SendResult::Dropped
+                    }
+                }
+                Err(TrySendError::Disconnected(v)) => {
+                    self.stats.unsend();
+                    SendResult::Disconnected(v)
+                }
+            },
+        }
+    }
+
+    pub fn stats(&self) -> Arc<ChannelStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+/// Receiving half. Single consumer, like `mpsc::Receiver`.
+pub struct NamedReceiver<T> {
+    rx: Receiver<T>,
+    stats: Arc<ChannelStats>,
+}
+
+impl<T> NamedReceiver<T> {
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let v = self.rx.recv()?;
+        self.stats.note_recv();
+        Ok(v)
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        let v = self.rx.recv_timeout(timeout)?;
+        self.stats.note_recv();
+        Ok(v)
+    }
+
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        let v = self.rx.try_recv()?;
+        self.stats.note_recv();
+        Ok(v)
+    }
+
+    pub fn stats(&self) -> Arc<ChannelStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+/// Create a named bounded channel. Capacity 0 is a rendezvous channel.
+pub fn channel<T>(
+    name: &str,
+    capacity: usize,
+    policy: SendPolicy,
+) -> (NamedSender<T>, NamedReceiver<T>) {
+    let stats = Arc::new(ChannelStats::new(name, capacity));
+    let (tx, rx) = sync_channel(capacity);
+    (
+        NamedSender {
+            tx,
+            policy,
+            stats: Arc::clone(&stats),
+        },
+        NamedReceiver { rx, stats },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_and_peak_tracked() {
+        let (tx, rx) = channel::<u32>("t", 8, SendPolicy::Block);
+        for i in 0..3 {
+            assert!(tx.send(i).is_sent());
+        }
+        let snap = tx.stats().snapshot();
+        assert_eq!(snap.sent, 3);
+        assert_eq!(snap.max_depth, 3);
+        assert_eq!(rx.recv().unwrap(), 0);
+        assert_eq!(rx.recv().unwrap(), 1);
+        // Peak is monotonic even after drains.
+        assert_eq!(rx.stats().snapshot().max_depth, 3);
+        assert_eq!(rx.try_recv().unwrap(), 2);
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn try_policy_returns_value_when_full() {
+        let (tx, _rx) = channel::<u32>("t", 1, SendPolicy::Try);
+        assert!(tx.send(7).is_sent());
+        match tx.send(8) {
+            SendResult::Full(v) => assert_eq!(v, 8),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(tx.stats().snapshot().dropped, 0);
+    }
+
+    #[test]
+    fn drop_policy_counts_drops() {
+        let (tx, rx) = channel::<u32>("t", 1, SendPolicy::DropWithLog);
+        assert!(tx.send(1).is_sent());
+        assert!(matches!(tx.send(2), SendResult::Dropped));
+        assert!(matches!(tx.send(3), SendResult::Dropped));
+        let snap = tx.stats().snapshot();
+        assert_eq!(snap.sent, 1);
+        assert_eq!(snap.dropped, 2);
+        assert_eq!(rx.recv().unwrap(), 1);
+    }
+
+    #[test]
+    fn disconnect_hands_value_back() {
+        let (tx, rx) = channel::<String>("t", 4, SendPolicy::Block);
+        drop(rx);
+        match tx.send("hello".to_string()) {
+            SendResult::Disconnected(v) => assert_eq!(v, "hello"),
+            other => panic!("expected Disconnected, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let (tx, rx) = channel::<u64>("t", 2, SendPolicy::Block);
+        let h = std::thread::spawn(move || {
+            // More sends than capacity: exercises blocking backpressure.
+            for i in 0..10u64 {
+                assert!(tx.send(i).is_sent());
+            }
+        });
+        let got: Vec<u64> = std::iter::from_fn(|| rx.recv().ok()).collect();
+        h.join().unwrap();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+        let snap = rx.stats().snapshot();
+        assert_eq!(snap.sent, 10);
+        // Peak is bounded by capacity plus one in-flight blocked sender.
+        assert!(snap.max_depth <= 3, "peak {} too high", snap.max_depth);
+    }
+}

@@ -1,17 +1,35 @@
-//! Serving metrics: latency distribution, batch-size histogram,
-//! throughput and rejection counters.
+//! Serving metrics: latency distribution, per-stage latency split
+//! (queue-wait / encode / execute), batch-size histogram, channel-depth
+//! statistics, throughput and rejection counters.
+//!
+//! The stage split is the host-side analogue of the per-FIFO occupancy
+//! counters accelerator papers use to find pipeline stalls: queue-wait
+//! dominating means admission/batching is the bottleneck, encode
+//! dominating means the host can't feed the engine, execute dominating
+//! means the engine itself is saturated.
 
 use std::time::Instant;
 
 use crate::util::stats::Samples;
 
+use super::channel::ChannelSnapshot;
+
 #[derive(Debug)]
 pub struct Metrics {
     pub latency_us: Samples,
+    /// Submit -> encode-start (admission + batcher + queueing), µs.
+    pub queue_us: Samples,
+    /// Encode+pack time of the chunk each query rode in, µs.
+    pub encode_us: Samples,
+    /// Engine execution time of that chunk, µs.
+    pub execute_us: Samples,
     pub batch_sizes: Samples,
     pub scored: u64,
     pub rejected: u64,
     pub engine_errors: u64,
+    /// Per-channel occupancy statistics, filled in by the pipeline at
+    /// shutdown (empty when serving didn't run through a pipeline).
+    pub channels: Vec<ChannelSnapshot>,
     started: Instant,
 }
 
@@ -25,10 +43,14 @@ impl Metrics {
     pub fn new() -> Self {
         Metrics {
             latency_us: Samples::new(),
+            queue_us: Samples::new(),
+            encode_us: Samples::new(),
+            execute_us: Samples::new(),
             batch_sizes: Samples::new(),
             scored: 0,
             rejected: 0,
             engine_errors: 0,
+            channels: Vec::new(),
             started: Instant::now(),
         }
     }
@@ -38,6 +60,9 @@ impl Metrics {
             super::query::Outcome::Score(_) => {
                 self.scored += 1;
                 self.latency_us.push(r.latency_us);
+                self.queue_us.push(r.stage.queue_us);
+                self.encode_us.push(r.stage.encode_us);
+                self.execute_us.push(r.stage.execute_us);
                 self.batch_sizes.push(r.batch_size as f64);
             }
             super::query::Outcome::Rejected(_) => self.rejected += 1,
@@ -55,6 +80,9 @@ impl Metrics {
     }
 
     /// Render as a report table.
+    ///
+    /// Row order is stable API for the first nine rows (benches, examples
+    /// and tests index them); new rows are only ever appended.
     pub fn render_table(&self, title: &str) -> crate::report::Table {
         use crate::report::{fmt, Table};
         let mut t = Table::new(title, &["Metric", "Value"]);
@@ -82,13 +110,40 @@ impl Metrics {
             "mean batch size".into(),
             fmt(self.batch_sizes.mean()),
         ]);
+        // Per-stage latency split (where latency_us went).
+        for (label, s) in [
+            ("queue wait", &self.queue_us),
+            ("encode", &self.encode_us),
+            ("execute", &self.execute_us),
+        ] {
+            t.row(vec![
+                format!("{label} mean (ms)"),
+                fmt(s.mean() / 1000.0),
+            ]);
+            t.row(vec![
+                format!("{label} p95 (ms)"),
+                fmt(s.percentile(95.0) / 1000.0),
+            ]);
+        }
+        // Channel occupancy: peak depth >= 2 on an exec lane means the
+        // encoder genuinely ran ahead of the executor (overlap) — a peak
+        // of 1 is just a single hand-off in flight.
+        for c in &self.channels {
+            t.row(vec![
+                format!("chan {} (cap {})", c.name, c.capacity),
+                format!(
+                    "peak depth {}  sent {}  dropped {}",
+                    c.max_depth, c.sent, c.dropped
+                ),
+            ]);
+        }
         t
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::query::{Outcome, QueryResult};
+    use super::super::query::{Outcome, QueryResult, StageTiming};
     use super::*;
 
     fn res(outcome: Outcome) -> QueryResult {
@@ -97,6 +152,11 @@ mod tests {
             outcome,
             latency_us: 100.0,
             batch_size: 4,
+            stage: StageTiming {
+                queue_us: 60.0,
+                encode_us: 10.0,
+                execute_us: 25.0,
+            },
         }
     }
 
@@ -112,13 +172,34 @@ mod tests {
         assert_eq!(m.rejected, 1);
         assert_eq!(m.engine_errors, 1);
         assert_eq!(m.latency_us.len(), 1);
+        // Stage samples only accumulate for scored queries.
+        assert_eq!(m.queue_us.len(), 1);
+        assert_eq!(m.encode_us.len(), 1);
+        assert_eq!(m.execute_us.len(), 1);
+        assert_eq!(m.queue_us.mean(), 60.0);
     }
 
     #[test]
-    fn table_renders() {
+    fn table_renders_with_stage_and_channel_rows() {
         let mut m = Metrics::new();
         m.record(&res(Outcome::Score(0.9)));
+        m.channels.push(ChannelSnapshot {
+            name: "exec.0".into(),
+            capacity: 2,
+            sent: 5,
+            dropped: 0,
+            max_depth: 2,
+        });
         let t = m.render_table("serve metrics");
-        assert!(t.render().contains("queries scored"));
+        let rendered = t.render();
+        assert!(rendered.contains("queries scored"));
+        assert!(rendered.contains("queue wait mean (ms)"));
+        assert!(rendered.contains("execute p95 (ms)"));
+        assert!(rendered.contains("chan exec.0 (cap 2)"));
+        // The first nine rows are a stable indexing API.
+        assert_eq!(t.rows[0][0], "queries scored");
+        assert_eq!(t.rows[3][0], "throughput (query/s)");
+        assert_eq!(t.rows[5][0], "latency p50 (ms)");
+        assert_eq!(t.rows[8][0], "mean batch size");
     }
 }

@@ -1,10 +1,14 @@
-//! L3 serving coordinator: admission router, dynamic batcher, worker
-//! pool, metrics. The paper's system contribution viewed as a serving
-//! problem: many small graph-pair queries, batched to amortize per-launch
-//! overheads (Fig. 11), replicated across workers (§5.4.3).
+//! L3 serving coordinator: a staged dataflow pipeline (admission ->
+//! batcher -> encoder -> executor -> responder) joined by named bounded
+//! channels — the paper's FIFO-connected stage architecture recovered in
+//! software (DESIGN.md §4). Many small graph-pair queries are batched to
+//! amortize per-launch overheads (Fig. 11), fanned out across worker
+//! lanes (§5.4.3), and encoded concurrently with engine execution.
 pub mod batcher;
+pub mod channel;
 pub mod load;
 pub mod metrics;
+pub mod pipeline;
 pub mod query;
 pub mod router;
 pub mod server;

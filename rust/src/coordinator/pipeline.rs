@@ -1,0 +1,696 @@
+//! The staged serving pipeline: SPA-GCN's FIFO-connected dataflow,
+//! recovered on the host side.
+//!
+//! The paper's central design idea is a deep pipeline of stages joined
+//! by FIFO streams so every unit stays busy. The serving path mirrors
+//! that structure in software — one thread (or lane pool) per stage,
+//! joined by [`NamedChannel`](super::channel)s:
+//!
+//! ```text
+//! submit() ──admit──▶ [admission] ──ingest──▶ [batcher] ─┬─batch.0─▶ [encode.0] ──exec.0──▶ [execute.0] ─┐
+//!                          │                             └─batch.1─▶ [encode.1] ──exec.1──▶ [execute.1] ─┤
+//!                          │ rejects                                      │ encode errors                │
+//!                          └────────────────────────────▶ results ◀───────┴───────────────────────────────┘
+//!                                                            │
+//!                                                            ▼
+//!                                                       [responder] → Metrics
+//! ```
+//!
+//! Because the encoder and executor are separate threads joined by a
+//! bounded `exec` channel (capacity = `depth`, default 2), batch *k+1*
+//! encodes while batch *k* is inside the engine — the paper's
+//! compute/transfer overlap claim, recovered for the host. `depth == 0`
+//! fuses the two stages into one sequential thread: the no-overlap
+//! baseline the benches compare against.
+//!
+//! Shutdown is an ordered drop-sender cascade: dropping the pipeline's
+//! submit sender makes admission drain and exit, which drops the ingest
+//! sender, which makes the batcher flush and exit, and so on down the
+//! chain until the responder sees its channel close and returns the
+//! final [`Metrics`]. No query is lost or duplicated on the way down.
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::graph::encode::{encode, PackedBatch};
+use crate::nn::config::ModelConfig;
+use crate::runtime::{pick_batch_size, Engine, EngineFactory};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::channel::{channel, ChannelStats, NamedReceiver, NamedSender, SendPolicy, SendResult};
+use super::metrics::Metrics;
+use super::query::{Outcome, Query, QueryResult, RejectReason, StageTiming};
+use super::router::{Admission, RoundRobin};
+
+/// A batch released by the batcher stage, bound for one worker lane.
+#[derive(Debug)]
+pub struct Batch {
+    pub queries: Vec<Query>,
+}
+
+/// An encoded chunk in flight between an encoder and its executor.
+struct EncodedChunk {
+    queries: Vec<Query>,
+    packed: PackedBatch,
+    /// Submit -> encode-start wait per query, µs.
+    queue_us: Vec<f64>,
+    /// Encode+pack time for the whole chunk, µs.
+    encode_us: f64,
+}
+
+/// Pipeline shape knobs. `ServeConfig` derives one of these; tests build
+/// them directly.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Worker lanes (each lane = encoder + executor pair).
+    pub workers: usize,
+    pub policy: BatchPolicy,
+    /// Encoded-chunk buffer per lane. >= 1 runs encode and execute as
+    /// separate overlapped stages (2 = classic double-buffering);
+    /// 0 fuses them into one sequential stage (no-overlap baseline).
+    pub depth: usize,
+    /// Admission + ingest channel capacity (submit backpressure bound).
+    pub admit_cap: usize,
+    /// Released-batch channel capacity per lane.
+    pub batch_cap: usize,
+    /// Results channel capacity.
+    pub results_cap: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            workers: 1,
+            policy: BatchPolicy::default(),
+            depth: 2,
+            admit_cap: 256,
+            batch_cap: 8,
+            results_cap: 1024,
+        }
+    }
+}
+
+/// A running pipeline. `submit` queries, then `finish` to shut down and
+/// collect metrics. Dropping without `finish` detaches the stage threads
+/// (they drain and exit on their own).
+pub struct Pipeline {
+    submit_tx: NamedSender<Query>,
+    stages: Vec<JoinHandle<()>>,
+    responder: JoinHandle<Metrics>,
+}
+
+impl Pipeline {
+    /// Spawn every stage. Engines are constructed inside the executor
+    /// threads via `factory` (PJRT handles are not `Send`); a
+    /// construction failure downgrades the lane to an error-reporting
+    /// drain instead of panicking the pipeline.
+    pub fn start(model: ModelConfig, factory: EngineFactory, cfg: PipelineConfig) -> Pipeline {
+        let workers = cfg.workers.max(1);
+        let (admit_tx, admit_rx) = channel("admit", cfg.admit_cap, SendPolicy::Block);
+        let (ingest_tx, ingest_rx) = channel("ingest", cfg.admit_cap, SendPolicy::Block);
+        let (results_tx, results_rx) = channel("results", cfg.results_cap, SendPolicy::Block);
+
+        let mut stats: Vec<Arc<ChannelStats>> = vec![admit_tx.stats(), ingest_tx.stats()];
+        let mut stages = Vec::new();
+
+        // Stage 1: admission (validation + reject short-circuit).
+        {
+            let adm = Admission::new(model.clone());
+            let results = results_tx.clone();
+            stages.push(spawn("admission", move || {
+                admission_stage(adm, admit_rx, ingest_tx, results)
+            }));
+        }
+
+        // Stages 3+4 per lane: encoder -> executor (or fused when depth=0).
+        let mut batch_txs = Vec::new();
+        for w in 0..workers {
+            let (batch_tx, batch_rx) =
+                channel(&format!("batch.{w}"), cfg.batch_cap, SendPolicy::Block);
+            stats.push(batch_tx.stats());
+            batch_txs.push(batch_tx);
+            let results = results_tx.clone();
+            let lane_factory = factory.clone();
+            let (n_max, num_labels) = (model.n_max, model.num_labels);
+            if cfg.depth == 0 {
+                stages.push(spawn(&format!("encode+execute.{w}"), move || {
+                    fused_stage(lane_factory, batch_rx, results, n_max, num_labels)
+                }));
+            } else {
+                let (exec_tx, exec_rx) =
+                    channel(&format!("exec.{w}"), cfg.depth, SendPolicy::Block);
+                stats.push(exec_tx.stats());
+                // Startup handshake: the executor reports its engine's
+                // supported batch ladder (or the construction error).
+                let (sizes_tx, sizes_rx) =
+                    std::sync::mpsc::sync_channel::<Result<Vec<usize>, String>>(1);
+                let enc_results = results_tx.clone();
+                stages.push(spawn(&format!("encode.{w}"), move || {
+                    encoder_stage(batch_rx, exec_tx, enc_results, sizes_rx, n_max, num_labels)
+                }));
+                stages.push(spawn(&format!("execute.{w}"), move || {
+                    executor_stage(lane_factory, exec_rx, results, sizes_tx)
+                }));
+            }
+        }
+
+        // Stage 2: batcher (size-or-deadline, fan-out across lanes).
+        {
+            let batcher = Batcher::new(cfg.policy);
+            let fan_out = RoundRobin::new(batch_txs);
+            let results = results_tx.clone();
+            stages.push(spawn("batcher", move || {
+                batcher_stage(batcher, ingest_rx, fan_out, results)
+            }));
+        }
+
+        stats.push(results_tx.stats());
+        drop(results_tx); // pipeline keeps no results sender: cascade works
+        let responder = spawn("responder", move || responder_stage(results_rx, stats));
+
+        Pipeline {
+            submit_tx: admit_tx,
+            stages,
+            responder,
+        }
+    }
+
+    /// Submit one query. Blocks when admission is saturated
+    /// (backpressure). Returns false if the pipeline has shut down.
+    pub fn submit(&self, q: Query) -> bool {
+        self.submit_tx.send(q).is_sent()
+    }
+
+    /// Ordered shutdown: drop the submit sender (starting the cascade),
+    /// join every stage front-to-back, and collect the final metrics
+    /// (including channel-depth snapshots) from the responder.
+    pub fn finish(self) -> Metrics {
+        let Pipeline {
+            submit_tx,
+            stages,
+            responder,
+        } = self;
+        drop(submit_tx);
+        for h in stages {
+            let _ = h.join();
+        }
+        responder.join().expect("responder stage panicked")
+    }
+}
+
+fn spawn<T, F>(name: &str, f: F) -> JoinHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    thread::Builder::new()
+        .name(format!("spa-{name}"))
+        .spawn(f)
+        .expect("spawning pipeline stage")
+}
+
+fn admission_stage(
+    adm: Admission,
+    rx: NamedReceiver<Query>,
+    out: NamedSender<Query>,
+    results: NamedSender<QueryResult>,
+) {
+    while let Ok(q) = rx.recv() {
+        match adm.admit(q) {
+            Ok(q) => {
+                if let SendResult::Disconnected(q) = out.send(q) {
+                    let _ = results.send(QueryResult::rejected(&q, RejectReason::ShuttingDown));
+                }
+            }
+            Err(reject) => {
+                let _ = results.send(reject);
+            }
+        }
+    }
+}
+
+fn batcher_stage(
+    mut batcher: Batcher,
+    rx: NamedReceiver<Query>,
+    mut fan_out: RoundRobin<Batch>,
+    results: NamedSender<QueryResult>,
+) {
+    loop {
+        let wait = batcher
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(wait) {
+            Ok(q) => {
+                // Greedily absorb whatever else is already queued: fewer
+                // per-query wakeups, and bursts release full batches at
+                // once (push_all leaves any remainder on a fresh
+                // deadline).
+                let mut burst = vec![q];
+                while burst.len() < 4 * batcher.max_batch() {
+                    match rx.try_recv() {
+                        Ok(more) => burst.push(more),
+                        Err(_) => break,
+                    }
+                }
+                for batch in batcher.push_all(burst, Instant::now()) {
+                    dispatch(&mut fan_out, batch, &results);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.poll(Instant::now()) {
+                    dispatch(&mut fan_out, batch, &results);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                let now = Instant::now();
+                while let Some(batch) = batcher.flush(now) {
+                    dispatch(&mut fan_out, batch, &results);
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn dispatch(fan_out: &mut RoundRobin<Batch>, queries: Vec<Query>, results: &NamedSender<QueryResult>) {
+    if let SendResult::Disconnected(batch) = fan_out.send(Batch { queries }) {
+        for q in batch.queries {
+            let _ = results.send(QueryResult::rejected(&q, RejectReason::ShuttingDown));
+        }
+    }
+}
+
+fn encoder_stage(
+    rx: NamedReceiver<Batch>,
+    out: NamedSender<EncodedChunk>,
+    results: NamedSender<QueryResult>,
+    sizes_rx: std::sync::mpsc::Receiver<Result<Vec<usize>, String>>,
+    n_max: usize,
+    num_labels: usize,
+) {
+    let sizes = match sizes_rx.recv() {
+        Ok(Ok(sizes)) => sizes,
+        Ok(Err(msg)) => return drain_failed(rx, &results, &msg),
+        Err(_) => return drain_failed(rx, &results, "engine thread died before handshake"),
+    };
+    while let Ok(batch) = rx.recv() {
+        for chunk in make_chunks(batch.queries, &sizes) {
+            if let Some(encoded) = encode_chunk(chunk, &sizes, n_max, num_labels, &results) {
+                if let SendResult::Disconnected(encoded) = out.send(encoded) {
+                    for q in encoded.queries {
+                        let _ = results.send(QueryResult::engine_error(
+                            &q,
+                            "executor stage gone",
+                            0,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn executor_stage(
+    factory: EngineFactory,
+    rx: NamedReceiver<EncodedChunk>,
+    results: NamedSender<QueryResult>,
+    sizes_tx: std::sync::mpsc::SyncSender<Result<Vec<usize>, String>>,
+) {
+    let mut engine = match factory() {
+        Ok(engine) => {
+            let _ = sizes_tx.send(Ok(engine.supported_batch_sizes()));
+            engine
+        }
+        Err(err) => {
+            // Report instead of panicking: the encoder downgrades the
+            // lane to per-query EngineError results.
+            let _ = sizes_tx.send(Err(format!("engine construction failed: {err:#}")));
+            return;
+        }
+    };
+    drop(sizes_tx);
+    while let Ok(chunk) = rx.recv() {
+        execute_chunk(engine.as_mut(), chunk, &results);
+    }
+}
+
+/// Fused encode+execute lane (`depth == 0`): the sequential baseline —
+/// identical per-query work, no overlap between the two stages.
+fn fused_stage(
+    factory: EngineFactory,
+    rx: NamedReceiver<Batch>,
+    results: NamedSender<QueryResult>,
+    n_max: usize,
+    num_labels: usize,
+) {
+    let mut engine = match factory() {
+        Ok(engine) => engine,
+        Err(err) => {
+            return drain_failed(rx, &results, &format!("engine construction failed: {err:#}"))
+        }
+    };
+    let sizes = engine.supported_batch_sizes();
+    while let Ok(batch) = rx.recv() {
+        for chunk in make_chunks(batch.queries, &sizes) {
+            if let Some(encoded) = encode_chunk(chunk, &sizes, n_max, num_labels, &results) {
+                execute_chunk(engine.as_mut(), encoded, &results);
+            }
+        }
+    }
+}
+
+fn responder_stage(rx: NamedReceiver<QueryResult>, stats: Vec<Arc<ChannelStats>>) -> Metrics {
+    let mut metrics = Metrics::new();
+    while let Ok(r) = rx.recv() {
+        metrics.record(&r);
+    }
+    metrics.channels = stats.iter().map(|s| s.snapshot()).collect();
+    metrics
+}
+
+/// Answer every remaining query on a dead lane with an EngineError.
+fn drain_failed(rx: NamedReceiver<Batch>, results: &NamedSender<QueryResult>, msg: &str) {
+    while let Ok(batch) = rx.recv() {
+        for q in batch.queries {
+            let _ = results.send(QueryResult::engine_error(&q, msg, 0));
+        }
+    }
+}
+
+/// Split a released batch into engine-sized chunks (a batch larger than
+/// the biggest supported artifact executes as several launches).
+fn make_chunks(queries: Vec<Query>, supported: &[usize]) -> Vec<Vec<Query>> {
+    let cap = pick_batch_size(supported, queries.len()).max(1);
+    let mut chunks = Vec::with_capacity(queries.len().div_ceil(cap));
+    let mut current = Vec::with_capacity(cap.min(queries.len()));
+    for q in queries {
+        current.push(q);
+        if current.len() == cap {
+            chunks.push(std::mem::take(&mut current));
+        }
+    }
+    if !current.is_empty() {
+        chunks.push(current);
+    }
+    chunks
+}
+
+/// Encode + pack one chunk. Queries that fail to encode (can only happen
+/// if admission and the artifact shapes disagree) are answered with an
+/// EngineError instead of poisoning the chunk.
+fn encode_chunk(
+    queries: Vec<Query>,
+    supported: &[usize],
+    n_max: usize,
+    num_labels: usize,
+    results: &NamedSender<QueryResult>,
+) -> Option<EncodedChunk> {
+    let t0 = Instant::now();
+    let mut ok_queries = Vec::with_capacity(queries.len());
+    let mut pairs = Vec::with_capacity(queries.len());
+    let mut queue_us = Vec::with_capacity(queries.len());
+    for q in queries {
+        match (encode(&q.g1, n_max, num_labels), encode(&q.g2, n_max, num_labels)) {
+            (Ok(e1), Ok(e2)) => {
+                queue_us.push(t0.saturating_duration_since(q.submitted).as_secs_f64() * 1e6);
+                pairs.push((e1, e2));
+                ok_queries.push(q);
+            }
+            (Err(e), _) | (_, Err(e)) => {
+                let _ = results.send(QueryResult::engine_error(&q, format!("encode: {e}"), 0));
+            }
+        }
+    }
+    if ok_queries.is_empty() {
+        return None;
+    }
+    let eff = pick_batch_size(supported, ok_queries.len());
+    let packed = PackedBatch::pack(&pairs, eff);
+    Some(EncodedChunk {
+        queries: ok_queries,
+        packed,
+        queue_us,
+        encode_us: t0.elapsed().as_secs_f64() * 1e6,
+    })
+}
+
+fn execute_chunk(
+    engine: &mut dyn Engine,
+    chunk: EncodedChunk,
+    results: &NamedSender<QueryResult>,
+) {
+    let t0 = Instant::now();
+    let scored = engine.score_batch(&chunk.packed);
+    let execute_us = t0.elapsed().as_secs_f64() * 1e6;
+    let batch_size = chunk.queries.len();
+    match scored {
+        Ok(scores) => {
+            for (i, q) in chunk.queries.iter().enumerate() {
+                let _ = results.send(QueryResult {
+                    id: q.id,
+                    outcome: Outcome::Score(scores[i]),
+                    latency_us: q.submitted.elapsed().as_secs_f64() * 1e6,
+                    batch_size,
+                    stage: StageTiming {
+                        queue_us: chunk.queue_us[i],
+                        encode_us: chunk.encode_us,
+                        execute_us,
+                    },
+                });
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for q in &chunk.queries {
+                let _ = results.send(QueryResult::engine_error(q, &msg, batch_size));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Deterministic engine double: fixed batch ladder, optional per-call
+    /// delay (to make the executor the bottleneck), call counter.
+    struct MockEngine {
+        sizes: Vec<usize>,
+        delay: Duration,
+        calls: Arc<AtomicU64>,
+    }
+
+    impl Engine for MockEngine {
+        fn name(&self) -> &str {
+            "mock"
+        }
+        fn supported_batch_sizes(&self) -> Vec<usize> {
+            self.sizes.clone()
+        }
+        fn score_batch(&mut self, batch: &PackedBatch) -> anyhow::Result<Vec<f32>> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            if !self.delay.is_zero() {
+                thread::sleep(self.delay);
+            }
+            Ok(vec![0.5; batch.batch])
+        }
+    }
+
+    fn mock_factory(sizes: Vec<usize>, delay: Duration, calls: Arc<AtomicU64>) -> EngineFactory {
+        Arc::new(move || {
+            Ok(Box::new(MockEngine {
+                sizes: sizes.clone(),
+                delay,
+                calls: Arc::clone(&calls),
+            }) as Box<dyn Engine>)
+        })
+    }
+
+    fn failing_factory(msg: &'static str) -> EngineFactory {
+        Arc::new(move || anyhow::bail!(msg))
+    }
+
+    fn model() -> ModelConfig {
+        ModelConfig {
+            n_max: 8,
+            num_labels: 4,
+            ..ModelConfig::default()
+        }
+    }
+
+    fn query(id: u64) -> Query {
+        let g = Graph::new(3, vec![(0, 1), (1, 2)], vec![0, 1, 2]);
+        Query::new(id, g.clone(), g)
+    }
+
+    fn oversize_query(id: u64) -> Query {
+        let g = Graph::new(20, (1..20).map(|v| (0u16, v as u16)).collect(), vec![0; 20]);
+        Query::new(id, g.clone(), g)
+    }
+
+    fn pcfg(workers: usize, max_batch: usize, depth: usize, timeout: Duration) -> PipelineConfig {
+        PipelineConfig {
+            workers,
+            policy: BatchPolicy { max_batch, timeout },
+            depth,
+            ..PipelineConfig::default()
+        }
+    }
+
+    #[test]
+    fn make_chunks_respects_engine_ladder() {
+        let qs: Vec<Query> = (0..10).map(query).collect();
+        let chunks = make_chunks(qs, &[1, 4]);
+        let lens: Vec<usize> = chunks.iter().map(Vec::len).collect();
+        assert_eq!(lens, vec![4, 4, 2]);
+        // Order and identity preserved across the split.
+        let ids: Vec<u64> = chunks.into_iter().flatten().map(|q| q.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        // A batch already within the ladder stays whole.
+        let qs: Vec<Query> = (0..3).map(query).collect();
+        assert_eq!(make_chunks(qs, &[1, 4]).len(), 1);
+    }
+
+    #[test]
+    fn no_query_lost_or_duplicated_through_shutdown() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let pipeline = Pipeline::start(
+            model(),
+            mock_factory(vec![1, 4], Duration::ZERO, Arc::clone(&calls)),
+            pcfg(2, 8, 2, Duration::from_micros(200)),
+        );
+        let n = 57u64;
+        for id in 0..n {
+            assert!(pipeline.submit(query(id)));
+        }
+        let metrics = pipeline.finish();
+        // Every submitted query produced exactly one result: fewer means
+        // lost in the cascade, more means duplicated.
+        assert_eq!(metrics.scored, n);
+        assert_eq!(metrics.rejected, 0);
+        assert_eq!(metrics.engine_errors, 0);
+        assert!(calls.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn oversized_batches_chunk_to_engine_limit() {
+        let calls = Arc::new(AtomicU64::new(0));
+        // batch_max 10 exceeds the engine's largest artifact (4): the
+        // encoder must chunk, and every chunk must fit the ladder.
+        let pipeline = Pipeline::start(
+            model(),
+            mock_factory(vec![1, 4], Duration::ZERO, Arc::clone(&calls)),
+            pcfg(1, 10, 2, Duration::from_secs(5)),
+        );
+        for id in 0..10 {
+            assert!(pipeline.submit(query(id)));
+        }
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.scored, 10);
+        assert!(
+            metrics.batch_sizes.max() <= 4.0,
+            "chunk exceeded engine limit: {}",
+            metrics.batch_sizes.max()
+        );
+    }
+
+    #[test]
+    fn engine_construction_failure_reports_per_query_errors() {
+        let pipeline = Pipeline::start(
+            model(),
+            failing_factory("no such backend"),
+            pcfg(1, 4, 2, Duration::from_micros(100)),
+        );
+        for id in 0..5 {
+            assert!(pipeline.submit(query(id)));
+        }
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.engine_errors, 5);
+        assert_eq!(metrics.scored, 0);
+    }
+
+    #[test]
+    fn engine_construction_failure_reports_errors_in_fused_lane() {
+        let pipeline = Pipeline::start(
+            model(),
+            failing_factory("no such backend"),
+            pcfg(1, 4, 0, Duration::from_micros(100)),
+        );
+        for id in 0..3 {
+            assert!(pipeline.submit(query(id)));
+        }
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.engine_errors, 3);
+        assert_eq!(metrics.scored, 0);
+    }
+
+    #[test]
+    fn rejects_flow_to_responder() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let pipeline = Pipeline::start(
+            model(),
+            mock_factory(vec![1, 4], Duration::ZERO, calls),
+            pcfg(1, 4, 2, Duration::from_micros(100)),
+        );
+        assert!(pipeline.submit(oversize_query(0)));
+        for id in 1..4 {
+            assert!(pipeline.submit(query(id)));
+        }
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.rejected, 1);
+        assert_eq!(metrics.scored, 3);
+    }
+
+    #[test]
+    fn encoder_overlaps_with_executor() {
+        // Executor sleeps 3ms per chunk, encoding is microseconds: if the
+        // stages overlap, encoded chunks pile up in the bounded exec
+        // channel while the engine is busy. Peak depth >= 2 is the
+        // witness that batch k+1 encoded while batch k was in the engine
+        // (a peak of 1 would be just a single hand-off in flight, which
+        // even a fully serialized lane records).
+        let calls = Arc::new(AtomicU64::new(0));
+        let pipeline = Pipeline::start(
+            model(),
+            mock_factory(vec![1, 4], Duration::from_millis(3), calls),
+            pcfg(1, 4, 2, Duration::from_micros(100)),
+        );
+        for id in 0..24 {
+            assert!(pipeline.submit(query(id)));
+        }
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.scored, 24);
+        let exec = metrics
+            .channels
+            .iter()
+            .find(|c| c.name == "exec.0")
+            .expect("exec channel snapshot present");
+        assert!(
+            exec.max_depth >= 2,
+            "no overlap observed: exec.0 peak depth {} (snapshots: {:?})",
+            exec.max_depth,
+            metrics.channels
+        );
+        // Executor time dominates and is visible in the stage split.
+        assert!(metrics.execute_us.mean() > metrics.encode_us.mean());
+    }
+
+    #[test]
+    fn sequential_lane_still_serves_everything() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let pipeline = Pipeline::start(
+            model(),
+            mock_factory(vec![1, 4], Duration::ZERO, calls),
+            pcfg(2, 4, 0, Duration::from_micros(100)),
+        );
+        for id in 0..20 {
+            assert!(pipeline.submit(query(id)));
+        }
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.scored, 20);
+    }
+}

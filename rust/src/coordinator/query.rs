@@ -54,6 +54,19 @@ pub enum Outcome {
     EngineError(String),
 }
 
+/// Where one query's latency went, stage by stage (µs). The split the
+/// pipeline reports: `latency_us ≈ queue_us + encode_us + execute_us`
+/// plus responder/channel overhead.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageTiming {
+    /// Submit -> encode start: admission + batcher + queueing time.
+    pub queue_us: f64,
+    /// Encode + pack time of the chunk this query rode in.
+    pub encode_us: f64,
+    /// Engine execution time of that chunk.
+    pub execute_us: f64,
+}
+
 /// Completed query with timing.
 #[derive(Debug, Clone)]
 pub struct QueryResult {
@@ -63,9 +76,33 @@ pub struct QueryResult {
     pub latency_us: f64,
     /// Size of the batch this query was executed in (0 for rejects).
     pub batch_size: usize,
+    /// Per-stage latency split (zeros for rejects).
+    pub stage: StageTiming,
 }
 
 impl QueryResult {
+    /// Rejection result for a query that never reached an engine.
+    pub fn rejected(q: &Query, reason: RejectReason) -> Self {
+        QueryResult {
+            id: q.id,
+            outcome: Outcome::Rejected(reason),
+            latency_us: q.submitted.elapsed().as_secs_f64() * 1e6,
+            batch_size: 0,
+            stage: StageTiming::default(),
+        }
+    }
+
+    /// Engine-side failure (construction or execution).
+    pub fn engine_error(q: &Query, msg: impl Into<String>, batch_size: usize) -> Self {
+        QueryResult {
+            id: q.id,
+            outcome: Outcome::EngineError(msg.into()),
+            latency_us: q.submitted.elapsed().as_secs_f64() * 1e6,
+            batch_size,
+            stage: StageTiming::default(),
+        }
+    }
+
     pub fn score(&self) -> Option<f32> {
         match self.outcome {
             Outcome::Score(s) => Some(s),
@@ -96,6 +133,7 @@ mod tests {
             outcome: Outcome::Score(0.5),
             latency_us: 10.0,
             batch_size: 4,
+            stage: StageTiming::default(),
         };
         assert_eq!(r.score(), Some(0.5));
         assert!(!r.is_rejected());
@@ -104,8 +142,22 @@ mod tests {
             outcome: Outcome::Rejected(RejectReason::ShuttingDown),
             latency_us: 1.0,
             batch_size: 0,
+            stage: StageTiming::default(),
         };
         assert_eq!(r.score(), None);
         assert!(r.is_rejected());
+    }
+
+    #[test]
+    fn constructors_carry_query_identity() {
+        let g = crate::graph::Graph::new(2, vec![(0, 1)], vec![0, 0]);
+        let q = Query::new(42, g.clone(), g);
+        let r = QueryResult::rejected(&q, RejectReason::ShuttingDown);
+        assert_eq!(r.id, 42);
+        assert!(r.is_rejected());
+        let r = QueryResult::engine_error(&q, "boom", 3);
+        assert_eq!(r.id, 42);
+        assert!(matches!(r.outcome, Outcome::EngineError(ref m) if m == "boom"));
+        assert_eq!(r.batch_size, 3);
     }
 }

@@ -1,16 +1,17 @@
-//! Admission control + worker routing.
+//! Admission control (the pipeline's first stage) and round-robin
+//! fan-out (how the batcher stage spreads released batches across the
+//! worker encode/execute lanes).
 //!
-//! The router validates queries against the artifact shape limits (the
+//! Admission validates queries against the artifact shape limits (the
 //! fixed n_max/num_labels the AOT HLO was compiled for — oversize graphs
-//! must be rejected, not silently truncated) and distributes admitted
-//! queries round-robin across worker queues.
-
-use std::sync::mpsc::SyncSender;
+//! must be rejected, not silently truncated) before they ever enter the
+//! pipeline; rejects flow straight to the responder stage.
 
 use crate::graph::Graph;
 use crate::nn::config::ModelConfig;
 
-use super::query::{Outcome, Query, QueryResult, RejectReason};
+use super::channel::{NamedSender, SendResult};
+use super::query::{Query, QueryResult, RejectReason};
 
 /// Validate a query against the model's static shapes.
 pub fn validate(cfg: &ModelConfig, g1: &Graph, g2: &Graph) -> Result<(), RejectReason> {
@@ -31,61 +32,63 @@ pub fn validate(cfg: &ModelConfig, g1: &Graph, g2: &Graph) -> Result<(), RejectR
     Ok(())
 }
 
-/// Round-robin router over worker input queues.
-pub struct Router {
+/// Admission-stage state: shape validation against the artifact limits.
+/// (Admit/reject counts live in `Metrics`, fed by the responder — no
+/// duplicate bookkeeping here.)
+pub struct Admission {
     cfg: ModelConfig,
-    workers: Vec<SyncSender<Query>>,
-    next: usize,
-    pub admitted: u64,
-    pub rejected: u64,
 }
 
-impl Router {
-    pub fn new(cfg: ModelConfig, workers: Vec<SyncSender<Query>>) -> Self {
-        assert!(!workers.is_empty(), "router needs at least one worker");
-        Router {
-            cfg,
-            workers,
-            next: 0,
-            admitted: 0,
-            rejected: 0,
-        }
+impl Admission {
+    pub fn new(cfg: ModelConfig) -> Self {
+        Admission { cfg }
     }
 
-    /// Route one query; invalid queries produce an immediate rejection
-    /// result instead of reaching a worker.
-    pub fn route(&mut self, q: Query) -> Option<QueryResult> {
-        if let Err(reason) = validate(&self.cfg, &q.g1, &q.g2) {
-            self.rejected += 1;
-            return Some(QueryResult {
-                id: q.id,
-                outcome: Outcome::Rejected(reason),
-                latency_us: q.submitted.elapsed().as_secs_f64() * 1e6,
-                batch_size: 0,
-            });
+    /// Admit one query, or return the rejection result to send to the
+    /// responder.
+    pub fn admit(&self, q: Query) -> Result<Query, QueryResult> {
+        match validate(&self.cfg, &q.g1, &q.g2) {
+            Ok(()) => Ok(q),
+            Err(reason) => Err(QueryResult::rejected(&q, reason)),
         }
-        let w = self.next;
-        self.next = (self.next + 1) % self.workers.len();
-        self.admitted += 1;
-        if self.workers[w].send(q).is_err() {
-            // Worker gone (shutdown race): surface as engine error.
-            self.admitted -= 1;
-            self.rejected += 1;
-            return Some(QueryResult {
-                id: u64::MAX,
-                outcome: Outcome::Rejected(RejectReason::ShuttingDown),
-                latency_us: 0.0,
-                batch_size: 0,
-            });
+    }
+}
+
+/// Round-robin dispatcher over downstream stage inputs. If the preferred
+/// lane has shut down, the remaining lanes are tried once around before
+/// giving up.
+pub struct RoundRobin<T> {
+    outs: Vec<NamedSender<T>>,
+    next: usize,
+}
+
+impl<T> RoundRobin<T> {
+    pub fn new(outs: Vec<NamedSender<T>>) -> Self {
+        assert!(!outs.is_empty(), "round-robin needs at least one lane");
+        RoundRobin { outs, next: 0 }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.outs.len()
+    }
+
+    pub fn send(&mut self, mut v: T) -> SendResult<T> {
+        for _ in 0..self.outs.len() {
+            let lane = self.next;
+            self.next = (self.next + 1) % self.outs.len();
+            match self.outs[lane].send(v) {
+                SendResult::Disconnected(back) => v = back,
+                delivered => return delivered,
+            }
         }
-        None
+        SendResult::Disconnected(v)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::sync_channel;
+    use crate::coordinator::channel::{channel, SendPolicy};
 
     fn cfg() -> ModelConfig {
         ModelConfig {
@@ -117,29 +120,50 @@ mod tests {
     }
 
     #[test]
-    fn round_robin_distribution() {
-        let (tx1, rx1) = sync_channel(16);
-        let (tx2, rx2) = sync_channel(16);
-        let mut r = Router::new(cfg(), vec![tx1, tx2]);
-        for i in 0..6 {
-            let g = graph(4, 1);
-            assert!(r.route(Query::new(i, g.clone(), g)).is_none());
-        }
-        assert_eq!(r.admitted, 6);
-        let c1 = rx1.try_iter().count();
-        let c2 = rx2.try_iter().count();
-        assert_eq!((c1, c2), (3, 3));
+    fn admission_rejects_inline_with_query_identity() {
+        let adm = Admission::new(cfg());
+        let g = graph(4, 1);
+        let big = graph(20, 1);
+        assert!(adm.admit(Query::new(1, g.clone(), g.clone())).is_ok());
+        let res = adm.admit(Query::new(7, g, big)).unwrap_err();
+        assert!(res.is_rejected());
+        assert_eq!(res.id, 7);
     }
 
     #[test]
-    fn invalid_query_rejected_inline() {
-        let (tx, _rx) = sync_channel(4);
-        let mut r = Router::new(cfg(), vec![tx]);
-        let g = graph(4, 1);
-        let big = graph(20, 1);
-        let res = r.route(Query::new(7, g, big)).expect("rejection");
-        assert!(res.is_rejected());
-        assert_eq!(res.id, 7);
-        assert_eq!(r.rejected, 1);
+    fn round_robin_distribution() {
+        let (tx1, rx1) = channel::<u64>("lane.0", 16, SendPolicy::Block);
+        let (tx2, rx2) = channel::<u64>("lane.1", 16, SendPolicy::Block);
+        let mut rr = RoundRobin::new(vec![tx1, tx2]);
+        for i in 0..6 {
+            assert!(rr.send(i).is_sent());
+        }
+        let drain = |rx: &super::super::channel::NamedReceiver<u64>| {
+            let mut got = Vec::new();
+            while let Ok(v) = rx.try_recv() {
+                got.push(v);
+            }
+            got
+        };
+        assert_eq!(drain(&rx1), vec![0, 2, 4]);
+        assert_eq!(drain(&rx2), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn round_robin_skips_dead_lanes() {
+        let (tx1, rx1) = channel::<u64>("lane.0", 16, SendPolicy::Block);
+        let (tx2, rx2) = channel::<u64>("lane.1", 16, SendPolicy::Block);
+        let mut rr = RoundRobin::new(vec![tx1, tx2]);
+        drop(rx1);
+        for i in 0..4 {
+            assert!(rr.send(i).is_sent(), "live lane must absorb traffic");
+        }
+        let mut got = Vec::new();
+        while let Ok(v) = rx2.try_recv() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        drop(rx2);
+        assert!(matches!(rr.send(9), SendResult::Disconnected(9)));
     }
 }

@@ -1,49 +1,88 @@
-//! The serving loop: leader thread (router) + worker threads (batcher +
-//! engine), connected by bounded channels for backpressure.
+//! The serving entrypoints: build a staged [`Pipeline`], pump a workload
+//! through it (closed-loop flood or open-loop Poisson pacing), render
+//! the metrics report.
 //!
 //! Matches the paper's deployment: a host process owns a compiled
 //! accelerator (PJRT executable here, bitstream there), queries stream
 //! in, the coordinator batches them to amortize per-launch overhead
-//! (Fig. 11) and can replicate workers (§5.4.3).
+//! (Fig. 11) and replicates worker lanes (§5.4.3). The stage wiring
+//! itself lives in [`super::pipeline`]; both entrypoints share the one
+//! construction path.
 
-use std::path::PathBuf;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender};
-use std::thread;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 
 use crate::graph::dataset::{random_pairs, GraphDb};
-use crate::graph::encode::{encode, PackedBatch};
 use crate::graph::generate::Family;
 use crate::nn::config::ArtifactsMeta;
 use crate::runtime::native::NativeEngine;
 use crate::runtime::pjrt::XlaEngine;
-use crate::runtime::{pick_batch_size, Engine};
+use crate::runtime::{Engine, EngineFactory};
 use crate::sim::config::ArchConfig;
 use crate::sim::engine::SimEngine;
 use crate::sim::platform::U280;
 use crate::util::rng::Rng;
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::BatchPolicy;
+use super::load::{poisson_schedule, Pacer};
 use super::metrics::Metrics;
-use super::query::{Outcome, Query, QueryResult};
-use super::router::Router;
+use super::pipeline::{Pipeline, PipelineConfig};
+use super::query::Query;
 
 /// Serving configuration (CLI `spa-gcn serve`).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub artifacts_dir: PathBuf,
-    /// "xla" | "native" | "sim"
+    /// "xla" | "xla-fused" | "native" | "sim"
     pub engine: String,
     pub queries: usize,
     pub workers: usize,
     pub batch_max: usize,
     pub batch_timeout_us: u64,
     pub seed: u64,
+    /// Encoded-chunk buffer per worker lane: >= 1 overlaps encode with
+    /// engine execution (2 = double buffering), 0 runs them sequentially
+    /// in one thread (the no-overlap baseline).
+    pub pipeline_depth: usize,
 }
 
-fn build_engine(kind: &str, artifacts_dir: &PathBuf) -> Result<Box<dyn Engine>> {
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            engine: "xla".into(),
+            queries: 1000,
+            workers: 1,
+            batch_max: 64,
+            batch_timeout_us: 200,
+            seed: 42,
+            pipeline_depth: 2,
+        }
+    }
+}
+
+impl ServeConfig {
+    fn pipeline_config(&self) -> PipelineConfig {
+        PipelineConfig {
+            workers: self.workers.max(1),
+            policy: BatchPolicy {
+                max_batch: self.batch_max.max(1),
+                timeout: Duration::from_micros(self.batch_timeout_us),
+            },
+            depth: self.pipeline_depth,
+            admit_cap: (self.batch_max * 4).max(64),
+            batch_cap: 8,
+            results_cap: 1024,
+        }
+    }
+}
+
+/// Construct an engine by name. Called inside executor threads (PJRT
+/// handles are not `Send`), so it takes owned-ish borrows only.
+pub fn build_engine(kind: &str, artifacts_dir: &Path) -> Result<Box<dyn Engine>> {
     match kind {
         "xla" => Ok(Box::new(XlaEngine::load(artifacts_dir)?)),
         "xla-fused" => Ok(Box::new(XlaEngine::load_fused(artifacts_dir)?)),
@@ -57,84 +96,16 @@ fn build_engine(kind: &str, artifacts_dir: &PathBuf) -> Result<Box<dyn Engine>> 
     }
 }
 
-/// Worker loop: drain the queue through the batcher into the engine.
-fn worker_loop(
-    rx: Receiver<Query>,
-    results: Sender<QueryResult>,
-    mut engine: Box<dyn Engine>,
-    policy: BatchPolicy,
-    n_max: usize,
-    num_labels: usize,
-) {
-    let mut batcher = Batcher::new(policy);
-    let supported = engine.supported_batch_sizes();
-    let mut execute = |batch: Vec<Query>| {
-        let bsz = pick_batch_size(&supported, batch.len());
-        // Chunk if the batch exceeds the largest artifact.
-        for chunk in batch.chunks(bsz.max(1)) {
-            let encoded: Vec<_> = chunk
-                .iter()
-                .map(|q| {
-                    (
-                        encode(&q.g1, n_max, num_labels).expect("router validated"),
-                        encode(&q.g2, n_max, num_labels).expect("router validated"),
-                    )
-                })
-                .collect();
-            let eff = pick_batch_size(&supported, chunk.len());
-            let packed = PackedBatch::pack(&encoded, eff);
-            match engine.score_batch(&packed) {
-                Ok(scores) => {
-                    for (i, q) in chunk.iter().enumerate() {
-                        let _ = results.send(QueryResult {
-                            id: q.id,
-                            outcome: Outcome::Score(scores[i]),
-                            latency_us: q.submitted.elapsed().as_secs_f64() * 1e6,
-                            batch_size: chunk.len(),
-                        });
-                    }
-                }
-                Err(e) => {
-                    for q in chunk {
-                        let _ = results.send(QueryResult {
-                            id: q.id,
-                            outcome: Outcome::EngineError(e.to_string()),
-                            latency_us: q.submitted.elapsed().as_secs_f64() * 1e6,
-                            batch_size: chunk.len(),
-                        });
-                    }
-                }
-            }
-        }
-    };
-
-    loop {
-        let wait = batcher
-            .time_to_deadline(Instant::now())
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(wait) {
-            Ok(q) => {
-                if let Some(batch) = batcher.push(q, Instant::now()) {
-                    execute(batch);
-                }
-            }
-            Err(RecvTimeoutError::Timeout) => {
-                if let Some(batch) = batcher.poll(Instant::now()) {
-                    execute(batch);
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => {
-                if let Some(batch) = batcher.flush() {
-                    execute(batch);
-                }
-                break;
-            }
-        }
-    }
+/// The `Send` closure executor stages call in-thread to build their
+/// (non-`Send`) engine.
+pub fn engine_factory(kind: String, artifacts_dir: PathBuf) -> EngineFactory {
+    Arc::new(move || build_engine(&kind, &artifacts_dir))
 }
 
-/// Serve a synthetic workload end-to-end and report metrics.
-pub fn serve_workload(cfg: &ServeConfig) -> Result<crate::report::Table> {
+/// Shared serving core: synthesize the workload, run it through one
+/// staged pipeline (closed-loop when `pace_qps` is None, open-loop
+/// Poisson otherwise), return (metrics, wall seconds, max lateness).
+fn run_serve(cfg: &ServeConfig, pace_qps: Option<f64>) -> Result<(Metrics, f64, Duration)> {
     let meta = ArtifactsMeta::load(&cfg.artifacts_dir)
         .context("loading artifacts (run `make artifacts`)")?;
     let model_cfg = meta.config.clone();
@@ -149,56 +120,44 @@ pub fn serve_workload(cfg: &ServeConfig) -> Result<crate::report::Table> {
         model_cfg.num_labels,
     );
     let pairs = random_pairs(&mut rng, &db, cfg.queries);
+    let schedule = pace_qps.map(|rate| poisson_schedule(&mut rng, rate, cfg.queries));
 
-    // Workers.
-    let (result_tx, result_rx) = std::sync::mpsc::channel::<QueryResult>();
-    let mut worker_txs = Vec::new();
-    let mut handles = Vec::new();
-    for _ in 0..cfg.workers.max(1) {
-        let (tx, rx) = sync_channel::<Query>(cfg.batch_max * 4);
-        worker_txs.push(tx);
-        let results = result_tx.clone();
-        let engine_kind = cfg.engine.clone();
-        let dir = cfg.artifacts_dir.clone();
-        let policy = BatchPolicy {
-            max_batch: cfg.batch_max,
-            timeout: Duration::from_micros(cfg.batch_timeout_us),
-        };
-        let (n_max, num_labels) = (model_cfg.n_max, model_cfg.num_labels);
-        handles.push(thread::spawn(move || {
-            // Engines are constructed in-thread (PJRT handles are not Send).
-            let engine = build_engine(&engine_kind, &dir).expect("engine construction");
-            worker_loop(rx, results, engine, policy, n_max, num_labels);
-        }));
-    }
-    drop(result_tx);
+    let pipeline = Pipeline::start(
+        model_cfg,
+        engine_factory(cfg.engine.clone(), cfg.artifacts_dir.clone()),
+        cfg.pipeline_config(),
+    );
 
-    let mut metrics = Metrics::new();
-    let mut router = Router::new(model_cfg, worker_txs);
     let t0 = Instant::now();
-    for q in pairs {
-        if let Some(reject) = router.route(Query::new(q.id, q.g1, q.g2)) {
-            metrics.record(&reject);
+    let mut max_late = Duration::ZERO;
+    match schedule {
+        Some(schedule) => {
+            let pacer = Pacer::new();
+            for (q, at) in pairs.into_iter().zip(schedule) {
+                max_late = max_late.max(pacer.wait_until(at));
+                pipeline.submit(Query::new(q.id, q.g1, q.g2));
+            }
+        }
+        None => {
+            for q in pairs {
+                pipeline.submit(Query::new(q.id, q.g1, q.g2));
+            }
         }
     }
-    // Close worker queues; they flush + exit.
-    router_shutdown(router);
-    for r in result_rx {
-        metrics.record(&r);
-    }
-    for h in handles {
-        let _ = h.join();
-    }
-    let wall = t0.elapsed().as_secs_f64();
+    let metrics = pipeline.finish();
+    Ok((metrics, t0.elapsed().as_secs_f64(), max_late))
+}
 
+/// Closed-loop serving: flood the pipeline with a synthetic workload and
+/// report peak throughput (queueing delay inflates latency).
+pub fn serve_workload(cfg: &ServeConfig) -> Result<crate::report::Table> {
+    let (metrics, wall, _) = run_serve(cfg, None)?;
     let mut t = metrics.render_table(&format!(
-        "serve: engine={} workers={} batch_max={} timeout={}us queries={}",
-        cfg.engine, cfg.workers, cfg.batch_max, cfg.batch_timeout_us, cfg.queries
+        "serve: engine={} workers={} batch_max={} timeout={}us depth={} queries={}",
+        cfg.engine, cfg.workers, cfg.batch_max, cfg.batch_timeout_us, cfg.pipeline_depth,
+        cfg.queries
     ));
-    t.row(vec![
-        "wall time (s)".into(),
-        crate::report::fmt(wall),
-    ]);
+    t.row(vec!["wall time (s)".into(), crate::report::fmt(wall)]);
     t.row(vec![
         "offered throughput (query/s)".into(),
         crate::report::fmt(metrics.scored as f64 / wall),
@@ -206,71 +165,14 @@ pub fn serve_workload(cfg: &ServeConfig) -> Result<crate::report::Table> {
     Ok(t)
 }
 
-fn router_shutdown(router: Router) {
-    drop(router); // drops worker senders -> workers drain + exit
-}
-
 /// Open-loop serving: Poisson arrivals at `rate_qps` (the
 /// latency-under-load methodology; closed-loop `serve_workload` measures
 /// peak throughput but conflates queueing delay into latency).
 pub fn serve_paced(cfg: &ServeConfig, rate_qps: f64) -> Result<crate::report::Table> {
-    use super::load::{poisson_schedule, Pacer};
-
-    let meta = ArtifactsMeta::load(&cfg.artifacts_dir)
-        .context("loading artifacts (run `make artifacts`)")?;
-    let model_cfg = meta.config.clone();
-    let mut rng = Rng::new(cfg.seed);
-    let db = GraphDb::synthesize(
-        &mut rng,
-        Family::Aids,
-        512,
-        model_cfg.n_max,
-        model_cfg.num_labels,
-    );
-    let pairs = random_pairs(&mut rng, &db, cfg.queries);
-    let schedule = poisson_schedule(&mut rng, rate_qps, cfg.queries);
-
-    let (result_tx, result_rx) = std::sync::mpsc::channel::<QueryResult>();
-    let mut worker_txs = Vec::new();
-    let mut handles = Vec::new();
-    for _ in 0..cfg.workers.max(1) {
-        let (tx, rx) = sync_channel::<Query>(cfg.batch_max * 16);
-        worker_txs.push(tx);
-        let results = result_tx.clone();
-        let engine_kind = cfg.engine.clone();
-        let dir = cfg.artifacts_dir.clone();
-        let policy = BatchPolicy {
-            max_batch: cfg.batch_max,
-            timeout: Duration::from_micros(cfg.batch_timeout_us),
-        };
-        let (n_max, num_labels) = (model_cfg.n_max, model_cfg.num_labels);
-        handles.push(thread::spawn(move || {
-            let engine = build_engine(&engine_kind, &dir).expect("engine construction");
-            worker_loop(rx, results, engine, policy, n_max, num_labels);
-        }));
-    }
-    drop(result_tx);
-
-    let mut metrics = Metrics::new();
-    let mut router = Router::new(model_cfg, worker_txs);
-    let pacer = Pacer::new();
-    let mut max_late = Duration::ZERO;
-    for (q, at) in pairs.into_iter().zip(schedule) {
-        max_late = max_late.max(pacer.wait_until(at));
-        if let Some(reject) = router.route(Query::new(q.id, q.g1, q.g2)) {
-            metrics.record(&reject);
-        }
-    }
-    router_shutdown(router);
-    for r in result_rx {
-        metrics.record(&r);
-    }
-    for h in handles {
-        let _ = h.join();
-    }
+    let (metrics, _wall, max_late) = run_serve(cfg, Some(rate_qps))?;
     let mut t = metrics.render_table(&format!(
-        "serve-paced: engine={} rate={:.0} q/s workers={} batch_max={} queries={}",
-        cfg.engine, rate_qps, cfg.workers, cfg.batch_max, cfg.queries
+        "serve-paced: engine={} rate={:.0} q/s workers={} batch_max={} depth={} queries={}",
+        cfg.engine, rate_qps, cfg.workers, cfg.batch_max, cfg.pipeline_depth, cfg.queries
     ));
     t.row(vec![
         "max submit lateness (ms)".into(),
@@ -305,10 +207,19 @@ mod tests {
             batch_max: 8,
             batch_timeout_us: 100,
             seed: 5,
+            ..ServeConfig::default()
         };
         let t = serve_workload(&cfg).unwrap();
         let scored: f64 = t.rows[0][1].parse().unwrap();
         assert_eq!(scored, 40.0, "{}", t.render());
+        // Per-stage breakdown and channel stats present in the report.
+        assert!(t.get("queue wait mean (ms)").is_some(), "{}", t.render());
+        assert!(t.get("execute p95 (ms)").is_some(), "{}", t.render());
+        assert!(
+            t.rows.iter().any(|r| r[0].starts_with("chan exec.0")),
+            "{}",
+            t.render()
+        );
     }
 
     #[test]
@@ -322,10 +233,29 @@ mod tests {
             batch_max: 4,
             batch_timeout_us: 100,
             seed: 6,
+            ..ServeConfig::default()
         };
         let t = serve_workload(&cfg).unwrap();
         let scored: f64 = t.rows[0][1].parse().unwrap();
         assert_eq!(scored, 10.0, "{}", t.render());
+    }
+
+    #[test]
+    fn serve_sequential_baseline_depth_zero() {
+        let Some(dir) = artifacts() else { return };
+        let cfg = ServeConfig {
+            artifacts_dir: dir,
+            engine: "native".into(),
+            queries: 20,
+            workers: 1,
+            batch_max: 8,
+            batch_timeout_us: 100,
+            seed: 7,
+            pipeline_depth: 0,
+        };
+        let t = serve_workload(&cfg).unwrap();
+        let scored: f64 = t.rows[0][1].parse().unwrap();
+        assert_eq!(scored, 20.0, "{}", t.render());
     }
 
     #[test]
@@ -339,6 +269,7 @@ mod tests {
             batch_max: 8,
             batch_timeout_us: 300,
             seed: 8,
+            ..ServeConfig::default()
         };
         let t = serve_paced(&cfg, 100.0).unwrap();
         let scored: f64 = t.rows[0][1].parse().unwrap();
@@ -361,11 +292,15 @@ mod tests {
             batch_max: 1,
             batch_timeout_us: 1,
             seed: 0,
+            ..ServeConfig::default()
         };
-        // Worker thread panics on engine construction; results channel
-        // closes; all queries unaccounted -> scored == 0.
+        // Engine construction fails inside the executor stage; the lane
+        // downgrades to an error drain and every query surfaces as a
+        // per-query EngineError (no panic, no silently closed channel).
         let t = serve_workload(&cfg).unwrap();
         let scored: f64 = t.rows[0][1].parse().unwrap();
+        let errors: f64 = t.rows[2][1].parse().unwrap();
         assert_eq!(scored, 0.0, "{}", t.render());
+        assert_eq!(errors, 1.0, "{}", t.render());
     }
 }

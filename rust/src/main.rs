@@ -13,7 +13,7 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use spa_gcn::coordinator::server::{serve_workload, ServeConfig};
+use spa_gcn::coordinator::server::{serve_paced, serve_workload, ServeConfig};
 use spa_gcn::ged::{exact_ged, ged_similarity};
 use spa_gcn::graph::dataset::GraphDb;
 use spa_gcn::graph::generate::{generate, Family};
@@ -68,7 +68,9 @@ fn usage() -> ! {
          \n  report <table3|table4|table5|table6|fig10|fig11|replication|sparsity|accuracy|energy|fifo|crosscheck|all>\n\
          \t[--queries N] [--no-pjrt] [--artifacts DIR] [--json OUT.json]\n\
          \n  serve [--queries N] [--engine xla|native|sim] [--workers K] [--batch-max B]\n\
-         \t[--batch-timeout-us T] [--artifacts DIR]\n\
+         \t[--batch-timeout-us T] [--pipeline-depth D] [--rate QPS] [--artifacts DIR]\n\
+         \t(--pipeline-depth 0 = sequential encode+execute baseline;\n\
+         \t --rate runs open-loop Poisson pacing instead of closed-loop flood)\n\
          \n  gen [--family aids|linux|imdb] [--count N]\n\
          \n  ged [--nodes N] [--pairs P]"
     );
@@ -148,8 +150,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         batch_max: args.usize("batch-max", 64),
         batch_timeout_us: args.usize("batch-timeout-us", 200) as u64,
         seed: args.usize("seed", 42) as u64,
+        pipeline_depth: args.usize("pipeline-depth", 2),
     };
-    let report = serve_workload(&cfg)?;
+    let report = match args.flags.get("rate") {
+        Some(rate) => {
+            let rate: f64 = rate
+                .parse()
+                .ok()
+                .filter(|r| *r > 0.0)
+                .ok_or_else(|| anyhow::anyhow!("--rate must be a positive number (queries/s)"))?;
+            serve_paced(&cfg, rate)?
+        }
+        None => serve_workload(&cfg)?,
+    };
     println!("{}", report.render());
     Ok(())
 }

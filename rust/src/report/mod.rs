@@ -36,6 +36,17 @@ impl Table {
         self.notes.push(s.to_string());
     }
 
+    /// Value cell of the first row whose label (first column) matches —
+    /// lets callers read metric tables by name instead of brittle row
+    /// indices.
+    pub fn get(&self, label: &str) -> Option<&str> {
+        self.rows
+            .iter()
+            .find(|r| r.first().is_some_and(|c| c == label))
+            .and_then(|r| r.get(1))
+            .map(String::as_str)
+    }
+
     /// Render as aligned monospace text.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
@@ -124,6 +135,15 @@ mod tests {
     fn rejects_bad_rows() {
         let mut t = Table::new("demo", &["a"]);
         t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn get_by_label() {
+        let mut t = Table::new("demo", &["Metric", "Value"]);
+        t.row(vec!["throughput".into(), "123".into()]);
+        t.row(vec!["p50".into(), "4.5".into()]);
+        assert_eq!(t.get("p50"), Some("4.5"));
+        assert_eq!(t.get("missing"), None);
     }
 
     #[test]
