@@ -8,19 +8,25 @@
 //!     cargo bench --bench e2e_serving
 
 use spa_gcn::coordinator::server::{serve_workload, ServeConfig};
+use spa_gcn::runtime::EngineKind;
 use spa_gcn::util::bench::time_once;
 
 /// Run one serve config and print the headline numbers plus the
 /// per-stage latency split; returns the offered throughput (query/s).
 fn run(
-    engine: &str,
+    engines: &[EngineKind],
     queries: usize,
     workers: usize,
     batch_max: usize,
     depth: usize,
 ) -> anyhow::Result<f64> {
+    let label_engines = engines
+        .iter()
+        .map(EngineKind::as_str)
+        .collect::<Vec<_>>()
+        .join(",");
     let cfg = ServeConfig {
-        engine: engine.into(),
+        engines: engines.to_vec(),
         queries,
         workers,
         batch_max,
@@ -29,7 +35,7 @@ fn run(
         pipeline_depth: depth,
         ..ServeConfig::default()
     };
-    let label = format!("serve {engine} q={queries} w={workers} b={batch_max} d={depth}");
+    let label = format!("serve {label_engines} q={queries} w={workers} b={batch_max} d={depth}");
     let (t, _) = time_once(&label, || serve_workload(&cfg).unwrap());
     let g = |k: &str| t.get(k).unwrap_or("-").to_string();
     println!(
@@ -54,23 +60,26 @@ fn run(
 
 fn main() -> anyhow::Result<()> {
     println!("== engine comparison (measured on this machine) ==");
-    for engine in ["native", "xla", "xla-fused"] {
-        run(engine, 2000, 1, 64, 2)?;
+    for kind in [EngineKind::Native, EngineKind::Xla, EngineKind::XlaFused] {
+        run(&[kind], 2000, 1, 64, 2)?;
     }
 
     println!("== batching sweep on the PJRT engine (real Fig. 11) ==");
     for b in [1usize, 4, 16, 64] {
-        run("xla", 1000, 1, b, 2)?;
+        run(&[EngineKind::Xla], 1000, 1, b, 2)?;
     }
 
     println!("== worker scaling (native engine; 2-core machine) ==");
     for w in [1usize, 2] {
-        run("native", 2000, w, 64, 2)?;
+        run(&[EngineKind::Native], 2000, w, 64, 2)?;
     }
 
+    println!("== heterogeneous lanes: native + sim in one pipeline ==");
+    run(&[EngineKind::Native, EngineKind::Sim], 1000, 2, 64, 2)?;
+
     println!("== encode/execute overlap: pipelined vs fused-sequential ==");
-    let sequential = run("native", 2000, 1, 64, 0)?;
-    let pipelined = run("native", 2000, 1, 64, 2)?;
+    let sequential = run(&[EngineKind::Native], 2000, 1, 64, 0)?;
+    let pipelined = run(&[EngineKind::Native], 2000, 1, 64, 2)?;
     println!(
         "overlap speedup: {:.2}x (pipelined {pipelined:.0} q/s vs sequential {sequential:.0} q/s)",
         if sequential > 0.0 {

@@ -17,9 +17,9 @@ fn main() -> anyhow::Result<()> {
     // 1. Load the compiled SimGNN (HLO text -> PJRT executable).
     let mut engine = XlaEngine::load(&artifacts)?;
     println!(
-        "loaded SimGNN artifacts on platform '{}' (batch sizes {:?})",
+        "loaded SimGNN artifacts on platform '{}' (batch ladder {:?})",
         engine.platform(),
-        engine.supported_batch_sizes()
+        engine.caps().batch_ladder()
     );
     let cfg = engine.meta().config.clone();
 
@@ -39,8 +39,15 @@ fn main() -> anyhow::Result<()> {
     let e1 = encode(&g1, cfg.n_max, cfg.num_labels)?;
     let e2 = encode(&g2, cfg.n_max, cfg.num_labels)?;
     let batch = PackedBatch::pack(&[(e1.clone(), e2.clone())], 1);
-    let scores = engine.score_batch(&batch)?;
+    let out = engine.score_batch(&batch)?;
+    let scores = out.scores;
     println!("PJRT similarity score: {:.6}", scores[0]);
+    if let Some(exec) = out.telemetry[0].exec {
+        println!(
+            "execute telemetry: upload {:.0} µs, device {:.0} µs, download {:.0} µs",
+            exec.upload_us, exec.execute_us, exec.download_us
+        );
+    }
 
     // 4. Cross-check with the independent rust reference numerics.
     let weights = Weights::load(&cfg, &artifacts)?;
@@ -54,7 +61,7 @@ fn main() -> anyhow::Result<()> {
 
     // 5. An identical pair should score strictly higher than the edited one.
     let same = PackedBatch::pack(&[(e1.clone(), e1.clone())], 1);
-    let same_score = engine.score_batch(&same)?[0];
+    let same_score = engine.score_batch(&same)?.scores[0];
     println!("identical-pair score:    {same_score:.6}");
     println!(
         "ranking check: identical {} edited pair",

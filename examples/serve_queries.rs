@@ -11,12 +11,15 @@
 //!     make artifacts && cargo run --release --example serve_queries
 //!
 //! Flags: --queries N (default 10000, the paper's §5.1 query count),
-//!        --engine xla|native|sim, --batch-max B, --workers K,
+//!        --engine KINDS (comma-separated EngineKind names, e.g.
+//!        xla | native | sim | native,sim for heterogeneous lanes),
+//!        --batch-max B, --workers K,
 //!        --pipeline-depth D (0 = sequential encode+execute baseline).
 
 use std::collections::HashMap;
 
 use spa_gcn::coordinator::server::{serve_workload, ServeConfig};
+use spa_gcn::runtime::EngineKind;
 
 fn main() -> anyhow::Result<()> {
     let mut flags: HashMap<String, String> = HashMap::new();
@@ -30,13 +33,14 @@ fn main() -> anyhow::Result<()> {
         flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
     };
 
-    let engine = flags.get("engine").cloned().unwrap_or_else(|| "xla".into());
+    let spec = flags.get("engine").cloned().unwrap_or_else(|| "xla".into());
+    let engines = EngineKind::parse_list(&spec)?;
     let queries = get("queries", 10_000);
     // Batch sweep first (the Fig. 11 experiment on the real runtime) ...
-    println!("== batching sweep on the real {engine} runtime ==");
+    println!("== batching sweep on the real {spec} runtime ==");
     for batch_max in [1usize, 4, 16, 64] {
         let cfg = ServeConfig {
-            engine: engine.clone(),
+            engines: engines.clone(),
             queries: (queries / 8).max(64),
             workers: 1,
             batch_max,
@@ -60,7 +64,7 @@ fn main() -> anyhow::Result<()> {
 
     // ... then the full serving run through the staged pipeline.
     let cfg = ServeConfig {
-        engine,
+        engines,
         queries,
         workers: get("workers", 1),
         batch_max: get("batch-max", 64),

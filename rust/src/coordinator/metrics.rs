@@ -1,21 +1,38 @@
 //! Serving metrics: latency distribution, per-stage latency split
 //! (queue-wait / encode / execute), batch-size histogram, channel-depth
-//! statistics, throughput and rejection counters.
+//! statistics, throughput and rejection counters, and the per-engine
+//! telemetry the engines report through `BatchOutput` — simulator cycle
+//! counts, device DMA/execute splits, per-slot CPU time.
 //!
 //! The stage split is the host-side analogue of the per-FIFO occupancy
 //! counters accelerator papers use to find pipeline stalls: queue-wait
 //! dominating means admission/batching is the bottleneck, encode
 //! dominating means the host can't feed the engine, execute dominating
-//! means the engine itself is saturated.
+//! means the engine itself is saturated. The cycle rows recover the
+//! paper's Table 4/5-style numbers from exactly the workload the
+//! serving path saw.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::util::stats::Samples;
 
 use super::channel::ChannelSnapshot;
 
+/// One worker lane's identity in the final report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneInfo {
+    /// Lane label (`"lane.0"`, ...).
+    pub lane: String,
+    /// Engine name from its caps, or the construction error when the
+    /// lane never got a working engine.
+    pub engine: String,
+}
+
+/// Aggregated serving statistics, owned by the responder stage.
 #[derive(Debug)]
 pub struct Metrics {
+    /// End-to-end latency per scored query, µs.
     pub latency_us: Samples,
     /// Submit -> encode-start (admission + batcher + queueing), µs.
     pub queue_us: Samples,
@@ -23,13 +40,35 @@ pub struct Metrics {
     pub encode_us: Samples,
     /// Engine execution time of that chunk, µs.
     pub execute_us: Samples,
+    /// Executed batch size per scored query.
     pub batch_sizes: Samples,
+    /// Simulator steady-state interval cycles per query (engines with
+    /// `reports_cycles`).
+    pub cycle_interval: Samples,
+    /// Simulator one-query latency cycles per query.
+    pub cycle_latency: Samples,
+    /// Device input-upload ("DMA write") time per chunk-slot, µs
+    /// (engines with `reports_exec_timing`).
+    pub dma_upload_us: Samples,
+    /// Device execute time per chunk-slot, µs.
+    pub device_execute_us: Samples,
+    /// Device output-download ("DMA read") time per chunk-slot, µs.
+    pub dma_download_us: Samples,
+    /// Per-slot CPU scoring time, µs (native engine).
+    pub engine_cpu_us: Samples,
+    /// Scored-query count per engine name.
+    pub by_engine: BTreeMap<String, u64>,
+    /// Successfully scored queries.
     pub scored: u64,
+    /// Queries rejected at admission (or during shutdown).
     pub rejected: u64,
+    /// Queries answered with an engine error.
     pub engine_errors: u64,
     /// Per-channel occupancy statistics, filled in by the pipeline at
     /// shutdown (empty when serving didn't run through a pipeline).
     pub channels: Vec<ChannelSnapshot>,
+    /// Lane -> engine mapping, filled in by the pipeline at shutdown.
+    pub lanes: Vec<LaneInfo>,
     started: Instant,
 }
 
@@ -40,6 +79,7 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Empty metrics, clock started now.
     pub fn new() -> Self {
         Metrics {
             latency_us: Samples::new(),
@@ -47,14 +87,23 @@ impl Metrics {
             encode_us: Samples::new(),
             execute_us: Samples::new(),
             batch_sizes: Samples::new(),
+            cycle_interval: Samples::new(),
+            cycle_latency: Samples::new(),
+            dma_upload_us: Samples::new(),
+            device_execute_us: Samples::new(),
+            dma_download_us: Samples::new(),
+            engine_cpu_us: Samples::new(),
+            by_engine: BTreeMap::new(),
             scored: 0,
             rejected: 0,
             engine_errors: 0,
             channels: Vec::new(),
+            lanes: Vec::new(),
             started: Instant::now(),
         }
     }
 
+    /// Absorb one query result (counters, latency split, telemetry).
     pub fn record(&mut self, r: &super::query::QueryResult) {
         match &r.outcome {
             super::query::Outcome::Score(_) => {
@@ -64,12 +113,35 @@ impl Metrics {
                 self.encode_us.push(r.stage.encode_us);
                 self.execute_us.push(r.stage.execute_us);
                 self.batch_sizes.push(r.batch_size as f64);
+                if let Some(engine) = &r.engine {
+                    // get_mut first: no per-query String allocation once
+                    // the engine's entry exists.
+                    match self.by_engine.get_mut(engine.as_ref()) {
+                        Some(count) => *count += 1,
+                        None => {
+                            self.by_engine.insert(engine.to_string(), 1);
+                        }
+                    }
+                }
+                if let Some(c) = &r.telemetry.cycles {
+                    self.cycle_interval.push(c.interval as f64);
+                    self.cycle_latency.push(c.latency as f64);
+                }
+                if let Some(e) = &r.telemetry.exec {
+                    self.dma_upload_us.push(e.upload_us);
+                    self.device_execute_us.push(e.execute_us);
+                    self.dma_download_us.push(e.download_us);
+                }
+                if let Some(cpu) = r.telemetry.cpu_us {
+                    self.engine_cpu_us.push(cpu);
+                }
             }
             super::query::Outcome::Rejected(_) => self.rejected += 1,
             super::query::Outcome::EngineError(_) => self.engine_errors += 1,
         }
     }
 
+    /// Scored queries per wall-clock second since construction.
     pub fn throughput_qps(&self) -> f64 {
         let secs = self.started.elapsed().as_secs_f64();
         if secs == 0.0 {
@@ -82,7 +154,9 @@ impl Metrics {
     /// Render as a report table.
     ///
     /// Row order is stable API for the first nine rows (benches, examples
-    /// and tests index them); new rows are only ever appended.
+    /// and tests index them); new rows are only ever appended. Telemetry
+    /// rows (per-engine counts, cycle and DMA aggregates) appear only
+    /// when an engine actually reported them; channel rows come last.
     pub fn render_table(&self, title: &str) -> crate::report::Table {
         use crate::report::{fmt, Table};
         let mut t = Table::new(title, &["Metric", "Value"]);
@@ -125,6 +199,48 @@ impl Metrics {
                 fmt(s.percentile(95.0) / 1000.0),
             ]);
         }
+        // Lane identity + per-engine traffic (mixed-kind deployments).
+        for lane in &self.lanes {
+            t.row(vec![format!("{} engine", lane.lane), lane.engine.clone()]);
+        }
+        for (engine, count) in &self.by_engine {
+            t.row(vec![format!("engine {engine} scored"), format!("{count}")]);
+        }
+        // Accelerator telemetry the engines reported through BatchOutput.
+        if !self.cycle_interval.is_empty() {
+            t.row(vec![
+                "sim interval cycles mean".into(),
+                fmt(self.cycle_interval.mean()),
+            ]);
+            t.row(vec![
+                "sim interval cycles p95".into(),
+                fmt(self.cycle_interval.percentile(95.0)),
+            ]);
+            t.row(vec![
+                "sim latency cycles mean".into(),
+                fmt(self.cycle_latency.mean()),
+            ]);
+        }
+        if !self.device_execute_us.is_empty() {
+            t.row(vec![
+                "dma upload mean (ms)".into(),
+                fmt(self.dma_upload_us.mean() / 1000.0),
+            ]);
+            t.row(vec![
+                "device execute mean (ms)".into(),
+                fmt(self.device_execute_us.mean() / 1000.0),
+            ]);
+            t.row(vec![
+                "dma download mean (ms)".into(),
+                fmt(self.dma_download_us.mean() / 1000.0),
+            ]);
+        }
+        if !self.engine_cpu_us.is_empty() {
+            t.row(vec![
+                "engine cpu mean (ms)".into(),
+                fmt(self.engine_cpu_us.mean() / 1000.0),
+            ]);
+        }
         // Channel occupancy: peak depth >= 2 on an exec lane means the
         // encoder genuinely ran ahead of the executor (overlap) — a peak
         // of 1 is just a single hand-off in flight.
@@ -143,6 +259,10 @@ impl Metrics {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
+    use crate::runtime::{CycleReport, EngineError, ExecTiming, QueryTelemetry};
+
     use super::super::query::{Outcome, QueryResult, StageTiming};
     use super::*;
 
@@ -157,6 +277,8 @@ mod tests {
                 encode_us: 10.0,
                 execute_us: 25.0,
             },
+            telemetry: QueryTelemetry::default(),
+            engine: None,
         }
     }
 
@@ -167,7 +289,9 @@ mod tests {
         m.record(&res(Outcome::Rejected(
             super::super::query::RejectReason::ShuttingDown,
         )));
-        m.record(&res(Outcome::EngineError("x".into())));
+        m.record(&res(Outcome::EngineError(EngineError::Unavailable {
+            reason: "x".into(),
+        })));
         assert_eq!(m.scored, 1);
         assert_eq!(m.rejected, 1);
         assert_eq!(m.engine_errors, 1);
@@ -180,9 +304,58 @@ mod tests {
     }
 
     #[test]
+    fn telemetry_accumulates_per_engine() {
+        let mut m = Metrics::new();
+        let mut sim = res(Outcome::Score(0.5)).with_engine(Arc::from("spa-gcn-sim"));
+        sim.telemetry.cycles = Some(CycleReport {
+            interval: 1000,
+            latency: 1500,
+        });
+        m.record(&sim);
+        let mut xla = res(Outcome::Score(0.6)).with_engine(Arc::from("xla-pjrt"));
+        xla.telemetry.exec = Some(ExecTiming {
+            upload_us: 10.0,
+            execute_us: 90.0,
+            download_us: 5.0,
+        });
+        m.record(&xla);
+        let mut native = res(Outcome::Score(0.7)).with_engine(Arc::from("native-cpu"));
+        native.telemetry.cpu_us = Some(42.0);
+        m.record(&native);
+
+        assert_eq!(m.by_engine["spa-gcn-sim"], 1);
+        assert_eq!(m.by_engine["xla-pjrt"], 1);
+        assert_eq!(m.by_engine["native-cpu"], 1);
+        assert_eq!(m.cycle_interval.mean(), 1000.0);
+        assert_eq!(m.cycle_latency.mean(), 1500.0);
+        assert_eq!(m.device_execute_us.mean(), 90.0);
+        assert_eq!(m.engine_cpu_us.mean(), 42.0);
+
+        let rendered = m.render_table("t").render();
+        assert!(rendered.contains("engine spa-gcn-sim scored"));
+        assert!(rendered.contains("sim interval cycles mean"));
+        assert!(rendered.contains("device execute mean (ms)"));
+        assert!(rendered.contains("engine cpu mean (ms)"));
+    }
+
+    #[test]
+    fn telemetry_rows_absent_without_telemetry() {
+        let mut m = Metrics::new();
+        m.record(&res(Outcome::Score(0.5)));
+        let rendered = m.render_table("t").render();
+        assert!(!rendered.contains("sim interval cycles"));
+        assert!(!rendered.contains("dma upload"));
+        assert!(!rendered.contains("engine cpu"));
+    }
+
+    #[test]
     fn table_renders_with_stage_and_channel_rows() {
         let mut m = Metrics::new();
         m.record(&res(Outcome::Score(0.9)));
+        m.lanes.push(LaneInfo {
+            lane: "lane.0".into(),
+            engine: "native-cpu".into(),
+        });
         m.channels.push(ChannelSnapshot {
             name: "exec.0".into(),
             capacity: 2,
@@ -195,6 +368,7 @@ mod tests {
         assert!(rendered.contains("queries scored"));
         assert!(rendered.contains("queue wait mean (ms)"));
         assert!(rendered.contains("execute p95 (ms)"));
+        assert!(rendered.contains("lane.0 engine"));
         assert!(rendered.contains("chan exec.0 (cap 2)"));
         // The first nine rows are a stable indexing API.
         assert_eq!(t.rows[0][0], "queries scored");

@@ -16,6 +16,16 @@
 //!                                                       [responder] → Metrics
 //! ```
 //!
+//! Each lane owns one engine, built in-thread from its own
+//! [`EngineFactory`] — lanes may run *different* engine kinds (e.g.
+//! `native` next to `sim`). Once built, the executor publishes the
+//! engine's [`EngineCaps`] through the lane's
+//! [`LaneCaps`](super::router::LaneCaps) cell: the encoder picks the
+//! batch ladder from it, the batcher's [`CapsRouter`] steers traffic
+//! away from lanes whose construction failed, and the final metrics
+//! name each lane's engine. Engine telemetry (cycle reports, DMA
+//! splits, per-slot CPU time) rides each result into the responder.
+//!
 //! Because the encoder and executor are separate threads joined by a
 //! bounded `exec` channel (capacity = `depth`, default 2), batch *k+1*
 //! encodes while batch *k* is inside the engine — the paper's
@@ -36,17 +46,18 @@ use std::time::{Duration, Instant};
 
 use crate::graph::encode::{encode, PackedBatch};
 use crate::nn::config::ModelConfig;
-use crate::runtime::{pick_batch_size, Engine, EngineFactory};
+use crate::runtime::{Engine, EngineCaps, EngineError, EngineFactory};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::channel::{channel, ChannelStats, NamedReceiver, NamedSender, SendPolicy, SendResult};
-use super::metrics::Metrics;
+use super::metrics::{LaneInfo, Metrics};
 use super::query::{Outcome, Query, QueryResult, RejectReason, StageTiming};
-use super::router::{Admission, RoundRobin};
+use super::router::{Admission, CapsRouter, LaneCaps};
 
 /// A batch released by the batcher stage, bound for one worker lane.
 #[derive(Debug)]
 pub struct Batch {
+    /// The queries riding in this batch, submission order.
     pub queries: Vec<Query>,
 }
 
@@ -61,11 +72,11 @@ struct EncodedChunk {
 }
 
 /// Pipeline shape knobs. `ServeConfig` derives one of these; tests build
-/// them directly.
+/// them directly. The lane count is the length of the factory vector
+/// handed to [`Pipeline::start`].
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
-    /// Worker lanes (each lane = encoder + executor pair).
-    pub workers: usize,
+    /// Batch release policy (size-or-deadline).
     pub policy: BatchPolicy,
     /// Encoded-chunk buffer per lane. >= 1 runs encode and execute as
     /// separate overlapped stages (2 = classic double-buffering);
@@ -82,7 +93,6 @@ pub struct PipelineConfig {
 impl Default for PipelineConfig {
     fn default() -> Self {
         PipelineConfig {
-            workers: 1,
             policy: BatchPolicy::default(),
             depth: 2,
             admit_cap: 256,
@@ -99,15 +109,22 @@ pub struct Pipeline {
     submit_tx: NamedSender<Query>,
     stages: Vec<JoinHandle<()>>,
     responder: JoinHandle<Metrics>,
+    lane_caps: Vec<Arc<LaneCaps>>,
 }
 
 impl Pipeline {
-    /// Spawn every stage. Engines are constructed inside the executor
-    /// threads via `factory` (PJRT handles are not `Send`); a
-    /// construction failure downgrades the lane to an error-reporting
-    /// drain instead of panicking the pipeline.
-    pub fn start(model: ModelConfig, factory: EngineFactory, cfg: PipelineConfig) -> Pipeline {
-        let workers = cfg.workers.max(1);
+    /// Spawn every stage, one worker lane per factory in `factories`
+    /// (lanes may construct different engine kinds). Engines are built
+    /// inside the executor threads (PJRT handles are not `Send`); a
+    /// construction failure downgrades that lane to an error-reporting
+    /// drain and the caps-aware router steers traffic to the surviving
+    /// lanes.
+    pub fn start(
+        model: ModelConfig,
+        factories: Vec<EngineFactory>,
+        cfg: PipelineConfig,
+    ) -> Pipeline {
+        assert!(!factories.is_empty(), "pipeline needs at least one engine lane");
         let (admit_tx, admit_rx) = channel("admit", cfg.admit_cap, SendPolicy::Block);
         let (ingest_tx, ingest_rx) = channel("ingest", cfg.admit_cap, SendPolicy::Block);
         let (results_tx, results_rx) = channel("results", cfg.results_cap, SendPolicy::Block);
@@ -125,41 +142,40 @@ impl Pipeline {
         }
 
         // Stages 3+4 per lane: encoder -> executor (or fused when depth=0).
-        let mut batch_txs = Vec::new();
-        for w in 0..workers {
+        let mut lanes = Vec::new();
+        let mut lane_caps = Vec::new();
+        for (w, lane_factory) in factories.into_iter().enumerate() {
             let (batch_tx, batch_rx) =
                 channel(&format!("batch.{w}"), cfg.batch_cap, SendPolicy::Block);
             stats.push(batch_tx.stats());
-            batch_txs.push(batch_tx);
+            let caps_cell = LaneCaps::new();
+            lanes.push((batch_tx, Arc::clone(&caps_cell)));
+            lane_caps.push(Arc::clone(&caps_cell));
             let results = results_tx.clone();
-            let lane_factory = factory.clone();
             let (n_max, num_labels) = (model.n_max, model.num_labels);
             if cfg.depth == 0 {
                 stages.push(spawn(&format!("encode+execute.{w}"), move || {
-                    fused_stage(lane_factory, batch_rx, results, n_max, num_labels)
+                    fused_stage(lane_factory, batch_rx, results, caps_cell, n_max, num_labels)
                 }));
             } else {
                 let (exec_tx, exec_rx) =
                     channel(&format!("exec.{w}"), cfg.depth, SendPolicy::Block);
                 stats.push(exec_tx.stats());
-                // Startup handshake: the executor reports its engine's
-                // supported batch ladder (or the construction error).
-                let (sizes_tx, sizes_rx) =
-                    std::sync::mpsc::sync_channel::<Result<Vec<usize>, String>>(1);
                 let enc_results = results_tx.clone();
+                let enc_caps = Arc::clone(&caps_cell);
                 stages.push(spawn(&format!("encode.{w}"), move || {
-                    encoder_stage(batch_rx, exec_tx, enc_results, sizes_rx, n_max, num_labels)
+                    encoder_stage(batch_rx, exec_tx, enc_results, enc_caps, n_max, num_labels)
                 }));
                 stages.push(spawn(&format!("execute.{w}"), move || {
-                    executor_stage(lane_factory, exec_rx, results, sizes_tx)
+                    executor_stage(lane_factory, exec_rx, results, caps_cell)
                 }));
             }
         }
 
-        // Stage 2: batcher (size-or-deadline, fan-out across lanes).
+        // Stage 2: batcher (size-or-deadline, caps-aware fan-out).
         {
             let batcher = Batcher::new(cfg.policy);
-            let fan_out = RoundRobin::new(batch_txs);
+            let fan_out = CapsRouter::new(lanes);
             let results = results_tx.clone();
             stages.push(spawn("batcher", move || {
                 batcher_stage(batcher, ingest_rx, fan_out, results)
@@ -174,6 +190,7 @@ impl Pipeline {
             submit_tx: admit_tx,
             stages,
             responder,
+            lane_caps,
         }
     }
 
@@ -185,18 +202,33 @@ impl Pipeline {
 
     /// Ordered shutdown: drop the submit sender (starting the cascade),
     /// join every stage front-to-back, and collect the final metrics
-    /// (including channel-depth snapshots) from the responder.
+    /// (channel-depth snapshots + per-lane engine names) from the
+    /// responder.
     pub fn finish(self) -> Metrics {
         let Pipeline {
             submit_tx,
             stages,
             responder,
+            lane_caps,
         } = self;
         drop(submit_tx);
         for h in stages {
             let _ = h.join();
         }
-        responder.join().expect("responder stage panicked")
+        let mut metrics = responder.join().expect("responder stage panicked");
+        metrics.lanes = lane_caps
+            .iter()
+            .enumerate()
+            .map(|(w, caps)| LaneInfo {
+                lane: format!("lane.{w}"),
+                engine: match caps.get() {
+                    Some(Ok(caps)) => caps.name,
+                    Some(Err(err)) => format!("unavailable ({err})"),
+                    None => "never constructed".into(),
+                },
+            })
+            .collect();
+        metrics
     }
 }
 
@@ -234,7 +266,7 @@ fn admission_stage(
 fn batcher_stage(
     mut batcher: Batcher,
     rx: NamedReceiver<Query>,
-    mut fan_out: RoundRobin<Batch>,
+    mut fan_out: CapsRouter<Batch>,
     results: NamedSender<QueryResult>,
 ) {
     loop {
@@ -274,7 +306,11 @@ fn batcher_stage(
     }
 }
 
-fn dispatch(fan_out: &mut RoundRobin<Batch>, queries: Vec<Query>, results: &NamedSender<QueryResult>) {
+fn dispatch(
+    fan_out: &mut CapsRouter<Batch>,
+    queries: Vec<Query>,
+    results: &NamedSender<QueryResult>,
+) {
     if let SendResult::Disconnected(batch) = fan_out.send(Batch { queries }) {
         for q in batch.queries {
             let _ = results.send(QueryResult::rejected(&q, RejectReason::ShuttingDown));
@@ -286,25 +322,24 @@ fn encoder_stage(
     rx: NamedReceiver<Batch>,
     out: NamedSender<EncodedChunk>,
     results: NamedSender<QueryResult>,
-    sizes_rx: std::sync::mpsc::Receiver<Result<Vec<usize>, String>>,
+    lane_caps: Arc<LaneCaps>,
     n_max: usize,
     num_labels: usize,
 ) {
-    let sizes = match sizes_rx.recv() {
-        Ok(Ok(sizes)) => sizes,
-        Ok(Err(msg)) => return drain_failed(rx, &results, &msg),
-        Err(_) => return drain_failed(rx, &results, "engine thread died before handshake"),
+    // Learn the lane's batch ladder from the executor's caps handshake.
+    let caps = match lane_caps.wait() {
+        Ok(caps) => caps,
+        Err(err) => return drain_failed(rx, &results, err),
     };
     while let Ok(batch) = rx.recv() {
-        for chunk in make_chunks(batch.queries, &sizes) {
-            if let Some(encoded) = encode_chunk(chunk, &sizes, n_max, num_labels, &results) {
+        for chunk in make_chunks(batch.queries, &caps) {
+            if let Some(encoded) = encode_chunk(chunk, &caps, n_max, num_labels, &results) {
                 if let SendResult::Disconnected(encoded) = out.send(encoded) {
+                    let err = EngineError::Unavailable {
+                        reason: "executor stage gone".into(),
+                    };
                     for q in encoded.queries {
-                        let _ = results.send(QueryResult::engine_error(
-                            &q,
-                            "executor stage gone",
-                            0,
-                        ));
+                        let _ = results.send(QueryResult::engine_error(&q, err.clone(), 0));
                     }
                 }
             }
@@ -312,27 +347,42 @@ fn encoder_stage(
     }
 }
 
+/// Publishes a "thread died" caps outcome if the executor unwinds before
+/// its normal handshake (LaneCaps ignores the second set otherwise).
+struct CapsPanicGuard(Arc<LaneCaps>);
+
+impl Drop for CapsPanicGuard {
+    fn drop(&mut self) {
+        self.0.set(Err(EngineError::Unavailable {
+            reason: "engine thread died before reporting caps".into(),
+        }));
+    }
+}
+
 fn executor_stage(
     factory: EngineFactory,
     rx: NamedReceiver<EncodedChunk>,
     results: NamedSender<QueryResult>,
-    sizes_tx: std::sync::mpsc::SyncSender<Result<Vec<usize>, String>>,
+    lane_caps: Arc<LaneCaps>,
 ) {
+    let guard = CapsPanicGuard(Arc::clone(&lane_caps));
     let mut engine = match factory() {
         Ok(engine) => {
-            let _ = sizes_tx.send(Ok(engine.supported_batch_sizes()));
+            lane_caps.set(Ok(engine.caps().clone()));
             engine
         }
         Err(err) => {
             // Report instead of panicking: the encoder downgrades the
-            // lane to per-query EngineError results.
-            let _ = sizes_tx.send(Err(format!("engine construction failed: {err:#}")));
+            // lane to per-query EngineError results and the router
+            // steers new traffic to surviving lanes.
+            lane_caps.set(Err(err));
             return;
         }
     };
-    drop(sizes_tx);
+    drop(guard);
+    let tag: Arc<str> = Arc::from(engine.caps().name.as_str());
     while let Ok(chunk) = rx.recv() {
-        execute_chunk(engine.as_mut(), chunk, &results);
+        execute_chunk(engine.as_mut(), &tag, chunk, &results);
     }
 }
 
@@ -342,20 +392,29 @@ fn fused_stage(
     factory: EngineFactory,
     rx: NamedReceiver<Batch>,
     results: NamedSender<QueryResult>,
+    lane_caps: Arc<LaneCaps>,
     n_max: usize,
     num_labels: usize,
 ) {
+    let guard = CapsPanicGuard(Arc::clone(&lane_caps));
     let mut engine = match factory() {
-        Ok(engine) => engine,
+        Ok(engine) => {
+            lane_caps.set(Ok(engine.caps().clone()));
+            engine
+        }
         Err(err) => {
-            return drain_failed(rx, &results, &format!("engine construction failed: {err:#}"))
+            lane_caps.set(Err(err.clone()));
+            drop(guard);
+            return drain_failed(rx, &results, err);
         }
     };
-    let sizes = engine.supported_batch_sizes();
+    drop(guard);
+    let caps = engine.caps().clone();
+    let tag: Arc<str> = Arc::from(caps.name.as_str());
     while let Ok(batch) = rx.recv() {
-        for chunk in make_chunks(batch.queries, &sizes) {
-            if let Some(encoded) = encode_chunk(chunk, &sizes, n_max, num_labels, &results) {
-                execute_chunk(engine.as_mut(), encoded, &results);
+        for chunk in make_chunks(batch.queries, &caps) {
+            if let Some(encoded) = encode_chunk(chunk, &caps, n_max, num_labels, &results) {
+                execute_chunk(engine.as_mut(), &tag, encoded, &results);
             }
         }
     }
@@ -370,19 +429,19 @@ fn responder_stage(rx: NamedReceiver<QueryResult>, stats: Vec<Arc<ChannelStats>>
     metrics
 }
 
-/// Answer every remaining query on a dead lane with an EngineError.
-fn drain_failed(rx: NamedReceiver<Batch>, results: &NamedSender<QueryResult>, msg: &str) {
+/// Answer every remaining query on a dead lane with its typed error.
+fn drain_failed(rx: NamedReceiver<Batch>, results: &NamedSender<QueryResult>, err: EngineError) {
     while let Ok(batch) = rx.recv() {
         for q in batch.queries {
-            let _ = results.send(QueryResult::engine_error(&q, msg, 0));
+            let _ = results.send(QueryResult::engine_error(&q, err.clone(), 0));
         }
     }
 }
 
 /// Split a released batch into engine-sized chunks (a batch larger than
 /// the biggest supported artifact executes as several launches).
-fn make_chunks(queries: Vec<Query>, supported: &[usize]) -> Vec<Vec<Query>> {
-    let cap = pick_batch_size(supported, queries.len()).max(1);
+fn make_chunks(queries: Vec<Query>, caps: &EngineCaps) -> Vec<Vec<Query>> {
+    let cap = caps.pick_batch_size(queries.len()).max(1);
     let mut chunks = Vec::with_capacity(queries.len().div_ceil(cap));
     let mut current = Vec::with_capacity(cap.min(queries.len()));
     for q in queries {
@@ -402,7 +461,7 @@ fn make_chunks(queries: Vec<Query>, supported: &[usize]) -> Vec<Vec<Query>> {
 /// EngineError instead of poisoning the chunk.
 fn encode_chunk(
     queries: Vec<Query>,
-    supported: &[usize],
+    caps: &EngineCaps,
     n_max: usize,
     num_labels: usize,
     results: &NamedSender<QueryResult>,
@@ -419,14 +478,17 @@ fn encode_chunk(
                 ok_queries.push(q);
             }
             (Err(e), _) | (_, Err(e)) => {
-                let _ = results.send(QueryResult::engine_error(&q, format!("encode: {e}"), 0));
+                let err = EngineError::InvalidInput {
+                    detail: format!("encode: {e}"),
+                };
+                let _ = results.send(QueryResult::engine_error(&q, err, 0));
             }
         }
     }
     if ok_queries.is_empty() {
         return None;
     }
-    let eff = pick_batch_size(supported, ok_queries.len());
+    let eff = caps.pick_batch_size(ok_queries.len());
     let packed = PackedBatch::pack(&pairs, eff);
     Some(EncodedChunk {
         queries: ok_queries,
@@ -438,6 +500,7 @@ fn encode_chunk(
 
 fn execute_chunk(
     engine: &mut dyn Engine,
+    tag: &Arc<str>,
     chunk: EncodedChunk,
     results: &NamedSender<QueryResult>,
 ) {
@@ -446,11 +509,11 @@ fn execute_chunk(
     let execute_us = t0.elapsed().as_secs_f64() * 1e6;
     let batch_size = chunk.queries.len();
     match scored {
-        Ok(scores) => {
+        Ok(out) => {
             for (i, q) in chunk.queries.iter().enumerate() {
                 let _ = results.send(QueryResult {
                     id: q.id,
-                    outcome: Outcome::Score(scores[i]),
+                    outcome: Outcome::Score(out.scores[i]),
                     latency_us: q.submitted.elapsed().as_secs_f64() * 1e6,
                     batch_size,
                     stage: StageTiming {
@@ -458,13 +521,17 @@ fn execute_chunk(
                         encode_us: chunk.encode_us,
                         execute_us,
                     },
+                    telemetry: out.telemetry.get(i).cloned().unwrap_or_default(),
+                    engine: Some(Arc::clone(tag)),
                 });
             }
         }
-        Err(e) => {
-            let msg = e.to_string();
+        Err(err) => {
             for q in &chunk.queries {
-                let _ = results.send(QueryResult::engine_error(q, &msg, batch_size));
+                let _ = results.send(
+                    QueryResult::engine_error(q, err.clone(), batch_size)
+                        .with_engine(Arc::clone(tag)),
+                );
             }
         }
     }
@@ -474,36 +541,34 @@ fn execute_chunk(
 mod tests {
     use super::*;
     use crate::graph::Graph;
+    use crate::runtime::BatchOutput;
     use std::sync::atomic::{AtomicU64, Ordering};
 
     /// Deterministic engine double: fixed batch ladder, optional per-call
     /// delay (to make the executor the bottleneck), call counter.
     struct MockEngine {
-        sizes: Vec<usize>,
+        caps: EngineCaps,
         delay: Duration,
         calls: Arc<AtomicU64>,
     }
 
     impl Engine for MockEngine {
-        fn name(&self) -> &str {
-            "mock"
+        fn caps(&self) -> &EngineCaps {
+            &self.caps
         }
-        fn supported_batch_sizes(&self) -> Vec<usize> {
-            self.sizes.clone()
-        }
-        fn score_batch(&mut self, batch: &PackedBatch) -> anyhow::Result<Vec<f32>> {
+        fn score_batch(&mut self, batch: &PackedBatch) -> Result<BatchOutput, EngineError> {
             self.calls.fetch_add(1, Ordering::Relaxed);
             if !self.delay.is_zero() {
                 thread::sleep(self.delay);
             }
-            Ok(vec![0.5; batch.batch])
+            Ok(BatchOutput::untimed(vec![0.5; batch.batch]))
         }
     }
 
     fn mock_factory(sizes: Vec<usize>, delay: Duration, calls: Arc<AtomicU64>) -> EngineFactory {
         Arc::new(move || {
             Ok(Box::new(MockEngine {
-                sizes: sizes.clone(),
+                caps: EngineCaps::new("mock", sizes.clone(), 8, 4),
                 delay,
                 calls: Arc::clone(&calls),
             }) as Box<dyn Engine>)
@@ -511,7 +576,11 @@ mod tests {
     }
 
     fn failing_factory(msg: &'static str) -> EngineFactory {
-        Arc::new(move || anyhow::bail!(msg))
+        Arc::new(move || {
+            Err(EngineError::Unavailable {
+                reason: msg.into(),
+            })
+        })
     }
 
     fn model() -> ModelConfig {
@@ -532,19 +601,22 @@ mod tests {
         Query::new(id, g.clone(), g)
     }
 
-    fn pcfg(workers: usize, max_batch: usize, depth: usize, timeout: Duration) -> PipelineConfig {
+    fn pcfg(max_batch: usize, depth: usize, timeout: Duration) -> PipelineConfig {
         PipelineConfig {
-            workers,
             policy: BatchPolicy { max_batch, timeout },
             depth,
             ..PipelineConfig::default()
         }
     }
 
+    fn caps(sizes: &[usize]) -> EngineCaps {
+        EngineCaps::new("mock", sizes.to_vec(), 8, 4)
+    }
+
     #[test]
     fn make_chunks_respects_engine_ladder() {
         let qs: Vec<Query> = (0..10).map(query).collect();
-        let chunks = make_chunks(qs, &[1, 4]);
+        let chunks = make_chunks(qs, &caps(&[1, 4]));
         let lens: Vec<usize> = chunks.iter().map(Vec::len).collect();
         assert_eq!(lens, vec![4, 4, 2]);
         // Order and identity preserved across the split.
@@ -552,16 +624,17 @@ mod tests {
         assert_eq!(ids, (0..10).collect::<Vec<_>>());
         // A batch already within the ladder stays whole.
         let qs: Vec<Query> = (0..3).map(query).collect();
-        assert_eq!(make_chunks(qs, &[1, 4]).len(), 1);
+        assert_eq!(make_chunks(qs, &caps(&[1, 4])).len(), 1);
     }
 
     #[test]
     fn no_query_lost_or_duplicated_through_shutdown() {
         let calls = Arc::new(AtomicU64::new(0));
+        let factory = mock_factory(vec![1, 4], Duration::ZERO, Arc::clone(&calls));
         let pipeline = Pipeline::start(
             model(),
-            mock_factory(vec![1, 4], Duration::ZERO, Arc::clone(&calls)),
-            pcfg(2, 8, 2, Duration::from_micros(200)),
+            vec![Arc::clone(&factory), factory],
+            pcfg(8, 2, Duration::from_micros(200)),
         );
         let n = 57u64;
         for id in 0..n {
@@ -574,6 +647,11 @@ mod tests {
         assert_eq!(metrics.rejected, 0);
         assert_eq!(metrics.engine_errors, 0);
         assert!(calls.load(Ordering::Relaxed) > 0);
+        // Every scored query is attributed to the mock engine and both
+        // lanes are named in the final metrics.
+        assert_eq!(metrics.by_engine["mock"], n);
+        assert_eq!(metrics.lanes.len(), 2);
+        assert!(metrics.lanes.iter().all(|l| l.engine == "mock"));
     }
 
     #[test]
@@ -583,8 +661,8 @@ mod tests {
         // encoder must chunk, and every chunk must fit the ladder.
         let pipeline = Pipeline::start(
             model(),
-            mock_factory(vec![1, 4], Duration::ZERO, Arc::clone(&calls)),
-            pcfg(1, 10, 2, Duration::from_secs(5)),
+            vec![mock_factory(vec![1, 4], Duration::ZERO, Arc::clone(&calls))],
+            pcfg(10, 2, Duration::from_secs(5)),
         );
         for id in 0..10 {
             assert!(pipeline.submit(query(id)));
@@ -602,8 +680,8 @@ mod tests {
     fn engine_construction_failure_reports_per_query_errors() {
         let pipeline = Pipeline::start(
             model(),
-            failing_factory("no such backend"),
-            pcfg(1, 4, 2, Duration::from_micros(100)),
+            vec![failing_factory("no such backend")],
+            pcfg(4, 2, Duration::from_micros(100)),
         );
         for id in 0..5 {
             assert!(pipeline.submit(query(id)));
@@ -611,14 +689,16 @@ mod tests {
         let metrics = pipeline.finish();
         assert_eq!(metrics.engine_errors, 5);
         assert_eq!(metrics.scored, 0);
+        // The lane is named with its failure in the final metrics.
+        assert!(metrics.lanes[0].engine.contains("unavailable"));
     }
 
     #[test]
     fn engine_construction_failure_reports_errors_in_fused_lane() {
         let pipeline = Pipeline::start(
             model(),
-            failing_factory("no such backend"),
-            pcfg(1, 4, 0, Duration::from_micros(100)),
+            vec![failing_factory("no such backend")],
+            pcfg(4, 0, Duration::from_micros(100)),
         );
         for id in 0..3 {
             assert!(pipeline.submit(query(id)));
@@ -629,12 +709,48 @@ mod tests {
     }
 
     #[test]
+    fn dead_lane_traffic_routes_to_surviving_lane() {
+        // One lane's engine fails to construct, the other is healthy:
+        // the caps-aware router must keep every query on the healthy
+        // lane once the failure is known. Serve in two waves so the
+        // second wave definitely arrives after the handshake.
+        let calls = Arc::new(AtomicU64::new(0));
+        let pipeline = Pipeline::start(
+            model(),
+            vec![
+                failing_factory("no artifacts"),
+                mock_factory(vec![1, 4], Duration::ZERO, Arc::clone(&calls)),
+            ],
+            pcfg(4, 2, Duration::from_micros(100)),
+        );
+        for id in 0..4 {
+            assert!(pipeline.submit(query(id)));
+        }
+        // Let the failed handshake land before the second wave.
+        thread::sleep(Duration::from_millis(20));
+        for id in 4..12 {
+            assert!(pipeline.submit(query(id)));
+        }
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.scored + metrics.engine_errors, 12);
+        assert!(
+            metrics.scored >= 8,
+            "post-handshake queries must route around the dead lane \
+             (scored {}, errors {})",
+            metrics.scored,
+            metrics.engine_errors
+        );
+        assert!(metrics.lanes[0].engine.contains("unavailable"));
+        assert_eq!(metrics.lanes[1].engine, "mock");
+    }
+
+    #[test]
     fn rejects_flow_to_responder() {
         let calls = Arc::new(AtomicU64::new(0));
         let pipeline = Pipeline::start(
             model(),
-            mock_factory(vec![1, 4], Duration::ZERO, calls),
-            pcfg(1, 4, 2, Duration::from_micros(100)),
+            vec![mock_factory(vec![1, 4], Duration::ZERO, calls)],
+            pcfg(4, 2, Duration::from_micros(100)),
         );
         assert!(pipeline.submit(oversize_query(0)));
         for id in 1..4 {
@@ -656,8 +772,8 @@ mod tests {
         let calls = Arc::new(AtomicU64::new(0));
         let pipeline = Pipeline::start(
             model(),
-            mock_factory(vec![1, 4], Duration::from_millis(3), calls),
-            pcfg(1, 4, 2, Duration::from_micros(100)),
+            vec![mock_factory(vec![1, 4], Duration::from_millis(3), calls)],
+            pcfg(4, 2, Duration::from_micros(100)),
         );
         for id in 0..24 {
             assert!(pipeline.submit(query(id)));
@@ -682,10 +798,11 @@ mod tests {
     #[test]
     fn sequential_lane_still_serves_everything() {
         let calls = Arc::new(AtomicU64::new(0));
+        let factory = mock_factory(vec![1, 4], Duration::ZERO, calls);
         let pipeline = Pipeline::start(
             model(),
-            mock_factory(vec![1, 4], Duration::ZERO, calls),
-            pcfg(2, 4, 0, Duration::from_micros(100)),
+            vec![Arc::clone(&factory), factory],
+            pcfg(4, 0, Duration::from_micros(100)),
         );
         for id in 0..20 {
             assert!(pipeline.submit(query(id)));

@@ -1,19 +1,26 @@
 //! Query and result types flowing through the serving coordinator.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::graph::Graph;
+use crate::runtime::{EngineError, QueryTelemetry};
 
 /// A graph-similarity query (the unit of work, paper §5.1).
 #[derive(Debug, Clone)]
 pub struct Query {
+    /// Caller-chosen identifier echoed back on the result.
     pub id: u64,
+    /// First graph of the pair.
     pub g1: Graph,
+    /// Second graph of the pair.
     pub g2: Graph,
+    /// When the query entered the pipeline.
     pub submitted: Instant,
 }
 
 impl Query {
+    /// Stamp a new query with the current time.
     pub fn new(id: u64, g1: Graph, g2: Graph) -> Self {
         Query {
             id,
@@ -27,8 +34,21 @@ impl Query {
 /// Why a query was rejected before reaching an engine.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RejectReason {
-    TooManyNodes { nodes: usize, n_max: usize },
-    LabelOutOfRange { label: u16, num_labels: usize },
+    /// A graph exceeds the artifact's fixed `n_max`.
+    TooManyNodes {
+        /// Offending node count.
+        nodes: usize,
+        /// The artifact limit.
+        n_max: usize,
+    },
+    /// A node label is outside the artifact's vocabulary.
+    LabelOutOfRange {
+        /// Offending label.
+        label: u16,
+        /// Vocabulary size.
+        num_labels: usize,
+    },
+    /// The pipeline is shutting down.
     ShuttingDown,
 }
 
@@ -49,9 +69,12 @@ impl std::fmt::Display for RejectReason {
 /// Outcome of one query.
 #[derive(Debug, Clone)]
 pub enum Outcome {
+    /// Scored successfully.
     Score(f32),
+    /// Rejected before reaching an engine.
     Rejected(RejectReason),
-    EngineError(String),
+    /// An engine-side failure (typed, see [`EngineError`]).
+    EngineError(EngineError),
 }
 
 /// Where one query's latency went, stage by stage (µs). The split the
@@ -67,10 +90,12 @@ pub struct StageTiming {
     pub execute_us: f64,
 }
 
-/// Completed query with timing.
+/// Completed query with timing and engine telemetry.
 #[derive(Debug, Clone)]
 pub struct QueryResult {
+    /// The submitting caller's query id.
     pub id: u64,
+    /// What happened.
     pub outcome: Outcome,
     /// submit -> completion latency, µs.
     pub latency_us: f64,
@@ -78,6 +103,12 @@ pub struct QueryResult {
     pub batch_size: usize,
     /// Per-stage latency split (zeros for rejects).
     pub stage: StageTiming,
+    /// Engine telemetry for this query's slot (cycle report, DMA split,
+    /// per-slot CPU time — whatever the engine's caps declare).
+    pub telemetry: QueryTelemetry,
+    /// Name of the engine that served this query (from its caps), if it
+    /// reached one.
+    pub engine: Option<Arc<str>>,
 }
 
 impl QueryResult {
@@ -89,26 +120,39 @@ impl QueryResult {
             latency_us: q.submitted.elapsed().as_secs_f64() * 1e6,
             batch_size: 0,
             stage: StageTiming::default(),
+            telemetry: QueryTelemetry::default(),
+            engine: None,
         }
     }
 
     /// Engine-side failure (construction or execution).
-    pub fn engine_error(q: &Query, msg: impl Into<String>, batch_size: usize) -> Self {
+    pub fn engine_error(q: &Query, err: EngineError, batch_size: usize) -> Self {
         QueryResult {
             id: q.id,
-            outcome: Outcome::EngineError(msg.into()),
+            outcome: Outcome::EngineError(err),
             latency_us: q.submitted.elapsed().as_secs_f64() * 1e6,
             batch_size,
             stage: StageTiming::default(),
+            telemetry: QueryTelemetry::default(),
+            engine: None,
         }
     }
 
+    /// Tag this result with the engine name that produced it.
+    pub fn with_engine(mut self, engine: Arc<str>) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// The score, if this query succeeded.
     pub fn score(&self) -> Option<f32> {
         match self.outcome {
             Outcome::Score(s) => Some(s),
             _ => None,
         }
     }
+
+    /// True when the query was rejected before reaching an engine.
     pub fn is_rejected(&self) -> bool {
         matches!(self.outcome, Outcome::Rejected(_))
     }
@@ -117,6 +161,18 @@ impl QueryResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn scored(outcome: Outcome) -> QueryResult {
+        QueryResult {
+            id: 1,
+            outcome,
+            latency_us: 10.0,
+            batch_size: 4,
+            stage: StageTiming::default(),
+            telemetry: QueryTelemetry::default(),
+            engine: None,
+        }
+    }
 
     #[test]
     fn reject_reasons_display() {
@@ -128,22 +184,10 @@ mod tests {
 
     #[test]
     fn result_accessors() {
-        let r = QueryResult {
-            id: 1,
-            outcome: Outcome::Score(0.5),
-            latency_us: 10.0,
-            batch_size: 4,
-            stage: StageTiming::default(),
-        };
+        let r = scored(Outcome::Score(0.5));
         assert_eq!(r.score(), Some(0.5));
         assert!(!r.is_rejected());
-        let r = QueryResult {
-            id: 2,
-            outcome: Outcome::Rejected(RejectReason::ShuttingDown),
-            latency_us: 1.0,
-            batch_size: 0,
-            stage: StageTiming::default(),
-        };
+        let r = scored(Outcome::Rejected(RejectReason::ShuttingDown));
         assert_eq!(r.score(), None);
         assert!(r.is_rejected());
     }
@@ -155,9 +199,14 @@ mod tests {
         let r = QueryResult::rejected(&q, RejectReason::ShuttingDown);
         assert_eq!(r.id, 42);
         assert!(r.is_rejected());
-        let r = QueryResult::engine_error(&q, "boom", 3);
+        assert_eq!(r.engine, None);
+        let err = EngineError::Unavailable { reason: "boom".into() };
+        let r = QueryResult::engine_error(&q, err, 3).with_engine(Arc::from("mock"));
         assert_eq!(r.id, 42);
-        assert!(matches!(r.outcome, Outcome::EngineError(ref m) if m == "boom"));
+        assert!(
+            matches!(r.outcome, Outcome::EngineError(EngineError::Unavailable { ref reason }) if reason == "boom")
+        );
         assert_eq!(r.batch_size, 3);
+        assert_eq!(r.engine.as_deref(), Some("mock"));
     }
 }

@@ -1,14 +1,25 @@
-//! Admission control (the pipeline's first stage) and round-robin
-//! fan-out (how the batcher stage spreads released batches across the
-//! worker encode/execute lanes).
+//! Admission control (the pipeline's first stage), the per-lane
+//! capability handshake, and fan-out of released batches across the
+//! worker encode/execute lanes.
 //!
 //! Admission validates queries against the artifact shape limits (the
 //! fixed n_max/num_labels the AOT HLO was compiled for — oversize graphs
 //! must be rejected, not silently truncated) before they ever enter the
 //! pipeline; rejects flow straight to the responder stage.
+//!
+//! Each worker lane publishes its engine's [`EngineCaps`] (or the typed
+//! construction error) through a [`LaneCaps`] cell once the executor has
+//! built its engine in-thread. The encoder blocks on it to learn the
+//! batch ladder; the [`CapsRouter`] peeks at it to steer released
+//! batches away from lanes whose engines are known-dead — so a mixed
+//! `native,sim` deployment keeps serving even if one backend's
+//! artifacts are missing.
+
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::graph::Graph;
 use crate::nn::config::ModelConfig;
+use crate::runtime::{EngineCaps, EngineError};
 
 use super::channel::{NamedSender, SendResult};
 use super::query::{Query, QueryResult, RejectReason};
@@ -40,6 +51,7 @@ pub struct Admission {
 }
 
 impl Admission {
+    /// Admission against `cfg`'s fixed shapes.
     pub fn new(cfg: ModelConfig) -> Self {
         Admission { cfg }
     }
@@ -54,34 +66,109 @@ impl Admission {
     }
 }
 
-/// Round-robin dispatcher over downstream stage inputs. If the preferred
-/// lane has shut down, the remaining lanes are tried once around before
-/// giving up.
-pub struct RoundRobin<T> {
-    outs: Vec<NamedSender<T>>,
+/// One lane's capability handshake: the executor publishes its engine's
+/// [`EngineCaps`] (or the construction [`EngineError`]) exactly once;
+/// the encoder blocks on [`LaneCaps::wait`], the router and the final
+/// metrics snapshot read it non-blockingly via [`LaneCaps::get`].
+pub struct LaneCaps {
+    state: Mutex<Option<Result<EngineCaps, EngineError>>>,
+    ready: Condvar,
+}
+
+impl LaneCaps {
+    /// An unset cell, shared between a lane's stages.
+    pub fn new() -> Arc<Self> {
+        Arc::new(LaneCaps {
+            state: Mutex::new(None),
+            ready: Condvar::new(),
+        })
+    }
+
+    /// Publish the lane's outcome. First set wins; later calls (e.g. the
+    /// executor's panic guard after a normal set) are ignored.
+    pub fn set(&self, outcome: Result<EngineCaps, EngineError>) {
+        let mut state = self.state.lock().expect("LaneCaps lock poisoned");
+        if state.is_none() {
+            *state = Some(outcome);
+            self.ready.notify_all();
+        }
+    }
+
+    /// Block until the lane has published, then return a copy.
+    pub fn wait(&self) -> Result<EngineCaps, EngineError> {
+        let mut state = self.state.lock().expect("LaneCaps lock poisoned");
+        loop {
+            if let Some(outcome) = state.as_ref() {
+                return outcome.clone();
+            }
+            state = self.ready.wait(state).expect("LaneCaps lock poisoned");
+        }
+    }
+
+    /// Non-blocking read: `None` while the engine is still constructing.
+    pub fn get(&self) -> Option<Result<EngineCaps, EngineError>> {
+        self.state.lock().expect("LaneCaps lock poisoned").clone()
+    }
+
+    /// True once the lane is known to have no working engine.
+    pub fn known_failed(&self) -> bool {
+        matches!(
+            self.state.lock().expect("LaneCaps lock poisoned").as_ref(),
+            Some(Err(_))
+        )
+    }
+}
+
+/// Caps-aware round-robin dispatcher over the worker lanes. Healthy (or
+/// not-yet-known) lanes take traffic in rotation; lanes whose engine
+/// construction is known to have failed are skipped while any
+/// alternative exists. If every lane is dead the batch still goes to one
+/// of them, whose drain answers each query with the typed construction
+/// error — results are reported, never silently dropped.
+pub struct CapsRouter<T> {
+    lanes: Vec<(NamedSender<T>, Arc<LaneCaps>)>,
     next: usize,
 }
 
-impl<T> RoundRobin<T> {
-    pub fn new(outs: Vec<NamedSender<T>>) -> Self {
-        assert!(!outs.is_empty(), "round-robin needs at least one lane");
-        RoundRobin { outs, next: 0 }
+impl<T> CapsRouter<T> {
+    /// Route over `lanes` (sender + that lane's caps cell). Panics on an
+    /// empty lane set.
+    pub fn new(lanes: Vec<(NamedSender<T>, Arc<LaneCaps>)>) -> Self {
+        assert!(!lanes.is_empty(), "router needs at least one lane");
+        CapsRouter { lanes, next: 0 }
     }
 
+    /// Number of lanes (dead or alive).
     pub fn lanes(&self) -> usize {
-        self.outs.len()
+        self.lanes.len()
     }
 
-    pub fn send(&mut self, mut v: T) -> SendResult<T> {
-        for _ in 0..self.outs.len() {
+    /// Dispatch to the next healthy lane; fall back to any lane when all
+    /// are known-failed (their drains report the error per query).
+    pub fn send(&mut self, v: T) -> SendResult<T> {
+        match self.try_rotation(v, true) {
+            Ok(delivered) => delivered,
+            // Every lane was skipped (known-failed) or disconnected:
+            // second rotation without the health filter.
+            Err(v) => self.try_rotation(v, false).unwrap_or_else(SendResult::Disconnected),
+        }
+    }
+
+    /// One rotation over all lanes starting at `self.next`; `Err(v)`
+    /// hands the value back if nobody accepted it.
+    fn try_rotation(&mut self, mut v: T, skip_failed: bool) -> Result<SendResult<T>, T> {
+        for _ in 0..self.lanes.len() {
             let lane = self.next;
-            self.next = (self.next + 1) % self.outs.len();
-            match self.outs[lane].send(v) {
+            self.next = (self.next + 1) % self.lanes.len();
+            if skip_failed && self.lanes[lane].1.known_failed() {
+                continue;
+            }
+            match self.lanes[lane].0.send(v) {
                 SendResult::Disconnected(back) => v = back,
-                delivered => return delivered,
+                delivered => return Ok(delivered),
             }
         }
-        SendResult::Disconnected(v)
+        Err(v)
     }
 }
 
@@ -100,6 +187,10 @@ mod tests {
 
     fn graph(n: usize, label: u16) -> Graph {
         Graph::new(n, (1..n).map(|v| (0u16, v as u16)).collect(), vec![label; n])
+    }
+
+    fn caps(name: &str) -> EngineCaps {
+        EngineCaps::new(name, vec![1, 4], 8, 4)
     }
 
     #[test]
@@ -131,12 +222,44 @@ mod tests {
     }
 
     #[test]
-    fn round_robin_distribution() {
+    fn lane_caps_first_set_wins_and_wait_returns_it() {
+        let lc = LaneCaps::new();
+        assert_eq!(lc.get(), None);
+        assert!(!lc.known_failed());
+        lc.set(Ok(caps("a")));
+        lc.set(Err(EngineError::Unavailable { reason: "late".into() }));
+        assert_eq!(lc.wait().unwrap().name, "a");
+        assert!(!lc.known_failed());
+
+        let dead = LaneCaps::new();
+        dead.set(Err(EngineError::Unavailable { reason: "no backend".into() }));
+        assert!(dead.known_failed());
+        assert!(dead.wait().is_err());
+    }
+
+    #[test]
+    fn lane_caps_wait_blocks_until_published() {
+        let lc = LaneCaps::new();
+        let waiter = {
+            let lc = Arc::clone(&lc);
+            std::thread::spawn(move || lc.wait().unwrap().name)
+        };
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        lc.set(Ok(caps("published")));
+        assert_eq!(waiter.join().unwrap(), "published");
+    }
+
+    #[test]
+    fn caps_router_distributes_round_robin_across_healthy_lanes() {
         let (tx1, rx1) = channel::<u64>("lane.0", 16, SendPolicy::Block);
         let (tx2, rx2) = channel::<u64>("lane.1", 16, SendPolicy::Block);
-        let mut rr = RoundRobin::new(vec![tx1, tx2]);
+        let (c1, c2) = (LaneCaps::new(), LaneCaps::new());
+        c1.set(Ok(caps("a")));
+        c2.set(Ok(caps("b")));
+        let mut router = CapsRouter::new(vec![(tx1, c1), (tx2, c2)]);
+        assert_eq!(router.lanes(), 2);
         for i in 0..6 {
-            assert!(rr.send(i).is_sent());
+            assert!(router.send(i).is_sent());
         }
         let drain = |rx: &super::super::channel::NamedReceiver<u64>| {
             let mut got = Vec::new();
@@ -150,13 +273,13 @@ mod tests {
     }
 
     #[test]
-    fn round_robin_skips_dead_lanes() {
+    fn caps_router_skips_disconnected_lanes() {
         let (tx1, rx1) = channel::<u64>("lane.0", 16, SendPolicy::Block);
         let (tx2, rx2) = channel::<u64>("lane.1", 16, SendPolicy::Block);
-        let mut rr = RoundRobin::new(vec![tx1, tx2]);
+        let mut router = CapsRouter::new(vec![(tx1, LaneCaps::new()), (tx2, LaneCaps::new())]);
         drop(rx1);
         for i in 0..4 {
-            assert!(rr.send(i).is_sent(), "live lane must absorb traffic");
+            assert!(router.send(i).is_sent(), "live lane must absorb traffic");
         }
         let mut got = Vec::new();
         while let Ok(v) = rx2.try_recv() {
@@ -164,6 +287,49 @@ mod tests {
         }
         assert_eq!(got, vec![0, 1, 2, 3]);
         drop(rx2);
-        assert!(matches!(rr.send(9), SendResult::Disconnected(9)));
+        assert!(matches!(router.send(9), SendResult::Disconnected(9)));
+    }
+
+    #[test]
+    fn caps_router_avoids_known_failed_lanes() {
+        let (tx1, rx1) = channel::<u64>("lane.0", 16, SendPolicy::Block);
+        let (tx2, rx2) = channel::<u64>("lane.1", 16, SendPolicy::Block);
+        let (dead, healthy) = (LaneCaps::new(), LaneCaps::new());
+        dead.set(Err(EngineError::Unavailable { reason: "no artifacts".into() }));
+        healthy.set(Ok(caps("ok")));
+        let mut router = CapsRouter::new(vec![(tx1, dead), (tx2, healthy)]);
+        for i in 0..4 {
+            assert!(router.send(i).is_sent());
+        }
+        assert!(rx1.try_recv().is_err(), "dead lane must stay empty");
+        let mut got = Vec::new();
+        while let Ok(v) = rx2.try_recv() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn caps_router_falls_back_when_all_lanes_failed() {
+        // All engines failed: traffic still lands on a lane so its drain
+        // can answer with the typed error (results are never dropped).
+        let (tx1, rx1) = channel::<u64>("lane.0", 16, SendPolicy::Block);
+        let lc = LaneCaps::new();
+        lc.set(Err(EngineError::Unavailable { reason: "dead".into() }));
+        let mut router = CapsRouter::new(vec![(tx1, lc)]);
+        assert!(router.send(7).is_sent());
+        assert_eq!(rx1.try_recv().unwrap(), 7);
+        drop(rx1);
+        assert!(matches!(router.send(8), SendResult::Disconnected(8)));
+    }
+
+    #[test]
+    fn caps_router_routes_while_caps_unknown() {
+        // Engines construct asynchronously: before the handshake lands,
+        // every lane is assumed healthy.
+        let (tx1, rx1) = channel::<u64>("lane.0", 16, SendPolicy::Block);
+        let mut router = CapsRouter::new(vec![(tx1, LaneCaps::new())]);
+        assert!(router.send(1).is_sent());
+        assert_eq!(rx1.try_recv().unwrap(), 1);
     }
 }

@@ -5,12 +5,15 @@
 //! Matches the paper's deployment: a host process owns a compiled
 //! accelerator (PJRT executable here, bitstream there), queries stream
 //! in, the coordinator batches them to amortize per-launch overhead
-//! (Fig. 11) and replicates worker lanes (§5.4.3). The stage wiring
-//! itself lives in [`super::pipeline`]; both entrypoints share the one
-//! construction path.
+//! (Fig. 11) and replicates worker lanes (§5.4.3). Lanes are typed
+//! [`EngineKind`]s and may be heterogeneous (`native` lanes serving next
+//! to `sim` lanes — the Accel-GCN/LW-GCN-style mixed-accelerator
+//! deployment); engine construction goes through [`EngineBuilder`], not
+//! string matching. The stage wiring itself lives in
+//! [`super::pipeline`]; both entrypoints share the one construction
+//! path.
 
-use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
@@ -18,12 +21,7 @@ use anyhow::{Context as _, Result};
 use crate::graph::dataset::{random_pairs, GraphDb};
 use crate::graph::generate::Family;
 use crate::nn::config::ArtifactsMeta;
-use crate::runtime::native::NativeEngine;
-use crate::runtime::pjrt::XlaEngine;
-use crate::runtime::{Engine, EngineFactory};
-use crate::sim::config::ArchConfig;
-use crate::sim::engine::SimEngine;
-use crate::sim::platform::U280;
+use crate::runtime::{EngineBuilder, EngineFactory, EngineKind};
 use crate::util::rng::Rng;
 
 use super::batcher::BatchPolicy;
@@ -35,13 +33,21 @@ use super::query::Query;
 /// Serving configuration (CLI `spa-gcn serve`).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Where the AOT artifacts live.
     pub artifacts_dir: PathBuf,
-    /// "xla" | "xla-fused" | "native" | "sim"
-    pub engine: String,
+    /// Engine kind per lane pattern: lanes cycle through this list (one
+    /// entry = homogeneous lanes; `[Native, Sim]` = alternating kinds).
+    pub engines: Vec<EngineKind>,
+    /// Number of queries to synthesize and serve.
     pub queries: usize,
+    /// Worker lane count; raised to `engines.len()` so every requested
+    /// kind gets at least one lane.
     pub workers: usize,
+    /// Batcher release size.
     pub batch_max: usize,
+    /// Batcher release deadline.
     pub batch_timeout_us: u64,
+    /// Workload RNG seed.
     pub seed: u64,
     /// Encoded-chunk buffer per worker lane: >= 1 overlaps encode with
     /// engine execution (2 = double buffering), 0 runs them sequentially
@@ -53,7 +59,7 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             artifacts_dir: PathBuf::from("artifacts"),
-            engine: "xla".into(),
+            engines: vec![EngineKind::Xla],
             queries: 1000,
             workers: 1,
             batch_max: 64,
@@ -67,7 +73,6 @@ impl Default for ServeConfig {
 impl ServeConfig {
     fn pipeline_config(&self) -> PipelineConfig {
         PipelineConfig {
-            workers: self.workers.max(1),
             policy: BatchPolicy {
                 max_batch: self.batch_max.max(1),
                 timeout: Duration::from_micros(self.batch_timeout_us),
@@ -78,34 +83,43 @@ impl ServeConfig {
             results_cap: 1024,
         }
     }
-}
 
-/// Construct an engine by name. Called inside executor threads (PJRT
-/// handles are not `Send`), so it takes owned-ish borrows only.
-pub fn build_engine(kind: &str, artifacts_dir: &Path) -> Result<Box<dyn Engine>> {
-    match kind {
-        "xla" => Ok(Box::new(XlaEngine::load(artifacts_dir)?)),
-        "xla-fused" => Ok(Box::new(XlaEngine::load_fused(artifacts_dir)?)),
-        "native" => Ok(Box::new(NativeEngine::load(artifacts_dir)?)),
-        "sim" => Ok(Box::new(SimEngine::load(
-            artifacts_dir,
-            ArchConfig::spa_gcn(),
-            U280,
-        )?)),
-        other => anyhow::bail!("unknown engine '{other}' (xla|xla-fused|native|sim)"),
+    /// Effective worker lane count: `workers` raised so every requested
+    /// engine kind gets at least one lane.
+    fn lanes(&self) -> usize {
+        self.workers.max(1).max(self.engines.len())
     }
-}
 
-/// The `Send` closure executor stages call in-thread to build their
-/// (non-`Send`) engine.
-pub fn engine_factory(kind: String, artifacts_dir: PathBuf) -> EngineFactory {
-    Arc::new(move || build_engine(&kind, &artifacts_dir))
+    /// One [`EngineFactory`] per worker lane, cycling through the
+    /// requested kinds (`--engine native,sim` with 4 workers yields
+    /// native, sim, native, sim). At least one lane per kind.
+    fn lane_factories(&self) -> Vec<EngineFactory> {
+        (0..self.lanes())
+            .map(|w| {
+                EngineBuilder::new(
+                    self.engines[w % self.engines.len()],
+                    self.artifacts_dir.clone(),
+                )
+                .into_factory()
+            })
+            .collect()
+    }
+
+    /// The engine list as a CLI-style string (report titles).
+    fn engines_label(&self) -> String {
+        self.engines
+            .iter()
+            .map(EngineKind::as_str)
+            .collect::<Vec<_>>()
+            .join(",")
+    }
 }
 
 /// Shared serving core: synthesize the workload, run it through one
 /// staged pipeline (closed-loop when `pace_qps` is None, open-loop
 /// Poisson otherwise), return (metrics, wall seconds, max lateness).
 fn run_serve(cfg: &ServeConfig, pace_qps: Option<f64>) -> Result<(Metrics, f64, Duration)> {
+    anyhow::ensure!(!cfg.engines.is_empty(), "serve needs at least one engine kind");
     let meta = ArtifactsMeta::load(&cfg.artifacts_dir)
         .context("loading artifacts (run `make artifacts`)")?;
     let model_cfg = meta.config.clone();
@@ -122,11 +136,7 @@ fn run_serve(cfg: &ServeConfig, pace_qps: Option<f64>) -> Result<(Metrics, f64, 
     let pairs = random_pairs(&mut rng, &db, cfg.queries);
     let schedule = pace_qps.map(|rate| poisson_schedule(&mut rng, rate, cfg.queries));
 
-    let pipeline = Pipeline::start(
-        model_cfg,
-        engine_factory(cfg.engine.clone(), cfg.artifacts_dir.clone()),
-        cfg.pipeline_config(),
-    );
+    let pipeline = Pipeline::start(model_cfg, cfg.lane_factories(), cfg.pipeline_config());
 
     let t0 = Instant::now();
     let mut max_late = Duration::ZERO;
@@ -153,8 +163,12 @@ fn run_serve(cfg: &ServeConfig, pace_qps: Option<f64>) -> Result<(Metrics, f64, 
 pub fn serve_workload(cfg: &ServeConfig) -> Result<crate::report::Table> {
     let (metrics, wall, _) = run_serve(cfg, None)?;
     let mut t = metrics.render_table(&format!(
-        "serve: engine={} workers={} batch_max={} timeout={}us depth={} queries={}",
-        cfg.engine, cfg.workers, cfg.batch_max, cfg.batch_timeout_us, cfg.pipeline_depth,
+        "serve: engine={} lanes={} batch_max={} timeout={}us depth={} queries={}",
+        cfg.engines_label(),
+        cfg.lanes(),
+        cfg.batch_max,
+        cfg.batch_timeout_us,
+        cfg.pipeline_depth,
         cfg.queries
     ));
     t.row(vec!["wall time (s)".into(), crate::report::fmt(wall)]);
@@ -171,8 +185,13 @@ pub fn serve_workload(cfg: &ServeConfig) -> Result<crate::report::Table> {
 pub fn serve_paced(cfg: &ServeConfig, rate_qps: f64) -> Result<crate::report::Table> {
     let (metrics, _wall, max_late) = run_serve(cfg, Some(rate_qps))?;
     let mut t = metrics.render_table(&format!(
-        "serve-paced: engine={} rate={:.0} q/s workers={} batch_max={} depth={} queries={}",
-        cfg.engine, rate_qps, cfg.workers, cfg.batch_max, cfg.pipeline_depth, cfg.queries
+        "serve-paced: engine={} rate={:.0} q/s lanes={} batch_max={} depth={} queries={}",
+        cfg.engines_label(),
+        rate_qps,
+        cfg.lanes(),
+        cfg.batch_max,
+        cfg.pipeline_depth,
+        cfg.queries
     ));
     t.row(vec![
         "max submit lateness (ms)".into(),
@@ -201,7 +220,7 @@ mod tests {
         let Some(dir) = artifacts() else { return };
         let cfg = ServeConfig {
             artifacts_dir: dir,
-            engine: "native".into(),
+            engines: vec![EngineKind::Native],
             queries: 40,
             workers: 2,
             batch_max: 8,
@@ -220,14 +239,21 @@ mod tests {
             "{}",
             t.render()
         );
+        // Both lanes are named with the native engine and the native
+        // path reports its per-slot CPU telemetry.
+        assert_eq!(t.get("lane.0 engine"), Some("native-cpu"), "{}", t.render());
+        assert_eq!(t.get("lane.1 engine"), Some("native-cpu"), "{}", t.render());
+        assert_eq!(t.get("engine native-cpu scored"), Some("40"), "{}", t.render());
+        let cpu: f64 = t.get("engine cpu mean (ms)").unwrap().parse().unwrap();
+        assert!(cpu > 0.0, "{}", t.render());
     }
 
     #[test]
-    fn serve_sim_engine() {
+    fn serve_sim_engine_reports_cycle_telemetry() {
         let Some(dir) = artifacts() else { return };
         let cfg = ServeConfig {
             artifacts_dir: dir,
-            engine: "sim".into(),
+            engines: vec![EngineKind::Sim],
             queries: 10,
             workers: 1,
             batch_max: 4,
@@ -238,6 +264,47 @@ mod tests {
         let t = serve_workload(&cfg).unwrap();
         let scored: f64 = t.rows[0][1].parse().unwrap();
         assert_eq!(scored, 10.0, "{}", t.render());
+        // The simulator's cycle counts now reach the serve report.
+        let interval: f64 = t
+            .get("sim interval cycles mean")
+            .expect("cycle telemetry row present")
+            .parse()
+            .unwrap();
+        assert!(interval > 0.0, "{}", t.render());
+        let latency: f64 = t.get("sim latency cycles mean").unwrap().parse().unwrap();
+        assert!(latency > 0.0, "{}", t.render());
+        assert_eq!(t.get("lane.0 engine"), Some("spa-gcn-sim"), "{}", t.render());
+    }
+
+    #[test]
+    fn serve_mixed_engine_lanes() {
+        let Some(dir) = artifacts() else { return };
+        // One native lane + one sim lane in the same pipeline: both
+        // serve traffic, the report names each lane's engine and carries
+        // both telemetry flavors.
+        let cfg = ServeConfig {
+            artifacts_dir: dir,
+            engines: vec![EngineKind::Native, EngineKind::Sim],
+            queries: 24,
+            workers: 1, // raised to engines.len() internally
+            batch_max: 4,
+            batch_timeout_us: 100,
+            seed: 9,
+            ..ServeConfig::default()
+        };
+        let t = serve_workload(&cfg).unwrap();
+        let scored: f64 = t.rows[0][1].parse().unwrap();
+        assert_eq!(scored, 24.0, "{}", t.render());
+        assert_eq!(t.get("lane.0 engine"), Some("native-cpu"), "{}", t.render());
+        assert_eq!(t.get("lane.1 engine"), Some("spa-gcn-sim"), "{}", t.render());
+        // Round-robin across healthy lanes: both engines actually scored.
+        let native: u64 = t.get("engine native-cpu scored").unwrap().parse().unwrap();
+        let sim: u64 = t.get("engine spa-gcn-sim scored").unwrap().parse().unwrap();
+        assert_eq!(native + sim, 24, "{}", t.render());
+        assert!(native > 0 && sim > 0, "{}", t.render());
+        // Sim lanes contributed cycle rows, native lanes CPU rows.
+        assert!(t.get("sim interval cycles mean").is_some(), "{}", t.render());
+        assert!(t.get("engine cpu mean (ms)").is_some(), "{}", t.render());
     }
 
     #[test]
@@ -245,7 +312,7 @@ mod tests {
         let Some(dir) = artifacts() else { return };
         let cfg = ServeConfig {
             artifacts_dir: dir,
-            engine: "native".into(),
+            engines: vec![EngineKind::Native],
             queries: 20,
             workers: 1,
             batch_max: 8,
@@ -263,7 +330,7 @@ mod tests {
         let Some(dir) = artifacts() else { return };
         let cfg = ServeConfig {
             artifacts_dir: dir,
-            engine: "native".into(),
+            engines: vec![EngineKind::Native],
             queries: 30,
             workers: 1,
             batch_max: 8,
@@ -282,25 +349,16 @@ mod tests {
     }
 
     #[test]
-    fn serve_rejects_unknown_engine() {
-        let Some(dir) = artifacts() else { return };
+    fn serve_requires_engine_kinds() {
+        // Unknown engine *strings* are now unrepresentable (typed
+        // EngineKind, parse-time rejection — see runtime::tests); the
+        // remaining config error is an empty lane pattern.
         let cfg = ServeConfig {
-            artifacts_dir: dir,
-            engine: "bogus".into(),
+            engines: vec![],
             queries: 1,
-            workers: 1,
-            batch_max: 1,
-            batch_timeout_us: 1,
-            seed: 0,
             ..ServeConfig::default()
         };
-        // Engine construction fails inside the executor stage; the lane
-        // downgrades to an error drain and every query surfaces as a
-        // per-query EngineError (no panic, no silently closed channel).
-        let t = serve_workload(&cfg).unwrap();
-        let scored: f64 = t.rows[0][1].parse().unwrap();
-        let errors: f64 = t.rows[2][1].parse().unwrap();
-        assert_eq!(scored, 0.0, "{}", t.render());
-        assert_eq!(errors, 1.0, "{}", t.render());
+        let err = serve_workload(&cfg).unwrap_err();
+        assert!(err.to_string().contains("at least one engine"), "{err:#}");
     }
 }

@@ -41,6 +41,38 @@ impl std::fmt::Display for EncodeError {
 
 impl std::error::Error for EncodeError {}
 
+impl EncodedGraph {
+    /// Reconstruct the graph structure from the padded tensors: node
+    /// count from the mask, labels from the one-hot rows, edges from the
+    /// off-diagonal non-zeros of A' (the diagonal carries self-loops the
+    /// normalization added; real edges always have a strictly positive
+    /// normalized weight, so the non-zero pattern is exact).
+    ///
+    /// Inverse of [`encode`] up to edge order (`Graph::new` normalizes).
+    pub fn decode(&self) -> Graph {
+        let n_max = self.mask.len();
+        let num_labels = if n_max == 0 { 0 } else { self.h0.len() / n_max };
+        let n = self.num_nodes;
+        let labels = (0..n)
+            .map(|i| {
+                self.h0[i * num_labels..(i + 1) * num_labels]
+                    .iter()
+                    .position(|&x| x != 0.0)
+                    .unwrap_or(0) as u16
+            })
+            .collect();
+        let mut edges = Vec::with_capacity(self.num_edges);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if self.a_norm[i * n_max + j] != 0.0 {
+                    edges.push((i as u16, j as u16));
+                }
+            }
+        }
+        Graph::new(n, edges, labels)
+    }
+}
+
 /// Encode one graph into padded tensors.
 pub fn encode(g: &Graph, n_max: usize, num_labels: usize) -> Result<EncodedGraph, EncodeError> {
     if g.num_nodes() > n_max {
@@ -117,6 +149,42 @@ impl PackedBatch {
         // as 0-node graphs and produces a harmless score.
         pb
     }
+
+    /// Unpack slot `i` back into the two [`EncodedGraph`]s it was packed
+    /// from (the shared inverse of [`PackedBatch::pack`], used by the
+    /// native and sim engines). `num_nodes` is recovered from the mask
+    /// and `num_edges` from the off-diagonal non-zeros of A' — real
+    /// edges always carry a strictly positive normalized weight, so the
+    /// count is exact. Padding slots come back as 0-node graphs.
+    pub fn unpack_slot(&self, i: usize) -> (EncodedGraph, EncodedGraph) {
+        assert!(i < self.batch, "slot {i} out of range (batch {})", self.batch);
+        let (n, l) = (self.n_max, self.num_labels);
+        let grab = |a: &[f32], h: &[f32], m: &[f32]| {
+            let mask = m[i * n..(i + 1) * n].to_vec();
+            let num_nodes = mask.iter().filter(|&&x| x != 0.0).count();
+            let a_norm = a[i * n * n..(i + 1) * n * n].to_vec();
+            let num_edges = (0..num_nodes)
+                .map(|r| {
+                    a_norm[r * n..r * n + num_nodes]
+                        .iter()
+                        .skip(r + 1)
+                        .filter(|&&x| x != 0.0)
+                        .count()
+                })
+                .sum();
+            EncodedGraph {
+                a_norm,
+                h0: h[i * n * l..(i + 1) * n * l].to_vec(),
+                mask,
+                num_nodes,
+                num_edges,
+            }
+        };
+        (
+            grab(&self.a1, &self.h1, &self.m1),
+            grab(&self.a2, &self.h2, &self.m2),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +222,48 @@ mod tests {
             encode(&g, 4, 29),
             Err(EncodeError::LabelOutOfRange { .. })
         ));
+    }
+
+    #[test]
+    fn unpack_slot_recovers_counts_and_tensors() {
+        let mut rng = Rng::new(3);
+        let pairs: Vec<_> = (0..2)
+            .map(|_| {
+                let g1 = generate(&mut rng, Family::Aids, 32, 29);
+                let g2 = generate(&mut rng, Family::Aids, 32, 29);
+                (encode(&g1, 32, 29).unwrap(), encode(&g2, 32, 29).unwrap())
+            })
+            .collect();
+        let pb = PackedBatch::pack(&pairs, 4);
+        for (i, (e1, e2)) in pairs.iter().enumerate() {
+            let (u1, u2) = pb.unpack_slot(i);
+            // Tensors roundtrip exactly, and the true edge count is
+            // recovered from A' (not the old hardcoded zero).
+            assert_eq!(u1.a_norm, e1.a_norm);
+            assert_eq!(u1.h0, e1.h0);
+            assert_eq!(u1.mask, e1.mask);
+            assert_eq!(u1.num_nodes, e1.num_nodes);
+            assert_eq!(u1.num_edges, e1.num_edges, "slot {i} g1 edge count");
+            assert_eq!(u2.num_edges, e2.num_edges, "slot {i} g2 edge count");
+        }
+        // Padding slots unpack as empty graphs.
+        let (p1, p2) = pb.unpack_slot(3);
+        assert_eq!(p1.num_nodes, 0);
+        assert_eq!(p1.num_edges, 0);
+        assert_eq!(p2.num_nodes, 0);
+    }
+
+    #[test]
+    fn decode_inverts_encode() {
+        let mut rng = Rng::new(4);
+        for _ in 0..5 {
+            let g = generate(&mut rng, Family::Aids, 32, 29);
+            let d = encode(&g, 32, 29).unwrap().decode();
+            assert_eq!(d.num_nodes(), g.num_nodes());
+            assert_eq!(d.num_edges(), g.num_edges());
+            assert_eq!(d.labels(), g.labels());
+            assert_eq!(d.edges(), g.edges(), "Graph::new normalizes edge order");
+        }
     }
 
     #[test]

@@ -18,6 +18,7 @@ use spa_gcn::ged::{exact_ged, ged_similarity};
 use spa_gcn::graph::dataset::GraphDb;
 use spa_gcn::graph::generate::{generate, Family};
 use spa_gcn::report::tables::{self, Context};
+use spa_gcn::runtime::EngineKind;
 use spa_gcn::util::json::arr;
 use spa_gcn::util::rng::Rng;
 
@@ -63,16 +64,22 @@ impl Args {
 }
 
 fn usage() -> ! {
+    // The valid --engine values come straight from the EngineKind enum,
+    // so the help text can never drift from what parses.
+    let kinds: Vec<&str> = EngineKind::ALL.iter().map(EngineKind::as_str).collect();
     eprintln!(
         "usage: spa-gcn <command>\n\
          \n  report <table3|table4|table5|table6|fig10|fig11|replication|sparsity|accuracy|energy|fifo|crosscheck|all>\n\
          \t[--queries N] [--no-pjrt] [--artifacts DIR] [--json OUT.json]\n\
-         \n  serve [--queries N] [--engine xla|native|sim] [--workers K] [--batch-max B]\n\
+         \n  serve [--queries N] [--engine KINDS] [--workers K] [--batch-max B]\n\
          \t[--batch-timeout-us T] [--pipeline-depth D] [--rate QPS] [--artifacts DIR]\n\
-         \t(--pipeline-depth 0 = sequential encode+execute baseline;\n\
+         \t(KINDS: comma-separated engine kinds from {{{}}};\n\
+         \t a list runs heterogeneous lanes, e.g. --engine native,sim;\n\
+         \t --pipeline-depth 0 = sequential encode+execute baseline;\n\
          \t --rate runs open-loop Poisson pacing instead of closed-loop flood)\n\
          \n  gen [--family aids|linux|imdb] [--count N]\n\
-         \n  ged [--nodes N] [--pairs P]"
+         \n  ged [--nodes N] [--pairs P]",
+        kinds.join(", ")
     );
     std::process::exit(2);
 }
@@ -144,7 +151,7 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = ServeConfig {
         artifacts_dir: artifacts_dir(args),
-        engine: args.flag("engine", "xla"),
+        engines: EngineKind::parse_list(&args.flag("engine", "xla"))?,
         queries: args.usize("queries", 1000),
         workers: args.usize("workers", 1),
         batch_max: args.usize("batch-max", 64),

@@ -268,8 +268,7 @@ pub fn measure_native(ctx: &Context, pairs: &[QueryPair]) -> Measured {
 
 pub fn measure_pjrt(ctx: &Context, pairs: &[QueryPair], batch: usize) -> Result<Measured> {
     let mut eng = XlaEngine::load(&ctx.artifacts_dir)?;
-    let sizes = eng.supported_batch_sizes();
-    let b = crate::runtime::pick_batch_size(&sizes, batch);
+    let b = eng.caps().pick_batch_size(batch);
     let t0 = Instant::now();
     let encoded: Vec<_> = pairs
         .iter()
@@ -286,7 +285,7 @@ pub fn measure_pjrt(ctx: &Context, pairs: &[QueryPair], batch: usize) -> Result<
     for chunk in encoded.chunks(b) {
         let pb = PackedBatch::pack(chunk, b);
         let te = Instant::now();
-        let scores = eng.score_batch(&pb)?;
+        let scores = eng.score_batch(&pb)?.scores;
         kernel += te.elapsed().as_secs_f64();
         std::hint::black_box(scores);
     }

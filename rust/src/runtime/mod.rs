@@ -1,7 +1,8 @@
-//! Execution engines for scoring graph-pair batches.
+//! Execution engines for scoring graph-pair batches (the Engine API v2).
 //!
 //! The coordinator (L3) is engine-agnostic: it batches queries into
-//! `PackedBatch`es and hands them to an `Engine`. Three engines exist:
+//! `PackedBatch`es and hands them to an [`Engine`]. Three backends exist,
+//! identified by [`EngineKind`] and constructed through [`EngineBuilder`]:
 //!
 //!  * [`pjrt::XlaEngine`] — the production path: loads the AOT-compiled
 //!    HLO text artifacts (L2 jax model + L1 Pallas kernels) and executes
@@ -10,57 +11,446 @@
 //!    doubles as the "PyG-CPU"-style measured baseline.
 //!  * `sim::engine::SimEngine` — functional result + FPGA cycle report
 //!    from the SPA-GCN cycle simulator (defined in the sim module).
+//!
+//! Engines *declare* what they can do through [`EngineCaps`] (batch
+//! ladder, shape limits, which telemetry they report) instead of being
+//! string-matched, and every [`Engine::score_batch`] call returns a
+//! [`BatchOutput`] carrying per-slot [`QueryTelemetry`] — cycle reports
+//! from the simulator, DMA/execute timing from PJRT, per-slot CPU time
+//! from the native path — so the serving report can surface the paper's
+//! cycle-level numbers (Table 4/5/6, Fig. 11) instead of discarding them.
 
 pub mod native;
 pub mod pjrt;
 
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
 use crate::graph::encode::PackedBatch;
 
-/// Thread-safe constructor for engines; workers call it in-thread.
-pub type EngineFactory = std::sync::Arc<dyn Fn() -> anyhow::Result<Box<dyn Engine>> + Send + Sync>;
+/// The set of engine backends, replacing `&str` dispatch. Parse with
+/// [`std::str::FromStr`] (`"xla" | "xla-fused" | "native" | "sim"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// PJRT-executed AOT artifacts (Pallas-kernel flavor) — production.
+    Xla,
+    /// PJRT-executed fused (pure-jnp) artifact flavor: identical math,
+    /// faster on the CPU PJRT backend (EXPERIMENTS.md §Perf L2).
+    XlaFused,
+    /// Independent rust reference numerics; the measured CPU baseline.
+    Native,
+    /// Functional scores + SPA-GCN cycle simulation.
+    Sim,
+}
 
-/// A batch-scoring backend.
+impl EngineKind {
+    /// Every valid kind, in CLI help order.
+    pub const ALL: [EngineKind; 4] = [
+        EngineKind::Xla,
+        EngineKind::XlaFused,
+        EngineKind::Native,
+        EngineKind::Sim,
+    ];
+
+    /// The stable CLI spelling of this kind.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EngineKind::Xla => "xla",
+            EngineKind::XlaFused => "xla-fused",
+            EngineKind::Native => "native",
+            EngineKind::Sim => "sim",
+        }
+    }
+
+    /// Parse a comma-separated kind list (`"native,sim"`); empty
+    /// segments (trailing commas, stray spaces) are ignored, but the
+    /// list as a whole must name at least one kind. Shared by the CLI
+    /// and the examples so the accepted syntax cannot drift.
+    pub fn parse_list(spec: &str) -> Result<Vec<EngineKind>, EngineError> {
+        let kinds = spec
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::parse)
+            .collect::<Result<Vec<EngineKind>, EngineError>>()?;
+        if kinds.is_empty() {
+            return Err(EngineError::UnknownKind(spec.to_string()));
+        }
+        Ok(kinds)
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = EngineError;
+
+    fn from_str(s: &str) -> Result<Self, EngineError> {
+        EngineKind::ALL
+            .into_iter()
+            .find(|k| k.as_str() == s)
+            .ok_or_else(|| EngineError::UnknownKind(s.to_string()))
+    }
+}
+
+/// Static capability descriptor an engine publishes at construction.
+///
+/// The batch ladder is sorted (and deduplicated) once here, so batch-size
+/// selection never re-sorts on the hot path, and the telemetry flags tell
+/// the coordinator which [`QueryTelemetry`] fields this engine fills.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineCaps {
+    /// Human-readable engine name for logs/metrics (e.g. `"xla-pjrt"`).
+    pub name: String,
+    /// Batch sizes the engine can execute directly, ascending, non-empty.
+    ladder: Vec<usize>,
+    /// Largest graph (node count) the engine accepts.
+    pub max_nodes: usize,
+    /// Label vocabulary size the engine was built for.
+    pub max_labels: usize,
+    /// Fills [`QueryTelemetry::cycles`] (the cycle simulator).
+    pub reports_cycles: bool,
+    /// Fills [`QueryTelemetry::exec`] (device upload/execute/download).
+    pub reports_exec_timing: bool,
+}
+
+impl EngineCaps {
+    /// Build a descriptor; `ladder` is sorted and deduplicated here and
+    /// must be non-empty. Telemetry flags default to off — see
+    /// [`EngineCaps::with_cycle_reports`] / [`EngineCaps::with_exec_timing`].
+    pub fn new(
+        name: impl Into<String>,
+        mut ladder: Vec<usize>,
+        max_nodes: usize,
+        max_labels: usize,
+    ) -> Self {
+        ladder.sort_unstable();
+        ladder.dedup();
+        assert!(!ladder.is_empty(), "engine must support at least one batch size");
+        EngineCaps {
+            name: name.into(),
+            ladder,
+            max_nodes,
+            max_labels,
+            reports_cycles: false,
+            reports_exec_timing: false,
+        }
+    }
+
+    /// Mark the engine as filling [`QueryTelemetry::cycles`].
+    pub fn with_cycle_reports(mut self) -> Self {
+        self.reports_cycles = true;
+        self
+    }
+
+    /// Mark the engine as filling [`QueryTelemetry::exec`].
+    pub fn with_exec_timing(mut self) -> Self {
+        self.reports_exec_timing = true;
+        self
+    }
+
+    /// The supported batch sizes, ascending.
+    pub fn batch_ladder(&self) -> &[usize] {
+        &self.ladder
+    }
+
+    /// The largest supported batch size.
+    pub fn max_batch(&self) -> usize {
+        *self.ladder.last().expect("ladder is non-empty by construction")
+    }
+
+    /// Pick the smallest supported batch size >= `pending`, or the
+    /// largest available if `pending` exceeds them all (the caller then
+    /// loops). No allocation, no re-sort: the ladder is sorted once at
+    /// construction.
+    pub fn pick_batch_size(&self, pending: usize) -> usize {
+        for &s in &self.ladder {
+            if s >= pending {
+                return s;
+            }
+        }
+        self.max_batch()
+    }
+}
+
+/// Cycle-level result of simulating one query (the serving-path subset
+/// of the simulator's per-query report).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CycleReport {
+    /// Steady-state interval between query completions, cycles.
+    pub interval: u64,
+    /// One-query latency, cycles.
+    pub latency: u64,
+}
+
+/// Timing breakdown of one device execute call (for Fig. 11-style
+/// analyses). All values are per-chunk, µs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ExecTiming {
+    /// Host-side input literal construction ("DMA write" analogue), µs.
+    pub upload_us: f64,
+    /// Device execute, µs.
+    pub execute_us: f64,
+    /// Output literal -> host vec ("DMA read" analogue), µs.
+    pub download_us: f64,
+}
+
+/// Per-slot telemetry attached to a [`BatchOutput`]. Which fields are
+/// filled is declared by the engine's [`EngineCaps`] flags; padding slots
+/// carry an empty default.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QueryTelemetry {
+    /// FPGA cycle report from the cycle simulator (`reports_cycles`).
+    pub cycles: Option<CycleReport>,
+    /// Upload/execute/download split of the chunk this slot rode in
+    /// (`reports_exec_timing`; shared by every slot of the chunk).
+    pub exec: Option<ExecTiming>,
+    /// CPU time spent scoring this slot, µs (native engine).
+    pub cpu_us: Option<f64>,
+}
+
+/// What one [`Engine::score_batch`] call returns: one similarity score
+/// per slot (padding slots included — the caller truncates) plus one
+/// [`QueryTelemetry`] per slot.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// One similarity per slot, `len == batch.batch`.
+    pub scores: Vec<f32>,
+    /// One telemetry record per slot, `len == scores.len()`.
+    pub telemetry: Vec<QueryTelemetry>,
+}
+
+impl BatchOutput {
+    /// Output with `scores` and default (empty) telemetry per slot.
+    pub fn untimed(scores: Vec<f32>) -> Self {
+        let telemetry = vec![QueryTelemetry::default(); scores.len()];
+        BatchOutput { scores, telemetry }
+    }
+}
+
+/// Typed errors at the engine trait boundary (replaces `anyhow` and the
+/// stringly `Outcome::EngineError(String)`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    /// A CLI/config engine name that is not an [`EngineKind`].
+    UnknownKind(String),
+    /// The engine could not be constructed or its lane has shut down.
+    Unavailable {
+        /// What failed (construction error, dead stage, ...).
+        reason: String,
+    },
+    /// `score_batch` was handed a batch size outside the ladder.
+    UnsupportedBatch {
+        /// The offending packed batch size.
+        batch: usize,
+        /// The ladder the engine advertises.
+        ladder: Vec<usize>,
+    },
+    /// A query that cannot be encoded for the engine's fixed shapes.
+    InvalidInput {
+        /// Human-readable encode failure.
+        detail: String,
+    },
+    /// The underlying backend (PJRT, simulator, ...) failed.
+    Backend {
+        /// Engine name from its caps.
+        engine: String,
+        /// Backend error rendered to text.
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::UnknownKind(s) => {
+                let valid: Vec<&str> = EngineKind::ALL.iter().map(|k| k.as_str()).collect();
+                write!(f, "unknown engine '{s}' (expected one of {})", valid.join("|"))
+            }
+            EngineError::Unavailable { reason } => write!(f, "engine unavailable: {reason}"),
+            EngineError::UnsupportedBatch { batch, ladder } => {
+                write!(f, "no artifact for batch size {batch} (ladder {ladder:?})")
+            }
+            EngineError::InvalidInput { detail } => write!(f, "invalid input: {detail}"),
+            EngineError::Backend { engine, detail } => write!(f, "{engine} backend: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Thread-safe constructor for engines; workers call it in-thread.
+pub type EngineFactory =
+    Arc<dyn Fn() -> Result<Box<dyn Engine>, EngineError> + Send + Sync>;
+
+/// A batch-scoring backend (Engine API v2).
 ///
 /// Note: deliberately NOT `Send` — the xla crate's PJRT handles are
 /// `Rc`-based. Worker threads construct their own engine via an
-/// `EngineFactory` (which IS Send) inside the thread.
+/// [`EngineFactory`] (which IS `Send`) inside the thread.
 pub trait Engine {
-    /// Human-readable engine name for logs/metrics.
-    fn name(&self) -> &str;
+    /// The engine's static capabilities: name, batch ladder, shape
+    /// limits, and which telemetry fields it reports.
+    fn caps(&self) -> &EngineCaps;
 
-    /// Batch sizes this engine can execute directly. The batcher selects
-    /// from these; `score_batch` must receive one of them.
-    fn supported_batch_sizes(&self) -> Vec<usize>;
-
-    /// Score `batch.batch` pairs; returns one similarity per slot
-    /// (padding slots included — caller truncates).
-    fn score_batch(&mut self, batch: &PackedBatch) -> anyhow::Result<Vec<f32>>;
+    /// Score `batch.batch` pairs. `batch.batch` must be on the caps
+    /// ladder; the scores vector covers every slot (padding included —
+    /// the caller truncates) and telemetry is per-slot.
+    fn score_batch(&mut self, batch: &PackedBatch) -> Result<BatchOutput, EngineError>;
 }
 
-/// Pick the smallest supported batch size >= `pending`, or the largest
-/// available if `pending` exceeds them all (the caller then loops).
-pub fn pick_batch_size(supported: &[usize], pending: usize) -> usize {
-    let mut sizes = supported.to_vec();
-    sizes.sort_unstable();
-    for &s in &sizes {
-        if s >= pending {
-            return s;
+/// Typed engine construction (replaces string dispatch): binds an
+/// [`EngineKind`] to an artifacts directory and builds boxed engines —
+/// directly via [`EngineBuilder::build`], or as a `Send` + `Sync`
+/// [`EngineFactory`] for executor stages that must construct their
+/// (non-`Send`) engine in-thread.
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    kind: EngineKind,
+    artifacts_dir: PathBuf,
+}
+
+impl EngineBuilder {
+    /// Bind `kind` to the artifacts it loads from.
+    pub fn new(kind: EngineKind, artifacts_dir: impl Into<PathBuf>) -> Self {
+        EngineBuilder {
+            kind,
+            artifacts_dir: artifacts_dir.into(),
         }
     }
-    *sizes.last().expect("engine supports no batch sizes")
+
+    /// The kind this builder constructs.
+    pub fn kind(&self) -> EngineKind {
+        self.kind
+    }
+
+    /// The artifacts directory engines load from.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Construct the engine now, in this thread.
+    pub fn build(&self) -> Result<Box<dyn Engine>, EngineError> {
+        let unavailable = |err: anyhow::Error| EngineError::Unavailable {
+            reason: format!("constructing {} engine: {err:#}", self.kind),
+        };
+        Ok(match self.kind {
+            EngineKind::Xla => {
+                Box::new(pjrt::XlaEngine::load(&self.artifacts_dir).map_err(unavailable)?)
+            }
+            EngineKind::XlaFused => {
+                Box::new(pjrt::XlaEngine::load_fused(&self.artifacts_dir).map_err(unavailable)?)
+            }
+            EngineKind::Native => {
+                Box::new(native::NativeEngine::load(&self.artifacts_dir).map_err(unavailable)?)
+            }
+            EngineKind::Sim => Box::new(
+                crate::sim::engine::SimEngine::load(
+                    &self.artifacts_dir,
+                    crate::sim::config::ArchConfig::spa_gcn(),
+                    crate::sim::platform::U280,
+                )
+                .map_err(unavailable)?,
+            ),
+        })
+    }
+
+    /// Package this builder as the `Send` closure executor stages call
+    /// in-thread.
+    pub fn into_factory(self) -> EngineFactory {
+        Arc::new(move || self.build())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::str::FromStr;
 
     #[test]
-    fn pick_batch_rounds_up() {
-        let sizes = vec![1, 4, 16, 64];
-        assert_eq!(pick_batch_size(&sizes, 1), 1);
-        assert_eq!(pick_batch_size(&sizes, 3), 4);
-        assert_eq!(pick_batch_size(&sizes, 16), 16);
-        assert_eq!(pick_batch_size(&sizes, 17), 64);
-        assert_eq!(pick_batch_size(&sizes, 1000), 64);
+    fn caps_pick_batch_rounds_up_without_resort() {
+        // Deliberately unsorted + duplicated input: the constructor
+        // normalizes once.
+        let caps = EngineCaps::new("t", vec![64, 1, 16, 4, 16], 32, 29);
+        assert_eq!(caps.batch_ladder(), &[1, 4, 16, 64]);
+        assert_eq!(caps.pick_batch_size(1), 1);
+        assert_eq!(caps.pick_batch_size(3), 4);
+        assert_eq!(caps.pick_batch_size(16), 16);
+        assert_eq!(caps.pick_batch_size(17), 64);
+        assert_eq!(caps.pick_batch_size(1000), 64);
+        assert_eq!(caps.max_batch(), 64);
+    }
+
+    #[test]
+    fn caps_flags_default_off() {
+        let caps = EngineCaps::new("t", vec![1], 8, 4);
+        assert!(!caps.reports_cycles && !caps.reports_exec_timing);
+        let caps = caps.with_cycle_reports().with_exec_timing();
+        assert!(caps.reports_cycles && caps.reports_exec_timing);
+    }
+
+    #[test]
+    fn kind_roundtrips_through_strings() {
+        for kind in EngineKind::ALL {
+            assert_eq!(EngineKind::from_str(kind.as_str()).unwrap(), kind);
+            assert_eq!(kind.to_string(), kind.as_str());
+        }
+    }
+
+    #[test]
+    fn parse_list_handles_lists_and_stray_commas() {
+        assert_eq!(
+            EngineKind::parse_list("native,sim").unwrap(),
+            vec![EngineKind::Native, EngineKind::Sim]
+        );
+        assert_eq!(
+            EngineKind::parse_list(" xla , native, ").unwrap(),
+            vec![EngineKind::Xla, EngineKind::Native]
+        );
+        assert!(EngineKind::parse_list("native,bogus").is_err());
+        assert!(EngineKind::parse_list("").is_err());
+        assert!(EngineKind::parse_list(",").is_err());
+    }
+
+    #[test]
+    fn kind_parse_rejects_unknown() {
+        let err = EngineKind::from_str("bogus").unwrap_err();
+        assert!(matches!(err, EngineError::UnknownKind(ref s) if s == "bogus"));
+        let msg = err.to_string();
+        for kind in EngineKind::ALL {
+            assert!(msg.contains(kind.as_str()), "help list missing {kind}: {msg}");
+        }
+    }
+
+    #[test]
+    fn engine_errors_render() {
+        let e = EngineError::UnsupportedBatch {
+            batch: 7,
+            ladder: vec![1, 4],
+        };
+        assert!(e.to_string().contains('7'));
+        let e = EngineError::Backend {
+            engine: "xla-pjrt".into(),
+            detail: "boom".into(),
+        };
+        assert!(e.to_string().contains("xla-pjrt") && e.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn untimed_output_covers_every_slot() {
+        let out = BatchOutput::untimed(vec![0.1, 0.2, 0.3]);
+        assert_eq!(out.telemetry.len(), 3);
+        assert!(out.telemetry.iter().all(|t| *t == QueryTelemetry::default()));
+    }
+
+    #[test]
+    fn builder_reports_kind_and_dir() {
+        let b = EngineBuilder::new(EngineKind::Native, "artifacts");
+        assert_eq!(b.kind(), EngineKind::Native);
+        assert!(b.artifacts_dir().ends_with("artifacts"));
     }
 }

@@ -5,6 +5,7 @@
 //!    PyG model in the Table 6 reproduction.
 
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -13,33 +14,39 @@ use crate::nn::config::{ArtifactsMeta, ModelConfig};
 use crate::nn::simgnn::simgnn_score;
 use crate::nn::weights::Weights;
 
-use super::Engine;
+use super::{BatchOutput, Engine, EngineCaps, EngineError, QueryTelemetry};
 
 /// CPU reference engine; any batch size (it just loops over pairs).
+/// Reports per-slot CPU time as [`QueryTelemetry::cpu_us`].
 pub struct NativeEngine {
     cfg: ModelConfig,
     weights: Weights,
+    caps: EngineCaps,
 }
 
 impl NativeEngine {
+    /// Load config + weights from an artifacts directory.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
         let meta = ArtifactsMeta::load(artifacts_dir)
             .context("loading artifacts/meta.json (run `make artifacts`)")?;
         let weights = Weights::load(&meta.config, artifacts_dir)?;
-        Ok(NativeEngine {
-            cfg: meta.config,
-            weights,
-        })
+        Ok(Self::new(meta.config, weights))
     }
 
+    /// Build from an in-memory config + weights (tests, report harness).
     pub fn new(cfg: ModelConfig, weights: Weights) -> Self {
-        NativeEngine { cfg, weights }
+        // The loop handles any size; advertise the same ladder as the AOT
+        // artifacts so the batcher treats both engines identically.
+        let caps = EngineCaps::new("native-cpu", vec![1, 4, 16, 64], cfg.n_max, cfg.num_labels);
+        NativeEngine { cfg, weights, caps }
     }
 
+    /// The model configuration this engine scores with.
     pub fn config(&self) -> &ModelConfig {
         &self.cfg
     }
 
+    /// The loaded model weights.
     pub fn weights(&self) -> &Weights {
         &self.weights
     }
@@ -48,45 +55,28 @@ impl NativeEngine {
     pub fn score_pair(&self, g1: &EncodedGraph, g2: &EncodedGraph) -> f32 {
         simgnn_score(&self.cfg, &self.weights, g1, g2)
     }
-
-    /// Unpack one slot of a packed batch back into EncodedGraphs.
-    fn unpack_slot(&self, b: &PackedBatch, i: usize) -> (EncodedGraph, EncodedGraph) {
-        let n = b.n_max;
-        let l = b.num_labels;
-        let grab = |a: &[f32], h: &[f32], m: &[f32]| EncodedGraph {
-            a_norm: a[i * n * n..(i + 1) * n * n].to_vec(),
-            h0: h[i * n * l..(i + 1) * n * l].to_vec(),
-            mask: m[i * n..(i + 1) * n].to_vec(),
-            num_nodes: m[i * n..(i + 1) * n].iter().filter(|&&x| x != 0.0).count(),
-            num_edges: 0, // unused on this path
-        };
-        (
-            grab(&b.a1, &b.h1, &b.m1),
-            grab(&b.a2, &b.h2, &b.m2),
-        )
-    }
 }
 
 impl Engine for NativeEngine {
-    fn name(&self) -> &str {
-        "native-cpu"
+    fn caps(&self) -> &EngineCaps {
+        &self.caps
     }
 
-    fn supported_batch_sizes(&self) -> Vec<usize> {
-        // The loop handles any size; advertise the same ladder as the AOT
-        // artifacts so the batcher treats both engines identically.
-        vec![1, 4, 16, 64]
-    }
-
-    fn score_batch(&mut self, batch: &PackedBatch) -> Result<Vec<f32>> {
-        let mut out = Vec::with_capacity(batch.batch);
+    fn score_batch(&mut self, batch: &PackedBatch) -> Result<BatchOutput, EngineError> {
+        let mut scores = Vec::with_capacity(batch.batch);
+        let mut telemetry = Vec::with_capacity(batch.batch);
         for i in 0..batch.batch {
-            let (g1, g2) = self.unpack_slot(batch, i);
+            let (g1, g2) = batch.unpack_slot(i);
             // Empty padding slots: mask is all-zero; score is well-defined
             // (sigmoid of bias path) and discarded by the caller.
-            out.push(simgnn_score(&self.cfg, &self.weights, &g1, &g2));
+            let t0 = Instant::now();
+            scores.push(simgnn_score(&self.cfg, &self.weights, &g1, &g2));
+            telemetry.push(QueryTelemetry {
+                cpu_us: Some(t0.elapsed().as_secs_f64() * 1e6),
+                ..QueryTelemetry::default()
+            });
         }
-        Ok(out)
+        Ok(BatchOutput { scores, telemetry })
     }
 }
 
@@ -145,11 +135,27 @@ mod tests {
             })
             .collect();
         let pb = PackedBatch::pack(&pairs, 4);
-        let scores = eng.score_batch(&pb).unwrap();
-        assert_eq!(scores.len(), 4);
+        let out = eng.score_batch(&pb).unwrap();
+        assert_eq!(out.scores.len(), 4);
+        assert_eq!(out.telemetry.len(), 4);
         for (i, (g1, g2)) in pairs.iter().enumerate() {
             let want = simgnn_score(eng.config(), eng.weights(), g1, g2);
-            assert!((scores[i] - want).abs() < 1e-6);
+            assert!((out.scores[i] - want).abs() < 1e-6);
         }
+        // Per-slot CPU time is reported on every slot.
+        assert!(out.telemetry.iter().all(|t| t.cpu_us.is_some()));
+        assert!(out.telemetry.iter().all(|t| t.cycles.is_none() && t.exec.is_none()));
+    }
+
+    #[test]
+    fn caps_describe_the_cpu_profile() {
+        let eng = tiny();
+        let caps = eng.caps();
+        assert_eq!(caps.name, "native-cpu");
+        assert_eq!(caps.batch_ladder(), &[1, 4, 16, 64]);
+        assert_eq!(caps.max_nodes, 8);
+        assert_eq!(caps.max_labels, 4);
+        assert!(!caps.reports_cycles);
+        assert!(!caps.reports_exec_timing);
     }
 }

@@ -16,7 +16,7 @@ use anyhow::{Context, Result};
 use crate::graph::encode::PackedBatch;
 use crate::nn::config::ArtifactsMeta;
 
-use super::Engine;
+use super::{BatchOutput, Engine, EngineCaps, EngineError, ExecTiming, QueryTelemetry};
 
 /// One compiled SimGNN executable (fixed batch size).
 struct Compiled {
@@ -24,25 +24,16 @@ struct Compiled {
     batch: usize,
 }
 
-/// Timing breakdown of one execute call (for Fig. 11-style analyses).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct ExecTiming {
-    /// Host-side input literal construction ("DMA write" analogue), µs.
-    pub upload_us: f64,
-    /// Device execute, µs.
-    pub execute_us: f64,
-    /// Output literal -> host vec ("DMA read" analogue), µs.
-    pub download_us: f64,
-}
-
 /// The production engine: PJRT CPU client + per-batch-size executables.
+/// Reports the upload/execute/download split of every chunk as
+/// [`QueryTelemetry::exec`] (the "DMA write / execute / DMA read"
+/// analogue of Fig. 11).
 pub struct XlaEngine {
     client: xla::PjRtClient,
     executables: BTreeMap<usize, Compiled>,
     meta: ArtifactsMeta,
     artifacts_dir: PathBuf,
-    /// Timing of the most recent `score_batch` call.
-    pub last_timing: ExecTiming,
+    caps: EngineCaps,
 }
 
 impl XlaEngine {
@@ -76,23 +67,38 @@ impl XlaEngine {
             executables.insert(b, Compiled { exe, batch: b });
         }
         anyhow::ensure!(!executables.is_empty(), "no artifacts found for {prefix}");
+        let name = if prefix == "simgnn_fused" {
+            "xla-pjrt-fused"
+        } else {
+            "xla-pjrt"
+        };
+        let caps = EngineCaps::new(
+            name,
+            executables.keys().copied().collect(),
+            meta.config.n_max,
+            meta.config.num_labels,
+        )
+        .with_exec_timing();
         Ok(XlaEngine {
             client,
             executables,
             meta,
             artifacts_dir: artifacts_dir.to_path_buf(),
-            last_timing: ExecTiming::default(),
+            caps,
         })
     }
 
+    /// The artifact manifest (config + batch ladder) this engine loaded.
     pub fn meta(&self) -> &ArtifactsMeta {
         &self.meta
     }
 
+    /// Where the HLO artifacts were loaded from.
     pub fn artifacts_dir(&self) -> &Path {
         &self.artifacts_dir
     }
 
+    /// The PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -111,6 +117,14 @@ impl XlaEngine {
         ];
         let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
         Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Wrap a backend failure with this engine's name.
+    fn backend_err(&self, err: impl std::fmt::Display) -> EngineError {
+        EngineError::Backend {
+            engine: self.caps.name.clone(),
+            detail: err.to_string(),
+        }
     }
 }
 
@@ -132,43 +146,60 @@ fn lit2(data: &[f32], b: usize, r: usize) -> Result<xla::Literal> {
     Ok(xla::Literal::vec1(data).reshape(&[b as i64, r as i64])?)
 }
 
+/// One PJRT launch: build the input literals ("DMA write"), execute,
+/// download the scores ("DMA read"); returns the per-step timing split.
+fn run_compiled(compiled: &Compiled, batch: &PackedBatch) -> Result<(Vec<f32>, ExecTiming)> {
+    let (b, n, l) = (batch.batch, batch.n_max, batch.num_labels);
+    let t0 = Instant::now();
+    let lits = [
+        lit3(&batch.a1, b, n, n)?,
+        lit3(&batch.h1, b, n, l)?,
+        lit2(&batch.m1, b, n)?,
+        lit3(&batch.a2, b, n, n)?,
+        lit3(&batch.h2, b, n, l)?,
+        lit2(&batch.m2, b, n)?,
+    ];
+    let t1 = Instant::now();
+    let outputs = compiled.exe.execute::<xla::Literal>(&lits)?;
+    let t2 = Instant::now();
+    // to_literal_sync is the device->host transfer (the "DMA read"); on
+    // backends that execute lazily, any compute not finished by the
+    // execute() return is attributed to the download at this sync point.
+    let scores = outputs[0][0].to_literal_sync()?.to_tuple1()?.to_vec::<f32>()?;
+    let t3 = Instant::now();
+    anyhow::ensure!(scores.len() == b, "expected {b} scores, got {}", scores.len());
+    let timing = ExecTiming {
+        upload_us: (t1 - t0).as_secs_f64() * 1e6,
+        execute_us: (t2 - t1).as_secs_f64() * 1e6,
+        download_us: (t3 - t2).as_secs_f64() * 1e6,
+    };
+    Ok((scores, timing))
+}
+
 impl Engine for XlaEngine {
-    fn name(&self) -> &str {
-        "xla-pjrt"
+    fn caps(&self) -> &EngineCaps {
+        &self.caps
     }
 
-    fn supported_batch_sizes(&self) -> Vec<usize> {
-        self.executables.keys().copied().collect()
-    }
-
-    fn score_batch(&mut self, batch: &PackedBatch) -> Result<Vec<f32>> {
+    fn score_batch(&mut self, batch: &PackedBatch) -> Result<BatchOutput, EngineError> {
         let compiled = self
             .executables
             .get(&batch.batch)
-            .with_context(|| format!("no artifact for batch size {}", batch.batch))?;
+            .ok_or_else(|| EngineError::UnsupportedBatch {
+                batch: batch.batch,
+                ladder: self.caps.batch_ladder().to_vec(),
+            })?;
         debug_assert_eq!(compiled.batch, batch.batch);
-        let (b, n, l) = (batch.batch, batch.n_max, batch.num_labels);
-
-        let t0 = Instant::now();
-        let lits = [
-            lit3(&batch.a1, b, n, n)?,
-            lit3(&batch.h1, b, n, l)?,
-            lit2(&batch.m1, b, n)?,
-            lit3(&batch.a2, b, n, n)?,
-            lit3(&batch.h2, b, n, l)?,
-            lit2(&batch.m2, b, n)?,
+        let (scores, timing) =
+            run_compiled(compiled, batch).map_err(|e| self.backend_err(format!("{e:#}")))?;
+        // The chunk executes as one launch: every slot shares its timing.
+        let telemetry = vec![
+            QueryTelemetry {
+                exec: Some(timing),
+                ..QueryTelemetry::default()
+            };
+            batch.batch
         ];
-        let t1 = Instant::now();
-        let result = compiled.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let t2 = Instant::now();
-        let scores = result.to_tuple1()?.to_vec::<f32>()?;
-        let t3 = Instant::now();
-        self.last_timing = ExecTiming {
-            upload_us: (t1 - t0).as_secs_f64() * 1e6,
-            execute_us: (t2 - t1).as_secs_f64() * 1e6,
-            download_us: (t3 - t2).as_secs_f64() * 1e6,
-        };
-        anyhow::ensure!(scores.len() == b, "expected {b} scores, got {}", scores.len());
-        Ok(scores)
+        Ok(BatchOutput { scores, telemetry })
     }
 }

@@ -11,7 +11,9 @@ use crate::graph::Graph;
 use crate::nn::config::{ArtifactsMeta, ModelConfig};
 use crate::nn::simgnn::simgnn_forward;
 use crate::nn::weights::Weights;
-use crate::runtime::Engine;
+use crate::runtime::{
+    BatchOutput, CycleReport, Engine, EngineCaps, EngineError, QueryTelemetry,
+};
 
 use super::config::ArchConfig;
 use super::gcn::{kernel_ms, simulate_query, QueryCycles};
@@ -60,46 +62,55 @@ impl SimStats {
 }
 
 /// Cycle-simulating engine (functionally identical to NativeEngine).
+/// Reports per-query interval/latency cycles as
+/// [`QueryTelemetry::cycles`] and accumulates [`SimStats`] across every
+/// query it scores — including batches served through the `dyn Engine`
+/// trait object.
 pub struct SimEngine {
     cfg: ModelConfig,
     weights: Weights,
     arch: ArchConfig,
     plat: Platform,
+    caps: EngineCaps,
+    /// Accumulated cycle statistics over every query scored so far.
     pub stats: SimStats,
 }
 
 impl SimEngine {
+    /// Load config + weights from an artifacts directory and simulate
+    /// under `arch` on `plat`.
     pub fn load(artifacts_dir: &Path, arch: ArchConfig, plat: Platform) -> Result<Self> {
         let meta = ArtifactsMeta::load(artifacts_dir)
             .context("loading artifacts/meta.json (run `make artifacts`)")?;
         let weights = Weights::load(&meta.config, artifacts_dir)?;
-        Ok(SimEngine {
-            cfg: meta.config,
-            weights,
-            arch,
-            plat,
-            stats: SimStats::default(),
-        })
+        Ok(Self::new(meta.config, weights, arch, plat))
     }
 
+    /// Build from an in-memory config + weights (tests, benches).
     pub fn new(cfg: ModelConfig, weights: Weights, arch: ArchConfig, plat: Platform) -> Self {
+        let caps = EngineCaps::new("spa-gcn-sim", vec![1, 4, 16, 64], cfg.n_max, cfg.num_labels)
+            .with_cycle_reports();
         SimEngine {
             cfg,
             weights,
             arch,
             plat,
+            caps,
             stats: SimStats::default(),
         }
     }
 
+    /// The model configuration this engine scores with.
     pub fn config(&self) -> &ModelConfig {
         &self.cfg
     }
 
+    /// The simulated accelerator architecture.
     pub fn arch(&self) -> &ArchConfig {
         &self.arch
     }
 
+    /// The simulated FPGA platform (clock/bandwidth model).
     pub fn platform(&self) -> &Platform {
         &self.plat
     }
@@ -136,34 +147,45 @@ impl SimEngine {
 }
 
 impl Engine for SimEngine {
-    fn name(&self) -> &str {
-        "spa-gcn-sim"
+    fn caps(&self) -> &EngineCaps {
+        &self.caps
     }
 
-    fn supported_batch_sizes(&self) -> Vec<usize> {
-        vec![1, 4, 16, 64]
-    }
-
-    /// Functional scoring of a packed batch (cycle stats are NOT absorbed
-    /// on this path — PackedBatch has no Graph structure; use `run_query`
-    /// for simulation-aware serving).
-    fn score_batch(&mut self, batch: &PackedBatch) -> Result<Vec<f32>> {
-        let n = batch.n_max;
-        let l = batch.num_labels;
-        let mut out = Vec::with_capacity(batch.batch);
+    /// Functional scoring of a packed batch WITH cycle simulation: each
+    /// real slot's graph structure is recovered from its padded tensors
+    /// (`PackedBatch::unpack_slot` + `EncodedGraph::decode`), the cycle
+    /// simulator runs on it, its stats are absorbed into [`SimEngine::stats`]
+    /// and its interval/latency cycles ride back as per-slot telemetry.
+    /// Padding slots score the harmless bias-path value and carry no
+    /// cycle report.
+    fn score_batch(&mut self, batch: &PackedBatch) -> std::result::Result<BatchOutput, EngineError> {
+        let mut scores = Vec::with_capacity(batch.batch);
+        let mut telemetry = Vec::with_capacity(batch.batch);
         for i in 0..batch.batch {
-            let grab = |a: &[f32], h: &[f32], m: &[f32]| EncodedGraph {
-                a_norm: a[i * n * n..(i + 1) * n * n].to_vec(),
-                h0: h[i * n * l..(i + 1) * n * l].to_vec(),
-                mask: m[i * n..(i + 1) * n].to_vec(),
-                num_nodes: m[i * n..(i + 1) * n].iter().filter(|&&x| x != 0.0).count(),
-                num_edges: 0,
-            };
-            let e1 = grab(&batch.a1, &batch.h1, &batch.m1);
-            let e2 = grab(&batch.a2, &batch.h2, &batch.m2);
-            out.push(simgnn_forward(&self.cfg, &self.weights, &e1, &e2).score);
+            let (e1, e2) = batch.unpack_slot(i);
+            if e1.num_nodes == 0 && e2.num_nodes == 0 {
+                // Zero-padding slot: no real query to simulate.
+                scores.push(simgnn_forward(&self.cfg, &self.weights, &e1, &e2).score);
+                telemetry.push(QueryTelemetry::default());
+                continue;
+            }
+            let (g1, g2) = (e1.decode(), e2.decode());
+            let (score, qc) =
+                self.run_encoded(&g1, &e1, &g2, &e2)
+                    .map_err(|err| EngineError::Backend {
+                        engine: self.caps.name.clone(),
+                        detail: format!("{err:#}"),
+                    })?;
+            scores.push(score);
+            telemetry.push(QueryTelemetry {
+                cycles: Some(CycleReport {
+                    interval: qc.interval,
+                    latency: qc.latency,
+                }),
+                ..QueryTelemetry::default()
+            });
         }
-        Ok(out)
+        Ok(BatchOutput { scores, telemetry })
     }
 }
 
@@ -218,6 +240,83 @@ mod tests {
         assert_eq!(eng.stats.queries, 3);
         assert!(eng.stats.agg_edges > 0);
         assert!(eng.stats.mean_kernel_ms(&U280, &ArchConfig::spa_gcn()) > 0.0);
+    }
+
+    /// Build 3 encoded pairs + the same pairs packed to batch size 4.
+    fn packed_workload(eng: &SimEngine) -> (Vec<(EncodedGraph, EncodedGraph)>, PackedBatch) {
+        let mut rng = Rng::new(84);
+        let f = Family::ErdosRenyi { n: 6, p_millis: 300 };
+        let pairs: Vec<_> = (0..3)
+            .map(|_| {
+                let g1 = generate(&mut rng, f, eng.cfg.n_max, eng.cfg.num_labels);
+                let g2 = generate(&mut rng, f, eng.cfg.n_max, eng.cfg.num_labels);
+                (
+                    encode(&g1, eng.cfg.n_max, eng.cfg.num_labels).unwrap(),
+                    encode(&g2, eng.cfg.n_max, eng.cfg.num_labels).unwrap(),
+                )
+            })
+            .collect();
+        let pb = PackedBatch::pack(&pairs, 4);
+        (pairs, pb)
+    }
+
+    #[test]
+    fn score_batch_through_trait_object_absorbs_stats() {
+        // Regression: the old score_batch silently skipped cycle
+        // accounting, so serving `--engine sim` produced empty reports.
+        let mut eng = tiny_engine();
+        let (_, pb) = packed_workload(&eng);
+        let out = {
+            let dyn_eng: &mut dyn Engine = &mut eng;
+            assert!(dyn_eng.caps().reports_cycles);
+            dyn_eng.score_batch(&pb).unwrap()
+        };
+        assert_eq!(eng.stats.queries, 3, "one stats entry per real slot");
+        assert!(eng.stats.agg_edges > 0, "decoded graphs must carry edges");
+        // Real slots report cycles, the padding slot does not.
+        for t in &out.telemetry[..3] {
+            let c = t.cycles.expect("real slot carries a cycle report");
+            assert!(c.interval > 0 && c.latency > 0);
+        }
+        assert_eq!(out.telemetry[3].cycles, None);
+    }
+
+    #[test]
+    fn native_and_sim_agree_through_dyn_engine() {
+        // Cross-engine parity: identical scores for the same PackedBatch
+        // through both trait objects, and telemetry well-formed per caps
+        // profile (sim reports cycles, native per-slot CPU time).
+        let mut sim = tiny_engine();
+        let native = crate::runtime::native::NativeEngine::new(
+            sim.cfg.clone(),
+            sim.weights.clone(),
+        );
+        let (_, pb) = packed_workload(&sim);
+        let mut engines: Vec<Box<dyn Engine>> = vec![Box::new(native), Box::new(sim)];
+        let outs: Vec<BatchOutput> = engines
+            .iter_mut()
+            .map(|e| e.score_batch(&pb).unwrap())
+            .collect();
+        assert_eq!(outs[0].scores, outs[1].scores, "same numerics, same scores");
+        for (eng, out) in engines.iter().zip(&outs) {
+            let caps = eng.caps();
+            assert_eq!(out.telemetry.len(), out.scores.len());
+            for (i, t) in out.telemetry.iter().enumerate() {
+                let padding = i >= 3;
+                assert_eq!(
+                    t.cycles.is_some(),
+                    caps.reports_cycles && !padding,
+                    "{}: slot {i} cycle telemetry vs caps",
+                    caps.name
+                );
+                assert_eq!(
+                    t.exec.is_some(),
+                    caps.reports_exec_timing,
+                    "{}: slot {i} exec telemetry vs caps",
+                    caps.name
+                );
+            }
+        }
     }
 
     #[test]

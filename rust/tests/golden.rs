@@ -110,10 +110,13 @@ fn pjrt_matches_python_scores() {
     }
     let mut engine = XlaEngine::load(&artifacts_dir()).unwrap();
     // Exercise two batch paths: exact-fit (if 16 >= pairs) and singles.
-    let sizes = engine.supported_batch_sizes();
-    let b = spa_gcn::runtime::pick_batch_size(&sizes, g.pairs.len());
+    let b = engine.caps().pick_batch_size(g.pairs.len());
     let packed = PackedBatch::pack(&g.pairs, b);
-    let scores = engine.score_batch(&packed).unwrap();
+    let out = engine.score_batch(&packed).unwrap();
+    let scores = out.scores;
+    // Every slot of the PJRT chunk shares its exec-timing telemetry.
+    assert_eq!(out.telemetry.len(), b);
+    assert!(out.telemetry.iter().all(|t| t.exec.is_some()));
     for (i, want) in g.scores.iter().enumerate() {
         assert!(
             (scores[i] - want).abs() < 1e-4,
@@ -123,7 +126,7 @@ fn pjrt_matches_python_scores() {
     }
     // batch-of-1 path
     let single = PackedBatch::pack(&g.pairs[..1], 1);
-    let s1 = engine.score_batch(&single).unwrap();
+    let s1 = engine.score_batch(&single).unwrap().scores;
     assert!((s1[0] - g.scores[0]).abs() < 1e-4);
 }
 
@@ -171,10 +174,12 @@ fn fused_artifacts_match_pallas_artifacts() {
     }
     let mut pallas = XlaEngine::load(&artifacts_dir()).unwrap();
     let mut fused = XlaEngine::load_fused(&artifacts_dir()).unwrap();
-    let b = spa_gcn::runtime::pick_batch_size(&pallas.supported_batch_sizes(), g.pairs.len());
+    assert_eq!(pallas.caps().name, "xla-pjrt");
+    assert_eq!(fused.caps().name, "xla-pjrt-fused");
+    let b = pallas.caps().pick_batch_size(g.pairs.len());
     let packed = PackedBatch::pack(&g.pairs, b);
-    let s1 = pallas.score_batch(&packed).unwrap();
-    let s2 = fused.score_batch(&packed).unwrap();
+    let s1 = pallas.score_batch(&packed).unwrap().scores;
+    let s2 = fused.score_batch(&packed).unwrap().scores;
     for (i, (a, c)) in s1.iter().zip(s2.iter()).enumerate() {
         assert!((a - c).abs() < 1e-4, "pair {i}: pallas {a} vs fused {c}");
     }
