@@ -47,11 +47,22 @@ fn run(
         g("mean batch size"),
     );
     println!(
-        "       stage split: queue {} ms  encode {} ms  execute {} ms\n",
+        "       stage split: queue {} ms  encode {} ms  execute {} ms",
         g("queue wait mean (ms)"),
         g("encode mean (ms)"),
         g("execute mean (ms)"),
     );
+    // MAC/element work rows are keyed per engine name (so a mixed
+    // native,native-dense run keeps the two policies apart).
+    for row in &t.rows {
+        if row[0].ends_with(" macs mean")
+            || row[0].ends_with(" ft elements mean")
+            || row[0].ends_with(" agg elements mean")
+        {
+            println!("       {}: {}", row[0], row[1]);
+        }
+    }
+    println!();
     let tput = t
         .get("offered throughput (query/s)")
         .ok_or_else(|| anyhow::anyhow!("serve table missing offered-throughput row"))?;
@@ -76,6 +87,21 @@ fn main() -> anyhow::Result<()> {
 
     println!("== heterogeneous lanes: native + sim in one pipeline ==");
     run(&[EngineKind::Native, EngineKind::Sim], 1000, 2, 64, 2)?;
+
+    println!("== native scoring path: dense vs sparse (CSR + one-hot FT) ==");
+    // Same numerics, two compute paths: the MAC/element rows quantify the
+    // skipped work (Table 6's sparsity saving, measured in software) and
+    // the throughput ratio is what that saving buys on this machine.
+    let dense_qps = run(&[EngineKind::NativeDense], 2000, 1, 64, 2)?;
+    let sparse_qps = run(&[EngineKind::Native], 2000, 1, 64, 2)?;
+    println!(
+        "sparse-path speedup: {:.2}x (sparse {sparse_qps:.0} q/s vs dense {dense_qps:.0} q/s)\n",
+        if dense_qps > 0.0 {
+            sparse_qps / dense_qps
+        } else {
+            0.0
+        }
+    );
 
     println!("== encode/execute overlap: pipelined vs fused-sequential ==");
     let sequential = run(&[EngineKind::Native], 2000, 1, 64, 0)?;

@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     // 3. Encode + score on the accelerator runtime.
     let e1 = encode(&g1, cfg.n_max, cfg.num_labels)?;
     let e2 = encode(&g2, cfg.n_max, cfg.num_labels)?;
-    let batch = PackedBatch::pack(&[(e1.clone(), e2.clone())], 1);
+    let batch = PackedBatch::pack(&[(e1.clone(), e2.clone())], 1)?;
     let out = engine.score_batch(&batch)?;
     let scores = out.scores;
     println!("PJRT similarity score: {:.6}", scores[0]);
@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 5. An identical pair should score strictly higher than the edited one.
-    let same = PackedBatch::pack(&[(e1.clone(), e1.clone())], 1);
+    let same = PackedBatch::pack(&[(e1.clone(), e1.clone())], 1)?;
     let same_score = engine.score_batch(&same)?.scores[0];
     println!("identical-pair score:    {same_score:.6}");
     println!(

@@ -176,6 +176,26 @@ mod tests {
     }
 
     #[test]
+    fn empty_batcher_never_releases_a_batch() {
+        // Regression for the executor-lane panic: an empty flush/poll
+        // must yield None — never Some(vec![]) — because an empty batch
+        // reaching the encoder would hit PackError::EmptyBatch downstream.
+        let mut b = Batcher::new(BatchPolicy::default());
+        let now = Instant::now();
+        assert!(b.flush(now).is_none());
+        assert!(b.poll(now + Duration::from_secs(1)).is_none());
+        assert!(b.push_all(Vec::new(), now).is_empty());
+        assert_eq!(b.time_to_deadline(now), None, "empty burst must not arm a deadline");
+        assert!(b.flush(now).is_none());
+        // A real push then a full drain returns the batcher to the same
+        // release-nothing state.
+        b.push(q(0), now);
+        assert_eq!(b.flush(now).unwrap().len(), 1);
+        assert!(b.flush(now).is_none());
+        assert!(b.poll(now + Duration::from_secs(1)).is_none());
+    }
+
+    #[test]
     fn flush_drains_everything_in_order() {
         let mut b = Batcher::new(BatchPolicy {
             max_batch: 10,

@@ -19,6 +19,27 @@ use crate::util::stats::Samples;
 
 use super::channel::ChannelSnapshot;
 
+/// One engine's MAC/element sample set (see [`Metrics::mac_counts`]).
+#[derive(Debug)]
+pub struct MacSamples {
+    /// Multiply-accumulates charged per scored query.
+    pub macs: Samples,
+    /// Feature-transform input elements consumed per scored query.
+    pub ft_elements: Samples,
+    /// Aggregation adjacency entries consumed per scored query.
+    pub agg_elements: Samples,
+}
+
+impl MacSamples {
+    fn new() -> Self {
+        MacSamples {
+            macs: Samples::new(),
+            ft_elements: Samples::new(),
+            agg_elements: Samples::new(),
+        }
+    }
+}
+
 /// One worker lane's identity in the final report.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LaneInfo {
@@ -56,6 +77,12 @@ pub struct Metrics {
     pub dma_download_us: Samples,
     /// Per-slot CPU scoring time, µs (native engine).
     pub engine_cpu_us: Samples,
+    /// MAC/element work counts per scored query, keyed by engine name
+    /// (engines with `reports_macs`). Keyed — not pooled — so a mixed
+    /// `native,native-dense` deployment keeps the two policies apart;
+    /// the dense/sparse ratio of the `macs` row is the Table 6-style
+    /// schedule saving.
+    pub mac_counts: BTreeMap<String, MacSamples>,
     /// Scored-query count per engine name.
     pub by_engine: BTreeMap<String, u64>,
     /// Successfully scored queries.
@@ -93,6 +120,7 @@ impl Metrics {
             device_execute_us: Samples::new(),
             dma_download_us: Samples::new(),
             engine_cpu_us: Samples::new(),
+            mac_counts: BTreeMap::new(),
             by_engine: BTreeMap::new(),
             scored: 0,
             rejected: 0,
@@ -134,6 +162,18 @@ impl Metrics {
                 }
                 if let Some(cpu) = r.telemetry.cpu_us {
                     self.engine_cpu_us.push(cpu);
+                }
+                if let Some(m) = r.telemetry.macs {
+                    let name = r.engine.as_deref().unwrap_or("unknown");
+                    // contains_key first: no per-query String allocation
+                    // once the engine's entry exists.
+                    if !self.mac_counts.contains_key(name) {
+                        self.mac_counts.insert(name.to_string(), MacSamples::new());
+                    }
+                    let s = self.mac_counts.get_mut(name).expect("inserted above");
+                    s.macs.push(m.macs as f64);
+                    s.ft_elements.push(m.ft_elements as f64);
+                    s.agg_elements.push(m.agg_elements as f64);
                 }
             }
             super::query::Outcome::Rejected(_) => self.rejected += 1,
@@ -241,6 +281,20 @@ impl Metrics {
                 fmt(self.engine_cpu_us.mean() / 1000.0),
             ]);
         }
+        for (engine, s) in &self.mac_counts {
+            t.row(vec![
+                format!("engine {engine} macs mean"),
+                fmt(s.macs.mean()),
+            ]);
+            t.row(vec![
+                format!("engine {engine} ft elements mean"),
+                fmt(s.ft_elements.mean()),
+            ]);
+            t.row(vec![
+                format!("engine {engine} agg elements mean"),
+                fmt(s.agg_elements.mean()),
+            ]);
+        }
         // Channel occupancy: peak depth >= 2 on an exec lane means the
         // encoder genuinely ran ahead of the executor (overlap) — a peak
         // of 1 is just a single hand-off in flight.
@@ -261,7 +315,7 @@ impl Metrics {
 mod tests {
     use std::sync::Arc;
 
-    use crate::runtime::{CycleReport, EngineError, ExecTiming, QueryTelemetry};
+    use crate::runtime::{CycleReport, EngineError, ExecTiming, MacCounts, QueryTelemetry};
 
     use super::super::query::{Outcome, QueryResult, StageTiming};
     use super::*;
@@ -321,6 +375,11 @@ mod tests {
         m.record(&xla);
         let mut native = res(Outcome::Score(0.7)).with_engine(Arc::from("native-cpu"));
         native.telemetry.cpu_us = Some(42.0);
+        native.telemetry.macs = Some(MacCounts {
+            macs: 5000,
+            ft_elements: 60,
+            agg_elements: 170,
+        });
         m.record(&native);
 
         assert_eq!(m.by_engine["spa-gcn-sim"], 1);
@@ -330,12 +389,45 @@ mod tests {
         assert_eq!(m.cycle_latency.mean(), 1500.0);
         assert_eq!(m.device_execute_us.mean(), 90.0);
         assert_eq!(m.engine_cpu_us.mean(), 42.0);
+        let native_macs = &m.mac_counts["native-cpu"];
+        assert_eq!(native_macs.macs.mean(), 5000.0);
+        assert_eq!(native_macs.ft_elements.mean(), 60.0);
+        assert_eq!(native_macs.agg_elements.mean(), 170.0);
 
         let rendered = m.render_table("t").render();
         assert!(rendered.contains("engine spa-gcn-sim scored"));
         assert!(rendered.contains("sim interval cycles mean"));
         assert!(rendered.contains("device execute mean (ms)"));
         assert!(rendered.contains("engine cpu mean (ms)"));
+        assert!(rendered.contains("engine native-cpu macs mean"));
+        assert!(rendered.contains("engine native-cpu ft elements mean"));
+        assert!(rendered.contains("engine native-cpu agg elements mean"));
+    }
+
+    #[test]
+    fn mac_rows_keyed_per_engine_in_mixed_deployments() {
+        // A native + native-dense pipeline must NOT blend the two
+        // policies' counts — the rows exist to compare them.
+        let mut m = Metrics::new();
+        let mut sparse = res(Outcome::Score(0.5)).with_engine(Arc::from("native-cpu"));
+        sparse.telemetry.macs = Some(MacCounts {
+            macs: 2_000,
+            ft_elements: 50,
+            agg_elements: 150,
+        });
+        m.record(&sparse);
+        let mut dense = res(Outcome::Score(0.5)).with_engine(Arc::from("native-cpu-dense"));
+        dense.telemetry.macs = Some(MacCounts {
+            macs: 180_000,
+            ft_elements: 2_000,
+            agg_elements: 3_000,
+        });
+        m.record(&dense);
+        assert_eq!(m.mac_counts["native-cpu"].macs.mean(), 2_000.0);
+        assert_eq!(m.mac_counts["native-cpu-dense"].macs.mean(), 180_000.0);
+        let rendered = m.render_table("t").render();
+        assert!(rendered.contains("engine native-cpu macs mean"));
+        assert!(rendered.contains("engine native-cpu-dense macs mean"));
     }
 
     #[test]
@@ -346,6 +438,7 @@ mod tests {
         assert!(!rendered.contains("sim interval cycles"));
         assert!(!rendered.contains("dma upload"));
         assert!(!rendered.contains("engine cpu"));
+        assert!(!rendered.contains("macs mean"));
     }
 
     #[test]

@@ -489,7 +489,22 @@ fn encode_chunk(
         return None;
     }
     let eff = caps.pick_batch_size(ok_queries.len());
-    let packed = PackedBatch::pack(&pairs, eff);
+    // pack() is typed-fallible (empty chunk / ladder overflow). Neither
+    // can happen here — ok_queries is non-empty and chunks fit the
+    // ladder — but a bug upstream must answer queries with an error, not
+    // take the lane down.
+    let packed = match PackedBatch::pack(&pairs, eff) {
+        Ok(packed) => packed,
+        Err(e) => {
+            let err = EngineError::InvalidInput {
+                detail: format!("pack: {e}"),
+            };
+            for q in ok_queries {
+                let _ = results.send(QueryResult::engine_error(&q, err.clone(), 0));
+            }
+            return None;
+        }
+    };
     Some(EncodedChunk {
         queries: ok_queries,
         packed,

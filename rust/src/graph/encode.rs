@@ -1,10 +1,65 @@
 //! Padding + one-hot encoding: `Graph` -> the dense tensors the AOT HLO
-//! artifacts take as input (DESIGN.md "Fixed shapes / padding").
+//! artifacts take as input (DESIGN.md "Fixed shapes / padding"), plus the
+//! CSR view of the normalized adjacency the sparse native scoring path
+//! consumes (DESIGN.md S13).
 
 use super::normalize::normalized_dense;
 use super::Graph;
 
-/// A graph encoded as padded dense tensors (all row-major f32).
+/// CSR view of the normalized adjacency A' over the REAL rows only
+/// (`num_nodes` rows — padded rows have no entries by construction).
+/// Column indices are ascending within each row, so a CSR traversal
+/// accumulates in exactly the order the zero-skipping dense loop does
+/// (bit-for-bit score parity between the two paths).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrAdj {
+    /// Row pointers, `num_rows() + 1` entries.
+    pub indptr: Vec<u32>,
+    /// Column index of each non-zero weight (always a real node).
+    pub indices: Vec<u16>,
+    /// Normalized edge weights, parallel to `indices`.
+    pub weights: Vec<f32>,
+}
+
+impl CsrAdj {
+    /// Build from the dense padded A' by scanning its first `rows` rows
+    /// (the real nodes); used by [`encode`] and [`PackedBatch::unpack_slot`]
+    /// so both construction paths share one definition of the view.
+    pub fn from_dense(a_norm: &[f32], rows: usize, n_max: usize) -> Self {
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut weights = Vec::new();
+        indptr.push(0);
+        for i in 0..rows {
+            for j in 0..n_max {
+                let w = a_norm[i * n_max + j];
+                if w != 0.0 {
+                    indices.push(j as u16);
+                    weights.push(w);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        CsrAdj {
+            indptr,
+            indices,
+            weights,
+        }
+    }
+
+    /// Real rows covered by this view.
+    pub fn num_rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// Non-zero count (self-loops + both directions of every edge).
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// A graph encoded as padded dense tensors (all row-major f32), carrying
+/// the CSR adjacency view alongside.
 #[derive(Debug, Clone)]
 pub struct EncodedGraph {
     /// Normalized adjacency A', n_max * n_max.
@@ -13,6 +68,8 @@ pub struct EncodedGraph {
     pub h0: Vec<f32>,
     /// Real-node mask, n_max.
     pub mask: Vec<f32>,
+    /// CSR view of A' over the real rows (sparse scoring path).
+    pub csr: CsrAdj,
     /// Real node count (pre-padding).
     pub num_nodes: usize,
     /// Undirected edge count (pre-padding, without self-loops).
@@ -41,6 +98,42 @@ impl std::fmt::Display for EncodeError {
 
 impl std::error::Error for EncodeError {}
 
+/// A real-node mask that is not a `1...10...0` prefix: every row scan in
+/// the decode/unpack path (edge recovery, label recovery, sparse
+/// real-row iteration) relies on real rows forming a prefix, so a
+/// corrupted batch must fail loudly instead of silently mis-decoding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NonPrefixMask {
+    /// Index of the first non-zero mask entry found after a zero.
+    pub index: usize,
+}
+
+impl std::fmt::Display for NonPrefixMask {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "real-node mask is not a prefix (non-zero entry at index {} after a zero)",
+            self.index
+        )
+    }
+}
+
+impl std::error::Error for NonPrefixMask {}
+
+/// Validate that every non-zero mask entry precedes every zero entry.
+/// Returns the real-node count on success. (The sparse forward pass
+/// `debug_assert`s the same invariant where it trusts `num_nodes`; this
+/// is the typed-error boundary for corrupted batches in release builds.)
+fn validate_prefix_mask(mask: &[f32]) -> Result<usize, NonPrefixMask> {
+    let num_nodes = mask.iter().filter(|&&x| x != 0.0).count();
+    match mask[num_nodes..].iter().position(|&x| x != 0.0) {
+        None => Ok(num_nodes),
+        Some(off) => Err(NonPrefixMask {
+            index: num_nodes + off,
+        }),
+    }
+}
+
 impl EncodedGraph {
     /// Reconstruct the graph structure from the padded tensors: node
     /// count from the mask, labels from the one-hot rows, edges from the
@@ -49,10 +142,12 @@ impl EncodedGraph {
     /// normalized weight, so the non-zero pattern is exact).
     ///
     /// Inverse of [`encode`] up to edge order (`Graph::new` normalizes).
-    pub fn decode(&self) -> Graph {
+    /// Fails when the real-node mask is not a prefix — the row scans
+    /// below would silently miss real rows otherwise.
+    pub fn decode(&self) -> Result<Graph, NonPrefixMask> {
         let n_max = self.mask.len();
         let num_labels = if n_max == 0 { 0 } else { self.h0.len() / n_max };
-        let n = self.num_nodes;
+        let n = validate_prefix_mask(&self.mask)?;
         let labels = (0..n)
             .map(|i| {
                 self.h0[i * num_labels..(i + 1) * num_labels]
@@ -69,11 +164,11 @@ impl EncodedGraph {
                 }
             }
         }
-        Graph::new(n, edges, labels)
+        Ok(Graph::new(n, edges, labels))
     }
 }
 
-/// Encode one graph into padded tensors.
+/// Encode one graph into padded tensors (+ the CSR adjacency view).
 pub fn encode(g: &Graph, n_max: usize, num_labels: usize) -> Result<EncodedGraph, EncodeError> {
     if g.num_nodes() > n_max {
         return Err(EncodeError::TooManyNodes {
@@ -95,14 +190,41 @@ pub fn encode(g: &Graph, n_max: usize, num_labels: usize) -> Result<EncodedGraph
     for m in mask.iter_mut().take(g.num_nodes()) {
         *m = 1.0;
     }
+    let a_norm = normalized_dense(g, n_max);
+    let csr = CsrAdj::from_dense(&a_norm, g.num_nodes(), n_max);
     Ok(EncodedGraph {
-        a_norm: normalized_dense(g, n_max),
+        a_norm,
         h0,
         mask,
+        csr,
         num_nodes: g.num_nodes(),
         num_edges: g.num_edges(),
     })
 }
+
+/// Why a chunk of encoded pairs could not be packed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PackError {
+    /// No pairs to pack. The batcher never releases an empty batch, but
+    /// an empty flush must surface as a typed error instead of taking an
+    /// executor lane down via an assert.
+    EmptyBatch,
+    /// More pairs than the logical batch size can hold.
+    Overflow { pairs: usize, batch: usize },
+}
+
+impl std::fmt::Display for PackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PackError::EmptyBatch => write!(f, "cannot pack an empty pair list"),
+            PackError::Overflow { pairs, batch } => {
+                write!(f, "{pairs} pairs exceed logical batch size {batch}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PackError {}
 
 /// Batch of encoded pairs packed contiguously for one PJRT execute call.
 #[derive(Debug, Clone)]
@@ -121,9 +243,18 @@ pub struct PackedBatch {
 impl PackedBatch {
     /// Pack `pairs.len()` encoded pairs into batch tensors of logical batch
     /// size `batch` (>= pairs.len(); the tail is zero padding whose scores
-    /// are discarded by the caller).
-    pub fn pack(pairs: &[(EncodedGraph, EncodedGraph)], batch: usize) -> Self {
-        assert!(!pairs.is_empty() && pairs.len() <= batch);
+    /// are discarded by the caller). Empty or oversized inputs return a
+    /// typed [`PackError`] instead of panicking an executor lane.
+    pub fn pack(pairs: &[(EncodedGraph, EncodedGraph)], batch: usize) -> Result<Self, PackError> {
+        if pairs.is_empty() {
+            return Err(PackError::EmptyBatch);
+        }
+        if pairs.len() > batch {
+            return Err(PackError::Overflow {
+                pairs: pairs.len(),
+                batch,
+            });
+        }
         let n = pairs[0].0.mask.len();
         let l = pairs[0].0.h0.len() / n;
         let mut pb = PackedBatch {
@@ -147,7 +278,7 @@ impl PackedBatch {
         }
         // Zero-padded tail graphs have empty masks; every stage treats them
         // as 0-node graphs and produces a harmless score.
-        pb
+        Ok(pb)
     }
 
     /// Unpack slot `i` back into the two [`EncodedGraph`]s it was packed
@@ -156,34 +287,37 @@ impl PackedBatch {
     /// and `num_edges` from the off-diagonal non-zeros of A' — real
     /// edges always carry a strictly positive normalized weight, so the
     /// count is exact. Padding slots come back as 0-node graphs.
-    pub fn unpack_slot(&self, i: usize) -> (EncodedGraph, EncodedGraph) {
+    ///
+    /// The recovered mask must be a prefix (`1...10...0`): the edge and
+    /// label scans — and the sparse path's real-row iteration — cover
+    /// rows `0..num_nodes`, so a corrupted non-prefix mask returns a
+    /// typed error instead of silently dropping real rows.
+    pub fn unpack_slot(&self, i: usize) -> Result<(EncodedGraph, EncodedGraph), NonPrefixMask> {
         assert!(i < self.batch, "slot {i} out of range (batch {})", self.batch);
         let (n, l) = (self.n_max, self.num_labels);
-        let grab = |a: &[f32], h: &[f32], m: &[f32]| {
+        let grab = |a: &[f32], h: &[f32], m: &[f32]| -> Result<EncodedGraph, NonPrefixMask> {
             let mask = m[i * n..(i + 1) * n].to_vec();
-            let num_nodes = mask.iter().filter(|&&x| x != 0.0).count();
+            let num_nodes = validate_prefix_mask(&mask)?;
             let a_norm = a[i * n * n..(i + 1) * n * n].to_vec();
-            let num_edges = (0..num_nodes)
-                .map(|r| {
-                    a_norm[r * n..r * n + num_nodes]
-                        .iter()
-                        .skip(r + 1)
-                        .filter(|&&x| x != 0.0)
-                        .count()
-                })
-                .sum();
-            EncodedGraph {
+            let csr = CsrAdj::from_dense(&a_norm, num_nodes, n);
+            // A' carries one strictly positive self-loop per real node
+            // plus both directions of every edge, so the CSR nonzero
+            // count gives the edge count without a second dense scan
+            // (this runs per slot on the scoring hot path).
+            let num_edges = csr.nnz().saturating_sub(num_nodes) / 2;
+            Ok(EncodedGraph {
                 a_norm,
                 h0: h[i * n * l..(i + 1) * n * l].to_vec(),
                 mask,
+                csr,
                 num_nodes,
                 num_edges,
-            }
+            })
         };
-        (
-            grab(&self.a1, &self.h1, &self.m1),
-            grab(&self.a2, &self.h2, &self.m2),
-        )
+        Ok((
+            grab(&self.a1, &self.h1, &self.m1)?,
+            grab(&self.a2, &self.h2, &self.m2)?,
+        ))
     }
 }
 
@@ -211,6 +345,30 @@ mod tests {
     }
 
     #[test]
+    fn csr_view_matches_dense() {
+        let mut rng = Rng::new(11);
+        for _ in 0..5 {
+            let g = generate(&mut rng, Family::Aids, 32, 29);
+            let e = encode(&g, 32, 29).unwrap();
+            assert_eq!(e.csr.num_rows(), g.num_nodes());
+            // entries: self-loop per node + both directions per edge
+            assert_eq!(e.csr.nnz(), g.num_nodes() + 2 * g.num_edges());
+            // Rebuild dense from CSR and compare the real rows exactly.
+            let mut rebuilt = vec![0.0f32; 32 * 32];
+            for r in 0..e.csr.num_rows() {
+                let (s, t) = (e.csr.indptr[r] as usize, e.csr.indptr[r + 1] as usize);
+                let row = &e.csr.indices[s..t];
+                // ascending column order within each row
+                assert!(row.windows(2).all(|w| w[0] < w[1]), "row {r} not sorted");
+                for (k, &c) in row.iter().enumerate() {
+                    rebuilt[r * 32 + c as usize] = e.csr.weights[s + k];
+                }
+            }
+            assert_eq!(rebuilt, e.a_norm);
+        }
+    }
+
+    #[test]
     fn rejects_oversize_and_bad_labels() {
         let g = Graph::new(5, vec![(0, 1)], vec![0; 5]);
         assert!(matches!(
@@ -225,6 +383,20 @@ mod tests {
     }
 
     #[test]
+    fn pack_rejects_empty_and_overflow() {
+        let mut rng = Rng::new(17);
+        let g = generate(&mut rng, Family::Aids, 32, 29);
+        let e = encode(&g, 32, 29).unwrap();
+        assert_eq!(PackedBatch::pack(&[], 4).unwrap_err(), PackError::EmptyBatch);
+        let pairs = vec![(e.clone(), e.clone()); 3];
+        assert_eq!(
+            PackedBatch::pack(&pairs, 2).unwrap_err(),
+            PackError::Overflow { pairs: 3, batch: 2 }
+        );
+        assert!(PackedBatch::pack(&pairs, 3).is_ok());
+    }
+
+    #[test]
     fn unpack_slot_recovers_counts_and_tensors() {
         let mut rng = Rng::new(3);
         let pairs: Vec<_> = (0..2)
@@ -234,9 +406,9 @@ mod tests {
                 (encode(&g1, 32, 29).unwrap(), encode(&g2, 32, 29).unwrap())
             })
             .collect();
-        let pb = PackedBatch::pack(&pairs, 4);
+        let pb = PackedBatch::pack(&pairs, 4).unwrap();
         for (i, (e1, e2)) in pairs.iter().enumerate() {
-            let (u1, u2) = pb.unpack_slot(i);
+            let (u1, u2) = pb.unpack_slot(i).unwrap();
             // Tensors roundtrip exactly, and the true edge count is
             // recovered from A' (not the old hardcoded zero).
             assert_eq!(u1.a_norm, e1.a_norm);
@@ -245,12 +417,43 @@ mod tests {
             assert_eq!(u1.num_nodes, e1.num_nodes);
             assert_eq!(u1.num_edges, e1.num_edges, "slot {i} g1 edge count");
             assert_eq!(u2.num_edges, e2.num_edges, "slot {i} g2 edge count");
+            // The CSR view is rebuilt identically on unpack.
+            assert_eq!(u1.csr, e1.csr, "slot {i} g1 CSR roundtrip");
+            assert_eq!(u2.csr, e2.csr, "slot {i} g2 CSR roundtrip");
         }
         // Padding slots unpack as empty graphs.
-        let (p1, p2) = pb.unpack_slot(3);
+        let (p1, p2) = pb.unpack_slot(3).unwrap();
         assert_eq!(p1.num_nodes, 0);
         assert_eq!(p1.num_edges, 0);
+        assert_eq!(p1.csr.nnz(), 0);
         assert_eq!(p2.num_nodes, 0);
+    }
+
+    #[test]
+    fn unpack_rejects_non_prefix_mask() {
+        let mut rng = Rng::new(5);
+        let g1 = generate(&mut rng, Family::Aids, 32, 29);
+        let g2 = generate(&mut rng, Family::Aids, 32, 29);
+        let e1 = encode(&g1, 32, 29).unwrap();
+        let e2 = encode(&g2, 32, 29).unwrap();
+        let mut pb = PackedBatch::pack(&[(e1, e2)], 2).unwrap();
+        // Corrupt slot 0's g1 mask: clear an interior entry so a real row
+        // trails a zero — `num_nodes` (non-zero count) no longer covers
+        // every real row and the scans would silently drop one.
+        pb.m1[1] = 0.0;
+        let err = pb.unpack_slot(0).unwrap_err();
+        assert!(err.index >= 1, "offending index reported: {err}");
+        // The other slot (all-zero padding) is still fine.
+        assert!(pb.unpack_slot(1).is_ok());
+    }
+
+    #[test]
+    fn decode_rejects_non_prefix_mask() {
+        let mut rng = Rng::new(6);
+        let g = generate(&mut rng, Family::Aids, 32, 29);
+        let mut e = encode(&g, 32, 29).unwrap();
+        e.mask[0] = 0.0; // first row zeroed, later rows still real
+        assert!(e.decode().is_err());
     }
 
     #[test]
@@ -258,7 +461,7 @@ mod tests {
         let mut rng = Rng::new(4);
         for _ in 0..5 {
             let g = generate(&mut rng, Family::Aids, 32, 29);
-            let d = encode(&g, 32, 29).unwrap().decode();
+            let d = encode(&g, 32, 29).unwrap().decode().unwrap();
             assert_eq!(d.num_nodes(), g.num_nodes());
             assert_eq!(d.num_edges(), g.num_edges());
             assert_eq!(d.labels(), g.labels());
@@ -273,7 +476,7 @@ mod tests {
         let g2 = generate(&mut rng, Family::Aids, 32, 29);
         let e1 = encode(&g1, 32, 29).unwrap();
         let e2 = encode(&g2, 32, 29).unwrap();
-        let pb = PackedBatch::pack(&[(e1.clone(), e2.clone())], 4);
+        let pb = PackedBatch::pack(&[(e1.clone(), e2.clone())], 4).unwrap();
         assert_eq!(pb.a1.len(), 4 * 32 * 32);
         assert_eq!(&pb.a1[..32 * 32], e1.a_norm.as_slice());
         assert_eq!(&pb.m2[..32], e2.mask.as_slice());

@@ -5,6 +5,16 @@ use std::path::Path;
 
 use crate::util::json::{parse, Json};
 
+/// The batch-size ladder the AOT artifacts are compiled for
+/// (python/compile writes one HLO per size). Every engine derives its
+/// advertised ladder from the same `meta.json` when loading artifacts
+/// and from this constant when built in-memory — one ladder source, so
+/// the native/sim ladders cannot drift from the manifest PJRT compiles
+/// from. (When an old `meta.json` omits the manifest entry AND the
+/// artifact set is partial, PJRT advertises the subset that actually
+/// compiled; the manifest, not this constant, is the contract.)
+pub const AOT_BATCH_LADDER: [usize; 4] = [1, 4, 16, 64];
+
 /// Static SimGNN configuration (see python/compile/config.py for docs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
@@ -81,6 +91,12 @@ impl ModelConfig {
 pub struct ArtifactsMeta {
     pub config: ModelConfig,
     pub batch_sizes: Vec<usize>,
+    /// Whether `batch_sizes` came from an explicit
+    /// `artifact_batch_sizes` manifest entry (vs the
+    /// [`AOT_BATCH_LADDER`] fallback). An explicit entry is a promise
+    /// the files exist: the PJRT loader hard-fails on a missing one,
+    /// but tolerates gaps under the fallback (older artifact sets).
+    pub ladder_from_manifest: bool,
     pub sparsity_l2: f64,
     pub sparsity_l3: f64,
 }
@@ -89,15 +105,25 @@ impl ArtifactsMeta {
     pub fn load(artifacts_dir: &Path) -> anyhow::Result<Self> {
         let text = std::fs::read_to_string(artifacts_dir.join("meta.json"))?;
         let v = parse(&text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    /// Parse a `meta.json` document. A manifest without
+    /// `artifact_batch_sizes` advertises the shared [`AOT_BATCH_LADDER`]
+    /// (the ladder python/compile emits), keeping every engine on one
+    /// ladder source.
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
         let config = ModelConfig::from_json(v.get("config"))?;
-        let batch_sizes = v
+        let manifest_sizes = v
             .get("artifact_batch_sizes")
             .as_arr()
-            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
-            .unwrap_or_else(|| vec![1]);
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect::<Vec<_>>());
+        let ladder_from_manifest = manifest_sizes.is_some();
+        let batch_sizes = manifest_sizes.unwrap_or_else(|| AOT_BATCH_LADDER.to_vec());
         Ok(ArtifactsMeta {
             config,
             batch_sizes,
+            ladder_from_manifest,
             sparsity_l2: v
                 .get("sparsity")
                 .get("layer2_input_sparsity")
@@ -124,6 +150,28 @@ mod tests {
         assert_eq!(c.filters, [64, 32, 16]);
         assert_eq!(c.embed_dim(), 16);
         assert_eq!(c.feature_dims(), [29, 64, 32]);
+    }
+
+    #[test]
+    fn meta_without_ladder_defaults_to_shared_constant() {
+        let v = parse(
+            r#"{"config": {"filters": [64, 32, 16],
+                "relu_mask": [true, true, false]}}"#,
+        )
+        .unwrap();
+        let meta = ArtifactsMeta::from_json(&v).unwrap();
+        assert_eq!(meta.batch_sizes, AOT_BATCH_LADDER.to_vec());
+        assert!(!meta.ladder_from_manifest, "fallback ladder is not a promise");
+        // An explicit manifest ladder wins over the constant.
+        let v = parse(
+            r#"{"config": {"filters": [64, 32, 16],
+                "relu_mask": [true, true, false]},
+                "artifact_batch_sizes": [1, 8]}"#,
+        )
+        .unwrap();
+        let meta = ArtifactsMeta::from_json(&v).unwrap();
+        assert_eq!(meta.batch_sizes, vec![1, 8]);
+        assert!(meta.ladder_from_manifest, "explicit ladder is a promise");
     }
 
     #[test]

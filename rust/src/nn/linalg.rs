@@ -24,6 +24,119 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     out
 }
 
+/// Sparse aggregation: `out[rows_out, f] = CSR(A') @ x`, touching only
+/// the `indptr.len() - 1` real rows (padded rows of `out` stay zero, so
+/// downstream masked stages see exactly what the dense path produces).
+/// Column indices ascend within each row — the same accumulation order
+/// as [`matmul`]'s zero-skipping inner loop, so the two paths agree
+/// bit-for-bit, not just within tolerance.
+///
+/// Returns the output and the MAC count (`nnz * f`) — the software
+/// analogue of the paper's Table 6 "useful work" accounting.
+pub fn csr_spmm(
+    indptr: &[u32],
+    indices: &[u16],
+    weights: &[f32],
+    x: &[f32],
+    rows_out: usize,
+    f: usize,
+) -> (Vec<f32>, u64) {
+    debug_assert_eq!(indices.len(), weights.len());
+    debug_assert!(!indptr.is_empty() && indptr.len() - 1 <= rows_out);
+    debug_assert_eq!(x.len() % f, 0);
+    let mut out = vec![0.0f32; rows_out * f];
+    for i in 0..indptr.len() - 1 {
+        let orow = &mut out[i * f..(i + 1) * f];
+        for k in indptr[i] as usize..indptr[i + 1] as usize {
+            let w = weights[k];
+            let xrow = &x[indices[k] as usize * f..(indices[k] as usize + 1) * f];
+            for (o, &xv) in orow.iter_mut().zip(xrow.iter()) {
+                *o += w * xv;
+            }
+        }
+    }
+    let macs = indices.len() as u64 * f as u64;
+    (out, macs)
+}
+
+/// Layer-0 feature transform for one-hot inputs: row `i` of the output
+/// is `h[i, lab] * w[lab, :]` — a row-select from the weight matrix
+/// instead of a full `H @ W` (the paper's §3.4 one-hot shortcut). Only
+/// the first `rows` rows are touched; the rest of the `rows_out x f_out`
+/// output stays zero. All-zero rows (possible only on corrupted input —
+/// encode always emits one-hot rows) select nothing and stay zero, which
+/// matches the dense matmul exactly.
+///
+/// Returns `(out, nonzeros, macs)`: one nonzero and `f_out` MACs per
+/// selecting row.
+pub fn onehot_gather(
+    h: &[f32],
+    w: &[f32],
+    rows: usize,
+    rows_out: usize,
+    f_in: usize,
+    f_out: usize,
+) -> (Vec<f32>, u64, u64) {
+    assert!(rows <= rows_out);
+    assert_eq!(w.len(), f_in * f_out, "w shape");
+    let mut out = vec![0.0f32; rows_out * f_out];
+    let mut nnz = 0u64;
+    for i in 0..rows {
+        let hrow = &h[i * f_in..(i + 1) * f_in];
+        let Some(lab) = hrow.iter().position(|&x| x != 0.0) else {
+            continue;
+        };
+        debug_assert!(
+            hrow[lab + 1..].iter().all(|&x| x == 0.0),
+            "row {i} is not one-hot"
+        );
+        nnz += 1;
+        let v = hrow[lab];
+        let wrow = &w[lab * f_out..(lab + 1) * f_out];
+        for (o, &wv) in out[i * f_out..(i + 1) * f_out].iter_mut().zip(wrow.iter()) {
+            *o += v * wv;
+        }
+    }
+    (out, nnz, nnz * f_out as u64)
+}
+
+/// Nonzero-skipping feature transform over the real rows only: the
+/// software twin of the sparse FT engine's pruning unit — it consumes
+/// exactly the elements `sim::ft::nonzero_stream` would dispatch
+/// (`h[v, k] != 0` for `v < rows`) and never touches padded rows.
+/// Accumulation order per output row matches [`matmul`]'s zero-skip
+/// loop, so scores agree bit-for-bit with the dense path.
+///
+/// Returns `(out, nonzeros, macs)` with `macs = nonzeros * f_out`.
+pub fn sparse_row_matmul(
+    h: &[f32],
+    w: &[f32],
+    rows: usize,
+    rows_out: usize,
+    f_in: usize,
+    f_out: usize,
+) -> (Vec<f32>, u64, u64) {
+    assert!(rows <= rows_out);
+    assert_eq!(w.len(), f_in * f_out, "w shape");
+    let mut out = vec![0.0f32; rows_out * f_out];
+    let mut nnz = 0u64;
+    for i in 0..rows {
+        let hrow = &h[i * f_in..(i + 1) * f_in];
+        let orow = &mut out[i * f_out..(i + 1) * f_out];
+        for (k, &hv) in hrow.iter().enumerate() {
+            if hv == 0.0 {
+                continue;
+            }
+            nnz += 1;
+            let wrow = &w[k * f_out..(k + 1) * f_out];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += hv * wv;
+            }
+        }
+    }
+    (out, nnz, nnz * f_out as u64)
+}
+
 /// out[m] = a[m,n] @ x[n]
 pub fn matvec(a: &[f32], x: &[f32], m: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * n);
@@ -118,5 +231,51 @@ mod tests {
     fn sparsity_counts_zeros() {
         assert_eq!(sparsity(&[0.0, 1.0, 0.0, 2.0]), 0.5);
         assert_eq!(sparsity(&[]), 0.0);
+    }
+
+    /// Tiny CSR of [[0.5, 0.2, 0], [0, 0.9, 0]] padded to 3 output rows.
+    fn tiny_csr() -> (Vec<u32>, Vec<u16>, Vec<f32>) {
+        (vec![0, 2, 3], vec![0, 1, 1], vec![0.5, 0.2, 0.9])
+    }
+
+    #[test]
+    fn csr_spmm_matches_dense_matmul() {
+        let (indptr, indices, weights) = tiny_csr();
+        let a_dense = vec![0.5, 0.2, 0.0, 0.0, 0.9, 0.0, 0.0, 0.0, 0.0];
+        let x = vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0];
+        let want = matmul(&a_dense, &x, 3, 3, 2);
+        let (got, macs) = csr_spmm(&indptr, &indices, &weights, &x, 3, 2);
+        assert_eq!(got, want);
+        assert_eq!(macs, 3 * 2);
+        // padded row untouched
+        assert_eq!(&got[4..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn onehot_gather_selects_weight_rows() {
+        // rows: one-hot(2), one-hot(0), all-zero pad
+        let h = vec![0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3 x 2
+        let want = matmul(&h, &w, 3, 3, 2);
+        let (got, nnz, macs) = onehot_gather(&h, &w, 2, 3, 3, 2);
+        assert_eq!(got, want);
+        assert_eq!(got[..2], [5.0, 6.0]);
+        assert_eq!(got[2..4], [1.0, 2.0]);
+        assert_eq!(nnz, 2);
+        assert_eq!(macs, 4);
+    }
+
+    #[test]
+    fn sparse_row_matmul_matches_dense_and_counts_nonzeros() {
+        // 2 real rows + 1 padded, 3 input features, 2 outputs.
+        let h = vec![0.5, 0.0, -1.0, 0.0, 2.0, 0.0, 9.0, 9.0, 9.0];
+        let w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let dense_real = matmul(&h[..6], &w, 2, 3, 2);
+        let (got, nnz, macs) = sparse_row_matmul(&h, &w, 2, 3, 3, 2);
+        assert_eq!(&got[..4], dense_real.as_slice());
+        // padded row's garbage input is never read
+        assert_eq!(&got[4..], &[0.0, 0.0]);
+        assert_eq!(nnz, 3);
+        assert_eq!(macs, 6);
     }
 }

@@ -10,8 +10,35 @@
 use crate::graph::encode::EncodedGraph;
 
 use super::config::ModelConfig;
-use super::linalg::{dot, matmul, matvec, relu_inplace, sigmoid, sparsity};
+use super::linalg::{
+    csr_spmm, dot, matmul, matvec, onehot_gather, relu_inplace, sigmoid, sparse_row_matmul,
+    sparsity,
+};
 use super::weights::Weights;
+
+/// Which compute path `gcn_forward` takes. Both produce bit-identical
+/// scores (the sparse kernels accumulate in the same order as the dense
+/// loops); they differ only in the work touched — see DESIGN.md S13.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SparsePolicy {
+    /// Dense padded matmuls over `n_max` (the original CPU baseline).
+    Dense,
+    /// CSR aggregation + one-hot/nonzero-skipping FT over real rows only
+    /// (the serving default, exploiting all three sparsity sources the
+    /// paper names: one-hot inputs, post-ReLU zeros, sparse adjacency).
+    #[default]
+    Csr,
+}
+
+impl SparsePolicy {
+    /// The stable CLI/report spelling of this policy.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SparsePolicy::Dense => "dense",
+            SparsePolicy::Csr => "csr",
+        }
+    }
+}
 
 /// Per-stage intermediates of one graph's GCN pass (used by the simulator
 /// to drive cycle counts with *real* data sparsity).
@@ -23,36 +50,108 @@ pub struct GcnTrace {
     pub embeddings: Vec<f32>,
     /// Sparsity (fraction of zeros) of each layer input over real rows.
     pub input_sparsity: Vec<f64>,
+    /// Input elements the FT is charged for per layer: on the Csr path
+    /// exactly the nonzeros `sim::ft::nonzero_stream` yields; on the
+    /// Dense path every padded element of the schedule (`n_max * f_in`).
+    pub ft_elements: [u64; 3],
+    /// Adjacency entries the aggregation is charged for, summed over
+    /// layers (CSR nonzeros vs the `3 * n_max²` dense schedule).
+    pub agg_elements: u64,
+    /// Multiply-accumulates charged across the three FT + aggregation
+    /// steps (bias/activation excluded — they are O(n·f), noise here).
+    /// Csr counts the work actually executed; Dense counts the full
+    /// padded schedule a dense datapath would run — the CPU reference
+    /// loop also skips zeros at runtime, so Dense wall-clock is better
+    /// than these numbers imply. The ratio mirrors Table 6's saving.
+    pub macs: u64,
 }
 
-/// Run the 3-layer GCN stage on one encoded graph.
+/// Run the 3-layer GCN stage on one encoded graph (sparse serving path;
+/// see [`gcn_forward_with`] for the explicit path selector).
 pub fn gcn_forward(cfg: &ModelConfig, w: &Weights, g: &EncodedGraph) -> GcnTrace {
+    gcn_forward_with(cfg, w, g, SparsePolicy::default())
+}
+
+/// Run the 3-layer GCN stage under an explicit [`SparsePolicy`].
+pub fn gcn_forward_with(
+    cfg: &ModelConfig,
+    w: &Weights,
+    g: &EncodedGraph,
+    policy: SparsePolicy,
+) -> GcnTrace {
     let n = cfg.n_max;
+    let rows = g.num_nodes;
+    // The sparse path iterates rows 0..num_nodes; encode/unpack validate
+    // the prefix invariant, this guards direct constructions in tests.
+    debug_assert!(
+        g.mask[..rows].iter().all(|&m| m != 0.0),
+        "real-node mask is not a prefix"
+    );
     let mut h = g.h0.clone();
     let mut layer_inputs = Vec::with_capacity(3);
     let mut input_sparsity = Vec::with_capacity(3);
+    let mut ft_elements = [0u64; 3];
+    let mut agg_elements = 0u64;
+    let mut macs = 0u64;
     let dims_in = cfg.feature_dims();
     for layer in 0..3 {
         let f_in = dims_in[layer];
         let f_out = cfg.filters[layer];
         // Sparsity over real rows only (paper counts real-node features).
-        let real_rows = g.num_nodes;
-        input_sparsity.push(sparsity(&h[..real_rows * f_in]));
+        input_sparsity.push(sparsity(&h[..rows * f_in]));
         layer_inputs.push(h.clone());
-        // Feature Transformation: X = H @ W  (n x f_out)
-        let x = matmul(&h, &w.gcn_w[layer], n, f_in, f_out);
-        // Aggregation: A' @ X
-        let mut agg = matmul(&g.a_norm, &x, n, n, f_out);
-        // Masked bias + activation
-        for i in 0..n {
-            let m = g.mask[i];
-            for j in 0..f_out {
-                agg[i * f_out + j] += m * w.gcn_b[layer][j];
+        let mut agg = match policy {
+            SparsePolicy::Dense => {
+                // Feature Transformation: X = H @ W  (n x f_out)
+                let x = matmul(&h, &w.gcn_w[layer], n, f_in, f_out);
+                ft_elements[layer] = (n * f_in) as u64;
+                macs += (n * f_in * f_out) as u64;
+                // Aggregation: A' @ X over the full padded matrix.
+                agg_elements += (n * n) as u64;
+                macs += (n * n * f_out) as u64;
+                matmul(&g.a_norm, &x, n, n, f_out)
+            }
+            SparsePolicy::Csr => {
+                // FT: one-hot row-select at layer 0, nonzero-skipping
+                // real-row iteration after ReLU (§3.4's sparsity sources).
+                let (x, nnz, ft_macs) = if layer == 0 {
+                    onehot_gather(&h, &w.gcn_w[layer], rows, n, f_in, f_out)
+                } else {
+                    sparse_row_matmul(&h, &w.gcn_w[layer], rows, n, f_in, f_out)
+                };
+                ft_elements[layer] = nnz;
+                macs += ft_macs;
+                // Aggregation: CSR SpMM over real rows only.
+                let (a, agg_macs) =
+                    csr_spmm(&g.csr.indptr, &g.csr.indices, &g.csr.weights, &x, n, f_out);
+                agg_elements += g.csr.nnz() as u64;
+                macs += agg_macs;
+                a
+            }
+        };
+        // Masked bias + activation. The sparse path adds the bias to real
+        // rows only (mask is 1 there); padded rows stay exactly zero, as
+        // the dense `m * b` product leaves them.
+        match policy {
+            SparsePolicy::Dense => {
+                for i in 0..n {
+                    let m = g.mask[i];
+                    for j in 0..f_out {
+                        agg[i * f_out + j] += m * w.gcn_b[layer][j];
+                    }
+                }
+            }
+            SparsePolicy::Csr => {
+                for i in 0..rows {
+                    for j in 0..f_out {
+                        agg[i * f_out + j] += w.gcn_b[layer][j];
+                    }
+                }
             }
         }
         if cfg.relu_mask[layer] {
             relu_inplace(&mut agg);
-        } else {
+        } else if policy == SparsePolicy::Dense {
             for i in 0..n {
                 if g.mask[i] == 0.0 {
                     for j in 0..f_out {
@@ -61,12 +160,16 @@ pub fn gcn_forward(cfg: &ModelConfig, w: &Weights, g: &EncodedGraph) -> GcnTrace
                 }
             }
         }
+        // Csr + no-relu: padded rows were never written, already zero.
         h = agg;
     }
     GcnTrace {
         embeddings: h.clone(),
         layer_inputs,
         input_sparsity,
+        ft_elements,
+        agg_elements,
+        macs,
     }
 }
 
@@ -151,15 +254,27 @@ pub struct PairTrace {
     pub score: f32,
 }
 
-/// Score one encoded pair (the NativeEngine hot path).
+/// Score one encoded pair on the sparse serving path (the NativeEngine
+/// hot path; see [`simgnn_forward_with`] for the explicit selector).
 pub fn simgnn_forward(
     cfg: &ModelConfig,
     w: &Weights,
     g1: &EncodedGraph,
     g2: &EncodedGraph,
 ) -> PairTrace {
-    let trace1 = gcn_forward(cfg, w, g1);
-    let trace2 = gcn_forward(cfg, w, g2);
+    simgnn_forward_with(cfg, w, g1, g2, SparsePolicy::default())
+}
+
+/// Score one encoded pair under an explicit [`SparsePolicy`].
+pub fn simgnn_forward_with(
+    cfg: &ModelConfig,
+    w: &Weights,
+    g1: &EncodedGraph,
+    g2: &EncodedGraph,
+    policy: SparsePolicy,
+) -> PairTrace {
+    let trace1 = gcn_forward_with(cfg, w, g1, policy);
+    let trace2 = gcn_forward_with(cfg, w, g2, policy);
     let hg1 = attention_pool(cfg, w, &trace1.embeddings, &g1.mask);
     let hg2 = attention_pool(cfg, w, &trace2.embeddings, &g2.mask);
     let ntn_out = ntn_forward(cfg, w, &hg1, &hg2);
@@ -296,6 +411,66 @@ mod tests {
             let e2 = encode(&g2, cfg.n_max, cfg.num_labels).unwrap();
             let s = simgnn_score(&cfg, &w, &e1, &e2);
             assert!(s > 0.0 && s < 1.0, "score {s} out of range");
+        }
+    }
+
+    #[test]
+    fn dense_and_csr_paths_agree_bit_for_bit() {
+        // The sparse kernels accumulate in the dense loops' order, so the
+        // two policies must agree exactly — not just within tolerance.
+        let cfg = tiny_cfg();
+        let w = const_weights(&cfg, 0.07);
+        let mut rng = Rng::new(55);
+        for i in 0..20 {
+            let n = 2 + (i % 7);
+            let g = generate(&mut rng, Family::ErdosRenyi { n, p_millis: 350 }, 8, 4);
+            let e = encode(&g, cfg.n_max, cfg.num_labels).unwrap();
+            let d = gcn_forward_with(&cfg, &w, &e, SparsePolicy::Dense);
+            let s = gcn_forward_with(&cfg, &w, &e, SparsePolicy::Csr);
+            assert_eq!(d.embeddings, s.embeddings, "graph {i} embeddings diverged");
+            assert_eq!(d.layer_inputs, s.layer_inputs, "graph {i} traces diverged");
+        }
+    }
+
+    #[test]
+    fn sparse_path_does_less_work() {
+        let cfg = tiny_cfg();
+        let w = const_weights(&cfg, 0.1);
+        let mut rng = Rng::new(56);
+        let g = generate(&mut rng, Family::ErdosRenyi { n: 5, p_millis: 300 }, 8, 4);
+        let e = encode(&g, cfg.n_max, cfg.num_labels).unwrap();
+        let d = gcn_forward_with(&cfg, &w, &e, SparsePolicy::Dense);
+        let s = gcn_forward_with(&cfg, &w, &e, SparsePolicy::Csr);
+        // Layer 0: one element per real node vs every padded slot.
+        assert_eq!(s.ft_elements[0], e.num_nodes as u64);
+        assert_eq!(d.ft_elements[0], (cfg.n_max * cfg.num_labels) as u64);
+        // Aggregation: CSR nonzeros per layer vs n_max² per layer.
+        assert_eq!(s.agg_elements, 3 * e.csr.nnz() as u64);
+        assert_eq!(d.agg_elements, 3 * (cfg.n_max * cfg.n_max) as u64);
+        assert!(s.macs < d.macs, "sparse {} !< dense {}", s.macs, d.macs);
+    }
+
+    #[test]
+    fn csr_ft_elements_match_sim_nonzero_stream() {
+        // The sparse FT consumes exactly the elements the cycle
+        // simulator's pruning-unit model dispatches for the same trace.
+        use crate::sim::ft::nonzero_stream;
+        let cfg = tiny_cfg();
+        let w = const_weights(&cfg, 0.09);
+        let mut rng = Rng::new(57);
+        let dims_in = cfg.feature_dims();
+        for _ in 0..10 {
+            let g = generate(&mut rng, Family::ErdosRenyi { n: 6, p_millis: 300 }, 8, 4);
+            let e = encode(&g, cfg.n_max, cfg.num_labels).unwrap();
+            let t = gcn_forward_with(&cfg, &w, &e, SparsePolicy::Csr);
+            for layer in 0..3 {
+                let stream = nonzero_stream(&t.layer_inputs[layer], e.num_nodes, dims_in[layer]);
+                assert_eq!(
+                    t.ft_elements[layer],
+                    stream.len() as u64,
+                    "layer {layer} FT element count vs nonzero stream"
+                );
+            }
         }
     }
 

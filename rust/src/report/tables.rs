@@ -283,7 +283,7 @@ pub fn measure_pjrt(ctx: &Context, pairs: &[QueryPair], batch: usize) -> Result<
     let t1 = Instant::now();
     let mut kernel = 0.0f64;
     for chunk in encoded.chunks(b) {
-        let pb = PackedBatch::pack(chunk, b);
+        let pb = PackedBatch::pack(chunk, b).expect("chunks(b) yields 1..=b pairs");
         let te = Instant::now();
         let scores = eng.score_batch(&pb)?.scores;
         kernel += te.elapsed().as_secs_f64();
@@ -745,8 +745,8 @@ pub fn fifo_ablation(ctx: &Context, queries: usize) -> Table {
                 gc.layers[1].acg_busy(),
                 gc.layers[2].acg_busy(),
             ]);
-            let sc = crate::sim::gcn::stage_cycles(&ctx.cfg, &arch, e.num_nodes);
-            stage = (sc.att, sc.ntn + sc.fcn);
+            let sc = crate::sim::gcn::stage_cycles(&ctx.cfg, &arch, e.num_nodes, e.num_nodes);
+            stage = (sc.att1, sc.ntn + sc.fcn);
         }
     }
     let analytic_max: f64 = layer_busy

@@ -29,7 +29,8 @@ use std::sync::Arc;
 use crate::graph::encode::PackedBatch;
 
 /// The set of engine backends, replacing `&str` dispatch. Parse with
-/// [`std::str::FromStr`] (`"xla" | "xla-fused" | "native" | "sim"`).
+/// [`std::str::FromStr`]
+/// (`"xla" | "xla-fused" | "native" | "native-dense" | "sim"`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum EngineKind {
     /// PJRT-executed AOT artifacts (Pallas-kernel flavor) — production.
@@ -37,18 +38,23 @@ pub enum EngineKind {
     /// PJRT-executed fused (pure-jnp) artifact flavor: identical math,
     /// faster on the CPU PJRT backend (EXPERIMENTS.md §Perf L2).
     XlaFused,
-    /// Independent rust reference numerics; the measured CPU baseline.
+    /// Independent rust reference numerics on the sparse scoring path
+    /// (CSR aggregation + one-hot FT); the measured CPU baseline.
     Native,
+    /// The same numerics forced onto the dense padded path — the
+    /// comparison lane for the dense-vs-sparse serving experiment.
+    NativeDense,
     /// Functional scores + SPA-GCN cycle simulation.
     Sim,
 }
 
 impl EngineKind {
     /// Every valid kind, in CLI help order.
-    pub const ALL: [EngineKind; 4] = [
+    pub const ALL: [EngineKind; 5] = [
         EngineKind::Xla,
         EngineKind::XlaFused,
         EngineKind::Native,
+        EngineKind::NativeDense,
         EngineKind::Sim,
     ];
 
@@ -58,6 +64,7 @@ impl EngineKind {
             EngineKind::Xla => "xla",
             EngineKind::XlaFused => "xla-fused",
             EngineKind::Native => "native",
+            EngineKind::NativeDense => "native-dense",
             EngineKind::Sim => "sim",
         }
     }
@@ -116,6 +123,8 @@ pub struct EngineCaps {
     pub reports_cycles: bool,
     /// Fills [`QueryTelemetry::exec`] (device upload/execute/download).
     pub reports_exec_timing: bool,
+    /// Fills [`QueryTelemetry::macs`] (MAC/nonzero work counts).
+    pub reports_macs: bool,
 }
 
 impl EngineCaps {
@@ -138,6 +147,7 @@ impl EngineCaps {
             max_labels,
             reports_cycles: false,
             reports_exec_timing: false,
+            reports_macs: false,
         }
     }
 
@@ -150,6 +160,12 @@ impl EngineCaps {
     /// Mark the engine as filling [`QueryTelemetry::exec`].
     pub fn with_exec_timing(mut self) -> Self {
         self.reports_exec_timing = true;
+        self
+    }
+
+    /// Mark the engine as filling [`QueryTelemetry::macs`].
+    pub fn with_mac_counts(mut self) -> Self {
+        self.reports_macs = true;
         self
     }
 
@@ -199,6 +215,25 @@ pub struct ExecTiming {
     pub download_us: f64,
 }
 
+/// MAC/nonzero work counts for one scored slot (both graphs of the pair,
+/// GCN stage): the software analogue of the paper's Table 6 sparsity
+/// savings. The sparse path counts the real nonzero work it executed;
+/// the dense path counts the full padded *schedule* — what a dense
+/// datapath (the paper's baseline hardware) would execute for those
+/// shapes. The dense/sparse ratio in the serve report is therefore the
+/// Table 6-style schedule saving; it deliberately overstates the CPU
+/// wall-clock gain, because the dense reference loop itself skips zero
+/// activations at runtime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MacCounts {
+    /// Multiply-accumulates executed across FT + aggregation.
+    pub macs: u64,
+    /// Input elements the feature transform consumed.
+    pub ft_elements: u64,
+    /// Adjacency entries the aggregation consumed.
+    pub agg_elements: u64,
+}
+
 /// Per-slot telemetry attached to a [`BatchOutput`]. Which fields are
 /// filled is declared by the engine's [`EngineCaps`] flags; padding slots
 /// carry an empty default.
@@ -211,6 +246,8 @@ pub struct QueryTelemetry {
     pub exec: Option<ExecTiming>,
     /// CPU time spent scoring this slot, µs (native engine).
     pub cpu_us: Option<f64>,
+    /// MAC/nonzero work counts for this slot (`reports_macs`).
+    pub macs: Option<MacCounts>,
 }
 
 /// What one [`Engine::score_batch`] call returns: one similarity score
@@ -348,6 +385,11 @@ impl EngineBuilder {
             EngineKind::Native => {
                 Box::new(native::NativeEngine::load(&self.artifacts_dir).map_err(unavailable)?)
             }
+            EngineKind::NativeDense => Box::new(
+                native::NativeEngine::load(&self.artifacts_dir)
+                    .map_err(unavailable)?
+                    .with_policy(crate::nn::simgnn::SparsePolicy::Dense),
+            ),
             EngineKind::Sim => Box::new(
                 crate::sim::engine::SimEngine::load(
                     &self.artifacts_dir,
@@ -388,9 +430,9 @@ mod tests {
     #[test]
     fn caps_flags_default_off() {
         let caps = EngineCaps::new("t", vec![1], 8, 4);
-        assert!(!caps.reports_cycles && !caps.reports_exec_timing);
-        let caps = caps.with_cycle_reports().with_exec_timing();
-        assert!(caps.reports_cycles && caps.reports_exec_timing);
+        assert!(!caps.reports_cycles && !caps.reports_exec_timing && !caps.reports_macs);
+        let caps = caps.with_cycle_reports().with_exec_timing().with_mac_counts();
+        assert!(caps.reports_cycles && caps.reports_exec_timing && caps.reports_macs);
     }
 
     #[test]

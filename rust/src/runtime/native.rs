@@ -3,6 +3,11 @@
 //!  * correctness cross-check against the PJRT engine (same scores ±1e-4);
 //!  * the measured per-stage CPU baseline used alongside the analytical
 //!    PyG model in the Table 6 reproduction.
+//!
+//! Scoring defaults to the sparse path ([`SparsePolicy::Csr`]: CSR
+//! aggregation, one-hot layer-0 FT, nonzero-skipping FT, real rows only
+//! — DESIGN.md S13); `with_policy(SparsePolicy::Dense)` forces the dense
+//! padded baseline for comparison runs (`EngineKind::NativeDense`).
 
 use std::path::Path;
 use std::time::Instant;
@@ -10,35 +15,59 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::graph::encode::{EncodedGraph, PackedBatch};
-use crate::nn::config::{ArtifactsMeta, ModelConfig};
-use crate::nn::simgnn::simgnn_score;
+use crate::nn::config::{ArtifactsMeta, ModelConfig, AOT_BATCH_LADDER};
+use crate::nn::simgnn::{simgnn_forward_with, SparsePolicy};
 use crate::nn::weights::Weights;
 
-use super::{BatchOutput, Engine, EngineCaps, EngineError, QueryTelemetry};
+use super::{BatchOutput, Engine, EngineCaps, EngineError, MacCounts, QueryTelemetry};
 
 /// CPU reference engine; any batch size (it just loops over pairs).
-/// Reports per-slot CPU time as [`QueryTelemetry::cpu_us`].
+/// Reports per-slot CPU time as [`QueryTelemetry::cpu_us`] and MAC /
+/// nonzero work counts as [`QueryTelemetry::macs`].
 pub struct NativeEngine {
     cfg: ModelConfig,
     weights: Weights,
     caps: EngineCaps,
+    policy: SparsePolicy,
 }
 
 impl NativeEngine {
-    /// Load config + weights from an artifacts directory.
+    /// Load config + weights from an artifacts directory. The advertised
+    /// batch ladder comes from `meta.json` — the same source the PJRT
+    /// engine compiles from — so the two can never drift.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
         let meta = ArtifactsMeta::load(artifacts_dir)
             .context("loading artifacts/meta.json (run `make artifacts`)")?;
         let weights = Weights::load(&meta.config, artifacts_dir)?;
-        Ok(Self::new(meta.config, weights))
+        Ok(Self::from_parts(meta.config, weights, meta.batch_sizes))
     }
 
-    /// Build from an in-memory config + weights (tests, report harness).
+    /// Build from an in-memory config + weights (tests, report harness);
+    /// advertises the shared [`AOT_BATCH_LADDER`].
     pub fn new(cfg: ModelConfig, weights: Weights) -> Self {
-        // The loop handles any size; advertise the same ladder as the AOT
-        // artifacts so the batcher treats both engines identically.
-        let caps = EngineCaps::new("native-cpu", vec![1, 4, 16, 64], cfg.n_max, cfg.num_labels);
-        NativeEngine { cfg, weights, caps }
+        Self::from_parts(cfg, weights, AOT_BATCH_LADDER.to_vec())
+    }
+
+    fn from_parts(cfg: ModelConfig, weights: Weights, ladder: Vec<usize>) -> Self {
+        let caps = EngineCaps::new("native-cpu", ladder, cfg.n_max, cfg.num_labels)
+            .with_mac_counts();
+        NativeEngine {
+            cfg,
+            weights,
+            caps,
+            policy: SparsePolicy::Csr,
+        }
+    }
+
+    /// Force a scoring path. The dense variant renames the engine to
+    /// `native-cpu-dense` so reports and metrics keep the lanes apart.
+    pub fn with_policy(mut self, policy: SparsePolicy) -> Self {
+        self.policy = policy;
+        self.caps.name = match policy {
+            SparsePolicy::Csr => "native-cpu".into(),
+            SparsePolicy::Dense => "native-cpu-dense".into(),
+        };
+        self
     }
 
     /// The model configuration this engine scores with.
@@ -51,9 +80,14 @@ impl NativeEngine {
         &self.weights
     }
 
+    /// The scoring path this engine takes.
+    pub fn policy(&self) -> SparsePolicy {
+        self.policy
+    }
+
     /// Score a single encoded pair (no batch packing needed).
     pub fn score_pair(&self, g1: &EncodedGraph, g2: &EncodedGraph) -> f32 {
-        simgnn_score(&self.cfg, &self.weights, g1, g2)
+        simgnn_forward_with(&self.cfg, &self.weights, g1, g2, self.policy).score
     }
 }
 
@@ -66,13 +100,24 @@ impl Engine for NativeEngine {
         let mut scores = Vec::with_capacity(batch.batch);
         let mut telemetry = Vec::with_capacity(batch.batch);
         for i in 0..batch.batch {
-            let (g1, g2) = batch.unpack_slot(i);
+            let (g1, g2) = batch.unpack_slot(i).map_err(|e| EngineError::InvalidInput {
+                detail: format!("slot {i}: {e}"),
+            })?;
             // Empty padding slots: mask is all-zero; score is well-defined
             // (sigmoid of bias path) and discarded by the caller.
             let t0 = Instant::now();
-            scores.push(simgnn_score(&self.cfg, &self.weights, &g1, &g2));
+            let trace = simgnn_forward_with(&self.cfg, &self.weights, &g1, &g2, self.policy);
+            let cpu_us = t0.elapsed().as_secs_f64() * 1e6;
+            scores.push(trace.score);
+            let (t1, t2) = (&trace.trace1, &trace.trace2);
             telemetry.push(QueryTelemetry {
-                cpu_us: Some(t0.elapsed().as_secs_f64() * 1e6),
+                cpu_us: Some(cpu_us),
+                macs: Some(MacCounts {
+                    macs: t1.macs + t2.macs,
+                    ft_elements: t1.ft_elements.iter().sum::<u64>()
+                        + t2.ft_elements.iter().sum::<u64>(),
+                    agg_elements: t1.agg_elements + t2.agg_elements,
+                }),
                 ..QueryTelemetry::default()
             });
         }
@@ -119,22 +164,23 @@ mod tests {
         NativeEngine::new(cfg, w)
     }
 
-    #[test]
-    fn batch_matches_per_pair() {
-        let mut eng = tiny();
-        let mut rng = Rng::new(7);
+    fn workload(count: usize, seed: u64) -> Vec<(EncodedGraph, EncodedGraph)> {
+        let mut rng = Rng::new(seed);
         let f = Family::ErdosRenyi { n: 6, p_millis: 300 };
-        let pairs: Vec<_> = (0..3)
+        (0..count)
             .map(|_| {
                 let g1 = generate(&mut rng, f, 8, 4);
                 let g2 = generate(&mut rng, f, 8, 4);
-                (
-                    encode(&g1, 8, 4).unwrap(),
-                    encode(&g2, 8, 4).unwrap(),
-                )
+                (encode(&g1, 8, 4).unwrap(), encode(&g2, 8, 4).unwrap())
             })
-            .collect();
-        let pb = PackedBatch::pack(&pairs, 4);
+            .collect()
+    }
+
+    #[test]
+    fn batch_matches_per_pair() {
+        let mut eng = tiny();
+        let pairs = workload(3, 7);
+        let pb = PackedBatch::pack(&pairs, 4).unwrap();
         let out = eng.score_batch(&pb).unwrap();
         assert_eq!(out.scores.len(), 4);
         assert_eq!(out.telemetry.len(), 4);
@@ -142,9 +188,46 @@ mod tests {
             let want = simgnn_score(eng.config(), eng.weights(), g1, g2);
             assert!((out.scores[i] - want).abs() < 1e-6);
         }
-        // Per-slot CPU time is reported on every slot.
+        // Per-slot CPU time and MAC counts are reported on every slot.
         assert!(out.telemetry.iter().all(|t| t.cpu_us.is_some()));
+        assert!(out.telemetry.iter().all(|t| t.macs.is_some()));
         assert!(out.telemetry.iter().all(|t| t.cycles.is_none() && t.exec.is_none()));
+        // Real slots did real work; the padding slot has no nonzeros to
+        // process on the sparse path (0-node graphs).
+        assert!(out.telemetry[0].macs.unwrap().macs > 0);
+        assert_eq!(out.telemetry[3].macs.unwrap().ft_elements, 0);
+    }
+
+    #[test]
+    fn dense_and_sparse_policies_agree_on_batches() {
+        // Engine-level dense↔sparse parity across every ladder size,
+        // padded tail slots included (the acceptance bar is 1e-5; the
+        // paths are in fact bit-identical by construction).
+        let mut sparse = tiny();
+        let mut dense = NativeEngine::new(sparse.cfg.clone(), sparse.weights.clone())
+            .with_policy(SparsePolicy::Dense);
+        assert_eq!(sparse.policy(), SparsePolicy::Csr);
+        let ladder = sparse.caps().batch_ladder().to_vec();
+        for (bi, &b) in ladder.iter().enumerate() {
+            // Underfill by one where possible so tail padding is covered.
+            let fill = if b > 1 { b - 1 } else { 1 };
+            let pairs = workload(fill, 100 + bi as u64);
+            let pb = PackedBatch::pack(&pairs, b).unwrap();
+            let s = sparse.score_batch(&pb).unwrap();
+            let d = dense.score_batch(&pb).unwrap();
+            for (i, (ss, ds)) in s.scores.iter().zip(d.scores.iter()).enumerate() {
+                assert!(
+                    (ss - ds).abs() < 1e-5,
+                    "batch {b} slot {i}: sparse {ss} vs dense {ds}"
+                );
+            }
+            // The sparse path reports strictly less counted work.
+            let sm = s.telemetry[0].macs.unwrap();
+            let dm = d.telemetry[0].macs.unwrap();
+            assert!(sm.macs < dm.macs, "sparse {sm:?} !< dense {dm:?}");
+            assert!(sm.ft_elements < dm.ft_elements);
+            assert!(sm.agg_elements < dm.agg_elements);
+        }
     }
 
     #[test]
@@ -152,10 +235,40 @@ mod tests {
         let eng = tiny();
         let caps = eng.caps();
         assert_eq!(caps.name, "native-cpu");
-        assert_eq!(caps.batch_ladder(), &[1, 4, 16, 64]);
+        assert_eq!(caps.batch_ladder(), &AOT_BATCH_LADDER);
         assert_eq!(caps.max_nodes, 8);
         assert_eq!(caps.max_labels, 4);
         assert!(!caps.reports_cycles);
         assert!(!caps.reports_exec_timing);
+        assert!(caps.reports_macs);
+        // The dense comparison lane is named apart.
+        let dense = tiny().with_policy(SparsePolicy::Dense);
+        assert_eq!(dense.caps().name, "native-cpu-dense");
+    }
+
+    #[test]
+    fn ladder_follows_meta_manifest() {
+        // Both engines' ladders flow from one meta source: a manifest
+        // with a custom artifact ladder yields caps advertising exactly
+        // that ladder (the PJRT engine compiles one executable per entry
+        // of the same list), and the meta-less default is the shared
+        // AOT_BATCH_LADDER constant.
+        let eng = tiny();
+        let custom = NativeEngine::from_parts(
+            eng.cfg.clone(),
+            eng.weights.clone(),
+            vec![1, 8],
+        );
+        assert_eq!(custom.caps().batch_ladder(), &[1, 8]);
+        let meta_doc = crate::util::json::parse(
+            r#"{"config": {"filters": [4, 4, 4],
+                "relu_mask": [true, true, false], "n_max": 8,
+                "num_labels": 4, "ntn_k": 4, "fc_dims": [4]}}"#,
+        )
+        .unwrap();
+        let meta = ArtifactsMeta::from_json(&meta_doc).unwrap();
+        let from_meta = NativeEngine::from_parts(meta.config, eng.weights.clone(), meta.batch_sizes);
+        assert_eq!(from_meta.caps().batch_ladder(), &AOT_BATCH_LADDER);
+        assert_eq!(eng.caps().batch_ladder(), &AOT_BATCH_LADDER);
     }
 }

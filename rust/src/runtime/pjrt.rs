@@ -59,8 +59,20 @@ impl XlaEngine {
         let mut executables = BTreeMap::new();
         for &b in &meta.batch_sizes {
             let path = artifacts_dir.join(format!("{prefix}_b{b}.hlo.txt"));
-            if !path.exists() && prefix != "simgnn" {
-                continue; // older artifact sets may lack the fused flavor
+            if !path.exists() {
+                // An artifact explicitly listed in the manifest must
+                // exist — a deployment missing one of its promised batch
+                // sizes should fail loudly, not silently serve a reduced
+                // ladder. Gaps are tolerated only for the fused flavor
+                // (older artifact sets lack it) and for the defaulted
+                // AOT_BATCH_LADDER fallback, where the caps ladder below
+                // advertises exactly what compiled.
+                anyhow::ensure!(
+                    prefix != "simgnn" || !meta.ladder_from_manifest,
+                    "meta.json lists batch size {b} but {} is missing",
+                    path.display()
+                );
+                continue;
             }
             let exe = compile_hlo_text(&client, &path)
                 .with_context(|| format!("compiling {}", path.display()))?;

@@ -8,7 +8,7 @@ use anyhow::{Context, Result};
 
 use crate::graph::encode::{encode, EncodedGraph, PackedBatch};
 use crate::graph::Graph;
-use crate::nn::config::{ArtifactsMeta, ModelConfig};
+use crate::nn::config::{ArtifactsMeta, ModelConfig, AOT_BATCH_LADDER};
 use crate::nn::simgnn::simgnn_forward;
 use crate::nn::weights::Weights;
 use crate::runtime::{
@@ -78,17 +78,29 @@ pub struct SimEngine {
 
 impl SimEngine {
     /// Load config + weights from an artifacts directory and simulate
-    /// under `arch` on `plat`.
+    /// under `arch` on `plat`. The batch ladder comes from `meta.json`,
+    /// the same source the PJRT engine compiles from.
     pub fn load(artifacts_dir: &Path, arch: ArchConfig, plat: Platform) -> Result<Self> {
         let meta = ArtifactsMeta::load(artifacts_dir)
             .context("loading artifacts/meta.json (run `make artifacts`)")?;
         let weights = Weights::load(&meta.config, artifacts_dir)?;
-        Ok(Self::new(meta.config, weights, arch, plat))
+        Ok(Self::with_ladder(meta.config, weights, arch, plat, meta.batch_sizes))
     }
 
-    /// Build from an in-memory config + weights (tests, benches).
+    /// Build from an in-memory config + weights (tests, benches);
+    /// advertises the shared [`AOT_BATCH_LADDER`].
     pub fn new(cfg: ModelConfig, weights: Weights, arch: ArchConfig, plat: Platform) -> Self {
-        let caps = EngineCaps::new("spa-gcn-sim", vec![1, 4, 16, 64], cfg.n_max, cfg.num_labels)
+        Self::with_ladder(cfg, weights, arch, plat, AOT_BATCH_LADDER.to_vec())
+    }
+
+    fn with_ladder(
+        cfg: ModelConfig,
+        weights: Weights,
+        arch: ArchConfig,
+        plat: Platform,
+        ladder: Vec<usize>,
+    ) -> Self {
+        let caps = EngineCaps::new("spa-gcn-sim", ladder, cfg.n_max, cfg.num_labels)
             .with_cycle_reports();
         SimEngine {
             cfg,
@@ -161,15 +173,23 @@ impl Engine for SimEngine {
     fn score_batch(&mut self, batch: &PackedBatch) -> std::result::Result<BatchOutput, EngineError> {
         let mut scores = Vec::with_capacity(batch.batch);
         let mut telemetry = Vec::with_capacity(batch.batch);
+        let invalid = |i: usize, e: crate::graph::encode::NonPrefixMask| {
+            EngineError::InvalidInput {
+                detail: format!("slot {i}: {e}"),
+            }
+        };
         for i in 0..batch.batch {
-            let (e1, e2) = batch.unpack_slot(i);
+            let (e1, e2) = batch.unpack_slot(i).map_err(|e| invalid(i, e))?;
             if e1.num_nodes == 0 && e2.num_nodes == 0 {
                 // Zero-padding slot: no real query to simulate.
                 scores.push(simgnn_forward(&self.cfg, &self.weights, &e1, &e2).score);
                 telemetry.push(QueryTelemetry::default());
                 continue;
             }
-            let (g1, g2) = (e1.decode(), e2.decode());
+            let (g1, g2) = (
+                e1.decode().map_err(|e| invalid(i, e))?,
+                e2.decode().map_err(|e| invalid(i, e))?,
+            );
             let (score, qc) =
                 self.run_encoded(&g1, &e1, &g2, &e2)
                     .map_err(|err| EngineError::Backend {
@@ -228,6 +248,9 @@ mod tests {
     #[test]
     fn run_query_accumulates_stats() {
         let mut eng = tiny_engine();
+        // In-memory construction advertises the shared AOT ladder (load()
+        // derives it from meta.json, the same source PJRT compiles from).
+        assert_eq!(eng.caps().batch_ladder(), &AOT_BATCH_LADDER);
         let mut rng = Rng::new(82);
         let f = Family::ErdosRenyi { n: 6, p_millis: 300 };
         for _ in 0..3 {
@@ -256,7 +279,7 @@ mod tests {
                 )
             })
             .collect();
-        let pb = PackedBatch::pack(&pairs, 4);
+        let pb = PackedBatch::pack(&pairs, 4).unwrap();
         (pairs, pb)
     }
 
@@ -313,6 +336,12 @@ mod tests {
                     t.exec.is_some(),
                     caps.reports_exec_timing,
                     "{}: slot {i} exec telemetry vs caps",
+                    caps.name
+                );
+                assert_eq!(
+                    t.macs.is_some(),
+                    caps.reports_macs,
+                    "{}: slot {i} mac telemetry vs caps",
                     caps.name
                 );
             }

@@ -6,7 +6,7 @@
 
 use std::path::{Path, PathBuf};
 
-use spa_gcn::graph::encode::{EncodedGraph, PackedBatch};
+use spa_gcn::graph::encode::{CsrAdj, EncodedGraph, PackedBatch};
 use spa_gcn::nn::config::ModelConfig;
 use spa_gcn::nn::simgnn::{gcn_forward, simgnn_score};
 use spa_gcn::nn::weights::Weights;
@@ -42,12 +42,18 @@ fn load_golden() -> Option<Golden> {
     let f = |k: &str| -> Vec<f32> { doc.get(k).as_f32_vec().unwrap() };
     let (a1, h1, m1) = (f("a1"), f("h1"), f("m1"));
     let (a2, h2, m2) = (f("a2"), f("h2"), f("m2"));
-    let slot = |a: &[f32], h: &[f32], m: &[f32], i: usize| EncodedGraph {
-        a_norm: a[i * n * n..(i + 1) * n * n].to_vec(),
-        h0: h[i * n * l..(i + 1) * n * l].to_vec(),
-        mask: m[i * n..(i + 1) * n].to_vec(),
-        num_nodes: m[i * n..(i + 1) * n].iter().filter(|&&x| x != 0.0).count(),
-        num_edges: 0,
+    let slot = |a: &[f32], h: &[f32], m: &[f32], i: usize| {
+        let a_norm = a[i * n * n..(i + 1) * n * n].to_vec();
+        let num_nodes = m[i * n..(i + 1) * n].iter().filter(|&&x| x != 0.0).count();
+        let csr = CsrAdj::from_dense(&a_norm, num_nodes, n);
+        EncodedGraph {
+            a_norm,
+            h0: h[i * n * l..(i + 1) * n * l].to_vec(),
+            mask: m[i * n..(i + 1) * n].to_vec(),
+            csr,
+            num_nodes,
+            num_edges: 0,
+        }
     };
     let pairs = (0..np)
         .map(|i| (slot(&a1, &h1, &m1, i), slot(&a2, &h2, &m2, i)))
@@ -111,7 +117,7 @@ fn pjrt_matches_python_scores() {
     let mut engine = XlaEngine::load(&artifacts_dir()).unwrap();
     // Exercise two batch paths: exact-fit (if 16 >= pairs) and singles.
     let b = engine.caps().pick_batch_size(g.pairs.len());
-    let packed = PackedBatch::pack(&g.pairs, b);
+    let packed = PackedBatch::pack(&g.pairs, b).unwrap();
     let out = engine.score_batch(&packed).unwrap();
     let scores = out.scores;
     // Every slot of the PJRT chunk shares its exec-timing telemetry.
@@ -125,7 +131,7 @@ fn pjrt_matches_python_scores() {
         );
     }
     // batch-of-1 path
-    let single = PackedBatch::pack(&g.pairs[..1], 1);
+    let single = PackedBatch::pack(&g.pairs[..1], 1).unwrap();
     let s1 = engine.score_batch(&single).unwrap().scores;
     assert!((s1[0] - g.scores[0]).abs() < 1e-4);
 }
@@ -177,7 +183,7 @@ fn fused_artifacts_match_pallas_artifacts() {
     assert_eq!(pallas.caps().name, "xla-pjrt");
     assert_eq!(fused.caps().name, "xla-pjrt-fused");
     let b = pallas.caps().pick_batch_size(g.pairs.len());
-    let packed = PackedBatch::pack(&g.pairs, b);
+    let packed = PackedBatch::pack(&g.pairs, b).unwrap();
     let s1 = pallas.score_batch(&packed).unwrap().scores;
     let s2 = fused.score_batch(&packed).unwrap().scores;
     for (i, (a, c)) in s1.iter().zip(s2.iter()).enumerate() {

@@ -1,0 +1,174 @@
+//! Dense↔sparse scoring-path parity (DESIGN.md S13): the CSR + one-hot
+//! native path must produce the same scores as the dense padded path —
+//! within 1e-5 per the acceptance bar, bit-identical in practice — on
+//! random AIDS-like and Erdős–Rényi workloads, across every ladder batch
+//! size, padded tail slots included. Also pins the sparse path's work
+//! accounting to the cycle simulator's nonzero-stream model.
+//!
+//! Runs artifact-free: weights are deterministic pseudo-random.
+
+use spa_gcn::graph::encode::{encode, EncodedGraph, PackedBatch};
+use spa_gcn::graph::generate::{generate, Family};
+use spa_gcn::nn::config::ModelConfig;
+use spa_gcn::nn::simgnn::{gcn_forward_with, simgnn_forward_with, SparsePolicy};
+use spa_gcn::nn::weights::Weights;
+use spa_gcn::runtime::native::NativeEngine;
+use spa_gcn::runtime::Engine;
+use spa_gcn::sim::ft::nonzero_stream;
+use spa_gcn::util::prop::check;
+use spa_gcn::util::rng::Rng;
+
+/// Deterministic pseudo-random weights for the full default config.
+fn default_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    let mut rng = Rng::new(seed);
+    let mut v = |len: usize, s: f32| -> Vec<f32> {
+        (0..len).map(|_| (rng.f32() - 0.5) * s).collect()
+    };
+    let dims_in = cfg.feature_dims();
+    let f = cfg.embed_dim();
+    let k = cfg.ntn_k;
+    let mut fc_w = Vec::new();
+    let mut fc_b = Vec::new();
+    let mut d = k;
+    for &h in &cfg.fc_dims {
+        fc_w.push(v(d * h, 0.5));
+        fc_b.push(vec![0.01; h]);
+        d = h;
+    }
+    Weights {
+        gcn_w: [
+            v(dims_in[0] * cfg.filters[0], 0.5),
+            v(dims_in[1] * cfg.filters[1], 0.5),
+            v(dims_in[2] * cfg.filters[2], 0.5),
+        ],
+        gcn_b: [
+            vec![0.02; cfg.filters[0]],
+            vec![0.02; cfg.filters[1]],
+            vec![0.02; cfg.filters[2]],
+        ],
+        att_w: v(f * f, 0.5),
+        ntn_w: v(k * f * f, 0.3),
+        ntn_v: v(k * 2 * f, 0.3),
+        ntn_b: vec![0.0; k],
+        fc_w,
+        fc_b,
+        out_w: v(d, 0.5),
+        out_b: vec![0.0],
+    }
+}
+
+fn random_graph(rng: &mut Rng, cfg: &ModelConfig) -> EncodedGraph {
+    // Alternate between the AIDS-like family and Erdős–Rényi of varied
+    // size so both workload shapes of the acceptance bar are covered.
+    let g = if rng.below(2) == 0 {
+        generate(rng, Family::Aids, cfg.n_max, cfg.num_labels)
+    } else {
+        let n = 2 + rng.below(10);
+        generate(
+            rng,
+            Family::ErdosRenyi { n, p_millis: 300 },
+            cfg.n_max,
+            cfg.num_labels,
+        )
+    };
+    encode(&g, cfg.n_max, cfg.num_labels).unwrap()
+}
+
+#[test]
+fn property_dense_and_sparse_scores_agree_across_ladder() {
+    let cfg = ModelConfig::default();
+    let weights = default_weights(&cfg, 0xFEED);
+    let ladder = NativeEngine::new(cfg.clone(), weights.clone())
+        .caps()
+        .batch_ladder()
+        .to_vec();
+    check(
+        "dense-sparse-parity",
+        12,
+        |rng: &mut Rng| {
+            // Random fill degree: from a single pair up to a full batch at
+            // some ladder size (the rest of the slots are zero padding).
+            let b = ladder[rng.below(ladder.len())];
+            let fill = 1 + rng.below(b);
+            let pairs: Vec<_> = (0..fill)
+                .map(|_| (random_graph(rng, &cfg), random_graph(rng, &cfg)))
+                .collect();
+            (b, pairs)
+        },
+        |(b, pairs)| {
+            let mut sparse = NativeEngine::new(cfg.clone(), weights.clone());
+            let mut dense = NativeEngine::new(cfg.clone(), weights.clone())
+                .with_policy(SparsePolicy::Dense);
+            let pb = PackedBatch::pack(pairs, *b).map_err(|e| e.to_string())?;
+            let s = sparse.score_batch(&pb).map_err(|e| e.to_string())?;
+            let d = dense.score_batch(&pb).map_err(|e| e.to_string())?;
+            for (i, (ss, ds)) in s.scores.iter().zip(d.scores.iter()).enumerate() {
+                if (ss - ds).abs() >= 1e-5 {
+                    return Err(format!(
+                        "batch {b} slot {i} (fill {}): sparse {ss} vs dense {ds}",
+                        pairs.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sparse_trace_matches_dense_trace_exactly() {
+    // Beyond scores: the per-layer intermediates the cycle simulator
+    // consumes must be identical, so a sim driven by either path sees
+    // the same nonzero structure.
+    let cfg = ModelConfig::default();
+    let w = default_weights(&cfg, 0xBEEF);
+    let mut rng = Rng::new(21);
+    for _ in 0..8 {
+        let e = random_graph(&mut rng, &cfg);
+        let d = gcn_forward_with(&cfg, &w, &e, SparsePolicy::Dense);
+        let s = gcn_forward_with(&cfg, &w, &e, SparsePolicy::Csr);
+        assert_eq!(d.embeddings, s.embeddings);
+        assert_eq!(d.layer_inputs, s.layer_inputs);
+        assert_eq!(d.input_sparsity, s.input_sparsity);
+    }
+}
+
+#[test]
+fn sparse_mac_counts_match_nonzero_stream_on_the_same_trace() {
+    // The satellite bar: sparse-path FT element counts equal the element
+    // counts of `sim::ft::nonzero_stream` on the same trace — the
+    // software path and the cycle model prune identically.
+    let cfg = ModelConfig::default();
+    let w = default_weights(&cfg, 0xCAFE);
+    let dims_in = cfg.feature_dims();
+    let mut rng = Rng::new(33);
+    for _ in 0..8 {
+        let e1 = random_graph(&mut rng, &cfg);
+        let e2 = random_graph(&mut rng, &cfg);
+        let pt = simgnn_forward_with(&cfg, &w, &e1, &e2, SparsePolicy::Csr);
+        for (t, e) in [(&pt.trace1, &e1), (&pt.trace2, &e2)] {
+            let mut stream_total = 0u64;
+            for layer in 0..3 {
+                let stream = nonzero_stream(&t.layer_inputs[layer], e.num_nodes, dims_in[layer]);
+                assert_eq!(
+                    t.ft_elements[layer],
+                    stream.len() as u64,
+                    "layer {layer} FT elements vs nonzero stream"
+                );
+                stream_total += stream.len() as u64;
+            }
+            // MAC totals decompose as Σ nnz·f_out per stage.
+            let ft_macs: u64 = (0..3)
+                .map(|l| t.ft_elements[l] * cfg.filters[l] as u64)
+                .sum();
+            let agg_macs: u64 = cfg
+                .filters
+                .iter()
+                .map(|&f| e.csr.nnz() as u64 * f as u64)
+                .sum();
+            assert_eq!(t.macs, ft_macs + agg_macs);
+            assert_eq!(t.ft_elements.iter().sum::<u64>(), stream_total);
+            assert_eq!(t.agg_elements, 3 * e.csr.nnz() as u64);
+        }
+    }
+}
