@@ -3,10 +3,13 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
+use spa_gcn::coordinator::corpus::Corpus;
 use spa_gcn::graph::encode::{encode, PackedBatch};
 use spa_gcn::graph::generate::{generate, perturb, Family};
+use spa_gcn::graph::Graph;
 use spa_gcn::nn::simgnn::simgnn_score;
 use spa_gcn::nn::weights::Weights;
+use spa_gcn::runtime::native::NativeEngine;
 use spa_gcn::runtime::pjrt::XlaEngine;
 use spa_gcn::runtime::Engine;
 use spa_gcn::util::rng::Rng;
@@ -67,6 +70,34 @@ fn main() -> anyhow::Result<()> {
         "ranking check: identical {} edited pair",
         if same_score > scores[0] { ">" } else { "<= (unexpected)" }
     );
+
+    // 6. One-vs-many corpus search through the embedding cache: build a
+    // small molecule corpus, rank it against g1, and ask again — the
+    // second query pays zero GCN forwards (the cache holds every
+    // embedding; only the NTN+FCN tail runs per candidate).
+    let mut native_engine = NativeEngine::load(&artifacts)?;
+    let entries: Vec<(u64, Graph)> = (0..16)
+        .map(|i| (i, generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels)))
+        .collect();
+    let corpus = Corpus::build("quickstart-molecules", &entries, cfg.n_max, cfg.num_labels)?;
+    let cold = native_engine.score_corpus(&e1, corpus.graphs())?;
+    let ranked = corpus.rank(&cold.scores, 3);
+    println!("top-3 of {}-graph corpus for graph 1:", corpus.len());
+    for (rank, (id, score)) in ranked.iter().enumerate() {
+        println!("  #{} corpus graph {id}: {score:.6}", rank + 1);
+    }
+    let cold_stats = cold.telemetry.embed_cache.expect("native reports cache stats");
+    let warm = native_engine.score_corpus(&e1, corpus.graphs())?;
+    let warm_stats = warm.telemetry.embed_cache.expect("native reports cache stats");
+    println!(
+        "gcn forwards: cold query {} (query graph + {} unique corpus graphs), \
+         warm repeat {} (all cached)",
+        cold_stats.gcn_forwards(),
+        corpus.unique_graphs(),
+        warm_stats.gcn_forwards()
+    );
+    anyhow::ensure!(warm_stats.gcn_forwards() == 0, "warm corpus query re-ran the GCN");
+    anyhow::ensure!(warm.scores == cold.scores, "cache changed corpus scores");
     println!("quickstart OK");
     Ok(())
 }

@@ -1,0 +1,230 @@
+//! Named corpora for one-vs-many similarity search (the paper's actual
+//! use case: score a query graph against a *database* of graphs, §5.1).
+//!
+//! A [`Corpus`] holds encoded graphs with their ids; each carries its
+//! content fingerprint, computed once at encode time. The engine-side
+//! embedding cache (DESIGN.md S14) keys on those fingerprints, so the
+//! first top-k query against a corpus embeds each unique graph once
+//! and every later query — on any lane that has seen the corpus —
+//! pays only the NTN+FCN tail per candidate. The corpus itself stays
+//! engine-agnostic: embeddings depend on an engine's weights, so they
+//! live in each engine's cache, not here.
+
+use std::collections::HashSet;
+
+use crate::graph::dataset::GraphDb;
+use crate::graph::encode::{encode, EncodeError, EncodedGraph, GraphKey};
+use crate::graph::Graph;
+
+/// An immutable named set of candidate graphs, encoded once at build
+/// time for the artifact shapes it will be served with.
+#[derive(Debug)]
+pub struct Corpus {
+    name: String,
+    ids: Vec<u64>,
+    graphs: Vec<EncodedGraph>,
+    keys: Vec<GraphKey>,
+    unique: usize,
+    /// The artifact shapes the candidates were encoded for; admission
+    /// rejects a corpus whose shapes don't match the serving model.
+    n_max: usize,
+    num_labels: usize,
+}
+
+impl Corpus {
+    /// Encode `entries` (caller-chosen id per graph) for the given
+    /// artifact shapes. Fails on the first graph the shapes cannot hold
+    /// — a corpus must be fully servable or not registered at all.
+    pub fn build(
+        name: impl Into<String>,
+        entries: &[(u64, Graph)],
+        n_max: usize,
+        num_labels: usize,
+    ) -> Result<Self, EncodeError> {
+        Self::build_from(
+            name.into(),
+            entries.iter().map(|(id, g)| (*id, g)),
+            n_max,
+            num_labels,
+        )
+    }
+
+    /// Build from a graph database, ids = positions (graphs are read by
+    /// reference — nothing is cloned before encoding).
+    pub fn from_db(
+        name: impl Into<String>,
+        db: &GraphDb,
+        n_max: usize,
+        num_labels: usize,
+    ) -> Result<Self, EncodeError> {
+        Self::build_from(
+            name.into(),
+            db.graphs.iter().enumerate().map(|(i, g)| (i as u64, g)),
+            n_max,
+            num_labels,
+        )
+    }
+
+    /// Shared borrowing construction core for [`Corpus::build`] /
+    /// [`Corpus::from_db`].
+    fn build_from<'a>(
+        name: String,
+        entries: impl Iterator<Item = (u64, &'a Graph)>,
+        n_max: usize,
+        num_labels: usize,
+    ) -> Result<Self, EncodeError> {
+        let mut ids = Vec::new();
+        let mut graphs = Vec::new();
+        let mut keys = Vec::new();
+        for (id, g) in entries {
+            let e = encode(g, n_max, num_labels)?;
+            keys.push(e.fingerprint());
+            graphs.push(e);
+            ids.push(id);
+        }
+        let unique = keys.iter().map(|k| k.0).collect::<HashSet<u128>>().len();
+        Ok(Corpus {
+            name,
+            ids,
+            graphs,
+            keys,
+            unique,
+            n_max,
+            num_labels,
+        })
+    }
+
+    /// The corpus name (reports, logs).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The `n_max` the candidates were encoded for.
+    pub fn n_max(&self) -> usize {
+        self.n_max
+    }
+
+    /// The label vocabulary the candidates were encoded for.
+    pub fn num_labels(&self) -> usize {
+        self.num_labels
+    }
+
+    /// Candidate count.
+    pub fn len(&self) -> usize {
+        self.graphs.len()
+    }
+
+    /// True when the corpus holds no candidates.
+    pub fn is_empty(&self) -> bool {
+        self.graphs.is_empty()
+    }
+
+    /// The encoded candidates, in id order — the slice handed to
+    /// [`Engine::score_corpus`](crate::runtime::Engine::score_corpus).
+    pub fn graphs(&self) -> &[EncodedGraph] {
+        &self.graphs
+    }
+
+    /// Caller-chosen candidate ids, parallel to [`Corpus::graphs`].
+    pub fn ids(&self) -> &[u64] {
+        &self.ids
+    }
+
+    /// Precomputed content fingerprints, parallel to [`Corpus::graphs`].
+    pub fn keys(&self) -> &[GraphKey] {
+        &self.keys
+    }
+
+    /// Number of distinct graphs (by fingerprint) — the exact number of
+    /// GCN forwards a cold top-k query over this corpus costs, query
+    /// graph excluded.
+    pub fn unique_graphs(&self) -> usize {
+        self.unique
+    }
+
+    /// Rank one engine fan-out: top `k` of `scores` (one per candidate,
+    /// [`Corpus::graphs`] order) as `(id, score)` pairs, best first.
+    /// Ties break toward the smaller id so rankings are deterministic;
+    /// `k` is clamped to the corpus size.
+    pub fn rank(&self, scores: &[f32], k: usize) -> Vec<(u64, f32)> {
+        assert_eq!(
+            scores.len(),
+            self.graphs.len(),
+            "one score per corpus candidate"
+        );
+        let mut ranked: Vec<(u64, f32)> = self
+            .ids
+            .iter()
+            .copied()
+            .zip(scores.iter().copied())
+            .collect();
+        ranked.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        ranked.truncate(k);
+        ranked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::Family;
+    use crate::util::rng::Rng;
+
+    fn corpus_with_dup() -> Corpus {
+        let mut rng = Rng::new(61);
+        let db = GraphDb::synthesize(&mut rng, Family::Aids, 5, 32, 29);
+        let mut entries: Vec<(u64, Graph)> = db
+            .graphs
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, g)| (i as u64, g))
+            .collect();
+        // Entry 5 duplicates entry 0's graph under a fresh id.
+        entries.push((5, db.graphs[0].clone()));
+        Corpus::build("dup", &entries, 32, 29).unwrap()
+    }
+
+    #[test]
+    fn build_precomputes_keys_and_unique_count() {
+        let c = corpus_with_dup();
+        assert_eq!(c.name(), "dup");
+        assert_eq!(c.len(), 6);
+        assert_eq!(c.unique_graphs(), 5, "duplicate must not count twice");
+        assert_eq!(c.keys().len(), 6);
+        assert_eq!(c.keys()[0], c.keys()[5], "same graph, same key");
+        assert_eq!(c.graphs()[0].fingerprint(), c.keys()[0]);
+        assert_eq!(c.ids(), &[0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn build_rejects_unservable_graphs() {
+        let big = Graph::new(10, (1..10).map(|v| (0u16, v)).collect(), vec![0; 10]);
+        let err = Corpus::build("bad", &[(0, big)], 8, 4).unwrap_err();
+        assert!(matches!(err, EncodeError::TooManyNodes { .. }));
+    }
+
+    #[test]
+    fn rank_sorts_desc_clamps_k_and_breaks_ties_by_id() {
+        let c = corpus_with_dup();
+        let scores = [0.3, 0.9, 0.5, 0.9, 0.1, 0.5];
+        let top = c.rank(&scores, 4);
+        assert_eq!(top, vec![(1, 0.9), (3, 0.9), (2, 0.5), (5, 0.5)]);
+        // k larger than the corpus: everything, still ordered.
+        let all = c.rank(&scores, 100);
+        assert_eq!(all.len(), 6);
+        assert_eq!(all[5], (4, 0.1));
+        // k == 0 is a valid (empty) request.
+        assert!(c.rank(&scores, 0).is_empty());
+    }
+
+    #[test]
+    fn from_db_uses_positions_as_ids() {
+        let mut rng = Rng::new(62);
+        let db = GraphDb::synthesize(&mut rng, Family::Aids, 4, 32, 29);
+        let c = Corpus::from_db("db", &db, 32, 29).unwrap();
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.ids(), &[0, 1, 2, 3]);
+        assert!(!c.is_empty());
+    }
+}

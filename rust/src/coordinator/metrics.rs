@@ -61,7 +61,10 @@ pub struct Metrics {
     pub encode_us: Samples,
     /// Engine execution time of that chunk, µs.
     pub execute_us: Samples,
-    /// Executed batch size per scored query.
+    /// Executed batch size per scored *pair* query (a batcher-packing
+    /// occupancy metric; top-k queries always execute alone however
+    /// wide their fan-out, so they are excluded rather than diluting
+    /// the row toward 1).
     pub batch_sizes: Samples,
     /// Simulator steady-state interval cycles per query (engines with
     /// `reports_cycles`).
@@ -85,8 +88,26 @@ pub struct Metrics {
     pub mac_counts: BTreeMap<String, MacSamples>,
     /// Scored-query count per engine name.
     pub by_engine: BTreeMap<String, u64>,
-    /// Successfully scored queries.
+    /// Embedding-cache hits summed over scored queries (engines with
+    /// `reports_embed_cache`).
+    pub embed_hits: u64,
+    /// Embedding-cache misses (= GCN forwards executed) summed over
+    /// scored queries.
+    pub embed_misses: u64,
+    /// Largest cache entry count any result reported (a per-lane
+    /// gauge: every lane owns an independent cache, so the max — the
+    /// biggest single cache observed — is the only per-query-derivable
+    /// number that isn't arbitrary; with L same-engine lanes the
+    /// process-wide total is up to L times this).
+    pub embed_entries: u64,
+    /// GCN forwards executed per scored query (pair queries cost at most
+    /// 2, cached ones less; top-k queries cost at most `1 + K`). The
+    /// mean is the report's `gcn forwards per query` row.
+    pub gcn_forwards: Samples,
+    /// Successfully scored queries (pair + top-k).
     pub scored: u64,
+    /// Top-k corpus queries among `scored`.
+    pub topk: u64,
     /// Queries rejected at admission (or during shutdown).
     pub rejected: u64,
     /// Queries answered with an engine error.
@@ -122,7 +143,12 @@ impl Metrics {
             engine_cpu_us: Samples::new(),
             mac_counts: BTreeMap::new(),
             by_engine: BTreeMap::new(),
+            embed_hits: 0,
+            embed_misses: 0,
+            embed_entries: 0,
+            gcn_forwards: Samples::new(),
             scored: 0,
+            topk: 0,
             rejected: 0,
             engine_errors: 0,
             channels: Vec::new(),
@@ -134,13 +160,18 @@ impl Metrics {
     /// Absorb one query result (counters, latency split, telemetry).
     pub fn record(&mut self, r: &super::query::QueryResult) {
         match &r.outcome {
-            super::query::Outcome::Score(_) => {
+            super::query::Outcome::Score(_) | super::query::Outcome::TopK(_) => {
                 self.scored += 1;
+                if matches!(r.outcome, super::query::Outcome::TopK(_)) {
+                    self.topk += 1;
+                } else {
+                    // Pair queries only: see the `batch_sizes` field doc.
+                    self.batch_sizes.push(r.batch_size as f64);
+                }
                 self.latency_us.push(r.latency_us);
                 self.queue_us.push(r.stage.queue_us);
                 self.encode_us.push(r.stage.encode_us);
                 self.execute_us.push(r.stage.execute_us);
-                self.batch_sizes.push(r.batch_size as f64);
                 if let Some(engine) = &r.engine {
                     // get_mut first: no per-query String allocation once
                     // the engine's entry exists.
@@ -162,6 +193,12 @@ impl Metrics {
                 }
                 if let Some(cpu) = r.telemetry.cpu_us {
                     self.engine_cpu_us.push(cpu);
+                }
+                if let Some(c) = r.telemetry.embed_cache {
+                    self.embed_hits += c.hits;
+                    self.embed_misses += c.misses;
+                    self.embed_entries = self.embed_entries.max(c.entries);
+                    self.gcn_forwards.push(c.gcn_forwards() as f64);
                 }
                 if let Some(m) = r.telemetry.macs {
                     let name = r.engine.as_deref().unwrap_or("unknown");
@@ -279,6 +316,27 @@ impl Metrics {
             t.row(vec![
                 "engine cpu mean (ms)".into(),
                 fmt(self.engine_cpu_us.mean() / 1000.0),
+            ]);
+        }
+        // Embedding-cache effectiveness (DESIGN.md S14). Hit rate over
+        // every embed the engines attempted; `gcn forwards per query` is
+        // the mean number of GCN+attention forwards actually executed
+        // per scored query (2.0 = no reuse on pair traffic).
+        if self.topk > 0 {
+            t.row(vec!["topk queries".into(), format!("{}", self.topk)]);
+        }
+        if self.embed_hits + self.embed_misses > 0 {
+            t.row(vec![
+                "embed cache hit rate".into(),
+                fmt(self.embed_hits as f64 / (self.embed_hits + self.embed_misses) as f64),
+            ]);
+            t.row(vec![
+                "embed cache entries".into(),
+                format!("{}", self.embed_entries),
+            ]);
+            t.row(vec![
+                "gcn forwards per query".into(),
+                fmt(self.gcn_forwards.mean()),
             ]);
         }
         for (engine, s) in &self.mac_counts {
@@ -431,6 +489,49 @@ mod tests {
     }
 
     #[test]
+    fn topk_and_embed_cache_rows_accumulate() {
+        use crate::runtime::EmbedCacheTelemetry;
+        let mut m = Metrics::new();
+        // A pair query that embedded both graphs (cold cache).
+        let mut pair = res(Outcome::Score(0.5)).with_engine(Arc::from("native-cpu"));
+        pair.telemetry.embed_cache = Some(EmbedCacheTelemetry {
+            hits: 0,
+            misses: 2,
+            entries: 2,
+        });
+        m.record(&pair);
+        // A top-k query over 9 candidates: only 4 unique embeds ran.
+        let mut topk = res(Outcome::TopK(vec![(1, 0.9), (0, 0.4)]))
+            .with_engine(Arc::from("native-cpu"));
+        topk.telemetry.embed_cache = Some(EmbedCacheTelemetry {
+            hits: 6,
+            misses: 4,
+            entries: 6,
+        });
+        m.record(&topk);
+        // A later result from a smaller lane cache must not shrink the
+        // gauge: entries is the max cache size observed, not last-wins.
+        let mut small = res(Outcome::Score(0.4)).with_engine(Arc::from("native-cpu"));
+        small.telemetry.embed_cache = Some(EmbedCacheTelemetry {
+            hits: 2,
+            misses: 0,
+            entries: 3,
+        });
+        m.record(&small);
+        assert_eq!(m.scored, 3, "top-k results count as scored");
+        assert_eq!(m.topk, 1);
+        assert_eq!(m.by_engine["native-cpu"], 3);
+        assert_eq!((m.embed_hits, m.embed_misses), (8, 6));
+        assert_eq!(m.embed_entries, 6, "entries gauge keeps the max");
+        assert_eq!(m.gcn_forwards.mean(), 2.0, "(2 + 4 + 0) / 3 forwards");
+        let rendered = m.render_table("t").render();
+        assert!(rendered.contains("topk queries"));
+        assert!(rendered.contains("embed cache hit rate"));
+        assert!(rendered.contains("embed cache entries"));
+        assert!(rendered.contains("gcn forwards per query"));
+    }
+
+    #[test]
     fn telemetry_rows_absent_without_telemetry() {
         let mut m = Metrics::new();
         m.record(&res(Outcome::Score(0.5)));
@@ -439,6 +540,8 @@ mod tests {
         assert!(!rendered.contains("dma upload"));
         assert!(!rendered.contains("engine cpu"));
         assert!(!rendered.contains("macs mean"));
+        assert!(!rendered.contains("embed cache"));
+        assert!(!rendered.contains("topk queries"));
     }
 
     #[test]

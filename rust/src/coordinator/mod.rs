@@ -6,6 +6,7 @@
 //! lanes (§5.4.3), and encoded concurrently with engine execution.
 pub mod batcher;
 pub mod channel;
+pub mod corpus;
 pub mod load;
 pub mod metrics;
 pub mod pipeline;

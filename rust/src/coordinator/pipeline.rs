@@ -33,6 +33,15 @@
 //! fuses the two stages into one sequential thread: the no-overlap
 //! baseline the benches compare against.
 //!
+//! Top-k corpus queries ([`QueryPayload::TopK`]) ride the same stages:
+//! admission validates the query graph, the batcher counts them like
+//! any query, the encoder encodes just the query graph (the corpus is
+//! pre-encoded and shared by `Arc`), and the executor calls
+//! `Engine::score_corpus` — the engine embeds the query once through
+//! its embedding cache and fans the NTN+FCN tail over the corpus
+//! (DESIGN.md S14). The ranking is assembled executor-side, where the
+//! corpus ids live.
+//!
 //! Shutdown is an ordered drop-sender cascade: dropping the pipeline's
 //! submit sender makes admission drain and exit, which drops the ingest
 //! sender, which makes the batcher flush and exit, and so on down the
@@ -44,14 +53,14 @@ use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
-use crate::graph::encode::{encode, PackedBatch};
+use crate::graph::encode::{encode, EncodedGraph, PackedBatch};
 use crate::nn::config::ModelConfig;
 use crate::runtime::{Engine, EngineCaps, EngineError, EngineFactory};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::channel::{channel, ChannelStats, NamedReceiver, NamedSender, SendPolicy, SendResult};
 use super::metrics::{LaneInfo, Metrics};
-use super::query::{Outcome, Query, QueryResult, RejectReason, StageTiming};
+use super::query::{Outcome, Query, QueryPayload, QueryResult, RejectReason, StageTiming};
 use super::router::{Admission, CapsRouter, LaneCaps};
 
 /// A batch released by the batcher stage, bound for one worker lane.
@@ -69,6 +78,25 @@ struct EncodedChunk {
     queue_us: Vec<f64>,
     /// Encode+pack time for the whole chunk, µs.
     encode_us: f64,
+}
+
+/// An encoded one-vs-many query in flight to an executor. The corpus
+/// rides inside the query's payload (an `Arc` — nothing is copied).
+struct TopKJob {
+    query: Query,
+    /// The encoded query graph (corpus graphs are pre-encoded).
+    encoded: EncodedGraph,
+    /// Submit -> encode-start wait, µs.
+    queue_us: f64,
+    /// Encode time for the query graph, µs.
+    encode_us: f64,
+}
+
+/// Unit of work an encoder hands its executor: a packed pair chunk or a
+/// single top-k corpus query.
+enum Work {
+    Chunk(EncodedChunk),
+    TopK(TopKJob),
 }
 
 /// Pipeline shape knobs. `ServeConfig` derives one of these; tests build
@@ -311,16 +339,34 @@ fn dispatch(
     queries: Vec<Query>,
     results: &NamedSender<QueryResult>,
 ) {
-    if let SendResult::Disconnected(batch) = fan_out.send(Batch { queries }) {
-        for q in batch.queries {
-            let _ = results.send(QueryResult::rejected(&q, RejectReason::ShuttingDown));
+    // Top-k queries are steered to lanes whose published caps support
+    // corpus scoring (a mixed `native,xla` deployment must not
+    // round-robin them onto engines that can only answer with a typed
+    // Unavailable); pair queries take any healthy lane.
+    let (pairs, topk) = split_batch(queries);
+    let mut deliver = |batch: Batch, corpus_only: bool| {
+        let sent = if corpus_only {
+            fan_out.send_filtered(batch, |caps| caps.supports_corpus)
+        } else {
+            fan_out.send(batch)
+        };
+        if let SendResult::Disconnected(batch) = sent {
+            for q in batch.queries {
+                let _ = results.send(QueryResult::rejected(&q, RejectReason::ShuttingDown));
+            }
         }
+    };
+    if !pairs.is_empty() {
+        deliver(Batch { queries: pairs }, false);
+    }
+    if !topk.is_empty() {
+        deliver(Batch { queries: topk }, true);
     }
 }
 
 fn encoder_stage(
     rx: NamedReceiver<Batch>,
-    out: NamedSender<EncodedChunk>,
+    out: NamedSender<Work>,
     results: NamedSender<QueryResult>,
     lane_caps: Arc<LaneCaps>,
     n_max: usize,
@@ -332,19 +378,47 @@ fn encoder_stage(
         Err(err) => return drain_failed(rx, &results, err),
     };
     while let Ok(batch) = rx.recv() {
-        for chunk in make_chunks(batch.queries, &caps) {
+        let (pairs, topk) = split_batch(batch.queries);
+        for q in topk {
+            if let Some(job) = encode_topk(q, n_max, num_labels, &results) {
+                send_work(&out, Work::TopK(job), &results);
+            }
+        }
+        for chunk in make_chunks(pairs, &caps) {
             if let Some(encoded) = encode_chunk(chunk, &caps, n_max, num_labels, &results) {
-                if let SendResult::Disconnected(encoded) = out.send(encoded) {
-                    let err = EngineError::Unavailable {
-                        reason: "executor stage gone".into(),
-                    };
-                    for q in encoded.queries {
-                        let _ = results.send(QueryResult::engine_error(&q, err.clone(), 0));
-                    }
-                }
+                send_work(&out, Work::Chunk(encoded), &results);
             }
         }
     }
+}
+
+/// Hand one encoded work unit to the executor; a dead executor answers
+/// every affected query with a typed error instead of dropping it.
+fn send_work(out: &NamedSender<Work>, work: Work, results: &NamedSender<QueryResult>) {
+    if let SendResult::Disconnected(work) = out.send(work) {
+        let err = EngineError::Unavailable {
+            reason: "executor stage gone".into(),
+        };
+        match work {
+            Work::Chunk(chunk) => {
+                for q in chunk.queries {
+                    let _ = results.send(QueryResult::engine_error(&q, err.clone(), 0));
+                }
+            }
+            Work::TopK(job) => {
+                let _ = results.send(QueryResult::engine_error(&job.query, err, 0));
+            }
+        }
+    }
+}
+
+/// Partition a released batch by payload kind, preserving order within
+/// each kind (pair queries chunk and pack; top-k queries execute one at
+/// a time — each already fans out over a whole corpus).
+fn split_batch(queries: Vec<Query>) -> (Vec<Query>, Vec<Query>) {
+    queries
+        .into_iter()
+        .partition(|q| matches!(q.payload, QueryPayload::Pair { .. }))
 }
 
 /// Publishes a "thread died" caps outcome if the executor unwinds before
@@ -361,7 +435,7 @@ impl Drop for CapsPanicGuard {
 
 fn executor_stage(
     factory: EngineFactory,
-    rx: NamedReceiver<EncodedChunk>,
+    rx: NamedReceiver<Work>,
     results: NamedSender<QueryResult>,
     lane_caps: Arc<LaneCaps>,
 ) {
@@ -381,8 +455,11 @@ fn executor_stage(
     };
     drop(guard);
     let tag: Arc<str> = Arc::from(engine.caps().name.as_str());
-    while let Ok(chunk) = rx.recv() {
-        execute_chunk(engine.as_mut(), &tag, chunk, &results);
+    while let Ok(work) = rx.recv() {
+        match work {
+            Work::Chunk(chunk) => execute_chunk(engine.as_mut(), &tag, chunk, &results),
+            Work::TopK(job) => execute_topk(engine.as_mut(), &tag, job, &results),
+        }
     }
 }
 
@@ -412,7 +489,13 @@ fn fused_stage(
     let caps = engine.caps().clone();
     let tag: Arc<str> = Arc::from(caps.name.as_str());
     while let Ok(batch) = rx.recv() {
-        for chunk in make_chunks(batch.queries, &caps) {
+        let (pairs, topk) = split_batch(batch.queries);
+        for q in topk {
+            if let Some(job) = encode_topk(q, n_max, num_labels, &results) {
+                execute_topk(engine.as_mut(), &tag, job, &results);
+            }
+        }
+        for chunk in make_chunks(pairs, &caps) {
             if let Some(encoded) = encode_chunk(chunk, &caps, n_max, num_labels, &results) {
                 execute_chunk(engine.as_mut(), &tag, encoded, &results);
             }
@@ -471,7 +554,16 @@ fn encode_chunk(
     let mut pairs = Vec::with_capacity(queries.len());
     let mut queue_us = Vec::with_capacity(queries.len());
     for q in queries {
-        match (encode(&q.g1, n_max, num_labels), encode(&q.g2, n_max, num_labels)) {
+        let QueryPayload::Pair { g1, g2 } = &q.payload else {
+            // split_batch routes top-k payloads elsewhere; a stray one
+            // is a wiring bug upstream — answer it, don't drop it.
+            let err = EngineError::InvalidInput {
+                detail: "top-k payload reached the pair encoder".into(),
+            };
+            let _ = results.send(QueryResult::engine_error(&q, err, 0));
+            continue;
+        };
+        match (encode(g1, n_max, num_labels), encode(g2, n_max, num_labels)) {
             (Ok(e1), Ok(e2)) => {
                 queue_us.push(t0.saturating_duration_since(q.submitted).as_secs_f64() * 1e6);
                 pairs.push((e1, e2));
@@ -511,6 +603,99 @@ fn encode_chunk(
         queue_us,
         encode_us: t0.elapsed().as_secs_f64() * 1e6,
     })
+}
+
+/// Encode one top-k query's graph (its corpus is pre-encoded). Encode
+/// failures answer the query with a typed error instead of losing it.
+fn encode_topk(
+    q: Query,
+    n_max: usize,
+    num_labels: usize,
+    results: &NamedSender<QueryResult>,
+) -> Option<TopKJob> {
+    let t0 = Instant::now();
+    let encoded = match &q.payload {
+        QueryPayload::TopK { graph, .. } => encode(graph, n_max, num_labels),
+        QueryPayload::Pair { .. } => {
+            // split_batch precludes this; a wiring bug upstream must
+            // still answer the query, never lose it silently (mirror of
+            // encode_chunk's stray-TopK handling).
+            let err = EngineError::InvalidInput {
+                detail: "pair payload reached the top-k encoder".into(),
+            };
+            let _ = results.send(QueryResult::engine_error(&q, err, 0));
+            return None;
+        }
+    };
+    match encoded {
+        Ok(encoded) => Some(TopKJob {
+            queue_us: t0.saturating_duration_since(q.submitted).as_secs_f64() * 1e6,
+            encode_us: t0.elapsed().as_secs_f64() * 1e6,
+            encoded,
+            query: q,
+        }),
+        Err(e) => {
+            let err = EngineError::InvalidInput {
+                detail: format!("encode: {e}"),
+            };
+            let _ = results.send(QueryResult::engine_error(&q, err, 0));
+            None
+        }
+    }
+}
+
+/// Run one top-k query: the engine embeds the query once (cache-aware)
+/// and fans the NTN+FCN tail over the corpus; the ranking is assembled
+/// here, where the corpus ids live. Engines without corpus support
+/// answer with their typed error.
+fn execute_topk(
+    engine: &mut dyn Engine,
+    tag: &Arc<str>,
+    job: TopKJob,
+    results: &NamedSender<QueryResult>,
+) {
+    let QueryPayload::TopK { corpus, k, .. } = &job.query.payload else {
+        unreachable!("encode_topk only forwards top-k payloads");
+    };
+    let t0 = Instant::now();
+    match engine.score_corpus(&job.encoded, corpus.graphs()) {
+        Ok(out) if out.scores.len() != corpus.len() => {
+            // A misbehaving engine must yield a typed error, not panic
+            // the lane via rank()'s one-score-per-candidate contract.
+            let err = EngineError::Backend {
+                engine: tag.to_string(),
+                detail: format!(
+                    "score_corpus returned {} scores for {} candidates",
+                    out.scores.len(),
+                    corpus.len()
+                ),
+            };
+            let _ = results
+                .send(QueryResult::engine_error(&job.query, err, 1).with_engine(Arc::clone(tag)));
+        }
+        Ok(out) => {
+            let ranked = corpus.rank(&out.scores, *k);
+            let _ = results.send(QueryResult {
+                id: job.query.id,
+                outcome: Outcome::TopK(ranked),
+                latency_us: job.query.submitted.elapsed().as_secs_f64() * 1e6,
+                // One query through the engine, however wide the fan-out.
+                batch_size: 1,
+                stage: StageTiming {
+                    queue_us: job.queue_us,
+                    encode_us: job.encode_us,
+                    execute_us: t0.elapsed().as_secs_f64() * 1e6,
+                },
+                telemetry: out.telemetry,
+                engine: Some(Arc::clone(tag)),
+            });
+        }
+        Err(err) => {
+            let _ = results.send(
+                QueryResult::engine_error(&job.query, err, 1).with_engine(Arc::clone(tag)),
+            );
+        }
+    }
 }
 
 fn execute_chunk(
@@ -555,8 +740,9 @@ fn execute_chunk(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::corpus::Corpus;
     use crate::graph::Graph;
-    use crate::runtime::BatchOutput;
+    use crate::runtime::{BatchOutput, CorpusOutput, QueryTelemetry};
     use std::sync::atomic::{AtomicU64, Ordering};
 
     /// Deterministic engine double: fixed batch ladder, optional per-call
@@ -596,6 +782,49 @@ mod tests {
                 reason: msg.into(),
             })
         })
+    }
+
+    /// Mock with corpus support: deterministic descending scores so the
+    /// executor-side ranking is predictable.
+    struct CorpusMockEngine {
+        caps: EngineCaps,
+        corpus_calls: Arc<AtomicU64>,
+    }
+
+    impl Engine for CorpusMockEngine {
+        fn caps(&self) -> &EngineCaps {
+            &self.caps
+        }
+        fn score_batch(&mut self, batch: &PackedBatch) -> Result<BatchOutput, EngineError> {
+            Ok(BatchOutput::untimed(vec![0.5; batch.batch]))
+        }
+        fn score_corpus(
+            &mut self,
+            _query: &crate::graph::encode::EncodedGraph,
+            corpus: &[crate::graph::encode::EncodedGraph],
+        ) -> Result<CorpusOutput, EngineError> {
+            self.corpus_calls.fetch_add(1, Ordering::Relaxed);
+            Ok(CorpusOutput {
+                scores: (0..corpus.len()).map(|i| 1.0 / (1.0 + i as f32)).collect(),
+                telemetry: QueryTelemetry::default(),
+            })
+        }
+    }
+
+    fn corpus_mock_factory(calls: Arc<AtomicU64>) -> EngineFactory {
+        Arc::new(move || {
+            Ok(Box::new(CorpusMockEngine {
+                caps: EngineCaps::new("corpus-mock", vec![1, 4], 8, 4).with_corpus_scoring(),
+                corpus_calls: Arc::clone(&calls),
+            }) as Box<dyn Engine>)
+        })
+    }
+
+    fn tiny_corpus(entries: usize) -> Arc<Corpus> {
+        let graphs: Vec<(u64, Graph)> = (0..entries)
+            .map(|i| (i as u64, Graph::new(3, vec![(0, 1), (1, 2)], vec![0, 1, (i % 4) as u16])))
+            .collect();
+        Arc::new(Corpus::build("test", &graphs, 8, 4).unwrap())
     }
 
     fn model() -> ModelConfig {
@@ -757,6 +986,118 @@ mod tests {
         );
         assert!(metrics.lanes[0].engine.contains("unavailable"));
         assert_eq!(metrics.lanes[1].engine, "mock");
+    }
+
+    #[test]
+    fn topk_queries_ride_the_pipeline_with_pairs() {
+        let corpus_calls = Arc::new(AtomicU64::new(0));
+        let pipeline = Pipeline::start(
+            model(),
+            vec![corpus_mock_factory(Arc::clone(&corpus_calls))],
+            pcfg(4, 2, Duration::from_micros(100)),
+        );
+        let corpus = tiny_corpus(6);
+        for id in 0..6 {
+            assert!(pipeline.submit(query(id)));
+        }
+        for id in 6..9 {
+            assert!(pipeline.submit(Query::topk(
+                id,
+                Graph::new(2, vec![(0, 1)], vec![0, 1]),
+                Arc::clone(&corpus),
+                2,
+            )));
+        }
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.scored, 9, "pairs and top-k both complete");
+        assert_eq!(metrics.topk, 3);
+        assert_eq!(metrics.rejected, 0);
+        assert_eq!(metrics.engine_errors, 0);
+        assert_eq!(corpus_calls.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.by_engine["corpus-mock"], 9);
+    }
+
+    #[test]
+    fn topk_routes_to_corpus_capable_lane_in_mixed_deployment() {
+        // One plain lane (no corpus support) + one corpus-capable lane:
+        // after the caps handshakes land, every top-k query must reach
+        // the capable lane instead of round-robining into typed errors.
+        let pair_calls = Arc::new(AtomicU64::new(0));
+        let corpus_calls = Arc::new(AtomicU64::new(0));
+        let pipeline = Pipeline::start(
+            model(),
+            vec![
+                mock_factory(vec![1, 4], Duration::ZERO, Arc::clone(&pair_calls)),
+                corpus_mock_factory(Arc::clone(&corpus_calls)),
+            ],
+            pcfg(4, 2, Duration::from_micros(100)),
+        );
+        // Block until both caps handshakes have landed: routing by
+        // published capability is only deterministic once published.
+        for lane in &pipeline.lane_caps {
+            lane.wait().expect("mock engines construct successfully");
+        }
+        let corpus = tiny_corpus(4);
+        for id in 0..8 {
+            assert!(pipeline.submit(Query::topk(
+                id,
+                Graph::new(2, vec![(0, 1)], vec![0, 1]),
+                Arc::clone(&corpus),
+                2,
+            )));
+        }
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.scored, 8, "every top-k served by the capable lane");
+        assert_eq!(metrics.topk, 8);
+        assert_eq!(metrics.engine_errors, 0);
+        assert_eq!(corpus_calls.load(Ordering::Relaxed), 8);
+        assert_eq!(metrics.by_engine.get("mock"), None);
+    }
+
+    #[test]
+    fn topk_on_unsupporting_engine_answers_typed_error() {
+        // The plain mock keeps score_corpus's default: pair traffic is
+        // served, the top-k query comes back as a typed engine error
+        // (never silently dropped, never K full forwards).
+        let calls = Arc::new(AtomicU64::new(0));
+        let pipeline = Pipeline::start(
+            model(),
+            vec![mock_factory(vec![1, 4], Duration::ZERO, calls)],
+            pcfg(4, 2, Duration::from_micros(100)),
+        );
+        for id in 0..3 {
+            assert!(pipeline.submit(query(id)));
+        }
+        assert!(pipeline.submit(Query::topk(
+            9,
+            Graph::new(2, vec![(0, 1)], vec![0, 1]),
+            tiny_corpus(4),
+            2,
+        )));
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.scored, 3);
+        assert_eq!(metrics.engine_errors, 1);
+        assert_eq!(metrics.topk, 0);
+    }
+
+    #[test]
+    fn empty_corpus_topk_is_rejected_at_admission() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let pipeline = Pipeline::start(
+            model(),
+            vec![corpus_mock_factory(calls)],
+            pcfg(4, 2, Duration::from_micros(100)),
+        );
+        let empty = Arc::new(Corpus::build("empty", &[], 8, 4).unwrap());
+        assert!(pipeline.submit(Query::topk(
+            1,
+            Graph::new(2, vec![(0, 1)], vec![0, 1]),
+            empty,
+            3,
+        )));
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.rejected, 1);
+        assert_eq!(metrics.scored, 0);
     }
 
     #[test]

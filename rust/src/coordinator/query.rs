@@ -6,26 +6,58 @@ use std::time::Instant;
 use crate::graph::Graph;
 use crate::runtime::{EngineError, QueryTelemetry};
 
+use super::corpus::Corpus;
+
+/// What one query asks for: an independent pair score (the original
+/// workload unit) or a one-vs-many ranking against a registered corpus
+/// (the paper's similarity-search use case). Both ride the same
+/// admission → batcher → executor pipeline.
+#[derive(Debug, Clone)]
+pub enum QueryPayload {
+    /// Score one graph pair.
+    Pair {
+        /// First graph of the pair.
+        g1: Graph,
+        /// Second graph of the pair.
+        g2: Graph,
+    },
+    /// Rank `corpus` by similarity to `graph`, keep the best `k`.
+    TopK {
+        /// The query graph (embedded once, cache-aware).
+        graph: Graph,
+        /// Shared candidate set (pre-encoded, fingerprinted).
+        corpus: Arc<Corpus>,
+        /// How many ranked candidates to return (clamped to the corpus).
+        k: usize,
+    },
+}
+
 /// A graph-similarity query (the unit of work, paper §5.1).
 #[derive(Debug, Clone)]
 pub struct Query {
     /// Caller-chosen identifier echoed back on the result.
     pub id: u64,
-    /// First graph of the pair.
-    pub g1: Graph,
-    /// Second graph of the pair.
-    pub g2: Graph,
+    /// What this query asks for.
+    pub payload: QueryPayload,
     /// When the query entered the pipeline.
     pub submitted: Instant,
 }
 
 impl Query {
-    /// Stamp a new query with the current time.
+    /// Stamp a new pair query with the current time.
     pub fn new(id: u64, g1: Graph, g2: Graph) -> Self {
         Query {
             id,
-            g1,
-            g2,
+            payload: QueryPayload::Pair { g1, g2 },
+            submitted: Instant::now(),
+        }
+    }
+
+    /// Stamp a new top-k corpus query with the current time.
+    pub fn topk(id: u64, graph: Graph, corpus: Arc<Corpus>, k: usize) -> Self {
+        Query {
+            id,
+            payload: QueryPayload::TopK { graph, corpus, k },
             submitted: Instant::now(),
         }
     }
@@ -48,6 +80,18 @@ pub enum RejectReason {
         /// Vocabulary size.
         num_labels: usize,
     },
+    /// A top-k query against an empty corpus (nothing to rank).
+    EmptyCorpus,
+    /// A top-k query whose corpus was encoded for different artifact
+    /// shapes than the serving model — scoring it would index
+    /// mismatched tensors (lane panic or silent garbage), so it is
+    /// rejected at admission.
+    CorpusShapeMismatch {
+        /// Shapes the corpus was encoded for.
+        corpus: (usize, usize),
+        /// Shapes the serving model expects.
+        model: (usize, usize),
+    },
     /// The pipeline is shutting down.
     ShuttingDown,
 }
@@ -61,6 +105,11 @@ impl std::fmt::Display for RejectReason {
             RejectReason::LabelOutOfRange { label, num_labels } => {
                 write!(f, "label {label} >= vocab {num_labels}")
             }
+            RejectReason::EmptyCorpus => write!(f, "top-k query against an empty corpus"),
+            RejectReason::CorpusShapeMismatch { corpus, model } => write!(
+                f,
+                "corpus encoded for (n_max, labels) = {corpus:?}, model expects {model:?}"
+            ),
             RejectReason::ShuttingDown => write!(f, "coordinator shutting down"),
         }
     }
@@ -69,8 +118,11 @@ impl std::fmt::Display for RejectReason {
 /// Outcome of one query.
 #[derive(Debug, Clone)]
 pub enum Outcome {
-    /// Scored successfully.
+    /// Pair query scored successfully.
     Score(f32),
+    /// Top-k query ranked successfully: `(corpus id, score)`, best
+    /// first, at most `k` entries.
+    TopK(Vec<(u64, f32)>),
     /// Rejected before reaching an engine.
     Rejected(RejectReason),
     /// An engine-side failure (typed, see [`EngineError`]).
@@ -144,10 +196,18 @@ impl QueryResult {
         self
     }
 
-    /// The score, if this query succeeded.
+    /// The score, if this pair query succeeded.
     pub fn score(&self) -> Option<f32> {
         match self.outcome {
             Outcome::Score(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The ranking, if this top-k query succeeded.
+    pub fn ranked(&self) -> Option<&[(u64, f32)]> {
+        match &self.outcome {
+            Outcome::TopK(r) => Some(r),
             _ => None,
         }
     }
@@ -186,10 +246,31 @@ mod tests {
     fn result_accessors() {
         let r = scored(Outcome::Score(0.5));
         assert_eq!(r.score(), Some(0.5));
+        assert_eq!(r.ranked(), None);
         assert!(!r.is_rejected());
         let r = scored(Outcome::Rejected(RejectReason::ShuttingDown));
         assert_eq!(r.score(), None);
         assert!(r.is_rejected());
+        let r = scored(Outcome::TopK(vec![(3, 0.9), (1, 0.2)]));
+        assert_eq!(r.score(), None);
+        assert_eq!(r.ranked(), Some(&[(3, 0.9), (1, 0.2)][..]));
+    }
+
+    #[test]
+    fn topk_constructor_carries_payload() {
+        use super::super::corpus::Corpus;
+        let g = crate::graph::Graph::new(2, vec![(0, 1)], vec![0, 0]);
+        let corpus =
+            Arc::new(Corpus::build("c", &[(0, g.clone()), (7, g.clone())], 8, 4).unwrap());
+        let q = Query::topk(9, g, Arc::clone(&corpus), 1);
+        assert_eq!(q.id, 9);
+        match &q.payload {
+            QueryPayload::TopK { corpus, k, .. } => {
+                assert_eq!(corpus.len(), 2);
+                assert_eq!(*k, 1);
+            }
+            other => panic!("expected TopK payload, got {other:?}"),
+        }
     }
 
     #[test]

@@ -22,25 +22,52 @@ use crate::nn::config::ModelConfig;
 use crate::runtime::{EngineCaps, EngineError};
 
 use super::channel::{NamedSender, SendResult};
-use super::query::{Query, QueryResult, RejectReason};
+use super::query::{Query, QueryPayload, QueryResult, RejectReason};
 
-/// Validate a query against the model's static shapes.
-pub fn validate(cfg: &ModelConfig, g1: &Graph, g2: &Graph) -> Result<(), RejectReason> {
-    for g in [g1, g2] {
-        if g.num_nodes() > cfg.n_max {
-            return Err(RejectReason::TooManyNodes {
-                nodes: g.num_nodes(),
-                n_max: cfg.n_max,
-            });
-        }
-        if let Some(&bad) = g.labels().iter().find(|&&l| (l as usize) >= cfg.num_labels) {
-            return Err(RejectReason::LabelOutOfRange {
-                label: bad,
-                num_labels: cfg.num_labels,
-            });
-        }
+/// Validate one graph against the model's static shapes.
+fn validate_graph(cfg: &ModelConfig, g: &Graph) -> Result<(), RejectReason> {
+    if g.num_nodes() > cfg.n_max {
+        return Err(RejectReason::TooManyNodes {
+            nodes: g.num_nodes(),
+            n_max: cfg.n_max,
+        });
+    }
+    if let Some(&bad) = g.labels().iter().find(|&&l| (l as usize) >= cfg.num_labels) {
+        return Err(RejectReason::LabelOutOfRange {
+            label: bad,
+            num_labels: cfg.num_labels,
+        });
     }
     Ok(())
+}
+
+/// Validate a pair query against the model's static shapes.
+pub fn validate(cfg: &ModelConfig, g1: &Graph, g2: &Graph) -> Result<(), RejectReason> {
+    validate_graph(cfg, g1)?;
+    validate_graph(cfg, g2)
+}
+
+/// Validate any payload: pair queries check both graphs; top-k queries
+/// check the query graph, reject rankings over an empty corpus, and
+/// reject a corpus encoded for different shapes than the serving model
+/// (its padded tensors would be indexed with the wrong strides — a
+/// lane panic at best, silently wrong scores at worst).
+pub fn validate_payload(cfg: &ModelConfig, payload: &QueryPayload) -> Result<(), RejectReason> {
+    match payload {
+        QueryPayload::Pair { g1, g2 } => validate(cfg, g1, g2),
+        QueryPayload::TopK { graph, corpus, .. } => {
+            if corpus.is_empty() {
+                return Err(RejectReason::EmptyCorpus);
+            }
+            if corpus.n_max() != cfg.n_max || corpus.num_labels() != cfg.num_labels {
+                return Err(RejectReason::CorpusShapeMismatch {
+                    corpus: (corpus.n_max(), corpus.num_labels()),
+                    model: (cfg.n_max, cfg.num_labels),
+                });
+            }
+            validate_graph(cfg, graph)
+        }
+    }
 }
 
 /// Admission-stage state: shape validation against the artifact limits.
@@ -59,7 +86,7 @@ impl Admission {
     /// Admit one query, or return the rejection result to send to the
     /// responder.
     pub fn admit(&self, q: Query) -> Result<Query, QueryResult> {
-        match validate(&self.cfg, &q.g1, &q.g2) {
+        match validate_payload(&self.cfg, &q.payload) {
             Ok(()) => Ok(q),
             Err(reason) => Err(QueryResult::rejected(&q, reason)),
         }
@@ -117,6 +144,22 @@ impl LaneCaps {
             Some(Err(_))
         )
     }
+
+    /// True when the lane has published working caps satisfying `pred`
+    /// — evaluated under the lock, no [`EngineCaps`] clone (the
+    /// router's steady-state dispatch probe).
+    pub fn satisfies(&self, pred: impl Fn(&EngineCaps) -> bool) -> bool {
+        matches!(
+            self.state.lock().expect("LaneCaps lock poisoned").as_ref(),
+            Some(Ok(caps)) if pred(caps)
+        )
+    }
+
+    /// True while the lane has not yet published any outcome (its
+    /// engine is still constructing).
+    pub fn is_unset(&self) -> bool {
+        self.state.lock().expect("LaneCaps lock poisoned").is_none()
+    }
 }
 
 /// Caps-aware round-robin dispatcher over the worker lanes. Healthy (or
@@ -143,24 +186,53 @@ impl<T> CapsRouter<T> {
         self.lanes.len()
     }
 
-    /// Dispatch to the next healthy lane; fall back to any lane when all
-    /// are known-failed (their drains report the error per query).
+    /// Dispatch to the next healthy (or still-constructing) lane in
+    /// strict rotation; fall back to any lane when all are known-failed
+    /// (their drains report the error per query).
     pub fn send(&mut self, v: T) -> SendResult<T> {
-        match self.try_rotation(v, true) {
+        match self.try_rotation(v, |lc| !lc.known_failed()) {
             Ok(delivered) => delivered,
-            // Every lane was skipped (known-failed) or disconnected:
-            // second rotation without the health filter.
-            Err(v) => self.try_rotation(v, false).unwrap_or_else(SendResult::Disconnected),
+            Err(v) => self.try_rotation(v, |_| true).unwrap_or_else(SendResult::Disconnected),
         }
     }
 
-    /// One rotation over all lanes starting at `self.next`; `Err(v)`
-    /// hands the value back if nobody accepted it.
-    fn try_rotation(&mut self, mut v: T, skip_failed: bool) -> Result<SendResult<T>, T> {
+    /// Dispatch preferring lanes whose *published* caps satisfy `pred`,
+    /// then lanes still constructing (their caps may turn out to
+    /// satisfy it — only the startup window before any capable lane
+    /// has published can misroute), and finally anyone, so the
+    /// executor/drain answers each query with a typed error — work is
+    /// reported, never silently dropped. Used to keep top-k work off
+    /// lanes whose engines lack corpus support.
+    pub fn send_filtered(
+        &mut self,
+        v: T,
+        pred: impl Fn(&EngineCaps) -> bool + Copy,
+    ) -> SendResult<T> {
+        // Pass 1: published-and-satisfying. Pass 2: still unknown.
+        // Pass 3: unconditional fallback.
+        let v = match self.try_rotation(v, |lc| lc.satisfies(pred)) {
+            Ok(delivered) => return delivered,
+            Err(v) => v,
+        };
+        let v = match self.try_rotation(v, |lc| lc.is_unset()) {
+            Ok(delivered) => return delivered,
+            Err(v) => v,
+        };
+        self.try_rotation(v, |_| true).unwrap_or_else(SendResult::Disconnected)
+    }
+
+    /// One rotation over all lanes starting at `self.next`, offering
+    /// the value to every lane whose caps cell passes `eligible`.
+    /// `Err(v)` hands the value back if nobody accepted it.
+    fn try_rotation(
+        &mut self,
+        mut v: T,
+        eligible: impl Fn(&LaneCaps) -> bool,
+    ) -> Result<SendResult<T>, T> {
         for _ in 0..self.lanes.len() {
             let lane = self.next;
             self.next = (self.next + 1) % self.lanes.len();
-            if skip_failed && self.lanes[lane].1.known_failed() {
+            if !eligible(&self.lanes[lane].1) {
                 continue;
             }
             match self.lanes[lane].0.send(v) {
@@ -222,11 +294,52 @@ mod tests {
     }
 
     #[test]
+    fn admission_validates_topk_payloads() {
+        use super::super::corpus::Corpus;
+        use super::super::query::RejectReason;
+        let adm = Admission::new(cfg());
+        let g = graph(4, 1);
+        let corpus = Arc::new(
+            Corpus::build("c", &[(0, g.clone()), (1, graph(3, 2))], 8, 4).unwrap(),
+        );
+        assert!(adm.admit(Query::topk(1, g.clone(), Arc::clone(&corpus), 5)).is_ok());
+        // Oversize query graph is rejected like a pair graph.
+        let res = adm.admit(Query::topk(2, graph(20, 1), Arc::clone(&corpus), 5)).unwrap_err();
+        assert!(res.is_rejected());
+        // An empty corpus has nothing to rank.
+        let empty = Arc::new(Corpus::build("e", &[], 8, 4).unwrap());
+        let res = adm.admit(Query::topk(3, g.clone(), empty, 5)).unwrap_err();
+        assert!(matches!(
+            res.outcome,
+            super::super::query::Outcome::Rejected(RejectReason::EmptyCorpus)
+        ));
+        // A corpus encoded for different artifact shapes than the
+        // serving model must be rejected, not scored with mismatched
+        // tensor strides.
+        let mismatched = Arc::new(
+            Corpus::build("wide", &[(0, graph(3, 1))], 16, 4).unwrap(),
+        );
+        let res = adm.admit(Query::topk(4, g, mismatched, 5)).unwrap_err();
+        assert!(matches!(
+            res.outcome,
+            super::super::query::Outcome::Rejected(RejectReason::CorpusShapeMismatch {
+                corpus: (16, 4),
+                model: (8, 4),
+            })
+        ));
+    }
+
+    #[test]
     fn lane_caps_first_set_wins_and_wait_returns_it() {
         let lc = LaneCaps::new();
         assert_eq!(lc.get(), None);
         assert!(!lc.known_failed());
+        assert!(lc.is_unset());
+        assert!(!lc.satisfies(|_| true), "unset lane satisfies nothing");
         lc.set(Ok(caps("a")));
+        assert!(!lc.is_unset());
+        assert!(lc.satisfies(|c| c.name == "a"));
+        assert!(!lc.satisfies(|c| c.supports_corpus));
         lc.set(Err(EngineError::Unavailable { reason: "late".into() }));
         assert_eq!(lc.wait().unwrap().name, "a");
         assert!(!lc.known_failed());
@@ -307,6 +420,33 @@ mod tests {
             got.push(v);
         }
         assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn caps_router_filter_steers_to_capable_lanes() {
+        let (tx1, rx1) = channel::<u64>("lane.0", 16, SendPolicy::Block);
+        let (tx2, rx2) = channel::<u64>("lane.1", 16, SendPolicy::Block);
+        let (plain, capable) = (LaneCaps::new(), LaneCaps::new());
+        plain.set(Ok(caps("pairs-only")));
+        capable.set(Ok(caps("corpus").with_corpus_scoring()));
+        let mut router = CapsRouter::new(vec![(tx1, plain), (tx2, capable)]);
+        for i in 0..4 {
+            assert!(router.send_filtered(i, |c| c.supports_corpus).is_sent());
+        }
+        assert!(rx1.try_recv().is_err(), "unsupporting lane must stay empty");
+        let mut got = Vec::new();
+        while let Ok(v) = rx2.try_recv() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        // No capable lane at all: fall back to any lane, whose executor
+        // answers with the typed error — never dropped.
+        drop(rx2);
+        assert!(router.send_filtered(9, |c| c.supports_corpus).is_sent());
+        assert_eq!(rx1.try_recv().unwrap(), 9);
+        // Unfiltered traffic still round-robins over live lanes.
+        assert!(router.send(10).is_sent());
+        assert_eq!(rx1.try_recv().unwrap(), 10);
     }
 
     #[test]

@@ -14,17 +14,19 @@
 //! path.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 
 use crate::graph::dataset::{random_pairs, GraphDb};
-use crate::graph::generate::Family;
+use crate::graph::generate::{generate, Family};
 use crate::nn::config::ArtifactsMeta;
 use crate::runtime::{EngineBuilder, EngineFactory, EngineKind};
 use crate::util::rng::Rng;
 
 use super::batcher::BatchPolicy;
+use super::corpus::Corpus;
 use super::load::{poisson_schedule, Pacer};
 use super::metrics::Metrics;
 use super::pipeline::{Pipeline, PipelineConfig};
@@ -53,6 +55,12 @@ pub struct ServeConfig {
     /// engine execution (2 = double buffering), 0 runs them sequentially
     /// in one thread (the no-overlap baseline).
     pub pipeline_depth: usize,
+    /// Corpus size for one-vs-many workloads (`--corpus N`): 0 serves
+    /// the classic pairwise workload; > 0 synthesizes an N-graph corpus
+    /// and every query becomes a top-k ranking against it.
+    pub corpus_size: usize,
+    /// How many ranked candidates each corpus query returns (`--topk K`).
+    pub topk: usize,
 }
 
 impl Default for ServeConfig {
@@ -66,6 +74,8 @@ impl Default for ServeConfig {
             batch_timeout_us: 200,
             seed: 42,
             pipeline_depth: 2,
+            corpus_size: 0,
+            topk: 10,
         }
     }
 }
@@ -113,47 +123,92 @@ impl ServeConfig {
             .collect::<Vec<_>>()
             .join(",")
     }
+
+    /// Title suffix describing the workload shape.
+    fn workload_label(&self) -> String {
+        if self.corpus_size > 0 {
+            format!(" corpus={} topk={}", self.corpus_size, self.topk)
+        } else {
+            String::new()
+        }
+    }
 }
 
-/// Shared serving core: synthesize the workload, run it through one
-/// staged pipeline (closed-loop when `pace_qps` is None, open-loop
-/// Poisson otherwise), return (metrics, wall seconds, max lateness).
+/// Submit lazily-built queries, optionally paced by a Poisson schedule
+/// (queries are constructed at submit time so `submitted` timestamps —
+/// and thus queue-wait metrics — reflect real arrival, not workload
+/// synthesis). Returns the worst pacing lateness observed.
+fn pump(
+    pipeline: &Pipeline,
+    queries: impl Iterator<Item = Query>,
+    schedule: Option<Vec<Duration>>,
+) -> Duration {
+    let mut max_late = Duration::ZERO;
+    match schedule {
+        Some(schedule) => {
+            let pacer = Pacer::new();
+            for (q, at) in queries.zip(schedule) {
+                max_late = max_late.max(pacer.wait_until(at));
+                pipeline.submit(q);
+            }
+        }
+        None => {
+            for q in queries {
+                pipeline.submit(q);
+            }
+        }
+    }
+    max_late
+}
+
+/// Shared serving core: synthesize the workload (pairwise, or top-k
+/// corpus search when `corpus_size > 0`), run it through one staged
+/// pipeline (closed-loop when `pace_qps` is None, open-loop Poisson
+/// otherwise), return (metrics, wall seconds, max lateness).
 fn run_serve(cfg: &ServeConfig, pace_qps: Option<f64>) -> Result<(Metrics, f64, Duration)> {
     anyhow::ensure!(!cfg.engines.is_empty(), "serve needs at least one engine kind");
     let meta = ArtifactsMeta::load(&cfg.artifacts_dir)
         .context("loading artifacts (run `make artifacts`)")?;
     let model_cfg = meta.config.clone();
+    let (n_max, num_labels) = (model_cfg.n_max, model_cfg.num_labels);
 
-    // Workload: AIDS-like random pairs (paper §5.1).
     let mut rng = Rng::new(cfg.seed);
-    let db = GraphDb::synthesize(
-        &mut rng,
-        Family::Aids,
-        512,
-        model_cfg.n_max,
-        model_cfg.num_labels,
-    );
-    let pairs = random_pairs(&mut rng, &db, cfg.queries);
-    let schedule = pace_qps.map(|rate| poisson_schedule(&mut rng, rate, cfg.queries));
-
     let pipeline = Pipeline::start(model_cfg, cfg.lane_factories(), cfg.pipeline_config());
 
-    let t0 = Instant::now();
-    let mut max_late = Duration::ZERO;
-    match schedule {
-        Some(schedule) => {
-            let pacer = Pacer::new();
-            for (q, at) in pairs.into_iter().zip(schedule) {
-                max_late = max_late.max(pacer.wait_until(at));
-                pipeline.submit(Query::new(q.id, q.g1, q.g2));
-            }
-        }
-        None => {
-            for q in pairs {
-                pipeline.submit(Query::new(q.id, q.g1, q.g2));
-            }
-        }
-    }
+    // Workload synthesis stays OUTSIDE the measured window (the clock
+    // starts just before the submit loop, as it always has): corpus
+    // encoding and graph generation are setup, not serving.
+    let (max_late, t0) = if cfg.corpus_size > 0 {
+        // One-vs-many workload: a shared AIDS-like corpus, fresh query
+        // graphs of the same family (so each query embeds once and the
+        // corpus embeds amortize across the run — DESIGN.md S14).
+        let db = GraphDb::synthesize(&mut rng, Family::Aids, cfg.corpus_size, n_max, num_labels);
+        let corpus = Arc::new(
+            Corpus::from_db("aids-synth", &db, n_max, num_labels)
+                .map_err(|e| anyhow::anyhow!("encoding corpus: {e}"))?,
+        );
+        let graphs: Vec<_> = (0..cfg.queries)
+            .map(|id| (id as u64, generate(&mut rng, Family::Aids, n_max, num_labels)))
+            .collect();
+        let k = cfg.topk;
+        let queries = graphs
+            .into_iter()
+            .map(|(id, g)| Query::topk(id, g, Arc::clone(&corpus), k));
+        // The Poisson schedule draws AFTER workload synthesis, keeping
+        // the seed → workload mapping identical across paced and
+        // unpaced runs (and across releases).
+        let schedule = pace_qps.map(|rate| poisson_schedule(&mut rng, rate, cfg.queries));
+        let t0 = Instant::now();
+        (pump(&pipeline, queries, schedule), t0)
+    } else {
+        // Classic workload: AIDS-like random pairs (paper §5.1).
+        let db = GraphDb::synthesize(&mut rng, Family::Aids, 512, n_max, num_labels);
+        let pairs = random_pairs(&mut rng, &db, cfg.queries);
+        let queries = pairs.into_iter().map(|q| Query::new(q.id, q.g1, q.g2));
+        let schedule = pace_qps.map(|rate| poisson_schedule(&mut rng, rate, cfg.queries));
+        let t0 = Instant::now();
+        (pump(&pipeline, queries, schedule), t0)
+    };
     let metrics = pipeline.finish();
     Ok((metrics, t0.elapsed().as_secs_f64(), max_late))
 }
@@ -163,13 +218,14 @@ fn run_serve(cfg: &ServeConfig, pace_qps: Option<f64>) -> Result<(Metrics, f64, 
 pub fn serve_workload(cfg: &ServeConfig) -> Result<crate::report::Table> {
     let (metrics, wall, _) = run_serve(cfg, None)?;
     let mut t = metrics.render_table(&format!(
-        "serve: engine={} lanes={} batch_max={} timeout={}us depth={} queries={}",
+        "serve: engine={} lanes={} batch_max={} timeout={}us depth={} queries={}{}",
         cfg.engines_label(),
         cfg.lanes(),
         cfg.batch_max,
         cfg.batch_timeout_us,
         cfg.pipeline_depth,
-        cfg.queries
+        cfg.queries,
+        cfg.workload_label()
     ));
     t.row(vec!["wall time (s)".into(), crate::report::fmt(wall)]);
     t.row(vec![
@@ -185,13 +241,14 @@ pub fn serve_workload(cfg: &ServeConfig) -> Result<crate::report::Table> {
 pub fn serve_paced(cfg: &ServeConfig, rate_qps: f64) -> Result<crate::report::Table> {
     let (metrics, _wall, max_late) = run_serve(cfg, Some(rate_qps))?;
     let mut t = metrics.render_table(&format!(
-        "serve-paced: engine={} rate={:.0} q/s lanes={} batch_max={} depth={} queries={}",
+        "serve-paced: engine={} rate={:.0} q/s lanes={} batch_max={} depth={} queries={}{}",
         cfg.engines_label(),
         rate_qps,
         cfg.lanes(),
         cfg.batch_max,
         cfg.pipeline_depth,
-        cfg.queries
+        cfg.queries,
+        cfg.workload_label()
     ));
     t.row(vec![
         "max submit lateness (ms)".into(),
@@ -305,6 +362,39 @@ mod tests {
         // Sim lanes contributed cycle rows, native lanes CPU rows.
         assert!(t.get("sim interval cycles mean").is_some(), "{}", t.render());
         assert!(t.get("engine cpu mean (ms)").is_some(), "{}", t.render());
+    }
+
+    #[test]
+    fn serve_corpus_topk_end_to_end() {
+        let Some(dir) = artifacts() else { return };
+        let cfg = ServeConfig {
+            artifacts_dir: dir,
+            engines: vec![EngineKind::Native],
+            queries: 12,
+            workers: 2,
+            batch_max: 4,
+            batch_timeout_us: 100,
+            seed: 11,
+            corpus_size: 32,
+            topk: 5,
+            ..ServeConfig::default()
+        };
+        let t = serve_workload(&cfg).unwrap();
+        let scored: f64 = t.rows[0][1].parse().unwrap();
+        assert_eq!(scored, 12.0, "{}", t.render());
+        assert_eq!(t.get("topk queries"), Some("12"), "{}", t.render());
+        // With 12 queries × 32 candidates against one shared corpus the
+        // cache must be doing real work: far fewer forwards than the
+        // 1 + 32 a cacheless engine would pay per query.
+        let forwards: f64 = t.get("gcn forwards per query").unwrap().parse().unwrap();
+        assert!(
+            forwards < 33.0,
+            "cache inactive: {forwards} forwards/query\n{}",
+            t.render()
+        );
+        let hit_rate: f64 = t.get("embed cache hit rate").unwrap().parse().unwrap();
+        assert!(hit_rate > 0.0, "{}", t.render());
+        assert!(t.get("embed cache entries").is_some(), "{}", t.render());
     }
 
     #[test]

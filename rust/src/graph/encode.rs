@@ -6,6 +6,44 @@
 use super::normalize::normalized_dense;
 use super::Graph;
 
+/// Content fingerprint of one graph's `(labels, edges)` structure — the
+/// key of the runtime's graph-embedding cache (DESIGN.md S14). Two
+/// encodings collide exactly when they describe the same labeled graph:
+/// the key covers the real-node count, the label sequence, and the
+/// normalized undirected edge list (in `Graph::new` order), and is
+/// independent of the padding shape (`n_max`), so the same graph keyed
+/// through different artifact configs still deduplicates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GraphKey(pub u128);
+
+/// FNV-1a, 128-bit flavor: tiny, dependency-free, and with a 2^128 key
+/// space the birthday bound for any realistic corpus is negligible.
+struct Fnv128(u128);
+
+impl Fnv128 {
+    const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+    const PRIME: u128 = 0x0000000001000000000000000000013b;
+
+    fn new() -> Self {
+        Fnv128(Self::OFFSET)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u128;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    fn write_u16(&mut self, v: u16) {
+        self.write(&v.to_le_bytes());
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+}
+
 /// CSR view of the normalized adjacency A' over the REAL rows only
 /// (`num_nodes` rows — padded rows have no entries by construction).
 /// Column indices are ascending within each row, so a CSR traversal
@@ -74,6 +112,10 @@ pub struct EncodedGraph {
     pub num_nodes: usize,
     /// Undirected edge count (pre-padding, without self-loops).
     pub num_edges: usize,
+    /// Precomputed content fingerprint — the embedding-cache key,
+    /// computed once at construction ([`EncodedGraph::compute_fingerprint`])
+    /// so per-query cache lookups are a field read, not a re-hash.
+    pub key: GraphKey,
 }
 
 /// Errors produced when a graph cannot be encoded for the fixed shapes.
@@ -166,6 +208,51 @@ impl EncodedGraph {
         }
         Ok(Graph::new(n, edges, labels))
     }
+
+    /// Content fingerprint over `(num_nodes, labels, edges)` — the
+    /// embedding-cache key (see [`GraphKey`]), precomputed at
+    /// construction (this is a field read on the scoring hot path).
+    pub fn fingerprint(&self) -> GraphKey {
+        self.key
+    }
+
+    /// Compute the content fingerprint from padded tensors: labels from
+    /// the one-hot rows, edges from the upper triangle of the CSR view,
+    /// whose ascending column order matches `Graph::edges()`, so the key
+    /// is deterministic in the graph alone (padding-independent). Used
+    /// by every [`EncodedGraph`] constructor; cost is
+    /// O(n·labels + nnz), paid once per encode.
+    pub fn compute_fingerprint(
+        h0: &[f32],
+        csr: &CsrAdj,
+        num_nodes: usize,
+        num_labels: usize,
+    ) -> GraphKey {
+        let mut h = Fnv128::new();
+        h.write_u64(num_nodes as u64);
+        for i in 0..num_nodes {
+            let label = h0[i * num_labels..(i + 1) * num_labels]
+                .iter()
+                .position(|&x| x != 0.0)
+                .unwrap_or(0);
+            h.write_u16(label as u16);
+        }
+        // Domain separator so a trailing label can never be read as the
+        // start of the edge list.
+        h.write_u64(u64::MAX);
+        for r in 0..csr.num_rows() {
+            let (s, t) = (csr.indptr[r] as usize, csr.indptr[r + 1] as usize);
+            for &c in &csr.indices[s..t] {
+                // Upper triangle only: self-loops and the mirrored lower
+                // half come from normalization, not graph content.
+                if (c as usize) > r {
+                    h.write_u16(r as u16);
+                    h.write_u16(c);
+                }
+            }
+        }
+        GraphKey(h.0)
+    }
 }
 
 /// Encode one graph into padded tensors (+ the CSR adjacency view).
@@ -192,6 +279,7 @@ pub fn encode(g: &Graph, n_max: usize, num_labels: usize) -> Result<EncodedGraph
     }
     let a_norm = normalized_dense(g, n_max);
     let csr = CsrAdj::from_dense(&a_norm, g.num_nodes(), n_max);
+    let key = EncodedGraph::compute_fingerprint(&h0, &csr, g.num_nodes(), num_labels);
     Ok(EncodedGraph {
         a_norm,
         h0,
@@ -199,6 +287,7 @@ pub fn encode(g: &Graph, n_max: usize, num_labels: usize) -> Result<EncodedGraph
         csr,
         num_nodes: g.num_nodes(),
         num_edges: g.num_edges(),
+        key,
     })
 }
 
@@ -238,6 +327,12 @@ pub struct PackedBatch {
     pub a2: Vec<f32>,
     pub h2: Vec<f32>,
     pub m2: Vec<f32>,
+    /// Per-slot content fingerprints of the first graphs, carried from
+    /// pack so `unpack_slot` copies instead of re-hashing on the
+    /// scoring hot path. Padding slots hold the empty-graph key.
+    pub k1: Vec<GraphKey>,
+    /// Per-slot content fingerprints of the second graphs.
+    pub k2: Vec<GraphKey>,
 }
 
 impl PackedBatch {
@@ -257,6 +352,10 @@ impl PackedBatch {
         }
         let n = pairs[0].0.mask.len();
         let l = pairs[0].0.h0.len() / n;
+        // Zero-padded tail slots decode as 0-node graphs, so they carry
+        // the empty graph's fingerprint.
+        let empty_key =
+            EncodedGraph::compute_fingerprint(&[], &CsrAdj::from_dense(&[], 0, 0), 0, 0);
         let mut pb = PackedBatch {
             batch,
             n_max: n,
@@ -267,18 +366,35 @@ impl PackedBatch {
             a2: vec![0.0; batch * n * n],
             h2: vec![0.0; batch * n * l],
             m2: vec![0.0; batch * n],
+            k1: vec![empty_key; batch],
+            k2: vec![empty_key; batch],
         };
         for (i, (g1, g2)) in pairs.iter().enumerate() {
             pb.a1[i * n * n..(i + 1) * n * n].copy_from_slice(&g1.a_norm);
             pb.h1[i * n * l..(i + 1) * n * l].copy_from_slice(&g1.h0);
             pb.m1[i * n..(i + 1) * n].copy_from_slice(&g1.mask);
+            pb.k1[i] = g1.key;
             pb.a2[i * n * n..(i + 1) * n * n].copy_from_slice(&g2.a_norm);
             pb.h2[i * n * l..(i + 1) * n * l].copy_from_slice(&g2.h0);
             pb.m2[i * n..(i + 1) * n].copy_from_slice(&g2.mask);
+            pb.k2[i] = g2.key;
         }
         // Zero-padded tail graphs have empty masks; every stage treats them
         // as 0-node graphs and produces a harmless score.
         Ok(pb)
+    }
+
+    /// Validate slot `i`'s real-node masks (the `1...10...0` prefix
+    /// invariant) without unpacking any tensors — O(n_max), no copies.
+    /// The engines' warm-cache fast path uses this so a corrupted batch
+    /// fails with the same typed error whether or not its fingerprints
+    /// are cached.
+    pub fn validate_slot_masks(&self, i: usize) -> Result<(), NonPrefixMask> {
+        assert!(i < self.batch, "slot {i} out of range (batch {})", self.batch);
+        let n = self.n_max;
+        validate_prefix_mask(&self.m1[i * n..(i + 1) * n])?;
+        validate_prefix_mask(&self.m2[i * n..(i + 1) * n])?;
+        Ok(())
     }
 
     /// Unpack slot `i` back into the two [`EncodedGraph`]s it was packed
@@ -293,31 +409,50 @@ impl PackedBatch {
     /// rows `0..num_nodes`, so a corrupted non-prefix mask returns a
     /// typed error instead of silently dropping real rows.
     pub fn unpack_slot(&self, i: usize) -> Result<(EncodedGraph, EncodedGraph), NonPrefixMask> {
+        Ok((self.unpack_slot_g1(i)?, self.unpack_slot_g2(i)?))
+    }
+
+    /// Unpack only slot `i`'s first graph — the engines' warm fast path
+    /// copies just the missed side's tensors instead of both.
+    pub fn unpack_slot_g1(&self, i: usize) -> Result<EncodedGraph, NonPrefixMask> {
+        self.unpack_side(i, &self.a1, &self.h1, &self.m1, self.k1[i])
+    }
+
+    /// Unpack only slot `i`'s second graph.
+    pub fn unpack_slot_g2(&self, i: usize) -> Result<EncodedGraph, NonPrefixMask> {
+        self.unpack_side(i, &self.a2, &self.h2, &self.m2, self.k2[i])
+    }
+
+    fn unpack_side(
+        &self,
+        i: usize,
+        a: &[f32],
+        h: &[f32],
+        m: &[f32],
+        key: GraphKey,
+    ) -> Result<EncodedGraph, NonPrefixMask> {
         assert!(i < self.batch, "slot {i} out of range (batch {})", self.batch);
         let (n, l) = (self.n_max, self.num_labels);
-        let grab = |a: &[f32], h: &[f32], m: &[f32]| -> Result<EncodedGraph, NonPrefixMask> {
-            let mask = m[i * n..(i + 1) * n].to_vec();
-            let num_nodes = validate_prefix_mask(&mask)?;
-            let a_norm = a[i * n * n..(i + 1) * n * n].to_vec();
-            let csr = CsrAdj::from_dense(&a_norm, num_nodes, n);
-            // A' carries one strictly positive self-loop per real node
-            // plus both directions of every edge, so the CSR nonzero
-            // count gives the edge count without a second dense scan
-            // (this runs per slot on the scoring hot path).
-            let num_edges = csr.nnz().saturating_sub(num_nodes) / 2;
-            Ok(EncodedGraph {
-                a_norm,
-                h0: h[i * n * l..(i + 1) * n * l].to_vec(),
-                mask,
-                csr,
-                num_nodes,
-                num_edges,
-            })
-        };
-        Ok((
-            grab(&self.a1, &self.h1, &self.m1)?,
-            grab(&self.a2, &self.h2, &self.m2)?,
-        ))
+        let mask = m[i * n..(i + 1) * n].to_vec();
+        let num_nodes = validate_prefix_mask(&mask)?;
+        let a_norm = a[i * n * n..(i + 1) * n * n].to_vec();
+        let csr = CsrAdj::from_dense(&a_norm, num_nodes, n);
+        // A' carries one strictly positive self-loop per real node
+        // plus both directions of every edge, so the CSR nonzero
+        // count gives the edge count without a second dense scan
+        // (this runs per slot on the scoring hot path).
+        let num_edges = csr.nnz().saturating_sub(num_nodes) / 2;
+        Ok(EncodedGraph {
+            a_norm,
+            h0: h[i * n * l..(i + 1) * n * l].to_vec(),
+            mask,
+            csr,
+            num_nodes,
+            num_edges,
+            // Carried verbatim from pack — no per-slot re-hash on
+            // the scoring hot path.
+            key,
+        })
     }
 }
 
@@ -421,12 +556,16 @@ mod tests {
             assert_eq!(u1.csr, e1.csr, "slot {i} g1 CSR roundtrip");
             assert_eq!(u2.csr, e2.csr, "slot {i} g2 CSR roundtrip");
         }
-        // Padding slots unpack as empty graphs.
+        // Padding slots unpack as empty graphs carrying the canonical
+        // empty-graph fingerprint (so every pad shares one cache entry).
         let (p1, p2) = pb.unpack_slot(3).unwrap();
         assert_eq!(p1.num_nodes, 0);
         assert_eq!(p1.num_edges, 0);
         assert_eq!(p1.csr.nnz(), 0);
         assert_eq!(p2.num_nodes, 0);
+        let empty = encode(&Graph::new(0, vec![], vec![]), 32, 29).unwrap();
+        assert_eq!(p1.fingerprint(), empty.fingerprint());
+        assert_eq!(p2.fingerprint(), empty.fingerprint());
     }
 
     #[test]
@@ -443,8 +582,11 @@ mod tests {
         pb.m1[1] = 0.0;
         let err = pb.unpack_slot(0).unwrap_err();
         assert!(err.index >= 1, "offending index reported: {err}");
+        // The copy-free validator agrees with the unpack path.
+        assert!(pb.validate_slot_masks(0).is_err());
         // The other slot (all-zero padding) is still fine.
         assert!(pb.unpack_slot(1).is_ok());
+        assert!(pb.validate_slot_masks(1).is_ok());
     }
 
     #[test]
@@ -466,6 +608,62 @@ mod tests {
             assert_eq!(d.num_edges(), g.num_edges());
             assert_eq!(d.labels(), g.labels());
             assert_eq!(d.edges(), g.edges(), "Graph::new normalizes edge order");
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_content_deterministic() {
+        let g = Graph::new(4, vec![(0, 1), (1, 2), (2, 3)], vec![3, 1, 4, 1]);
+        // Same graph, same key — including across different padding
+        // shapes (the key covers content, not the artifact config).
+        let a = encode(&g, 8, 8).unwrap().fingerprint();
+        let b = encode(&g, 8, 8).unwrap().fingerprint();
+        let wide = encode(&g, 16, 8).unwrap().fingerprint();
+        assert_eq!(a, b);
+        assert_eq!(a, wide, "padding shape must not enter the key");
+        // The packed-batch roundtrip preserves the key too.
+        let e = encode(&g, 8, 8).unwrap();
+        let pb = PackedBatch::pack(&[(e.clone(), e.clone())], 2).unwrap();
+        let (u1, _) = pb.unpack_slot(0).unwrap();
+        assert_eq!(u1.fingerprint(), a);
+    }
+
+    #[test]
+    fn fingerprint_separates_labels_edges_and_sizes() {
+        let base = Graph::new(3, vec![(0, 1), (1, 2)], vec![0, 1, 2]);
+        let key = |g: &Graph| encode(g, 8, 8).unwrap().fingerprint();
+        // Same topology, permuted labels -> distinct keys.
+        let permuted = Graph::new(3, vec![(0, 1), (1, 2)], vec![2, 1, 0]);
+        assert_ne!(key(&base), key(&permuted));
+        // Same labels, one edge moved -> distinct keys.
+        let rewired = Graph::new(3, vec![(0, 1), (0, 2)], vec![0, 1, 2]);
+        assert_ne!(key(&base), key(&rewired));
+        // Label/edge-boundary confusion: an extra isolated node is not
+        // the same as an extra edge entry.
+        let bigger = Graph::new(4, vec![(0, 1), (1, 2)], vec![0, 1, 2, 0]);
+        assert_ne!(key(&base), key(&bigger));
+        // Empty graphs have a stable key of their own (padding slots all
+        // share it, so one cache entry serves every pad).
+        let empty = Graph::new(0, vec![], vec![]);
+        assert_eq!(key(&empty), key(&empty));
+        assert_ne!(key(&empty), key(&base));
+    }
+
+    #[test]
+    fn fingerprints_are_distinct_over_random_graphs() {
+        // Collision smoke test: 200 random AIDS-like graphs, no key
+        // collisions unless the graphs are actually equal.
+        let mut rng = Rng::new(23);
+        let mut seen: Vec<(super::GraphKey, Graph)> = Vec::new();
+        for _ in 0..200 {
+            let g = generate(&mut rng, Family::Aids, 32, 29);
+            let k = encode(&g, 32, 29).unwrap().fingerprint();
+            for (prev_k, prev_g) in &seen {
+                if *prev_k == k {
+                    assert_eq!(prev_g, &g, "distinct graphs collided on {k:?}");
+                }
+            }
+            seen.push((k, g));
         }
     }
 

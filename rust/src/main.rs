@@ -73,10 +73,13 @@ fn usage() -> ! {
          \t[--queries N] [--no-pjrt] [--artifacts DIR] [--json OUT.json]\n\
          \n  serve [--queries N] [--engine KINDS] [--workers K] [--batch-max B]\n\
          \t[--batch-timeout-us T] [--pipeline-depth D] [--rate QPS] [--artifacts DIR]\n\
+         \t[--corpus N] [--topk K]\n\
          \t(KINDS: comma-separated engine kinds from {{{}}};\n\
          \t a list runs heterogeneous lanes, e.g. --engine native,sim;\n\
          \t --pipeline-depth 0 = sequential encode+execute baseline;\n\
-         \t --rate runs open-loop Poisson pacing instead of closed-loop flood)\n\
+         \t --rate runs open-loop Poisson pacing instead of closed-loop flood;\n\
+         \t --corpus N switches to one-vs-many search: each query ranks an\n\
+         \t N-graph corpus through the embedding cache and returns its --topk best)\n\
          \n  gen [--family aids|linux|imdb] [--count N]\n\
          \n  ged [--nodes N] [--pairs P]",
         kinds.join(", ")
@@ -158,6 +161,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         batch_timeout_us: args.usize("batch-timeout-us", 200) as u64,
         seed: args.usize("seed", 42) as u64,
         pipeline_depth: args.usize("pipeline-depth", 2),
+        corpus_size: args.usize("corpus", 0),
+        topk: args.usize("topk", 10),
     };
     let report = match args.flags.get("rate") {
         Some(rate) => {

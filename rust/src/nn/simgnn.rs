@@ -243,6 +243,46 @@ pub fn fcn_forward(cfg: &ModelConfig, w: &Weights, s: &[f32]) -> f32 {
     sigmoid(logit)
 }
 
+/// One graph's share of the pair forward: the GCN trace plus the
+/// post-attention graph embedding `hg` (F,). This is the unit the
+/// runtime's embedding cache stores — everything per-graph; the NTN+FCN
+/// tail ([`pair_score`]) is the only per-pair work left (DESIGN.md S14).
+#[derive(Debug, Clone)]
+pub struct GraphEmbedding {
+    /// GCN per-stage intermediates and work counts.
+    pub trace: GcnTrace,
+    /// Post-attention graph-level embedding, `embed_dim()` floats.
+    pub hg: Vec<f32>,
+}
+
+/// Per-graph stage: GCN forward + attention pooling (sparse default).
+pub fn embed_graph(cfg: &ModelConfig, w: &Weights, g: &EncodedGraph) -> GraphEmbedding {
+    embed_graph_with(cfg, w, g, SparsePolicy::default())
+}
+
+/// Per-graph stage under an explicit [`SparsePolicy`].
+pub fn embed_graph_with(
+    cfg: &ModelConfig,
+    w: &Weights,
+    g: &EncodedGraph,
+    policy: SparsePolicy,
+) -> GraphEmbedding {
+    let trace = gcn_forward_with(cfg, w, g, policy);
+    let hg = attention_pool(cfg, w, &trace.embeddings, &g.mask);
+    GraphEmbedding { trace, hg }
+}
+
+/// Per-pair tail: NTN similarity slices + FCN scorer on two graph
+/// embeddings. Returns `(ntn_out, score)`. Composing
+/// [`embed_graph_with`] with this is bit-identical to the fused
+/// [`simgnn_forward_with`] — the fused path is implemented on top of
+/// exactly these two calls.
+pub fn pair_score(cfg: &ModelConfig, w: &Weights, hg1: &[f32], hg2: &[f32]) -> (Vec<f32>, f32) {
+    let ntn_out = ntn_forward(cfg, w, hg1, hg2);
+    let score = fcn_forward(cfg, w, &ntn_out);
+    (ntn_out, score)
+}
+
 /// Full per-pair forward with all intermediates exposed.
 #[derive(Debug, Clone)]
 pub struct PairTrace {
@@ -266,6 +306,10 @@ pub fn simgnn_forward(
 }
 
 /// Score one encoded pair under an explicit [`SparsePolicy`].
+///
+/// Implemented on the split API (per-graph [`embed_graph_with`] × 2,
+/// then the per-pair [`pair_score`] tail), so the fused and split paths
+/// cannot drift: they are the same code, hence bit-identical.
 pub fn simgnn_forward_with(
     cfg: &ModelConfig,
     w: &Weights,
@@ -273,17 +317,14 @@ pub fn simgnn_forward_with(
     g2: &EncodedGraph,
     policy: SparsePolicy,
 ) -> PairTrace {
-    let trace1 = gcn_forward_with(cfg, w, g1, policy);
-    let trace2 = gcn_forward_with(cfg, w, g2, policy);
-    let hg1 = attention_pool(cfg, w, &trace1.embeddings, &g1.mask);
-    let hg2 = attention_pool(cfg, w, &trace2.embeddings, &g2.mask);
-    let ntn_out = ntn_forward(cfg, w, &hg1, &hg2);
-    let score = fcn_forward(cfg, w, &ntn_out);
+    let e1 = embed_graph_with(cfg, w, g1, policy);
+    let e2 = embed_graph_with(cfg, w, g2, policy);
+    let (ntn_out, score) = pair_score(cfg, w, &e1.hg, &e2.hg);
     PairTrace {
-        trace1,
-        trace2,
-        hg1,
-        hg2,
+        trace1: e1.trace,
+        trace2: e2.trace,
+        hg1: e1.hg,
+        hg2: e2.hg,
         ntn_out,
         score,
     }
@@ -470,6 +511,32 @@ mod tests {
                     stream.len() as u64,
                     "layer {layer} FT element count vs nonzero stream"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn split_api_matches_fused_forward_bit_for_bit() {
+        // embed_graph + pair_score IS the fused forward (one is built on
+        // the other), but pin it with an explicit cross-check so a future
+        // divergence of the two paths cannot slip by.
+        let cfg = tiny_cfg();
+        let w = const_weights(&cfg, 0.06);
+        let mut rng = Rng::new(58);
+        for policy in [SparsePolicy::Dense, SparsePolicy::Csr] {
+            for _ in 0..5 {
+                let g1 = generate(&mut rng, Family::ErdosRenyi { n: 5, p_millis: 300 }, 8, 4);
+                let g2 = generate(&mut rng, Family::ErdosRenyi { n: 7, p_millis: 300 }, 8, 4);
+                let e1 = encode(&g1, cfg.n_max, cfg.num_labels).unwrap();
+                let e2 = encode(&g2, cfg.n_max, cfg.num_labels).unwrap();
+                let fused = simgnn_forward_with(&cfg, &w, &e1, &e2, policy);
+                let m1 = embed_graph_with(&cfg, &w, &e1, policy);
+                let m2 = embed_graph_with(&cfg, &w, &e2, policy);
+                let (ntn, score) = pair_score(&cfg, &w, &m1.hg, &m2.hg);
+                assert_eq!(fused.hg1, m1.hg);
+                assert_eq!(fused.hg2, m2.hg);
+                assert_eq!(fused.ntn_out, ntn);
+                assert_eq!(fused.score, score);
             }
         }
     }

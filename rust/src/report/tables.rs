@@ -17,7 +17,6 @@ use crate::graph::generate::Family;
 use crate::nn::config::{ArtifactsMeta, ModelConfig};
 use crate::nn::simgnn::{gcn_forward, simgnn_forward};
 use crate::nn::weights::Weights;
-use crate::runtime::native::NativeEngine;
 use crate::runtime::pjrt::XlaEngine;
 use crate::runtime::Engine;
 use crate::sim::baseline::{CpuModel, GpuModel, QueryWork};
@@ -241,7 +240,6 @@ pub struct Measured {
 }
 
 pub fn measure_native(ctx: &Context, pairs: &[QueryPair]) -> Measured {
-    let eng = NativeEngine::new(ctx.cfg.clone(), ctx.weights.clone());
     let t0 = Instant::now();
     let mut encoded = Vec::with_capacity(pairs.len());
     for q in pairs {
@@ -254,7 +252,11 @@ pub fn measure_native(ctx: &Context, pairs: &[QueryPair]) -> Measured {
     let t1 = Instant::now();
     let mut acc = 0.0f32;
     for (e1, e2) in &encoded {
-        acc += eng.score_pair(e1, e2);
+        // The uncached fused forward, NOT the engine's cache-aware
+        // score_pair: this row is the measured cost of a full native
+        // forward, compared against the uncached PJRT engine — repeated
+        // database graphs must not be served from the embedding cache.
+        acc += simgnn_forward(&ctx.cfg, &ctx.weights, e1, e2).score;
     }
     std::hint::black_box(acc);
     let kernel = t1.elapsed().as_secs_f64();
@@ -597,7 +599,6 @@ pub fn accuracy(ctx: &Context, pairs_count: usize) -> Table {
     let mut rng = Rng::new(0xacc);
     let family = crate::graph::generate::Family::ErdosRenyi { n: 7, p_millis: 250 };
     let db = GraphDb::synthesize(&mut rng, family, 64, ctx.cfg.n_max, ctx.cfg.num_labels);
-    let eng = NativeEngine::new(ctx.cfg.clone(), ctx.weights.clone());
 
     // per pair: (exact, nn, greedy, beam, hungarian) similarities
     let mut rows: Vec<(f64, f64, f64, f64, f64)> = Vec::new();
@@ -625,7 +626,9 @@ pub fn accuracy(ctx: &Context, pairs_count: usize) -> Table {
         t_exact += t.elapsed().as_secs_f64();
         let sim_exact = ged_similarity(exact, g1.num_nodes(), g2.num_nodes());
         let t = Instant::now();
-        let nn = eng.score_pair(&e1, &e2) as f64;
+        // Uncached fused forward: the timing row measures a full
+        // inference, not a cache hit on a repeated database graph.
+        let nn = simgnn_forward(&ctx.cfg, &ctx.weights, &e1, &e2).score as f64;
         t_nn += t.elapsed().as_secs_f64();
         let t = Instant::now();
         let gr = ged_similarity(greedy_ged(g1, g2), g1.num_nodes(), g2.num_nodes());

@@ -1,0 +1,312 @@
+//! Sharded LRU cache of graph-level embeddings, keyed by the content
+//! fingerprint of `(labels, edges)` (`graph::encode::GraphKey`).
+//!
+//! The SimGNN forward splits into a per-graph stage (GCN + attention —
+//! all the heavy work) and a per-pair tail (NTN + FCN). The per-graph
+//! stage depends only on the graph itself, so a one-vs-many corpus query
+//! of K candidates needs exactly `unique_graphs` GCN forwards, not K —
+//! the same redundancy elimination GraphACT applies to repeated
+//! aggregations before they reach the accelerator. Engines consult this
+//! cache before every embed; hit/miss counts ride out per query as
+//! [`QueryTelemetry::embed_cache`](super::QueryTelemetry) and surface in
+//! the serve report (`embed cache hit rate` / `embed cache entries` /
+//! `gcn forwards per query`). See DESIGN.md S14.
+//!
+//! Sharding bounds lock hold times when a cache is shared (the cache is
+//! interior-mutable — `get`/`insert` take `&self`); LRU order is
+//! therefore *per shard*. Tests that need strict global LRU semantics
+//! construct a single-shard cache via [`EmbedCache::with_shards`].
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::graph::encode::GraphKey;
+
+use super::MacCounts;
+
+/// Default entry capacity for engine-owned caches: at 16 f32s per
+/// embedding this is well under a megabyte, yet covers a corpus far
+/// larger than the synthetic workloads' 512-graph database.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// Default shard count for engine-owned caches.
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// One cached per-graph result: the post-attention embedding plus the
+/// GCN work counts that produced it (so reports can price what a hit
+/// saves without recomputing anything). Entries live behind `Arc` so a
+/// hit is a pointer clone — no `hg` allocation under the shard lock.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CachedEmbed {
+    /// Post-attention graph embedding, `embed_dim()` floats.
+    pub hg: Vec<f32>,
+    /// GCN-stage work executed to produce `hg` (one graph's share).
+    pub macs: MacCounts,
+}
+
+/// Aggregate cache counters (monotonic except `entries`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// `get` calls that found an entry.
+    pub hits: u64,
+    /// `get` calls that missed.
+    pub misses: u64,
+    /// Entries displaced by capacity pressure.
+    pub evictions: u64,
+    /// Current entry count across all shards.
+    pub entries: u64,
+}
+
+/// One shard: key -> (recency tick, value) plus a tick-ordered index for
+/// O(log n) LRU eviction without unsafe pointer chasing.
+struct Shard {
+    map: HashMap<u128, (u64, Arc<CachedEmbed>)>,
+    lru: BTreeMap<u64, u128>,
+    tick: u64,
+    capacity: usize,
+}
+
+impl Shard {
+    fn new(capacity: usize) -> Self {
+        Shard {
+            map: HashMap::with_capacity(capacity.min(64)),
+            lru: BTreeMap::new(),
+            tick: 0,
+            capacity,
+        }
+    }
+
+    fn touch(&mut self, key: u128) -> Option<Arc<CachedEmbed>> {
+        let entry = self.map.get_mut(&key)?;
+        let old = entry.0;
+        self.tick += 1;
+        entry.0 = self.tick;
+        let value = Arc::clone(&entry.1);
+        self.lru.remove(&old);
+        self.lru.insert(self.tick, key);
+        Some(value)
+    }
+
+    /// Insert (or refresh) `key`; returns `(grew, evicted)`.
+    fn insert(&mut self, key: u128, value: Arc<CachedEmbed>) -> (bool, bool) {
+        self.tick += 1;
+        if let Some((old, _)) = self.map.insert(key, (self.tick, value)) {
+            // Refresh of an existing key: no growth, no eviction.
+            self.lru.remove(&old);
+            self.lru.insert(self.tick, key);
+            return (false, false);
+        }
+        self.lru.insert(self.tick, key);
+        let mut evicted = false;
+        if self.map.len() > self.capacity {
+            let (&oldest, &victim) = self.lru.iter().next().expect("non-empty over capacity");
+            self.lru.remove(&oldest);
+            self.map.remove(&victim);
+            evicted = true;
+        }
+        (true, evicted)
+    }
+}
+
+/// Sharded LRU embedding cache. `get`/`insert` are `&self` (a mutex per
+/// shard), so an engine can consult its cache from `&self` accessors and
+/// a cache could be shared across lanes later without an API change.
+pub struct EmbedCache {
+    shards: Vec<Mutex<Shard>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    entries: AtomicU64,
+}
+
+impl EmbedCache {
+    /// Cache with ~`capacity` entries total (>= 1) across up to
+    /// [`DEFAULT_SHARDS`] shards — the shard count clamps down so any
+    /// positive capacity is valid.
+    pub fn new(capacity: usize) -> Self {
+        Self::with_shards(capacity, DEFAULT_SHARDS.min(capacity.max(1)))
+    }
+
+    /// Cache with an explicit shard count (tests use 1 shard for strict
+    /// global LRU order). Total capacity splits evenly across shards,
+    /// at least one entry each.
+    pub fn with_shards(capacity: usize, shards: usize) -> Self {
+        assert!(shards >= 1, "cache needs at least one shard");
+        assert!(capacity >= shards, "capacity must cover every shard");
+        let per_shard = capacity / shards;
+        EmbedCache {
+            shards: (0..shards).map(|_| Mutex::new(Shard::new(per_shard))).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            entries: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: GraphKey) -> &Mutex<Shard> {
+        // Fold the 128-bit fingerprint; the key is already uniform.
+        let folded = (key.0 as u64) ^ ((key.0 >> 64) as u64);
+        &self.shards[(folded % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up `key`, refreshing its recency. Counts a hit or a miss.
+    /// A hit clones only the `Arc`, never the embedding.
+    pub fn get(&self, key: GraphKey) -> Option<Arc<CachedEmbed>> {
+        let hit = self.shard(key).lock().expect("embed cache poisoned").touch(key.0);
+        match &hit {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        hit
+    }
+
+    /// Insert `key`, evicting the shard's least-recently-used entry when
+    /// the shard is full.
+    pub fn insert(&self, key: GraphKey, value: Arc<CachedEmbed>) {
+        let (grew, evicted) = self
+            .shard(key)
+            .lock()
+            .expect("embed cache poisoned")
+            .insert(key.0, value);
+        if evicted {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        } else if grew {
+            self.entries.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Current entry count across all shards.
+    pub fn len(&self) -> usize {
+        self.entries.load(Ordering::Relaxed) as usize
+    }
+
+    /// True when no entry is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.entries.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn key(v: u128) -> GraphKey {
+        GraphKey(v)
+    }
+
+    fn embed(tag: f32) -> Arc<CachedEmbed> {
+        Arc::new(CachedEmbed {
+            hg: vec![tag; 4],
+            macs: MacCounts {
+                macs: tag as u64,
+                ft_elements: 1,
+                agg_elements: 1,
+            },
+        })
+    }
+
+    #[test]
+    fn lru_evicts_oldest_and_touch_refreshes() {
+        // Single shard: strict global LRU order.
+        let c = EmbedCache::with_shards(3, 1);
+        for v in 1..=3u128 {
+            c.insert(key(v), embed(v as f32));
+        }
+        // Touch 1 so 2 becomes the oldest, then overflow.
+        assert!(c.get(key(1)).is_some());
+        c.insert(key(4), embed(4.0));
+        assert!(c.get(key(2)).is_none(), "LRU victim must be the untouched 2");
+        for v in [1u128, 3, 4] {
+            assert!(c.get(key(v)).is_some(), "entry {v} wrongly evicted");
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.stats().evictions, 1);
+        // Eviction follows recency, not insertion: the verification gets
+        // above touched 1, 3, 4 in that order, so 1 is now the oldest.
+        c.insert(key(5), embed(5.0));
+        assert!(c.get(key(1)).is_none(), "second victim follows touch order");
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_growth() {
+        let c = EmbedCache::with_shards(2, 1);
+        c.insert(key(1), embed(1.0));
+        c.insert(key(2), embed(2.0));
+        // Refreshing 1 must not evict and must update the stored value.
+        c.insert(key(1), embed(10.0));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 0);
+        assert_eq!(c.get(key(1)).unwrap().hg, vec![10.0; 4]);
+        // 2 is now the LRU victim despite being inserted after 1.
+        c.insert(key(3), embed(3.0));
+        assert!(c.get(key(2)).is_none());
+    }
+
+    #[test]
+    fn tiny_capacities_construct_and_evict() {
+        // new() clamps the shard count, so capacities below the default
+        // shard count are valid.
+        let c = EmbedCache::new(2);
+        for v in 1..=5u128 {
+            c.insert(key(v), embed(v as f32));
+        }
+        assert!(c.len() <= 2);
+        assert!(c.stats().evictions >= 3);
+    }
+
+    #[test]
+    fn hit_miss_accounting_is_exact() {
+        let c = EmbedCache::with_shards(4, 1);
+        assert!(c.get(key(9)).is_none());
+        c.insert(key(9), embed(9.0));
+        assert!(c.get(key(9)).is_some());
+        assert!(c.get(key(9)).is_some());
+        assert!(c.get(key(8)).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 2, 1));
+    }
+
+    #[test]
+    fn capacity_property_random_ops() {
+        // Property: len() never exceeds capacity, the most recently
+        // inserted key is always resident, and hits + misses equals the
+        // number of gets — across shard counts.
+        for shards in [1usize, 4] {
+            let capacity = 16;
+            let c = EmbedCache::with_shards(capacity, shards);
+            let mut rng = Rng::new(41 + shards as u64);
+            let mut gets = 0u64;
+            for step in 0..2000u128 {
+                let k = key(rng.below(64) as u128 * 7 + (step % 3));
+                if rng.below(2) == 0 {
+                    c.insert(k, embed(step as f32));
+                    assert!(
+                        c.get(k).is_some(),
+                        "just-inserted key missing (shards={shards}, step={step})"
+                    );
+                    gets += 1;
+                } else {
+                    let _ = c.get(k);
+                    gets += 1;
+                }
+                assert!(c.len() <= capacity, "len {} > capacity", c.len());
+            }
+            let s = c.stats();
+            assert_eq!(s.hits + s.misses, gets);
+            assert_eq!(s.entries as usize, c.len());
+            assert!(s.entries > 0);
+        }
+    }
+}

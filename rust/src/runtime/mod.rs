@@ -20,13 +20,14 @@
 //! from the native path — so the serving report can surface the paper's
 //! cycle-level numbers (Table 4/5/6, Fig. 11) instead of discarding them.
 
+pub mod embed_cache;
 pub mod native;
 pub mod pjrt;
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use crate::graph::encode::PackedBatch;
+use crate::graph::encode::{EncodedGraph, PackedBatch};
 
 /// The set of engine backends, replacing `&str` dispatch. Parse with
 /// [`std::str::FromStr`]
@@ -125,6 +126,11 @@ pub struct EngineCaps {
     pub reports_exec_timing: bool,
     /// Fills [`QueryTelemetry::macs`] (MAC/nonzero work counts).
     pub reports_macs: bool,
+    /// Fills [`QueryTelemetry::embed_cache`] (graph-embedding cache
+    /// hit/miss activity — DESIGN.md S14).
+    pub reports_embed_cache: bool,
+    /// Implements [`Engine::score_corpus`] (one-vs-many top-k search).
+    pub supports_corpus: bool,
 }
 
 impl EngineCaps {
@@ -148,6 +154,8 @@ impl EngineCaps {
             reports_cycles: false,
             reports_exec_timing: false,
             reports_macs: false,
+            reports_embed_cache: false,
+            supports_corpus: false,
         }
     }
 
@@ -166,6 +174,18 @@ impl EngineCaps {
     /// Mark the engine as filling [`QueryTelemetry::macs`].
     pub fn with_mac_counts(mut self) -> Self {
         self.reports_macs = true;
+        self
+    }
+
+    /// Mark the engine as filling [`QueryTelemetry::embed_cache`].
+    pub fn with_embed_cache(mut self) -> Self {
+        self.reports_embed_cache = true;
+        self
+    }
+
+    /// Mark the engine as implementing [`Engine::score_corpus`].
+    pub fn with_corpus_scoring(mut self) -> Self {
+        self.supports_corpus = true;
         self
     }
 
@@ -234,6 +254,29 @@ pub struct MacCounts {
     pub agg_elements: u64,
 }
 
+/// Graph-embedding cache activity for one scored query
+/// (`reports_embed_cache`). A pair query touches two graphs; a corpus
+/// query touches `1 + corpus.len()`. `misses` is exactly the number of
+/// GCN+attention forwards the query executed — the acceptance metric
+/// for the one-vs-many path (a corpus query must run `unique_graphs`
+/// forwards, never `1 + K`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EmbedCacheTelemetry {
+    /// Graph embeddings reused from the cache.
+    pub hits: u64,
+    /// Graph embeddings computed (GCN + attention forwards executed).
+    pub misses: u64,
+    /// Cache entry count right after this query.
+    pub entries: u64,
+}
+
+impl EmbedCacheTelemetry {
+    /// GCN forwards this query executed (alias for `misses`).
+    pub fn gcn_forwards(&self) -> u64 {
+        self.misses
+    }
+}
+
 /// Per-slot telemetry attached to a [`BatchOutput`]. Which fields are
 /// filled is declared by the engine's [`EngineCaps`] flags; padding slots
 /// carry an empty default.
@@ -246,8 +289,12 @@ pub struct QueryTelemetry {
     pub exec: Option<ExecTiming>,
     /// CPU time spent scoring this slot, µs (native engine).
     pub cpu_us: Option<f64>,
-    /// MAC/nonzero work counts for this slot (`reports_macs`).
+    /// MAC/nonzero work counts for this slot (`reports_macs`). With an
+    /// embedding cache active this counts the work *executed*: cached
+    /// graphs contribute zero, so the rows show the saving.
     pub macs: Option<MacCounts>,
+    /// Embedding-cache hit/miss activity (`reports_embed_cache`).
+    pub embed_cache: Option<EmbedCacheTelemetry>,
 }
 
 /// What one [`Engine::score_batch`] call returns: one similarity score
@@ -267,6 +314,19 @@ impl BatchOutput {
         let telemetry = vec![QueryTelemetry::default(); scores.len()];
         BatchOutput { scores, telemetry }
     }
+}
+
+/// What one [`Engine::score_corpus`] call returns: one similarity per
+/// corpus entry (same order as the input slice) plus one telemetry
+/// record covering the whole one-vs-many query. Ranking/top-k selection
+/// is the caller's job — the engine does not know corpus ids.
+#[derive(Debug, Clone)]
+pub struct CorpusOutput {
+    /// `scores[i]` = similarity(query, corpus[i]); `len == corpus.len()`.
+    pub scores: Vec<f32>,
+    /// Aggregate telemetry for the query (cache hits across the fan-out,
+    /// executed MAC counts, cycles).
+    pub telemetry: QueryTelemetry,
 }
 
 /// Typed errors at the engine trait boundary (replaces `anyhow` and the
@@ -320,6 +380,39 @@ impl std::fmt::Display for EngineError {
 
 impl std::error::Error for EngineError {}
 
+/// Validate that `query` and every corpus entry were encoded for the
+/// engine's artifact shapes `(n_max, num_labels)`. Engines call this at
+/// the top of [`Engine::score_corpus`]: the pipeline's admission
+/// rejects mismatched corpora before they get here, but direct API
+/// users (examples, tests) deserve the same protection as a typed
+/// error instead of an index panic or silently wrong scores from
+/// mis-strided tensor reads. O(1) per graph, no allocation on success.
+pub(crate) fn check_corpus_shapes(
+    n_max: usize,
+    num_labels: usize,
+    query: &EncodedGraph,
+    corpus: &[EncodedGraph],
+) -> Result<(), EngineError> {
+    let shape = |g: &EncodedGraph| {
+        let n = g.mask.len();
+        (n, if n == 0 { 0 } else { g.h0.len() / n })
+    };
+    let mismatch = |what: String, got: (usize, usize)| EngineError::InvalidInput {
+        detail: format!(
+            "{what} encoded for (n_max, labels) = {got:?}, engine expects ({n_max}, {num_labels})"
+        ),
+    };
+    if shape(query) != (n_max, num_labels) {
+        return Err(mismatch("query graph".into(), shape(query)));
+    }
+    for (i, g) in corpus.iter().enumerate() {
+        if shape(g) != (n_max, num_labels) {
+            return Err(mismatch(format!("corpus[{i}]"), shape(g)));
+        }
+    }
+    Ok(())
+}
+
 /// Thread-safe constructor for engines; workers call it in-thread.
 pub type EngineFactory =
     Arc<dyn Fn() -> Result<Box<dyn Engine>, EngineError> + Send + Sync>;
@@ -338,6 +431,25 @@ pub trait Engine {
     /// ladder; the scores vector covers every slot (padding included —
     /// the caller truncates) and telemetry is per-slot.
     fn score_batch(&mut self, batch: &PackedBatch) -> Result<BatchOutput, EngineError>;
+
+    /// One-vs-many scoring: embed `query` once (through the engine's
+    /// embedding cache where it has one) and fan the NTN+FCN tail out
+    /// over `corpus`, returning one score per entry. Scores must be
+    /// bit-identical to scoring each `(query, corpus[i])` pair through
+    /// [`Engine::score_batch`]. Engines without an embedding cache
+    /// (`caps().supports_corpus == false`) keep this default, which
+    /// reports a typed error instead of silently falling back to K full
+    /// pairwise forwards.
+    fn score_corpus(
+        &mut self,
+        query: &EncodedGraph,
+        corpus: &[EncodedGraph],
+    ) -> Result<CorpusOutput, EngineError> {
+        let _ = (query, corpus);
+        Err(EngineError::Unavailable {
+            reason: format!("{} does not support corpus scoring", self.caps().name),
+        })
+    }
 }
 
 /// Typed engine construction (replaces string dispatch): binds an
@@ -431,8 +543,36 @@ mod tests {
     fn caps_flags_default_off() {
         let caps = EngineCaps::new("t", vec![1], 8, 4);
         assert!(!caps.reports_cycles && !caps.reports_exec_timing && !caps.reports_macs);
-        let caps = caps.with_cycle_reports().with_exec_timing().with_mac_counts();
+        assert!(!caps.reports_embed_cache && !caps.supports_corpus);
+        let caps = caps
+            .with_cycle_reports()
+            .with_exec_timing()
+            .with_mac_counts()
+            .with_embed_cache()
+            .with_corpus_scoring();
         assert!(caps.reports_cycles && caps.reports_exec_timing && caps.reports_macs);
+        assert!(caps.reports_embed_cache && caps.supports_corpus);
+    }
+
+    #[test]
+    fn score_corpus_default_is_a_typed_error() {
+        // An engine that never opted in (no embedding cache) must answer
+        // corpus queries with a typed error, not K silent full forwards.
+        struct Bare(EngineCaps);
+        impl Engine for Bare {
+            fn caps(&self) -> &EngineCaps {
+                &self.0
+            }
+            fn score_batch(&mut self, b: &PackedBatch) -> Result<BatchOutput, EngineError> {
+                Ok(BatchOutput::untimed(vec![0.0; b.batch]))
+            }
+        }
+        let mut e = Bare(EngineCaps::new("bare", vec![1], 8, 4));
+        assert!(!e.caps().supports_corpus);
+        let g = crate::graph::Graph::new(2, vec![(0, 1)], vec![0, 0]);
+        let enc = crate::graph::encode::encode(&g, 8, 4).unwrap();
+        let err = e.score_corpus(&enc, std::slice::from_ref(&enc)).unwrap_err();
+        assert!(matches!(err, EngineError::Unavailable { ref reason } if reason.contains("bare")));
     }
 
     #[test]

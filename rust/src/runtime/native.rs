@@ -8,27 +8,42 @@
 //! aggregation, one-hot layer-0 FT, nonzero-skipping FT, real rows only
 //! — DESIGN.md S13); `with_policy(SparsePolicy::Dense)` forces the dense
 //! padded baseline for comparison runs (`EngineKind::NativeDense`).
+//!
+//! All scoring goes through the per-graph embedding cache (DESIGN.md
+//! S14): each graph of a pair or corpus fan-out is fingerprinted and its
+//! GCN+attention embedding reused when seen before — within a batch,
+//! across queries, and across an entire corpus. Only the NTN+FCN tail
+//! runs per pair. Scores are bit-identical to the uncached fused
+//! forward because the split API *is* the fused forward.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::graph::encode::{EncodedGraph, PackedBatch};
 use crate::nn::config::{ArtifactsMeta, ModelConfig, AOT_BATCH_LADDER};
-use crate::nn::simgnn::{simgnn_forward_with, SparsePolicy};
+use crate::nn::simgnn::{embed_graph_with, pair_score, SparsePolicy};
 use crate::nn::weights::Weights;
 
-use super::{BatchOutput, Engine, EngineCaps, EngineError, MacCounts, QueryTelemetry};
+use super::embed_cache::{CachedEmbed, EmbedCache};
+use super::{
+    BatchOutput, CorpusOutput, EmbedCacheTelemetry, Engine, EngineCaps, EngineError, MacCounts,
+    QueryTelemetry,
+};
 
 /// CPU reference engine; any batch size (it just loops over pairs).
-/// Reports per-slot CPU time as [`QueryTelemetry::cpu_us`] and MAC /
-/// nonzero work counts as [`QueryTelemetry::macs`].
+/// Reports per-slot CPU time as [`QueryTelemetry::cpu_us`], MAC /
+/// nonzero work counts as [`QueryTelemetry::macs`] (executed work only —
+/// cache hits contribute zero), and cache activity as
+/// [`QueryTelemetry::embed_cache`].
 pub struct NativeEngine {
     cfg: ModelConfig,
     weights: Weights,
     caps: EngineCaps,
     policy: SparsePolicy,
+    cache: EmbedCache,
 }
 
 impl NativeEngine {
@@ -50,12 +65,15 @@ impl NativeEngine {
 
     fn from_parts(cfg: ModelConfig, weights: Weights, ladder: Vec<usize>) -> Self {
         let caps = EngineCaps::new("native-cpu", ladder, cfg.n_max, cfg.num_labels)
-            .with_mac_counts();
+            .with_mac_counts()
+            .with_embed_cache()
+            .with_corpus_scoring();
         NativeEngine {
             cfg,
             weights,
             caps,
             policy: SparsePolicy::Csr,
+            cache: EmbedCache::new(super::embed_cache::DEFAULT_CAPACITY),
         }
     }
 
@@ -85,9 +103,65 @@ impl NativeEngine {
         self.policy
     }
 
-    /// Score a single encoded pair (no batch packing needed).
+    /// The engine's embedding cache (stats inspection).
+    pub fn embed_cache(&self) -> &EmbedCache {
+        &self.cache
+    }
+
+    /// Score a single encoded pair (no batch packing needed);
+    /// cache-aware like every scoring path of this engine.
     pub fn score_pair(&self, g1: &EncodedGraph, g2: &EncodedGraph) -> f32 {
-        simgnn_forward_with(&self.cfg, &self.weights, g1, g2, self.policy).score
+        let (c1, _) = self.embed_cached(g1);
+        let (c2, _) = self.embed_cached(g2);
+        pair_score(&self.cfg, &self.weights, &c1.hg, &c2.hg).1
+    }
+
+    /// Embed one graph through the cache: a hit reuses the stored
+    /// post-attention embedding; a miss runs GCN + attention under this
+    /// engine's policy and caches the result. Returns the embedding and
+    /// whether it was a hit.
+    fn embed_cached(&self, g: &EncodedGraph) -> (Arc<CachedEmbed>, bool) {
+        match self.cache.get(g.fingerprint()) {
+            Some(hit) => (hit, true),
+            None => (self.embed_miss(g), false),
+        }
+    }
+
+    /// The miss half of [`NativeEngine::embed_cached`]: run GCN +
+    /// attention and cache the embedding (callers that already probed
+    /// the cache use this directly, so hits and misses are each counted
+    /// exactly once).
+    fn embed_miss(&self, g: &EncodedGraph) -> Arc<CachedEmbed> {
+        let emb = embed_graph_with(&self.cfg, &self.weights, g, self.policy);
+        let t = &emb.trace;
+        let cached = Arc::new(CachedEmbed {
+            hg: emb.hg,
+            macs: MacCounts {
+                macs: t.macs,
+                ft_elements: t.ft_elements.iter().sum(),
+                agg_elements: t.agg_elements,
+            },
+        });
+        self.cache.insert(g.fingerprint(), Arc::clone(&cached));
+        cached
+    }
+
+    /// Fold one embed outcome into a query's executed-work + cache
+    /// telemetry accumulators.
+    fn tally(
+        executed: &mut MacCounts,
+        stats: &mut EmbedCacheTelemetry,
+        c: &CachedEmbed,
+        hit: bool,
+    ) {
+        if hit {
+            stats.hits += 1;
+        } else {
+            stats.misses += 1;
+            executed.macs += c.macs.macs;
+            executed.ft_elements += c.macs.ft_elements;
+            executed.agg_elements += c.macs.agg_elements;
+        }
     }
 }
 
@@ -100,28 +174,119 @@ impl Engine for NativeEngine {
         let mut scores = Vec::with_capacity(batch.batch);
         let mut telemetry = Vec::with_capacity(batch.batch);
         for i in 0..batch.batch {
-            let (g1, g2) = batch.unpack_slot(i).map_err(|e| EngineError::InvalidInput {
+            // Probe by the fingerprints packed alongside the tensors
+            // (k1/k2): a fully-cached slot skips unpack_slot's
+            // O(n_max²) tensor copies entirely — the warm hot path is
+            // a mask sanity scan + probe + NTN/FCN tail. Empty padding
+            // slots ride the cache like any slot — every pad shares one
+            // key — and their well-defined bias-path score is discarded
+            // by the caller.
+            // Same typed corruption error warm or cold (O(n_max), no
+            // copies): cache history must not change error behavior.
+            batch.validate_slot_masks(i).map_err(|e| EngineError::InvalidInput {
                 detail: format!("slot {i}: {e}"),
             })?;
-            // Empty padding slots: mask is all-zero; score is well-defined
-            // (sigmoid of bias path) and discarded by the caller.
             let t0 = Instant::now();
-            let trace = simgnn_forward_with(&self.cfg, &self.weights, &g1, &g2, self.policy);
+            let mut executed = MacCounts::default();
+            let mut cache_stats = EmbedCacheTelemetry::default();
+            let probe1 = self.cache.get(batch.k1[i]);
+            // One key, one probe: a same-graph pair (every padding
+            // slot, self-similarity queries) must not count two global
+            // misses for the single forward it runs.
+            let same = batch.k2[i] == batch.k1[i];
+            let probe2 = if same {
+                probe1.clone()
+            } else {
+                self.cache.get(batch.k2[i])
+            };
+            let (c1, hit1, c2, hit2) = match (probe1, probe2) {
+                (Some(c1), Some(c2)) => (c1, true, c2, true),
+                (p1, p2) => {
+                    // Unpack only the missed side(s): the hit side's
+                    // embedding comes from the cache, its tensors are
+                    // never read (masks were validated above).
+                    let (c1, hit1) = match p1 {
+                        Some(c) => (c, true),
+                        None => {
+                            let g1 = batch.unpack_slot_g1(i).map_err(|e| {
+                                EngineError::InvalidInput {
+                                    detail: format!("slot {i}: {e}"),
+                                }
+                            })?;
+                            (self.embed_miss(&g1), false)
+                        }
+                    };
+                    let (c2, hit2) = match p2 {
+                        Some(c) => (c, true),
+                        // Identical graphs in one slot: embedded once
+                        // just above, reuse it as a hit.
+                        None if same => (Arc::clone(&c1), true),
+                        None => {
+                            let g2 = batch.unpack_slot_g2(i).map_err(|e| {
+                                EngineError::InvalidInput {
+                                    detail: format!("slot {i}: {e}"),
+                                }
+                            })?;
+                            (self.embed_miss(&g2), false)
+                        }
+                    };
+                    (c1, hit1, c2, hit2)
+                }
+            };
+            Self::tally(&mut executed, &mut cache_stats, &c1, hit1);
+            Self::tally(&mut executed, &mut cache_stats, &c2, hit2);
+            let (_, score) = pair_score(&self.cfg, &self.weights, &c1.hg, &c2.hg);
             let cpu_us = t0.elapsed().as_secs_f64() * 1e6;
-            scores.push(trace.score);
-            let (t1, t2) = (&trace.trace1, &trace.trace2);
+            cache_stats.entries = self.cache.len() as u64;
+            scores.push(score);
             telemetry.push(QueryTelemetry {
                 cpu_us: Some(cpu_us),
-                macs: Some(MacCounts {
-                    macs: t1.macs + t2.macs,
-                    ft_elements: t1.ft_elements.iter().sum::<u64>()
-                        + t2.ft_elements.iter().sum::<u64>(),
-                    agg_elements: t1.agg_elements + t2.agg_elements,
-                }),
+                macs: Some(executed),
+                embed_cache: Some(cache_stats),
                 ..QueryTelemetry::default()
             });
         }
         Ok(BatchOutput { scores, telemetry })
+    }
+
+    fn score_corpus(
+        &mut self,
+        query: &EncodedGraph,
+        corpus: &[EncodedGraph],
+    ) -> Result<CorpusOutput, EngineError> {
+        super::check_corpus_shapes(self.cfg.n_max, self.cfg.num_labels, query, corpus)?;
+        if corpus.is_empty() {
+            // Nothing to rank: no embeds, no work, no skewed telemetry
+            // (pipeline admission rejects this; direct API use gets an
+            // empty result).
+            return Ok(CorpusOutput {
+                scores: Vec::new(),
+                telemetry: QueryTelemetry::default(),
+            });
+        }
+        let t0 = Instant::now();
+        let mut executed = MacCounts::default();
+        let mut cache_stats = EmbedCacheTelemetry::default();
+        let (cq, hitq) = self.embed_cached(query);
+        Self::tally(&mut executed, &mut cache_stats, &cq, hitq);
+        let mut scores = Vec::with_capacity(corpus.len());
+        for g in corpus {
+            let (c, hit) = self.embed_cached(g);
+            Self::tally(&mut executed, &mut cache_stats, &c, hit);
+            // Same orientation as the pairwise path: (query, candidate).
+            let (_, score) = pair_score(&self.cfg, &self.weights, &cq.hg, &c.hg);
+            scores.push(score);
+        }
+        cache_stats.entries = self.cache.len() as u64;
+        Ok(CorpusOutput {
+            scores,
+            telemetry: QueryTelemetry {
+                cpu_us: Some(t0.elapsed().as_secs_f64() * 1e6),
+                macs: Some(executed),
+                embed_cache: Some(cache_stats),
+                ..QueryTelemetry::default()
+            },
+        })
     }
 }
 
@@ -241,9 +406,123 @@ mod tests {
         assert!(!caps.reports_cycles);
         assert!(!caps.reports_exec_timing);
         assert!(caps.reports_macs);
+        assert!(caps.reports_embed_cache);
+        assert!(caps.supports_corpus);
         // The dense comparison lane is named apart.
         let dense = tiny().with_policy(SparsePolicy::Dense);
         assert_eq!(dense.caps().name, "native-cpu-dense");
+    }
+
+    #[test]
+    fn cache_dedups_within_batch_and_across_queries() {
+        let mut eng = tiny();
+        let pairs = workload(2, 21);
+        // Batch layout: (a,b), (a,b), (b,a) — five of six embeds repeat.
+        let (a, b) = pairs[0].clone();
+        let repeated = vec![(a.clone(), b.clone()), (a.clone(), b.clone()), (b, a)];
+        let pb = PackedBatch::pack(&repeated, 4).unwrap();
+        let out = eng.score_batch(&pb).unwrap();
+        // Slot 0: cold — two misses, real work.
+        let s0 = out.telemetry[0].embed_cache.unwrap();
+        assert_eq!((s0.hits, s0.misses), (0, 2));
+        assert!(out.telemetry[0].macs.unwrap().macs > 0);
+        // Slots 1 and 2: all hits, zero GCN work executed.
+        for i in [1, 2] {
+            let s = out.telemetry[i].embed_cache.unwrap();
+            assert_eq!((s.hits, s.misses), (2, 0), "slot {i}");
+            assert_eq!(out.telemetry[i].macs.unwrap(), MacCounts::default(), "slot {i}");
+        }
+        // Identical scores for identical pairs, bit for bit.
+        assert_eq!(out.scores[0], out.scores[1]);
+        // Across queries: rescoring the same batch is now all hits and
+        // still returns bit-identical scores.
+        let again = eng.score_batch(&pb).unwrap();
+        assert_eq!(out.scores, again.scores);
+        for t in &again.telemetry {
+            assert_eq!(t.embed_cache.unwrap().misses, 0);
+        }
+        let stats = eng.embed_cache().stats();
+        assert!(stats.hits > 0 && stats.misses > 0);
+        assert_eq!(stats.entries as usize, eng.embed_cache().len());
+    }
+
+    #[test]
+    fn corrupted_mask_errors_warm_or_cold() {
+        // The warm fast path skips unpack but not mask validation:
+        // cache history must not flip a corrupted batch from a typed
+        // error into silently served scores.
+        let mut eng = tiny();
+        let pairs = workload(1, 61);
+        let mut pb = PackedBatch::pack(&pairs, 1).unwrap();
+        eng.score_batch(&pb).unwrap(); // warm the cache
+        pb.m1[1] = 0.0; // interior zero: non-prefix mask
+        assert!(matches!(
+            eng.score_batch(&pb),
+            Err(EngineError::InvalidInput { .. })
+        ));
+    }
+
+    #[test]
+    fn score_corpus_rejects_mismatched_encode_shapes() {
+        // Direct API misuse (no pipeline admission in front): a corpus
+        // encoded for other artifact shapes must come back as a typed
+        // error, not an index panic or silently wrong scores.
+        let mut eng = tiny(); // expects (n_max, labels) = (8, 4)
+        let g = generate(&mut Rng::new(44), Family::ErdosRenyi { n: 5, p_millis: 300 }, 8, 4);
+        let ok = encode(&g, 8, 4).unwrap();
+        let wide = encode(&g, 16, 4).unwrap();
+        let err = eng.score_corpus(&wide, std::slice::from_ref(&ok)).unwrap_err();
+        assert!(
+            matches!(err, EngineError::InvalidInput { ref detail } if detail.contains("query")),
+            "{err}"
+        );
+        let err = eng
+            .score_corpus(&ok, &[ok.clone(), wide.clone()])
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::InvalidInput { ref detail } if detail.contains("corpus[1]")),
+            "{err}"
+        );
+        // Matching shapes still score.
+        assert!(eng.score_corpus(&ok, std::slice::from_ref(&ok)).is_ok());
+    }
+
+    #[test]
+    fn corpus_scoring_matches_pairwise_and_counts_unique_forwards() {
+        let mut eng = tiny();
+        // 6 corpus entries, 4 unique graphs (two duplicated), plus one
+        // distinct query graph -> exactly 5 GCN forwards expected.
+        let uniques: Vec<EncodedGraph> = workload(2, 31)
+            .into_iter()
+            .flat_map(|(a, b)| [a, b])
+            .collect();
+        let corpus = vec![
+            uniques[0].clone(),
+            uniques[1].clone(),
+            uniques[2].clone(),
+            uniques[3].clone(),
+            uniques[0].clone(),
+            uniques[2].clone(),
+        ];
+        let (query, _) = workload(1, 32).pop().unwrap();
+        let out = eng.score_corpus(&query, &corpus).unwrap();
+        assert_eq!(out.scores.len(), 6);
+        let cs = out.telemetry.embed_cache.unwrap();
+        assert_eq!(cs.misses, 5, "one forward per unique graph (query + 4)");
+        assert_eq!(cs.hits, 2, "duplicated corpus entries hit");
+        assert_eq!(cs.entries, 5);
+        // Bit-identical to the pairwise path on a fresh engine.
+        let mut fresh = tiny();
+        let pairs: Vec<_> = corpus.iter().map(|c| (query.clone(), c.clone())).collect();
+        let pb = PackedBatch::pack(&pairs, pairs.len()).unwrap();
+        let pairwise = fresh.score_batch(&pb).unwrap();
+        assert_eq!(out.scores, &pairwise.scores[..6]);
+        // A repeat query is served entirely from the cache.
+        let warm = eng.score_corpus(&query, &corpus).unwrap();
+        assert_eq!(warm.scores, out.scores);
+        let ws = warm.telemetry.embed_cache.unwrap();
+        assert_eq!((ws.hits, ws.misses), (7, 0));
+        assert_eq!(warm.telemetry.macs.unwrap(), MacCounts::default());
     }
 
     #[test]

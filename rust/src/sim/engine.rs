@@ -1,22 +1,35 @@
 //! SimEngine: functional scores (via the rust reference numerics) plus an
 //! accumulated FPGA cycle report. Lets the coordinator and benches drive
 //! the cycle simulator with exactly the workload the serving path sees.
+//!
+//! Serving goes through the graph-embedding cache (DESIGN.md S14): a
+//! cached graph skips its GCN + Att simulation entirely, so the cycle
+//! model charges a fully-cached pair NTN+FCN only — the hardware
+//! analogue of what the cache saves the host. Cold queries compose to
+//! exactly `simulate_query`'s numbers (tested), so cache-off behavior
+//! is unchanged.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::graph::encode::{encode, EncodedGraph, PackedBatch};
+use crate::graph::encode::{encode, EncodedGraph, NonPrefixMask, PackedBatch};
 use crate::graph::Graph;
 use crate::nn::config::{ArtifactsMeta, ModelConfig, AOT_BATCH_LADDER};
-use crate::nn::simgnn::simgnn_forward;
+use crate::nn::simgnn::{attention_pool, gcn_forward, pair_score};
 use crate::nn::weights::Weights;
+use crate::runtime::embed_cache::{CachedEmbed, EmbedCache, DEFAULT_CAPACITY};
 use crate::runtime::{
-    BatchOutput, CycleReport, Engine, EngineCaps, EngineError, QueryTelemetry,
+    BatchOutput, CorpusOutput, CycleReport, EmbedCacheTelemetry, Engine, EngineCaps, EngineError,
+    MacCounts, QueryTelemetry,
 };
 
 use super::config::ArchConfig;
-use super::gcn::{kernel_ms, simulate_query, QueryCycles};
+use super::gcn::{
+    compose_cached_query, embed_profile, kernel_ms, simulate_query, EmbedCycleProfile, GcnCycles,
+    QueryCycles,
+};
 use super::platform::Platform;
 
 /// Aggregate simulation statistics over all queries processed.
@@ -33,19 +46,29 @@ pub struct SimStats {
 }
 
 impl SimStats {
-    fn absorb(&mut self, qc: &QueryCycles) {
+    /// Count one completed query's steady-state contribution.
+    fn note_query(&mut self, interval: u64, latency: u64) {
         self.queries += 1;
-        self.total_interval_cycles += qc.interval;
-        self.total_latency_cycles += qc.latency;
-        for gcn in [&qc.gcn1, &qc.gcn2] {
-            for l in &gcn.layers {
-                self.ft_elements += l.ft.elements;
-                self.ft_bubbles += l.ft.raw_bubbles;
-                self.ft_starve += l.ft.starve_cycles;
-                self.agg_edges += l.agg.edges;
-                self.pad_rows += l.ft.pad_rows;
-            }
+        self.total_interval_cycles += interval;
+        self.total_latency_cycles += latency;
+    }
+
+    /// Absorb one graph's simulated GCN layer statistics (on the cached
+    /// serving path this runs per *embed executed*, i.e. per cache miss).
+    fn absorb_gcn(&mut self, gcn: &GcnCycles) {
+        for l in &gcn.layers {
+            self.ft_elements += l.ft.elements;
+            self.ft_bubbles += l.ft.raw_bubbles;
+            self.ft_starve += l.ft.starve_cycles;
+            self.agg_edges += l.agg.edges;
+            self.pad_rows += l.ft.pad_rows;
         }
+    }
+
+    fn absorb(&mut self, qc: &QueryCycles) {
+        self.note_query(qc.interval, qc.latency);
+        self.absorb_gcn(&qc.gcn1);
+        self.absorb_gcn(&qc.gcn2);
     }
 
     /// Mean steady-state kernel time per query, ms.
@@ -72,6 +95,7 @@ pub struct SimEngine {
     arch: ArchConfig,
     plat: Platform,
     caps: EngineCaps,
+    cache: EmbedCache,
     /// Accumulated cycle statistics over every query scored so far.
     pub stats: SimStats,
 }
@@ -101,13 +125,16 @@ impl SimEngine {
         ladder: Vec<usize>,
     ) -> Self {
         let caps = EngineCaps::new("spa-gcn-sim", ladder, cfg.n_max, cfg.num_labels)
-            .with_cycle_reports();
+            .with_cycle_reports()
+            .with_embed_cache()
+            .with_corpus_scoring();
         SimEngine {
             cfg,
             weights,
             arch,
             plat,
             caps,
+            cache: EmbedCache::new(DEFAULT_CAPACITY),
             stats: SimStats::default(),
         }
     }
@@ -137,7 +164,9 @@ impl SimEngine {
 
     /// Score + simulate with pre-encoded graphs (stats absorbed). The
     /// forward pass is computed ONCE and its traces drive the cycle sim
-    /// (perf pass: this path previously ran the GCN forward twice).
+    /// (perf pass: this path previously ran the GCN forward twice). This
+    /// is the report-harness path; it deliberately bypasses the
+    /// embedding cache so ablation tables always measure cold work.
     pub fn run_encoded(
         &mut self,
         g1: &Graph,
@@ -145,16 +174,63 @@ impl SimEngine {
         g2: &Graph,
         e2: &EncodedGraph,
     ) -> Result<(f32, QueryCycles)> {
-        let trace = simgnn_forward(&self.cfg, &self.weights, e1, e2);
+        let t1 = gcn_forward(&self.cfg, &self.weights, e1);
+        let t2 = gcn_forward(&self.cfg, &self.weights, e2);
+        let hg1 = attention_pool(&self.cfg, &self.weights, &t1.embeddings, &e1.mask);
+        let hg2 = attention_pool(&self.cfg, &self.weights, &t2.embeddings, &e2.mask);
+        let (_, score) = pair_score(&self.cfg, &self.weights, &hg1, &hg2);
         let qc = simulate_query(
             &self.cfg,
             &self.arch,
             &self.plat,
-            (g1, e1, &trace.trace1),
-            (g2, e2, &trace.trace2),
+            (g1, e1, &t1),
+            (g2, e2, &t2),
         );
         self.stats.absorb(&qc);
-        Ok((trace.score, qc))
+        Ok((score, qc))
+    }
+
+    /// The engine's embedding cache (stats inspection).
+    pub fn embed_cache(&self) -> &EmbedCache {
+        &self.cache
+    }
+
+    /// Embed one graph through the cache. A hit returns the stored
+    /// embedding with the zero cycle profile (the hardware skips the
+    /// GCN + Att stage entirely); a miss runs the reference forward,
+    /// simulates its embed-stage cycles, absorbs the layer statistics,
+    /// and caches the embedding.
+    fn embed_cached(
+        &mut self,
+        e: &EncodedGraph,
+    ) -> std::result::Result<(Arc<CachedEmbed>, bool, EmbedCycleProfile), NonPrefixMask> {
+        let key = e.fingerprint();
+        if let Some(hit) = self.cache.get(key) {
+            return Ok((hit, true, EmbedCycleProfile::default()));
+        }
+        let trace = gcn_forward(&self.cfg, &self.weights, e);
+        let hg = attention_pool(&self.cfg, &self.weights, &trace.embeddings, &e.mask);
+        let profile = if e.num_nodes == 0 {
+            // Empty graph: charged zero, warm or cold (simulate_query
+            // would bill only degenerate activation-latency constants
+            // here; see the score_batch doc for the stated exception).
+            EmbedCycleProfile::default()
+        } else {
+            let g = e.decode()?;
+            let (gcn, profile) = embed_profile(&self.cfg, &self.arch, &self.plat, &g, e, &trace);
+            self.stats.absorb_gcn(&gcn);
+            profile
+        };
+        let cached = Arc::new(CachedEmbed {
+            hg,
+            macs: MacCounts {
+                macs: trace.macs,
+                ft_elements: trace.ft_elements.iter().sum(),
+                agg_elements: trace.agg_elements,
+            },
+        });
+        self.cache.insert(key, Arc::clone(&cached));
+        Ok((cached, false, profile))
     }
 }
 
@@ -163,49 +239,122 @@ impl Engine for SimEngine {
         &self.caps
     }
 
-    /// Functional scoring of a packed batch WITH cycle simulation: each
-    /// real slot's graph structure is recovered from its padded tensors
-    /// (`PackedBatch::unpack_slot` + `EncodedGraph::decode`), the cycle
-    /// simulator runs on it, its stats are absorbed into [`SimEngine::stats`]
-    /// and its interval/latency cycles ride back as per-slot telemetry.
+    /// Functional scoring of a packed batch WITH cycle simulation, both
+    /// cache-aware: each slot's graphs go through the embedding cache, a
+    /// miss is simulated from its recovered structure
+    /// (`PackedBatch::unpack_slot` + `EncodedGraph::decode`) and
+    /// absorbed into [`SimEngine::stats`], a hit contributes zero embed
+    /// cycles — so a fully-cached pair is charged NTN+FCN only. Cold
+    /// slots report exactly `simulate_query`'s numbers, with one
+    /// deliberate exception: a zero-node graph's embed stage is charged
+    /// zero (`simulate_query` would bill its degenerate activation
+    /// constants), so an empty side costs the same warm or cold.
     /// Padding slots score the harmless bias-path value and carry no
     /// cycle report.
+    /// (Unlike `NativeEngine`, this engine unpacks every slot even on
+    /// cache hits: it is the cycle *model*, not the measured path, and
+    /// it needs the recovered node counts for padding detection.)
     fn score_batch(&mut self, batch: &PackedBatch) -> std::result::Result<BatchOutput, EngineError> {
         let mut scores = Vec::with_capacity(batch.batch);
         let mut telemetry = Vec::with_capacity(batch.batch);
-        let invalid = |i: usize, e: crate::graph::encode::NonPrefixMask| {
-            EngineError::InvalidInput {
-                detail: format!("slot {i}: {e}"),
-            }
+        let invalid = |i: usize, e: NonPrefixMask| EngineError::InvalidInput {
+            detail: format!("slot {i}: {e}"),
         };
         for i in 0..batch.batch {
             let (e1, e2) = batch.unpack_slot(i).map_err(|e| invalid(i, e))?;
+            let (c1, hit1, p1) = self.embed_cached(&e1).map_err(|e| invalid(i, e))?;
+            let (c2, hit2, p2) = self.embed_cached(&e2).map_err(|e| invalid(i, e))?;
+            let (_, score) = pair_score(&self.cfg, &self.weights, &c1.hg, &c2.hg);
+            scores.push(score);
+            let cache_stats = EmbedCacheTelemetry {
+                hits: hit1 as u64 + hit2 as u64,
+                misses: (!hit1) as u64 + (!hit2) as u64,
+                entries: self.cache.len() as u64,
+            };
             if e1.num_nodes == 0 && e2.num_nodes == 0 {
                 // Zero-padding slot: no real query to simulate.
-                scores.push(simgnn_forward(&self.cfg, &self.weights, &e1, &e2).score);
-                telemetry.push(QueryTelemetry::default());
+                telemetry.push(QueryTelemetry {
+                    embed_cache: Some(cache_stats),
+                    ..QueryTelemetry::default()
+                });
                 continue;
             }
-            let (g1, g2) = (
-                e1.decode().map_err(|e| invalid(i, e))?,
-                e2.decode().map_err(|e| invalid(i, e))?,
-            );
-            let (score, qc) =
-                self.run_encoded(&g1, &e1, &g2, &e2)
-                    .map_err(|err| EngineError::Backend {
-                        engine: self.caps.name.clone(),
-                        detail: format!("{err:#}"),
-                    })?;
-            scores.push(score);
+            let (interval, latency) =
+                compose_cached_query(&self.cfg, &self.arch, &self.plat, &p1, &p2);
+            self.stats.note_query(interval, latency);
             telemetry.push(QueryTelemetry {
-                cycles: Some(CycleReport {
-                    interval: qc.interval,
-                    latency: qc.latency,
-                }),
+                cycles: Some(CycleReport { interval, latency }),
+                embed_cache: Some(cache_stats),
                 ..QueryTelemetry::default()
             });
         }
         Ok(BatchOutput { scores, telemetry })
+    }
+
+    /// One-vs-many with cycle accounting: the query graph embeds once
+    /// (cache-aware), every candidate that hits the cache is charged
+    /// NTN+FCN only, and the reported cycles are the totals across the
+    /// whole fan-out (the steady-state cost of answering this corpus
+    /// query on the modeled accelerator).
+    fn score_corpus(
+        &mut self,
+        query: &EncodedGraph,
+        corpus: &[EncodedGraph],
+    ) -> std::result::Result<CorpusOutput, EngineError> {
+        crate::runtime::check_corpus_shapes(self.cfg.n_max, self.cfg.num_labels, query, corpus)?;
+        if corpus.is_empty() {
+            // Nothing to rank: embedding the query anyway would record
+            // GCN work into SimStats with zero composed cycles
+            // (pipeline admission rejects this; direct API use gets an
+            // empty result, no stats skew).
+            return Ok(CorpusOutput {
+                scores: Vec::new(),
+                telemetry: QueryTelemetry::default(),
+            });
+        }
+        let invalid = |what: &str, e: NonPrefixMask| EngineError::InvalidInput {
+            detail: format!("{what}: {e}"),
+        };
+        let mut cache_stats = EmbedCacheTelemetry::default();
+        let mut tally = |hit: bool| {
+            if hit {
+                cache_stats.hits += 1;
+            } else {
+                cache_stats.misses += 1;
+            }
+        };
+        let (cq, hitq, pq) = self.embed_cached(query).map_err(|e| invalid("query", e))?;
+        tally(hitq);
+        // The query's embed cost is charged once, on the first candidate.
+        let mut query_profile = pq;
+        let (mut total_interval, mut total_latency) = (0u64, 0u64);
+        let mut scores = Vec::with_capacity(corpus.len());
+        for (i, g) in corpus.iter().enumerate() {
+            let (c, hit, p) = self
+                .embed_cached(g)
+                .map_err(|e| invalid(&format!("corpus[{i}]"), e))?;
+            tally(hit);
+            let (_, score) = pair_score(&self.cfg, &self.weights, &cq.hg, &c.hg);
+            scores.push(score);
+            let (interval, latency) =
+                compose_cached_query(&self.cfg, &self.arch, &self.plat, &query_profile, &p);
+            total_interval += interval;
+            total_latency += latency;
+            query_profile = EmbedCycleProfile::default();
+        }
+        cache_stats.entries = self.cache.len() as u64;
+        self.stats.note_query(total_interval, total_latency);
+        Ok(CorpusOutput {
+            scores,
+            telemetry: QueryTelemetry {
+                cycles: Some(CycleReport {
+                    interval: total_interval,
+                    latency: total_latency,
+                }),
+                embed_cache: Some(cache_stats),
+                ..QueryTelemetry::default()
+            },
+        })
     }
 }
 
@@ -344,12 +493,84 @@ mod tests {
                     "{}: slot {i} mac telemetry vs caps",
                     caps.name
                 );
+                assert_eq!(
+                    t.embed_cache.is_some(),
+                    caps.reports_embed_cache,
+                    "{}: slot {i} embed-cache telemetry vs caps",
+                    caps.name
+                );
             }
         }
     }
 
     #[test]
+    fn cache_hits_are_charged_ntn_fcn_only() {
+        // First pass: cold cache, full GCN+Att+tail cycles. Second pass
+        // over the same batch: every graph hits, so the cycle model must
+        // charge exactly the NTN+FCN tail per real slot — the hardware
+        // saving the embedding cache buys (DESIGN.md S14).
+        use crate::sim::gcn::pair_tail_cycles;
+        let mut eng = tiny_engine();
+        let (_, pb) = packed_workload(&eng);
+        let cold = eng.score_batch(&pb).unwrap();
+        let warm = eng.score_batch(&pb).unwrap();
+        assert_eq!(cold.scores, warm.scores, "caching must not change scores");
+        let tail = pair_tail_cycles(eng.config(), eng.arch());
+        for i in 0..3 {
+            let c = cold.telemetry[i].cycles.unwrap();
+            let w = warm.telemetry[i].cycles.unwrap();
+            assert_eq!(w.interval, tail, "slot {i} warm interval");
+            assert_eq!(w.latency, tail, "slot {i} warm latency");
+            // Interval is a max over units, so it can only shrink or
+            // stay; latency always pays the embed fill, so it strictly
+            // shrinks once the embeds are cached.
+            assert!(c.interval >= w.interval, "slot {i}: cold {c:?} < warm {w:?}");
+            assert!(c.latency > w.latency, "slot {i}: cold {c:?} !> warm {w:?}");
+            let cs = cold.telemetry[i].embed_cache.unwrap();
+            let ws = warm.telemetry[i].embed_cache.unwrap();
+            assert_eq!((cs.hits, cs.misses), (0, 2), "slot {i} cold");
+            assert_eq!((ws.hits, ws.misses), (2, 0), "slot {i} warm");
+        }
+    }
+
+    #[test]
+    fn corpus_scoring_matches_pairwise_and_skips_cached_embeds() {
+        let mut eng = tiny_engine();
+        let (pairs, _) = packed_workload(&eng);
+        // Corpus = the six workload graphs, with one duplicate appended.
+        let mut corpus: Vec<EncodedGraph> = pairs
+            .iter()
+            .flat_map(|(a, b)| [a.clone(), b.clone()])
+            .collect();
+        corpus.push(corpus[0].clone());
+        let mut rng = Rng::new(86);
+        let q = generate(&mut rng, Family::ErdosRenyi { n: 6, p_millis: 300 }, 8, 4);
+        let eq = encode(&q, 8, 4).unwrap();
+        let out = eng.score_corpus(&eq, &corpus).unwrap();
+        assert_eq!(out.scores.len(), 7);
+        let cs = out.telemetry.embed_cache.unwrap();
+        assert_eq!(cs.misses, 7, "query + six unique corpus graphs");
+        assert_eq!(cs.hits, 1, "the duplicated entry");
+        assert!(out.telemetry.cycles.unwrap().interval > 0);
+        // Scores match the pairwise batch path bit for bit.
+        let pairs: Vec<_> = corpus.iter().map(|c| (eq.clone(), c.clone())).collect();
+        let pb = PackedBatch::pack(&pairs, pairs.len()).unwrap();
+        let mut fresh = tiny_engine();
+        let pairwise = fresh.score_batch(&pb).unwrap();
+        assert_eq!(out.scores, &pairwise.scores[..7]);
+        // Warm repeat: all hits, and the total charge collapses to
+        // corpus.len() NTN+FCN tails.
+        use crate::sim::gcn::pair_tail_cycles;
+        let warm = eng.score_corpus(&eq, &corpus).unwrap();
+        assert_eq!(warm.scores, out.scores);
+        let wc = warm.telemetry.cycles.unwrap();
+        assert_eq!(wc.interval, 7 * pair_tail_cycles(eng.config(), eng.arch()));
+        assert_eq!(warm.telemetry.embed_cache.unwrap().misses, 0);
+    }
+
+    #[test]
     fn sim_scores_match_native_reference() {
+        use crate::nn::simgnn::simgnn_score;
         let mut eng = tiny_engine();
         let mut rng = Rng::new(83);
         let f = Family::ErdosRenyi { n: 5, p_millis: 300 };
@@ -358,7 +579,7 @@ mod tests {
         let e1 = encode(&g1, 8, 4).unwrap();
         let e2 = encode(&g2, 8, 4).unwrap();
         let (score, _) = eng.run_query(&g1, &g2).unwrap();
-        let direct = simgnn_forward(eng.config(), &eng.weights, &e1, &e2).score;
+        let direct = simgnn_score(eng.config(), &eng.weights, &e1, &e2);
         assert_eq!(score, direct);
         assert_eq!(eng.stats.queries, 1, "forward+sim must run exactly once");
     }

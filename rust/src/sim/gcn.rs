@@ -262,6 +262,88 @@ pub fn kernel_ms(cycles_interval: u64, plat: &Platform, variant: ArchVariant) ->
     cycles_interval as f64 / (plat.achieved_freq_mhz(variant) * 1e3)
 }
 
+/// Per-graph share of one query's cycle cost — everything a graph-level
+/// embedding-cache hit skips (DESIGN.md S14): the GCN stage, the Att
+/// pass, and this graph's input streaming bytes. The zero profile
+/// (`default()`) IS the cache hit: composing two of them charges the
+/// query NTN+FCN only.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EmbedCycleProfile {
+    /// Steady-state GCN interval for this graph.
+    pub gcn_interval: u64,
+    /// GCN fill latency for this graph.
+    pub gcn_latency: u64,
+    /// This graph's Att pass.
+    pub att: u64,
+    /// Input-stream bytes (edges + pruned features) this graph adds.
+    pub input_bytes: u64,
+}
+
+/// Simulate the embed stage (GCN + Att + input bytes) of one graph and
+/// return both the full [`GcnCycles`] (for stats absorption) and the
+/// compact [`EmbedCycleProfile`] used to compose cache-aware queries.
+pub fn embed_profile(
+    cfg: &ModelConfig,
+    arch: &ArchConfig,
+    plat: &Platform,
+    graph: &Graph,
+    enc: &EncodedGraph,
+    trace: &GcnTrace,
+) -> (GcnCycles, EmbedCycleProfile) {
+    let gcn = simulate_gcn(cfg, arch, plat, graph, enc, trace);
+    let profile = EmbedCycleProfile {
+        gcn_interval: gcn.interval,
+        gcn_latency: gcn.latency,
+        att: att_cycles(cfg, arch, enc.num_nodes),
+        // Mirrors `simulate_query`'s byte accounting: edge stream +
+        // pruned one-hot features at 8 B/entry each.
+        input_bytes: ((graph.num_edges() * 2 + graph.num_nodes()) * 8
+            + graph.num_nodes() * 8) as u64,
+    };
+    (gcn, profile)
+}
+
+/// The per-pair tail a cache hit still pays: NTN + FCN cycles (node-count
+/// independent).
+pub fn pair_tail_cycles(cfg: &ModelConfig, arch: &ArchConfig) -> u64 {
+    let s = stage_cycles(cfg, arch, 0, 0);
+    s.ntn + s.fcn
+}
+
+/// Compose two per-graph embed profiles + the NTN/FCN tail into one
+/// query's (interval, latency) — the cache-aware counterpart of
+/// [`simulate_query`]. With both profiles live (cache misses) this
+/// reproduces `simulate_query`'s numbers exactly; a cached graph passes
+/// the zero profile and contributes nothing, so a fully-cached query is
+/// charged NTN+FCN only.
+pub fn compose_cached_query(
+    cfg: &ModelConfig,
+    arch: &ArchConfig,
+    plat: &Platform,
+    p1: &EmbedCycleProfile,
+    p2: &EmbedCycleProfile,
+) -> (u64, u64) {
+    let tail = pair_tail_cycles(cfg, arch);
+    let bytes = (p1.input_bytes + p2.input_bytes) as f64;
+    let input_stream = if bytes == 0.0 {
+        0
+    } else {
+        let freq = plat.achieved_freq_mhz(arch.variant);
+        let bpc = plat.stream_bytes_per_cycle(freq, 4);
+        (bytes / bpc).ceil() as u64 + 64
+    };
+    let gcn_total = p1.gcn_interval + p2.gcn_interval;
+    let att_total = p1.att + p2.att;
+    if arch.dataflow() {
+        let interval = gcn_total.max(att_total).max(tail).max(input_stream);
+        let latency = p1.gcn_latency + p2.gcn_latency.max(p1.att) + p2.att + tail;
+        (interval, latency)
+    } else {
+        let total = gcn_total + att_total + tail + input_stream;
+        (total, total)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -410,6 +492,49 @@ mod tests {
         );
         assert_eq!(qc_mixed.stages.att2, qc_big.stages.att2);
         assert!(qc_mixed.stages.att1 < qc_big.stages.att1);
+    }
+
+    #[test]
+    fn cached_composition_matches_simulate_query_when_cold() {
+        // Both sides live (cache miss): the composed numbers must equal
+        // simulate_query's exactly — the cached path is not a second,
+        // drifting cycle model.
+        let (cfg, w, g_big, e_big, t_big) = setup();
+        let mut rng = Rng::new(74);
+        let g_small = generate(
+            &mut rng,
+            crate::graph::generate::Family::ErdosRenyi { n: 6, p_millis: 300 },
+            32,
+            29,
+        );
+        let e_small = encode(&g_small, cfg.n_max, cfg.num_labels).unwrap();
+        let t_small = gcn_forward(&cfg, &w, &e_small);
+        for arch in [ArchConfig::spa_gcn(), ArchConfig::baseline()] {
+            let qc = simulate_query(
+                &cfg,
+                &arch,
+                &U280,
+                (&g_small, &e_small, &t_small),
+                (&g_big, &e_big, &t_big),
+            );
+            let (_, p1) = embed_profile(&cfg, &arch, &U280, &g_small, &e_small, &t_small);
+            let (_, p2) = embed_profile(&cfg, &arch, &U280, &g_big, &e_big, &t_big);
+            let (interval, latency) = compose_cached_query(&cfg, &arch, &U280, &p1, &p2);
+            assert_eq!(interval, qc.interval, "variant {:?}", arch.variant);
+            assert_eq!(latency, qc.latency, "variant {:?}", arch.variant);
+        }
+    }
+
+    #[test]
+    fn fully_cached_query_is_charged_ntn_fcn_only() {
+        let (cfg, _w, _g, _e, _t) = setup();
+        let arch = ArchConfig::spa_gcn();
+        let zero = EmbedCycleProfile::default();
+        let (interval, latency) = compose_cached_query(&cfg, &arch, &U280, &zero, &zero);
+        let tail = pair_tail_cycles(&cfg, &arch);
+        assert_eq!(interval, tail);
+        assert_eq!(latency, tail);
+        assert!(tail > 0);
     }
 
     #[test]

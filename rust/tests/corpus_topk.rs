@@ -1,0 +1,180 @@
+//! One-vs-many corpus search through the fingerprinted embedding cache
+//! (DESIGN.md S14), artifact-free: in-memory engines with deterministic
+//! pseudo-random weights.
+//!
+//! The acceptance bar this file pins:
+//!  * a top-k corpus query over K candidates performs exactly
+//!    `unique_graphs` GCN forwards (asserted via the embed-cache / MAC
+//!    telemetry), never `1 + K`;
+//!  * corpus scores are bit-identical to the pairwise path, across the
+//!    batch ladder and with warm or cold caches;
+//!  * `QueryPayload::TopK` rides the full staged pipeline end to end.
+
+use std::sync::Arc;
+
+use spa_gcn::coordinator::corpus::Corpus;
+use spa_gcn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use spa_gcn::coordinator::query::Query;
+use spa_gcn::graph::dataset::GraphDb;
+use spa_gcn::graph::encode::{encode, PackedBatch};
+use spa_gcn::graph::generate::{generate, Family};
+use spa_gcn::graph::Graph;
+use spa_gcn::nn::config::ModelConfig;
+use spa_gcn::nn::weights::Weights;
+use spa_gcn::runtime::native::NativeEngine;
+use spa_gcn::runtime::{Engine, EngineFactory, MacCounts};
+use spa_gcn::util::rng::Rng;
+
+fn engine() -> NativeEngine {
+    let cfg = ModelConfig::default();
+    let w = Weights::synthetic(&cfg, 2024);
+    NativeEngine::new(cfg, w)
+}
+
+/// A corpus of `unique` distinct AIDS-like graphs with `dups` extra
+/// entries duplicating the first graphs (distinct ids, same content).
+fn corpus_with_dups(seed: u64, unique: usize, dups: usize) -> Arc<Corpus> {
+    let cfg = ModelConfig::default();
+    let mut rng = Rng::new(seed);
+    let mut entries: Vec<(u64, Graph)> = (0..unique)
+        .map(|i| (i as u64, generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels)))
+        .collect();
+    for d in 0..dups {
+        entries.push(((unique + d) as u64, entries[d % unique].1.clone()));
+    }
+    Arc::new(Corpus::build("test", &entries, cfg.n_max, cfg.num_labels).unwrap())
+}
+
+#[test]
+fn topk_runs_exactly_unique_graphs_gcn_forwards() {
+    let mut eng = engine();
+    let corpus = corpus_with_dups(7, 20, 12); // 32 candidates, 20 unique
+    assert_eq!(corpus.len(), 32);
+    assert_eq!(corpus.unique_graphs(), 20);
+    let cfg = ModelConfig::default();
+    let mut rng = Rng::new(8);
+    let query = encode(
+        &generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels),
+        cfg.n_max,
+        cfg.num_labels,
+    )
+    .unwrap();
+
+    let out = eng.score_corpus(&query, corpus.graphs()).unwrap();
+    let cache = out.telemetry.embed_cache.expect("native reports cache telemetry");
+    // THE acceptance assertion: unique_graphs forwards (+1 for the
+    // query graph itself), not 1 + K.
+    assert_eq!(
+        cache.gcn_forwards(),
+        corpus.unique_graphs() as u64 + 1,
+        "a corpus query must embed each unique graph exactly once"
+    );
+    assert_eq!(cache.hits, (corpus.len() - corpus.unique_graphs()) as u64);
+    // A second identical query executes zero GCN forwards.
+    let warm = eng.score_corpus(&query, corpus.graphs()).unwrap();
+    let warm_cache = warm.telemetry.embed_cache.unwrap();
+    assert_eq!(warm_cache.gcn_forwards(), 0);
+    assert_eq!(warm.telemetry.macs.unwrap(), MacCounts::default());
+    assert_eq!(warm.scores, out.scores, "caching must not change scores");
+}
+
+#[test]
+fn corpus_scores_bit_identical_to_pairwise_across_ladder() {
+    let mut cached = engine();
+    let corpus = corpus_with_dups(17, 12, 4); // 16 candidates
+    let cfg = ModelConfig::default();
+    let mut rng = Rng::new(18);
+    let qg = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    let query = encode(&qg, cfg.n_max, cfg.num_labels).unwrap();
+    let corpus_scores = cached.score_corpus(&query, corpus.graphs()).unwrap().scores;
+
+    // Pairwise reference on a FRESH engine (cold cache) across every
+    // ladder batch size, padded tails included: bit-identical.
+    let ladder = cached.caps().batch_ladder().to_vec();
+    for &b in &ladder {
+        let mut fresh = engine();
+        let mut got = Vec::new();
+        for chunk in corpus.graphs().chunks(b) {
+            let pairs: Vec<_> = chunk.iter().map(|c| (query.clone(), c.clone())).collect();
+            let filled = pairs.len();
+            let pb = PackedBatch::pack(&pairs, b).unwrap();
+            let out = fresh.score_batch(&pb).unwrap();
+            got.extend_from_slice(&out.scores[..filled]);
+        }
+        assert_eq!(
+            corpus_scores, got,
+            "batch size {b}: corpus path diverged from pairwise path"
+        );
+    }
+    // And the warm cached engine re-serves the same bits.
+    let again = cached.score_corpus(&query, corpus.graphs()).unwrap().scores;
+    assert_eq!(corpus_scores, again);
+}
+
+#[test]
+fn ranking_matches_manual_sort_of_pairwise_scores() {
+    let mut eng = engine();
+    let corpus = corpus_with_dups(27, 10, 0);
+    let cfg = ModelConfig::default();
+    let mut rng = Rng::new(28);
+    let query = encode(
+        &generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels),
+        cfg.n_max,
+        cfg.num_labels,
+    )
+    .unwrap();
+    let out = eng.score_corpus(&query, corpus.graphs()).unwrap();
+    let top3 = corpus.rank(&out.scores, 3);
+    assert_eq!(top3.len(), 3);
+    // Best-first, and each (id, score) consistent with the raw fan-out.
+    assert!(top3[0].1 >= top3[1].1 && top3[1].1 >= top3[2].1);
+    for (id, score) in &top3 {
+        assert_eq!(out.scores[*id as usize], *score);
+    }
+    let max = out.scores.iter().copied().fold(f32::MIN, f32::max);
+    assert_eq!(top3[0].1, max);
+}
+
+#[test]
+fn topk_rides_the_staged_pipeline_with_native_lanes() {
+    let cfg = ModelConfig::default();
+    let factory: EngineFactory = {
+        let cfg = cfg.clone();
+        Arc::new(move || {
+            Ok(Box::new(NativeEngine::new(cfg.clone(), Weights::synthetic(&cfg, 2024)))
+                as Box<dyn Engine>)
+        })
+    };
+    let pipeline = Pipeline::start(cfg.clone(), vec![factory], PipelineConfig::default());
+    let corpus = corpus_with_dups(37, 24, 8); // 32 candidates, 24 unique
+    let mut rng = Rng::new(38);
+    let db = GraphDb::synthesize(&mut rng, Family::Aids, 6, cfg.n_max, cfg.num_labels);
+    // Mixed workload: pair queries interleaved with top-k queries.
+    for id in 0..6u64 {
+        let g1 = db.graphs[(id as usize) % db.len()].clone();
+        let g2 = db.graphs[(id as usize + 1) % db.len()].clone();
+        assert!(pipeline.submit(Query::new(id, g1, g2)));
+        let q = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+        assert!(pipeline.submit(Query::topk(100 + id, q, Arc::clone(&corpus), 5)));
+    }
+    let metrics = pipeline.finish();
+    assert_eq!(metrics.scored, 12, "6 pairs + 6 top-k all answered");
+    assert_eq!(metrics.topk, 6);
+    assert_eq!(metrics.rejected, 0);
+    assert_eq!(metrics.engine_errors, 0);
+    // The cache amortizes across queries on the lane: total forwards
+    // stay far below the cacheless 6*2 + 6*(1+32).
+    assert!(metrics.embed_misses > 0);
+    let cacheless = (6 * 2 + 6 * (1 + corpus.len())) as u64;
+    assert!(
+        metrics.embed_misses < cacheless / 2,
+        "cache inactive: {} forwards vs {} cacheless",
+        metrics.embed_misses,
+        cacheless
+    );
+    // The serve report carries the new rows.
+    let t = metrics.render_table("corpus smoke");
+    assert!(t.get("topk queries").is_some());
+    assert!(t.get("embed cache hit rate").is_some());
+    assert!(t.get("gcn forwards per query").is_some());
+}

@@ -46,13 +46,16 @@ fn load_golden() -> Option<Golden> {
         let a_norm = a[i * n * n..(i + 1) * n * n].to_vec();
         let num_nodes = m[i * n..(i + 1) * n].iter().filter(|&&x| x != 0.0).count();
         let csr = CsrAdj::from_dense(&a_norm, num_nodes, n);
+        let h0 = h[i * n * l..(i + 1) * n * l].to_vec();
+        let key = EncodedGraph::compute_fingerprint(&h0, &csr, num_nodes, l);
         EncodedGraph {
             a_norm,
-            h0: h[i * n * l..(i + 1) * n * l].to_vec(),
+            h0,
             mask: m[i * n..(i + 1) * n].to_vec(),
             csr,
             num_nodes,
             num_edges: 0,
+            key,
         }
     };
     let pairs = (0..np)

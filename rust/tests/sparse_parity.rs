@@ -18,43 +18,10 @@ use spa_gcn::sim::ft::nonzero_stream;
 use spa_gcn::util::prop::check;
 use spa_gcn::util::rng::Rng;
 
-/// Deterministic pseudo-random weights for the full default config.
+/// Deterministic pseudo-random weights (the shared artifact-free
+/// constructor — one manifest-shaped builder for every test file).
 fn default_weights(cfg: &ModelConfig, seed: u64) -> Weights {
-    let mut rng = Rng::new(seed);
-    let mut v = |len: usize, s: f32| -> Vec<f32> {
-        (0..len).map(|_| (rng.f32() - 0.5) * s).collect()
-    };
-    let dims_in = cfg.feature_dims();
-    let f = cfg.embed_dim();
-    let k = cfg.ntn_k;
-    let mut fc_w = Vec::new();
-    let mut fc_b = Vec::new();
-    let mut d = k;
-    for &h in &cfg.fc_dims {
-        fc_w.push(v(d * h, 0.5));
-        fc_b.push(vec![0.01; h]);
-        d = h;
-    }
-    Weights {
-        gcn_w: [
-            v(dims_in[0] * cfg.filters[0], 0.5),
-            v(dims_in[1] * cfg.filters[1], 0.5),
-            v(dims_in[2] * cfg.filters[2], 0.5),
-        ],
-        gcn_b: [
-            vec![0.02; cfg.filters[0]],
-            vec![0.02; cfg.filters[1]],
-            vec![0.02; cfg.filters[2]],
-        ],
-        att_w: v(f * f, 0.5),
-        ntn_w: v(k * f * f, 0.3),
-        ntn_v: v(k * 2 * f, 0.3),
-        ntn_b: vec![0.0; k],
-        fc_w,
-        fc_b,
-        out_w: v(d, 0.5),
-        out_b: vec![0.0],
-    }
+    Weights::synthetic(cfg, seed)
 }
 
 fn random_graph(rng: &mut Rng, cfg: &ModelConfig) -> EncodedGraph {
