@@ -16,6 +16,48 @@ use crate::graph::dataset::GraphDb;
 use crate::graph::encode::{encode, EncodeError, EncodedGraph, GraphKey};
 use crate::graph::Graph;
 
+/// A contiguous view over one slice of a corpus's candidates — the unit
+/// the scatter stage hands to one executor lane. Shards are cheap id
+/// ranges over the already-encoded candidates: no graph is re-encoded
+/// or cloned to scatter a query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CorpusShard {
+    /// First candidate index (inclusive).
+    pub start: usize,
+    /// One past the last candidate index (exclusive).
+    pub end: usize,
+}
+
+impl CorpusShard {
+    /// Candidates in this shard.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// True when the shard covers no candidates.
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Why a set of shard partials could not be merged back into one
+/// ranking: the shards must tile the corpus exactly, one score per
+/// candidate. The gather stage converts this into a typed engine error
+/// instead of panicking its thread.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardCoverageError {
+    /// Human-readable description of the coverage violation.
+    pub detail: String,
+}
+
+impl std::fmt::Display for ShardCoverageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shard merge: {}", self.detail)
+    }
+}
+
+impl std::error::Error for ShardCoverageError {}
+
 /// An immutable named set of candidate graphs, encoded once at build
 /// time for the artifact shapes it will be served with.
 #[derive(Debug)]
@@ -142,6 +184,101 @@ impl Corpus {
         self.unique
     }
 
+    /// Split the corpus into `n` contiguous shard views for a scattered
+    /// top-k query. `n` clamps to the candidate count (every returned
+    /// shard is non-empty) and sizes differ by at most one candidate —
+    /// the workload-balanced partitioning Accel-GCN applies across its
+    /// parallel units, here across executor lanes. An empty corpus has
+    /// no shards.
+    pub fn shards(&self, n: usize) -> Vec<CorpusShard> {
+        if self.is_empty() {
+            return Vec::new();
+        }
+        let n = n.clamp(1, self.len());
+        let base = self.len() / n;
+        let extra = self.len() % n;
+        let mut shards = Vec::with_capacity(n);
+        let mut start = 0;
+        for i in 0..n {
+            let end = start + base + usize::from(i < extra);
+            shards.push(CorpusShard { start, end });
+            start = end;
+        }
+        shards
+    }
+
+    /// The encoded candidates of one shard — the slice handed to
+    /// [`Engine::score_corpus_with`](crate::runtime::Engine::score_corpus_with).
+    pub fn shard_graphs(&self, shard: CorpusShard) -> &[EncodedGraph] {
+        &self.graphs[shard.start..shard.end]
+    }
+
+    /// Number of distinct graphs (by fingerprint) within one shard —
+    /// what a cold lane pays in GCN forwards for that shard. Shards are
+    /// views over the same fingerprinted candidates, so dedup awareness
+    /// costs no re-hashing.
+    pub fn unique_in(&self, shard: CorpusShard) -> usize {
+        self.keys[shard.start..shard.end]
+            .iter()
+            .map(|k| k.0)
+            .collect::<HashSet<u128>>()
+            .len()
+    }
+
+    /// Merge scattered shard partials back into one ranking. Each
+    /// partial is `(shard, scores-for-that-shard)`; together they must
+    /// tile the corpus exactly (no gap, no overlap, one score per
+    /// candidate). The merged ranking goes through [`Corpus::rank`] —
+    /// the one and only sort/tie-break implementation — so sharded and
+    /// unsharded results are bit-identical by construction.
+    pub fn rank_sharded(
+        &self,
+        partials: &[(CorpusShard, &[f32])],
+        k: usize,
+    ) -> Result<Vec<(u64, f32)>, ShardCoverageError> {
+        let mut scores = vec![0.0f32; self.len()];
+        let mut covered = vec![false; self.len()];
+        for (shard, s) in partials {
+            if shard.end > self.len() || shard.start > shard.end {
+                return Err(ShardCoverageError {
+                    detail: format!(
+                        "shard {}..{} outside corpus of {} candidates",
+                        shard.start,
+                        shard.end,
+                        self.len()
+                    ),
+                });
+            }
+            if s.len() != shard.len() {
+                return Err(ShardCoverageError {
+                    detail: format!(
+                        "shard {}..{} carries {} scores for {} candidates",
+                        shard.start,
+                        shard.end,
+                        s.len(),
+                        shard.len()
+                    ),
+                });
+            }
+            for (i, &score) in s.iter().enumerate() {
+                let at = shard.start + i;
+                if covered[at] {
+                    return Err(ShardCoverageError {
+                        detail: format!("candidate {at} scored by two shards"),
+                    });
+                }
+                covered[at] = true;
+                scores[at] = score;
+            }
+        }
+        if let Some(gap) = covered.iter().position(|c| !c) {
+            return Err(ShardCoverageError {
+                detail: format!("candidate {gap} not covered by any shard"),
+            });
+        }
+        Ok(self.rank(&scores, k))
+    }
+
     /// Rank one engine fan-out: top `k` of `scores` (one per candidate,
     /// [`Corpus::graphs`] order) as `(id, score)` pairs, best first.
     /// Ties break toward the smaller id so rankings are deterministic;
@@ -216,6 +353,76 @@ mod tests {
         assert_eq!(all[5], (4, 0.1));
         // k == 0 is a valid (empty) request.
         assert!(c.rank(&scores, 0).is_empty());
+    }
+
+    #[test]
+    fn shards_tile_the_corpus_balanced() {
+        let c = corpus_with_dup(); // 6 candidates
+        // 6 over 4 lanes: sizes 2,2,1,1 — never more than one apart.
+        let shards = c.shards(4);
+        assert_eq!(shards.len(), 4);
+        let sizes: Vec<usize> = shards.iter().map(CorpusShard::len).collect();
+        assert_eq!(sizes, vec![2, 2, 1, 1]);
+        // Contiguous tiling, in order.
+        assert_eq!(shards[0], CorpusShard { start: 0, end: 2 });
+        assert_eq!(shards[3], CorpusShard { start: 5, end: 6 });
+        let mut covered = 0;
+        for s in &shards {
+            assert_eq!(s.start, covered);
+            assert!(!s.is_empty());
+            assert_eq!(c.shard_graphs(*s).len(), s.len());
+            covered = s.end;
+        }
+        assert_eq!(covered, c.len());
+        // n clamps to the candidate count; 1 shard is the whole corpus.
+        assert_eq!(c.shards(100).len(), 6);
+        assert_eq!(c.shards(1), vec![CorpusShard { start: 0, end: 6 }]);
+        assert_eq!(c.shards(0), c.shards(1), "n=0 clamps up to one shard");
+        let empty = Corpus::build("e", &[], 8, 4).unwrap();
+        assert!(empty.shards(3).is_empty());
+    }
+
+    #[test]
+    fn shard_unique_counts_follow_fingerprints() {
+        let c = corpus_with_dup(); // entry 5 duplicates entry 0
+        let whole = c.shards(1)[0];
+        assert_eq!(c.unique_in(whole), c.unique_graphs());
+        // Split so the duplicate lands in a different shard than its
+        // original: both shards then count it as locally unique.
+        let shards = c.shards(2); // 0..3, 3..6
+        assert_eq!(c.unique_in(shards[0]) + c.unique_in(shards[1]), 6);
+    }
+
+    #[test]
+    fn rank_sharded_matches_rank_and_rejects_bad_coverage() {
+        let c = corpus_with_dup();
+        let scores = [0.3, 0.9, 0.5, 0.9, 0.1, 0.5];
+        for n in 1..=6 {
+            let shards = c.shards(n);
+            let partials: Vec<(CorpusShard, &[f32])> = shards
+                .iter()
+                .map(|s| (*s, &scores[s.start..s.end]))
+                .collect();
+            for k in [0usize, 1, 3, 6, 13] {
+                assert_eq!(
+                    c.rank_sharded(&partials, k).unwrap(),
+                    c.rank(&scores, k),
+                    "n={n} k={k}"
+                );
+            }
+        }
+        // A gap, an overlap, and a length mismatch are each rejected.
+        let s02 = CorpusShard { start: 0, end: 2 };
+        let s26 = CorpusShard { start: 2, end: 6 };
+        assert!(c.rank_sharded(&[(s02, &scores[0..2])], 3).is_err());
+        assert!(c
+            .rank_sharded(&[(s02, &scores[0..2]), (s02, &scores[0..2]), (s26, &scores[2..6])], 3)
+            .is_err());
+        assert!(c
+            .rank_sharded(&[(s02, &scores[0..1]), (s26, &scores[2..6])], 3)
+            .is_err());
+        let oob = CorpusShard { start: 4, end: 9 };
+        assert!(c.rank_sharded(&[(oob, &scores[0..5])], 3).is_err());
     }
 
     #[test]

@@ -108,6 +108,13 @@ pub struct Metrics {
     pub scored: u64,
     /// Top-k corpus queries among `scored`.
     pub topk: u64,
+    /// Shards per served top-k query (1 = whole-query path). The mean
+    /// is the `topk shards mean` report row: ~lane count means the
+    /// scatter engaged, 1.0 means single-lane serving.
+    pub topk_shards: Samples,
+    /// Slowest-minus-fastest shard execute time per scattered query, µs
+    /// — the Accel-GCN-style balance witness (`topk lane spread (ms)`).
+    pub topk_spread_us: Samples,
     /// Queries rejected at admission (or during shutdown).
     pub rejected: u64,
     /// Queries answered with an engine error.
@@ -149,6 +156,8 @@ impl Metrics {
             gcn_forwards: Samples::new(),
             scored: 0,
             topk: 0,
+            topk_shards: Samples::new(),
+            topk_spread_us: Samples::new(),
             rejected: 0,
             engine_errors: 0,
             channels: Vec::new(),
@@ -164,6 +173,10 @@ impl Metrics {
                 self.scored += 1;
                 if matches!(r.outcome, super::query::Outcome::TopK(_)) {
                     self.topk += 1;
+                    if let Some(sh) = r.sharding {
+                        self.topk_shards.push(sh.shards as f64);
+                        self.topk_spread_us.push(sh.spread_us);
+                    }
                 } else {
                     // Pair queries only: see the `batch_sizes` field doc.
                     self.batch_sizes.push(r.batch_size as f64);
@@ -324,6 +337,16 @@ impl Metrics {
         // per scored query (2.0 = no reuse on pair traffic).
         if self.topk > 0 {
             t.row(vec!["topk queries".into(), format!("{}", self.topk)]);
+            if !self.topk_shards.is_empty() {
+                t.row(vec![
+                    "topk shards mean".into(),
+                    fmt(self.topk_shards.mean()),
+                ]);
+                t.row(vec![
+                    "topk lane spread (ms)".into(),
+                    fmt(self.topk_spread_us.mean() / 1000.0),
+                ]);
+            }
         }
         if self.embed_hits + self.embed_misses > 0 {
             t.row(vec![
@@ -391,7 +414,30 @@ mod tests {
             },
             telemetry: QueryTelemetry::default(),
             engine: None,
+            sharding: None,
         }
+    }
+
+    #[test]
+    fn sharding_rows_render_per_topk_query() {
+        use super::super::query::ShardingInfo;
+        let mut m = Metrics::new();
+        // One scattered query (2 shards, 400 µs spread), one whole.
+        let scattered = res(Outcome::TopK(vec![(0, 0.9)]))
+            .with_sharding(ShardingInfo { shards: 2, spread_us: 400.0 });
+        m.record(&scattered);
+        let whole = res(Outcome::TopK(vec![(1, 0.8)]))
+            .with_sharding(ShardingInfo { shards: 1, spread_us: 0.0 });
+        m.record(&whole);
+        // Pair queries never touch the shard samples.
+        m.record(&res(Outcome::Score(0.5)));
+        assert_eq!(m.topk, 2);
+        assert_eq!(m.topk_shards.len(), 2);
+        assert_eq!(m.topk_shards.mean(), 1.5);
+        assert_eq!(m.topk_spread_us.mean(), 200.0);
+        let rendered = m.render_table("t").render();
+        assert!(rendered.contains("topk shards mean"));
+        assert!(rendered.contains("topk lane spread (ms)"));
     }
 
     #[test]

@@ -33,14 +33,19 @@
 //! fuses the two stages into one sequential thread: the no-overlap
 //! baseline the benches compare against.
 //!
-//! Top-k corpus queries ([`QueryPayload::TopK`]) ride the same stages:
-//! admission validates the query graph, the batcher counts them like
-//! any query, the encoder encodes just the query graph (the corpus is
-//! pre-encoded and shared by `Arc`), and the executor calls
-//! `Engine::score_corpus` — the engine embeds the query once through
-//! its embedding cache and fans the NTN+FCN tail over the corpus
-//! (DESIGN.md S14). The ranking is assembled executor-side, where the
-//! corpus ids live.
+//! Top-k corpus queries ([`QueryPayload::TopK`]) ride the same stages.
+//! When two or more lanes have published corpus-shard-capable caps, the
+//! batcher *scatters* the query: the corpus splits into contiguous
+//! [`CorpusShard`] views (one per capable lane), the first shard's lane
+//! embeds the query graph once (cache-aware) and publishes the
+//! embedding through a first-wins cell, sibling lanes pay only the
+//! NTN+FCN fan-out over their slice, and a dedicated *gather* stage
+//! merges the partial scores back through `Corpus::rank_sharded` — so
+//! sharded and unsharded rankings are bit-identical (DESIGN.md S15).
+//! With fewer than two capable lanes (startup window, dead lanes, tiny
+//! corpus) the query takes the whole-query path: the executor calls
+//! `Engine::score_corpus` and assembles the ranking in place
+//! (DESIGN.md S14).
 //!
 //! Shutdown is an ordered drop-sender cascade: dropping the pipeline's
 //! submit sender makes admission drain and exit, which drops the ingest
@@ -48,19 +53,25 @@
 //! chain until the responder sees its channel close and returns the
 //! final [`Metrics`]. No query is lost or duplicated on the way down.
 
+use std::cell::Cell;
+use std::collections::HashMap;
 use std::sync::mpsc::RecvTimeoutError;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
 use crate::graph::encode::{encode, EncodedGraph, PackedBatch};
 use crate::nn::config::ModelConfig;
-use crate::runtime::{Engine, EngineCaps, EngineError, EngineFactory};
+use crate::runtime::embed_cache::CachedEmbed;
+use crate::runtime::{Engine, EngineCaps, EngineError, EngineFactory, QueryTelemetry};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::channel::{channel, ChannelStats, NamedReceiver, NamedSender, SendPolicy, SendResult};
+use super::corpus::CorpusShard;
 use super::metrics::{LaneInfo, Metrics};
-use super::query::{Outcome, Query, QueryPayload, QueryResult, RejectReason, StageTiming};
+use super::query::{
+    Outcome, Query, QueryPayload, QueryResult, RejectReason, ShardingInfo, StageTiming,
+};
 use super::router::{Admission, CapsRouter, LaneCaps};
 
 /// A batch released by the batcher stage, bound for one worker lane.
@@ -68,6 +79,159 @@ use super::router::{Admission, CapsRouter, LaneCaps};
 pub struct Batch {
     /// The queries riding in this batch, submission order.
     pub queries: Vec<Query>,
+}
+
+/// Unit of traffic on a lane's batch channel: a released batch of pair
+/// and/or whole top-k queries, or one shard of a scattered top-k query.
+enum LaneTask {
+    Batch(Batch),
+    Shard(ShardTask),
+}
+
+/// One scattered top-k query's shared, immutable plan: the query itself
+/// (owned here once, `Arc`-shared by every shard task), the shard
+/// count the gather stage must wait for, and the first-wins cell the
+/// embedder lane publishes the query embedding through.
+struct ShardPlan {
+    /// Gather-stage correlation key (unique per scattered query).
+    id: u64,
+    query: Query,
+    n_shards: usize,
+    embed: QueryEmbedCell,
+}
+
+/// One shard of a scattered top-k query, bound for one capable lane.
+/// Shard 0 is the *embedder*: its lane computes the query embedding
+/// once (cache-aware) and publishes it through the plan's cell; sibling
+/// lanes wait on the cell instead of re-running the query's GCN.
+///
+/// The task carries its own gather sender and reports its outcome
+/// exactly once: through [`ShardTask::report`] on the normal and typed
+/// failure paths, or through the `Drop` backstop when a lane dies
+/// *unwinding* (an engine panic, or a thread panicking on earlier work
+/// with this task still queued — the channel then drops it
+/// unprocessed). Either way the gather stage hears from every shard,
+/// so a scattered query always resolves promptly.
+struct ShardTask {
+    plan: Arc<ShardPlan>,
+    shard: CorpusShard,
+    index: usize,
+    /// Set by [`ShardTask::report`]; `Drop` reports abandonment only
+    /// while this is still false.
+    reported: Cell<bool>,
+    gather: NamedSender<ShardOutcome>,
+}
+
+impl ShardTask {
+    fn is_embedder(&self) -> bool {
+        self.index == 0
+    }
+
+    /// Send this shard's outcome to the gather stage (and silence the
+    /// `Drop` backstop).
+    fn report(&self, result: Result<ShardDone, EngineError>, engine: Option<Arc<str>>) {
+        self.reported.set(true);
+        let _ = self.gather.send(ShardOutcome {
+            plan: Arc::clone(&self.plan),
+            index: self.index,
+            result,
+            engine,
+        });
+    }
+}
+
+impl Drop for ShardTask {
+    /// Panic/abandonment backstop. The typed failure paths all poison
+    /// the embed cell and report explicitly ([`fail_shard`]); this
+    /// covers the unwinding paths, where the task is dropped without
+    /// either. Poisoning the cell un-hangs sibling lanes blocked in
+    /// [`QueryEmbedCell::wait`] (`set` is first-wins, so it is a no-op
+    /// after any normal publish), and the abandonment report lets the
+    /// gather stage resolve the query now rather than at shutdown.
+    fn drop(&mut self) {
+        let abandoned = || EngineError::Unavailable {
+            reason: "shard abandoned: its lane died before scoring it".into(),
+        };
+        if self.is_embedder() {
+            self.plan.embed.set(Err(abandoned()));
+        }
+        if !self.reported.get() {
+            self.reported.set(true);
+            let _ = self.gather.send(ShardOutcome {
+                plan: Arc::clone(&self.plan),
+                index: self.index,
+                result: Err(abandoned()),
+                engine: None,
+            });
+        }
+    }
+}
+
+/// First-wins slot for a scattered query's embedding. The embedder lane
+/// publishes `Ok` (or its typed failure — a poisoned cell fails sibling
+/// shards fast instead of hanging them); siblings block on [`wait`].
+///
+/// Deadlock-freedom: the batcher scatters queries one at a time and
+/// every channel is FIFO, so within any lane all of query *n*'s shard
+/// work precedes query *n+1*'s. A lane blocked waiting on query *n*'s
+/// cell therefore only ever waits on work that is strictly ahead of
+/// query *n* elsewhere — the minimal in-flight query's embedder never
+/// waits, so by induction some lane always makes progress. Every
+/// failure path that consumes an embedder task must poison the cell
+/// (see [`fail_shard`]).
+struct QueryEmbedCell {
+    state: Mutex<Option<Result<Arc<CachedEmbed>, EngineError>>>,
+    ready: Condvar,
+}
+
+impl QueryEmbedCell {
+    fn new() -> Self {
+        QueryEmbedCell {
+            state: Mutex::new(None),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Publish the embed outcome. First set wins; later calls are
+    /// ignored (a late panic-path poison after a normal publish).
+    fn set(&self, outcome: Result<Arc<CachedEmbed>, EngineError>) {
+        let mut state = self.state.lock().expect("embed cell poisoned");
+        if state.is_none() {
+            *state = Some(outcome);
+            self.ready.notify_all();
+        }
+    }
+
+    /// Block until the embedder lane publishes, then return a copy.
+    fn wait(&self) -> Result<Arc<CachedEmbed>, EngineError> {
+        let mut state = self.state.lock().expect("embed cell poisoned");
+        loop {
+            if let Some(outcome) = state.as_ref() {
+                return outcome.clone();
+            }
+            state = self.ready.wait(state).expect("embed cell poisoned");
+        }
+    }
+}
+
+/// One shard's completed (or failed) work, en route to the gather
+/// stage, which resolves each scattered query exactly once.
+struct ShardOutcome {
+    plan: Arc<ShardPlan>,
+    index: usize,
+    result: Result<ShardDone, EngineError>,
+    engine: Option<Arc<str>>,
+}
+
+/// The success half of a [`ShardOutcome`].
+struct ShardDone {
+    shard: CorpusShard,
+    /// One score per shard candidate, shard order.
+    scores: Vec<f32>,
+    telemetry: QueryTelemetry,
+    queue_us: f64,
+    encode_us: f64,
+    execute_us: f64,
 }
 
 /// An encoded chunk in flight between an encoder and its executor.
@@ -92,11 +256,26 @@ struct TopKJob {
     encode_us: f64,
 }
 
-/// Unit of work an encoder hands its executor: a packed pair chunk or a
-/// single top-k corpus query.
+/// One shard of a scattered top-k query in flight to an executor. Only
+/// the embedder shard carries the encoded query graph — sibling lanes
+/// receive the finished embedding through the plan's cell and never
+/// touch the query graph at all.
+struct ShardJob {
+    task: ShardTask,
+    /// The encoded query graph (embedder shard only).
+    encoded: Option<EncodedGraph>,
+    /// Submit -> encode-start wait, µs.
+    queue_us: f64,
+    /// Encode time for the query graph (embedder shard only), µs.
+    encode_us: f64,
+}
+
+/// Unit of work an encoder hands its executor: a packed pair chunk, a
+/// whole top-k corpus query, or one shard of a scattered one.
 enum Work {
     Chunk(EncodedChunk),
     TopK(TopKJob),
+    TopKShard(ShardJob),
 }
 
 /// Pipeline shape knobs. `ServeConfig` derives one of these; tests build
@@ -156,8 +335,12 @@ impl Pipeline {
         let (admit_tx, admit_rx) = channel("admit", cfg.admit_cap, SendPolicy::Block);
         let (ingest_tx, ingest_rx) = channel("ingest", cfg.admit_cap, SendPolicy::Block);
         let (results_tx, results_rx) = channel("results", cfg.results_cap, SendPolicy::Block);
+        // Shard partials from every lane converge here; the gather
+        // stage merges them back into one result per scattered query.
+        let (gather_tx, gather_rx) = channel("gather", cfg.results_cap, SendPolicy::Block);
 
-        let mut stats: Vec<Arc<ChannelStats>> = vec![admit_tx.stats(), ingest_tx.stats()];
+        let mut stats: Vec<Arc<ChannelStats>> =
+            vec![admit_tx.stats(), ingest_tx.stats(), gather_tx.stats()];
         let mut stages = Vec::new();
 
         // Stage 1: admission (validation + reject short-circuit).
@@ -167,6 +350,12 @@ impl Pipeline {
             stages.push(spawn("admission", move || {
                 admission_stage(adm, admit_rx, ingest_tx, results)
             }));
+        }
+
+        // Stage 5: gather (merge scattered top-k shard partials).
+        {
+            let results = results_tx.clone();
+            stages.push(spawn("gather", move || gather_stage(gather_rx, results)));
         }
 
         // Stages 3+4 per lane: encoder -> executor (or fused when depth=0).
@@ -200,18 +389,24 @@ impl Pipeline {
             }
         }
 
-        // Stage 2: batcher (size-or-deadline, caps-aware fan-out).
+        // Stage 2: batcher (size-or-deadline, caps-aware fan-out +
+        // top-k scatter across corpus-capable lanes). Only the batcher
+        // holds a gather sender: each ShardTask carries its own clone,
+        // so the gather stage exits once the batcher is gone and every
+        // in-flight shard task has dropped.
         {
             let batcher = Batcher::new(cfg.policy);
             let fan_out = CapsRouter::new(lanes);
             let results = results_tx.clone();
             stages.push(spawn("batcher", move || {
-                batcher_stage(batcher, ingest_rx, fan_out, results)
+                batcher_stage(batcher, ingest_rx, fan_out, results, gather_tx)
             }));
         }
 
         stats.push(results_tx.stats());
-        drop(results_tx); // pipeline keeps no results sender: cascade works
+        // The pipeline keeps no results sender: once every stage drops
+        // its clones the drop cascade reaches the responder.
+        drop(results_tx);
         let responder = spawn("responder", move || responder_stage(results_rx, stats));
 
         Pipeline {
@@ -226,6 +421,16 @@ impl Pipeline {
     /// (backpressure). Returns false if the pipeline has shut down.
     pub fn submit(&self, q: Query) -> bool {
         self.submit_tx.send(q).is_sent()
+    }
+
+    /// Block until every lane's caps handshake has published (engine
+    /// built, or typed construction failure); returns the number of
+    /// lanes with a working engine. Capability-dependent routing — the
+    /// top-k scatter in particular — is only deterministic once the
+    /// handshakes have landed, so tests and benches that assert on
+    /// shard counts call this before submitting.
+    pub fn wait_ready(&self) -> usize {
+        self.lane_caps.iter().filter(|c| c.wait().is_ok()).count()
     }
 
     /// Ordered shutdown: drop the submit sender (starting the cascade),
@@ -294,9 +499,13 @@ fn admission_stage(
 fn batcher_stage(
     mut batcher: Batcher,
     rx: NamedReceiver<Query>,
-    mut fan_out: CapsRouter<Batch>,
+    mut fan_out: CapsRouter<LaneTask>,
     results: NamedSender<QueryResult>,
+    gather: NamedSender<ShardOutcome>,
 ) {
+    // Scattered-query correlation ids for the gather stage; unique per
+    // pipeline because only this thread scatters.
+    let mut next_plan_id = 0u64;
     loop {
         let wait = batcher
             .time_to_deadline(Instant::now())
@@ -315,18 +524,18 @@ fn batcher_stage(
                     }
                 }
                 for batch in batcher.push_all(burst, Instant::now()) {
-                    dispatch(&mut fan_out, batch, &results);
+                    dispatch(&mut fan_out, batch, &results, &gather, &mut next_plan_id);
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
                 if let Some(batch) = batcher.poll(Instant::now()) {
-                    dispatch(&mut fan_out, batch, &results);
+                    dispatch(&mut fan_out, batch, &results, &gather, &mut next_plan_id);
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
                 let now = Instant::now();
                 while let Some(batch) = batcher.flush(now) {
-                    dispatch(&mut fan_out, batch, &results);
+                    dispatch(&mut fan_out, batch, &results, &gather, &mut next_plan_id);
                 }
                 break;
             }
@@ -334,38 +543,122 @@ fn batcher_stage(
     }
 }
 
+/// The scatter eligibility predicate: a lane can take one shard of a
+/// scattered corpus query only if its engine implements the
+/// embed-once/score-shard pair, not just whole-corpus scoring.
+fn shard_capable(caps: &EngineCaps) -> bool {
+    caps.supports_corpus && caps.supports_corpus_shards
+}
+
 fn dispatch(
-    fan_out: &mut CapsRouter<Batch>,
+    fan_out: &mut CapsRouter<LaneTask>,
     queries: Vec<Query>,
     results: &NamedSender<QueryResult>,
+    gather: &NamedSender<ShardOutcome>,
+    next_plan_id: &mut u64,
 ) {
     // Top-k queries are steered to lanes whose published caps support
     // corpus scoring (a mixed `native,xla` deployment must not
     // round-robin them onto engines that can only answer with a typed
-    // Unavailable); pair queries take any healthy lane.
+    // Unavailable) — and scattered across every shard-capable lane when
+    // more than one has published; pair queries take any healthy lane.
     let (pairs, topk) = split_batch(queries);
-    let mut deliver = |batch: Batch, corpus_only: bool| {
-        let sent = if corpus_only {
-            fan_out.send_filtered(batch, |caps| caps.supports_corpus)
-        } else {
-            fan_out.send(batch)
-        };
-        if let SendResult::Disconnected(batch) = sent {
+    if !pairs.is_empty() {
+        let sent = fan_out.send(LaneTask::Batch(Batch { queries: pairs }));
+        if let SendResult::Disconnected(LaneTask::Batch(batch)) = sent {
             for q in batch.queries {
                 let _ = results.send(QueryResult::rejected(&q, RejectReason::ShuttingDown));
             }
         }
-    };
-    if !pairs.is_empty() {
-        deliver(Batch { queries: pairs }, false);
     }
-    if !topk.is_empty() {
-        deliver(Batch { queries: topk }, true);
+    for q in topk {
+        dispatch_topk(fan_out, q, results, gather, next_plan_id);
     }
 }
 
+/// Scatter one top-k query across the shard-capable lanes, or fall back
+/// to the whole-query path when only one capable lane survives (or the
+/// corpus is too small to split, or the capability handshakes have not
+/// landed yet).
+fn dispatch_topk(
+    fan_out: &mut CapsRouter<LaneTask>,
+    q: Query,
+    results: &NamedSender<QueryResult>,
+    gather: &NamedSender<ShardOutcome>,
+    next_plan_id: &mut u64,
+) {
+    let QueryPayload::TopK { corpus, .. } = &q.payload else {
+        unreachable!("split_batch only routes top-k payloads here");
+    };
+    // Shards must land on lanes of ONE engine kind: per-shard telemetry
+    // is policy-specific (executed-work vs padded-schedule MacCounts,
+    // cycle reports), so a scatter spanning `native` and `native-dense`
+    // would blend the very rows the metrics keep apart. Size the
+    // scatter by the largest same-name capable pool.
+    let cohort = fan_out.largest_cohort(shard_capable);
+    let n_shards = cohort.as_ref().map_or(0, |(_, n)| *n).min(corpus.len());
+    if n_shards < 2 {
+        let sent =
+            fan_out.send_filtered(LaneTask::Batch(Batch { queries: vec![q] }), |caps| {
+                caps.supports_corpus
+            });
+        if let SendResult::Disconnected(LaneTask::Batch(batch)) = sent {
+            for q in batch.queries {
+                let _ = results.send(QueryResult::rejected(&q, RejectReason::ShuttingDown));
+            }
+        }
+        return;
+    }
+    let (cohort_name, _) = cohort.expect("n_shards >= 2 implies a cohort");
+    let cohort_pred = |caps: &EngineCaps| shard_capable(caps) && caps.name == cohort_name;
+    let shards = corpus.shards(n_shards);
+    *next_plan_id += 1;
+    let plan = Arc::new(ShardPlan {
+        id: *next_plan_id,
+        query: q,
+        n_shards,
+        embed: QueryEmbedCell::new(),
+    });
+    // Index order matters: the embedder (shard 0) is dispatched first,
+    // so even if the rotation ever hands two shards of one query to the
+    // same lane, the embed is published before any sibling waits on it.
+    for (index, shard) in shards.into_iter().enumerate() {
+        let task = ShardTask {
+            plan: Arc::clone(&plan),
+            shard,
+            index,
+            reported: Cell::new(false),
+            gather: gather.clone(),
+        };
+        let sent = fan_out.send_filtered(LaneTask::Shard(task), cohort_pred);
+        if let SendResult::Disconnected(t) = sent {
+            let LaneTask::Shard(task) = t else {
+                unreachable!("a shard send hands back a shard");
+            };
+            fail_shard(
+                task,
+                EngineError::Unavailable {
+                    reason: "lane channels closed mid-scatter".into(),
+                },
+                None,
+            );
+        }
+    }
+}
+
+/// Answer one shard's failure: poison the embed cell when the failing
+/// shard is the embedder (so sibling lanes fail fast instead of waiting
+/// forever) and report to the gather stage, which resolves the query
+/// with one typed error — never a hang, never a lost query.
+fn fail_shard(task: ShardTask, err: EngineError, engine: Option<Arc<str>>) {
+    if task.is_embedder() {
+        task.plan.embed.set(Err(err.clone()));
+    }
+    task.report(Err(err), engine);
+}
+
 fn encoder_stage(
-    rx: NamedReceiver<Batch>,
+    rx: NamedReceiver<LaneTask>,
     out: NamedSender<Work>,
     results: NamedSender<QueryResult>,
     lane_caps: Arc<LaneCaps>,
@@ -377,23 +670,35 @@ fn encoder_stage(
         Ok(caps) => caps,
         Err(err) => return drain_failed(rx, &results, err),
     };
-    while let Ok(batch) = rx.recv() {
-        let (pairs, topk) = split_batch(batch.queries);
-        for q in topk {
-            if let Some(job) = encode_topk(q, n_max, num_labels, &results) {
-                send_work(&out, Work::TopK(job), &results);
+    while let Ok(task) = rx.recv() {
+        match task {
+            LaneTask::Batch(batch) => {
+                let (pairs, topk) = split_batch(batch.queries);
+                for q in topk {
+                    if let Some(job) = encode_topk(q, n_max, num_labels, &results) {
+                        send_work(&out, Work::TopK(job), &results);
+                    }
+                }
+                for chunk in make_chunks(pairs, &caps) {
+                    if let Some(encoded) = encode_chunk(chunk, &caps, n_max, num_labels, &results)
+                    {
+                        send_work(&out, Work::Chunk(encoded), &results);
+                    }
+                }
             }
-        }
-        for chunk in make_chunks(pairs, &caps) {
-            if let Some(encoded) = encode_chunk(chunk, &caps, n_max, num_labels, &results) {
-                send_work(&out, Work::Chunk(encoded), &results);
+            LaneTask::Shard(task) => {
+                if let Some(job) = encode_shard(task, n_max, num_labels) {
+                    send_work(&out, Work::TopKShard(job), &results);
+                }
             }
         }
     }
 }
 
 /// Hand one encoded work unit to the executor; a dead executor answers
-/// every affected query with a typed error instead of dropping it.
+/// every affected query with a typed error instead of dropping it (a
+/// dead shard additionally poisons its plan's embed cell via
+/// [`fail_shard`] so sibling lanes never hang).
 fn send_work(out: &NamedSender<Work>, work: Work, results: &NamedSender<QueryResult>) {
     if let SendResult::Disconnected(work) = out.send(work) {
         let err = EngineError::Unavailable {
@@ -408,6 +713,48 @@ fn send_work(out: &NamedSender<Work>, work: Work, results: &NamedSender<QueryRes
             Work::TopK(job) => {
                 let _ = results.send(QueryResult::engine_error(&job.query, err, 0));
             }
+            Work::TopKShard(job) => fail_shard(job.task, err, None),
+        }
+    }
+}
+
+/// Prepare one shard task for its executor. Only the embedder shard
+/// encodes the query graph (siblings receive the embedding through the
+/// plan's cell); an encode failure fails the shard through the gather
+/// stage instead of losing the query.
+fn encode_shard(task: ShardTask, n_max: usize, num_labels: usize) -> Option<ShardJob> {
+    let t0 = Instant::now();
+    let queue_us = t0.saturating_duration_since(task.plan.query.submitted).as_secs_f64() * 1e6;
+    if !task.is_embedder() {
+        return Some(ShardJob {
+            task,
+            encoded: None,
+            queue_us,
+            encode_us: 0.0,
+        });
+    }
+    let QueryPayload::TopK { graph, .. } = &task.plan.query.payload else {
+        // dispatch_topk precludes this; a wiring bug upstream must
+        // still resolve the query, never lose it silently.
+        let err = EngineError::InvalidInput {
+            detail: "pair payload reached the shard encoder".into(),
+        };
+        fail_shard(task, err, None);
+        return None;
+    };
+    match encode(graph, n_max, num_labels) {
+        Ok(encoded) => Some(ShardJob {
+            encode_us: t0.elapsed().as_secs_f64() * 1e6,
+            encoded: Some(encoded),
+            queue_us,
+            task,
+        }),
+        Err(e) => {
+            let err = EngineError::InvalidInput {
+                detail: format!("encode: {e}"),
+            };
+            fail_shard(task, err, None);
+            None
         }
     }
 }
@@ -459,6 +806,7 @@ fn executor_stage(
         match work {
             Work::Chunk(chunk) => execute_chunk(engine.as_mut(), &tag, chunk, &results),
             Work::TopK(job) => execute_topk(engine.as_mut(), &tag, job, &results),
+            Work::TopKShard(job) => execute_shard(engine.as_mut(), &tag, job),
         }
     }
 }
@@ -467,7 +815,7 @@ fn executor_stage(
 /// identical per-query work, no overlap between the two stages.
 fn fused_stage(
     factory: EngineFactory,
-    rx: NamedReceiver<Batch>,
+    rx: NamedReceiver<LaneTask>,
     results: NamedSender<QueryResult>,
     lane_caps: Arc<LaneCaps>,
     n_max: usize,
@@ -488,16 +836,26 @@ fn fused_stage(
     drop(guard);
     let caps = engine.caps().clone();
     let tag: Arc<str> = Arc::from(caps.name.as_str());
-    while let Ok(batch) = rx.recv() {
-        let (pairs, topk) = split_batch(batch.queries);
-        for q in topk {
-            if let Some(job) = encode_topk(q, n_max, num_labels, &results) {
-                execute_topk(engine.as_mut(), &tag, job, &results);
+    while let Ok(task) = rx.recv() {
+        match task {
+            LaneTask::Batch(batch) => {
+                let (pairs, topk) = split_batch(batch.queries);
+                for q in topk {
+                    if let Some(job) = encode_topk(q, n_max, num_labels, &results) {
+                        execute_topk(engine.as_mut(), &tag, job, &results);
+                    }
+                }
+                for chunk in make_chunks(pairs, &caps) {
+                    if let Some(encoded) = encode_chunk(chunk, &caps, n_max, num_labels, &results)
+                    {
+                        execute_chunk(engine.as_mut(), &tag, encoded, &results);
+                    }
+                }
             }
-        }
-        for chunk in make_chunks(pairs, &caps) {
-            if let Some(encoded) = encode_chunk(chunk, &caps, n_max, num_labels, &results) {
-                execute_chunk(engine.as_mut(), &tag, encoded, &results);
+            LaneTask::Shard(task) => {
+                if let Some(job) = encode_shard(task, n_max, num_labels) {
+                    execute_shard(engine.as_mut(), &tag, job);
+                }
             }
         }
     }
@@ -512,11 +870,18 @@ fn responder_stage(rx: NamedReceiver<QueryResult>, stats: Vec<Arc<ChannelStats>>
     metrics
 }
 
-/// Answer every remaining query on a dead lane with its typed error.
-fn drain_failed(rx: NamedReceiver<Batch>, results: &NamedSender<QueryResult>, err: EngineError) {
-    while let Ok(batch) = rx.recv() {
-        for q in batch.queries {
-            let _ = results.send(QueryResult::engine_error(&q, err.clone(), 0));
+/// Answer every remaining query on a dead lane with its typed error;
+/// shard tasks are failed through the gather stage (poisoning the embed
+/// cell where needed) so scattered queries resolve instead of hanging.
+fn drain_failed(rx: NamedReceiver<LaneTask>, results: &NamedSender<QueryResult>, err: EngineError) {
+    while let Ok(task) = rx.recv() {
+        match task {
+            LaneTask::Batch(batch) => {
+                for q in batch.queries {
+                    let _ = results.send(QueryResult::engine_error(&q, err.clone(), 0));
+                }
+            }
+            LaneTask::Shard(task) => fail_shard(task, err.clone(), None),
         }
     }
 }
@@ -688,6 +1053,11 @@ fn execute_topk(
                 },
                 telemetry: out.telemetry,
                 engine: Some(Arc::clone(tag)),
+                // The whole-query path: one shard, nothing to spread.
+                sharding: Some(ShardingInfo {
+                    shards: 1,
+                    spread_us: 0.0,
+                }),
             });
         }
         Err(err) => {
@@ -695,6 +1065,207 @@ fn execute_topk(
                 QueryResult::engine_error(&job.query, err, 1).with_engine(Arc::clone(tag)),
             );
         }
+    }
+}
+
+/// Run one shard of a scattered top-k query. The embedder shard embeds
+/// the query once (cache-aware) and publishes the embedding through the
+/// plan's cell; sibling shards receive it there and pay only the
+/// NTN+FCN fan-out over their corpus slice. Partials converge on the
+/// gather stage.
+fn execute_shard(engine: &mut dyn Engine, tag: &Arc<str>, job: ShardJob) {
+    let ShardJob {
+        task,
+        encoded,
+        queue_us,
+        encode_us,
+    } = job;
+    let QueryPayload::TopK { corpus, .. } = &task.plan.query.payload else {
+        unreachable!("shard tasks only carry top-k payloads");
+    };
+    let corpus = Arc::clone(corpus);
+    let t0 = Instant::now();
+    let (embed, mut telemetry) = if task.is_embedder() {
+        let encoded = encoded.expect("the embedder shard carries the encoded query");
+        match engine.embed_query(&encoded) {
+            Ok(q) => {
+                // Publish before scoring: sibling lanes start their
+                // fan-out while this lane scores its own shard.
+                task.plan.embed.set(Ok(Arc::clone(&q.embed)));
+                (q.embed, q.telemetry)
+            }
+            // fail_shard poisons the cell, unblocking the siblings.
+            Err(err) => return fail_shard(task, err, Some(Arc::clone(tag))),
+        }
+    } else {
+        match task.plan.embed.wait() {
+            Ok(embed) => (embed, QueryTelemetry::default()),
+            Err(err) => return fail_shard(task, err, Some(Arc::clone(tag))),
+        }
+    };
+    let graphs = corpus.shard_graphs(task.shard);
+    match engine.score_corpus_with(&embed.hg, graphs) {
+        Ok(out) if out.scores.len() != graphs.len() => {
+            // A misbehaving engine yields a typed error, not a gather
+            // coverage panic.
+            let err = EngineError::Backend {
+                engine: tag.to_string(),
+                detail: format!(
+                    "score_corpus_with returned {} scores for {} candidates",
+                    out.scores.len(),
+                    graphs.len()
+                ),
+            };
+            fail_shard(task, err, Some(Arc::clone(tag)));
+        }
+        Ok(out) => {
+            telemetry.merge_serial(&out.telemetry);
+            task.report(
+                Ok(ShardDone {
+                    shard: task.shard,
+                    scores: out.scores,
+                    telemetry,
+                    queue_us,
+                    encode_us,
+                    execute_us: t0.elapsed().as_secs_f64() * 1e6,
+                }),
+                Some(Arc::clone(tag)),
+            );
+        }
+        Err(err) => fail_shard(task, err, Some(Arc::clone(tag))),
+    }
+}
+
+/// One scattered query's partials accumulating in the gather stage.
+struct GatherEntry {
+    plan: Arc<ShardPlan>,
+    parts: Vec<Option<ShardDone>>,
+    engines: Vec<Option<Arc<str>>>,
+    received: usize,
+    resolved: bool,
+}
+
+/// The gather stage: collect per-shard partials and resolve each
+/// scattered query exactly once — a merged ranking when every shard
+/// reports scores, one typed error as soon as any shard fails (later
+/// partials for a failed query are absorbed and dropped). On shutdown
+/// any still-open query is answered with a typed error rather than
+/// lost: the drop cascade reaches this stage only after every shard
+/// producer has exited.
+fn gather_stage(rx: NamedReceiver<ShardOutcome>, results: NamedSender<QueryResult>) {
+    let mut open: HashMap<u64, GatherEntry> = HashMap::new();
+    while let Ok(outcome) = rx.recv() {
+        let n_shards = outcome.plan.n_shards;
+        let entry = open.entry(outcome.plan.id).or_insert_with(|| GatherEntry {
+            plan: Arc::clone(&outcome.plan),
+            parts: (0..n_shards).map(|_| None).collect(),
+            engines: vec![None; n_shards],
+            received: 0,
+            resolved: false,
+        });
+        entry.received += 1;
+        if let Some(slot) = entry.engines.get_mut(outcome.index) {
+            *slot = outcome.engine;
+        }
+        match outcome.result {
+            Ok(done) => {
+                if let Some(slot) = entry.parts.get_mut(outcome.index) {
+                    *slot = Some(done);
+                }
+            }
+            Err(err) if !entry.resolved => {
+                entry.resolved = true;
+                let mut r = QueryResult::engine_error(&entry.plan.query, err, 1);
+                r.engine = entry.engines[outcome.index.min(n_shards - 1)].clone();
+                let _ = results.send(r);
+            }
+            Err(_) => {}
+        }
+        if entry.received == n_shards {
+            let entry = open.remove(&outcome.plan.id).expect("entry just updated");
+            if !entry.resolved {
+                let _ = results.send(merge_shards(entry));
+            }
+        }
+    }
+    // Shutdown with shards still outstanding (a lane thread died
+    // without draining): answer, never lose.
+    for entry in open.into_values() {
+        if !entry.resolved {
+            let err = EngineError::Unavailable {
+                reason: "gather stage shut down before every shard reported".into(),
+            };
+            let _ = results.send(QueryResult::engine_error(&entry.plan.query, err, 1));
+        }
+    }
+}
+
+/// Merge one complete set of shard partials into the final top-k
+/// result. The ranking goes through `Corpus::rank_sharded` — which
+/// reassembles the full score vector and calls `Corpus::rank` — so
+/// sharded and unsharded rankings are bit-identical by construction
+/// (no second sort or tie-break implementation exists; CI greps for
+/// it). Telemetry merges with parallel semantics: work counters sum,
+/// cycle reports take the slowest shard.
+fn merge_shards(entry: GatherEntry) -> QueryResult {
+    let GatherEntry {
+        plan,
+        parts,
+        engines,
+        ..
+    } = entry;
+    let QueryPayload::TopK { corpus, k, .. } = &plan.query.payload else {
+        unreachable!("shard plans only carry top-k payloads");
+    };
+    let mut telemetry = QueryTelemetry::default();
+    let (mut queue_us, mut encode_us) = (0.0f64, 0.0f64);
+    let (mut exec_max, mut exec_min) = (0.0f64, f64::INFINITY);
+    let mut done: Vec<ShardDone> = Vec::with_capacity(parts.len());
+    for part in parts {
+        let p = part.expect("complete unresolved gather has every partial");
+        telemetry.merge_parallel(&p.telemetry);
+        // Shards run concurrently: the query waited for the slowest
+        // lane (max), while the spread between the lanes is the
+        // balance witness the metrics surface.
+        queue_us = queue_us.max(p.queue_us);
+        encode_us += p.encode_us;
+        exec_max = exec_max.max(p.execute_us);
+        exec_min = exec_min.min(p.execute_us);
+        done.push(p);
+    }
+    let partials: Vec<(CorpusShard, &[f32])> =
+        done.iter().map(|p| (p.shard, p.scores.as_slice())).collect();
+    let ranked = match corpus.rank_sharded(&partials, *k) {
+        Ok(ranked) => ranked,
+        Err(e) => {
+            // Unreachable through dispatch_topk (shards come from
+            // Corpus::shards on the same corpus), but a typed answer
+            // beats a panicked gather thread.
+            let err = EngineError::Backend {
+                engine: "gather".into(),
+                detail: e.to_string(),
+            };
+            return QueryResult::engine_error(&plan.query, err, 1);
+        }
+    };
+    QueryResult {
+        id: plan.query.id,
+        outcome: Outcome::TopK(ranked),
+        latency_us: plan.query.submitted.elapsed().as_secs_f64() * 1e6,
+        // One query through the engines, however wide the scatter.
+        batch_size: 1,
+        stage: StageTiming {
+            queue_us,
+            encode_us,
+            execute_us: exec_max,
+        },
+        telemetry,
+        // Attribute the query to the embedder lane's engine.
+        engine: engines.into_iter().next().flatten(),
+        sharding: Some(ShardingInfo {
+            shards: plan.n_shards,
+            spread_us: exec_max - exec_min,
+        }),
     }
 }
 
@@ -723,6 +1294,7 @@ fn execute_chunk(
                     },
                     telemetry: out.telemetry.get(i).cloned().unwrap_or_default(),
                     engine: Some(Arc::clone(tag)),
+                    sharding: None,
                 });
             }
         }
@@ -742,7 +1314,7 @@ mod tests {
     use super::*;
     use crate::coordinator::corpus::Corpus;
     use crate::graph::Graph;
-    use crate::runtime::{BatchOutput, CorpusOutput, QueryTelemetry};
+    use crate::runtime::{BatchOutput, CorpusOutput, MacCounts, QueryEmbed};
     use std::sync::atomic::{AtomicU64, Ordering};
 
     /// Deterministic engine double: fixed batch ladder, optional per-call
@@ -818,6 +1390,105 @@ mod tests {
                 corpus_calls: Arc::clone(&calls),
             }) as Box<dyn Engine>)
         })
+    }
+
+    /// Mock with full sharded-corpus support: content-derived scores
+    /// (so results are independent of how candidates were sharded) and
+    /// separate counters for the embed-once and per-shard calls.
+    struct ShardMockEngine {
+        caps: EngineCaps,
+        embed_calls: Arc<AtomicU64>,
+        shard_calls: Arc<AtomicU64>,
+        fail_embed: bool,
+        fail_shard: bool,
+    }
+
+    fn content_score(g: &crate::graph::encode::EncodedGraph) -> f32 {
+        (g.fingerprint().0 % 997) as f32 / 997.0
+    }
+
+    impl Engine for ShardMockEngine {
+        fn caps(&self) -> &EngineCaps {
+            &self.caps
+        }
+        fn score_batch(&mut self, batch: &PackedBatch) -> Result<BatchOutput, EngineError> {
+            Ok(BatchOutput::untimed(vec![0.5; batch.batch]))
+        }
+        fn score_corpus(
+            &mut self,
+            _query: &crate::graph::encode::EncodedGraph,
+            corpus: &[crate::graph::encode::EncodedGraph],
+        ) -> Result<CorpusOutput, EngineError> {
+            Ok(CorpusOutput {
+                scores: corpus.iter().map(content_score).collect(),
+                telemetry: QueryTelemetry::default(),
+            })
+        }
+        fn embed_query(
+            &mut self,
+            _query: &crate::graph::encode::EncodedGraph,
+        ) -> Result<QueryEmbed, EngineError> {
+            self.embed_calls.fetch_add(1, Ordering::Relaxed);
+            if self.fail_embed {
+                return Err(EngineError::Backend {
+                    engine: "shard-mock".into(),
+                    detail: "embed failure injected".into(),
+                });
+            }
+            Ok(QueryEmbed {
+                embed: Arc::new(CachedEmbed {
+                    hg: vec![0.25; 4],
+                    macs: MacCounts::default(),
+                }),
+                telemetry: QueryTelemetry::default(),
+            })
+        }
+        fn score_corpus_with(
+            &mut self,
+            _query_hg: &[f32],
+            shard: &[crate::graph::encode::EncodedGraph],
+        ) -> Result<CorpusOutput, EngineError> {
+            self.shard_calls.fetch_add(1, Ordering::Relaxed);
+            if self.fail_shard {
+                return Err(EngineError::Backend {
+                    engine: "shard-mock".into(),
+                    detail: "shard failure injected".into(),
+                });
+            }
+            Ok(CorpusOutput {
+                scores: shard.iter().map(content_score).collect(),
+                telemetry: QueryTelemetry::default(),
+            })
+        }
+    }
+
+    fn named_shard_mock_factory(
+        name: &'static str,
+        embed_calls: Arc<AtomicU64>,
+        shard_calls: Arc<AtomicU64>,
+        fail_embed: bool,
+        fail_shard: bool,
+    ) -> EngineFactory {
+        Arc::new(move || {
+            Ok(Box::new(ShardMockEngine {
+                caps: EngineCaps::new(name, vec![1, 4], 8, 4)
+                    .with_corpus_scoring()
+                    .with_corpus_sharding(),
+                embed_calls: Arc::clone(&embed_calls),
+                shard_calls: Arc::clone(&shard_calls),
+                fail_embed,
+                fail_shard,
+            }) as Box<dyn Engine>)
+        })
+    }
+
+    fn shard_mock_factory(
+        embed_calls: Arc<AtomicU64>,
+        shard_calls: Arc<AtomicU64>,
+        fail_embed: bool,
+        fail_shard: bool,
+    ) -> EngineFactory {
+        named_shard_mock_factory("shard-mock", embed_calls, shard_calls, fail_embed, fail_shard)
     }
 
     fn tiny_corpus(entries: usize) -> Arc<Corpus> {
@@ -1052,6 +1723,193 @@ mod tests {
         assert_eq!(metrics.engine_errors, 0);
         assert_eq!(corpus_calls.load(Ordering::Relaxed), 8);
         assert_eq!(metrics.by_engine.get("mock"), None);
+    }
+
+    #[test]
+    fn topk_scatters_across_capable_lanes_and_gathers_once() {
+        let embed_calls = Arc::new(AtomicU64::new(0));
+        let shard_calls = Arc::new(AtomicU64::new(0));
+        let factory = shard_mock_factory(
+            Arc::clone(&embed_calls),
+            Arc::clone(&shard_calls),
+            false,
+            false,
+        );
+        for depth in [2usize, 0] {
+            embed_calls.store(0, Ordering::Relaxed);
+            shard_calls.store(0, Ordering::Relaxed);
+            let pipeline = Pipeline::start(
+                model(),
+                vec![Arc::clone(&factory), Arc::clone(&factory)],
+                pcfg(4, depth, Duration::from_micros(100)),
+            );
+            // Scatter sizing reads *published* caps: wait for both
+            // handshakes so every query is deterministically split.
+            assert_eq!(pipeline.wait_ready(), 2);
+            let corpus = tiny_corpus(6);
+            for id in 0..4 {
+                assert!(pipeline.submit(Query::topk(
+                    id,
+                    Graph::new(2, vec![(0, 1)], vec![0, 1]),
+                    Arc::clone(&corpus),
+                    3,
+                )));
+            }
+            let metrics = pipeline.finish();
+            assert_eq!(metrics.scored, 4, "depth {depth}: every scattered query resolves");
+            assert_eq!(metrics.topk, 4);
+            assert_eq!(metrics.engine_errors, 0);
+            assert_eq!(metrics.rejected, 0);
+            // Embed-once contract: one embed per query, one shard call
+            // per (query, lane).
+            assert_eq!(embed_calls.load(Ordering::Relaxed), 4, "depth {depth}");
+            assert_eq!(shard_calls.load(Ordering::Relaxed), 8, "depth {depth}");
+            // The shard telemetry reached the metrics.
+            assert_eq!(metrics.topk_shards.len(), 4);
+            assert_eq!(metrics.topk_shards.mean(), 2.0, "depth {depth}");
+            assert_eq!(metrics.topk_spread_us.len(), 4);
+            assert_eq!(metrics.by_engine["shard-mock"], 4);
+            // The gather channel is visible in the FIFO stats.
+            assert!(metrics.channels.iter().any(|c| c.name == "gather"));
+        }
+    }
+
+    #[test]
+    fn scatter_falls_back_to_whole_query_without_two_capable_lanes() {
+        // One shard-capable lane + one plain lane: no scatter, the
+        // whole-query path serves (shards mean 1.0, no shard calls).
+        let embed_calls = Arc::new(AtomicU64::new(0));
+        let shard_calls = Arc::new(AtomicU64::new(0));
+        let pair_calls = Arc::new(AtomicU64::new(0));
+        let sharder =
+            shard_mock_factory(Arc::clone(&embed_calls), Arc::clone(&shard_calls), false, false);
+        let pipeline = Pipeline::start(
+            model(),
+            vec![
+                sharder,
+                mock_factory(vec![1, 4], Duration::ZERO, Arc::clone(&pair_calls)),
+            ],
+            pcfg(4, 2, Duration::from_micros(100)),
+        );
+        assert_eq!(pipeline.wait_ready(), 2);
+        let corpus = tiny_corpus(6);
+        for id in 0..3 {
+            assert!(pipeline.submit(Query::topk(
+                id,
+                Graph::new(2, vec![(0, 1)], vec![0, 1]),
+                Arc::clone(&corpus),
+                2,
+            )));
+        }
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.scored, 3);
+        assert_eq!(metrics.topk, 3);
+        assert_eq!(metrics.engine_errors, 0);
+        assert_eq!(shard_calls.load(Ordering::Relaxed), 0, "nothing scattered");
+        assert_eq!(embed_calls.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.topk_shards.mean(), 1.0);
+        assert_eq!(metrics.topk_spread_us.mean(), 0.0);
+    }
+
+    #[test]
+    fn scatter_stays_within_one_engine_kind() {
+        // Shard-capable lanes of DIFFERENT kinds must not share one
+        // query's shards: per-shard telemetry is policy-specific, so a
+        // cross-kind scatter would blend the per-engine rows. Two
+        // mixed-kind lanes -> cohorts of one each -> whole-query path;
+        // adding a second lane of one kind -> that cohort scatters.
+        let embed_a = Arc::new(AtomicU64::new(0));
+        let shard_a = Arc::new(AtomicU64::new(0));
+        let embed_b = Arc::new(AtomicU64::new(0));
+        let shard_b = Arc::new(AtomicU64::new(0));
+        let kind_a = named_shard_mock_factory(
+            "shard-mock-a",
+            Arc::clone(&embed_a),
+            Arc::clone(&shard_a),
+            false,
+            false,
+        );
+        let kind_b = named_shard_mock_factory(
+            "shard-mock-b",
+            Arc::clone(&embed_b),
+            Arc::clone(&shard_b),
+            false,
+            false,
+        );
+        let pipeline = Pipeline::start(
+            model(),
+            vec![Arc::clone(&kind_a), Arc::clone(&kind_b)],
+            pcfg(4, 2, Duration::from_micros(100)),
+        );
+        assert_eq!(pipeline.wait_ready(), 2);
+        let corpus = tiny_corpus(6);
+        for id in 0..3 {
+            assert!(pipeline.submit(Query::topk(
+                id,
+                Graph::new(2, vec![(0, 1)], vec![0, 1]),
+                Arc::clone(&corpus),
+                2,
+            )));
+        }
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.scored, 3);
+        assert_eq!(metrics.topk_shards.mean(), 1.0, "no cross-kind scatter");
+        assert_eq!(shard_a.load(Ordering::Relaxed) + shard_b.load(Ordering::Relaxed), 0);
+
+        // A second kind-a lane forms a cohort of two: every query now
+        // scatters, and only onto the kind-a lanes.
+        let pipeline = Pipeline::start(
+            model(),
+            vec![Arc::clone(&kind_a), kind_b, kind_a],
+            pcfg(4, 2, Duration::from_micros(100)),
+        );
+        assert_eq!(pipeline.wait_ready(), 3);
+        for id in 0..3 {
+            assert!(pipeline.submit(Query::topk(
+                id,
+                Graph::new(2, vec![(0, 1)], vec![0, 1]),
+                Arc::clone(&corpus),
+                2,
+            )));
+        }
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.scored, 3);
+        assert_eq!(metrics.engine_errors, 0);
+        assert_eq!(metrics.topk_shards.mean(), 2.0, "kind-a cohort scatters");
+        assert_eq!(shard_a.load(Ordering::Relaxed), 6, "two shards per query, all kind-a");
+        assert_eq!(shard_b.load(Ordering::Relaxed), 0, "kind-b never sees a shard");
+        assert_eq!(embed_a.load(Ordering::Relaxed), 3);
+        assert_eq!(embed_b.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.by_engine["shard-mock-a"], 3);
+    }
+
+    #[test]
+    fn single_candidate_corpus_never_scatters() {
+        // Two capable lanes but one candidate: nothing to split.
+        let embed_calls = Arc::new(AtomicU64::new(0));
+        let shard_calls = Arc::new(AtomicU64::new(0));
+        let factory = shard_mock_factory(
+            Arc::clone(&embed_calls),
+            Arc::clone(&shard_calls),
+            false,
+            false,
+        );
+        let pipeline = Pipeline::start(
+            model(),
+            vec![Arc::clone(&factory), factory],
+            pcfg(4, 2, Duration::from_micros(100)),
+        );
+        assert_eq!(pipeline.wait_ready(), 2);
+        assert!(pipeline.submit(Query::topk(
+            0,
+            Graph::new(2, vec![(0, 1)], vec![0, 1]),
+            tiny_corpus(1),
+            1,
+        )));
+        let metrics = pipeline.finish();
+        assert_eq!(metrics.scored, 1);
+        assert_eq!(shard_calls.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.topk_shards.mean(), 1.0);
     }
 
     #[test]

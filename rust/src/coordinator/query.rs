@@ -142,6 +142,21 @@ pub struct StageTiming {
     pub execute_us: f64,
 }
 
+/// How a top-k corpus query was spread across executor lanes — the
+/// scatter/gather visibility the serve report renders as
+/// `topk shards mean` / `topk lane spread (ms)` (DESIGN.md S15).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardingInfo {
+    /// Corpus shards the query was scattered into (1 = served whole on
+    /// one lane — the fallback when fewer than two capable lanes have
+    /// published, or the corpus is too small to split).
+    pub shards: usize,
+    /// Slowest minus fastest shard execute time, µs: the lane-balance
+    /// witness (a small spread means the contiguous-range partitioning
+    /// kept every lane equally busy; 0 for unsharded queries).
+    pub spread_us: f64,
+}
+
 /// Completed query with timing and engine telemetry.
 #[derive(Debug, Clone)]
 pub struct QueryResult {
@@ -156,11 +171,16 @@ pub struct QueryResult {
     /// Per-stage latency split (zeros for rejects).
     pub stage: StageTiming,
     /// Engine telemetry for this query's slot (cycle report, DMA split,
-    /// per-slot CPU time — whatever the engine's caps declare).
+    /// per-slot CPU time — whatever the engine's caps declare). A
+    /// gathered top-k query carries the merged telemetry of all its
+    /// shards.
     pub telemetry: QueryTelemetry,
     /// Name of the engine that served this query (from its caps), if it
-    /// reached one.
+    /// reached one (the embedder lane's engine for scattered queries).
     pub engine: Option<Arc<str>>,
+    /// Scatter/gather shape for served top-k queries; `None` for pair
+    /// queries, rejects and errors.
+    pub sharding: Option<ShardingInfo>,
 }
 
 impl QueryResult {
@@ -174,6 +194,7 @@ impl QueryResult {
             stage: StageTiming::default(),
             telemetry: QueryTelemetry::default(),
             engine: None,
+            sharding: None,
         }
     }
 
@@ -187,12 +208,19 @@ impl QueryResult {
             stage: StageTiming::default(),
             telemetry: QueryTelemetry::default(),
             engine: None,
+            sharding: None,
         }
     }
 
     /// Tag this result with the engine name that produced it.
     pub fn with_engine(mut self, engine: Arc<str>) -> Self {
         self.engine = Some(engine);
+        self
+    }
+
+    /// Tag this result with its scatter/gather shape.
+    pub fn with_sharding(mut self, sharding: ShardingInfo) -> Self {
+        self.sharding = Some(sharding);
         self
     }
 
@@ -231,7 +259,16 @@ mod tests {
             stage: StageTiming::default(),
             telemetry: QueryTelemetry::default(),
             engine: None,
+            sharding: None,
         }
+    }
+
+    #[test]
+    fn sharding_tag_rides_the_result() {
+        let r = scored(Outcome::TopK(vec![(3, 0.9)]));
+        assert_eq!(r.sharding, None);
+        let r = r.with_sharding(ShardingInfo { shards: 3, spread_us: 120.0 });
+        assert_eq!(r.sharding, Some(ShardingInfo { shards: 3, spread_us: 120.0 }));
     }
 
     #[test]

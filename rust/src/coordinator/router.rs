@@ -15,6 +15,7 @@
 //! `native,sim` deployment keeps serving even if one backend's
 //! artifacts are missing.
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::graph::Graph;
@@ -184,6 +185,46 @@ impl<T> CapsRouter<T> {
     /// Number of lanes (dead or alive).
     pub fn lanes(&self) -> usize {
         self.lanes.len()
+    }
+
+    /// Number of lanes whose *published* caps satisfy `pred`. Lanes
+    /// still constructing do not count: a scatter must know its fan-out
+    /// before splitting, so during the startup window corpus queries
+    /// take the whole-query path instead of guessing at lane counts.
+    pub fn count_satisfying(&self, pred: impl Fn(&EngineCaps) -> bool + Copy) -> usize {
+        self.lanes.iter().filter(|(_, lc)| lc.satisfies(pred)).count()
+    }
+
+    /// Among lanes whose *published* caps satisfy `pred`, the engine
+    /// name with the most lanes, and that count. Scatter sizing wants
+    /// the largest *same-kind* pool — shards of one query must land on
+    /// identical engines, because per-shard telemetry is
+    /// policy-specific (a `native` shard's executed-work MacCounts
+    /// summed with a `native-dense` shard's padded-schedule counts
+    /// would corrupt the per-engine comparison rows the metrics keep
+    /// apart). Ties break toward the lexicographically smaller name so
+    /// the choice is deterministic.
+    pub fn largest_cohort(
+        &self,
+        pred: impl Fn(&EngineCaps) -> bool + Copy,
+    ) -> Option<(String, usize)> {
+        let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+        for (_, lc) in &self.lanes {
+            if let Some(Ok(caps)) = lc.get() {
+                if pred(&caps) {
+                    *counts.entry(caps.name).or_insert(0) += 1;
+                }
+            }
+        }
+        // BTreeMap iterates names ascending; strict `>` keeps the
+        // smallest name among equal counts.
+        let mut best: Option<(String, usize)> = None;
+        for (name, n) in counts {
+            if best.as_ref().is_none_or(|(_, b)| n > *b) {
+                best = Some((name, n));
+            }
+        }
+        best
     }
 
     /// Dispatch to the next healthy (or still-constructing) lane in
@@ -447,6 +488,54 @@ mod tests {
         // Unfiltered traffic still round-robins over live lanes.
         assert!(router.send(10).is_sent());
         assert_eq!(rx1.try_recv().unwrap(), 10);
+    }
+
+    #[test]
+    fn count_satisfying_sees_only_published_caps() {
+        let (tx1, _rx1) = channel::<u64>("lane.0", 4, SendPolicy::Block);
+        let (tx2, _rx2) = channel::<u64>("lane.1", 4, SendPolicy::Block);
+        let (tx3, _rx3) = channel::<u64>("lane.2", 4, SendPolicy::Block);
+        let (capable, plain, pending) = (LaneCaps::new(), LaneCaps::new(), LaneCaps::new());
+        capable.set(Ok(caps("a").with_corpus_scoring()));
+        plain.set(Ok(caps("b")));
+        let router = CapsRouter::new(vec![(tx1, capable), (tx2, plain), (tx3, pending)]);
+        assert_eq!(router.count_satisfying(|c| c.supports_corpus), 1);
+        assert_eq!(router.count_satisfying(|_| true), 2, "unset lanes never count");
+        // A published failure counts for nothing either.
+        router.lanes[2].1.set(Err(EngineError::Unavailable { reason: "x".into() }));
+        assert_eq!(router.count_satisfying(|_| true), 2);
+    }
+
+    #[test]
+    fn largest_cohort_groups_by_engine_name() {
+        let (tx1, _rx1) = channel::<u64>("lane.0", 4, SendPolicy::Block);
+        let (tx2, _rx2) = channel::<u64>("lane.1", 4, SendPolicy::Block);
+        let (tx3, _rx3) = channel::<u64>("lane.2", 4, SendPolicy::Block);
+        let (tx4, _rx4) = channel::<u64>("lane.3", 4, SendPolicy::Block);
+        let cells: Vec<_> = (0..4).map(|_| LaneCaps::new()).collect();
+        cells[0].set(Ok(caps("sim").with_corpus_scoring()));
+        cells[1].set(Ok(caps("native").with_corpus_scoring()));
+        cells[2].set(Ok(caps("sim").with_corpus_scoring()));
+        // cells[3] never publishes: pending lanes count for nothing.
+        let router = CapsRouter::new(vec![
+            (tx1, Arc::clone(&cells[0])),
+            (tx2, Arc::clone(&cells[1])),
+            (tx3, Arc::clone(&cells[2])),
+            (tx4, Arc::clone(&cells[3])),
+        ]);
+        assert_eq!(
+            router.largest_cohort(|c| c.supports_corpus),
+            Some(("sim".into(), 2)),
+            "the biggest same-name pool wins"
+        );
+        assert_eq!(router.largest_cohort(|c| c.reports_cycles), None);
+        // Equal-sized cohorts: the lexicographically smaller name, so
+        // scatter sizing is deterministic.
+        cells[3].set(Ok(caps("native").with_corpus_scoring()));
+        assert_eq!(
+            router.largest_cohort(|c| c.supports_corpus),
+            Some(("native".into(), 2))
+        );
     }
 
     #[test]

@@ -19,9 +19,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 
+use std::collections::HashMap;
+
 use crate::graph::dataset::{random_pairs, GraphDb};
 use crate::graph::generate::{generate, Family};
 use crate::nn::config::ArtifactsMeta;
+use crate::runtime::embed_cache::{EmbedCache, DEFAULT_CAPACITY};
 use crate::runtime::{EngineBuilder, EngineFactory, EngineKind};
 use crate::util::rng::Rng;
 
@@ -103,14 +106,27 @@ impl ServeConfig {
     /// One [`EngineFactory`] per worker lane, cycling through the
     /// requested kinds (`--engine native,sim` with 4 workers yields
     /// native, sim, native, sim). At least one lane per kind.
+    ///
+    /// Lanes of the same kind share one embedding cache (the server
+    /// constructs the `Arc<EmbedCache>` here, one per distinct kind —
+    /// DESIGN.md S15): corpus candidates warmed by one lane hit on its
+    /// siblings, and a scattered top-k query costs one GCN forward per
+    /// unique graph across the whole pipeline, not per lane. Kinds
+    /// never share a cache with each other — cached work counters are
+    /// policy-specific (`native` vs `native-dense`).
     fn lane_factories(&self) -> Vec<EngineFactory> {
+        let mut caches: HashMap<EngineKind, Arc<EmbedCache>> = HashMap::new();
         (0..self.lanes())
             .map(|w| {
-                EngineBuilder::new(
-                    self.engines[w % self.engines.len()],
-                    self.artifacts_dir.clone(),
-                )
-                .into_factory()
+                let kind = self.engines[w % self.engines.len()];
+                let cache = Arc::clone(
+                    caches
+                        .entry(kind)
+                        .or_insert_with(|| Arc::new(EmbedCache::new(DEFAULT_CAPACITY))),
+                );
+                EngineBuilder::new(kind, self.artifacts_dir.clone())
+                    .with_embed_cache(cache)
+                    .into_factory()
             })
             .collect()
     }
@@ -198,6 +214,13 @@ fn run_serve(cfg: &ServeConfig, pace_qps: Option<f64>) -> Result<(Metrics, f64, 
         // the seed → workload mapping identical across paced and
         // unpaced runs (and across releases).
         let schedule = pace_qps.map(|rate| poisson_schedule(&mut rng, rate, cfg.queries));
+        // Engine construction overlapped workload synthesis above; wait
+        // for the caps handshakes (outside the measured window) so
+        // capability-dependent routing — the top-k scatter across
+        // corpus-capable lanes in particular — is in effect from the
+        // first query, not from whenever the slowest lane finished
+        // loading. Failed lanes publish too: this never hangs.
+        pipeline.wait_ready();
         let t0 = Instant::now();
         (pump(&pipeline, queries, schedule), t0)
     } else {
@@ -206,6 +229,9 @@ fn run_serve(cfg: &ServeConfig, pace_qps: Option<f64>) -> Result<(Metrics, f64, 
         let pairs = random_pairs(&mut rng, &db, cfg.queries);
         let queries = pairs.into_iter().map(|q| Query::new(q.id, q.g1, q.g2));
         let schedule = pace_qps.map(|rate| poisson_schedule(&mut rng, rate, cfg.queries));
+        // Same handshake wait as the corpus branch: steady-state
+        // serving is what's measured, not engine construction.
+        pipeline.wait_ready();
         let t0 = Instant::now();
         (pump(&pipeline, queries, schedule), t0)
     };
@@ -395,6 +421,12 @@ mod tests {
         let hit_rate: f64 = t.get("embed cache hit rate").unwrap().parse().unwrap();
         assert!(hit_rate > 0.0, "{}", t.render());
         assert!(t.get("embed cache entries").is_some(), "{}", t.render());
+        // run_serve waits for both caps handshakes before submitting,
+        // so with two shard-capable native lanes every top-k query is
+        // deterministically scattered into exactly two shards.
+        let shards: f64 = t.get("topk shards mean").unwrap().parse().unwrap();
+        assert_eq!(shards, 2.0, "{}", t.render());
+        assert!(t.get("topk lane spread (ms)").is_some(), "{}", t.render());
     }
 
     #[test]
@@ -409,6 +441,7 @@ mod tests {
             batch_timeout_us: 100,
             seed: 7,
             pipeline_depth: 0,
+            ..ServeConfig::default()
         };
         let t = serve_workload(&cfg).unwrap();
         let scored: f64 = t.rows[0][1].parse().unwrap();

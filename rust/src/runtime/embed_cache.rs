@@ -110,8 +110,10 @@ impl Shard {
 }
 
 /// Sharded LRU embedding cache. `get`/`insert` are `&self` (a mutex per
-/// shard), so an engine can consult its cache from `&self` accessors and
-/// a cache could be shared across lanes later without an API change.
+/// shard), so an engine can consult its cache from `&self` accessors
+/// and one cache can be shared across same-kind lanes behind an `Arc`
+/// (injected through `EngineBuilder::with_embed_cache` — DESIGN.md
+/// S15): corpus candidates warmed by one lane hit on every sibling.
 pub struct EmbedCache {
     shards: Vec<Mutex<Shard>>,
     hits: AtomicU64,
@@ -197,6 +199,15 @@ impl EmbedCache {
     }
 }
 
+impl std::fmt::Debug for EmbedCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EmbedCache")
+            .field("shards", &self.shards.len())
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,6 +287,72 @@ mod tests {
         assert!(c.get(key(8)).is_none());
         let s = c.stats();
         assert_eq!((s.hits, s.misses, s.entries), (2, 2, 1));
+    }
+
+    #[test]
+    fn shared_cache_concurrent_accounting_stays_exact() {
+        // The cache is now shared across executor lanes (DESIGN.md
+        // S15), so the accounting must survive real contention, not
+        // just the single-threaded paths the other tests drive. Hammer
+        // `get`/`insert` from N threads and check the counters add up
+        // exactly afterwards — and that `len() <= capacity` holds at
+        // every moment any thread observes it.
+        use std::sync::Arc;
+        use std::thread;
+        const THREADS: u64 = 4;
+        const OPS: u64 = 2000;
+        const KEYS: usize = 48;
+        // Two regimes: ample capacity (no evictions — entry count must
+        // equal the distinct keys touched) and tight capacity (evictions
+        // churn — the capacity bound and the get accounting still hold).
+        for capacity in [1024usize, 16] {
+            let cache = Arc::new(EmbedCache::with_shards(capacity, DEFAULT_SHARDS));
+            let handles: Vec<thread::JoinHandle<u64>> = (0..THREADS)
+                .map(|t| {
+                    let cache = Arc::clone(&cache);
+                    thread::spawn(move || {
+                        let mut rng = Rng::new(1000 + t);
+                        let mut gets = 0u64;
+                        for _ in 0..OPS {
+                            let k = key(rng.below(KEYS) as u128 + 1);
+                            if rng.below(2) == 0 {
+                                cache.insert(k, embed(t as f32));
+                            } else {
+                                let _ = cache.get(k);
+                                gets += 1;
+                            }
+                            assert!(
+                                cache.len() <= capacity,
+                                "len {} > capacity {capacity} under contention",
+                                cache.len()
+                            );
+                        }
+                        gets
+                    })
+                })
+                .collect();
+            let total_gets: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            let s = cache.stats();
+            assert_eq!(
+                s.hits + s.misses,
+                total_gets,
+                "a get must count exactly one hit or miss (capacity {capacity})"
+            );
+            assert_eq!(s.entries as usize, cache.len());
+            assert!(cache.len() <= capacity);
+            if capacity >= KEYS {
+                // Ample: nothing may be displaced, and every distinct
+                // key some thread inserted is resident. Every key in
+                // 1..=KEYS is eventually inserted with overwhelming
+                // probability (4×2000 draws over 48 keys), but assert
+                // only what is certain: entries == distinct keys seen.
+                assert_eq!(s.evictions, 0, "ample cache must not evict");
+                let resident = (1..=KEYS as u128).filter(|&v| cache.get(key(v)).is_some()).count();
+                assert_eq!(resident, s.entries as usize);
+            } else {
+                assert!(s.evictions > 0, "tight cache must have churned");
+            }
+        }
     }
 
     #[test]

@@ -131,6 +131,10 @@ pub struct EngineCaps {
     pub reports_embed_cache: bool,
     /// Implements [`Engine::score_corpus`] (one-vs-many top-k search).
     pub supports_corpus: bool,
+    /// Implements the scatter/gather pair [`Engine::embed_query`] +
+    /// [`Engine::score_corpus_with`]: a corpus query may be split into
+    /// shards across lanes of this engine (DESIGN.md S15).
+    pub supports_corpus_shards: bool,
 }
 
 impl EngineCaps {
@@ -156,6 +160,7 @@ impl EngineCaps {
             reports_macs: false,
             reports_embed_cache: false,
             supports_corpus: false,
+            supports_corpus_shards: false,
         }
     }
 
@@ -186,6 +191,13 @@ impl EngineCaps {
     /// Mark the engine as implementing [`Engine::score_corpus`].
     pub fn with_corpus_scoring(mut self) -> Self {
         self.supports_corpus = true;
+        self
+    }
+
+    /// Mark the engine as implementing [`Engine::embed_query`] +
+    /// [`Engine::score_corpus_with`] (sharded corpus scoring).
+    pub fn with_corpus_sharding(mut self) -> Self {
+        self.supports_corpus_shards = true;
         self
     }
 
@@ -297,6 +309,75 @@ pub struct QueryTelemetry {
     pub embed_cache: Option<EmbedCacheTelemetry>,
 }
 
+impl QueryTelemetry {
+    /// Fold `other` into `self` as work that ran *after* `self` on the
+    /// same lane (the embedder lane's query embed followed by its shard
+    /// fan-out): every counter sums, cycle reports sum component-wise,
+    /// the cache-entries gauge keeps the max.
+    pub fn merge_serial(&mut self, other: &QueryTelemetry) {
+        self.cycles = merge_opt(self.cycles, other.cycles, |a, b| CycleReport {
+            interval: a.interval + b.interval,
+            latency: a.latency + b.latency,
+        });
+        self.exec = merge_opt(self.exec, other.exec, |a, b| ExecTiming {
+            upload_us: a.upload_us + b.upload_us,
+            execute_us: a.execute_us + b.execute_us,
+            download_us: a.download_us + b.download_us,
+        });
+        self.cpu_us = merge_opt(self.cpu_us, other.cpu_us, |a, b| a + b);
+        self.macs = merge_opt(self.macs, other.macs, merge_macs);
+        self.embed_cache = merge_opt(self.embed_cache, other.embed_cache, merge_cache);
+    }
+
+    /// Fold `other` into `self` as work that ran *concurrently* on a
+    /// sibling lane (gather-stage shard merge): work counters (MACs,
+    /// CPU time, cache activity) still sum — they are total work — but
+    /// cycle reports take the component-wise max, because parallel
+    /// shards overlap on independent modeled accelerators. This is how
+    /// the cycle model shows the scatter's speedup: the merged query
+    /// charges the slowest shard, not the sum of all shards.
+    pub fn merge_parallel(&mut self, other: &QueryTelemetry) {
+        self.cycles = merge_opt(self.cycles, other.cycles, |a, b| CycleReport {
+            interval: a.interval.max(b.interval),
+            latency: a.latency.max(b.latency),
+        });
+        self.exec = merge_opt(self.exec, other.exec, |a, b| ExecTiming {
+            upload_us: a.upload_us.max(b.upload_us),
+            execute_us: a.execute_us.max(b.execute_us),
+            download_us: a.download_us.max(b.download_us),
+        });
+        self.cpu_us = merge_opt(self.cpu_us, other.cpu_us, |a, b| a + b);
+        self.macs = merge_opt(self.macs, other.macs, merge_macs);
+        self.embed_cache = merge_opt(self.embed_cache, other.embed_cache, merge_cache);
+    }
+}
+
+/// Combine two optional telemetry fields: one side absent keeps the
+/// other, both present combine via `f`.
+fn merge_opt<T: Copy>(a: Option<T>, b: Option<T>, f: impl FnOnce(T, T) -> T) -> Option<T> {
+    match (a, b) {
+        (Some(a), Some(b)) => Some(f(a, b)),
+        (a, b) => a.or(b),
+    }
+}
+
+fn merge_macs(a: MacCounts, b: MacCounts) -> MacCounts {
+    MacCounts {
+        macs: a.macs + b.macs,
+        ft_elements: a.ft_elements + b.ft_elements,
+        agg_elements: a.agg_elements + b.agg_elements,
+    }
+}
+
+fn merge_cache(a: EmbedCacheTelemetry, b: EmbedCacheTelemetry) -> EmbedCacheTelemetry {
+    EmbedCacheTelemetry {
+        hits: a.hits + b.hits,
+        misses: a.misses + b.misses,
+        // A gauge, not a counter: the biggest cache state observed.
+        entries: a.entries.max(b.entries),
+    }
+}
+
 /// What one [`Engine::score_batch`] call returns: one similarity score
 /// per slot (padding slots included — the caller truncates) plus one
 /// [`QueryTelemetry`] per slot.
@@ -314,6 +395,19 @@ impl BatchOutput {
         let telemetry = vec![QueryTelemetry::default(); scores.len()];
         BatchOutput { scores, telemetry }
     }
+}
+
+/// What one [`Engine::embed_query`] call returns: the cached embedding
+/// of a scattered corpus query's graph — computed once at scatter time
+/// and shipped to every sibling lane's shard job — plus the telemetry
+/// of producing it (one cache probe; a miss is one GCN forward).
+#[derive(Debug, Clone)]
+pub struct QueryEmbed {
+    /// The post-attention embedding (plus the work that produced it),
+    /// behind `Arc` so shipping it across lanes is a pointer clone.
+    pub embed: Arc<embed_cache::CachedEmbed>,
+    /// Cost of this embed: cache probe, executed work, cycles.
+    pub telemetry: QueryTelemetry,
 }
 
 /// What one [`Engine::score_corpus`] call returns: one similarity per
@@ -393,22 +487,42 @@ pub(crate) fn check_corpus_shapes(
     query: &EncodedGraph,
     corpus: &[EncodedGraph],
 ) -> Result<(), EngineError> {
-    let shape = |g: &EncodedGraph| {
-        let n = g.mask.len();
-        (n, if n == 0 { 0 } else { g.h0.len() / n })
-    };
-    let mismatch = |what: String, got: (usize, usize)| EngineError::InvalidInput {
-        detail: format!(
-            "{what} encoded for (n_max, labels) = {got:?}, engine expects ({n_max}, {num_labels})"
-        ),
-    };
-    if shape(query) != (n_max, num_labels) {
-        return Err(mismatch("query graph".into(), shape(query)));
-    }
+    check_graph_shape(n_max, num_labels, "query graph", query)?;
+    check_shard_shapes(n_max, num_labels, "corpus", corpus)
+}
+
+/// The candidate half of [`check_corpus_shapes`]. `what` labels the
+/// slice in errors: whole-corpus callers pass `"corpus"`, shard jobs
+/// pass `"shard"` — a shard only knows its *local* indices, so calling
+/// a bad candidate `corpus[i]` would point operators at the wrong
+/// entry of the full corpus.
+pub(crate) fn check_shard_shapes(
+    n_max: usize,
+    num_labels: usize,
+    what: &str,
+    corpus: &[EncodedGraph],
+) -> Result<(), EngineError> {
     for (i, g) in corpus.iter().enumerate() {
-        if shape(g) != (n_max, num_labels) {
-            return Err(mismatch(format!("corpus[{i}]"), shape(g)));
-        }
+        check_graph_shape(n_max, num_labels, &format!("{what}[{i}]"), g)?;
+    }
+    Ok(())
+}
+
+pub(crate) fn check_graph_shape(
+    n_max: usize,
+    num_labels: usize,
+    what: &str,
+    g: &EncodedGraph,
+) -> Result<(), EngineError> {
+    let n = g.mask.len();
+    let got = (n, if n == 0 { 0 } else { g.h0.len() / n });
+    if got != (n_max, num_labels) {
+        return Err(EngineError::InvalidInput {
+            detail: format!(
+                "{what} encoded for (n_max, labels) = {got:?}, \
+                 engine expects ({n_max}, {num_labels})"
+            ),
+        });
     }
     Ok(())
 }
@@ -450,6 +564,36 @@ pub trait Engine {
             reason: format!("{} does not support corpus scoring", self.caps().name),
         })
     }
+
+    /// Scatter-time half of a sharded corpus query: embed `query` once
+    /// (through the engine's embedding cache where it has one) and
+    /// return the embedding for shipment to sibling lanes' shard jobs —
+    /// this is what keeps a scattered query at one GCN forward for the
+    /// query graph instead of one per lane. Engines without the
+    /// `supports_corpus_shards` cap keep this default, a typed error.
+    fn embed_query(&mut self, query: &EncodedGraph) -> Result<QueryEmbed, EngineError> {
+        let _ = query;
+        Err(EngineError::Unavailable {
+            reason: format!("{} does not support sharded corpus scoring", self.caps().name),
+        })
+    }
+
+    /// Shard-side half of a sharded corpus query: fan the NTN+FCN tail
+    /// of a *precomputed* query embedding (`query_hg`, from
+    /// [`Engine::embed_query`] on whichever lane scattered first) over
+    /// one corpus shard. Scores must be bit-identical to
+    /// [`Engine::score_corpus`] over the same candidates. Default: the
+    /// same typed error as [`Engine::embed_query`].
+    fn score_corpus_with(
+        &mut self,
+        query_hg: &[f32],
+        shard: &[EncodedGraph],
+    ) -> Result<CorpusOutput, EngineError> {
+        let _ = (query_hg, shard);
+        Err(EngineError::Unavailable {
+            reason: format!("{} does not support sharded corpus scoring", self.caps().name),
+        })
+    }
 }
 
 /// Typed engine construction (replaces string dispatch): binds an
@@ -461,6 +605,9 @@ pub trait Engine {
 pub struct EngineBuilder {
     kind: EngineKind,
     artifacts_dir: PathBuf,
+    /// Embedding cache the built engine serves from, when injected.
+    /// `None` means each built engine constructs its own private cache.
+    cache: Option<Arc<embed_cache::EmbedCache>>,
 }
 
 impl EngineBuilder {
@@ -469,7 +616,22 @@ impl EngineBuilder {
         EngineBuilder {
             kind,
             artifacts_dir: artifacts_dir.into(),
+            cache: None,
         }
+    }
+
+    /// Inject a shared embedding cache: every engine this builder (and
+    /// its clones) constructs serves from `cache` instead of a private
+    /// one, so corpus candidates warmed by one lane hit on every
+    /// same-kind sibling lane (DESIGN.md S15). Share caches only across
+    /// lanes of the *same* [`EngineKind`]: embeddings are bit-identical
+    /// across kinds built from one artifacts directory, but the cached
+    /// work counters are policy-specific (a dense lane reading a
+    /// sparse lane's `MacCounts` would corrupt the Table-6 comparison
+    /// rows). Engines without a cache (the PJRT kinds) ignore it.
+    pub fn with_embed_cache(mut self, cache: Arc<embed_cache::EmbedCache>) -> Self {
+        self.cache = Some(cache);
+        self
     }
 
     /// The kind this builder constructs.
@@ -487,6 +649,13 @@ impl EngineBuilder {
         let unavailable = |err: anyhow::Error| EngineError::Unavailable {
             reason: format!("constructing {} engine: {err:#}", self.kind),
         };
+        let native = || -> Result<native::NativeEngine, EngineError> {
+            let engine = native::NativeEngine::load(&self.artifacts_dir).map_err(unavailable)?;
+            Ok(match &self.cache {
+                Some(cache) => engine.with_cache(Arc::clone(cache)),
+                None => engine,
+            })
+        };
         Ok(match self.kind {
             EngineKind::Xla => {
                 Box::new(pjrt::XlaEngine::load(&self.artifacts_dir).map_err(unavailable)?)
@@ -494,22 +663,22 @@ impl EngineBuilder {
             EngineKind::XlaFused => {
                 Box::new(pjrt::XlaEngine::load_fused(&self.artifacts_dir).map_err(unavailable)?)
             }
-            EngineKind::Native => {
-                Box::new(native::NativeEngine::load(&self.artifacts_dir).map_err(unavailable)?)
+            EngineKind::Native => Box::new(native()?),
+            EngineKind::NativeDense => {
+                Box::new(native()?.with_policy(crate::nn::simgnn::SparsePolicy::Dense))
             }
-            EngineKind::NativeDense => Box::new(
-                native::NativeEngine::load(&self.artifacts_dir)
-                    .map_err(unavailable)?
-                    .with_policy(crate::nn::simgnn::SparsePolicy::Dense),
-            ),
-            EngineKind::Sim => Box::new(
-                crate::sim::engine::SimEngine::load(
+            EngineKind::Sim => {
+                let engine = crate::sim::engine::SimEngine::load(
                     &self.artifacts_dir,
                     crate::sim::config::ArchConfig::spa_gcn(),
                     crate::sim::platform::U280,
                 )
-                .map_err(unavailable)?,
-            ),
+                .map_err(unavailable)?;
+                Box::new(match &self.cache {
+                    Some(cache) => engine.with_cache(Arc::clone(cache)),
+                    None => engine,
+                })
+            }
         })
     }
 
@@ -544,14 +713,17 @@ mod tests {
         let caps = EngineCaps::new("t", vec![1], 8, 4);
         assert!(!caps.reports_cycles && !caps.reports_exec_timing && !caps.reports_macs);
         assert!(!caps.reports_embed_cache && !caps.supports_corpus);
+        assert!(!caps.supports_corpus_shards);
         let caps = caps
             .with_cycle_reports()
             .with_exec_timing()
             .with_mac_counts()
             .with_embed_cache()
-            .with_corpus_scoring();
+            .with_corpus_scoring()
+            .with_corpus_sharding();
         assert!(caps.reports_cycles && caps.reports_exec_timing && caps.reports_macs);
         assert!(caps.reports_embed_cache && caps.supports_corpus);
+        assert!(caps.supports_corpus_shards);
     }
 
     #[test]
@@ -573,6 +745,55 @@ mod tests {
         let enc = crate::graph::encode::encode(&g, 8, 4).unwrap();
         let err = e.score_corpus(&enc, std::slice::from_ref(&enc)).unwrap_err();
         assert!(matches!(err, EngineError::Unavailable { ref reason } if reason.contains("bare")));
+        // The sharded pair defaults to the same typed refusal.
+        let err = e.embed_query(&enc).unwrap_err();
+        assert!(matches!(err, EngineError::Unavailable { ref reason } if reason.contains("bare")));
+        let err = e
+            .score_corpus_with(&[0.0; 4], std::slice::from_ref(&enc))
+            .unwrap_err();
+        assert!(matches!(err, EngineError::Unavailable { ref reason } if reason.contains("bare")));
+    }
+
+    #[test]
+    fn telemetry_merges_serial_sum_and_parallel_max() {
+        let a = QueryTelemetry {
+            cycles: Some(CycleReport { interval: 100, latency: 150 }),
+            cpu_us: Some(10.0),
+            macs: Some(MacCounts { macs: 5, ft_elements: 6, agg_elements: 7 }),
+            embed_cache: Some(EmbedCacheTelemetry { hits: 1, misses: 2, entries: 3 }),
+            ..QueryTelemetry::default()
+        };
+        let b = QueryTelemetry {
+            cycles: Some(CycleReport { interval: 40, latency: 400 }),
+            cpu_us: Some(4.0),
+            macs: Some(MacCounts { macs: 50, ft_elements: 60, agg_elements: 70 }),
+            embed_cache: Some(EmbedCacheTelemetry { hits: 10, misses: 20, entries: 2 }),
+            ..QueryTelemetry::default()
+        };
+        let mut serial = a.clone();
+        serial.merge_serial(&b);
+        assert_eq!(serial.cycles, Some(CycleReport { interval: 140, latency: 550 }));
+        assert_eq!(serial.cpu_us, Some(14.0));
+        assert_eq!(serial.macs, Some(MacCounts { macs: 55, ft_elements: 66, agg_elements: 77 }));
+        assert_eq!(
+            serial.embed_cache,
+            Some(EmbedCacheTelemetry { hits: 11, misses: 22, entries: 3 })
+        );
+        // Parallel: cycles take the max (shards overlap on independent
+        // modeled accelerators); work counters still sum.
+        let mut parallel = a.clone();
+        parallel.merge_parallel(&b);
+        assert_eq!(parallel.cycles, Some(CycleReport { interval: 100, latency: 400 }));
+        assert_eq!(parallel.cpu_us, Some(14.0));
+        assert_eq!(parallel.macs, serial.macs);
+        assert_eq!(parallel.embed_cache, serial.embed_cache);
+        // One side absent keeps the other, for every field.
+        let mut one_sided = QueryTelemetry::default();
+        one_sided.merge_parallel(&a);
+        assert_eq!(one_sided, a);
+        let mut keeps = a.clone();
+        keeps.merge_serial(&QueryTelemetry::default());
+        assert_eq!(keeps, a);
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::nn::weights::Weights;
 use super::embed_cache::{CachedEmbed, EmbedCache};
 use super::{
     BatchOutput, CorpusOutput, EmbedCacheTelemetry, Engine, EngineCaps, EngineError, MacCounts,
-    QueryTelemetry,
+    QueryEmbed, QueryTelemetry,
 };
 
 /// CPU reference engine; any batch size (it just loops over pairs).
@@ -43,7 +43,10 @@ pub struct NativeEngine {
     weights: Weights,
     caps: EngineCaps,
     policy: SparsePolicy,
-    cache: EmbedCache,
+    /// Behind `Arc` so same-kind lanes can serve from one shared cache
+    /// (injected via `EngineBuilder::with_embed_cache`, DESIGN.md S15);
+    /// a lone engine owns a private one.
+    cache: Arc<EmbedCache>,
 }
 
 impl NativeEngine {
@@ -67,13 +70,14 @@ impl NativeEngine {
         let caps = EngineCaps::new("native-cpu", ladder, cfg.n_max, cfg.num_labels)
             .with_mac_counts()
             .with_embed_cache()
-            .with_corpus_scoring();
+            .with_corpus_scoring()
+            .with_corpus_sharding();
         NativeEngine {
             cfg,
             weights,
             caps,
             policy: SparsePolicy::Csr,
-            cache: EmbedCache::new(super::embed_cache::DEFAULT_CAPACITY),
+            cache: Arc::new(EmbedCache::new(super::embed_cache::DEFAULT_CAPACITY)),
         }
     }
 
@@ -85,6 +89,14 @@ impl NativeEngine {
             SparsePolicy::Csr => "native-cpu".into(),
             SparsePolicy::Dense => "native-cpu-dense".into(),
         };
+        self
+    }
+
+    /// Serve from a shared embedding cache instead of the private one
+    /// (same-kind lanes only — cached `MacCounts` are policy-specific,
+    /// see `EngineBuilder::with_embed_cache`).
+    pub fn with_cache(mut self, cache: Arc<EmbedCache>) -> Self {
+        self.cache = cache;
         self
     }
 
@@ -162,6 +174,29 @@ impl NativeEngine {
             executed.ft_elements += c.macs.ft_elements;
             executed.agg_elements += c.macs.agg_elements;
         }
+    }
+
+    /// Shared NTN+FCN fan-out of `score_corpus` / `score_corpus_with`:
+    /// one score per candidate against a resolved query embedding, each
+    /// candidate embedded through the cache, work and cache activity
+    /// accumulated into the caller's counters. One code path means the
+    /// sharded and unsharded scores cannot diverge.
+    fn fan_out_tail(
+        &self,
+        query_hg: &[f32],
+        shard: &[EncodedGraph],
+        executed: &mut MacCounts,
+        cache_stats: &mut EmbedCacheTelemetry,
+    ) -> Vec<f32> {
+        let mut scores = Vec::with_capacity(shard.len());
+        for g in shard {
+            let (c, hit) = self.embed_cached(g);
+            Self::tally(executed, cache_stats, &c, hit);
+            // Same orientation as the pairwise path: (query, candidate).
+            let (_, score) = pair_score(&self.cfg, &self.weights, query_hg, &c.hg);
+            scores.push(score);
+        }
+        scores
     }
 }
 
@@ -269,14 +304,57 @@ impl Engine for NativeEngine {
         let mut cache_stats = EmbedCacheTelemetry::default();
         let (cq, hitq) = self.embed_cached(query);
         Self::tally(&mut executed, &mut cache_stats, &cq, hitq);
-        let mut scores = Vec::with_capacity(corpus.len());
-        for g in corpus {
-            let (c, hit) = self.embed_cached(g);
-            Self::tally(&mut executed, &mut cache_stats, &c, hit);
-            // Same orientation as the pairwise path: (query, candidate).
-            let (_, score) = pair_score(&self.cfg, &self.weights, &cq.hg, &c.hg);
-            scores.push(score);
+        let scores = self.fan_out_tail(&cq.hg, corpus, &mut executed, &mut cache_stats);
+        cache_stats.entries = self.cache.len() as u64;
+        Ok(CorpusOutput {
+            scores,
+            telemetry: QueryTelemetry {
+                cpu_us: Some(t0.elapsed().as_secs_f64() * 1e6),
+                macs: Some(executed),
+                embed_cache: Some(cache_stats),
+                ..QueryTelemetry::default()
+            },
+        })
+    }
+
+    fn embed_query(&mut self, query: &EncodedGraph) -> Result<QueryEmbed, EngineError> {
+        super::check_graph_shape(self.cfg.n_max, self.cfg.num_labels, "query graph", query)?;
+        let t0 = Instant::now();
+        let mut executed = MacCounts::default();
+        let mut cache_stats = EmbedCacheTelemetry::default();
+        let (cq, hitq) = self.embed_cached(query);
+        Self::tally(&mut executed, &mut cache_stats, &cq, hitq);
+        cache_stats.entries = self.cache.len() as u64;
+        Ok(QueryEmbed {
+            embed: cq,
+            telemetry: QueryTelemetry {
+                cpu_us: Some(t0.elapsed().as_secs_f64() * 1e6),
+                macs: Some(executed),
+                embed_cache: Some(cache_stats),
+                ..QueryTelemetry::default()
+            },
+        })
+    }
+
+    fn score_corpus_with(
+        &mut self,
+        query_hg: &[f32],
+        shard: &[EncodedGraph],
+    ) -> Result<CorpusOutput, EngineError> {
+        super::check_shard_shapes(self.cfg.n_max, self.cfg.num_labels, "shard", shard)?;
+        if query_hg.len() != self.cfg.embed_dim() {
+            return Err(EngineError::InvalidInput {
+                detail: format!(
+                    "query embedding has {} floats, model embeds into {}",
+                    query_hg.len(),
+                    self.cfg.embed_dim()
+                ),
+            });
         }
+        let t0 = Instant::now();
+        let mut executed = MacCounts::default();
+        let mut cache_stats = EmbedCacheTelemetry::default();
+        let scores = self.fan_out_tail(query_hg, shard, &mut executed, &mut cache_stats);
         cache_stats.entries = self.cache.len() as u64;
         Ok(CorpusOutput {
             scores,
@@ -408,9 +486,93 @@ mod tests {
         assert!(caps.reports_macs);
         assert!(caps.reports_embed_cache);
         assert!(caps.supports_corpus);
+        assert!(caps.supports_corpus_shards);
         // The dense comparison lane is named apart.
         let dense = tiny().with_policy(SparsePolicy::Dense);
         assert_eq!(dense.caps().name, "native-cpu-dense");
+    }
+
+    #[test]
+    fn sharded_corpus_path_matches_score_corpus_bitwise() {
+        // Two engines sharing one cache stand in for two executor
+        // lanes: lane A embeds the query once (embed_query), both lanes
+        // score disjoint shards against the shipped embedding, and the
+        // concatenated scores must be bit-identical to one unsharded
+        // score_corpus on a fresh engine.
+        let base = tiny();
+        let shared = Arc::new(EmbedCache::new(512));
+        let mut lane_a = NativeEngine::new(base.cfg.clone(), base.weights.clone())
+            .with_cache(Arc::clone(&shared));
+        let mut lane_b = NativeEngine::new(base.cfg.clone(), base.weights.clone())
+            .with_cache(Arc::clone(&shared));
+        let corpus: Vec<EncodedGraph> = workload(4, 51)
+            .into_iter()
+            .flat_map(|(a, b)| [a, b])
+            .collect(); // 8 candidates
+        let (query, _) = workload(1, 52).pop().unwrap();
+
+        let mut reference = tiny();
+        let want = reference.score_corpus(&query, &corpus).unwrap().scores;
+
+        let embed = lane_a.embed_query(&query).unwrap();
+        assert_eq!(embed.telemetry.embed_cache.unwrap().misses, 1, "cold query embeds once");
+        let first = lane_a.score_corpus_with(&embed.embed.hg, &corpus[..5]).unwrap();
+        let second = lane_b.score_corpus_with(&embed.embed.hg, &corpus[5..]).unwrap();
+        let mut got = first.scores.clone();
+        got.extend_from_slice(&second.scores);
+        assert_eq!(got, want, "sharded scores diverged from score_corpus");
+        // The shared cache kept the total at one forward per unique
+        // graph across both lanes (the corpus graphs are random, so
+        // derive the expected counts from the fingerprints).
+        let mut uniq: std::collections::HashSet<u128> =
+            corpus.iter().map(|g| g.fingerprint().0).collect();
+        let a = first.telemetry.embed_cache.unwrap();
+        let b = second.telemetry.embed_cache.unwrap();
+        let candidate_misses = uniq.iter().filter(|&&k| k != query.fingerprint().0).count();
+        assert_eq!(
+            a.misses + b.misses,
+            candidate_misses as u64,
+            "each unique candidate embeds exactly once across the lanes"
+        );
+        uniq.insert(query.fingerprint().0);
+        assert_eq!(shared.stats().entries as usize, uniq.len());
+        // A repeated shard on the *other* lane is all hits — the
+        // warming crossed lanes.
+        let again = lane_b.score_corpus_with(&embed.embed.hg, &corpus[..5]).unwrap();
+        assert_eq!(again.scores, first.scores);
+        assert_eq!(again.telemetry.embed_cache.unwrap().misses, 0);
+    }
+
+    #[test]
+    fn score_corpus_with_rejects_bad_inputs() {
+        let mut eng = tiny();
+        let (query, other) = workload(1, 53).pop().unwrap();
+        let embed = eng.embed_query(&query).unwrap();
+        // Wrong embedding width: typed error, not garbage scores.
+        let err = eng
+            .score_corpus_with(&embed.embed.hg[..2], std::slice::from_ref(&other))
+            .unwrap_err();
+        assert!(matches!(err, EngineError::InvalidInput { .. }));
+        // Mis-shaped shard entry: same typed error as score_corpus.
+        let wide = {
+            let g = generate(&mut Rng::new(54), Family::ErdosRenyi { n: 5, p_millis: 300 }, 8, 4);
+            crate::graph::encode::encode(&g, 16, 4).unwrap()
+        };
+        let err = eng
+            .score_corpus_with(&embed.embed.hg, std::slice::from_ref(&wide))
+            .unwrap_err();
+        // Shard-local labeling: the engine only sees its slice, so the
+        // error must not claim a position in the full corpus.
+        assert!(
+            matches!(err, EngineError::InvalidInput { ref detail } if detail.contains("shard[0]"))
+        );
+        // Mis-shaped query graph at embed time.
+        assert!(matches!(
+            eng.embed_query(&wide),
+            Err(EngineError::InvalidInput { .. })
+        ));
+        // An empty shard is a valid (empty) result.
+        assert!(eng.score_corpus_with(&embed.embed.hg, &[]).unwrap().scores.is_empty());
     }
 
     #[test]

@@ -22,13 +22,13 @@ use crate::nn::weights::Weights;
 use crate::runtime::embed_cache::{CachedEmbed, EmbedCache, DEFAULT_CAPACITY};
 use crate::runtime::{
     BatchOutput, CorpusOutput, CycleReport, EmbedCacheTelemetry, Engine, EngineCaps, EngineError,
-    MacCounts, QueryTelemetry,
+    MacCounts, QueryEmbed, QueryTelemetry,
 };
 
 use super::config::ArchConfig;
 use super::gcn::{
-    compose_cached_query, embed_profile, kernel_ms, simulate_query, EmbedCycleProfile, GcnCycles,
-    QueryCycles,
+    compose_cached_query, embed_only_cycles, embed_profile, kernel_ms, simulate_query,
+    EmbedCycleProfile, GcnCycles, QueryCycles,
 };
 use super::platform::Platform;
 
@@ -95,7 +95,9 @@ pub struct SimEngine {
     arch: ArchConfig,
     plat: Platform,
     caps: EngineCaps,
-    cache: EmbedCache,
+    /// Behind `Arc` so same-kind lanes can serve from one shared cache
+    /// (injected via `EngineBuilder::with_embed_cache`, DESIGN.md S15).
+    cache: Arc<EmbedCache>,
     /// Accumulated cycle statistics over every query scored so far.
     pub stats: SimStats,
 }
@@ -127,16 +129,24 @@ impl SimEngine {
         let caps = EngineCaps::new("spa-gcn-sim", ladder, cfg.n_max, cfg.num_labels)
             .with_cycle_reports()
             .with_embed_cache()
-            .with_corpus_scoring();
+            .with_corpus_scoring()
+            .with_corpus_sharding();
         SimEngine {
             cfg,
             weights,
             arch,
             plat,
             caps,
-            cache: EmbedCache::new(DEFAULT_CAPACITY),
+            cache: Arc::new(EmbedCache::new(DEFAULT_CAPACITY)),
             stats: SimStats::default(),
         }
+    }
+
+    /// Serve from a shared embedding cache instead of the private one
+    /// (same-kind lanes only — see `EngineBuilder::with_embed_cache`).
+    pub fn with_cache(mut self, cache: Arc<EmbedCache>) -> Self {
+        self.cache = cache;
+        self
     }
 
     /// The model configuration this engine scores with.
@@ -232,6 +242,44 @@ impl SimEngine {
         self.cache.insert(key, Arc::clone(&cached));
         Ok((cached, false, profile))
     }
+
+    /// Shared fan-out of `score_corpus` / `score_corpus_with`: score
+    /// each candidate against a resolved query embedding and accumulate
+    /// the composed cycle charge. `query_profile` — the query graph's
+    /// own embed cost — is composed into the first candidate only;
+    /// shard lanes pass the zero profile because the scatter-time
+    /// [`SimEngine::embed_query`] already charged it. `what` labels the
+    /// candidate slice in errors (`"corpus"` for whole queries,
+    /// `"shard"` for shard jobs, whose indices are shard-local).
+    fn fan_out_tail(
+        &mut self,
+        query_hg: &[f32],
+        shard: &[EncodedGraph],
+        what: &str,
+        mut query_profile: EmbedCycleProfile,
+        cache_stats: &mut EmbedCacheTelemetry,
+    ) -> std::result::Result<(Vec<f32>, u64, u64), EngineError> {
+        let (mut total_interval, mut total_latency) = (0u64, 0u64);
+        let mut scores = Vec::with_capacity(shard.len());
+        for (i, g) in shard.iter().enumerate() {
+            let (c, hit, p) = self.embed_cached(g).map_err(|e| EngineError::InvalidInput {
+                detail: format!("{what}[{i}]: {e}"),
+            })?;
+            if hit {
+                cache_stats.hits += 1;
+            } else {
+                cache_stats.misses += 1;
+            }
+            let (_, score) = pair_score(&self.cfg, &self.weights, query_hg, &c.hg);
+            scores.push(score);
+            let (interval, latency) =
+                compose_cached_query(&self.cfg, &self.arch, &self.plat, &query_profile, &p);
+            total_interval += interval;
+            total_latency += latency;
+            query_profile = EmbedCycleProfile::default();
+        }
+        Ok((scores, total_interval, total_latency))
+    }
 }
 
 impl Engine for SimEngine {
@@ -312,36 +360,98 @@ impl Engine for SimEngine {
                 telemetry: QueryTelemetry::default(),
             });
         }
-        let invalid = |what: &str, e: NonPrefixMask| EngineError::InvalidInput {
-            detail: format!("{what}: {e}"),
-        };
         let mut cache_stats = EmbedCacheTelemetry::default();
-        let mut tally = |hit: bool| {
-            if hit {
-                cache_stats.hits += 1;
-            } else {
-                cache_stats.misses += 1;
-            }
-        };
-        let (cq, hitq, pq) = self.embed_cached(query).map_err(|e| invalid("query", e))?;
-        tally(hitq);
-        // The query's embed cost is charged once, on the first candidate.
-        let mut query_profile = pq;
-        let (mut total_interval, mut total_latency) = (0u64, 0u64);
-        let mut scores = Vec::with_capacity(corpus.len());
-        for (i, g) in corpus.iter().enumerate() {
-            let (c, hit, p) = self
-                .embed_cached(g)
-                .map_err(|e| invalid(&format!("corpus[{i}]"), e))?;
-            tally(hit);
-            let (_, score) = pair_score(&self.cfg, &self.weights, &cq.hg, &c.hg);
-            scores.push(score);
-            let (interval, latency) =
-                compose_cached_query(&self.cfg, &self.arch, &self.plat, &query_profile, &p);
-            total_interval += interval;
-            total_latency += latency;
-            query_profile = EmbedCycleProfile::default();
+        let (cq, hitq, pq) = self.embed_cached(query).map_err(|e| EngineError::InvalidInput {
+            detail: format!("query: {e}"),
+        })?;
+        if hitq {
+            cache_stats.hits += 1;
+        } else {
+            cache_stats.misses += 1;
         }
+        // The query's embed cost is charged once, on the first candidate.
+        let (scores, total_interval, total_latency) =
+            self.fan_out_tail(&cq.hg, corpus, "corpus", pq, &mut cache_stats)?;
+        cache_stats.entries = self.cache.len() as u64;
+        self.stats.note_query(total_interval, total_latency);
+        Ok(CorpusOutput {
+            scores,
+            telemetry: QueryTelemetry {
+                cycles: Some(CycleReport {
+                    interval: total_interval,
+                    latency: total_latency,
+                }),
+                embed_cache: Some(cache_stats),
+                ..QueryTelemetry::default()
+            },
+        })
+    }
+
+    /// Scatter-time query embed for a sharded corpus query: one
+    /// cache-aware forward, charged its standalone embed cycles (GCN +
+    /// Att + input stream, no pair tail — the tails are paid by the
+    /// shard lanes in [`SimEngine::score_corpus_with`]).
+    fn embed_query(
+        &mut self,
+        query: &EncodedGraph,
+    ) -> std::result::Result<QueryEmbed, EngineError> {
+        let (n_max, num_labels) = (self.cfg.n_max, self.cfg.num_labels);
+        crate::runtime::check_graph_shape(n_max, num_labels, "query graph", query)?;
+        let (cq, hitq, pq) = self.embed_cached(query).map_err(|e| EngineError::InvalidInput {
+            detail: format!("query: {e}"),
+        })?;
+        let (interval, latency) = embed_only_cycles(&self.arch, &self.plat, &pq);
+        Ok(QueryEmbed {
+            embed: cq,
+            telemetry: QueryTelemetry {
+                cycles: Some(CycleReport { interval, latency }),
+                embed_cache: Some(EmbedCacheTelemetry {
+                    hits: hitq as u64,
+                    misses: (!hitq) as u64,
+                    entries: self.cache.len() as u64,
+                }),
+                ..QueryTelemetry::default()
+            },
+        })
+    }
+
+    /// One shard of a scattered corpus query, charged *independently*:
+    /// this shard's candidates' embeds plus their NTN+FCN tails, with
+    /// the query's embed contributing nothing here (it was charged at
+    /// scatter time). Each shard runs on its own lane, so the gather
+    /// stage merges shard cycle reports with a max — the cycle model's
+    /// view of the parallel speedup. Each shard also counts as one
+    /// entry in [`SimEngine::stats`] (one simulated accelerator
+    /// occupation), so sharded runs show more, shorter stream entries.
+    fn score_corpus_with(
+        &mut self,
+        query_hg: &[f32],
+        shard: &[EncodedGraph],
+    ) -> std::result::Result<CorpusOutput, EngineError> {
+        crate::runtime::check_shard_shapes(self.cfg.n_max, self.cfg.num_labels, "shard", shard)?;
+        if query_hg.len() != self.cfg.embed_dim() {
+            return Err(EngineError::InvalidInput {
+                detail: format!(
+                    "query embedding has {} floats, model embeds into {}",
+                    query_hg.len(),
+                    self.cfg.embed_dim()
+                ),
+            });
+        }
+        if shard.is_empty() {
+            return Ok(CorpusOutput {
+                scores: Vec::new(),
+                telemetry: QueryTelemetry::default(),
+            });
+        }
+        let mut cache_stats = EmbedCacheTelemetry::default();
+        let (scores, total_interval, total_latency) = self.fan_out_tail(
+            query_hg,
+            shard,
+            "shard",
+            EmbedCycleProfile::default(),
+            &mut cache_stats,
+        )?;
         cache_stats.entries = self.cache.len() as u64;
         self.stats.note_query(total_interval, total_latency);
         Ok(CorpusOutput {
@@ -566,6 +676,60 @@ mod tests {
         let wc = warm.telemetry.cycles.unwrap();
         assert_eq!(wc.interval, 7 * pair_tail_cycles(eng.config(), eng.arch()));
         assert_eq!(warm.telemetry.embed_cache.unwrap().misses, 0);
+    }
+
+    #[test]
+    fn sharded_corpus_matches_unsharded_and_shards_charge_independently() {
+        use crate::runtime::embed_cache::EmbedCache;
+        let base = tiny_engine();
+        let (pairs, _) = packed_workload(&base);
+        let corpus: Vec<EncodedGraph> = pairs
+            .iter()
+            .flat_map(|(a, b)| [a.clone(), b.clone()])
+            .collect(); // 6 candidates
+        let mut rng = Rng::new(87);
+        let q = generate(&mut rng, Family::ErdosRenyi { n: 6, p_millis: 300 }, 8, 4);
+        let eq = encode(&q, 8, 4).unwrap();
+
+        let mut reference = tiny_engine();
+        let want = reference.score_corpus(&eq, &corpus).unwrap();
+
+        // Two sim "lanes" on one shared cache, sharded 4 + 2.
+        let shared = Arc::new(EmbedCache::new(256));
+        let mut lane_a = SimEngine::new(
+            base.cfg.clone(),
+            base.weights.clone(),
+            ArchConfig::spa_gcn(),
+            U280,
+        )
+        .with_cache(Arc::clone(&shared));
+        let mut lane_b = SimEngine::new(
+            base.cfg.clone(),
+            base.weights.clone(),
+            ArchConfig::spa_gcn(),
+            U280,
+        )
+        .with_cache(Arc::clone(&shared));
+        let embed = lane_a.embed_query(&eq).unwrap();
+        let embed_cycles = embed.telemetry.cycles.unwrap();
+        assert!(embed_cycles.interval > 0, "cold query embed is charged");
+        let a = lane_a.score_corpus_with(&embed.embed.hg, &corpus[..4]).unwrap();
+        let b = lane_b.score_corpus_with(&embed.embed.hg, &corpus[4..]).unwrap();
+        let mut got = a.scores.clone();
+        got.extend_from_slice(&b.scores);
+        assert_eq!(got, want.scores, "sharded scores diverged from score_corpus");
+        // Shards are charged independently: each report covers only its
+        // own candidates, so either shard costs less than the unsharded
+        // whole — the parallel speedup the gather's max-merge surfaces.
+        let whole = want.telemetry.cycles.unwrap();
+        let ca = a.telemetry.cycles.unwrap();
+        let cb = b.telemetry.cycles.unwrap();
+        assert!(ca.interval < whole.interval, "shard A {ca:?} !< whole {whole:?}");
+        assert!(cb.interval < whole.interval, "shard B {cb:?} !< whole {whole:?}");
+        // A warm embed_query is free: the profile is the zero profile.
+        let warm = lane_b.embed_query(&eq).unwrap();
+        assert_eq!(warm.telemetry.cycles.unwrap(), CycleReport { interval: 0, latency: 0 });
+        assert_eq!(warm.telemetry.embed_cache.unwrap().hits, 1);
     }
 
     #[test]

@@ -310,6 +310,37 @@ pub fn pair_tail_cycles(cfg: &ModelConfig, arch: &ArchConfig) -> u64 {
     s.ntn + s.fcn
 }
 
+/// Cycles to stream `bytes` of input at the platform's achieved rate
+/// (shared by [`compose_cached_query`] and [`embed_only_cycles`] so the
+/// two chargings cannot drift). Zero bytes stream for free; otherwise a
+/// 64-cycle setup charge applies, as in `simulate_query`.
+fn input_stream_cycles(plat: &Platform, variant: ArchVariant, bytes: u64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    let freq = plat.achieved_freq_mhz(variant);
+    let bpc = plat.stream_bytes_per_cycle(freq, 4);
+    (bytes as f64 / bpc).ceil() as u64 + 64
+}
+
+/// Cycle charge of one *standalone* embed — the scatter-time query
+/// embed of a sharded corpus query (DESIGN.md S15): this graph's GCN,
+/// Att and input streaming, with no pair tail (the tails are paid by
+/// the shard lanes). The zero profile (a cache hit) charges zero.
+pub fn embed_only_cycles(
+    arch: &ArchConfig,
+    plat: &Platform,
+    p: &EmbedCycleProfile,
+) -> (u64, u64) {
+    let stream = input_stream_cycles(plat, arch.variant, p.input_bytes);
+    if arch.dataflow() {
+        (p.gcn_interval.max(p.att).max(stream), p.gcn_latency + p.att)
+    } else {
+        let total = p.gcn_interval + p.att + stream;
+        (total, total)
+    }
+}
+
 /// Compose two per-graph embed profiles + the NTN/FCN tail into one
 /// query's (interval, latency) — the cache-aware counterpart of
 /// [`simulate_query`]. With both profiles live (cache misses) this
@@ -324,14 +355,7 @@ pub fn compose_cached_query(
     p2: &EmbedCycleProfile,
 ) -> (u64, u64) {
     let tail = pair_tail_cycles(cfg, arch);
-    let bytes = (p1.input_bytes + p2.input_bytes) as f64;
-    let input_stream = if bytes == 0.0 {
-        0
-    } else {
-        let freq = plat.achieved_freq_mhz(arch.variant);
-        let bpc = plat.stream_bytes_per_cycle(freq, 4);
-        (bytes / bpc).ceil() as u64 + 64
-    };
+    let input_stream = input_stream_cycles(plat, arch.variant, p1.input_bytes + p2.input_bytes);
     let gcn_total = p1.gcn_interval + p2.gcn_interval;
     let att_total = p1.att + p2.att;
     if arch.dataflow() {
@@ -535,6 +559,25 @@ mod tests {
         assert_eq!(interval, tail);
         assert_eq!(latency, tail);
         assert!(tail > 0);
+    }
+
+    #[test]
+    fn embed_only_charges_the_graph_without_a_tail() {
+        let (cfg, _w, g, e, t) = setup();
+        for arch in [ArchConfig::spa_gcn(), ArchConfig::baseline()] {
+            let (_, p) = embed_profile(&cfg, &arch, &U280, &g, &e, &t);
+            let (interval, latency) = embed_only_cycles(&arch, &U280, &p);
+            assert!(interval > 0 && latency > 0);
+            // No pair tail: a standalone embed costs strictly less than
+            // composing the same profile into a one-sided cached query.
+            let (paired, paired_lat) =
+                compose_cached_query(&cfg, &arch, &U280, &p, &EmbedCycleProfile::default());
+            assert!(interval <= paired, "variant {:?}", arch.variant);
+            assert!(latency < paired_lat, "variant {:?}", arch.variant);
+            // The cached profile (a hit) embeds for free.
+            let zero = EmbedCycleProfile::default();
+            assert_eq!(embed_only_cycles(&arch, &U280, &zero), (0, 0));
+        }
     }
 
     #[test]

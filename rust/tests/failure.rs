@@ -1,13 +1,30 @@
 //! Failure injection: every loader must fail loudly (never silently
 //! truncate or mis-shape) when artifacts are corrupt, and the serving
-//! path must degrade gracefully.
+//! path must degrade gracefully — including a lane dying mid-scatter
+//! of a sharded top-k query (DESIGN.md S15): the query must resolve
+//! with one typed error, the gather stage must not hang, and sibling
+//! queries must be unaffected.
 
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
+use spa_gcn::coordinator::batcher::BatchPolicy;
+use spa_gcn::coordinator::corpus::Corpus;
+use spa_gcn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use spa_gcn::coordinator::query::Query;
+use spa_gcn::graph::encode::{EncodedGraph, PackedBatch};
+use spa_gcn::graph::Graph;
 use spa_gcn::nn::config::{ArtifactsMeta, ModelConfig};
 use spa_gcn::nn::weights::Weights;
+use spa_gcn::runtime::embed_cache::CachedEmbed;
 use spa_gcn::runtime::pjrt::XlaEngine;
+use spa_gcn::runtime::{
+    BatchOutput, CorpusOutput, Engine, EngineCaps, EngineError, EngineFactory, MacCounts,
+    QueryEmbed, QueryTelemetry,
+};
 use spa_gcn::util::json::parse;
 
 fn artifacts() -> Option<PathBuf> {
@@ -97,6 +114,195 @@ fn default_config_agrees_with_artifacts() {
     let Some(dir) = artifacts() else { return };
     let meta = ArtifactsMeta::load(&dir).unwrap();
     assert_eq!(meta.config, ModelConfig::default());
+}
+
+/// Shard-capable engine double with injectable failures. `score_batch`
+/// always works (pair traffic must survive the injected corpus
+/// failures), `embed_query`/`score_corpus_with` fail on demand.
+struct FlakyShardEngine {
+    caps: EngineCaps,
+    fail_embed: bool,
+    fail_shard: bool,
+    shard_calls: Arc<AtomicU64>,
+}
+
+impl Engine for FlakyShardEngine {
+    fn caps(&self) -> &EngineCaps {
+        &self.caps
+    }
+    fn score_batch(&mut self, batch: &PackedBatch) -> Result<BatchOutput, EngineError> {
+        Ok(BatchOutput::untimed(vec![0.5; batch.batch]))
+    }
+    fn score_corpus(
+        &mut self,
+        _query: &EncodedGraph,
+        corpus: &[EncodedGraph],
+    ) -> Result<CorpusOutput, EngineError> {
+        Ok(CorpusOutput {
+            scores: (0..corpus.len()).map(|i| 1.0 / (1.0 + i as f32)).collect(),
+            telemetry: QueryTelemetry::default(),
+        })
+    }
+    fn embed_query(&mut self, _query: &EncodedGraph) -> Result<QueryEmbed, EngineError> {
+        if self.fail_embed {
+            return Err(EngineError::Backend {
+                engine: "flaky-shard".into(),
+                detail: "embed killed mid-scatter".into(),
+            });
+        }
+        Ok(QueryEmbed {
+            embed: Arc::new(CachedEmbed {
+                hg: vec![0.5; 4],
+                macs: MacCounts::default(),
+            }),
+            telemetry: QueryTelemetry::default(),
+        })
+    }
+    fn score_corpus_with(
+        &mut self,
+        _query_hg: &[f32],
+        shard: &[EncodedGraph],
+    ) -> Result<CorpusOutput, EngineError> {
+        self.shard_calls.fetch_add(1, Ordering::Relaxed);
+        if self.fail_shard {
+            return Err(EngineError::Backend {
+                engine: "flaky-shard".into(),
+                detail: "shard killed mid-scatter".into(),
+            });
+        }
+        Ok(CorpusOutput {
+            scores: vec![0.5; shard.len()],
+            telemetry: QueryTelemetry::default(),
+        })
+    }
+}
+
+fn flaky_factory(
+    fail_embed: bool,
+    fail_shard: bool,
+    shard_calls: Arc<AtomicU64>,
+) -> EngineFactory {
+    Arc::new(move || {
+        Ok(Box::new(FlakyShardEngine {
+            caps: EngineCaps::new("flaky-shard", vec![1, 4], 8, 4)
+                .with_corpus_scoring()
+                .with_corpus_sharding(),
+            fail_embed,
+            fail_shard,
+            shard_calls: Arc::clone(&shard_calls),
+        }) as Box<dyn Engine>)
+    })
+}
+
+fn shard_model() -> ModelConfig {
+    ModelConfig {
+        n_max: 8,
+        num_labels: 4,
+        ..ModelConfig::default()
+    }
+}
+
+fn shard_pipeline_config() -> PipelineConfig {
+    PipelineConfig {
+        policy: BatchPolicy {
+            max_batch: 4,
+            timeout: Duration::from_micros(100),
+        },
+        ..PipelineConfig::default()
+    }
+}
+
+fn shard_corpus(entries: usize) -> Arc<Corpus> {
+    let graphs: Vec<(u64, Graph)> = (0..entries)
+        .map(|i| {
+            (
+                i as u64,
+                Graph::new(3, vec![(0, 1), (1, 2)], vec![0, 1, (i % 4) as u16]),
+            )
+        })
+        .collect();
+    Arc::new(Corpus::build("flaky", &graphs, 8, 4).unwrap())
+}
+
+fn pair_query(id: u64) -> Query {
+    let g = Graph::new(3, vec![(0, 1), (1, 2)], vec![0, 1, 2]);
+    Query::new(id, g.clone(), g)
+}
+
+#[test]
+fn lane_killed_mid_scatter_resolves_with_one_typed_error() {
+    // One healthy shard lane + one whose shard scoring dies: every
+    // scattered query must resolve as exactly one typed EngineError —
+    // no gather hang (finish() returning IS the no-hang witness) and
+    // no lost sibling pair queries.
+    let shard_calls = Arc::new(AtomicU64::new(0));
+    let pipeline = Pipeline::start(
+        shard_model(),
+        vec![
+            flaky_factory(false, false, Arc::clone(&shard_calls)),
+            flaky_factory(false, true, Arc::clone(&shard_calls)),
+        ],
+        shard_pipeline_config(),
+    );
+    assert_eq!(pipeline.wait_ready(), 2);
+    let corpus = shard_corpus(6);
+    for id in 0..3 {
+        assert!(pipeline.submit(pair_query(id)));
+    }
+    for id in 3..5 {
+        assert!(pipeline.submit(Query::topk(
+            id,
+            Graph::new(2, vec![(0, 1)], vec![0, 1]),
+            Arc::clone(&corpus),
+            2,
+        )));
+    }
+    for id in 5..8 {
+        assert!(pipeline.submit(pair_query(id)));
+    }
+    let metrics = pipeline.finish();
+    assert_eq!(metrics.scored, 6, "sibling pair queries must all survive");
+    assert_eq!(metrics.topk, 0);
+    assert_eq!(
+        metrics.engine_errors, 2,
+        "each scattered query resolves exactly once, as a typed error"
+    );
+    assert_eq!(metrics.rejected, 0);
+    // Both lanes really were scattered to (2 shards per query).
+    assert_eq!(shard_calls.load(Ordering::Relaxed), 4);
+}
+
+#[test]
+fn embedder_death_poisons_siblings_instead_of_hanging_them() {
+    // Both lanes fail at embed time: whichever lane draws the embedder
+    // shard dies, the poisoned cell fails the waiting sibling fast, and
+    // the gather stage still resolves the query exactly once. Pair
+    // traffic on the same lanes is untouched.
+    let shard_calls = Arc::new(AtomicU64::new(0));
+    let factory = flaky_factory(true, false, Arc::clone(&shard_calls));
+    let pipeline = Pipeline::start(
+        shard_model(),
+        vec![Arc::clone(&factory), factory],
+        shard_pipeline_config(),
+    );
+    assert_eq!(pipeline.wait_ready(), 2);
+    for id in 0..4 {
+        assert!(pipeline.submit(pair_query(id)));
+    }
+    assert!(pipeline.submit(Query::topk(
+        9,
+        Graph::new(2, vec![(0, 1)], vec![0, 1]),
+        shard_corpus(6),
+        3,
+    )));
+    let metrics = pipeline.finish();
+    assert_eq!(metrics.scored, 4);
+    assert_eq!(metrics.engine_errors, 1, "one typed error for the scattered query");
+    assert_eq!(metrics.topk, 0);
+    // The embedder died before scoring, so at most the sibling's
+    // (cell-poisoned, never-scored) shard could have been attempted:
+    // no shard may have produced scores.
+    assert_eq!(shard_calls.load(Ordering::Relaxed), 0);
 }
 
 #[test]
