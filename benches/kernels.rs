@@ -1,23 +1,65 @@
 //! Micro-benchmarks of the hot paths in every layer the rust side owns:
 //! reference numerics (NativeEngine's inner loops), encoding, edge
-//! reordering, the cycle simulator itself, and exact GED.
+//! reordering, the cycle simulator itself, and exact GED — plus the
+//! scalar-vs-vectorized kernel duel (DESIGN.md S16).
 //!
 //!     cargo bench --bench kernels
+//!
+//! The duel section re-times every dispatch-layer kernel on both paths
+//! (csr_spmm across nnz regimes, sparse_row_matmul, onehot_gather, the
+//! NTN+FCN tail, the full simgnn_forward) and overwrites `BENCH_6.json`
+//! in the working directory with a machine-readable snapshot: p50 ns/op,
+//! MACs/s and lanes-over-scalar speedup per kernel. That file is the
+//! start of the repo's perf trajectory — re-run this bench after kernel
+//! changes and commit the refreshed snapshot so CI history and future
+//! re-anchors can see perf move, not just read changelogs.
 
 use spa_gcn::ged::exact_ged;
 use spa_gcn::graph::encode::encode;
 use spa_gcn::graph::generate::{generate, Family};
 use spa_gcn::graph::normalize::normalized_edges;
 use spa_gcn::graph::reorder::reorder_edges;
+use spa_gcn::nn::kernels::{self, KernelPath};
 use spa_gcn::nn::linalg::matmul;
-use spa_gcn::nn::simgnn::{gcn_forward, simgnn_forward};
+use spa_gcn::nn::simgnn::{attention_pool, gcn_forward, pair_score, simgnn_forward};
 use spa_gcn::report::tables::Context;
 use spa_gcn::sim::config::ArchConfig;
 use spa_gcn::sim::ft::{nonzero_stream, sparse_ft_cycles};
 use spa_gcn::sim::gcn::simulate_query;
 use spa_gcn::sim::platform::U280;
-use spa_gcn::util::bench::bench;
+use spa_gcn::util::bench::{bench, BenchResult};
+use spa_gcn::util::json::{num, obj, s, Json};
 use spa_gcn::util::rng::Rng;
+
+/// One scalar-vs-lanes duel row for `BENCH_6.json`.
+fn duel_row(
+    kernel: &str,
+    regime: &str,
+    macs: u64,
+    scalar: &BenchResult,
+    lanes: &BenchResult,
+) -> Json {
+    let path = |r: &BenchResult| {
+        obj(vec![
+            ("p50_ns", num(r.p50_ns)),
+            ("mean_ns", num(r.mean_ns)),
+            ("macs_per_s", num(macs as f64 / (r.p50_ns * 1e-9))),
+        ])
+    };
+    let speedup = scalar.p50_ns / lanes.p50_ns;
+    println!(
+        "   -> {kernel}/{regime}: {speedup:.2}x, lanes {:.2} GMAC/s",
+        macs as f64 / lanes.p50_ns
+    );
+    obj(vec![
+        ("kernel", s(kernel)),
+        ("regime", s(regime)),
+        ("macs_per_iter", num(macs as f64)),
+        ("scalar", path(scalar)),
+        ("lanes", path(lanes)),
+        ("speedup_p50", num(speedup)),
+    ])
+}
 
 fn main() -> anyhow::Result<()> {
     let ctx = Context::load(std::path::Path::new("artifacts"))?;
@@ -75,5 +117,129 @@ fn main() -> anyhow::Result<()> {
     bench("exact GED (6-node pair, A*)", || {
         std::hint::black_box(exact_ged(&t1, &t2g, 1_000_000));
     });
+
+    // -- scalar vs vectorized kernel duel (DESIGN.md S16) -------------
+    // Kernel-level duels call the scalar/lanes modules explicitly; the
+    // nn-level tail and full-forward duels toggle the process-wide
+    // dispatch (restored to the compiled default at the end).
+    println!("\n-- scalar vs vectorized kernels (S16; writes BENCH_6.json) --");
+    let mut rows_json: Vec<Json> = Vec::new();
+    let f0 = cfg.filters[0];
+
+    // csr_spmm across nnz regimes: sparse / AIDS-like / dense-ish
+    // adjacency at full n_max, aggregating a layer-1-shaped X.
+    for (regime, p_millis) in [("er-p100", 100), ("er-p350", 350), ("er-p800", 800)] {
+        let g = generate(
+            &mut rng,
+            Family::ErdosRenyi { n: cfg.n_max, p_millis },
+            cfg.n_max,
+            cfg.num_labels,
+        );
+        let e = encode(&g, cfg.n_max, cfg.num_labels)?;
+        let x: Vec<f32> = (0..cfg.n_max * f0).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let (_, macs) = kernels::scalar::csr_spmm(
+            &e.csr.indptr, &e.csr.indices, &e.csr.weights, &x, cfg.n_max, f0,
+        );
+        let sc = bench(&format!("csr_spmm {regime} nnz={} [scalar]", e.csr.nnz()), || {
+            std::hint::black_box(kernels::scalar::csr_spmm(
+                &e.csr.indptr, &e.csr.indices, &e.csr.weights, &x, cfg.n_max, f0,
+            ));
+        });
+        let ln = bench(&format!("csr_spmm {regime} nnz={} [lanes]", e.csr.nnz()), || {
+            std::hint::black_box(kernels::lanes::csr_spmm(
+                &e.csr.indptr, &e.csr.indices, &e.csr.weights, &x, cfg.n_max, f0,
+            ));
+        });
+        rows_json.push(duel_row("csr_spmm", regime, macs, &sc, &ln));
+    }
+
+    // sparse_row_matmul on a real post-ReLU layer-1 input.
+    let h1 = &trace.layer_inputs[1];
+    let (f_in, f_out) = (cfg.filters[0], cfg.filters[1]);
+    let (_, _, srm_macs) = kernels::scalar::sparse_row_matmul(
+        h1, &ctx.weights.gcn_w[1], e1.num_nodes, cfg.n_max, f_in, f_out,
+    );
+    let sc = bench("sparse_row_matmul layer1 [scalar]", || {
+        std::hint::black_box(kernels::scalar::sparse_row_matmul(
+            h1, &ctx.weights.gcn_w[1], e1.num_nodes, cfg.n_max, f_in, f_out,
+        ));
+    });
+    let ln = bench("sparse_row_matmul layer1 [lanes]", || {
+        std::hint::black_box(kernels::lanes::sparse_row_matmul(
+            h1, &ctx.weights.gcn_w[1], e1.num_nodes, cfg.n_max, f_in, f_out,
+        ));
+    });
+    rows_json.push(duel_row("sparse_row_matmul", "post-relu-layer1", srm_macs, &sc, &ln));
+
+    // onehot_gather on the layer-0 one-hot features.
+    let (_, _, og_macs) = kernels::scalar::onehot_gather(
+        &e1.h0, &ctx.weights.gcn_w[0], e1.num_nodes, cfg.n_max, cfg.num_labels, f0,
+    );
+    let sc = bench("onehot_gather layer0 [scalar]", || {
+        std::hint::black_box(kernels::scalar::onehot_gather(
+            &e1.h0, &ctx.weights.gcn_w[0], e1.num_nodes, cfg.n_max, cfg.num_labels, f0,
+        ));
+    });
+    let ln = bench("onehot_gather layer0 [lanes]", || {
+        std::hint::black_box(kernels::lanes::onehot_gather(
+            &e1.h0, &ctx.weights.gcn_w[0], e1.num_nodes, cfg.n_max, cfg.num_labels, f0,
+        ));
+    });
+    rows_json.push(duel_row("onehot_gather", "aids-onehot", og_macs, &sc, &ln));
+
+    // NTN + FCN tail on real graph embeddings (dispatch toggled).
+    let hg1 = attention_pool(cfg, &ctx.weights, &trace.embeddings, &e1.mask);
+    let hg2 = attention_pool(cfg, &ctx.weights, &tr2.embeddings, &e2.mask);
+    let f = cfg.embed_dim();
+    let tail_macs = {
+        let ntn = cfg.ntn_k as u64 * (f as u64 * f as u64 + 2 * f as u64);
+        let mut d = cfg.ntn_k as u64;
+        let mut fcn = 0u64;
+        for &h in &cfg.fc_dims {
+            fcn += d * h as u64;
+            d = h as u64;
+        }
+        ntn + fcn + d
+    };
+    kernels::set_kernel_path(KernelPath::Scalar);
+    let sc = bench("ntn+fcn tail (pair_score) [scalar]", || {
+        std::hint::black_box(pair_score(cfg, &ctx.weights, &hg1, &hg2));
+    });
+    kernels::set_kernel_path(KernelPath::Lanes);
+    let ln = bench("ntn+fcn tail (pair_score) [lanes]", || {
+        std::hint::black_box(pair_score(cfg, &ctx.weights, &hg1, &hg2));
+    });
+    rows_json.push(duel_row("ntn_fcn_tail", "pair-tail", tail_macs, &sc, &ln));
+
+    // Full pair forward (GCN + attention + tail) under each path.
+    let fwd_macs = trace.macs + tr2.macs + tail_macs;
+    kernels::set_kernel_path(KernelPath::Scalar);
+    let sc = bench("simgnn_forward full pair [scalar]", || {
+        std::hint::black_box(simgnn_forward(cfg, &ctx.weights, &e1, &e2));
+    });
+    kernels::set_kernel_path(KernelPath::Lanes);
+    let ln = bench("simgnn_forward full pair [lanes]", || {
+        std::hint::black_box(simgnn_forward(cfg, &ctx.weights, &e1, &e2));
+    });
+    rows_json.push(duel_row("simgnn_forward", "full-pair", fwd_macs, &sc, &ln));
+    kernels::set_kernel_path(KernelPath::compiled_default());
+
+    let doc = obj(vec![
+        ("bench", s("kernels")),
+        ("schema", s("bench-kernels-v1")),
+        ("pr", num(6.0)),
+        ("provenance", s("measured")),
+        ("lane_width", num(kernels::LANE_WIDTH as f64)),
+        ("compiled_default", s(KernelPath::compiled_default().as_str())),
+        ("model", obj(vec![
+            ("n_max", num(cfg.n_max as f64)),
+            ("num_labels", num(cfg.num_labels as f64)),
+            ("embed_dim", num(cfg.embed_dim() as f64)),
+            ("ntn_k", num(cfg.ntn_k as f64)),
+        ])),
+        ("kernels", Json::Arr(rows_json)),
+    ]);
+    std::fs::write("BENCH_6.json", doc.to_string() + "\n")?;
+    println!("wrote BENCH_6.json");
     Ok(())
 }

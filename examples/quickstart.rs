@@ -2,6 +2,12 @@
 //! runtime, and cross-check against the independent rust numerics.
 //!
 //!     make artifacts && cargo run --release --example quickstart
+//!
+//! The native numerics run the vectorized kernel layer (DESIGN.md S16;
+//! `--no-default-features` selects the scalar reference). To track the
+//! scalar-vs-lanes perf of every hot kernel, run
+//! `cargo bench --bench kernels` — it rewrites the machine-readable
+//! `BENCH_6.json` snapshot; commit the refresh alongside kernel changes.
 
 use spa_gcn::coordinator::corpus::Corpus;
 use spa_gcn::graph::encode::{encode, PackedBatch};

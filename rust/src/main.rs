@@ -17,6 +17,7 @@ use spa_gcn::coordinator::server::{serve_paced, serve_workload, ServeConfig};
 use spa_gcn::ged::{exact_ged, ged_similarity};
 use spa_gcn::graph::dataset::GraphDb;
 use spa_gcn::graph::generate::{generate, Family};
+use spa_gcn::nn::kernels::{set_kernel_path, KernelPath};
 use spa_gcn::report::tables::{self, Context};
 use spa_gcn::runtime::EngineKind;
 use spa_gcn::util::json::arr;
@@ -73,7 +74,7 @@ fn usage() -> ! {
          \t[--queries N] [--no-pjrt] [--artifacts DIR] [--json OUT.json]\n\
          \n  serve [--queries N] [--engine KINDS] [--workers K] [--batch-max B]\n\
          \t[--batch-timeout-us T] [--pipeline-depth D] [--rate QPS] [--artifacts DIR]\n\
-         \t[--corpus N] [--topk K]\n\
+         \t[--corpus N] [--topk K] [--kernels scalar|lanes]\n\
          \t(KINDS: comma-separated engine kinds from {{{}}};\n\
          \t a list runs heterogeneous lanes, e.g. --engine native,sim;\n\
          \t --pipeline-depth 0 = sequential encode+execute baseline;\n\
@@ -152,6 +153,15 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    // Kernel-path override (DESIGN.md S16): the compiled default comes
+    // from the `simd` feature; `--kernels scalar` is the operational
+    // escape hatch, `--kernels lanes` forces the vectorized path on a
+    // scalar-default build.
+    match args.flag("kernels", KernelPath::compiled_default().as_str()).as_str() {
+        "scalar" => set_kernel_path(KernelPath::Scalar),
+        "lanes" => set_kernel_path(KernelPath::Lanes),
+        other => anyhow::bail!("--kernels must be scalar or lanes, got {other}"),
+    }
     let cfg = ServeConfig {
         artifacts_dir: artifacts_dir(args),
         engines: EngineKind::parse_list(&args.flag("engine", "xla"))?,

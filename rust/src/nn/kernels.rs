@@ -1,0 +1,621 @@
+//! Vectorized f32 kernel layer behind one dispatch point (DESIGN.md S16).
+//!
+//! Every hot-path kernel of the serving stack — CSR aggregation, the
+//! one-hot / nonzero-skipping feature transforms, the FCN matvecs and
+//! the NTN bilinear form — exists twice:
+//!
+//!  * **scalar** ([`scalar`]): thin delegations to the reference loops
+//!    in [`super::linalg`] (plus scalar compositions for the fused
+//!    kernels). This is the bit-exact baseline every property test
+//!    measures against.
+//!  * **lanes** ([`lanes`]): fixed-width `[f32; LANE_WIDTH]` lane ops
+//!    on stable Rust. The inner loops run over `chunks_exact` blocks
+//!    with compile-time-known trip counts, the shape LLVM's
+//!    autovectorizer reliably lowers to SIMD — no nightly
+//!    `portable_simd`, no arch intrinsics, identical results on every
+//!    target. `csr_spmm` additionally schedules rows through an
+//!    nnz-bucketed order (FlexVector-style occupancy grouping, see
+//!    [`lanes::nnz_bucket_order`]) and `ntn_bilinear` register-blocks
+//!    [`lanes::ROW_BLOCK`] rows of W_k against one pass over `hg2`.
+//!
+//! Both variants are ALWAYS compiled; the `simd` cargo feature (on by
+//! default) only selects which one the top-level dispatchers run, and
+//! [`set_kernel_path`] overrides that choice at runtime (the serving
+//! CLI's `--kernels scalar` escape hatch). `nn/simgnn.rs` calls the
+//! dispatchers exclusively — a CI grep-guard keeps direct scalar-kernel
+//! calls out of the hot path — so `NativeEngine`, the embed cache, and
+//! sharded corpus scoring all inherit the active path.
+//!
+//! # Numerical contracts (enforced by `rust/tests/simd_parity.rs`)
+//!
+//! | kernel              | contract                                      |
+//! |---------------------|-----------------------------------------------|
+//! | `csr_spmm`          | bit-identical to scalar (row scheduling permutes rows, never within-row accumulation order) |
+//! | `onehot_gather`     | bit-identical (single weight-row scale)        |
+//! | `sparse_row_matmul` | bit-identical (k-outer / lane-inner preserves per-element order) |
+//! | `vec_mat`           | bit-identical (same loop shape as `matmul`'s 1-row case, zero-skip included) |
+//! | `dot` / `matvec`    | reassociates into `LANE_WIDTH` partial sums: within [`REASSOC_EPS_REL`] relative |
+//! | `ntn_bilinear`      | reassociates per row-dot: within [`REASSOC_EPS_REL`] relative |
+//!
+//! Bit-identity holds because each lane element performs exactly the
+//! scalar loop's `acc += a * x` in the same index order, and rustc does
+//! not contract separate mul + add into an FMA. MAC counts are computed
+//! from the same closed forms on both paths, so work telemetry is
+//! identical regardless of the active path.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::linalg;
+
+/// Fixed vector width of the lanes path: one `[f32; 8]` register tile
+/// (256-bit — a full AVX2 register, two NEON registers).
+pub const LANE_WIDTH: usize = 8;
+
+/// Relative error bound for the reassociating kernels (`dot`, `matvec`,
+/// `ntn_bilinear`): `|lanes − scalar| ≤ REASSOC_EPS_REL · (1 + |scalar|)`
+/// per element. Pinned by `rust/tests/simd_parity.rs`; generous for the
+/// ≤ 64-element reductions this model runs (observed error is ~1e-7).
+pub const REASSOC_EPS_REL: f32 = 1e-5;
+
+/// Which implementation the top-level dispatchers run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Reference scalar loops (`nn/linalg.rs`).
+    Scalar,
+    /// Fixed-width lane kernels with nnz-bucketed SpMM scheduling.
+    Lanes,
+}
+
+impl KernelPath {
+    /// The stable CLI/report spelling of this path.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Lanes => "lanes",
+        }
+    }
+
+    /// The compile-time default: `Lanes` when the `simd` feature is on
+    /// (it is by default), `Scalar` under `--no-default-features`.
+    pub const fn compiled_default() -> KernelPath {
+        if cfg!(feature = "simd") {
+            KernelPath::Lanes
+        } else {
+            KernelPath::Scalar
+        }
+    }
+
+    fn from_u8(v: u8) -> KernelPath {
+        if v == 1 {
+            KernelPath::Lanes
+        } else {
+            KernelPath::Scalar
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            KernelPath::Scalar => 0,
+            KernelPath::Lanes => 1,
+        }
+    }
+}
+
+/// Process-wide active path, initialized from the `simd` feature.
+static ACTIVE: AtomicU8 = AtomicU8::new(if cfg!(feature = "simd") { 1 } else { 0 });
+
+/// The path the dispatchers currently run.
+pub fn active_path() -> KernelPath {
+    KernelPath::from_u8(ACTIVE.load(Ordering::Relaxed))
+}
+
+/// Override the active path process-wide (the scalar fallback selector).
+/// Scores move by at most the reassociation epsilon; callers that
+/// compare both paths in one process (benches, parity tests) must
+/// restore [`KernelPath::compiled_default`] afterwards.
+pub fn set_kernel_path(path: KernelPath) {
+    ACTIVE.store(path.to_u8(), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// Dispatchers — the only kernel entry points nn/simgnn.rs may call.
+// ---------------------------------------------------------------------
+
+/// Sparse aggregation `out = CSR(A') @ x`; see [`linalg::csr_spmm`] for
+/// the shape/MAC contract. Bit-identical across paths.
+pub fn csr_spmm(
+    indptr: &[u32],
+    indices: &[u16],
+    weights: &[f32],
+    x: &[f32],
+    rows_out: usize,
+    f: usize,
+) -> (Vec<f32>, u64) {
+    match active_path() {
+        KernelPath::Scalar => scalar::csr_spmm(indptr, indices, weights, x, rows_out, f),
+        KernelPath::Lanes => lanes::csr_spmm(indptr, indices, weights, x, rows_out, f),
+    }
+}
+
+/// Layer-0 one-hot feature transform; see [`linalg::onehot_gather`].
+/// Bit-identical across paths.
+pub fn onehot_gather(
+    h: &[f32],
+    w: &[f32],
+    rows: usize,
+    rows_out: usize,
+    f_in: usize,
+    f_out: usize,
+) -> (Vec<f32>, u64, u64) {
+    match active_path() {
+        KernelPath::Scalar => scalar::onehot_gather(h, w, rows, rows_out, f_in, f_out),
+        KernelPath::Lanes => lanes::onehot_gather(h, w, rows, rows_out, f_in, f_out),
+    }
+}
+
+/// Nonzero-skipping feature transform; see [`linalg::sparse_row_matmul`].
+/// Bit-identical across paths.
+pub fn sparse_row_matmul(
+    h: &[f32],
+    w: &[f32],
+    rows: usize,
+    rows_out: usize,
+    f_in: usize,
+    f_out: usize,
+) -> (Vec<f32>, u64, u64) {
+    match active_path() {
+        KernelPath::Scalar => scalar::sparse_row_matmul(h, w, rows, rows_out, f_in, f_out),
+        KernelPath::Lanes => lanes::sparse_row_matmul(h, w, rows, rows_out, f_in, f_out),
+    }
+}
+
+/// FCN layer step `y[h] = x[1,d] @ w[d,h]` (bias/activation excluded).
+/// Bit-identical across paths.
+pub fn vec_mat(x: &[f32], w: &[f32], d: usize, h: usize) -> Vec<f32> {
+    match active_path() {
+        KernelPath::Scalar => scalar::vec_mat(x, w, d, h),
+        KernelPath::Lanes => lanes::vec_mat(x, w, d, h),
+    }
+}
+
+/// `out[m] = a[m,n] @ x[n]`. Epsilon contract ([`REASSOC_EPS_REL`]).
+pub fn matvec(a: &[f32], x: &[f32], m: usize, n: usize) -> Vec<f32> {
+    match active_path() {
+        KernelPath::Scalar => scalar::matvec(a, x, m, n),
+        KernelPath::Lanes => lanes::matvec(a, x, m, n),
+    }
+}
+
+/// Inner product. Epsilon contract ([`REASSOC_EPS_REL`]).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    match active_path() {
+        KernelPath::Scalar => scalar::dot(a, b),
+        KernelPath::Lanes => lanes::dot(a, b),
+    }
+}
+
+/// One NTN slice's bilinear form `hg1ᵀ W_k hg2` (Eq. 4). Epsilon
+/// contract ([`REASSOC_EPS_REL`]); register-blocked on the lanes path.
+pub fn ntn_bilinear(wk: &[f32], hg1: &[f32], hg2: &[f32], f: usize) -> f32 {
+    match active_path() {
+        KernelPath::Scalar => scalar::ntn_bilinear(wk, hg1, hg2, f),
+        KernelPath::Lanes => lanes::ntn_bilinear(wk, hg1, hg2, f),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar path: the reference loops, under one roof.
+// ---------------------------------------------------------------------
+
+/// Reference scalar implementations — delegations to [`linalg`] plus
+/// scalar compositions of the fused kernels. The parity baseline.
+pub mod scalar {
+    use super::linalg;
+
+    pub fn csr_spmm(
+        indptr: &[u32],
+        indices: &[u16],
+        weights: &[f32],
+        x: &[f32],
+        rows_out: usize,
+        f: usize,
+    ) -> (Vec<f32>, u64) {
+        linalg::csr_spmm(indptr, indices, weights, x, rows_out, f)
+    }
+
+    pub fn onehot_gather(
+        h: &[f32],
+        w: &[f32],
+        rows: usize,
+        rows_out: usize,
+        f_in: usize,
+        f_out: usize,
+    ) -> (Vec<f32>, u64, u64) {
+        linalg::onehot_gather(h, w, rows, rows_out, f_in, f_out)
+    }
+
+    pub fn sparse_row_matmul(
+        h: &[f32],
+        w: &[f32],
+        rows: usize,
+        rows_out: usize,
+        f_in: usize,
+        f_out: usize,
+    ) -> (Vec<f32>, u64, u64) {
+        linalg::sparse_row_matmul(h, w, rows, rows_out, f_in, f_out)
+    }
+
+    /// `x[1,d] @ w[d,h]` via the reference matmul's one-row case.
+    pub fn vec_mat(x: &[f32], w: &[f32], d: usize, h: usize) -> Vec<f32> {
+        linalg::matmul(x, w, 1, d, h)
+    }
+
+    pub fn matvec(a: &[f32], x: &[f32], m: usize, n: usize) -> Vec<f32> {
+        linalg::matvec(a, x, m, n)
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        linalg::dot(a, b)
+    }
+
+    /// The unfused reference composition: `dot(hg1, W_k @ hg2)`.
+    pub fn ntn_bilinear(wk: &[f32], hg1: &[f32], hg2: &[f32], f: usize) -> f32 {
+        assert_eq!(wk.len(), f * f, "W_k shape");
+        linalg::dot(hg1, &linalg::matvec(wk, hg2, f, f))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lanes path: fixed-width vector kernels.
+// ---------------------------------------------------------------------
+
+/// Fixed-width lane kernels. Public so benches and parity tests can pin
+/// this path explicitly regardless of the process-wide dispatch state.
+pub mod lanes {
+    use super::{linalg, LANE_WIDTH};
+
+    /// `acc[i] += a * x[i]`, lane-chunked. Each element still performs
+    /// exactly one multiply and one add in index order, so callers built
+    /// on this stay bit-identical to their scalar twins.
+    #[inline]
+    fn axpy(acc: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(acc.len(), x.len());
+        let mut oi = acc.chunks_exact_mut(LANE_WIDTH);
+        let mut xi = x.chunks_exact(LANE_WIDTH);
+        for (o, xs) in oi.by_ref().zip(xi.by_ref()) {
+            for l in 0..LANE_WIDTH {
+                o[l] += a * xs[l];
+            }
+        }
+        for (o, &xv) in oi.into_remainder().iter_mut().zip(xi.remainder()) {
+            *o += a * xv;
+        }
+    }
+
+    /// Pinned pairwise reduction of one lane register. The fixed tree
+    /// makes the lanes `dot` deterministic across calls and targets.
+    #[inline]
+    fn hsum(acc: [f32; LANE_WIDTH]) -> f32 {
+        ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]))
+    }
+
+    /// Power-of-two nnz class of one row: 0 → 0, 1 → 1, 2 → 2, 3–4 → 3,
+    /// 5–8 → 4, … (class = bit length of nnz, with 3..=4 style ranges
+    /// from rounding up). Rows in one class share an inner trip-count
+    /// regime, the software analogue of keeping vector lanes full.
+    #[inline]
+    pub fn nnz_class(nnz: u32) -> usize {
+        (u32::BITS - nnz.leading_zeros()) as usize
+    }
+
+    /// FlexVector-style row schedule: rows grouped by [`nnz_class`],
+    /// ascending row id within a class (stable counting sort, so the
+    /// schedule is deterministic). Scheduling permutes whole rows only;
+    /// each output row's accumulation order is untouched, which is why
+    /// the bucketed SpMM stays bit-identical to the scalar one.
+    pub fn nnz_bucket_order(indptr: &[u32]) -> Vec<u32> {
+        const CLASSES: usize = (u32::BITS + 1) as usize;
+        let rows = indptr.len() - 1;
+        let mut counts = [0usize; CLASSES];
+        for r in 0..rows {
+            counts[nnz_class(indptr[r + 1] - indptr[r])] += 1;
+        }
+        let mut offsets = [0usize; CLASSES];
+        let mut acc = 0;
+        for (c, &n) in counts.iter().enumerate() {
+            offsets[c] = acc;
+            acc += n;
+        }
+        let mut order = vec![0u32; rows];
+        for r in 0..rows {
+            let c = nnz_class(indptr[r + 1] - indptr[r]);
+            order[offsets[c]] = r as u32;
+            offsets[c] += 1;
+        }
+        order
+    }
+
+    /// nnz-bucketed, lane-vectorized CSR SpMM. Same contract as
+    /// [`linalg::csr_spmm`], bit-identical output.
+    pub fn csr_spmm(
+        indptr: &[u32],
+        indices: &[u16],
+        weights: &[f32],
+        x: &[f32],
+        rows_out: usize,
+        f: usize,
+    ) -> (Vec<f32>, u64) {
+        linalg::check_csr_inputs(indptr, indices, weights, x, rows_out, f);
+        let mut out = vec![0.0f32; rows_out * f];
+        for &r in &nnz_bucket_order(indptr) {
+            let r = r as usize;
+            let (s, t) = (indptr[r] as usize, indptr[r + 1] as usize);
+            if s == t {
+                continue; // empty row: output stays zero, like scalar
+            }
+            let orow = &mut out[r * f..(r + 1) * f];
+            for k in s..t {
+                let col = indices[k] as usize;
+                axpy(orow, weights[k], &x[col * f..(col + 1) * f]);
+            }
+        }
+        (out, indices.len() as u64 * f as u64)
+    }
+
+    /// Lane-vectorized one-hot gather. Same contract as
+    /// [`linalg::onehot_gather`], bit-identical output.
+    pub fn onehot_gather(
+        h: &[f32],
+        w: &[f32],
+        rows: usize,
+        rows_out: usize,
+        f_in: usize,
+        f_out: usize,
+    ) -> (Vec<f32>, u64, u64) {
+        assert!(rows <= rows_out);
+        assert_eq!(w.len(), f_in * f_out, "w shape");
+        let mut out = vec![0.0f32; rows_out * f_out];
+        let mut nnz = 0u64;
+        for i in 0..rows {
+            let hrow = &h[i * f_in..(i + 1) * f_in];
+            let Some(lab) = hrow.iter().position(|&x| x != 0.0) else {
+                continue;
+            };
+            debug_assert!(
+                hrow[lab + 1..].iter().all(|&x| x == 0.0),
+                "row {i} is not one-hot"
+            );
+            nnz += 1;
+            axpy(
+                &mut out[i * f_out..(i + 1) * f_out],
+                hrow[lab],
+                &w[lab * f_out..(lab + 1) * f_out],
+            );
+        }
+        (out, nnz, nnz * f_out as u64)
+    }
+
+    /// Lane-vectorized nonzero-skipping FT. Same contract as
+    /// [`linalg::sparse_row_matmul`], bit-identical output.
+    pub fn sparse_row_matmul(
+        h: &[f32],
+        w: &[f32],
+        rows: usize,
+        rows_out: usize,
+        f_in: usize,
+        f_out: usize,
+    ) -> (Vec<f32>, u64, u64) {
+        assert!(rows <= rows_out);
+        assert_eq!(w.len(), f_in * f_out, "w shape");
+        let mut out = vec![0.0f32; rows_out * f_out];
+        let mut nnz = 0u64;
+        for i in 0..rows {
+            let hrow = &h[i * f_in..(i + 1) * f_in];
+            let orow = &mut out[i * f_out..(i + 1) * f_out];
+            for (k, &hv) in hrow.iter().enumerate() {
+                if hv == 0.0 {
+                    continue;
+                }
+                nnz += 1;
+                axpy(orow, hv, &w[k * f_out..(k + 1) * f_out]);
+            }
+        }
+        (out, nnz, nnz * f_out as u64)
+    }
+
+    /// Lane-vectorized `x[1,d] @ w[d,h]`. k-outer / lane-inner keeps each
+    /// output element's accumulation order equal to the scalar matmul's
+    /// zero-skipping one-row case: bit-identical.
+    pub fn vec_mat(x: &[f32], w: &[f32], d: usize, h: usize) -> Vec<f32> {
+        assert_eq!(x.len(), d, "x shape");
+        assert_eq!(w.len(), d * h, "w shape");
+        let mut y = vec![0.0f32; h];
+        for (k, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue; // match matmul's zero-skip exactly
+            }
+            axpy(&mut y, xv, &w[k * h..(k + 1) * h]);
+        }
+        y
+    }
+
+    /// Lane-partial inner product: `LANE_WIDTH` parallel accumulators,
+    /// one pinned horizontal reduction, scalar tail. Reassociates —
+    /// epsilon contract ([`super::REASSOC_EPS_REL`]).
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        let mut acc = [0.0f32; LANE_WIDTH];
+        let mut ai = a.chunks_exact(LANE_WIDTH);
+        let mut bi = b.chunks_exact(LANE_WIDTH);
+        for (xs, ys) in ai.by_ref().zip(bi.by_ref()) {
+            for l in 0..LANE_WIDTH {
+                acc[l] += xs[l] * ys[l];
+            }
+        }
+        let mut tail = 0.0f32;
+        for (&xv, &yv) in ai.remainder().iter().zip(bi.remainder()) {
+            tail += xv * yv;
+        }
+        hsum(acc) + tail
+    }
+
+    /// Row-wise lanes [`dot`]. Epsilon contract.
+    pub fn matvec(a: &[f32], x: &[f32], m: usize, n: usize) -> Vec<f32> {
+        assert_eq!(a.len(), m * n);
+        assert_eq!(x.len(), n);
+        (0..m).map(|i| dot(&a[i * n..(i + 1) * n], x)).collect()
+    }
+
+    /// Rows of W_k processed per register block in [`ntn_bilinear`]:
+    /// `ROW_BLOCK` lane accumulators live at once (4 × 8 = one 32-slot
+    /// register tile), and `hg2` streams through registers once per
+    /// block instead of once per row.
+    pub const ROW_BLOCK: usize = 4;
+
+    /// Register-blocked bilinear form `hg1ᵀ W_k hg2`. Epsilon contract:
+    /// each row-dot reassociates like [`dot`]; the final sum over rows
+    /// runs in ascending row order, the same order as the scalar
+    /// `dot(hg1, W_k @ hg2)` composition.
+    pub fn ntn_bilinear(wk: &[f32], hg1: &[f32], hg2: &[f32], f: usize) -> f32 {
+        assert_eq!(wk.len(), f * f, "W_k shape");
+        assert_eq!(hg1.len(), f, "hg1 shape");
+        assert_eq!(hg2.len(), f, "hg2 shape");
+        let chunks = f / LANE_WIDTH;
+        let mut sum = 0.0f32;
+        let mut i = 0;
+        while i < f {
+            let rows = (f - i).min(ROW_BLOCK);
+            let mut acc = [[0.0f32; LANE_WIDTH]; ROW_BLOCK];
+            for c in 0..chunks {
+                let xs = &hg2[c * LANE_WIDTH..(c + 1) * LANE_WIDTH];
+                for (r, arow) in acc.iter_mut().enumerate().take(rows) {
+                    let base = (i + r) * f + c * LANE_WIDTH;
+                    let ws = &wk[base..base + LANE_WIDTH];
+                    for l in 0..LANE_WIDTH {
+                        arow[l] += ws[l] * xs[l];
+                    }
+                }
+            }
+            for (r, arow) in acc.into_iter().enumerate().take(rows) {
+                let mut rd = hsum(arow);
+                for j in chunks * LANE_WIDTH..f {
+                    rd += wk[(i + r) * f + j] * hg2[j];
+                }
+                sum += hg1[i + r] * rd;
+            }
+            i += rows;
+        }
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_path_follows_feature_flag() {
+        // Unit tests never toggle the global path (other lib tests score
+        // concurrently in this process); simd_parity.rs owns toggling.
+        assert_eq!(active_path(), KernelPath::compiled_default());
+        let want = if cfg!(feature = "simd") {
+            KernelPath::Lanes
+        } else {
+            KernelPath::Scalar
+        };
+        assert_eq!(KernelPath::compiled_default(), want);
+        assert_eq!(KernelPath::Scalar.as_str(), "scalar");
+        assert_eq!(KernelPath::Lanes.as_str(), "lanes");
+    }
+
+    #[test]
+    fn nnz_classes_are_power_of_two_ranges() {
+        assert_eq!(lanes::nnz_class(0), 0);
+        assert_eq!(lanes::nnz_class(1), 1);
+        assert_eq!(lanes::nnz_class(2), 2);
+        assert_eq!(lanes::nnz_class(3), 2);
+        assert_eq!(lanes::nnz_class(4), 3);
+        assert_eq!(lanes::nnz_class(7), 3);
+        assert_eq!(lanes::nnz_class(8), 4);
+        assert_eq!(lanes::nnz_class(9), 4);
+        assert_eq!(lanes::nnz_class(16), 5);
+    }
+
+    #[test]
+    fn bucket_order_is_a_stable_class_grouped_permutation() {
+        // Rows with nnz 3,0,1,8,2,1 → classes 2,0,1,4,2,1: expect class
+        // groups ascending, row ids ascending within each group.
+        let indptr = vec![0u32, 3, 3, 4, 12, 14, 15];
+        let order = lanes::nnz_bucket_order(&indptr);
+        assert_eq!(order, vec![1, 2, 5, 0, 4, 3]);
+        // Permutation property.
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    /// Tiny CSR of [[0.5, 0.2, 0], [0, 0.9, 0]] padded to 3 output rows
+    /// (mirrors linalg's fixture so the two test suites cross-check).
+    fn tiny_csr() -> (Vec<u32>, Vec<u16>, Vec<f32>) {
+        (vec![0, 2, 3], vec![0, 1, 1], vec![0.5, 0.2, 0.9])
+    }
+
+    #[test]
+    fn lanes_csr_spmm_bit_matches_scalar() {
+        let (indptr, indices, weights) = tiny_csr();
+        // f = 9 exercises one full lane + a 1-element tail.
+        let f = 9;
+        let x: Vec<f32> = (0..3 * f).map(|i| (i as f32 - 10.0) * 0.37).collect();
+        let (want, wm) = scalar::csr_spmm(&indptr, &indices, &weights, &x, 3, f);
+        let (got, gm) = lanes::csr_spmm(&indptr, &indices, &weights, &x, 3, f);
+        assert_eq!(got, want);
+        assert_eq!(gm, wm);
+    }
+
+    #[test]
+    fn lanes_vec_mat_bit_matches_matmul_row() {
+        let d = 11;
+        let h = 13;
+        let x: Vec<f32> = (0..d).map(|i| if i % 3 == 0 { 0.0 } else { i as f32 * 0.2 }).collect();
+        let w: Vec<f32> = (0..d * h).map(|i| ((i % 17) as f32 - 8.0) * 0.05).collect();
+        assert_eq!(lanes::vec_mat(&x, &w, d, h), scalar::vec_mat(&x, &w, d, h));
+    }
+
+    #[test]
+    fn lanes_dot_within_reassociation_epsilon() {
+        for n in [1usize, 7, 8, 9, 16, 63, 64, 65] {
+            let a: Vec<f32> = (0..n).map(|i| ((i * 7 % 23) as f32 - 11.0) * 0.13).collect();
+            let b: Vec<f32> = (0..n).map(|i| ((i * 5 % 19) as f32 - 9.0) * 0.21).collect();
+            let s = scalar::dot(&a, &b);
+            let l = lanes::dot(&a, &b);
+            assert!(
+                (l - s).abs() <= REASSOC_EPS_REL * (1.0 + s.abs()),
+                "n={n}: lanes {l} vs scalar {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn ntn_bilinear_blocks_cover_non_multiple_dims() {
+        // f = 10: one 8-lane chunk + tail, and a 4+4+2 row blocking.
+        let f = 10;
+        let wk: Vec<f32> = (0..f * f).map(|i| ((i % 29) as f32 - 14.0) * 0.03).collect();
+        let hg1: Vec<f32> = (0..f).map(|i| (i as f32 - 4.0) * 0.11).collect();
+        let hg2: Vec<f32> = (0..f).map(|i| (i as f32 - 6.0) * 0.09).collect();
+        let s = scalar::ntn_bilinear(&wk, &hg1, &hg2, f);
+        let l = lanes::ntn_bilinear(&wk, &hg1, &hg2, f);
+        assert!(
+            (l - s).abs() <= REASSOC_EPS_REL * (1.0 + s.abs()),
+            "lanes {l} vs scalar {s}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "CSR column")]
+    fn lanes_csr_spmm_rejects_out_of_range_column() {
+        // Column 5 with an x of only 2 rows: the old `x.len() % f == 0`
+        // check passed vacuously; the shared validation must panic.
+        let (got, _) = lanes::csr_spmm(&[0, 1], &[5], &[1.0], &[1.0, 2.0, 3.0, 4.0], 1, 2);
+        std::hint::black_box(got);
+    }
+}

@@ -41,9 +41,7 @@ pub fn csr_spmm(
     rows_out: usize,
     f: usize,
 ) -> (Vec<f32>, u64) {
-    debug_assert_eq!(indices.len(), weights.len());
-    debug_assert!(!indptr.is_empty() && indptr.len() - 1 <= rows_out);
-    debug_assert_eq!(x.len() % f, 0);
+    check_csr_inputs(indptr, indices, weights, x, rows_out, f);
     let mut out = vec![0.0f32; rows_out * f];
     for i in 0..indptr.len() - 1 {
         let orow = &mut out[i * f..(i + 1) * f];
@@ -57,6 +55,43 @@ pub fn csr_spmm(
     }
     let macs = indices.len() as u64 * f as u64;
     (out, macs)
+}
+
+/// Shared CSR input validation for both `csr_spmm` implementations
+/// (scalar here, lanes in `nn/kernels.rs`). Hard asserts, not
+/// debug_asserts: the old `debug_assert_eq!(x.len() % f, 0)` passed
+/// vacuously for an `x` too short to cover the CSR's column range, and
+/// an out-of-range column index must fail the same way in release
+/// builds as in tests.
+pub(crate) fn check_csr_inputs(
+    indptr: &[u32],
+    indices: &[u16],
+    weights: &[f32],
+    x: &[f32],
+    rows_out: usize,
+    f: usize,
+) {
+    assert_eq!(indices.len(), weights.len(), "CSR indices/weights length mismatch");
+    assert!(
+        !indptr.is_empty() && indptr.len() - 1 <= rows_out,
+        "CSR has {} rows, output holds {rows_out}",
+        indptr.len().max(1) - 1
+    );
+    assert_eq!(
+        *indptr.last().unwrap() as usize,
+        indices.len(),
+        "CSR indptr tail disagrees with nnz"
+    );
+    assert!(f == 0 || x.len() % f == 0, "x length {} not a multiple of f={f}", x.len());
+    if let Some(&max_col) = indices.iter().max() {
+        // The real fix for the vacuous length check: x must actually
+        // cover the maximum column index the CSR will gather from.
+        assert!(
+            (max_col as usize + 1) * f <= x.len(),
+            "CSR column {max_col} out of range: x covers only {} rows of {f}",
+            if f == 0 { 0 } else { x.len() / f }
+        );
+    }
 }
 
 /// Layer-0 feature transform for one-hot inputs: row `i` of the output
@@ -249,6 +284,24 @@ mod tests {
         assert_eq!(macs, 3 * 2);
         // padded row untouched
         assert_eq!(&got[4..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "CSR column")]
+    fn csr_spmm_rejects_out_of_range_column() {
+        // x is 2 rows of f=2 (len 4, so the old `len % f == 0` check
+        // passed) but the CSR references column 5.
+        let (got, _) = csr_spmm(&[0, 1], &[5], &[1.0], &[1.0, 2.0, 3.0, 4.0], 1, 2);
+        std::hint::black_box(got);
+    }
+
+    #[test]
+    #[should_panic(expected = "indptr tail")]
+    fn csr_spmm_rejects_truncated_indptr() {
+        // indptr claims 1 nnz but 2 entries exist: the tail check fires
+        // before a silent partial traversal.
+        let (got, _) = csr_spmm(&[0, 1], &[0, 1], &[1.0, 1.0], &[1.0, 2.0, 3.0, 4.0], 1, 2);
+        std::hint::black_box(got);
     }
 
     #[test]

@@ -1,5 +1,8 @@
 //! Independent rust reference numerics for SimGNN + config/weight loaders.
+//! Hot-path kernels dispatch through `kernels` (scalar ↔ vectorized
+//! lanes, DESIGN.md S16); `linalg` holds the scalar reference loops.
 pub mod config;
+pub mod kernels;
 pub mod linalg;
 pub mod simgnn;
 pub mod weights;

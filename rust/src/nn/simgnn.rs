@@ -6,14 +6,16 @@
 //!  * the functional model inside the cycle simulator (sim/), which needs
 //!    per-stage intermediates and real sparsity counts;
 //!  * the measured CPU baseline engine (runtime/native.rs).
+//!
+//! Hot-path math routes through the `nn::kernels` dispatch layer
+//! (scalar ↔ vectorized lanes, DESIGN.md S16), so every engine built on
+//! these functions inherits the active kernel path.
 
 use crate::graph::encode::EncodedGraph;
 
 use super::config::ModelConfig;
-use super::linalg::{
-    csr_spmm, dot, matmul, matvec, onehot_gather, relu_inplace, sigmoid, sparse_row_matmul,
-    sparsity,
-};
+use super::kernels;
+use super::linalg::{matmul, relu_inplace, sigmoid, sparsity};
 use super::weights::Weights;
 
 /// Which compute path `gcn_forward` takes. Both produce bit-identical
@@ -114,16 +116,19 @@ pub fn gcn_forward_with(
             SparsePolicy::Csr => {
                 // FT: one-hot row-select at layer 0, nonzero-skipping
                 // real-row iteration after ReLU (§3.4's sparsity sources).
+                // All three kernels go through the dispatch layer
+                // (DESIGN.md S16) so the vectorized path is one switch
+                // away from every engine; both paths are bit-identical.
                 let (x, nnz, ft_macs) = if layer == 0 {
-                    onehot_gather(&h, &w.gcn_w[layer], rows, n, f_in, f_out)
+                    kernels::onehot_gather(&h, &w.gcn_w[layer], rows, n, f_in, f_out)
                 } else {
-                    sparse_row_matmul(&h, &w.gcn_w[layer], rows, n, f_in, f_out)
+                    kernels::sparse_row_matmul(&h, &w.gcn_w[layer], rows, n, f_in, f_out)
                 };
                 ft_elements[layer] = nnz;
                 macs += ft_macs;
-                // Aggregation: CSR SpMM over real rows only.
+                // Aggregation: nnz-bucketed CSR SpMM over real rows only.
                 let (a, agg_macs) =
-                    csr_spmm(&g.csr.indptr, &g.csr.indices, &g.csr.weights, &x, n, f_out);
+                    kernels::csr_spmm(&g.csr.indptr, &g.csr.indices, &g.csr.weights, &x, n, f_out);
                 agg_elements += g.csr.nnz() as u64;
                 macs += agg_macs;
                 a
@@ -189,7 +194,7 @@ pub fn attention_pool(cfg: &ModelConfig, w: &Weights, emb: &[f32], mask: &[f32])
     for v in mean.iter_mut() {
         *v /= count;
     }
-    let mut c = matvec(&w.att_w, &mean, f, f);
+    let mut c = kernels::matvec(&w.att_w, &mean, f, f);
     for v in c.iter_mut() {
         *v = v.tanh();
     }
@@ -199,7 +204,7 @@ pub fn attention_pool(cfg: &ModelConfig, w: &Weights, emb: &[f32], mask: &[f32])
             continue;
         }
         let row = &emb[i * f..(i + 1) * f];
-        let a = sigmoid(dot(row, &c));
+        let a = sigmoid(kernels::dot(row, &c));
         for j in 0..f {
             out[j] += a * row[j];
         }
@@ -214,11 +219,10 @@ pub fn ntn_forward(cfg: &ModelConfig, w: &Weights, hg1: &[f32], hg2: &[f32]) -> 
     let mut out = vec![0.0f32; k];
     for slice in 0..k {
         let wk = &w.ntn_w[slice * f * f..(slice + 1) * f * f];
-        // hg1^T W_k hg2
-        let wh2 = matvec(wk, hg2, f, f);
-        let bilinear = dot(hg1, &wh2);
+        // hg1^T W_k hg2 — register-blocked on the lanes path (S16).
+        let bilinear = kernels::ntn_bilinear(wk, hg1, hg2, f);
         let vk = &w.ntn_v[slice * 2 * f..(slice + 1) * 2 * f];
-        let linear = dot(&vk[..f], hg1) + dot(&vk[f..], hg2);
+        let linear = kernels::dot(&vk[..f], hg1) + kernels::dot(&vk[f..], hg2);
         out[slice] = (bilinear + linear + w.ntn_b[slice]).max(0.0);
     }
     out
@@ -230,8 +234,8 @@ pub fn fcn_forward(cfg: &ModelConfig, w: &Weights, s: &[f32]) -> f32 {
     let mut d = cfg.ntn_k;
     for (fw, fb) in w.fc_w.iter().zip(w.fc_b.iter()) {
         let h = fb.len();
-        // x (1 x d) @ fw (d x h)
-        let mut y = matmul(&x, fw, 1, d, h);
+        // x (1 x d) @ fw (d x h), through the kernel dispatch layer.
+        let mut y = kernels::vec_mat(&x, fw, d, h);
         for (v, &b) in y.iter_mut().zip(fb.iter()) {
             *v += b;
         }
@@ -239,7 +243,7 @@ pub fn fcn_forward(cfg: &ModelConfig, w: &Weights, s: &[f32]) -> f32 {
         x = y;
         d = h;
     }
-    let logit = dot(&x, &w.out_w) + w.out_b[0];
+    let logit = kernels::dot(&x, &w.out_w) + w.out_b[0];
     sigmoid(logit)
 }
 

@@ -13,6 +13,9 @@ use super::stats::Samples;
 pub struct BenchResult {
     pub name: String,
     pub mean_ns: f64,
+    /// Median over the timed batches — the robust ns/op figure the
+    /// machine-readable `BENCH_*.json` snapshots record.
+    pub p50_ns: f64,
     pub stddev_ns: f64,
     pub iters: u64,
 }
@@ -66,6 +69,7 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     let r = BenchResult {
         name: name.to_string(),
         mean_ns: samples.mean(),
+        p50_ns: samples.percentile(50.0),
         stddev_ns: samples.stddev(),
         iters: total_iters,
     };
@@ -92,6 +96,7 @@ mod tests {
             std::hint::black_box(1 + 1);
         });
         assert!(r.mean_ns >= 0.0);
+        assert!(r.p50_ns >= 0.0);
         assert!(r.iters > 0);
     }
 

@@ -1,0 +1,367 @@
+//! Scalar↔vectorized kernel parity (DESIGN.md S16): every kernel in the
+//! `nn::kernels` dispatch layer must honor its published contract —
+//! bit-identity for the GCN kernels (`csr_spmm`, `onehot_gather`,
+//! `sparse_row_matmul`, `vec_mat`), the pinned reassociation epsilon
+//! for the reductions (`dot`, `matvec`, `ntn_bilinear`) — across the
+//! batch ladder, padded tails, all-zero rows, and nnz-bucket boundary
+//! sizes (LANE_WIDTH ± 1). MAC counts must be identical on both paths.
+//!
+//! Kernel-level checks call the `scalar`/`lanes` modules explicitly, so
+//! they hold regardless of the `simd` feature. The engine-level ladder
+//! check toggles the process-wide dispatch under a lock (the global is
+//! shared by every test thread in this binary) and restores the
+//! compiled default even on panic.
+
+use std::sync::Mutex;
+
+use spa_gcn::graph::encode::{encode, EncodedGraph, PackedBatch};
+use spa_gcn::graph::generate::{generate, Family};
+use spa_gcn::nn::config::ModelConfig;
+use spa_gcn::nn::kernels::{self, lanes, scalar, KernelPath, LANE_WIDTH, REASSOC_EPS_REL};
+use spa_gcn::nn::simgnn::{gcn_forward_with, SparsePolicy};
+use spa_gcn::nn::weights::Weights;
+use spa_gcn::runtime::native::NativeEngine;
+use spa_gcn::runtime::Engine;
+use spa_gcn::util::prop::check;
+use spa_gcn::util::rng::Rng;
+
+/// Guards the process-wide kernel path; restores the compiled default
+/// on drop so a failing test cannot leak a toggled path into others.
+static PATH_LOCK: Mutex<()> = Mutex::new(());
+
+struct PathGuard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+impl<'a> PathGuard<'a> {
+    fn lock() -> Self {
+        PathGuard(PATH_LOCK.lock().unwrap_or_else(|p| p.into_inner()))
+    }
+}
+
+impl Drop for PathGuard<'_> {
+    fn drop(&mut self) {
+        kernels::set_kernel_path(KernelPath::compiled_default());
+    }
+}
+
+/// nnz-per-row values straddling every bucket boundary the schedule
+/// cares about, LANE_WIDTH ± 1 included.
+const BOUNDARY_NNZ: [usize; 10] = [0, 1, 2, 3, 7, 8, 9, 15, 16, 17];
+
+/// Feature widths covering sub-lane, exact-lane and lane±1 tails.
+const BOUNDARY_F: [usize; 8] = [1, 4, 7, 8, 9, 16, 31, 33];
+
+/// Random CSR with per-row nnz drawn from the boundary set: distinct
+/// ascending columns per row, signed fractional weights.
+fn random_csr(rng: &mut Rng, rows: usize, cols: usize) -> (Vec<u32>, Vec<u16>, Vec<f32>) {
+    let mut indptr = vec![0u32];
+    let mut indices = Vec::new();
+    let mut weights = Vec::new();
+    for _ in 0..rows {
+        let nnz = BOUNDARY_NNZ[rng.below(BOUNDARY_NNZ.len())].min(cols);
+        let mut pool: Vec<usize> = (0..cols).collect();
+        rng.shuffle(&mut pool);
+        let mut picked = pool[..nnz].to_vec();
+        picked.sort_unstable();
+        for c in picked {
+            indices.push(c as u16);
+            weights.push((rng.f32() - 0.5) * 2.0);
+        }
+        indptr.push(indices.len() as u32);
+    }
+    (indptr, indices, weights)
+}
+
+#[test]
+fn property_csr_spmm_bit_identical_at_bucket_boundaries() {
+    check(
+        "csr-spmm-lanes-bit-identity",
+        24,
+        |rng: &mut Rng| {
+            let rows = 1 + rng.below(24);
+            let cols = 1 + rng.below(24);
+            let rows_out = rows + rng.below(4); // padded output rows
+            let f = BOUNDARY_F[rng.below(BOUNDARY_F.len())];
+            let csr = random_csr(rng, rows, cols);
+            let x: Vec<f32> = (0..cols * f).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+            (csr, x, rows_out, f)
+        },
+        |((indptr, indices, weights), x, rows_out, f)| {
+            let (want, wm) = scalar::csr_spmm(indptr, indices, weights, x, *rows_out, *f);
+            let (got, gm) = lanes::csr_spmm(indptr, indices, weights, x, *rows_out, *f);
+            if got != want {
+                return Err("lanes csr_spmm output diverged from scalar".into());
+            }
+            if gm != wm {
+                return Err(format!("MAC counts diverged: lanes {gm} vs scalar {wm}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_ft_kernels_bit_identical_with_zero_rows() {
+    check(
+        "ft-kernels-lanes-bit-identity",
+        24,
+        |rng: &mut Rng| {
+            let rows = 1 + rng.below(12);
+            let rows_out = rows + rng.below(4);
+            let f_in = BOUNDARY_F[rng.below(BOUNDARY_F.len())];
+            let f_out = BOUNDARY_F[rng.below(BOUNDARY_F.len())];
+            // Post-ReLU-like input: ~half zeros, some all-zero rows.
+            let mut h = vec![0.0f32; rows * f_in];
+            for (i, v) in h.iter_mut().enumerate() {
+                if (i / f_in) % 5 != 4 && rng.bool(0.5) {
+                    *v = (rng.f32() - 0.5) * 2.0;
+                }
+            }
+            // One-hot input for the gather (all-zero rows sprinkled in).
+            let mut onehot = vec![0.0f32; rows * f_in];
+            for r in 0..rows {
+                if !rng.bool(0.2) {
+                    onehot[r * f_in + rng.below(f_in)] = 1.0 + rng.f32();
+                }
+            }
+            let w: Vec<f32> = (0..f_in * f_out).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+            (h, onehot, w, rows, rows_out, f_in, f_out)
+        },
+        |(h, onehot, w, rows, rows_out, f_in, f_out)| {
+            let sw = scalar::sparse_row_matmul(h, w, *rows, *rows_out, *f_in, *f_out);
+            let lw = lanes::sparse_row_matmul(h, w, *rows, *rows_out, *f_in, *f_out);
+            if sw != lw {
+                return Err("sparse_row_matmul diverged (out, nnz, macs)".into());
+            }
+            let sg = scalar::onehot_gather(onehot, w, *rows, *rows_out, *f_in, *f_out);
+            let lg = lanes::onehot_gather(onehot, w, *rows, *rows_out, *f_in, *f_out);
+            if sg != lg {
+                return Err("onehot_gather diverged (out, nnz, macs)".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_vec_mat_bit_identical() {
+    check(
+        "vec-mat-lanes-bit-identity",
+        24,
+        |rng: &mut Rng| {
+            let d = 1 + rng.below(40);
+            let h = BOUNDARY_F[rng.below(BOUNDARY_F.len())];
+            // Zeros in x exercise the shared zero-skip branch.
+            let x: Vec<f32> = (0..d)
+                .map(|_| if rng.bool(0.3) { 0.0 } else { (rng.f32() - 0.5) * 2.0 })
+                .collect();
+            let w: Vec<f32> = (0..d * h).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+            (x, w, d, h)
+        },
+        |(x, w, d, h)| {
+            if scalar::vec_mat(x, w, *d, *h) != lanes::vec_mat(x, w, *d, *h) {
+                return Err("vec_mat diverged from scalar matmul row".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_reductions_within_pinned_epsilon() {
+    // The epsilon contract the docs promise: per-element
+    // |lanes − scalar| ≤ REASSOC_EPS_REL · (1 + |scalar|).
+    let within = |l: f32, s: f32| (l - s).abs() <= REASSOC_EPS_REL * (1.0 + s.abs());
+    check(
+        "reductions-epsilon-contract",
+        24,
+        |rng: &mut Rng| {
+            let n = BOUNDARY_F[rng.below(BOUNDARY_F.len())];
+            let m = 1 + rng.below(8);
+            let a: Vec<f32> = (0..m * n).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+            let x: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+            let y: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+            let wk: Vec<f32> = (0..n * n).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+            (a, x, y, wk, m, n)
+        },
+        |(a, x, y, wk, m, n)| {
+            if !within(lanes::dot(x, y), scalar::dot(x, y)) {
+                return Err("dot outside epsilon".into());
+            }
+            let sm = scalar::matvec(a, x, *m, *n);
+            let lm = lanes::matvec(a, x, *m, *n);
+            for (i, (&l, &s)) in lm.iter().zip(sm.iter()).enumerate() {
+                if !within(l, s) {
+                    return Err(format!("matvec[{i}] outside epsilon: {l} vs {s}"));
+                }
+            }
+            let sb = scalar::ntn_bilinear(wk, x, y, *n);
+            let lb = lanes::ntn_bilinear(wk, x, y, *n);
+            if !within(lb, sb) {
+                return Err(format!("ntn_bilinear outside epsilon: {lb} vs {sb}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn empty_and_all_zero_csr_rows_stay_zero_on_both_paths() {
+    // Empty CSR (no rows), rows with zero nnz, and a fully-padded
+    // output: both paths must return exact zeros and zero MACs.
+    for f in [1usize, 7, 8, 9] {
+        let (so, sm) = scalar::csr_spmm(&[0], &[], &[], &[], 4, f);
+        let (lo, lm) = lanes::csr_spmm(&[0], &[], &[], &[], 4, f);
+        assert_eq!(so, vec![0.0; 4 * f]);
+        assert_eq!(so, lo);
+        assert_eq!((sm, lm), (0, 0));
+        // Three rows, middle one empty.
+        let indptr = vec![0u32, 1, 1, 2];
+        let indices = vec![0u16, 1];
+        let weights = vec![0.5f32, -0.25];
+        let x: Vec<f32> = (0..2 * f).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let (so, _) = scalar::csr_spmm(&indptr, &indices, &weights, &x, 4, f);
+        let (lo, _) = lanes::csr_spmm(&indptr, &indices, &weights, &x, 4, f);
+        assert_eq!(so, lo);
+        assert_eq!(&so[f..2 * f], vec![0.0; f].as_slice(), "empty row leaked (f={f})");
+        assert_eq!(&so[3 * f..], vec![0.0; f].as_slice(), "padded row leaked (f={f})");
+    }
+}
+
+#[test]
+fn bucket_order_covers_every_row_exactly_once() {
+    let mut rng = Rng::new(0x5eed);
+    for _ in 0..20 {
+        let rows = 1 + rng.below(40);
+        let (indptr, _, _) = random_csr(&mut rng, rows, 24);
+        let order = lanes::nnz_bucket_order(&indptr);
+        let mut seen = order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..rows as u32).collect::<Vec<_>>());
+        // Classes ascend along the schedule; ids ascend within a class.
+        let class_of = |r: u32| lanes::nnz_class(indptr[r as usize + 1] - indptr[r as usize]);
+        for w in order.windows(2) {
+            let (ca, cb) = (class_of(w[0]), class_of(w[1]));
+            assert!(ca < cb || (ca == cb && w[0] < w[1]), "schedule not stable-grouped");
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "CSR column")]
+fn scalar_csr_spmm_rejects_out_of_range_column() {
+    // Regression for the vacuous `x.len() % f == 0` check: column 9
+    // with x covering 2 rows must panic, not read out of bounds or
+    // silently alias.
+    let (got, _) = scalar::csr_spmm(&[0, 1], &[9], &[1.0], &[0.1, 0.2, 0.3, 0.4], 1, 2);
+    std::hint::black_box(got);
+}
+
+#[test]
+#[should_panic(expected = "CSR column")]
+fn lanes_csr_spmm_rejects_out_of_range_column() {
+    let (got, _) = lanes::csr_spmm(&[0, 1], &[9], &[1.0], &[0.1, 0.2, 0.3, 0.4], 1, 2);
+    std::hint::black_box(got);
+}
+
+// ---------------------------------------------------------------------
+// Engine-level: the batch ladder under each dispatch path.
+// ---------------------------------------------------------------------
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        n_max: 16,
+        num_labels: 8,
+        // Deliberately off-lane (LANE_WIDTH ± 1 style) feature widths so
+        // the engine run exercises lane tails end to end.
+        filters: [LANE_WIDTH + 1, LANE_WIDTH, LANE_WIDTH - 1],
+        relu_mask: [true, true, false],
+        ntn_k: 6,
+        fc_dims: vec![7],
+        seed: 0,
+    }
+}
+
+fn random_pairs(
+    rng: &mut Rng,
+    cfg: &ModelConfig,
+    count: usize,
+) -> Vec<(EncodedGraph, EncodedGraph)> {
+    (0..count)
+        .map(|_| {
+            let n1 = 2 + rng.below(cfg.n_max - 2);
+            let n2 = 2 + rng.below(cfg.n_max - 2);
+            let f1 = Family::ErdosRenyi { n: n1, p_millis: 350 };
+            let f2 = Family::ErdosRenyi { n: n2, p_millis: 350 };
+            let g1 = generate(rng, f1, cfg.n_max, cfg.num_labels);
+            let g2 = generate(rng, f2, cfg.n_max, cfg.num_labels);
+            (
+                encode(&g1, cfg.n_max, cfg.num_labels).unwrap(),
+                encode(&g2, cfg.n_max, cfg.num_labels).unwrap(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn engine_scores_agree_across_ladder_under_both_paths() {
+    let _guard = PathGuard::lock();
+    let cfg = tiny_cfg();
+    let weights = Weights::synthetic(&cfg, 0xD15);
+    let ladder = NativeEngine::new(cfg.clone(), weights.clone())
+        .caps()
+        .batch_ladder()
+        .to_vec();
+    let mut rng = Rng::new(0xABCD);
+    for &b in &ladder {
+        // Underfill by one where possible so padded tail slots ride too.
+        let pairs = random_pairs(&mut rng, &cfg, if b > 1 { b - 1 } else { 1 });
+        let pb = PackedBatch::pack(&pairs, b).unwrap();
+
+        kernels::set_kernel_path(KernelPath::Scalar);
+        let mut eng_s = NativeEngine::new(cfg.clone(), weights.clone());
+        let s = eng_s.score_batch(&pb).unwrap();
+
+        kernels::set_kernel_path(KernelPath::Lanes);
+        let mut eng_l = NativeEngine::new(cfg.clone(), weights.clone());
+        let l = eng_l.score_batch(&pb).unwrap();
+
+        for (i, (ss, ls)) in s.scores.iter().zip(l.scores.iter()).enumerate() {
+            assert!(
+                (ss - ls).abs() < 1e-5,
+                "batch {b} slot {i}: scalar {ss} vs lanes {ls}"
+            );
+        }
+        // Work telemetry is path-independent: identical MAC and element
+        // counts slot by slot (the GCN kernels are bit-identical and
+        // both paths count the same closed forms).
+        for (i, (ts, tl)) in s.telemetry.iter().zip(l.telemetry.iter()).enumerate() {
+            assert_eq!(
+                ts.macs.unwrap(),
+                tl.macs.unwrap(),
+                "batch {b} slot {i}: MAC telemetry diverged between paths"
+            );
+        }
+    }
+}
+
+#[test]
+fn gcn_stage_is_bit_identical_between_paths() {
+    // Scores may move by the tail's epsilon, but the GCN stage itself
+    // (all bit-identical kernels) must match exactly path to path.
+    let _guard = PathGuard::lock();
+    let cfg = tiny_cfg();
+    let w = Weights::synthetic(&cfg, 0xF00D);
+    let mut rng = Rng::new(0x77);
+    for _ in 0..6 {
+        let (e, _) = random_pairs(&mut rng, &cfg, 1).pop().unwrap();
+        kernels::set_kernel_path(KernelPath::Scalar);
+        let ts = gcn_forward_with(&cfg, &w, &e, SparsePolicy::Csr);
+        kernels::set_kernel_path(KernelPath::Lanes);
+        let tl = gcn_forward_with(&cfg, &w, &e, SparsePolicy::Csr);
+        assert_eq!(ts.embeddings, tl.embeddings);
+        assert_eq!(ts.layer_inputs, tl.layer_inputs);
+        assert_eq!(ts.macs, tl.macs);
+        assert_eq!(ts.ft_elements, tl.ft_elements);
+        assert_eq!(ts.agg_elements, tl.agg_elements);
+    }
+}
