@@ -10,14 +10,19 @@
 //! `BENCH_6.json` snapshot; commit the refresh alongside kernel changes.
 
 use spa_gcn::coordinator::corpus::Corpus;
+use spa_gcn::coordinator::pipeline::PipelineConfig;
 use spa_gcn::graph::encode::{encode, PackedBatch};
 use spa_gcn::graph::generate::{generate, perturb, Family};
 use spa_gcn::graph::Graph;
+use spa_gcn::net::client::NetClient;
+use spa_gcn::net::server::NetServer;
+use spa_gcn::net::wire::Response;
+use spa_gcn::net::NetConfig;
 use spa_gcn::nn::simgnn::simgnn_score;
 use spa_gcn::nn::weights::Weights;
 use spa_gcn::runtime::native::NativeEngine;
 use spa_gcn::runtime::pjrt::XlaEngine;
-use spa_gcn::runtime::Engine;
+use spa_gcn::runtime::{Engine, EngineBuilder, EngineKind};
 use spa_gcn::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -104,6 +109,39 @@ fn main() -> anyhow::Result<()> {
     );
     anyhow::ensure!(warm_stats.gcn_forwards() == 0, "warm corpus query re-ran the GCN");
     anyhow::ensure!(warm.scores == cold.scores, "cache changed corpus scores");
+
+    // 7. The same scoring over the network front door (DESIGN.md S17).
+    // Operationally this is two processes —
+    //     spa-gcn serve --listen 127.0.0.1:7700 --engine native
+    //     spa-gcn load  --connect 127.0.0.1:7700 --rate 200
+    // — here, one in-process server on an ephemeral loopback port. The
+    // wire carries f32 scores through JSON losslessly, and the overload
+    // layers (token buckets, deadline shed, degraded mode) answer with
+    // typed retry-after/error responses when traffic exceeds capacity.
+    let server = NetServer::start(
+        cfg.clone(),
+        vec![EngineBuilder::new(EngineKind::Native, artifacts.clone()).into_factory()],
+        PipelineConfig::default(),
+        NetConfig::default(),
+        vec![],
+        "127.0.0.1:0",
+    )?;
+    server.wait_ready();
+    let mut client = NetClient::connect(&server.addr().to_string(), "quickstart")?;
+    match client.pair(g1.clone(), g2.clone())?.resp {
+        Response::Score { score, degraded } => {
+            println!("wire similarity score:   {score:.6} (degraded: {degraded})");
+            anyhow::ensure!((score - native).abs() < 1e-4, "wire score diverged from native");
+        }
+        other => anyhow::bail!("unexpected front-door response: {other:?}"),
+    }
+    drop(client);
+    let metrics = server.finish();
+    let net = metrics.net.expect("front-door counters");
+    println!(
+        "front door: {} accepted, {} throttled, {} shed, {} degraded",
+        net.accepted, net.throttled, net.shed_deadline, net.degraded
+    );
     println!("quickstart OK");
     Ok(())
 }

@@ -26,6 +26,11 @@ pub enum SendPolicy {
     /// Drop the value, count it, and log the first occurrence (load
     /// shedding for traffic where freshness beats completeness).
     DropWithLog,
+    /// Drop the value and count it, silently. For front-door admission
+    /// queues where the *sender* turns the drop into a typed
+    /// retry-after response — the client hears about every drop, so
+    /// logging each one server-side would only duplicate the signal.
+    DropNewest,
 }
 
 /// Live occupancy counters for one channel, shared by all its senders
@@ -39,6 +44,7 @@ pub struct ChannelStats {
     max_depth: AtomicUsize,
     sent: AtomicU64,
     dropped: AtomicU64,
+    shed: AtomicU64,
 }
 
 impl ChannelStats {
@@ -50,6 +56,7 @@ impl ChannelStats {
             max_depth: AtomicUsize::new(0),
             sent: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
         }
     }
 
@@ -83,6 +90,25 @@ impl ChannelStats {
         self.dropped.fetch_add(1, Ordering::Relaxed) + 1
     }
 
+    /// Receiver-side shed accounting: the item was *delivered* (it
+    /// counted as sent and occupied depth) but the consumer discarded
+    /// it unprocessed — e.g. a front-door frame dequeued after its
+    /// deadline. Distinct from `dropped`, which counts items that never
+    /// entered the queue.
+    pub fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current occupancy (buffered items + senders mid-send). A load
+    /// signal, not a synchronization primitive.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     pub fn name(&self) -> &str {
         &self.name
     }
@@ -93,6 +119,7 @@ impl ChannelStats {
             capacity: self.capacity,
             sent: self.sent.load(Ordering::Relaxed),
             dropped: self.dropped.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             max_depth: self.max_depth.load(Ordering::Relaxed),
         }
     }
@@ -105,6 +132,9 @@ pub struct ChannelSnapshot {
     pub capacity: usize,
     pub sent: u64,
     pub dropped: u64,
+    /// Items delivered but discarded unprocessed by the consumer
+    /// (deadline shedding at dequeue — see [`ChannelStats::note_shed`]).
+    pub shed: u64,
     /// Peak occupancy observed over the channel's lifetime. The gauge
     /// counts buffered items plus senders mid-send (the increment happens
     /// before the blocking send, so it can exceed `capacity` by the
@@ -122,7 +152,8 @@ pub enum SendResult<T> {
     Sent,
     /// `Try` policy only: channel full, value handed back.
     Full(T),
-    /// `DropWithLog` policy only: channel full, value dropped + counted.
+    /// `DropWithLog` / `DropNewest` policies only: channel full, value
+    /// dropped + counted.
     Dropped,
     /// Receiver gone; value handed back.
     Disconnected(T),
@@ -167,32 +198,39 @@ impl<T> NamedSender<T> {
                     }
                 }
             }
-            SendPolicy::Try | SendPolicy::DropWithLog => match self.tx.try_send(v) {
-                Ok(()) => {
-                    self.stats.commit_depth(provisional);
-                    SendResult::Sent
-                }
-                Err(TrySendError::Full(v)) => {
-                    // Failed attempt: retract without touching max_depth,
-                    // so peaks never count items that were never queued.
-                    self.stats.unsend();
-                    if self.policy == SendPolicy::Try {
-                        SendResult::Full(v)
-                    } else {
-                        if self.stats.note_drop() == 1 {
-                            eprintln!(
-                                "channel '{}' full (cap {}): dropping (further drops counted silently)",
-                                self.stats.name, self.stats.capacity
-                            );
+            SendPolicy::Try | SendPolicy::DropWithLog | SendPolicy::DropNewest => {
+                match self.tx.try_send(v) {
+                    Ok(()) => {
+                        self.stats.commit_depth(provisional);
+                        SendResult::Sent
+                    }
+                    Err(TrySendError::Full(v)) => {
+                        // Failed attempt: retract without touching max_depth,
+                        // so peaks never count items that were never queued.
+                        self.stats.unsend();
+                        match self.policy {
+                            SendPolicy::Try => SendResult::Full(v),
+                            SendPolicy::DropNewest => {
+                                self.stats.note_drop();
+                                SendResult::Dropped
+                            }
+                            _ => {
+                                if self.stats.note_drop() == 1 {
+                                    eprintln!(
+                                        "channel '{}' full (cap {}): dropping (further drops counted silently)",
+                                        self.stats.name, self.stats.capacity
+                                    );
+                                }
+                                SendResult::Dropped
+                            }
                         }
-                        SendResult::Dropped
+                    }
+                    Err(TrySendError::Disconnected(v)) => {
+                        self.stats.unsend();
+                        SendResult::Disconnected(v)
                     }
                 }
-                Err(TrySendError::Disconnected(v)) => {
-                    self.stats.unsend();
-                    SendResult::Disconnected(v)
-                }
-            },
+            }
         }
     }
 
@@ -291,6 +329,60 @@ mod tests {
         assert_eq!(snap.sent, 1);
         assert_eq!(snap.dropped, 2);
         assert_eq!(rx.recv().unwrap(), 1);
+    }
+
+    #[test]
+    fn drop_newest_policy_counts_silently() {
+        let (tx, rx) = channel::<u32>("t", 1, SendPolicy::DropNewest);
+        assert!(tx.send(1).is_sent());
+        assert!(matches!(tx.send(2), SendResult::Dropped));
+        assert!(matches!(tx.send(3), SendResult::Dropped));
+        let snap = tx.stats().snapshot();
+        assert_eq!(snap.sent, 1, "drops never count as sent");
+        assert_eq!(snap.dropped, 2);
+        assert_eq!(snap.shed, 0, "sender-side drops are not sheds");
+        assert_eq!(snap.max_depth, 1, "dropped items never occupy depth");
+        // The survivor is the OLDEST item: DropNewest sheds arrivals,
+        // not queued work.
+        assert_eq!(rx.recv().unwrap(), 1);
+    }
+
+    #[test]
+    fn block_policy_never_drops() {
+        let (tx, rx) = channel::<u32>("t", 2, SendPolicy::Block);
+        for i in 0..2 {
+            assert!(tx.send(i).is_sent());
+        }
+        let snap = tx.stats().snapshot();
+        assert_eq!((snap.sent, snap.dropped, snap.shed), (2, 0, 0));
+        drop(rx);
+    }
+
+    #[test]
+    fn receiver_side_shed_accounting() {
+        let (tx, rx) = channel::<u32>("t", 4, SendPolicy::DropNewest);
+        assert!(tx.send(1).is_sent());
+        assert!(tx.send(2).is_sent());
+        // Consumer dequeues both but discards the first unprocessed
+        // (e.g. its deadline passed while queued).
+        assert_eq!(rx.recv().unwrap(), 1);
+        rx.stats().note_shed();
+        assert_eq!(rx.recv().unwrap(), 2);
+        let snap = rx.stats().snapshot();
+        assert_eq!(snap.sent, 2, "shed items still count as sent");
+        assert_eq!(snap.dropped, 0, "sheds are not sender-side drops");
+        assert_eq!(snap.shed, 1);
+    }
+
+    #[test]
+    fn depth_gauge_reads_current_occupancy() {
+        let (tx, rx) = channel::<u32>("t", 4, SendPolicy::Block);
+        assert_eq!(tx.stats().depth(), 0);
+        assert!(tx.send(1).is_sent());
+        assert!(tx.send(2).is_sent());
+        assert_eq!(tx.stats().depth(), 2);
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(tx.stats().depth(), 1);
     }
 
     #[test]

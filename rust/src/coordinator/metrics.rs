@@ -50,6 +50,24 @@ pub struct LaneInfo {
     pub engine: String,
 }
 
+/// Point-in-time copy of the net front door's counters (accepted /
+/// throttled / shed / degraded), attached to [`Metrics`] by the net
+/// server at shutdown the same way the pipeline attaches channel
+/// snapshots. `None` means serving didn't run behind a listener.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetSnapshot {
+    /// Frames that passed the token buckets and entered admission.
+    pub accepted: u64,
+    /// Frames answered with `retry_after_ms` (token bucket empty, or
+    /// the admission queue shed the newest arrival).
+    pub throttled: u64,
+    /// Frames dequeued after their deadline and shed unscored.
+    pub shed_deadline: u64,
+    /// Responses served by a degraded lane (shrunk top-k, or the GED
+    /// heuristic fallback scorer).
+    pub degraded: u64,
+}
+
 /// Aggregated serving statistics, owned by the responder stage.
 #[derive(Debug)]
 pub struct Metrics {
@@ -124,6 +142,9 @@ pub struct Metrics {
     pub channels: Vec<ChannelSnapshot>,
     /// Lane -> engine mapping, filled in by the pipeline at shutdown.
     pub lanes: Vec<LaneInfo>,
+    /// Net front-door counters, filled in by the net server at shutdown
+    /// (`None` when serving ran in-process only).
+    pub net: Option<NetSnapshot>,
     started: Instant,
 }
 
@@ -162,6 +183,7 @@ impl Metrics {
             engine_errors: 0,
             channels: Vec::new(),
             lanes: Vec::new(),
+            net: None,
             started: Instant::now(),
         }
     }
@@ -376,6 +398,23 @@ impl Metrics {
                 fmt(s.agg_elements.mean()),
             ]);
         }
+        // Net front-door counters (present only when serving ran behind
+        // a listener). Appended after the stable rows like all newer
+        // telemetry; the overload story in one glance: how much traffic
+        // the wire offered, how much the buckets/queue turned away, how
+        // much the deadline shed, and how much was answered degraded.
+        if let Some(net) = &self.net {
+            t.row(vec!["net accepted".into(), format!("{}", net.accepted)]);
+            t.row(vec!["net throttled".into(), format!("{}", net.throttled)]);
+            t.row(vec![
+                "net shed (deadline)".into(),
+                format!("{}", net.shed_deadline),
+            ]);
+            t.row(vec![
+                "degraded responses".into(),
+                format!("{}", net.degraded),
+            ]);
+        }
         // Channel occupancy: peak depth >= 2 on an exec lane means the
         // encoder genuinely ran ahead of the executor (overlap) — a peak
         // of 1 is just a single hand-off in flight.
@@ -383,8 +422,8 @@ impl Metrics {
             t.row(vec![
                 format!("chan {} (cap {})", c.name, c.capacity),
                 format!(
-                    "peak depth {}  sent {}  dropped {}",
-                    c.max_depth, c.sent, c.dropped
+                    "peak depth {}  sent {}  dropped {}  shed {}",
+                    c.max_depth, c.sent, c.dropped, c.shed
                 ),
             ]);
         }
@@ -603,6 +642,7 @@ mod tests {
             capacity: 2,
             sent: 5,
             dropped: 0,
+            shed: 0,
             max_depth: 2,
         });
         let t = m.render_table("serve metrics");
@@ -617,5 +657,51 @@ mod tests {
         assert_eq!(t.rows[3][0], "throughput (query/s)");
         assert_eq!(t.rows[5][0], "latency p50 (ms)");
         assert_eq!(t.rows[8][0], "mean batch size");
+    }
+
+    #[test]
+    fn net_rows_render_after_stable_rows() {
+        let mut m = Metrics::new();
+        m.record(&res(Outcome::Score(0.9)));
+        m.net = Some(NetSnapshot {
+            accepted: 40,
+            throttled: 7,
+            shed_deadline: 3,
+            degraded: 5,
+        });
+        m.channels.push(ChannelSnapshot {
+            name: "net.admit".into(),
+            capacity: 8,
+            sent: 43,
+            dropped: 2,
+            shed: 3,
+            max_depth: 8,
+        });
+        let t = m.render_table("t");
+        // Name-based reads through Table::get — the counters land
+        // verbatim.
+        assert_eq!(t.get("net accepted"), Some("40"));
+        assert_eq!(t.get("net throttled"), Some("7"));
+        assert_eq!(t.get("net shed (deadline)"), Some("3"));
+        assert_eq!(t.get("degraded responses"), Some("5"));
+        // Appended after the stable indexed prefix, never inside it.
+        assert_eq!(t.rows[0][0], "queries scored");
+        assert_eq!(t.rows[8][0], "mean batch size");
+        let accepted_at = t.rows.iter().position(|r| r[0] == "net accepted").unwrap();
+        assert!(accepted_at > 8);
+        // The per-channel shed counter reaches the channel row.
+        assert_eq!(
+            t.get("chan net.admit (cap 8)"),
+            Some("peak depth 8  sent 43  dropped 2  shed 3")
+        );
+    }
+
+    #[test]
+    fn net_rows_absent_without_listener() {
+        let mut m = Metrics::new();
+        m.record(&res(Outcome::Score(0.5)));
+        let rendered = m.render_table("t").render();
+        assert!(!rendered.contains("net accepted"));
+        assert!(!rendered.contains("degraded responses"));
     }
 }

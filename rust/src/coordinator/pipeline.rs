@@ -309,6 +309,14 @@ impl Default for PipelineConfig {
     }
 }
 
+/// Observer the responder stage invokes on every [`QueryResult`] just
+/// before recording it into [`Metrics`]. This is how out-of-process
+/// front doors (the net subsystem) hear about their queries' outcomes
+/// without a second results channel: the tap runs on the responder
+/// thread, so it must never block (route-and-send to a buffered
+/// per-request slot, not synchronous work).
+pub type ResultTap = Arc<dyn Fn(&QueryResult) + Send + Sync>;
+
 /// A running pipeline. `submit` queries, then `finish` to shut down and
 /// collect metrics. Dropping without `finish` detaches the stage threads
 /// (they drain and exit on their own).
@@ -317,6 +325,32 @@ pub struct Pipeline {
     stages: Vec<JoinHandle<()>>,
     responder: JoinHandle<Metrics>,
     lane_caps: Vec<Arc<LaneCaps>>,
+}
+
+/// A clonable submit handle for multi-producer ingest (the net front
+/// door's admission stage). Shares the admission channel — and its
+/// blocking backpressure — with [`Pipeline::submit`].
+///
+/// Shutdown contract: [`Pipeline::finish`] only starts the stage drop
+/// cascade once every outstanding `SubmitHandle` has been dropped, so
+/// holders must be stopped (and their handles dropped) *before* calling
+/// `finish`, or `finish` will block indefinitely.
+pub struct SubmitHandle {
+    tx: NamedSender<Query>,
+}
+
+impl Clone for SubmitHandle {
+    fn clone(&self) -> Self {
+        SubmitHandle { tx: self.tx.clone() }
+    }
+}
+
+impl SubmitHandle {
+    /// Submit one query. Blocks when admission is saturated
+    /// (backpressure). Returns false if the pipeline has shut down.
+    pub fn submit(&self, q: Query) -> bool {
+        self.tx.send(q).is_sent()
+    }
 }
 
 impl Pipeline {
@@ -330,6 +364,17 @@ impl Pipeline {
         model: ModelConfig,
         factories: Vec<EngineFactory>,
         cfg: PipelineConfig,
+    ) -> Pipeline {
+        Self::start_with_tap(model, factories, cfg, None)
+    }
+
+    /// [`Pipeline::start`] with an optional [`ResultTap`] the responder
+    /// invokes on every result before recording it (net front door).
+    pub fn start_with_tap(
+        model: ModelConfig,
+        factories: Vec<EngineFactory>,
+        cfg: PipelineConfig,
+        tap: Option<ResultTap>,
     ) -> Pipeline {
         assert!(!factories.is_empty(), "pipeline needs at least one engine lane");
         let (admit_tx, admit_rx) = channel("admit", cfg.admit_cap, SendPolicy::Block);
@@ -407,7 +452,7 @@ impl Pipeline {
         // The pipeline keeps no results sender: once every stage drops
         // its clones the drop cascade reaches the responder.
         drop(results_tx);
-        let responder = spawn("responder", move || responder_stage(results_rx, stats));
+        let responder = spawn("responder", move || responder_stage(results_rx, stats, tap));
 
         Pipeline {
             submit_tx: admit_tx,
@@ -421,6 +466,15 @@ impl Pipeline {
     /// (backpressure). Returns false if the pipeline has shut down.
     pub fn submit(&self, q: Query) -> bool {
         self.submit_tx.send(q).is_sent()
+    }
+
+    /// A clonable submit handle for producers that outlive this
+    /// reference (the net admission stage). See [`SubmitHandle`] for
+    /// the shutdown contract.
+    pub fn submit_handle(&self) -> SubmitHandle {
+        SubmitHandle {
+            tx: self.submit_tx.clone(),
+        }
     }
 
     /// Block until every lane's caps handshake has published (engine
@@ -861,9 +915,16 @@ fn fused_stage(
     }
 }
 
-fn responder_stage(rx: NamedReceiver<QueryResult>, stats: Vec<Arc<ChannelStats>>) -> Metrics {
+fn responder_stage(
+    rx: NamedReceiver<QueryResult>,
+    stats: Vec<Arc<ChannelStats>>,
+    tap: Option<ResultTap>,
+) -> Metrics {
     let mut metrics = Metrics::new();
     while let Ok(r) = rx.recv() {
+        if let Some(tap) = &tap {
+            tap(&r);
+        }
         metrics.record(&r);
     }
     metrics.channels = stats.iter().map(|s| s.snapshot()).collect();

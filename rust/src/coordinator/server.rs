@@ -23,6 +23,7 @@ use std::collections::HashMap;
 
 use crate::graph::dataset::{random_pairs, GraphDb};
 use crate::graph::generate::{generate, Family};
+use crate::net::NetConfig;
 use crate::nn::config::ArtifactsMeta;
 use crate::runtime::embed_cache::{EmbedCache, DEFAULT_CAPACITY};
 use crate::runtime::{EngineBuilder, EngineFactory, EngineKind};
@@ -64,6 +65,9 @@ pub struct ServeConfig {
     pub corpus_size: usize,
     /// How many ranked candidates each corpus query returns (`--topk K`).
     pub topk: usize,
+    /// Front-door knobs for `serve --listen` (ignored by the in-process
+    /// workload entrypoints).
+    pub net: NetConfig,
 }
 
 impl Default for ServeConfig {
@@ -79,12 +83,13 @@ impl Default for ServeConfig {
             pipeline_depth: 2,
             corpus_size: 0,
             topk: 10,
+            net: NetConfig::default(),
         }
     }
 }
 
 impl ServeConfig {
-    fn pipeline_config(&self) -> PipelineConfig {
+    pub(crate) fn pipeline_config(&self) -> PipelineConfig {
         PipelineConfig {
             policy: BatchPolicy {
                 max_batch: self.batch_max.max(1),
@@ -99,7 +104,7 @@ impl ServeConfig {
 
     /// Effective worker lane count: `workers` raised so every requested
     /// engine kind gets at least one lane.
-    fn lanes(&self) -> usize {
+    pub(crate) fn lanes(&self) -> usize {
         self.workers.max(1).max(self.engines.len())
     }
 
@@ -114,7 +119,7 @@ impl ServeConfig {
     /// unique graph across the whole pipeline, not per lane. Kinds
     /// never share a cache with each other — cached work counters are
     /// policy-specific (`native` vs `native-dense`).
-    fn lane_factories(&self) -> Vec<EngineFactory> {
+    pub(crate) fn lane_factories(&self) -> Vec<EngineFactory> {
         let mut caches: HashMap<EngineKind, Arc<EmbedCache>> = HashMap::new();
         (0..self.lanes())
             .map(|w| {
@@ -132,7 +137,7 @@ impl ServeConfig {
     }
 
     /// The engine list as a CLI-style string (report titles).
-    fn engines_label(&self) -> String {
+    pub(crate) fn engines_label(&self) -> String {
         self.engines
             .iter()
             .map(EngineKind::as_str)

@@ -6,6 +6,7 @@
 pub mod coordinator;
 pub mod ged;
 pub mod graph;
+pub mod net;
 pub mod nn;
 pub mod report;
 pub mod runtime;

@@ -17,6 +17,9 @@ use spa_gcn::coordinator::server::{serve_paced, serve_workload, ServeConfig};
 use spa_gcn::ged::{exact_ged, ged_similarity};
 use spa_gcn::graph::dataset::GraphDb;
 use spa_gcn::graph::generate::{generate, Family};
+use spa_gcn::net::client::{run_load, LoadConfig};
+use spa_gcn::net::server::serve_listen;
+use spa_gcn::net::NetConfig;
 use spa_gcn::nn::kernels::{set_kernel_path, KernelPath};
 use spa_gcn::report::tables::{self, Context};
 use spa_gcn::runtime::EngineKind;
@@ -62,6 +65,12 @@ impl Args {
     fn bool(&self, key: &str) -> bool {
         self.flags.get(key).map(|v| v == "true").unwrap_or(false)
     }
+    fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
 }
 
 fn usage() -> ! {
@@ -80,7 +89,13 @@ fn usage() -> ! {
          \t --pipeline-depth 0 = sequential encode+execute baseline;\n\
          \t --rate runs open-loop Poisson pacing instead of closed-loop flood;\n\
          \t --corpus N switches to one-vs-many search: each query ranks an\n\
-         \t N-graph corpus through the embedding cache and returns its --topk best)\n\
+         \t N-graph corpus through the embedding cache and returns its --topk best;\n\
+         \t --listen ADDR serves the wire protocol instead of a synthetic\n\
+         \t workload — press Enter (or close stdin) to stop and print metrics;\n\
+         \t front-door knobs: [--net-conn-cap N] [--net-admit-cap N]\n\
+         \t [--net-refill QPS] [--net-burst B] [--net-deadline-ms T])\n\
+         \n  load --connect ADDR [--clients N] [--rate QPS] [--queries N]\n\
+         \t[--topk K] [--seed S]  (drive a `serve --listen` front door)\n\
          \n  gen [--family aids|linux|imdb] [--count N]\n\
          \n  ged [--nodes N] [--pairs P]",
         kinds.join(", ")
@@ -96,6 +111,7 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "report" => cmd_report(&args),
         "serve" => cmd_serve(&args),
+        "load" => cmd_load(&args),
         "gen" => cmd_gen(&args),
         "ged" => cmd_ged(&args),
         _ => usage(),
@@ -162,6 +178,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "lanes" => set_kernel_path(KernelPath::Lanes),
         other => anyhow::bail!("--kernels must be scalar or lanes, got {other}"),
     }
+    let net_defaults = NetConfig::default();
     let cfg = ServeConfig {
         artifacts_dir: artifacts_dir(args),
         engines: EngineKind::parse_list(&args.flag("engine", "xla"))?,
@@ -173,7 +190,34 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         pipeline_depth: args.usize("pipeline-depth", 2),
         corpus_size: args.usize("corpus", 0),
         topk: args.usize("topk", 10),
+        net: NetConfig {
+            conn_cap: args.usize("net-conn-cap", net_defaults.conn_cap),
+            admit_cap: args.usize("net-admit-cap", net_defaults.admit_cap),
+            refill_per_s: args.f64("net-refill", net_defaults.refill_per_s),
+            burst: args.f64("net-burst", net_defaults.burst),
+            deadline_ms: args.usize("net-deadline-ms", net_defaults.deadline_ms as usize) as u64,
+            ..net_defaults
+        },
     };
+    if let Some(listen) = args.flags.get("listen") {
+        let server = serve_listen(&cfg, listen)?;
+        let ready = server.wait_ready();
+        eprintln!(
+            "spa-gcn front door listening on {} ({ready} lane(s) ready); press Enter to stop",
+            server.addr()
+        );
+        let mut line = String::new();
+        let _ = std::io::stdin().read_line(&mut line);
+        let metrics = server.finish();
+        let report = metrics.render_table(&format!(
+            "serve-listen: engine={} workers={} addr={}",
+            args.flag("engine", "xla"),
+            args.usize("workers", 1),
+            listen
+        ));
+        println!("{}", report.render());
+        return Ok(());
+    }
     let report = match args.flags.get("rate") {
         Some(rate) => {
             let rate: f64 = rate
@@ -185,6 +229,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         None => serve_workload(&cfg)?,
     };
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_load(args: &Args) -> anyhow::Result<()> {
+    let defaults = LoadConfig::default();
+    let cfg = LoadConfig {
+        connect: args.flag("connect", &defaults.connect),
+        clients: args.usize("clients", defaults.clients),
+        rate_qps: args.f64("rate", defaults.rate_qps),
+        queries: args.usize("queries", defaults.queries),
+        seed: args.usize("seed", defaults.seed as usize) as u64,
+        topk: args.usize("topk", defaults.topk),
+    };
+    let report = run_load(&cfg)?;
     println!("{}", report.render());
     Ok(())
 }

@@ -1,0 +1,571 @@
+//! Admission front stage: token buckets, deadline shedding at dequeue,
+//! the queue-depth EWMA load signal, and the degraded scoring mode.
+//!
+//! Connection threads never talk to the batcher. Every scoring request
+//! crosses one bounded `NamedChannel` (`net.admit`, policy
+//! [`SendPolicy::DropNewest`]) into the single front-stage thread, which
+//! is the only code in `net/` that constructs [`Query`]s and calls
+//! [`SubmitHandle::submit`] — CI grep-guards that topology. The front
+//! stage is where the overload taxonomy's inner layers live:
+//!
+//! * **Throttle** (connection thread, before the queue): a per-client
+//!   token bucket answers `retry_after_ms` instead of queueing. The
+//!   admission queue dropping the newest arrival is the same answer —
+//!   backpressure is pushed to the client, never accumulated.
+//! * **Shed** (front stage, at dequeue): a frame that already waited
+//!   past its deadline is answered with a typed error, not scored —
+//!   scoring it would spend engine time on a response the client has
+//!   stopped waiting for. Sheds are counted on the channel
+//!   ([`ChannelStats::note_shed`]) and in `net shed (deadline)`.
+//! * **Degrade** (front stage, under the EWMA load signal): top-k
+//!   queries shrink to `degraded_topk`, and pair queries fall back to
+//!   the `ged::heuristics` bound-based scorer — the coarse half of a
+//!   LW-GCN-style cheap-lane cascade. Degradation is recorded on the
+//!   response (`degraded: true`) and in `degraded responses`.
+//!
+//! [`SendPolicy::DropNewest`]: crate::coordinator::channel::SendPolicy::DropNewest
+//! [`ChannelStats::note_shed`]: crate::coordinator::channel::ChannelStats::note_shed
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::channel::NamedReceiver;
+use crate::coordinator::corpus::Corpus;
+use crate::coordinator::pipeline::{ResultTap, SubmitHandle};
+use crate::coordinator::query::{Outcome, Query, QueryResult};
+use crate::ged::ged_similarity;
+use crate::ged::heuristics::greedy_ged;
+
+use super::wire::{Request, Response, ResponseFrame};
+use super::{NetConfig, NetCounters};
+
+/// One client's token bucket: `burst` capacity, `rate` tokens/s refill,
+/// lazily advanced on each take.
+#[derive(Debug)]
+pub struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+    rate: f64,
+    burst: f64,
+}
+
+impl TokenBucket {
+    pub fn new(rate: f64, burst: f64, now: Instant) -> Self {
+        TokenBucket {
+            tokens: burst.max(1.0),
+            last: now,
+            rate: rate.max(0.0),
+            burst: burst.max(1.0),
+        }
+    }
+
+    /// Take one token, or report how long until one refills.
+    pub fn try_take(&mut self, now: Instant) -> Result<(), Duration> {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else {
+            let secs = if self.rate > 0.0 {
+                (1.0 - self.tokens) / self.rate
+            } else {
+                f64::INFINITY
+            };
+            // Clamp: retry-after is advice, not a promise; a zero-rate
+            // bucket still answers something finite.
+            Err(Duration::from_secs_f64(secs.clamp(0.001, 60.0)))
+        }
+    }
+}
+
+/// Per-client buckets, keyed by the frame header's client id. Bounded:
+/// past `max_clients` distinct ids, new clients share the anonymous
+/// (`""`) bucket, so hostile id churn can't grow the table without
+/// limit.
+pub struct BucketTable {
+    rate: f64,
+    burst: f64,
+    max_clients: usize,
+    buckets: Mutex<HashMap<String, TokenBucket>>,
+}
+
+impl BucketTable {
+    pub fn new(cfg: &NetConfig) -> Self {
+        BucketTable {
+            rate: cfg.refill_per_s,
+            burst: cfg.burst,
+            max_clients: cfg.max_clients.max(1),
+            buckets: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Charge one request to `client`'s bucket.
+    pub fn admit(&self, client: &str) -> Result<(), Duration> {
+        let now = Instant::now();
+        let mut map = self.buckets.lock().unwrap_or_else(|p| p.into_inner());
+        let key = if map.contains_key(client) || map.len() < self.max_clients {
+            client
+        } else {
+            ""
+        };
+        map.entry(key.to_string())
+            .or_insert_with(|| TokenBucket::new(self.rate, self.burst, now))
+            .try_take(now)
+    }
+
+    /// Distinct buckets currently tracked (tests).
+    pub fn tracked(&self) -> usize {
+        self.buckets.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+}
+
+/// Queue-depth EWMA with hysteresis: degraded mode engages at `hi`,
+/// disengages below `lo`. Written by the front-stage thread only; the
+/// atomics exist so connection threads and reports can read it.
+pub struct LoadSignal {
+    ewma_bits: AtomicU64,
+    degraded: AtomicBool,
+    hi: f64,
+    lo: f64,
+    alpha: f64,
+}
+
+impl LoadSignal {
+    pub fn new(hi: f64, lo: f64) -> Self {
+        LoadSignal {
+            ewma_bits: AtomicU64::new(0f64.to_bits()),
+            degraded: AtomicBool::new(false),
+            hi,
+            lo: lo.min(hi),
+            alpha: 0.2,
+        }
+    }
+
+    /// Fold one queue-depth observation (as a fraction of capacity)
+    /// into the EWMA; returns whether the degraded mode is now engaged.
+    pub fn observe(&self, fraction: f64) -> bool {
+        let prev = f64::from_bits(self.ewma_bits.load(Ordering::Relaxed));
+        let next = prev + self.alpha * (fraction - prev);
+        self.ewma_bits.store(next.to_bits(), Ordering::Relaxed);
+        let engaged = if self.degraded.load(Ordering::Relaxed) {
+            next > self.lo
+        } else {
+            next >= self.hi
+        };
+        self.degraded.store(engaged, Ordering::Relaxed);
+        engaged
+    }
+
+    pub fn ewma(&self) -> f64 {
+        f64::from_bits(self.ewma_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+}
+
+/// A frame that passed its token bucket, en route to the front stage.
+pub struct AdmittedFrame {
+    /// Client id (telemetry only past this point).
+    pub client: String,
+    /// Client-chosen correlation id, echoed on the response.
+    pub request_id: u64,
+    /// Pair or TopK (Hello is answered at the connection layer).
+    pub req: Request,
+    /// Shed-at-dequeue bound: arrival time + the configured deadline.
+    pub deadline: Instant,
+    /// Per-request reply slot. Capacity 1 and written at most once, so
+    /// sends never block the front stage or the responder tap; a
+    /// disconnected client just makes the send a no-op.
+    pub reply: SyncSender<ResponseFrame>,
+}
+
+struct PendingReply {
+    request_id: u64,
+    degraded: bool,
+    reply: SyncSender<ResponseFrame>,
+}
+
+/// Routes pipeline results back to the connection threads waiting on
+/// them. The front stage assigns each submitted query a process-unique
+/// internal id (client ids from different connections may collide);
+/// the responder's [`ResultTap`] looks the internal id back up and
+/// forwards a [`ResponseFrame`] carrying the client's own id.
+pub struct ResultRouter {
+    next: AtomicU64,
+    routes: Mutex<HashMap<u64, PendingReply>>,
+}
+
+impl Default for ResultRouter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ResultRouter {
+    pub fn new() -> Self {
+        ResultRouter {
+            next: AtomicU64::new(1),
+            routes: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Claim an internal query id and register where its result goes.
+    pub fn register(
+        &self,
+        request_id: u64,
+        degraded: bool,
+        reply: SyncSender<ResponseFrame>,
+    ) -> u64 {
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        self.routes
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .insert(
+                id,
+                PendingReply {
+                    request_id,
+                    degraded,
+                    reply,
+                },
+            );
+        id
+    }
+
+    /// Drop a registration whose submit failed.
+    pub fn cancel(&self, internal_id: u64) {
+        self.routes
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .remove(&internal_id);
+    }
+
+    /// Forward one pipeline result to its waiting connection; false if
+    /// the result was not a net-routed query (in-process submits share
+    /// the pipeline).
+    pub fn deliver(&self, r: &QueryResult) -> bool {
+        let Some(pending) = self
+            .routes
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .remove(&r.id)
+        else {
+            return false;
+        };
+        let resp = outcome_response(&r.outcome, pending.degraded);
+        // try_send into the capacity-1 slot: never blocks the responder;
+        // a gone client (disconnect, reply timeout) makes this a no-op.
+        let _ = pending.reply.try_send(ResponseFrame {
+            id: pending.request_id,
+            resp,
+        });
+        true
+    }
+
+    /// Outstanding registrations (tests; leak detection).
+    pub fn pending(&self) -> usize {
+        self.routes.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+}
+
+/// The responder-stage tap that feeds a router (see
+/// [`Pipeline::start_with_tap`]).
+///
+/// [`Pipeline::start_with_tap`]: crate::coordinator::pipeline::Pipeline::start_with_tap
+pub fn result_tap(router: &Arc<ResultRouter>) -> ResultTap {
+    let router = Arc::clone(router);
+    Arc::new(move |r| {
+        router.deliver(r);
+    })
+}
+
+fn outcome_response(outcome: &Outcome, degraded: bool) -> Response {
+    match outcome {
+        Outcome::Score(s) => Response::Score {
+            score: *s,
+            degraded,
+        },
+        Outcome::TopK(ranked) => Response::TopK {
+            ranked: ranked.clone(),
+            degraded,
+        },
+        Outcome::Rejected(reason) => Response::Error {
+            code: "rejected".into(),
+            detail: reason.to_string(),
+        },
+        Outcome::EngineError(err) => Response::Error {
+            code: "engine".into(),
+            detail: err.to_string(),
+        },
+    }
+}
+
+/// The front-stage loop: dequeue admitted frames, shed the stale,
+/// degrade under load, submit the rest. Exits when every connection
+/// thread (sender) is gone; drops its [`SubmitHandle`] on exit so
+/// [`Pipeline::finish`] can start the stage cascade.
+///
+/// [`Pipeline::finish`]: crate::coordinator::pipeline::Pipeline::finish
+pub fn front_stage(
+    rx: NamedReceiver<AdmittedFrame>,
+    submit: SubmitHandle,
+    router: Arc<ResultRouter>,
+    corpora: BTreeMap<String, Arc<Corpus>>,
+    signal: Arc<LoadSignal>,
+    counters: Arc<NetCounters>,
+    cfg: NetConfig,
+) {
+    let stats = rx.stats();
+    let cap = stats.capacity().max(1);
+    while let Ok(frame) = rx.recv() {
+        let AdmittedFrame {
+            client: _,
+            request_id,
+            req,
+            deadline,
+            reply: reply_tx,
+        } = frame;
+        let reply = |resp: Response| {
+            let _ = reply_tx.try_send(ResponseFrame {
+                id: request_id,
+                resp,
+            });
+        };
+        // Shed at dequeue: the frame's wait already exceeded its
+        // deadline, so the client has (or should have) given up —
+        // engine time goes to frames that can still be answered in
+        // time. note_shed keeps the channel's ledger honest: the frame
+        // was sent and delivered, just never processed.
+        if Instant::now() > deadline {
+            stats.note_shed();
+            counters.note_shed_deadline();
+            reply(Response::Error {
+                code: "deadline".into(),
+                detail: format!("shed: queued past the {} ms deadline", cfg.deadline_ms),
+            });
+            continue;
+        }
+        // Load signal: queue depth right after this dequeue, as a
+        // fraction of capacity. Sampled per frame, smoothed by the
+        // EWMA, hysteresis in the signal keeps the mode from flapping.
+        let degraded = signal.observe(stats.depth() as f64 / cap as f64);
+        match req {
+            Request::Hello => {
+                // Answered at the connection layer; a Hello that reaches
+                // the queue is a protocol misuse, answered typed.
+                reply(Response::Error {
+                    code: "protocol".into(),
+                    detail: "hello is answered at the connection layer".into(),
+                });
+            }
+            Request::Pair { ref g1, ref g2 } if degraded && cfg.ged_fallback => {
+                // Degraded pair lane: the greedy GED upper bound and the
+                // paper's normalized-similarity map (Eq. 1), no engine
+                // time at all. Marked on the response and counted.
+                let sim = ged_similarity(greedy_ged(g1, g2), g1.num_nodes(), g2.num_nodes());
+                counters.note_degraded();
+                reply(Response::Score {
+                    score: sim as f32,
+                    degraded: true,
+                });
+            }
+            Request::Pair { g1, g2 } => {
+                let internal = router.register(request_id, false, reply_tx.clone());
+                if !submit.submit(Query::new(internal, g1, g2)) {
+                    router.cancel(internal);
+                    reply(Response::Error {
+                        code: "shutting_down".into(),
+                        detail: "pipeline is shutting down".into(),
+                    });
+                }
+            }
+            Request::TopK { corpus, graph, k } => {
+                let Some(corpus) = corpora.get(&corpus) else {
+                    reply(Response::Error {
+                        code: "unknown_corpus".into(),
+                        detail: format!(
+                            "no corpus '{corpus}' registered (hello lists them)"
+                        ),
+                    });
+                    continue;
+                };
+                // Degraded top-k: shrink the candidate depth the client
+                // pays for; the ranking head stays engine-accurate.
+                let (k_eff, shrunk) = if degraded && k > cfg.degraded_topk.max(1) {
+                    (cfg.degraded_topk.max(1), true)
+                } else {
+                    (k, false)
+                };
+                if shrunk {
+                    counters.note_degraded();
+                }
+                let internal = router.register(request_id, shrunk, reply_tx.clone());
+                if !submit.submit(Query::topk(internal, graph, Arc::clone(corpus), k_eff)) {
+                    router.cancel(internal);
+                    reply(Response::Error {
+                        code: "shutting_down".into(),
+                        detail: "pipeline is shutting down".into(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_burst_then_throttle() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10.0, 3.0, t0);
+        // Burst capacity is honored...
+        assert!(b.try_take(t0).is_ok());
+        assert!(b.try_take(t0).is_ok());
+        assert!(b.try_take(t0).is_ok());
+        // ...then the empty bucket names a finite, rate-shaped retry.
+        let retry = b.try_take(t0).unwrap_err();
+        assert!(retry > Duration::ZERO && retry <= Duration::from_millis(100));
+        // Refill: 10 tokens/s means 0.2 s buys two more requests.
+        let later = t0 + Duration::from_millis(200);
+        assert!(b.try_take(later).is_ok());
+        assert!(b.try_take(later).is_ok());
+        assert!(b.try_take(later).is_err());
+    }
+
+    #[test]
+    fn token_bucket_never_exceeds_burst() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(1000.0, 2.0, t0);
+        // A long idle period must not bank unlimited tokens.
+        let later = t0 + Duration::from_secs(3600);
+        assert!(b.try_take(later).is_ok());
+        assert!(b.try_take(later).is_ok());
+        assert!(b.try_take(later).is_err());
+    }
+
+    #[test]
+    fn zero_rate_bucket_reports_clamped_retry() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(0.0, 1.0, t0);
+        assert!(b.try_take(t0).is_ok());
+        let retry = b.try_take(t0).unwrap_err();
+        assert_eq!(retry, Duration::from_secs(60), "infinite wait clamps to 60s");
+    }
+
+    #[test]
+    fn bucket_table_bounds_distinct_clients() {
+        let cfg = NetConfig {
+            refill_per_s: 0.0,
+            burst: 1.0,
+            max_clients: 2,
+            ..NetConfig::default()
+        };
+        let table = BucketTable::new(&cfg);
+        assert!(table.admit("a").is_ok());
+        assert!(table.admit("b").is_ok());
+        // Table full: client "c" lands in the anonymous bucket...
+        assert!(table.admit("c").is_ok());
+        assert_eq!(table.tracked(), 3, "a, b and the shared anonymous bucket");
+        // ...which "d" then shares (and finds empty).
+        assert!(table.admit("d").is_err());
+        // Known clients keep their own (empty) buckets.
+        assert!(table.admit("a").is_err());
+        assert_eq!(table.tracked(), 3);
+    }
+
+    #[test]
+    fn load_signal_hysteresis() {
+        let s = LoadSignal::new(0.5, 0.2);
+        assert!(!s.is_degraded());
+        // Sustained full-queue observations engage the mode.
+        let mut engaged = false;
+        for _ in 0..30 {
+            engaged = s.observe(1.0);
+        }
+        assert!(engaged && s.is_degraded());
+        assert!(s.ewma() > 0.9);
+        // One quiet sample does NOT disengage (hysteresis)...
+        assert!(s.observe(0.0), "ewma still above lo");
+        // ...but a sustained quiet period does.
+        for _ in 0..30 {
+            s.observe(0.0);
+        }
+        assert!(!s.is_degraded());
+        // And re-engaging needs hi again, not lo.
+        s.observe(0.3);
+        assert!(!s.is_degraded());
+    }
+
+    #[test]
+    fn router_delivers_by_internal_id_and_echoes_client_id() {
+        let router = ResultRouter::new();
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        let internal = router.register(777, true, tx);
+        assert_eq!(router.pending(), 1);
+        let g = crate::graph::Graph::new(1, vec![], vec![0]);
+        let q = Query::new(internal, g.clone(), g);
+        let mut result = QueryResult::rejected(&q, crate::coordinator::query::RejectReason::ShuttingDown);
+        result.outcome = Outcome::Score(0.25);
+        assert!(router.deliver(&result));
+        assert_eq!(router.pending(), 0, "delivery consumes the route");
+        let frame = rx.try_recv().unwrap();
+        assert_eq!(frame.id, 777, "client correlation id echoed");
+        assert_eq!(
+            frame.resp,
+            Response::Score {
+                score: 0.25,
+                degraded: true
+            }
+        );
+        // Unknown ids (in-process traffic) are not the router's.
+        assert!(!router.deliver(&result));
+    }
+
+    #[test]
+    fn router_survives_dropped_receiver() {
+        let router = ResultRouter::new();
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        let internal = router.register(1, false, tx);
+        drop(rx); // client disconnected mid-flight
+        let g = crate::graph::Graph::new(1, vec![], vec![0]);
+        let q = Query::new(internal, g.clone(), g);
+        let mut result = QueryResult::rejected(&q, crate::coordinator::query::RejectReason::ShuttingDown);
+        result.outcome = Outcome::Score(0.5);
+        // Delivery is a no-op send, not a panic or a block.
+        assert!(router.deliver(&result));
+        assert_eq!(router.pending(), 0);
+    }
+
+    #[test]
+    fn outcome_mapping_is_typed() {
+        use crate::runtime::EngineError;
+        match outcome_response(&Outcome::Rejected(
+            crate::coordinator::query::RejectReason::EmptyCorpus,
+        ), false) {
+            Response::Error { code, .. } => assert_eq!(code, "rejected"),
+            other => panic!("{other:?}"),
+        }
+        match outcome_response(
+            &Outcome::EngineError(EngineError::Unavailable { reason: "x".into() }),
+            false,
+        ) {
+            Response::Error { code, .. } => assert_eq!(code, "engine"),
+            other => panic!("{other:?}"),
+        }
+        match outcome_response(&Outcome::TopK(vec![(1, 0.5)]), true) {
+            Response::TopK { ranked, degraded } => {
+                assert_eq!(ranked, vec![(1, 0.5)]);
+                assert!(degraded);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,384 @@
+//! Loopback client: drive the front door over a real socket.
+//!
+//! [`NetClient`] is a minimal blocking caller (one outstanding request
+//! per connection — responses come back in order). [`run_load`] is the
+//! `spa-gcn load --connect` workload: N client threads, each with its
+//! own connection, client id, and Poisson schedule (reusing
+//! `coordinator::load` pacing), classifying every typed response the
+//! overload taxonomy can produce. It exists so overload behavior —
+//! throttling, shedding, degraded scoring — is drivable end-to-end in
+//! tests and benches without external tools.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use crate::coordinator::load::{poisson_schedule, Pacer};
+use crate::graph::generate::{generate, Family};
+use crate::report::{fmt, Table};
+use crate::util::rng::Rng;
+
+use super::wire::{
+    read_frame, write_frame, Request, RequestFrame, Response, ResponseFrame, WireError,
+};
+
+/// A blocking wire-protocol client over one connection.
+pub struct NetClient {
+    stream: TcpStream,
+    client_id: String,
+    next_id: u64,
+    max_frame: usize,
+}
+
+impl NetClient {
+    /// Connect to a front door. `client_id` names the token bucket this
+    /// connection's requests are charged to.
+    pub fn connect(addr: &str, client_id: &str) -> Result<NetClient, WireError> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| WireError::Io(format!("connect {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        // A response that takes this long means the server is gone;
+        // surface it as a typed Io error instead of hanging the client.
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(60)));
+        Ok(NetClient {
+            stream,
+            client_id: client_id.to_string(),
+            next_id: 1,
+            max_frame: 1 << 20,
+        })
+    }
+
+    /// Send one request, block for its response frame.
+    pub fn call(&mut self, req: Request) -> Result<ResponseFrame, WireError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = RequestFrame {
+            client: self.client_id.clone(),
+            id,
+            req,
+        };
+        write_frame(&mut self.stream, &frame.encode())?;
+        match read_frame(&mut self.stream, self.max_frame)? {
+            Some(body) => ResponseFrame::decode(&body),
+            None => Err(WireError::Io("connection closed before response".into())),
+        }
+    }
+
+    /// Shape/corpus discovery: `(n_max, num_labels, corpus ids)`.
+    pub fn hello(&mut self) -> Result<(usize, usize, Vec<String>), WireError> {
+        match self.call(Request::Hello)?.resp {
+            Response::Hello {
+                n_max,
+                num_labels,
+                corpora,
+            } => Ok((n_max, num_labels, corpora)),
+            other => Err(WireError::Malformed(format!(
+                "unexpected hello reply: {other:?}"
+            ))),
+        }
+    }
+
+    /// Score one pair.
+    pub fn pair(&mut self, g1: crate::graph::Graph, g2: crate::graph::Graph) -> Result<ResponseFrame, WireError> {
+        self.call(Request::Pair { g1, g2 })
+    }
+
+    /// Rank `corpus` against `graph`.
+    pub fn topk(
+        &mut self,
+        corpus: &str,
+        graph: crate::graph::Graph,
+        k: usize,
+    ) -> Result<ResponseFrame, WireError> {
+        self.call(Request::TopK {
+            corpus: corpus.into(),
+            graph,
+            k,
+        })
+    }
+}
+
+/// `spa-gcn load --connect` configuration.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Front-door address, e.g. `127.0.0.1:7700`.
+    pub connect: String,
+    /// Client threads; each gets its own connection, id (`load.N`), and
+    /// token bucket.
+    pub clients: usize,
+    /// Total offered rate across all clients (Poisson arrivals).
+    pub rate_qps: f64,
+    /// Total queries across all clients.
+    pub queries: usize,
+    /// Workload RNG seed.
+    pub seed: u64,
+    /// 0 = pair queries; > 0 = top-k against the server's first
+    /// advertised corpus at this depth.
+    pub topk: usize,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            connect: "127.0.0.1:7700".into(),
+            clients: 4,
+            rate_qps: 200.0,
+            queries: 1000,
+            seed: 42,
+            topk: 0,
+        }
+    }
+}
+
+/// Per-thread outcome tally; merged for the report. Every variant of
+/// the typed response taxonomy has a row — an unclassifiable answer is
+/// a bug, not an "other".
+#[derive(Debug, Default, Clone)]
+pub struct LoadStats {
+    pub sent: u64,
+    pub ok: u64,
+    pub degraded: u64,
+    pub throttled: u64,
+    pub shed: u64,
+    pub errors: u64,
+    pub io_errors: u64,
+    /// Response latencies for scored answers only, ms.
+    pub latencies_ms: Vec<f64>,
+    pub max_late: Duration,
+}
+
+impl LoadStats {
+    fn merge(&mut self, other: LoadStats) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.degraded += other.degraded;
+        self.throttled += other.throttled;
+        self.shed += other.shed;
+        self.errors += other.errors;
+        self.io_errors += other.io_errors;
+        self.latencies_ms.extend(other.latencies_ms);
+        self.max_late = self.max_late.max(other.max_late);
+    }
+
+    /// Classify one response frame into the tally.
+    pub fn note(&mut self, resp: &Response) {
+        match resp {
+            Response::Score { degraded, .. } | Response::TopK { degraded, .. } => {
+                self.ok += 1;
+                if *degraded {
+                    self.degraded += 1;
+                }
+            }
+            Response::Throttled { .. } => self.throttled += 1,
+            Response::Error { code, .. } if code == "deadline" => self.shed += 1,
+            Response::Error { .. } | Response::Hello { .. } => self.errors += 1,
+        }
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// One client thread's loop: paced sends over its own connection. A
+/// wire-level error ends the thread (the stream is desynced); typed
+/// overload answers do not.
+fn load_client(cfg: &LoadConfig, idx: usize, n_max: usize, num_labels: usize, corpus: Option<String>, count: usize) -> LoadStats {
+    let mut stats = LoadStats::default();
+    let mut client = match NetClient::connect(&cfg.connect, &format!("load.{idx}")) {
+        Ok(c) => c,
+        Err(_) => {
+            stats.io_errors += 1;
+            return stats;
+        }
+    };
+    // Distinct stream per client; the workload itself (not the pacing
+    // draws) is what must be reproducible, so a simple seed offset is
+    // enough.
+    let mut rng = Rng::new(cfg.seed.wrapping_add(1 + idx as u64));
+    let per_client_rate = (cfg.rate_qps / cfg.clients.max(1) as f64).max(1e-6);
+    // Synthesize up front: generation jitter must not pollute pacing.
+    let graphs: Vec<_> = (0..count * 2)
+        .map(|_| generate(&mut rng, Family::Aids, n_max, num_labels))
+        .collect();
+    let schedule = poisson_schedule(&mut rng, per_client_rate, count);
+    let pacer = Pacer::new();
+    for (i, at) in schedule.into_iter().enumerate() {
+        stats.max_late = stats.max_late.max(pacer.wait_until(at));
+        let sent_at = Instant::now();
+        let result = match (&corpus, cfg.topk) {
+            (Some(name), k) if k > 0 => {
+                client.topk(name, graphs[i * 2].clone(), k)
+            }
+            _ => client.pair(graphs[i * 2].clone(), graphs[i * 2 + 1].clone()),
+        };
+        stats.sent += 1;
+        match result {
+            Ok(frame) => {
+                let scored = matches!(
+                    frame.resp,
+                    Response::Score { .. } | Response::TopK { .. }
+                );
+                stats.note(&frame.resp);
+                if scored {
+                    stats.latencies_ms.push(sent_at.elapsed().as_secs_f64() * 1e3);
+                }
+            }
+            Err(_) => {
+                stats.io_errors += 1;
+                return stats;
+            }
+        }
+    }
+    stats
+}
+
+/// Drive a front door with a paced open-loop workload and report the
+/// typed-outcome tally (CLI `spa-gcn load --connect`).
+pub fn run_load(cfg: &LoadConfig) -> Result<Table> {
+    anyhow::ensure!(cfg.rate_qps > 0.0, "load needs --rate > 0");
+    anyhow::ensure!(cfg.clients > 0, "load needs at least one client");
+    // Shape discovery on a probe connection, so generated graphs match
+    // the server's artifacts.
+    let mut probe = NetClient::connect(&cfg.connect, "load.probe")
+        .map_err(|e| anyhow::anyhow!("connecting probe to {}: {e}", cfg.connect))?;
+    let (n_max, num_labels, corpora) = probe
+        .hello()
+        .map_err(|e| anyhow::anyhow!("hello handshake: {e}"))?;
+    drop(probe);
+    let corpus = corpora.first().cloned();
+    anyhow::ensure!(
+        cfg.topk == 0 || corpus.is_some(),
+        "server advertises no corpus; top-k load needs `serve --corpus N`"
+    );
+
+    let base = cfg.queries / cfg.clients;
+    let extra = cfg.queries % cfg.clients;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for idx in 0..cfg.clients {
+        let count = base + usize::from(idx < extra);
+        if count == 0 {
+            continue;
+        }
+        let cfg = cfg.clone();
+        let corpus = corpus.clone();
+        handles.push(std::thread::spawn(move || {
+            load_client(&cfg, idx, n_max, num_labels, corpus, count)
+        }));
+    }
+    let mut stats = LoadStats::default();
+    for h in handles {
+        match h.join() {
+            Ok(s) => stats.merge(s),
+            Err(_) => stats.io_errors += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let mut lat = stats.latencies_ms.clone();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let mut t = Table::new(
+        &format!(
+            "load: connect={} clients={} rate={:.0} q/s queries={}{}",
+            cfg.connect,
+            cfg.clients,
+            cfg.rate_qps,
+            cfg.queries,
+            if cfg.topk > 0 {
+                format!(" topk={}", cfg.topk)
+            } else {
+                String::new()
+            }
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["sent".into(), stats.sent.to_string()]);
+    t.row(vec!["scored ok".into(), stats.ok.to_string()]);
+    t.row(vec!["degraded responses".into(), stats.degraded.to_string()]);
+    t.row(vec!["throttled".into(), stats.throttled.to_string()]);
+    t.row(vec!["shed (deadline)".into(), stats.shed.to_string()]);
+    t.row(vec!["errors".into(), stats.errors.to_string()]);
+    t.row(vec!["io errors".into(), stats.io_errors.to_string()]);
+    t.row(vec!["latency p50 (ms)".into(), fmt(percentile(&lat, 0.50))]);
+    t.row(vec!["latency p95 (ms)".into(), fmt(percentile(&lat, 0.95))]);
+    t.row(vec![
+        "achieved rate (q/s)".into(),
+        fmt(stats.sent as f64 / wall),
+    ]);
+    t.row(vec![
+        "max pacing lateness (ms)".into(),
+        fmt(stats.max_late.as_secs_f64() * 1e3),
+    ]);
+    t.row(vec!["wall time (s)".into(), fmt(wall)]);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_note_classifies_every_variant() {
+        let mut s = LoadStats::default();
+        s.note(&Response::Score {
+            score: 0.5,
+            degraded: false,
+        });
+        s.note(&Response::TopK {
+            ranked: vec![],
+            degraded: true,
+        });
+        s.note(&Response::Throttled { retry_after_ms: 5 });
+        s.note(&Response::Error {
+            code: "deadline".into(),
+            detail: String::new(),
+        });
+        s.note(&Response::Error {
+            code: "engine".into(),
+            detail: String::new(),
+        });
+        assert_eq!(
+            (s.ok, s.degraded, s.throttled, s.shed, s.errors),
+            (2, 1, 1, 1, 1)
+        );
+    }
+
+    #[test]
+    fn percentile_handles_edges() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[3.0], 0.95), 3.0);
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        let p50 = percentile(&v, 0.5);
+        assert!((49.0..=51.0).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn load_stats_merge_accumulates() {
+        let mut a = LoadStats {
+            sent: 3,
+            ok: 2,
+            latencies_ms: vec![1.0],
+            max_late: Duration::from_millis(2),
+            ..LoadStats::default()
+        };
+        let b = LoadStats {
+            sent: 2,
+            throttled: 1,
+            latencies_ms: vec![4.0],
+            max_late: Duration::from_millis(7),
+            ..LoadStats::default()
+        };
+        a.merge(b);
+        assert_eq!((a.sent, a.ok, a.throttled), (5, 2, 1));
+        assert_eq!(a.latencies_ms, vec![1.0, 4.0]);
+        assert_eq!(a.max_late, Duration::from_millis(7));
+    }
+}

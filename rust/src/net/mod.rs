@@ -1,0 +1,169 @@
+//! Network front door: a std-only wire protocol with first-class
+//! overload discipline (DESIGN.md S17).
+//!
+//! The serving pipeline was library-only — queries entered via
+//! in-process [`Pipeline::submit`] — so nothing about the "heavy
+//! traffic" north star was testable over a real socket. This subsystem
+//! adds the missing edge without adding a dependency:
+//!
+//! * [`wire`] — length-prefixed frames over `std::net` carrying a
+//!   versioned hand-rolled JSON body (`util::json`): Pair and
+//!   TopK-by-corpus-id requests; typed score / top-k / retry-after /
+//!   error responses.
+//! * [`server`] — a blocking connection-per-thread accept loop bounded
+//!   by a connection cap, routing every request through [`admission`]
+//!   (never directly into the batcher — CI grep-guards this).
+//! * [`admission`] — per-client token buckets that answer
+//!   `retry_after_ms` instead of queueing; a bounded admission queue
+//!   with the [`SendPolicy::DropNewest`] shed policy; deadline shedding
+//!   at dequeue; and a degraded mode driven by a queue-depth EWMA that
+//!   shrinks top-k depth and falls back to the `ged::heuristics`
+//!   bound-based scorer for pair queries under pressure.
+//! * [`client`] — a loopback client (`spa-gcn load --connect`) reusing
+//!   `coordinator::load` pacing, so overload behavior is drivable
+//!   end-to-end in tests and benches without external tools.
+//!
+//! The overload taxonomy, outermost first: the connection cap refuses
+//! sockets, the token buckets refuse clients, the admission queue
+//! refuses bursts (DropNewest), the deadline sheds stale queued work,
+//! and the degraded mode cheapens what's left. Each layer answers with
+//! a typed response, and each is counted in [`NetSnapshot`].
+//!
+//! [`Pipeline::submit`]: crate::coordinator::pipeline::Pipeline::submit
+//! [`SendPolicy::DropNewest`]: crate::coordinator::channel::SendPolicy::DropNewest
+//! [`NetSnapshot`]: crate::coordinator::metrics::NetSnapshot
+
+pub mod admission;
+pub mod client;
+pub mod server;
+pub mod wire;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::metrics::NetSnapshot;
+
+/// Front-door knobs, carried by `ServeConfig::net` (CLI `serve
+/// --listen`). Tests build them directly.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Concurrent connection cap; further sockets are answered with a
+    /// typed busy error and closed.
+    pub conn_cap: usize,
+    /// Admission queue capacity (frames between the connection threads
+    /// and the front stage). Full = shed newest + retry-after.
+    pub admit_cap: usize,
+    /// Per-client token refill rate, tokens (= requests) per second.
+    pub refill_per_s: f64,
+    /// Per-client burst allowance (bucket capacity).
+    pub burst: f64,
+    /// Frame deadline: a frame still queued this long after arrival is
+    /// shed at dequeue, not scored.
+    pub deadline_ms: u64,
+    /// Largest accepted frame body; bigger length prefixes are rejected
+    /// before any allocation.
+    pub max_frame: usize,
+    /// Degraded mode engages when the admission-queue depth EWMA
+    /// exceeds this fraction of `admit_cap`...
+    pub degrade_hi: f64,
+    /// ...and disengages when it falls back below this fraction
+    /// (hysteresis so the mode doesn't flap).
+    pub degrade_lo: f64,
+    /// Top-k depth served while degraded (requests asking for more are
+    /// shrunk to this).
+    pub degraded_topk: usize,
+    /// While degraded, answer Pair queries from the GED-bound heuristic
+    /// scorer instead of the engine pipeline.
+    pub ged_fallback: bool,
+    /// Distinct client-id buckets tracked before new clients share the
+    /// anonymous bucket (bounds table growth under adversarial ids).
+    pub max_clients: usize,
+    /// Socket read poll interval: how often an idle connection thread
+    /// rechecks the shutdown flag.
+    pub read_timeout_ms: u64,
+    /// Socket write timeout: a reader stalled longer than this loses
+    /// its connection (never stalls sibling connections either way —
+    /// connection-per-thread).
+    pub write_timeout_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            conn_cap: 64,
+            admit_cap: 256,
+            refill_per_s: 500.0,
+            burst: 50.0,
+            deadline_ms: 250,
+            max_frame: 1 << 20,
+            degrade_hi: 0.75,
+            degrade_lo: 0.35,
+            degraded_topk: 3,
+            ged_fallback: true,
+            max_clients: 10_000,
+            read_timeout_ms: 50,
+            write_timeout_ms: 2_000,
+        }
+    }
+}
+
+/// Live front-door counters, shared by the connection threads and the
+/// admission front stage; snapshotted into [`NetSnapshot`] at shutdown.
+/// Relaxed atomics: statistics, not synchronization.
+#[derive(Debug, Default)]
+pub struct NetCounters {
+    accepted: AtomicU64,
+    throttled: AtomicU64,
+    shed_deadline: AtomicU64,
+    degraded: AtomicU64,
+}
+
+impl NetCounters {
+    pub fn note_accepted(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn note_throttled(&self) {
+        self.throttled.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn note_shed_deadline(&self) {
+        self.shed_deadline.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn note_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> NetSnapshot {
+        NetSnapshot {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            throttled: self.throttled.load(Ordering::Relaxed),
+            shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_snapshot() {
+        let c = NetCounters::default();
+        c.note_accepted();
+        c.note_accepted();
+        c.note_throttled();
+        c.note_shed_deadline();
+        c.note_degraded();
+        let s = c.snapshot();
+        assert_eq!(
+            (s.accepted, s.throttled, s.shed_deadline, s.degraded),
+            (2, 1, 1, 1)
+        );
+    }
+
+    #[test]
+    fn default_hysteresis_is_ordered() {
+        let cfg = NetConfig::default();
+        assert!(cfg.degrade_lo < cfg.degrade_hi);
+        assert!(cfg.max_frame >= 4096);
+    }
+}

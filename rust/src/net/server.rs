@@ -1,0 +1,549 @@
+//! The listener: a blocking connection-per-thread accept loop over
+//! `std::net::TcpListener`, bounded by a connection cap.
+//!
+//! Topology (DESIGN.md S17): connection threads decode frames, charge
+//! token buckets, and enqueue [`AdmittedFrame`]s onto the bounded
+//! `net.admit` channel — they never construct queries or touch the
+//! batcher (CI grep-guards this). The single admission front stage
+//! ([`admission::front_stage`]) is the only bridge into the pipeline;
+//! results come back through the responder's [`ResultTap`] into
+//! per-request reply slots.
+//!
+//! Connection-per-thread is deliberate: a slow reader or a mid-response
+//! disconnect can only stall or kill *its own* thread (write timeouts
+//! bound even that), never a sibling connection — the failure-injection
+//! tests drive exactly those two cases. The connection cap is the
+//! outermost overload layer; its slot is released by RAII when the
+//! thread exits, whatever the exit path, so a misbehaving client cannot
+//! leak capacity.
+//!
+//! [`ResultTap`]: crate::coordinator::pipeline::ResultTap
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use crate::coordinator::channel::{
+    channel, ChannelStats, NamedSender, SendPolicy, SendResult,
+};
+use crate::coordinator::corpus::Corpus;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
+use crate::coordinator::server::ServeConfig;
+use crate::nn::config::{ArtifactsMeta, ModelConfig};
+use crate::runtime::EngineFactory;
+
+use super::admission::{
+    front_stage, result_tap, AdmittedFrame, BucketTable, LoadSignal, ResultRouter,
+};
+use super::wire::{frame_len, Request, RequestFrame, Response, ResponseFrame, WireError, PREFIX_LEN};
+use super::{NetConfig, NetCounters};
+
+/// Shared state every connection thread needs. Holds the template
+/// `net.admit` sender: once the accept loop and every connection thread
+/// have dropped their `Arc`, the front stage's receiver disconnects and
+/// the shutdown cascade proceeds.
+struct ConnCtx {
+    shutdown: AtomicBool,
+    cfg: NetConfig,
+    buckets: BucketTable,
+    counters: Arc<NetCounters>,
+    admit_tx: NamedSender<AdmittedFrame>,
+    /// Hello payload: artifact shapes + registered corpus ids.
+    n_max: usize,
+    num_labels: usize,
+    corpora: Vec<String>,
+    /// Live connection count (the cap gauge).
+    active: AtomicUsize,
+}
+
+/// RAII connection slot: released when the connection thread exits,
+/// whatever the exit path — the "admission token" the failure tests
+/// assert is never leaked.
+struct ConnSlot(Arc<ConnCtx>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A running front door: listener + connection threads + admission
+/// front stage + engine pipeline. `finish` for an ordered shutdown and
+/// the metrics report.
+pub struct NetServer {
+    addr: SocketAddr,
+    ctx: Arc<ConnCtx>,
+    accept: Option<JoinHandle<()>>,
+    front: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    admit_stats: Arc<ChannelStats>,
+    counters: Arc<NetCounters>,
+    signal: Arc<LoadSignal>,
+    router: Arc<ResultRouter>,
+    pipeline: Option<Pipeline>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"`) and start serving. Tests
+    /// construct engines directly; the CLI goes through [`serve_listen`].
+    pub fn start(
+        model: ModelConfig,
+        factories: Vec<EngineFactory>,
+        pcfg: PipelineConfig,
+        ncfg: NetConfig,
+        corpora: Vec<Arc<Corpus>>,
+        listen: &str,
+    ) -> Result<NetServer> {
+        let router = Arc::new(ResultRouter::new());
+        let counters = Arc::new(NetCounters::default());
+        let signal = Arc::new(LoadSignal::new(ncfg.degrade_hi, ncfg.degrade_lo));
+        let pipeline = Pipeline::start_with_tap(
+            model.clone(),
+            factories,
+            pcfg,
+            Some(result_tap(&router)),
+        );
+
+        let (admit_tx, admit_rx) =
+            channel("net.admit", ncfg.admit_cap.max(1), SendPolicy::DropNewest);
+        let admit_stats = admit_tx.stats();
+
+        let corpora: BTreeMap<String, Arc<Corpus>> = corpora
+            .into_iter()
+            .map(|c| (c.name().to_string(), c))
+            .collect();
+
+        let ctx = Arc::new(ConnCtx {
+            shutdown: AtomicBool::new(false),
+            buckets: BucketTable::new(&ncfg),
+            counters: Arc::clone(&counters),
+            admit_tx,
+            n_max: model.n_max,
+            num_labels: model.num_labels,
+            corpora: corpora.keys().cloned().collect(),
+            active: AtomicUsize::new(0),
+            cfg: ncfg.clone(),
+        });
+
+        let front = {
+            let submit_handle = pipeline.submit_handle();
+            let router = Arc::clone(&router);
+            let signal = Arc::clone(&signal);
+            let counters = Arc::clone(&counters);
+            std::thread::Builder::new()
+                .name("spa-net-front".into())
+                .spawn(move || {
+                    front_stage(admit_rx, submit_handle, router, corpora, signal, counters, ncfg)
+                })
+                .context("spawning net front stage")?
+        };
+
+        let listener = TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        // Non-blocking accept + poll: shutdown needs no self-connect
+        // nudge, at the cost of a few ms accept latency.
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let ctx = Arc::clone(&ctx);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("spa-net-accept".into())
+                .spawn(move || accept_loop(listener, ctx, conns))
+                .context("spawning net accept loop")?
+        };
+
+        Ok(NetServer {
+            addr,
+            ctx,
+            accept: Some(accept),
+            front: Some(front),
+            conns,
+            admit_stats,
+            counters,
+            signal,
+            router,
+            pipeline: Some(pipeline),
+        })
+    }
+
+    /// The bound address (resolves `:0` test binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until every engine lane's caps handshake has published;
+    /// returns working-lane count (see [`Pipeline::wait_ready`]).
+    pub fn wait_ready(&self) -> usize {
+        self.pipeline.as_ref().map_or(0, |p| p.wait_ready())
+    }
+
+    /// Live front-door counters (tests assert on these mid-run).
+    pub fn counters(&self) -> Arc<NetCounters> {
+        Arc::clone(&self.counters)
+    }
+
+    /// The degraded-mode load signal (observability).
+    pub fn load_signal(&self) -> Arc<LoadSignal> {
+        Arc::clone(&self.signal)
+    }
+
+    /// Outstanding result routes (leak detection in tests).
+    pub fn pending_routes(&self) -> usize {
+        self.router.pending()
+    }
+
+    /// Live connection count (cap-slot leak detection in tests).
+    pub fn active_connections(&self) -> usize {
+        self.ctx.active.load(Ordering::Acquire)
+    }
+
+    /// Ordered shutdown: stop accepting, drain connections, let the
+    /// front stage finish the admission queue, then collect pipeline
+    /// metrics with the net counters and `net.admit` snapshot attached.
+    pub fn finish(mut self) -> Metrics {
+        self.ctx.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Connection threads notice the flag within read_timeout_ms (or
+        // finish their in-flight request first) and drop their ConnCtx
+        // Arcs; with the accept loop's Arc gone too, the front stage's
+        // receiver disconnects after the queue drains.
+        let handles: Vec<_> = {
+            let mut conns = self.conns.lock().unwrap_or_else(|p| p.into_inner());
+            conns.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        drop(self.ctx);
+        if let Some(h) = self.front.take() {
+            let _ = h.join();
+        }
+        // Only now is the front stage's SubmitHandle dropped, so
+        // Pipeline::finish's drop cascade can start.
+        let mut metrics = self
+            .pipeline
+            .take()
+            .expect("finish runs once")
+            .finish();
+        metrics.net = Some(self.counters.snapshot());
+        metrics.channels.push(self.admit_stats.snapshot());
+        metrics
+    }
+}
+
+/// CLI entrypoint (`spa-gcn serve --listen ADDR`): build engines from
+/// the artifacts directory per `cfg`, synthesize the corpus when
+/// `--corpus N` asked for one, and start the front door.
+pub fn serve_listen(cfg: &ServeConfig, listen: &str) -> Result<NetServer> {
+    anyhow::ensure!(!cfg.engines.is_empty(), "serve needs at least one engine kind");
+    let meta = ArtifactsMeta::load(&cfg.artifacts_dir)
+        .context("loading artifacts (run `make artifacts`)")?;
+    let model = meta.config.clone();
+    let mut corpora = Vec::new();
+    if cfg.corpus_size > 0 {
+        // Same family/seed recipe as the in-process `serve` workload, so
+        // a given seed means the same corpus either way.
+        let mut rng = crate::util::rng::Rng::new(cfg.seed);
+        let db = crate::graph::dataset::GraphDb::synthesize(
+            &mut rng,
+            crate::graph::generate::Family::Aids,
+            cfg.corpus_size,
+            model.n_max,
+            model.num_labels,
+        );
+        corpora.push(Arc::new(
+            Corpus::from_db("aids-synth", &db, model.n_max, model.num_labels)
+                .map_err(|e| anyhow::anyhow!("encoding corpus: {e}"))?,
+        ));
+    }
+    NetServer::start(
+        model,
+        cfg.lane_factories(),
+        cfg.pipeline_config(),
+        cfg.net.clone(),
+        corpora,
+        listen,
+    )
+}
+
+// ---------------------------------------------------------------------
+// Accept loop + connection threads
+// ---------------------------------------------------------------------
+
+fn accept_loop(listener: TcpListener, ctx: Arc<ConnCtx>, conns: Arc<Mutex<Vec<JoinHandle<()>>>>) {
+    let mut conn_id = 0u64;
+    while !ctx.shutdown.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Connection cap: acquire a slot or answer busy. CAS
+                // loop so two racing accepts can't both take the last
+                // slot (single accept thread today, but cheap to keep
+                // correct).
+                let acquired = ctx
+                    .active
+                    .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                        (n < ctx.cfg.conn_cap).then_some(n + 1)
+                    })
+                    .is_ok();
+                if !acquired {
+                    ctx.counters.note_throttled();
+                    let mut stream = stream;
+                    let _ = write_response(
+                        &mut stream,
+                        &ResponseFrame {
+                            id: 0,
+                            resp: Response::Error {
+                                code: "busy".into(),
+                                detail: format!(
+                                    "connection cap {} reached; retry",
+                                    ctx.cfg.conn_cap
+                                ),
+                            },
+                        },
+                    );
+                    continue;
+                }
+                let slot = ConnSlot(Arc::clone(&ctx));
+                let ctx = Arc::clone(&ctx);
+                conn_id += 1;
+                let handle = std::thread::Builder::new()
+                    .name(format!("spa-net-conn.{conn_id}"))
+                    .spawn(move || run_conn(stream, ctx, slot));
+                match handle {
+                    Ok(h) => conns.lock().unwrap_or_else(|p| p.into_inner()).push(h),
+                    Err(e) => eprintln!("net: spawning connection thread failed: {e}"),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                eprintln!("net: accept error: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// One connection's request/response loop. The `_slot` guard releases
+/// the connection-cap slot on every exit path.
+fn run_conn(mut stream: TcpStream, ctx: Arc<ConnCtx>, _slot: ConnSlot) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(ctx.cfg.read_timeout_ms.max(10))));
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(ctx.cfg.write_timeout_ms.max(100))));
+    loop {
+        let body = match read_frame_idle(&mut stream, ctx.cfg.max_frame, &ctx) {
+            Ok(Some(body)) => body,
+            // Clean EOF on a frame boundary, or server shutdown.
+            Ok(None) => return,
+            Err(err) => {
+                // Framing desync (oversized/truncated frame, io): answer
+                // typed best-effort, then the connection must close.
+                let _ = write_response(
+                    &mut stream,
+                    &ResponseFrame {
+                        id: 0,
+                        resp: Response::Error {
+                            code: err.code().into(),
+                            detail: err.to_string(),
+                        },
+                    },
+                );
+                return;
+            }
+        };
+        let frame = match RequestFrame::decode(&body) {
+            Ok(frame) => frame,
+            Err(err) => {
+                // Body-level error on an intact frame boundary: the
+                // connection survives.
+                let ok = write_response(
+                    &mut stream,
+                    &ResponseFrame {
+                        id: 0,
+                        resp: Response::Error {
+                            code: err.code().into(),
+                            detail: err.to_string(),
+                        },
+                    },
+                );
+                if ok.is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+        let resp = match frame.req {
+            Request::Hello => ResponseFrame {
+                id: frame.id,
+                resp: Response::Hello {
+                    n_max: ctx.n_max,
+                    num_labels: ctx.num_labels,
+                    corpora: ctx.corpora.clone(),
+                },
+            },
+            req => match admit_and_wait(&ctx, frame.client, frame.id, req) {
+                Some(resp) => resp,
+                None => ResponseFrame {
+                    id: frame.id,
+                    resp: Response::Error {
+                        code: "timeout".into(),
+                        detail: "response did not arrive in time".into(),
+                    },
+                },
+            },
+        };
+        if write_response(&mut stream, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+/// Token bucket → admission queue → wait on the per-request reply slot.
+/// Every overload path returns a typed response; `None` only for the
+/// (pathological) case of a reply that never arrived.
+fn admit_and_wait(
+    ctx: &ConnCtx,
+    client: String,
+    request_id: u64,
+    req: Request,
+) -> Option<ResponseFrame> {
+    if let Err(retry) = ctx.buckets.admit(&client) {
+        ctx.counters.note_throttled();
+        return Some(ResponseFrame {
+            id: request_id,
+            resp: Response::Throttled {
+                retry_after_ms: (retry.as_millis() as u64).max(1),
+            },
+        });
+    }
+    let (reply_tx, reply_rx) = sync_channel(1);
+    let admitted = AdmittedFrame {
+        client,
+        request_id,
+        req,
+        deadline: Instant::now() + Duration::from_millis(ctx.cfg.deadline_ms),
+        reply: reply_tx,
+    };
+    match ctx.admit_tx.send(admitted) {
+        SendResult::Sent => {
+            ctx.counters.note_accepted();
+            // Generous grace past the shed deadline: the reply is
+            // normally either the score or the shed/throttle answer,
+            // and the pipeline outlives every connection thread — this
+            // bound exists for pathological stalls only.
+            let grace = Duration::from_millis(ctx.cfg.deadline_ms.saturating_mul(4) + 30_000);
+            reply_rx.recv_timeout(grace).ok()
+        }
+        SendResult::Dropped => {
+            // DropNewest shed the frame at the queue door: same answer
+            // as an empty token bucket — come back shortly.
+            ctx.counters.note_throttled();
+            Some(ResponseFrame {
+                id: request_id,
+                resp: Response::Throttled {
+                    retry_after_ms: ctx.cfg.deadline_ms.max(1),
+                },
+            })
+        }
+        SendResult::Full(_) | SendResult::Disconnected(_) => Some(ResponseFrame {
+            id: request_id,
+            resp: Response::Error {
+                code: "shutting_down".into(),
+                detail: "front door is shutting down".into(),
+            },
+        }),
+    }
+}
+
+fn write_response(stream: &mut TcpStream, frame: &ResponseFrame) -> Result<(), WireError> {
+    super::wire::write_frame(stream, &frame.encode())
+}
+
+enum FullRead {
+    Complete,
+    /// Peer closed before the first byte of this read.
+    CleanEof,
+    /// Peer closed mid-buffer.
+    Partial(usize),
+    /// Server shutdown flag observed.
+    Shutdown,
+}
+
+/// Shutdown-aware frame read: socket read timeouts double as poll
+/// points for the shutdown flag, and partial reads accumulate across
+/// them (a timeout mid-frame loses nothing).
+fn read_frame_idle(
+    stream: &mut TcpStream,
+    max: usize,
+    ctx: &ConnCtx,
+) -> Result<Option<Vec<u8>>, WireError> {
+    let mut prefix = [0u8; PREFIX_LEN];
+    match read_full_idle(stream, &mut prefix, ctx)? {
+        FullRead::Complete => {}
+        FullRead::CleanEof | FullRead::Shutdown => return Ok(None),
+        FullRead::Partial(got) => {
+            return Err(WireError::Truncated {
+                wanted: PREFIX_LEN,
+                got,
+            })
+        }
+    }
+    let len = frame_len(&prefix, max)?;
+    let mut body = vec![0u8; len];
+    match read_full_idle(stream, &mut body, ctx)? {
+        FullRead::Complete => Ok(Some(body)),
+        FullRead::Shutdown => Ok(None),
+        FullRead::CleanEof => Err(WireError::Truncated { wanted: len, got: 0 }),
+        FullRead::Partial(got) => Err(WireError::Truncated { wanted: len, got }),
+    }
+}
+
+fn read_full_idle(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    ctx: &ConnCtx,
+) -> Result<FullRead, WireError> {
+    let mut got = 0;
+    loop {
+        if got == buf.len() {
+            return Ok(FullRead::Complete);
+        }
+        if ctx.shutdown.load(Ordering::Acquire) {
+            return Ok(FullRead::Shutdown);
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Ok(if got == 0 {
+                    FullRead::CleanEof
+                } else {
+                    FullRead::Partial(got)
+                })
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+}

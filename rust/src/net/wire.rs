@@ -1,0 +1,728 @@
+//! Wire codec: length-prefixed frames carrying a versioned JSON body.
+//!
+//! Layout: a 4-byte big-endian body length, then the body — a JSON
+//! object (hand-rolled `util::json`; the offline build vendors no
+//! serde). Every body carries `"v"`: decoding rejects unknown versions
+//! with a typed error instead of guessing, so the protocol can evolve.
+//!
+//! The decoder is hostile-input-safe by construction: the length
+//! prefix is validated against the configured maximum *before* any
+//! allocation (no length-prefix-driven OOM), truncated bodies and
+//! malformed JSON come back as typed [`WireError`]s, and graph payloads
+//! are validated (label arity, endpoint range) before touching
+//! [`Graph::new`], whose invariants are asserts. Nothing in this module
+//! panics on untrusted bytes — the codec unit tests fuzz that.
+//!
+//! Scores cross the wire bit-identical: an `f32` widened to `f64` is
+//! exact, the JSON writer prints the shortest round-trip `f64` repr,
+//! and narrowing back to `f32` is exact again — so a score read off the
+//! socket equals the in-process [`QueryResult::score`] bit for bit
+//! (the e2e test asserts this).
+//!
+//! [`QueryResult::score`]: crate::coordinator::query::QueryResult::score
+
+use std::io::{Read, Write};
+
+use crate::graph::Graph;
+use crate::util::json::{self, Json};
+
+/// Protocol version stamped into (and required from) every body.
+pub const WIRE_VERSION: u64 = 1;
+
+/// Frame length prefix size, bytes.
+pub const PREFIX_LEN: usize = 4;
+
+/// Typed codec failures. Framing errors (`FrameTooLarge`, `Truncated`)
+/// desynchronize the stream and are fatal per-connection; body errors
+/// (`BadJson`, `UnknownVersion`, `Malformed`) arrive on intact frame
+/// boundaries and are answered with a typed error response instead.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireError {
+    /// Length prefix exceeds the configured maximum; rejected before
+    /// allocating.
+    FrameTooLarge { len: usize, max: usize },
+    /// The stream ended inside a frame (prefix or body).
+    Truncated { wanted: usize, got: usize },
+    /// Socket-level failure.
+    Io(String),
+    /// Body is not valid JSON.
+    BadJson(String),
+    /// Body's `"v"` is not [`WIRE_VERSION`].
+    UnknownVersion(u64),
+    /// Body parsed but a field is missing or out of range.
+    Malformed(String),
+}
+
+impl WireError {
+    /// Short machine-readable code for error responses.
+    pub fn code(&self) -> &'static str {
+        match self {
+            WireError::FrameTooLarge { .. } => "frame_too_large",
+            WireError::Truncated { .. } => "truncated",
+            WireError::Io(_) => "io",
+            WireError::BadJson(_) => "bad_json",
+            WireError::UnknownVersion(_) => "unknown_version",
+            WireError::Malformed(_) => "malformed",
+        }
+    }
+
+    /// Whether the stream is desynchronized (connection must close).
+    pub fn is_fatal(&self) -> bool {
+        matches!(
+            self,
+            WireError::FrameTooLarge { .. } | WireError::Truncated { .. } | WireError::Io(_)
+        )
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::FrameTooLarge { len, max } => {
+                write!(f, "frame body {len} B exceeds max {max} B")
+            }
+            WireError::Truncated { wanted, got } => {
+                write!(f, "stream ended mid-frame ({got}/{wanted} B)")
+            }
+            WireError::Io(e) => write!(f, "io: {e}"),
+            WireError::BadJson(e) => write!(f, "bad json: {e}"),
+            WireError::UnknownVersion(v) => {
+                write!(f, "unknown wire version {v} (this end speaks {WIRE_VERSION})")
+            }
+            WireError::Malformed(e) => write!(f, "malformed request: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Write one frame: length prefix + body.
+pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> Result<(), WireError> {
+    let len = u32::try_from(body.len())
+        .map_err(|_| WireError::Malformed(format!("frame body {} B overflows u32", body.len())))?;
+    w.write_all(&len.to_be_bytes())
+        .and_then(|()| w.write_all(body))
+        .and_then(|()| w.flush())
+        .map_err(|e| WireError::Io(e.to_string()))
+}
+
+/// Read one frame body, bounding allocation by `max`. `Ok(None)` is a
+/// clean EOF on a frame boundary (peer closed between requests).
+/// Blocking — the server's shutdown-aware poll loop lives in
+/// `net::server`; this is the client-side read.
+pub fn read_frame<R: Read>(r: &mut R, max: usize) -> Result<Option<Vec<u8>>, WireError> {
+    let mut prefix = [0u8; PREFIX_LEN];
+    match read_full(r, &mut prefix)? {
+        0 => return Ok(None),
+        n if n < PREFIX_LEN => {
+            return Err(WireError::Truncated {
+                wanted: PREFIX_LEN,
+                got: n,
+            })
+        }
+        _ => {}
+    }
+    let len = frame_len(&prefix, max)?;
+    let mut body = vec![0u8; len];
+    let got = read_full(r, &mut body)?;
+    if got < len {
+        return Err(WireError::Truncated { wanted: len, got });
+    }
+    Ok(Some(body))
+}
+
+/// Validate a length prefix against the frame cap — the one place the
+/// no-alloc-before-check rule is enforced.
+pub fn frame_len(prefix: &[u8; PREFIX_LEN], max: usize) -> Result<usize, WireError> {
+    let len = u32::from_be_bytes(*prefix) as usize;
+    if len > max {
+        return Err(WireError::FrameTooLarge { len, max });
+    }
+    Ok(len)
+}
+
+/// `read_exact` that reports how many bytes landed instead of losing
+/// them on EOF (so truncation errors can say how far they got).
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize, WireError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+    Ok(got)
+}
+
+// ---------------------------------------------------------------------
+// Request bodies
+// ---------------------------------------------------------------------
+
+/// What a client asks of the front door.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Shape/corpus discovery: what n_max / label arity to generate
+    /// graphs with, and which corpus ids are rankable.
+    Hello,
+    /// Score one graph pair.
+    Pair { g1: Graph, g2: Graph },
+    /// Rank a registered corpus (by id) against a query graph.
+    TopK { corpus: String, graph: Graph, k: usize },
+}
+
+/// A decoded request frame: routing header + payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    /// Token-bucket identity from the frame header. Empty = the shared
+    /// anonymous bucket.
+    pub client: String,
+    /// Client-chosen correlation id, echoed on the response.
+    pub id: u64,
+    pub req: Request,
+}
+
+impl RequestFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut fields = vec![
+            ("v", json::num(WIRE_VERSION as f64)),
+            ("client", json::s(&self.client)),
+            ("id", json::num(self.id as f64)),
+        ];
+        match &self.req {
+            Request::Hello => fields.push(("kind", json::s("hello"))),
+            Request::Pair { g1, g2 } => {
+                fields.push(("kind", json::s("pair")));
+                fields.push(("g1", graph_to_json(g1)));
+                fields.push(("g2", graph_to_json(g2)));
+            }
+            Request::TopK { corpus, graph, k } => {
+                fields.push(("kind", json::s("topk")));
+                fields.push(("corpus", json::s(corpus)));
+                fields.push(("graph", graph_to_json(graph)));
+                fields.push(("k", json::num(*k as f64)));
+            }
+        }
+        json::obj(fields).to_string().into_bytes()
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Self, WireError> {
+        let v = parse_versioned(body)?;
+        let client = v.get("client").as_str().unwrap_or("").to_string();
+        let id = field_u64(&v, "id")?;
+        let req = match v.get("kind").as_str() {
+            Some("hello") => Request::Hello,
+            Some("pair") => Request::Pair {
+                g1: graph_from_json(v.get("g1"), "g1")?,
+                g2: graph_from_json(v.get("g2"), "g2")?,
+            },
+            Some("topk") => {
+                let corpus = v
+                    .get("corpus")
+                    .as_str()
+                    .ok_or_else(|| WireError::Malformed("topk needs a corpus id".into()))?
+                    .to_string();
+                let k = field_u64(&v, "k")? as usize;
+                if k == 0 {
+                    return Err(WireError::Malformed("k must be >= 1".into()));
+                }
+                Request::TopK {
+                    corpus,
+                    graph: graph_from_json(v.get("graph"), "graph")?,
+                    k,
+                }
+            }
+            Some(other) => {
+                return Err(WireError::Malformed(format!("unknown request kind '{other}'")))
+            }
+            None => return Err(WireError::Malformed("missing request kind".into())),
+        };
+        Ok(RequestFrame { client, id, req })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Response bodies
+// ---------------------------------------------------------------------
+
+/// What the front door answers. Every overload outcome is a first-class
+/// response, not a dropped connection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Hello {
+        n_max: usize,
+        num_labels: usize,
+        corpora: Vec<String>,
+    },
+    Score {
+        score: f32,
+        /// Served by the degraded lane (GED heuristic, not the engine).
+        degraded: bool,
+    },
+    TopK {
+        ranked: Vec<(u64, f32)>,
+        /// k was shrunk by the degraded mode.
+        degraded: bool,
+    },
+    /// Token bucket empty or admission queue full: come back in
+    /// `retry_after_ms`, nothing was queued.
+    Throttled { retry_after_ms: u64 },
+    /// Typed failure (codec, unknown corpus, deadline shed, engine...).
+    Error { code: String, detail: String },
+}
+
+/// A response frame: the request's correlation id + payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseFrame {
+    pub id: u64,
+    pub resp: Response,
+}
+
+impl ResponseFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut fields = vec![
+            ("v", json::num(WIRE_VERSION as f64)),
+            ("id", json::num(self.id as f64)),
+        ];
+        match &self.resp {
+            Response::Hello {
+                n_max,
+                num_labels,
+                corpora,
+            } => {
+                fields.push(("kind", json::s("hello")));
+                fields.push(("n_max", json::num(*n_max as f64)));
+                fields.push(("num_labels", json::num(*num_labels as f64)));
+                fields.push((
+                    "corpora",
+                    json::arr(corpora.iter().map(|c| json::s(c)).collect()),
+                ));
+            }
+            Response::Score { score, degraded } => {
+                fields.push(("kind", json::s("score")));
+                fields.push(("score", json::num(*score as f64)));
+                fields.push(("degraded", Json::Bool(*degraded)));
+            }
+            Response::TopK { ranked, degraded } => {
+                fields.push(("kind", json::s("topk")));
+                fields.push((
+                    "ranked",
+                    json::arr(
+                        ranked
+                            .iter()
+                            .map(|(id, s)| {
+                                json::arr(vec![json::num(*id as f64), json::num(*s as f64)])
+                            })
+                            .collect(),
+                    ),
+                ));
+                fields.push(("degraded", Json::Bool(*degraded)));
+            }
+            Response::Throttled { retry_after_ms } => {
+                fields.push(("kind", json::s("throttled")));
+                fields.push(("retry_after_ms", json::num(*retry_after_ms as f64)));
+            }
+            Response::Error { code, detail } => {
+                fields.push(("kind", json::s("error")));
+                fields.push(("code", json::s(code)));
+                fields.push(("detail", json::s(detail)));
+            }
+        }
+        json::obj(fields).to_string().into_bytes()
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Self, WireError> {
+        let v = parse_versioned(body)?;
+        let id = field_u64(&v, "id")?;
+        let resp = match v.get("kind").as_str() {
+            Some("hello") => Response::Hello {
+                n_max: field_u64(&v, "n_max")? as usize,
+                num_labels: field_u64(&v, "num_labels")? as usize,
+                corpora: v
+                    .get("corpora")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|c| c.as_str().map(str::to_string))
+                    .collect(),
+            },
+            Some("score") => Response::Score {
+                score: field_f64(&v, "score")? as f32,
+                degraded: v.get("degraded").as_bool().unwrap_or(false),
+            },
+            Some("topk") => {
+                let ranked = v
+                    .get("ranked")
+                    .as_arr()
+                    .ok_or_else(|| WireError::Malformed("topk response needs ranked".into()))?
+                    .iter()
+                    .map(|pair| {
+                        let pair = pair
+                            .as_arr()
+                            .filter(|p| p.len() == 2)
+                            .ok_or_else(|| WireError::Malformed("ranked entry not a pair".into()))?;
+                        let id = pair[0]
+                            .as_f64()
+                            .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                            .ok_or_else(|| WireError::Malformed("ranked id not a u64".into()))?;
+                        let score = pair[1]
+                            .as_f64()
+                            .ok_or_else(|| WireError::Malformed("ranked score not a number".into()))?;
+                        Ok((id as u64, score as f32))
+                    })
+                    .collect::<Result<Vec<_>, WireError>>()?;
+                Response::TopK {
+                    ranked,
+                    degraded: v.get("degraded").as_bool().unwrap_or(false),
+                }
+            }
+            Some("throttled") => Response::Throttled {
+                retry_after_ms: field_u64(&v, "retry_after_ms")?,
+            },
+            Some("error") => Response::Error {
+                code: v.get("code").as_str().unwrap_or("unknown").to_string(),
+                detail: v.get("detail").as_str().unwrap_or("").to_string(),
+            },
+            Some(other) => {
+                return Err(WireError::Malformed(format!("unknown response kind '{other}'")))
+            }
+            None => return Err(WireError::Malformed("missing response kind".into())),
+        };
+        Ok(ResponseFrame { id, resp })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared body helpers
+// ---------------------------------------------------------------------
+
+fn parse_versioned(body: &[u8]) -> Result<Json, WireError> {
+    let text = std::str::from_utf8(body).map_err(|e| WireError::BadJson(e.to_string()))?;
+    let v = json::parse(text).map_err(WireError::BadJson)?;
+    match v.get("v").as_f64() {
+        Some(ver) if ver == WIRE_VERSION as f64 => Ok(v),
+        Some(ver) if ver >= 0.0 && ver.fract() == 0.0 && ver < u64::MAX as f64 => {
+            Err(WireError::UnknownVersion(ver as u64))
+        }
+        _ => Err(WireError::UnknownVersion(0)),
+    }
+}
+
+fn field_f64(v: &Json, key: &str) -> Result<f64, WireError> {
+    v.get(key)
+        .as_f64()
+        .ok_or_else(|| WireError::Malformed(format!("missing numeric field '{key}'")))
+}
+
+fn field_u64(v: &Json, key: &str) -> Result<u64, WireError> {
+    // 2^53 bound: ids ride JSON f64s, exact only below that. Client ids
+    // are correlation counters in practice; reject rather than alias.
+    field_f64(v, key)
+        .ok()
+        .filter(|x| *x >= 0.0 && x.fract() == 0.0 && *x <= 9_007_199_254_740_992.0)
+        .map(|x| x as u64)
+        .ok_or_else(|| WireError::Malformed(format!("field '{key}' is not a non-negative integer")))
+}
+
+/// Graph payload: `{"n":5,"labels":[...],"edges":[[u,v],...]}`.
+pub fn graph_to_json(g: &Graph) -> Json {
+    json::obj(vec![
+        ("n", json::num(g.num_nodes() as f64)),
+        (
+            "labels",
+            json::arr(g.labels().iter().map(|&l| json::num(l as f64)).collect()),
+        ),
+        (
+            "edges",
+            json::arr(
+                g.edges()
+                    .iter()
+                    .map(|&(u, v)| json::arr(vec![json::num(u as f64), json::num(v as f64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Node-count sanity bound on wire graphs. SPA-GCN targets small graphs
+/// (n_max 32 in the shipped artifacts); anything near this bound is
+/// rejected by admission's shape checks anyway — the wire bound exists
+/// so a hostile frame can't make the decoder build a huge graph first.
+pub const MAX_WIRE_NODES: usize = 4096;
+
+/// Decode and *validate* a graph payload: label arity, u16 ranges and
+/// endpoint bounds are checked here because [`Graph::new`]'s invariants
+/// are asserts — untrusted input must never reach them.
+pub fn graph_from_json(v: &Json, what: &str) -> Result<Graph, WireError> {
+    let bad = |detail: String| WireError::Malformed(format!("{what}: {detail}"));
+    if v.as_obj().is_none() {
+        return Err(bad("not an object".into()));
+    }
+    let n = v
+        .get("n")
+        .as_f64()
+        .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+        .map(|x| x as usize)
+        .ok_or_else(|| bad("missing node count 'n'".into()))?;
+    if n > MAX_WIRE_NODES {
+        return Err(bad(format!("n={n} exceeds wire bound {MAX_WIRE_NODES}")));
+    }
+    let labels_json = v
+        .get("labels")
+        .as_arr()
+        .ok_or_else(|| bad("missing 'labels' array".into()))?;
+    if labels_json.len() != n {
+        return Err(bad(format!("{} labels for {n} nodes", labels_json.len())));
+    }
+    let labels = labels_json
+        .iter()
+        .map(|l| {
+            l.as_f64()
+                .filter(|x| *x >= 0.0 && x.fract() == 0.0 && *x <= u16::MAX as f64)
+                .map(|x| x as u16)
+        })
+        .collect::<Option<Vec<u16>>>()
+        .ok_or_else(|| bad("label out of u16 range".into()))?;
+    let edges_json = v
+        .get("edges")
+        .as_arr()
+        .ok_or_else(|| bad("missing 'edges' array".into()))?;
+    let mut edges = Vec::with_capacity(edges_json.len());
+    for e in edges_json {
+        let pair = e
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| bad("edge is not a [u,v] pair".into()))?;
+        let endpoint = |x: &Json| {
+            x.as_f64()
+                .filter(|x| *x >= 0.0 && x.fract() == 0.0 && (*x as usize) < n)
+                .map(|x| x as u16)
+        };
+        match (endpoint(&pair[0]), endpoint(&pair[1])) {
+            (Some(u), Some(w)) => edges.push((u, w)),
+            _ => return Err(bad(format!("edge endpoint out of range for n={n}"))),
+        }
+    }
+    Ok(Graph::new(n, edges, labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{generate, Family};
+    use crate::util::rng::Rng;
+
+    fn frame_bytes(body: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, body).unwrap();
+        out
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let body = br#"{"v":1,"kind":"hello","client":"","id":0}"#.to_vec();
+        let bytes = frame_bytes(&body);
+        let mut r = &bytes[..];
+        assert_eq!(read_frame(&mut r, 1024).unwrap(), Some(body));
+        // Clean EOF on the boundary.
+        assert_eq!(read_frame(&mut r, 1024).unwrap(), None);
+    }
+
+    #[test]
+    fn request_roundtrip_property() {
+        // Property over random graphs: encode → decode is identity for
+        // every request kind, across sizes and label arities.
+        let mut rng = Rng::new(0x77);
+        for trial in 0..50u64 {
+            let g1 = generate(&mut rng, Family::Aids, 32, 29);
+            let g2 = generate(&mut rng, Family::ErdosRenyi { n: 9, p_millis: 350 }, 32, 8);
+            let req = match trial % 3 {
+                0 => Request::Hello,
+                1 => Request::Pair {
+                    g1: g1.clone(),
+                    g2: g2.clone(),
+                },
+                _ => Request::TopK {
+                    corpus: format!("corpus-{trial}"),
+                    graph: g1.clone(),
+                    k: 1 + (trial as usize % 17),
+                },
+            };
+            let frame = RequestFrame {
+                client: format!("client-{}", trial % 5),
+                id: trial * 1_000_003,
+                req,
+            };
+            let decoded = RequestFrame::decode(&frame.encode()).unwrap();
+            assert_eq!(decoded, frame);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_property() {
+        let cases = vec![
+            Response::Hello {
+                n_max: 32,
+                num_labels: 29,
+                corpora: vec!["aids-synth".into(), "x".into()],
+            },
+            Response::Score {
+                score: 0.734_218_2_f32,
+                degraded: false,
+            },
+            Response::Score {
+                score: 1.0,
+                degraded: true,
+            },
+            Response::TopK {
+                ranked: vec![(3, 0.9f32), (0, 0.12345678f32), (u32::MAX as u64, 0.0)],
+                degraded: true,
+            },
+            Response::Throttled { retry_after_ms: 17 },
+            Response::Error {
+                code: "deadline".into(),
+                detail: "waited 300ms".into(),
+            },
+        ];
+        for (i, resp) in cases.into_iter().enumerate() {
+            let frame = ResponseFrame {
+                id: i as u64,
+                resp,
+            };
+            assert_eq!(ResponseFrame::decode(&frame.encode()).unwrap(), frame);
+        }
+    }
+
+    #[test]
+    fn scores_roundtrip_bit_identical() {
+        // The f32 → f64 → shortest-repr → f64 → f32 chain is exact for
+        // every f32, including awkward ones.
+        let mut rng = Rng::new(9);
+        let mut scores: Vec<f32> = (0..200).map(|_| rng.f32()).collect();
+        scores.extend([0.0, 1.0, f32::MIN_POSITIVE, 0.1, 1.0 / 3.0]);
+        for s in scores {
+            let frame = ResponseFrame {
+                id: 1,
+                resp: Response::Score {
+                    score: s,
+                    degraded: false,
+                },
+            };
+            match ResponseFrame::decode(&frame.encode()).unwrap().resp {
+                Response::Score { score, .. } => {
+                    assert_eq!(score.to_bits(), s.to_bits(), "score {s} corrupted in transit")
+                }
+                other => panic!("wrong kind: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_prefix_rejected_before_alloc() {
+        // A hostile 4 GiB length prefix must come back as a typed error
+        // without the decoder allocating the claimed body.
+        let mut bytes = u32::MAX.to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"xx");
+        match read_frame(&mut &bytes[..], 1 << 20) {
+            Err(WireError::FrameTooLarge { len, max }) => {
+                assert_eq!(len, u32::MAX as usize);
+                assert_eq!(max, 1 << 20);
+            }
+            other => panic!("expected FrameTooLarge, got {other:?}"),
+        }
+        assert!(WireError::FrameTooLarge { len: 0, max: 0 }.is_fatal());
+    }
+
+    #[test]
+    fn truncated_prefix_and_body_are_typed() {
+        // Stream dies inside the prefix.
+        let bytes = [0u8, 0];
+        match read_frame(&mut &bytes[..], 1024) {
+            Err(WireError::Truncated { wanted, got }) => {
+                assert_eq!((wanted, got), (PREFIX_LEN, 2));
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        // Stream dies inside the body.
+        let mut bytes = 10u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"abc");
+        match read_frame(&mut &bytes[..], 1024) {
+            Err(WireError::Truncated { wanted, got }) => assert_eq!((wanted, got), (10, 3)),
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_version_is_typed() {
+        let body = br#"{"v":2,"kind":"hello","id":0}"#;
+        match RequestFrame::decode(body) {
+            Err(WireError::UnknownVersion(2)) => {}
+            other => panic!("expected UnknownVersion(2), got {other:?}"),
+        }
+        // Missing version is its own rejection, not a default.
+        assert!(matches!(
+            RequestFrame::decode(br#"{"kind":"hello","id":0}"#),
+            Err(WireError::UnknownVersion(_))
+        ));
+    }
+
+    #[test]
+    fn malformed_bodies_are_typed_never_panics() {
+        let cases: Vec<&[u8]> = vec![
+            b"",
+            b"not json at all",
+            b"\xff\xfe\x00",
+            br#"{"v":1}"#,
+            br#"{"v":1,"kind":"nope","id":0}"#,
+            br#"{"v":1,"kind":"pair","id":0}"#,
+            br#"{"v":1,"kind":"pair","id":0,"g1":5,"g2":6}"#,
+            // labels arity mismatch
+            br#"{"v":1,"kind":"pair","id":0,"g1":{"n":3,"labels":[1],"edges":[]},"g2":{"n":1,"labels":[0],"edges":[]}}"#,
+            // edge endpoint out of range — must NOT reach Graph::new's assert
+            br#"{"v":1,"kind":"pair","id":0,"g1":{"n":2,"labels":[0,1],"edges":[[0,9]]},"g2":{"n":1,"labels":[0],"edges":[]}}"#,
+            // negative / fractional fields
+            br#"{"v":1,"kind":"topk","id":-4,"corpus":"c","k":3,"graph":{"n":1,"labels":[0],"edges":[]}}"#,
+            br#"{"v":1,"kind":"topk","id":0,"corpus":"c","k":0,"graph":{"n":1,"labels":[0],"edges":[]}}"#,
+            br#"{"v":1,"kind":"topk","id":0,"corpus":"c","k":2.5,"graph":{"n":1,"labels":[0],"edges":[]}}"#,
+            // hostile node count: bounded before any label/edge work
+            br#"{"v":1,"kind":"pair","id":0,"g1":{"n":99999999,"labels":[],"edges":[]},"g2":{"n":1,"labels":[0],"edges":[]}}"#,
+        ];
+        for body in cases {
+            let err = RequestFrame::decode(body)
+                .expect_err(&format!("accepted {:?}", String::from_utf8_lossy(body)));
+            // Body-level errors arrive on intact frame boundaries: the
+            // connection survives and answers with a typed error.
+            assert!(
+                matches!(err, WireError::BadJson(_) | WireError::Malformed(_)),
+                "unexpected error class {err:?} for {:?}",
+                String::from_utf8_lossy(body)
+            );
+        }
+    }
+
+    #[test]
+    fn random_bytes_never_panic_decoder() {
+        // Fuzz the full read path: arbitrary byte soup must yield typed
+        // errors (or valid frames), never a panic or huge allocation.
+        let mut rng = Rng::new(0xF00D);
+        for _ in 0..300 {
+            let len = rng.below(64);
+            let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            if let Ok(Some(body)) = read_frame(&mut &bytes[..], 4096) {
+                let _ = RequestFrame::decode(&body);
+                let _ = ResponseFrame::decode(&body);
+            }
+        }
+    }
+
+    #[test]
+    fn graph_codec_roundtrip() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let g = generate(&mut rng, Family::Aids, 32, 29);
+            let back = graph_from_json(&graph_to_json(&g), "g").unwrap();
+            assert_eq!(back, g);
+        }
+    }
+}

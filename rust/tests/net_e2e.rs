@@ -1,0 +1,461 @@
+//! Front-door end-to-end tests over real loopback sockets.
+//!
+//! No artifacts needed: lanes run `NativeEngine` with synthetic weights,
+//! which is bit-deterministic — the acceptance test can demand that a
+//! score served over the wire is bit-identical to the same query
+//! submitted in-process. The overload tests drive the server past its
+//! admission capacity and assert the typed taxonomy: throttled clients
+//! get `retry_after_ms`, queue depth stays bounded, degraded responses
+//! are marked, and a disconnecting or slow-reading client never stalls
+//! siblings or leaks its connection slot.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use spa_gcn::coordinator::corpus::Corpus;
+use spa_gcn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use spa_gcn::coordinator::query::{Outcome, Query};
+use spa_gcn::ged::ged_similarity;
+use spa_gcn::ged::heuristics::greedy_ged;
+use spa_gcn::graph::dataset::GraphDb;
+use spa_gcn::graph::generate::{generate, Family};
+use spa_gcn::graph::Graph;
+use spa_gcn::net::client::{run_load, LoadConfig, NetClient};
+use spa_gcn::net::server::NetServer;
+use spa_gcn::net::wire::{write_frame, Response};
+use spa_gcn::net::NetConfig;
+use spa_gcn::nn::config::ModelConfig;
+use spa_gcn::nn::weights::Weights;
+use spa_gcn::runtime::native::NativeEngine;
+use spa_gcn::runtime::{Engine, EngineFactory};
+use spa_gcn::util::rng::Rng;
+
+fn model() -> ModelConfig {
+    ModelConfig {
+        n_max: 8,
+        num_labels: 4,
+        ..ModelConfig::default()
+    }
+}
+
+fn native_factory(cfg: &ModelConfig) -> EngineFactory {
+    let cfg = cfg.clone();
+    Arc::new(move || {
+        Ok(Box::new(NativeEngine::new(cfg.clone(), Weights::synthetic(&cfg, 2024)))
+            as Box<dyn Engine>)
+    })
+}
+
+/// A front door that never throttles, sheds, or degrades: overload
+/// layers out of the way so functional tests see pure scoring.
+fn generous_net() -> NetConfig {
+    NetConfig {
+        refill_per_s: 1e9,
+        burst: 1e9,
+        deadline_ms: 60_000,
+        degrade_hi: 1e9,
+        degrade_lo: 1e9,
+        ..NetConfig::default()
+    }
+}
+
+fn pairs(cfg: &ModelConfig, seed: u64, count: usize) -> Vec<(Graph, Graph)> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            (
+                generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels),
+                generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels),
+            )
+        })
+        .collect()
+}
+
+fn start_server(ncfg: NetConfig, corpora: Vec<Arc<Corpus>>) -> NetServer {
+    let cfg = model();
+    let server = NetServer::start(
+        cfg.clone(),
+        vec![native_factory(&cfg)],
+        PipelineConfig::default(),
+        ncfg,
+        corpora,
+        "127.0.0.1:0",
+    )
+    .expect("server binds loopback");
+    assert_eq!(server.wait_ready(), 1, "native lane must construct");
+    server
+}
+
+/// Poll until `cond` holds or the timeout passes; avoids sleeps sized
+/// to the slowest CI machine.
+fn eventually(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
+
+#[test]
+fn wire_pair_scores_bit_identical_to_in_process() {
+    let cfg = model();
+    let workload = pairs(&cfg, 71, 12);
+
+    // In-process baseline: same engine recipe, scores collected via the
+    // responder tap.
+    let collected: Arc<Mutex<HashMap<u64, f32>>> = Arc::new(Mutex::new(HashMap::new()));
+    let tap = {
+        let collected = Arc::clone(&collected);
+        Arc::new(move |r: &spa_gcn::coordinator::query::QueryResult| {
+            if let Outcome::Score(s) = r.outcome {
+                collected.lock().unwrap().insert(r.id, s);
+            }
+        }) as spa_gcn::coordinator::pipeline::ResultTap
+    };
+    let pipeline = Pipeline::start_with_tap(
+        cfg.clone(),
+        vec![native_factory(&cfg)],
+        PipelineConfig::default(),
+        Some(tap),
+    );
+    pipeline.wait_ready();
+    for (i, (g1, g2)) in workload.iter().enumerate() {
+        pipeline.submit(Query::new(i as u64, g1.clone(), g2.clone()));
+    }
+    pipeline.finish();
+    let baseline = collected.lock().unwrap().clone();
+    assert_eq!(baseline.len(), workload.len());
+
+    // Same pairs over the wire.
+    let server = start_server(generous_net(), vec![]);
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, "bitident").unwrap();
+    for (i, (g1, g2)) in workload.iter().enumerate() {
+        let frame = client.pair(g1.clone(), g2.clone()).unwrap();
+        match frame.resp {
+            Response::Score { score, degraded } => {
+                assert!(!degraded, "generous config must not degrade");
+                assert_eq!(
+                    score.to_bits(),
+                    baseline[&(i as u64)].to_bits(),
+                    "pair {i}: wire {} != in-process {}",
+                    score,
+                    baseline[&(i as u64)]
+                );
+            }
+            other => panic!("pair {i}: unexpected response {other:?}"),
+        }
+    }
+    drop(client);
+    let metrics = server.finish();
+    let net = metrics.net.expect("front-door counters attached");
+    assert_eq!(net.accepted, workload.len() as u64);
+    assert_eq!((net.throttled, net.shed_deadline, net.degraded), (0, 0, 0));
+}
+
+#[test]
+fn wire_topk_matches_in_process_ranking() {
+    let cfg = model();
+    let mut rng = Rng::new(303);
+    let db = GraphDb::synthesize(&mut rng, Family::Aids, 16, cfg.n_max, cfg.num_labels);
+    let corpus = Arc::new(Corpus::from_db("aids-synth", &db, cfg.n_max, cfg.num_labels).unwrap());
+    let query = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    let k = 5;
+
+    let collected: Arc<Mutex<Option<Vec<(u64, f32)>>>> = Arc::new(Mutex::new(None));
+    let tap = {
+        let collected = Arc::clone(&collected);
+        Arc::new(move |r: &spa_gcn::coordinator::query::QueryResult| {
+            if let Outcome::TopK(ranked) = &r.outcome {
+                *collected.lock().unwrap() = Some(ranked.clone());
+            }
+        }) as spa_gcn::coordinator::pipeline::ResultTap
+    };
+    let pipeline = Pipeline::start_with_tap(
+        cfg.clone(),
+        vec![native_factory(&cfg)],
+        PipelineConfig::default(),
+        Some(tap),
+    );
+    pipeline.wait_ready();
+    pipeline.submit(Query::topk(0, query.clone(), Arc::clone(&corpus), k));
+    pipeline.finish();
+    let baseline = collected.lock().unwrap().clone().expect("top-k scored");
+
+    let server = start_server(generous_net(), vec![Arc::clone(&corpus)]);
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, "topk").unwrap();
+    let (n_max, num_labels, corpora) = client.hello().unwrap();
+    assert_eq!((n_max, num_labels), (cfg.n_max, cfg.num_labels));
+    assert_eq!(corpora, vec!["aids-synth".to_string()]);
+    match client.topk("aids-synth", query, k).unwrap().resp {
+        Response::TopK { ranked, degraded } => {
+            assert!(!degraded);
+            assert_eq!(ranked.len(), baseline.len());
+            for (wire, base) in ranked.iter().zip(&baseline) {
+                assert_eq!(wire.0, base.0, "candidate order must match");
+                assert_eq!(wire.1.to_bits(), base.1.to_bits(), "scores bit-identical");
+            }
+        }
+        other => panic!("unexpected top-k response {other:?}"),
+    }
+    // Unknown corpus ids get a typed error, not a hang or a panic.
+    let g = generate(&mut Rng::new(1), Family::Aids, cfg.n_max, cfg.num_labels);
+    match client.topk("no-such-corpus", g, 3).unwrap().resp {
+        Response::Error { code, .. } => assert_eq!(code, "unknown_corpus"),
+        other => panic!("unexpected response {other:?}"),
+    }
+    drop(client);
+    server.finish();
+}
+
+#[test]
+fn overload_throttles_with_retry_after_and_bounded_queue() {
+    // Tight budget: 2-token burst, 1 token/s refill — a back-to-back
+    // burst of 40 gets a couple of scores and a pile of retry-afters.
+    let ncfg = NetConfig {
+        refill_per_s: 1.0,
+        burst: 2.0,
+        admit_cap: 8,
+        deadline_ms: 60_000,
+        degrade_hi: 1e9,
+        degrade_lo: 1e9,
+        ..NetConfig::default()
+    };
+    let admit_cap = ncfg.admit_cap;
+    let cfg = model();
+    let server = start_server(ncfg, vec![]);
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, "burster").unwrap();
+    let workload = pairs(&cfg, 5, 40);
+    let (mut scored, mut throttled) = (0u64, 0u64);
+    for (g1, g2) in workload {
+        match client.pair(g1, g2).unwrap().resp {
+            Response::Score { .. } => scored += 1,
+            Response::Throttled { retry_after_ms } => {
+                assert!(retry_after_ms >= 1, "retry hint must be actionable");
+                throttled += 1;
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+    assert!(scored >= 2, "burst allowance must admit, got {scored}");
+    assert!(throttled >= 30, "tight bucket must throttle, got {throttled}");
+    drop(client);
+    let metrics = server.finish();
+    let net = metrics.net.unwrap();
+    assert_eq!(net.accepted, scored);
+    assert_eq!(net.throttled, throttled);
+    // No unbounded queue growth: the admission channel's peak depth is
+    // pinned by its capacity (plus transiently mid-send producers).
+    let admit = metrics
+        .channels
+        .iter()
+        .find(|c| c.name == "net.admit")
+        .expect("net.admit snapshot attached");
+    assert!(
+        admit.max_depth <= admit_cap + 1,
+        "admission queue grew past its bound: {} > {}",
+        admit.max_depth,
+        admit_cap
+    );
+}
+
+#[test]
+fn load_tool_drives_front_door_end_to_end() {
+    let server = start_server(generous_net(), vec![]);
+    let addr = server.addr().to_string();
+    let table = run_load(&LoadConfig {
+        connect: addr,
+        clients: 2,
+        rate_qps: 500.0,
+        queries: 30,
+        seed: 9,
+        topk: 0,
+    })
+    .unwrap();
+    assert_eq!(table.get("sent"), Some("30"), "{}", table.render());
+    assert_eq!(table.get("scored ok"), Some("30"), "{}", table.render());
+    assert_eq!(table.get("throttled"), Some("0"), "{}", table.render());
+    assert_eq!(table.get("io errors"), Some("0"), "{}", table.render());
+    let metrics = server.finish();
+    assert_eq!(metrics.net.unwrap().accepted, 30);
+}
+
+#[test]
+fn degraded_mode_falls_back_to_ged_and_shrinks_k() {
+    // hi = lo = -1 keeps the EWMA signal permanently engaged: the
+    // degraded path itself is under test, not the hysteresis (that has
+    // its own unit tests).
+    let ncfg = NetConfig {
+        degrade_hi: -1.0,
+        degrade_lo: -1.0,
+        degraded_topk: 3,
+        refill_per_s: 1e9,
+        burst: 1e9,
+        deadline_ms: 60_000,
+        ..NetConfig::default()
+    };
+    let cfg = model();
+    let mut rng = Rng::new(404);
+    let db = GraphDb::synthesize(&mut rng, Family::Aids, 8, cfg.n_max, cfg.num_labels);
+    let corpus = Arc::new(Corpus::from_db("aids-synth", &db, cfg.n_max, cfg.num_labels).unwrap());
+    let server = start_server(ncfg, vec![Arc::clone(&corpus)]);
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, "degraded").unwrap();
+
+    // Pair queries answer from the GED-bound heuristic, marked degraded.
+    let g1 = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    let g2 = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    let expected =
+        ged_similarity(greedy_ged(&g1, &g2), g1.num_nodes(), g2.num_nodes()) as f32;
+    match client.pair(g1, g2).unwrap().resp {
+        Response::Score { score, degraded } => {
+            assert!(degraded, "degraded flag must be recorded on the response");
+            assert_eq!(score.to_bits(), expected.to_bits());
+        }
+        other => panic!("unexpected response {other:?}"),
+    }
+
+    // Top-k depth shrinks to degraded_topk.
+    let q = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    match client.topk("aids-synth", q, 7).unwrap().resp {
+        Response::TopK { ranked, degraded } => {
+            assert!(degraded);
+            assert_eq!(ranked.len(), 3, "k must shrink to degraded_topk");
+        }
+        other => panic!("unexpected response {other:?}"),
+    }
+    drop(client);
+    let metrics = server.finish();
+    assert!(metrics.net.unwrap().degraded >= 2);
+    // The degraded rows surface in the rendered report.
+    let t = metrics.render_table("degraded");
+    let row: u64 = t.get("degraded responses").unwrap().parse().unwrap();
+    assert!(row >= 2, "{}", t.render());
+}
+
+#[test]
+fn disconnect_mid_response_leaks_neither_slot_nor_route() {
+    // Tiny connection cap: a leaked slot would starve the later
+    // connections into "busy" errors.
+    let ncfg = NetConfig {
+        conn_cap: 2,
+        ..generous_net()
+    };
+    let cfg = model();
+    let server = start_server(ncfg, vec![]);
+    let addr = server.addr().to_string();
+    let workload = pairs(&cfg, 13, 7);
+    for (g1, g2) in &workload[..6] {
+        // Wait for the previous iteration's slot to come back (TCP
+        // close is asynchronous), then send a request and hang up
+        // without reading the response.
+        assert!(
+            eventually(Duration::from_secs(10), || server.active_connections() == 0),
+            "connection slot not released between disconnects"
+        );
+        let frame = spa_gcn::net::wire::RequestFrame {
+            client: "quitter".into(),
+            id: 1,
+            req: spa_gcn::net::wire::Request::Pair {
+                g1: g1.clone(),
+                g2: g2.clone(),
+            },
+        };
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        write_frame(&mut raw, &frame.encode()).unwrap();
+        drop(raw);
+    }
+    // Every slot must come back...
+    assert!(
+        eventually(Duration::from_secs(10), || server.active_connections() == 0),
+        "connection slots leaked: {} still active",
+        server.active_connections()
+    );
+    // ...every result route must drain (the tap delivers into dropped
+    // reply slots as a no-op and removes the route)...
+    assert!(
+        eventually(Duration::from_secs(10), || server.pending_routes() == 0),
+        "result routes leaked: {} still pending",
+        server.pending_routes()
+    );
+    // ...and the front door still serves.
+    let (g1, g2) = workload[6].clone();
+    let mut client = NetClient::connect(&addr, "survivor").unwrap();
+    match client.pair(g1, g2).unwrap().resp {
+        Response::Score { .. } => {}
+        other => panic!("service did not survive disconnects: {other:?}"),
+    }
+    drop(client);
+    server.finish();
+}
+
+#[test]
+fn slow_reader_does_not_stall_sibling_connections() {
+    let cfg = model();
+    let server = start_server(generous_net(), vec![]);
+    let addr = server.addr().to_string();
+
+    // The slow reader: sends one request and never reads the response.
+    let (g1, g2) = pairs(&cfg, 31, 1).remove(0);
+    let mut slow = TcpStream::connect(&addr).unwrap();
+    let frame = spa_gcn::net::wire::RequestFrame {
+        client: "slow".into(),
+        id: 7,
+        req: spa_gcn::net::wire::Request::Pair { g1, g2 },
+    };
+    write_frame(&mut slow, &frame.encode()).unwrap();
+    slow.flush().unwrap();
+
+    // Meanwhile a sibling connection completes a full workload.
+    let mut client = NetClient::connect(&addr, "sibling").unwrap();
+    for (g1, g2) in pairs(&cfg, 37, 10) {
+        match client.pair(g1, g2).unwrap().resp {
+            Response::Score { .. } => {}
+            other => panic!("sibling stalled or failed: {other:?}"),
+        }
+    }
+    drop(client);
+    drop(slow);
+    let metrics = server.finish();
+    assert!(metrics.net.unwrap().accepted >= 10);
+}
+
+#[test]
+fn malformed_frame_gets_typed_error_and_connection_survives() {
+    let server = start_server(generous_net(), vec![]);
+    let addr = server.addr().to_string();
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    // Intact frame, garbage body: typed error, connection stays up.
+    write_frame(&mut raw, b"{\"v\":1,\"id\":0,\"kind\":\"nonsense\"}").unwrap();
+    let body = spa_gcn::net::wire::read_frame(&mut raw, 1 << 20)
+        .unwrap()
+        .expect("typed error frame");
+    match spa_gcn::net::wire::ResponseFrame::decode(&body).unwrap().resp {
+        Response::Error { code, .. } => assert_eq!(code, "malformed"),
+        other => panic!("unexpected response {other:?}"),
+    }
+    // The same connection still answers a well-formed hello.
+    let hello = spa_gcn::net::wire::RequestFrame {
+        client: String::new(),
+        id: 2,
+        req: spa_gcn::net::wire::Request::Hello,
+    };
+    write_frame(&mut raw, &hello.encode()).unwrap();
+    let body = spa_gcn::net::wire::read_frame(&mut raw, 1 << 20)
+        .unwrap()
+        .expect("hello response");
+    match spa_gcn::net::wire::ResponseFrame::decode(&body).unwrap().resp {
+        Response::Hello { .. } => {}
+        other => panic!("unexpected response {other:?}"),
+    }
+    drop(raw);
+    server.finish();
+}
