@@ -25,8 +25,11 @@ use crate::runtime::{EngineCaps, EngineError};
 use super::channel::{NamedSender, SendResult};
 use super::query::{Query, QueryPayload, QueryResult, RejectReason};
 
-/// Validate one graph against the model's static shapes.
-fn validate_graph(cfg: &ModelConfig, g: &Graph) -> Result<(), RejectReason> {
+/// Validate one graph against the model's static shapes. Public so the
+/// net front stage (`net/admission.rs`) can apply the *same* gate to
+/// wire graphs before any scoring lane — including the degraded GED
+/// fallback, which never reaches this pipeline stage.
+pub fn validate_graph(cfg: &ModelConfig, g: &Graph) -> Result<(), RejectReason> {
     if g.num_nodes() > cfg.n_max {
         return Err(RejectReason::TooManyNodes {
             nodes: g.num_nodes(),

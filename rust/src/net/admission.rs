@@ -17,6 +17,11 @@
 //!   scoring it would spend engine time on a response the client has
 //!   stopped waiting for. Sheds are counted on the channel
 //!   ([`ChannelStats::note_shed`]) and in `net shed (deadline)`.
+//! * **Reject** (front stage, before lane selection): every wire graph
+//!   is validated against the model's `n_max` / `num_labels` with the
+//!   same `router::validate_graph` the in-process admission stage
+//!   uses, so no lane — engine *or* the degraded GED fallback — ever
+//!   sees a shape the artifacts can't serve.
 //! * **Degrade** (front stage, under the EWMA load signal): top-k
 //!   queries shrink to `degraded_topk`, and pair queries fall back to
 //!   the `ged::heuristics` bound-based scorer — the coarse half of a
@@ -36,8 +41,10 @@ use crate::coordinator::channel::NamedReceiver;
 use crate::coordinator::corpus::Corpus;
 use crate::coordinator::pipeline::{ResultTap, SubmitHandle};
 use crate::coordinator::query::{Outcome, Query, QueryResult};
+use crate::coordinator::router::validate_graph;
 use crate::ged::ged_similarity;
 use crate::ged::heuristics::greedy_ged;
+use crate::nn::config::ModelConfig;
 
 use super::wire::{Request, Response, ResponseFrame};
 use super::{NetConfig, NetCounters};
@@ -319,6 +326,7 @@ pub fn front_stage(
     corpora: BTreeMap<String, Arc<Corpus>>,
     signal: Arc<LoadSignal>,
     counters: Arc<NetCounters>,
+    model: ModelConfig,
     cfg: NetConfig,
 ) {
     let stats = rx.stats();
@@ -348,6 +356,31 @@ pub fn front_stage(
             reply(Response::Error {
                 code: "deadline".into(),
                 detail: format!("shed: queued past the {} ms deadline", cfg.deadline_ms),
+            });
+            continue;
+        }
+        // Shape gate: the wire codec's MAX_WIRE_NODES only protects the
+        // decoder; what every scoring lane requires is the model's
+        // n_max / num_labels (router::validate_graph — the same check
+        // the in-process admission stage applies). Enforced here,
+        // before lane selection, so the degraded GED fallback (O(n^3),
+        // on this single thread) can never run on a graph the engine
+        // path would reject with TooManyNodes — a hostile 4096-node
+        // Pair must not stall the sole admission consumer, nor earn a
+        // fabricated score for a query the normal path refuses.
+        let shape_err = match &req {
+            Request::Hello => None,
+            Request::Pair { g1, g2 } => validate_graph(&model, g1)
+                .and_then(|()| validate_graph(&model, g2))
+                .err(),
+            Request::TopK { graph, .. } => validate_graph(&model, graph).err(),
+        };
+        if let Some(reason) = shape_err {
+            // Same code + detail the pipeline's Outcome::Rejected maps
+            // to, so clients can't tell which layer refused.
+            reply(Response::Error {
+                code: "rejected".into(),
+                detail: reason.to_string(),
             });
             continue;
         }

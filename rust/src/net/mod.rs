@@ -24,10 +24,13 @@
 //!   end-to-end in tests and benches without external tools.
 //!
 //! The overload taxonomy, outermost first: the connection cap refuses
-//! sockets, the token buckets refuse clients, the admission queue
+//! sockets (and idle connections time out, so silent sockets can't pin
+//! the cap), the token buckets refuse clients, the admission queue
 //! refuses bursts (DropNewest), the deadline sheds stale queued work,
-//! and the degraded mode cheapens what's left. Each layer answers with
-//! a typed response, and each is counted in [`NetSnapshot`].
+//! the front stage rejects graphs outside the model's shapes before
+//! any lane runs, and the degraded mode cheapens what's left. Each
+//! layer answers with a typed response, and each is counted in
+//! [`NetSnapshot`].
 //!
 //! [`Pipeline::submit`]: crate::coordinator::pipeline::Pipeline::submit
 //! [`SendPolicy::DropNewest`]: crate::coordinator::channel::SendPolicy::DropNewest
@@ -80,6 +83,11 @@ pub struct NetConfig {
     /// Socket read poll interval: how often an idle connection thread
     /// rechecks the shutdown flag.
     pub read_timeout_ms: u64,
+    /// Idle-connection deadline: a connection that completes no frame
+    /// for this long is closed and its conn-cap slot released, so
+    /// silent connections can't pin the cap (and a mid-frame stall is
+    /// bounded by the same clock, answered as a truncation).
+    pub idle_timeout_ms: u64,
     /// Socket write timeout: a reader stalled longer than this loses
     /// its connection (never stalls sibling connections either way —
     /// connection-per-thread).
@@ -101,6 +109,7 @@ impl Default for NetConfig {
             ged_fallback: true,
             max_clients: 10_000,
             read_timeout_ms: 50,
+            idle_timeout_ms: 60_000,
             write_timeout_ms: 2_000,
         }
     }

@@ -141,7 +141,16 @@ impl NetServer {
             std::thread::Builder::new()
                 .name("spa-net-front".into())
                 .spawn(move || {
-                    front_stage(admit_rx, submit_handle, router, corpora, signal, counters, ncfg)
+                    front_stage(
+                        admit_rx,
+                        submit_handle,
+                        router,
+                        corpora,
+                        signal,
+                        counters,
+                        model,
+                        ncfg,
+                    )
                 })
                 .context("spawning net front stage")?
         };
@@ -207,6 +216,14 @@ impl NetServer {
     /// Live connection count (cap-slot leak detection in tests).
     pub fn active_connections(&self) -> usize {
         self.ctx.active.load(Ordering::Acquire)
+    }
+
+    /// Connection JoinHandles still tracked by the accept loop
+    /// (handle-leak detection in tests: finished threads are reaped on
+    /// accept-loop ticks, so this tracks live connections, not total
+    /// connections ever served).
+    pub fn tracked_conn_handles(&self) -> usize {
+        self.conns.lock().unwrap_or_else(|p| p.into_inner()).len()
     }
 
     /// Ordered shutdown: stop accepting, drain connections, let the
@@ -284,11 +301,31 @@ pub fn serve_listen(cfg: &ServeConfig, listen: &str) -> Result<NetServer> {
 // Accept loop + connection threads
 // ---------------------------------------------------------------------
 
+/// Join and drop every connection handle whose thread has exited.
+/// Called from the accept loop's idle ticks and before tracking a new
+/// connection: on a long-running server the handle list stays
+/// proportional to *live* connections (<= conn cap), not to total
+/// connections ever served — finished threads release their OS
+/// resources promptly instead of at shutdown.
+fn reap_finished(conns: &Mutex<Vec<JoinHandle<()>>>) {
+    let mut conns = conns.lock().unwrap_or_else(|p| p.into_inner());
+    let mut i = 0;
+    while i < conns.len() {
+        if conns[i].is_finished() {
+            // Finished thread: join returns immediately.
+            let _ = conns.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
 fn accept_loop(listener: TcpListener, ctx: Arc<ConnCtx>, conns: Arc<Mutex<Vec<JoinHandle<()>>>>) {
     let mut conn_id = 0u64;
     while !ctx.shutdown.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((stream, _peer)) => {
+                reap_finished(&conns);
                 // Connection cap: acquire a slot or answer busy. CAS
                 // loop so two racing accepts can't both take the last
                 // slot (single accept thread today, but cheap to keep
@@ -302,6 +339,13 @@ fn accept_loop(listener: TcpListener, ctx: Arc<ConnCtx>, conns: Arc<Mutex<Vec<Jo
                 if !acquired {
                     ctx.counters.note_throttled();
                     let mut stream = stream;
+                    // BSD-derived platforms inherit the listener's
+                    // O_NONBLOCK on accept; clear it so the busy answer
+                    // is a plain bounded write.
+                    let _ = stream.set_nonblocking(false);
+                    let _ = stream.set_write_timeout(Some(Duration::from_millis(
+                        ctx.cfg.write_timeout_ms.max(100),
+                    )));
                     let _ = write_response(
                         &mut stream,
                         &ResponseFrame {
@@ -329,6 +373,7 @@ fn accept_loop(listener: TcpListener, ctx: Arc<ConnCtx>, conns: Arc<Mutex<Vec<Jo
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                reap_finished(&conns);
                 std::thread::sleep(Duration::from_millis(5));
             }
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
@@ -343,6 +388,13 @@ fn accept_loop(listener: TcpListener, ctx: Arc<ConnCtx>, conns: Arc<Mutex<Vec<Jo
 /// One connection's request/response loop. The `_slot` guard releases
 /// the connection-cap slot on every exit path.
 fn run_conn(mut stream: TcpStream, ctx: Arc<ConnCtx>, _slot: ConnSlot) {
+    // The listener is non-blocking and BSD-derived platforms (macOS
+    // included) make accepted sockets inherit O_NONBLOCK; clear it
+    // first or every read returns WouldBlock immediately, turning
+    // read_full_idle into a busy-spin and the read timeout below into
+    // a no-op. (Linux does not inherit the flag, so tests there would
+    // never catch the spin.)
+    let _ = stream.set_nonblocking(false);
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(ctx.cfg.read_timeout_ms.max(10))));
     let _ = stream.set_write_timeout(Some(Duration::from_millis(ctx.cfg.write_timeout_ms.max(100))));
@@ -479,24 +531,35 @@ enum FullRead {
     Complete,
     /// Peer closed before the first byte of this read.
     CleanEof,
-    /// Peer closed mid-buffer.
+    /// Peer closed (or stalled past the deadline) mid-buffer.
     Partial(usize),
     /// Server shutdown flag observed.
     Shutdown,
+    /// Deadline passed with no byte received: the peer is idle, not
+    /// truncating.
+    IdleTimeout,
 }
 
 /// Shutdown-aware frame read: socket read timeouts double as poll
 /// points for the shutdown flag, and partial reads accumulate across
-/// them (a timeout mid-frame loses nothing).
+/// them (a timeout mid-frame loses nothing). Each read (prefix, then
+/// body) gets `idle_timeout_ms` to make progress: an idle peer between
+/// frames is closed quietly and its conn-cap slot released — 64 silent
+/// TCP connections must not pin the cap forever — and a peer that
+/// stalls mid-frame (slow-loris) is bounded by the same deadline,
+/// surfacing as a truncation error.
 fn read_frame_idle(
     stream: &mut TcpStream,
     max: usize,
     ctx: &ConnCtx,
 ) -> Result<Option<Vec<u8>>, WireError> {
+    let idle = Duration::from_millis(ctx.cfg.idle_timeout_ms.max(100));
     let mut prefix = [0u8; PREFIX_LEN];
-    match read_full_idle(stream, &mut prefix, ctx)? {
+    match read_full_idle(stream, &mut prefix, ctx, Instant::now() + idle)? {
         FullRead::Complete => {}
-        FullRead::CleanEof | FullRead::Shutdown => return Ok(None),
+        // Idle past the deadline on a frame boundary: close like a
+        // clean EOF, freeing the connection slot.
+        FullRead::CleanEof | FullRead::Shutdown | FullRead::IdleTimeout => return Ok(None),
         FullRead::Partial(got) => {
             return Err(WireError::Truncated {
                 wanted: PREFIX_LEN,
@@ -506,10 +569,14 @@ fn read_frame_idle(
     }
     let len = frame_len(&prefix, max)?;
     let mut body = vec![0u8; len];
-    match read_full_idle(stream, &mut body, ctx)? {
+    match read_full_idle(stream, &mut body, ctx, Instant::now() + idle)? {
         FullRead::Complete => Ok(Some(body)),
         FullRead::Shutdown => Ok(None),
-        FullRead::CleanEof => Err(WireError::Truncated { wanted: len, got: 0 }),
+        // A prefix with no body inside the deadline is a stall
+        // mid-frame, not idleness: fatal, typed.
+        FullRead::CleanEof | FullRead::IdleTimeout => {
+            Err(WireError::Truncated { wanted: len, got: 0 })
+        }
         FullRead::Partial(got) => Err(WireError::Truncated { wanted: len, got }),
     }
 }
@@ -518,6 +585,7 @@ fn read_full_idle(
     stream: &mut TcpStream,
     buf: &mut [u8],
     ctx: &ConnCtx,
+    deadline: Instant,
 ) -> Result<FullRead, WireError> {
     let mut got = 0;
     loop {
@@ -526,6 +594,13 @@ fn read_full_idle(
         }
         if ctx.shutdown.load(Ordering::Acquire) {
             return Ok(FullRead::Shutdown);
+        }
+        if Instant::now() >= deadline {
+            return Ok(if got == 0 {
+                FullRead::IdleTimeout
+            } else {
+                FullRead::Partial(got)
+            });
         }
         match stream.read(&mut buf[got..]) {
             Ok(0) => {

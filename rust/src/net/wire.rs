@@ -446,9 +446,11 @@ pub fn graph_to_json(g: &Graph) -> Json {
 }
 
 /// Node-count sanity bound on wire graphs. SPA-GCN targets small graphs
-/// (n_max 32 in the shipped artifacts); anything near this bound is
-/// rejected by admission's shape checks anyway — the wire bound exists
-/// so a hostile frame can't make the decoder build a huge graph first.
+/// (n_max 32 in the shipped artifacts); the net front stage separately
+/// validates every decoded graph against the *model's* n_max /
+/// num_labels (`router::validate_graph` in `net/admission.rs`) before
+/// any scoring lane runs. This coarser wire bound exists only so a
+/// hostile frame can't make the decoder build a huge graph first.
 pub const MAX_WIRE_NODES: usize = 4096;
 
 /// Decode and *validate* a graph payload: label arity, u16 ranges and

@@ -342,6 +342,132 @@ fn degraded_mode_falls_back_to_ged_and_shrinks_k() {
 }
 
 #[test]
+fn oversized_wire_graphs_rejected_in_degraded_mode_not_ged_scored() {
+    // Forced-degraded front door: the degraded pair lane runs greedy
+    // GED *on the front-stage thread*. A wire graph past the model's
+    // n_max (the wire codec allows up to MAX_WIRE_NODES=4096) must be
+    // rejected by the front stage's shape gate, never handed to the
+    // O(n^3) fallback — and never earn a fabricated score for a query
+    // the engine path would reject with TooManyNodes.
+    let ncfg = NetConfig {
+        degrade_hi: -1.0,
+        degrade_lo: -1.0,
+        refill_per_s: 1e9,
+        burst: 1e9,
+        deadline_ms: 60_000,
+        ..NetConfig::default()
+    };
+    let cfg = model();
+    let server = start_server(ncfg, vec![]);
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, "oversize").unwrap();
+
+    // 16 nodes against n_max = 8: decodes fine, must be rejected.
+    let big = Graph::new(16, (0..15u16).map(|i| (i, i + 1)).collect(), vec![0u16; 16]);
+    let small = generate(&mut Rng::new(1), Family::Aids, cfg.n_max, cfg.num_labels);
+    match client.pair(big, small.clone()).unwrap().resp {
+        Response::Error { code, detail } => {
+            assert_eq!(code, "rejected", "oversized pair must reject, got {detail}");
+        }
+        other => panic!("oversized pair not rejected: {other:?}"),
+    }
+    // Label arity outside the model is the same gate.
+    let bad_label = Graph::new(2, vec![(0, 1)], vec![cfg.num_labels as u16, 0]);
+    match client.pair(bad_label, small.clone()).unwrap().resp {
+        Response::Error { code, .. } => assert_eq!(code, "rejected"),
+        other => panic!("out-of-range label not rejected: {other:?}"),
+    }
+    // A shape-valid pair still flows through the degraded GED lane.
+    let g2 = generate(&mut Rng::new(2), Family::Aids, cfg.n_max, cfg.num_labels);
+    match client.pair(small, g2).unwrap().resp {
+        Response::Score { degraded, .. } => assert!(degraded),
+        other => panic!("valid degraded pair failed: {other:?}"),
+    }
+    drop(client);
+    server.finish();
+}
+
+#[test]
+fn oversized_topk_graph_rejected_at_front_stage() {
+    let cfg = model();
+    let mut rng = Rng::new(71);
+    let db = GraphDb::synthesize(&mut rng, Family::Aids, 8, cfg.n_max, cfg.num_labels);
+    let corpus = Arc::new(Corpus::from_db("aids-synth", &db, cfg.n_max, cfg.num_labels).unwrap());
+    let server = start_server(generous_net(), vec![corpus]);
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, "oversize-topk").unwrap();
+    let big = Graph::new(cfg.n_max + 1, vec![], vec![0u16; cfg.n_max + 1]);
+    match client.topk("aids-synth", big, 3).unwrap().resp {
+        Response::Error { code, .. } => assert_eq!(code, "rejected"),
+        other => panic!("oversized top-k graph not rejected: {other:?}"),
+    }
+    drop(client);
+    server.finish();
+}
+
+#[test]
+fn idle_connection_is_closed_and_frees_its_slot() {
+    // A connection that never sends a frame must not hold a conn-cap
+    // slot forever: 64 silent TCP connects would otherwise pin the
+    // default cap and every later client would be answered "busy".
+    let ncfg = NetConfig {
+        idle_timeout_ms: 200,
+        conn_cap: 2,
+        ..generous_net()
+    };
+    let cfg = model();
+    let server = start_server(ncfg, vec![]);
+    let addr = server.addr().to_string();
+    let silent = TcpStream::connect(&addr).unwrap();
+    assert!(
+        eventually(Duration::from_secs(5), || server.active_connections() == 1),
+        "silent connection not registered"
+    );
+    // The peer stays connected but idle: the server must close it.
+    assert!(
+        eventually(Duration::from_secs(10), || server.active_connections() == 0),
+        "idle connection still holds its slot: {} active",
+        server.active_connections()
+    );
+    // The front door still serves a real client afterwards.
+    let (g1, g2) = pairs(&cfg, 17, 1).remove(0);
+    let mut client = NetClient::connect(&addr, "after-idle").unwrap();
+    match client.pair(g1, g2).unwrap().resp {
+        Response::Score { .. } => {}
+        other => panic!("service did not survive idle close: {other:?}"),
+    }
+    drop(client);
+    drop(silent);
+    server.finish();
+}
+
+#[test]
+fn finished_connection_handles_are_reaped() {
+    // The accept loop must not accumulate one JoinHandle per connection
+    // ever served: finished threads are joined on accept-loop ticks, so
+    // the tracked list stays proportional to live connections.
+    let cfg = model();
+    let server = start_server(generous_net(), vec![]);
+    let addr = server.addr().to_string();
+    for (i, (g1, g2)) in pairs(&cfg, 23, 5).into_iter().enumerate() {
+        let mut client = NetClient::connect(&addr, &format!("churn-{i}")).unwrap();
+        match client.pair(g1, g2).unwrap().resp {
+            Response::Score { .. } => {}
+            other => panic!("churn connection {i} failed: {other:?}"),
+        }
+    }
+    assert!(
+        eventually(Duration::from_secs(10), || {
+            server.active_connections() == 0 && server.tracked_conn_handles() == 0
+        }),
+        "handles leaked: {} tracked, {} active",
+        server.tracked_conn_handles(),
+        server.active_connections()
+    );
+    server.finish();
+}
+
+#[test]
 fn disconnect_mid_response_leaks_neither_slot_nor_route() {
     // Tiny connection cap: a leaked slot would starve the later
     // connections into "busy" errors.
