@@ -1,0 +1,518 @@
+//! A minimal Rust lexer for the architecture linter (DESIGN.md S18).
+//!
+//! This is NOT a compiler front end: it produces exactly what the rule
+//! engine needs and nothing more — a token stream with comments,
+//! string literals and char literals removed, each token annotated
+//! with its line number, whether it sits in test scope
+//! (`#[cfg(test)]` items, `#[test]` functions, or a `mod tests`
+//! block), and the innermost enclosing `fn` name. Everything the old
+//! CI grep guards could not see (a forbidden token inside a comment
+//! or string, a test-only token inside `#[cfg(test)]`) is handled
+//! here, once, instead of in twenty shell pipelines.
+//!
+//! Known approximations, acceptable for linting (and covered by unit
+//! tests where they matter): const-generic braces in signatures are
+//! not distinguished from block braces, and exotic numeric literal
+//! forms lex as a single opaque token.
+
+/// Token classes the scanner distinguishes. Strings/chars/comments are
+/// consumed but never emitted — rules must not see into them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unwrap`, `SendPolicy`, ...).
+    Ident,
+    /// A numeric literal, kept as one opaque token.
+    Num,
+    /// Lifetime token (`'a`, `'static`) — emitted so char-literal
+    /// handling is honest, ignored by every rule.
+    Lifetime,
+    /// Single punctuation character (`.`, `:`, `(`, `!`, ...).
+    Punct,
+}
+
+/// One surviving token.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Inside `#[cfg(test)]` / `#[test]` / `mod tests` scope.
+    pub in_test: bool,
+    /// Innermost enclosing function name, if any.
+    pub func: Option<u32>,
+}
+
+/// A lexed file: tokens plus the function-name table `Tok::func`
+/// indexes into.
+#[derive(Debug, Clone, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub funcs: Vec<String>,
+}
+
+impl Lexed {
+    /// The function name a token belongs to (for diagnostics).
+    pub fn func_name(&self, t: &Tok) -> Option<&str> {
+        t.func.map(|i| self.funcs[i as usize].as_str())
+    }
+}
+
+/// Strip comments/strings/chars and tokenize. Never fails: unterminated
+/// constructs consume to end-of-input (the linter must not panic on a
+/// half-saved file; rustc will complain about it soon enough).
+pub fn lex(src: &str) -> Lexed {
+    let raw = raw_tokens(src);
+    annotate(raw)
+}
+
+/// Pass 1: raw tokens with line numbers, comments/strings removed.
+fn raw_tokens(src: &str) -> Vec<(TokKind, String, u32)> {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < b.len() && b[i + 1] == '/' => {
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < b.len() && b[i + 1] == '*' => {
+                // Block comments nest in Rust.
+                let mut depth = 1;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            '"' => i = skip_string(&b, i, &mut line),
+            'r' | 'b' if starts_raw_or_byte_string(&b, i) => {
+                // r"..", r#".."#, b"..", br".." , rb is not a thing but
+                // br# is; skip the prefix letters then dispatch.
+                let mut j = i;
+                while j < b.len() && (b[j] == 'r' || b[j] == 'b') {
+                    j += 1;
+                }
+                if j < b.len() && b[j] == '#' || (j < b.len() && b[j] == '"') {
+                    if b[i..j.min(b.len())].contains(&'r') {
+                        i = skip_raw_string(&b, j, &mut line);
+                    } else {
+                        i = skip_string(&b, j, &mut line);
+                    }
+                } else if j < b.len() && b[j] == '\'' {
+                    // b'x' byte literal.
+                    i = skip_char(&b, j, &mut line);
+                } else {
+                    // Plain identifier starting with r/b after all.
+                    i = push_ident(&b, i, line, &mut out);
+                }
+            }
+            '\'' => {
+                // Lifetime or char literal. `'ident` not followed by a
+                // closing quote is a lifetime; anything else is a char.
+                if is_lifetime(&b, i) {
+                    let mut j = i + 1;
+                    let start = j;
+                    while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+                        j += 1;
+                    }
+                    let name: String = b[start..j].iter().collect();
+                    out.push((TokKind::Lifetime, format!("'{name}"), line));
+                    i = j;
+                } else {
+                    i = skip_char(&b, i, &mut line);
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => i = push_ident(&b, i, line, &mut out),
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_alphanumeric()
+                        || b[i] == '_'
+                        || (b[i] == '.' && i + 1 < b.len() && b[i + 1].is_ascii_digit())
+                        || ((b[i] == '+' || b[i] == '-')
+                            && i > start
+                            && (b[i - 1] == 'e' || b[i - 1] == 'E')))
+                {
+                    i += 1;
+                }
+                out.push((TokKind::Num, b[start..i].iter().collect(), line));
+            }
+            c => {
+                out.push((TokKind::Punct, c.to_string(), line));
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+fn starts_raw_or_byte_string(b: &[char], i: usize) -> bool {
+    // r" r#" b" b' br" br#" — a prefix of r/b letters followed by a
+    // quote, hashes-then-quote, or byte-char quote. `r#ident` (a raw
+    // identifier) and plain identifiers starting with r/b (`radius`)
+    // must NOT match.
+    let mut j = i;
+    while j < b.len() && (b[j] == 'r' || b[j] == 'b') && j - i < 2 {
+        j += 1;
+    }
+    if j == i || j >= b.len() {
+        return false;
+    }
+    match b[j] {
+        '"' => true,
+        '\'' => b[i..j].contains(&'b') && !b[i..j].contains(&'r'),
+        '#' => {
+            // Raw string only if the hash run ends at a quote.
+            let mut k = j;
+            while k < b.len() && b[k] == '#' {
+                k += 1;
+            }
+            b[i..j].contains(&'r') && k < b.len() && b[k] == '"'
+        }
+        _ => false,
+    }
+}
+
+fn is_lifetime(b: &[char], i: usize) -> bool {
+    // 'x is a lifetime unless the ident is one char and followed by '.
+    if i + 1 >= b.len() || !(b[i + 1].is_alphabetic() || b[i + 1] == '_') {
+        return false;
+    }
+    let mut j = i + 1;
+    while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+        j += 1;
+    }
+    !(j < b.len() && b[j] == '\'')
+}
+
+fn push_ident(b: &[char], i: usize, line: u32, out: &mut Vec<(TokKind, String, u32)>) -> usize {
+    let start = i;
+    let mut j = i;
+    while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+        j += 1;
+    }
+    out.push((TokKind::Ident, b[start..j].iter().collect(), line));
+    j
+}
+
+fn skip_string(b: &[char], mut i: usize, line: &mut u32) -> usize {
+    debug_assert_eq!(b[i], '"');
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            '"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+fn skip_raw_string(b: &[char], mut i: usize, line: &mut u32) -> usize {
+    // At `#...#"` or `"`; count hashes, then scan for `"` + that many #.
+    let mut hashes = 0;
+    while i < b.len() && b[i] == '#' {
+        hashes += 1;
+        i += 1;
+    }
+    if i < b.len() && b[i] == '"' {
+        i += 1;
+    }
+    while i < b.len() {
+        if b[i] == '\n' {
+            *line += 1;
+            i += 1;
+        } else if b[i] == '"' {
+            let mut j = i + 1;
+            let mut h = 0;
+            while j < b.len() && b[j] == '#' && h < hashes {
+                h += 1;
+                j += 1;
+            }
+            if h == hashes {
+                return j;
+            }
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+fn skip_char(b: &[char], mut i: usize, line: &mut u32) -> usize {
+    debug_assert_eq!(b[i], '\'');
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            '\'' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Append one annotated token (shared by every `annotate` arm; a free
+/// function because the arms also mutate the scope stacks).
+fn emit_tok(
+    toks: &mut Vec<Tok>,
+    test_close: &[usize],
+    fn_stack: &[(u32, usize)],
+    kind: TokKind,
+    text: &str,
+    line: u32,
+) {
+    toks.push(Tok {
+        kind,
+        text: text.to_string(),
+        line,
+        in_test: !test_close.is_empty(),
+        func: fn_stack.last().map(|(f, _)| *f),
+    });
+}
+
+/// Pass 2: brace-depth scope machine. Marks test scope and the
+/// innermost function per token.
+fn annotate(raw: Vec<(TokKind, String, u32)>) -> Lexed {
+    let mut toks = Vec::with_capacity(raw.len());
+    let mut funcs: Vec<String> = Vec::new();
+
+    let mut depth = 0usize;
+    // Brace depths at which a test region closes.
+    let mut test_close: Vec<usize> = Vec::new();
+    // (func table index, body depth).
+    let mut fn_stack: Vec<(u32, usize)> = Vec::new();
+    // A `#[cfg(test)]` / `#[test]` attribute awaits its item's block.
+    let mut pending_test = false;
+    // A `fn NAME` awaits its body block.
+    let mut pending_fn: Option<u32> = None;
+
+    let mut i = 0usize;
+    while i < raw.len() {
+        let (kind, text, line) = (&raw[i].0, raw[i].1.as_str(), raw[i].2);
+        match (kind, text) {
+            (TokKind::Punct, "#")
+                if matches!(raw.get(i + 1), Some((TokKind::Punct, t, _)) if t == "[") =>
+            {
+                // Consume the whole attribute, bracket-balanced, and
+                // look for `cfg ( test` or a bare `test` / `should_panic`.
+                let mut j = i + 2;
+                let mut nest = 1usize;
+                let mut attr: Vec<&str> = Vec::new();
+                while j < raw.len() && nest > 0 {
+                    match (&raw[j].0, raw[j].1.as_str()) {
+                        (TokKind::Punct, "[") => nest += 1,
+                        (TokKind::Punct, "]") => nest -= 1,
+                        (_, t) => attr.push(t),
+                    }
+                    if nest > 0 {
+                        j += 1;
+                    }
+                }
+                let is_cfg_test = attr
+                    .windows(3)
+                    .any(|w| w[0] == "cfg" && w[1] == "(" && w[2] == "test");
+                let is_test_attr =
+                    attr.first().is_some_and(|t| *t == "test" || *t == "should_panic");
+                if is_cfg_test || is_test_attr {
+                    pending_test = true;
+                }
+                // Emit the attribute tokens too (rules may want e.g.
+                // `#[derive(...)]` facts) — annotated with current scope.
+                for k in i..=j.min(raw.len().saturating_sub(1)) {
+                    let (ak, at, al) = (&raw[k].0, raw[k].1.as_str(), raw[k].2);
+                    emit_tok(&mut toks, &test_close, &fn_stack, *ak, at, al);
+                }
+                i = j + 1;
+                continue;
+            }
+            (TokKind::Ident, "fn") => {
+                if let Some((TokKind::Ident, name, _)) = raw.get(i + 1) {
+                    let idx = funcs.len() as u32;
+                    funcs.push(name.clone());
+                    pending_fn = Some(idx);
+                }
+            }
+            (TokKind::Ident, "mod") => {
+                if matches!(raw.get(i + 1), Some((TokKind::Ident, n, _)) if n == "tests") {
+                    pending_test = true;
+                }
+            }
+            (TokKind::Punct, "{") => {
+                emit_tok(&mut toks, &test_close, &fn_stack, TokKind::Punct, "{", line);
+                depth += 1;
+                if pending_test {
+                    test_close.push(depth);
+                    pending_test = false;
+                }
+                if let Some(f) = pending_fn.take() {
+                    fn_stack.push((f, depth));
+                }
+                i += 1;
+                continue;
+            }
+            (TokKind::Punct, "}") => {
+                if test_close.last() == Some(&depth) {
+                    test_close.pop();
+                }
+                if fn_stack.last().map(|(_, d)| *d) == Some(depth) {
+                    fn_stack.pop();
+                }
+                depth = depth.saturating_sub(1);
+                emit_tok(&mut toks, &test_close, &fn_stack, TokKind::Punct, "}", line);
+                i += 1;
+                continue;
+            }
+            (TokKind::Punct, ";") => {
+                // `#[cfg(test)] use ...;` or a bodyless trait fn: the
+                // pending markers never get a block — drop them.
+                if fn_stack.last().map(|(_, d)| *d) != Some(depth) {
+                    pending_fn = None;
+                }
+                pending_test = false;
+            }
+            _ => {}
+        }
+        emit_tok(&mut toks, &test_close, &fn_stack, *kind, text, line);
+        i += 1;
+    }
+    Lexed { toks, funcs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(l: &Lexed) -> Vec<&str> {
+        l.toks.iter().map(|t| t.text.as_str()).collect()
+    }
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let l = lex("a // unwrap()\nb /* panic! /* nested */ still */ c");
+        assert_eq!(texts(&l), vec!["a", "b", "c"]);
+        assert_eq!(l.toks[1].line, 2);
+        assert_eq!(l.toks[2].line, 2);
+    }
+
+    #[test]
+    fn strips_strings_and_chars() {
+        let l = lex(r#"let x = "unwrap()"; let c = '\''; let s = 'a';"#);
+        assert!(!texts(&l).contains(&"unwrap"));
+        // multi-line string keeps line numbers honest
+        let l = lex("let x = \"a\nb\";\ny");
+        assert_eq!(l.toks.last().unwrap().line, 3);
+    }
+
+    #[test]
+    fn raw_strings_and_byte_strings() {
+        let l = lex(r###"let x = r#"panic!("inside")"#; after"###);
+        assert!(!texts(&l).contains(&"panic"));
+        assert!(texts(&l).contains(&"after"));
+        let l = lex(r#"let y = b"unwrap"; z"#);
+        assert!(!texts(&l).contains(&"unwrap"));
+        assert!(texts(&l).contains(&"z"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let l = lex("fn f<'a>(x: &'a str) -> &'static str { x }");
+        assert!(texts(&l).contains(&"'a"));
+        assert!(texts(&l).contains(&"'static"));
+        assert!(texts(&l).contains(&"str"));
+    }
+
+    #[test]
+    fn cfg_test_scope_marks_tokens() {
+        let src = "fn live() { a.unwrap(); }\n\
+                   #[cfg(test)]\nmod checks {\n fn t() { b.unwrap(); } }";
+        let l = lex(src);
+        let hits: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| t.text == "unwrap")
+            .map(|t| t.in_test)
+            .collect();
+        assert_eq!(hits, vec![false, true]);
+    }
+
+    #[test]
+    fn mod_tests_scope_without_attr() {
+        let l = lex("mod tests { fn t() { x.unwrap(); } }\nfn live() { y.unwrap(); }");
+        let hits: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| t.text == "unwrap")
+            .map(|t| t.in_test)
+            .collect();
+        assert_eq!(hits, vec![true, false]);
+    }
+
+    #[test]
+    fn cfg_test_on_single_item_does_not_leak() {
+        let src = "#[cfg(test)]\nuse std::fmt;\nfn live() { x.unwrap(); }";
+        let l = lex(src);
+        let t = l.toks.iter().find(|t| t.text == "unwrap").unwrap();
+        assert!(!t.in_test, "cfg(test) on a use item leaked to the next fn");
+    }
+
+    #[test]
+    fn function_attribution() {
+        let l = lex("fn outer() { inner_call(); fn nested() { deep(); } tail(); }");
+        let f = |name: &str| {
+            let t = l.toks.iter().find(|t| t.text == name).unwrap();
+            l.func_name(t).unwrap().to_string()
+        };
+        assert_eq!(f("inner_call"), "outer");
+        assert_eq!(f("deep"), "nested");
+        assert_eq!(f("tail"), "outer");
+    }
+
+    #[test]
+    fn test_attr_marks_next_fn() {
+        let l = lex("#[test]\nfn check() { x.unwrap(); }\nfn live() { y.unwrap(); }");
+        let hits: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| t.text == "unwrap")
+            .map(|t| t.in_test)
+            .collect();
+        assert_eq!(hits, vec![true, false]);
+    }
+
+    #[test]
+    fn numbers_lex_opaque() {
+        let l = lex("let a = 1_000.5e-3; let b = 0xFFu32; c");
+        assert!(texts(&l).contains(&"c"));
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Num));
+    }
+}

@@ -1,0 +1,58 @@
+//! In-repo architecture linter (`spa-gcn lint`, DESIGN.md S18).
+//!
+//! A lightweight static-analysis pass over the repo's own sources that
+//! enforces the load-bearing invariants the CI grep-guards used to
+//! approximate: the sparse-only scoring path (S13), the split
+//! embed/pair cache API (S14/S15), the single ranking comparator
+//! (S15), the kernel dispatch layer (S16), the std-only net front door
+//! (S17), the module layering DAG, panic-freedom of serving threads,
+//! and lock/channel acquisition ordering. Unlike grep, the lexer sees
+//! through comments, strings and `#[cfg(test)]` scope, so rules bind
+//! to code rather than to bytes.
+//!
+//! Exceptions live in `waivers.txt` next to this module — every entry
+//! carries a justification, stale entries are themselves findings.
+
+pub mod lexer;
+pub mod model;
+pub mod report;
+pub mod rules;
+
+use std::path::Path;
+
+pub use model::{ModelError, RepoModel};
+pub use rules::{active, Finding};
+
+/// The checked-in waiver list; each line is
+/// `rule | path | line fragment | justification`.
+pub const WAIVERS: &str = include_str!("waivers.txt");
+
+/// Result of a lint run over a tree.
+#[derive(Debug, Clone)]
+pub struct LintOutcome {
+    /// Every finding, waived ones marked. Sorted by (path, line, rule).
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl LintOutcome {
+    /// True when no unwaived finding remains.
+    pub fn ok(&self) -> bool {
+        active(&self.findings).next().is_none()
+    }
+}
+
+/// Lint the tree rooted at `root` (the directory holding `Cargo.toml`)
+/// against every rule and the checked-in waivers.
+pub fn run_lint(root: &Path) -> Result<LintOutcome, ModelError> {
+    let model = RepoModel::load(root)?;
+    Ok(lint_model(&model))
+}
+
+/// Lint an already-built model (fixtures, tests).
+pub fn lint_model(model: &RepoModel) -> LintOutcome {
+    LintOutcome {
+        findings: rules::run(model, WAIVERS),
+        files_scanned: model.files.len(),
+    }
+}

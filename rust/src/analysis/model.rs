@@ -1,0 +1,635 @@
+//! The fact table: every Rust source in the repo, lexed and reduced to
+//! the queryable facts the rules consume (DESIGN.md S18).
+//!
+//! `RepoModel::load` walks `rust/src`, `rust/tests`, `benches` and
+//! `examples` from the repo root; `RepoModel::from_sources` builds the
+//! same model from in-memory `(path, text)` pairs so every rule can be
+//! fixture-tested without touching the filesystem.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::lexer::{lex, Lexed, Tok, TokKind};
+
+/// One lexed source file plus its repo coordinates.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Repo-relative path, forward slashes (`rust/src/nn/simgnn.rs`).
+    pub path: String,
+    /// Top-level module under `rust/src` (`nn`, `coordinator`, ...);
+    /// `lib` / `bin` for the crate roots, `tests` / `benches` /
+    /// `examples` for the out-of-tree code.
+    pub module: String,
+    /// Raw source lines (1-based indexing via `line_text`) for waiver
+    /// matching and diagnostics.
+    pub lines: Vec<String>,
+    pub lex: Lexed,
+}
+
+/// A `.method(` call site with its receiver chain.
+#[derive(Debug, Clone)]
+pub struct MethodCall {
+    pub name: String,
+    /// Trailing ident chain of the receiver (`self.state.lock()` →
+    /// `["self", "state"]`); empty when the receiver is an expression
+    /// (`foo().lock()`).
+    pub receiver: Vec<String>,
+    pub line: u32,
+    pub in_test: bool,
+    pub func: Option<String>,
+}
+
+/// A `name!(` macro invocation site.
+#[derive(Debug, Clone)]
+pub struct MacroCall {
+    pub name: String,
+    pub line: u32,
+    pub in_test: bool,
+    pub func: Option<String>,
+}
+
+/// A name reached through a `root::` path — either a direct
+/// `root::name(` / `root::name` token or a brace import
+/// `use ...::root::{name, other}`.
+#[derive(Debug, Clone)]
+pub struct QualifiedName {
+    pub name: String,
+    pub line: u32,
+    pub in_test: bool,
+}
+
+impl SourceFile {
+    fn new(path: String, module: String, src: &str) -> SourceFile {
+        SourceFile {
+            lines: src.lines().map(str::to_string).collect(),
+            lex: lex(src),
+            path,
+            module,
+        }
+    }
+
+    /// Raw text of a 1-based line (for waivers and messages).
+    pub fn line_text(&self, line: u32) -> &str {
+        self.lines
+            .get(line.saturating_sub(1) as usize)
+            .map(String::as_str)
+            .unwrap_or("")
+    }
+
+    fn toks(&self) -> &[Tok] {
+        &self.lex.toks
+    }
+
+    /// Lines where `pat` matches a consecutive token run. Each pattern
+    /// element matches a token's text exactly. Test-scope matches are
+    /// skipped unless `include_tests`.
+    pub fn find_seq(&self, pat: &[&str], include_tests: bool) -> Vec<u32> {
+        let toks = self.toks();
+        let mut hits = Vec::new();
+        if pat.is_empty() || toks.len() < pat.len() {
+            return hits;
+        }
+        for w in toks.windows(pat.len()) {
+            if (include_tests || !w[0].in_test)
+                && w.iter().zip(pat).all(|(t, p)| t.text == *p)
+            {
+                hits.push(w[0].line);
+            }
+        }
+        hits
+    }
+
+    /// Non-test occurrences of a bare identifier.
+    pub fn ident_sites(&self, name: &str, include_tests: bool) -> Vec<u32> {
+        self.toks()
+            .iter()
+            .filter(|t| {
+                t.kind == TokKind::Ident
+                    && t.text == name
+                    && (include_tests || !t.in_test)
+            })
+            .map(|t| t.line)
+            .collect()
+    }
+
+    /// Top-level crate modules this file references (`use crate::X`,
+    /// inline `crate::X::`), with lines. Non-test only: the layering
+    /// contract binds shipped code, not test scaffolding.
+    pub fn crate_imports(&self) -> Vec<(String, u32)> {
+        let toks = self.toks();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + 2 < toks.len() {
+            if !toks[i].in_test
+                && toks[i].kind == TokKind::Ident
+                && toks[i].text == "crate"
+                && toks[i + 1].text == ":"
+                && toks[i + 2].text == ":"
+            {
+                let mut j = i + 3;
+                if j < toks.len() && toks[j].text == "{" {
+                    // `use crate::{a, b::c}` — each group head is an edge.
+                    let mut depth = 1;
+                    let mut head = true;
+                    j += 1;
+                    while j < toks.len() && depth > 0 {
+                        match toks[j].text.as_str() {
+                            "{" => depth += 1,
+                            "}" => depth -= 1,
+                            "," if depth == 1 => head = true,
+                            _ => {
+                                if head && toks[j].kind == TokKind::Ident {
+                                    out.push((toks[j].text.clone(), toks[j].line));
+                                    head = false;
+                                }
+                            }
+                        }
+                        j += 1;
+                    }
+                } else if j < toks.len() && toks[j].kind == TokKind::Ident {
+                    out.push((toks[j].text.clone(), toks[j].line));
+                }
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// `.name(` method-call sites with receiver chains.
+    pub fn method_calls(&self) -> Vec<MethodCall> {
+        let toks = self.toks();
+        let mut out = Vec::new();
+        for i in 2..toks.len().saturating_sub(1) {
+            if toks[i].kind == TokKind::Ident
+                && toks[i - 1].text == "."
+                && toks[i + 1].text == "("
+            {
+                // Walk back over `ident . ident . ... .` to the chain head.
+                let mut receiver = Vec::new();
+                let mut j = i - 1; // at the `.`
+                while j >= 1 && toks[j].text == "." && toks[j - 1].kind == TokKind::Ident {
+                    receiver.push(toks[j - 1].text.clone());
+                    if j < 2 {
+                        break;
+                    }
+                    j -= 2;
+                }
+                receiver.reverse();
+                out.push(MethodCall {
+                    name: toks[i].text.clone(),
+                    receiver,
+                    line: toks[i].line,
+                    in_test: toks[i].in_test,
+                    func: self.lex.func_name(&toks[i]).map(str::to_string),
+                });
+            }
+        }
+        out
+    }
+
+    /// `name!(`-style macro invocation sites.
+    pub fn macro_calls(&self) -> Vec<MacroCall> {
+        let toks = self.toks();
+        let mut out = Vec::new();
+        for i in 0..toks.len().saturating_sub(2) {
+            if toks[i].kind == TokKind::Ident
+                && toks[i + 1].text == "!"
+                && matches!(toks[i + 2].text.as_str(), "(" | "[" | "{")
+            {
+                out.push(MacroCall {
+                    name: toks[i].text.clone(),
+                    line: toks[i].line,
+                    in_test: toks[i].in_test,
+                    func: self.lex.func_name(&toks[i]).map(str::to_string),
+                });
+            }
+        }
+        out
+    }
+
+    /// Names reached through `root::...`: direct paths
+    /// (`root::name`) and brace imports (`use ...::root::{a, b}`).
+    pub fn qualified_names(&self, root: &str) -> Vec<QualifiedName> {
+        let toks = self.toks();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + 3 < toks.len() {
+            if toks[i].kind == TokKind::Ident
+                && toks[i].text == root
+                && toks[i + 1].text == ":"
+                && toks[i + 2].text == ":"
+            {
+                let j = i + 3;
+                if toks[j].text == "{" {
+                    let mut k = j + 1;
+                    let mut depth = 1;
+                    while k < toks.len() && depth > 0 {
+                        match toks[k].text.as_str() {
+                            "{" => depth += 1,
+                            "}" => depth -= 1,
+                            _ => {
+                                if toks[k].kind == TokKind::Ident {
+                                    out.push(QualifiedName {
+                                        name: toks[k].text.clone(),
+                                        line: toks[k].line,
+                                        in_test: toks[k].in_test,
+                                    });
+                                }
+                            }
+                        }
+                        k += 1;
+                    }
+                } else if toks[j].kind == TokKind::Ident {
+                    out.push(QualifiedName {
+                        name: toks[j].text.clone(),
+                        line: toks[j].line,
+                        in_test: toks[j].in_test,
+                    });
+                }
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Local names bound to a `HashMap` (`let mut x: HashMap<..> = ..`,
+    /// `x: HashMap<..>` params/fields) — the determinism rule forbids
+    /// iterating these where ordering feeds scores.
+    pub fn hashmap_bindings(&self) -> Vec<String> {
+        let toks = self.toks();
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            if toks[i].kind != TokKind::Ident || toks[i].text != "HashMap" {
+                continue;
+            }
+            // Walk back over path qualifiers (`std :: collections ::`)
+            // to the `:` of a `name: HashMap<..>` binding.
+            let mut j = i;
+            while j >= 2
+                && toks[j - 1].text == ":"
+                && toks[j - 2].text == ":"
+                && j >= 3
+                && toks[j - 3].kind == TokKind::Ident
+            {
+                j -= 3;
+            }
+            if j >= 2 && toks[j - 1].text == ":" && toks[j - 2].kind == TokKind::Ident {
+                // Exclude `::` (already unwound) — lone `:` = binding.
+                if !(j >= 3 && toks[j - 3].text == ":") {
+                    out.push(toks[j - 2].text.clone());
+                }
+            }
+        }
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    /// Iteration sites over any of `names`: `for _ in name` /
+    /// `name.iter()` / `.values()` / `.keys()` / `.drain()` /
+    /// `.into_values()` / `.into_keys()` / `.into_iter()`.
+    pub fn iteration_sites(&self, names: &[String]) -> Vec<(String, u32, bool)> {
+        const ITER_METHODS: &[&str] = &[
+            "iter",
+            "iter_mut",
+            "into_iter",
+            "values",
+            "values_mut",
+            "into_values",
+            "keys",
+            "into_keys",
+            "drain",
+            "retain",
+        ];
+        let mut out: Vec<(String, u32, bool)> = self
+            .method_calls()
+            .into_iter()
+            .filter(|m| {
+                ITER_METHODS.contains(&m.name.as_str())
+                    && m.receiver.last().is_some_and(|r| names.contains(r))
+            })
+            .map(|m| (m.receiver.join("."), m.line, m.in_test))
+            .collect();
+        let toks = self.toks();
+        for i in 0..toks.len().saturating_sub(1) {
+            if toks[i].text == "in" && toks[i].kind == TokKind::Ident {
+                // `for x in name` (allowing & / &mut).
+                let mut j = i + 1;
+                while j < toks.len() && (toks[j].text == "&" || toks[j].text == "mut") {
+                    j += 1;
+                }
+                if j < toks.len()
+                    && toks[j].kind == TokKind::Ident
+                    && names.contains(&toks[j].text)
+                    // Direct iteration only: `in name.method()` is
+                    // already covered (or deliberate keyed access).
+                    && toks.get(j + 1).map(|t| t.text != ".").unwrap_or(true)
+                {
+                    out.push((toks[j].text.clone(), toks[j].line, toks[j].in_test));
+                }
+            }
+        }
+        out
+    }
+
+    /// `recv[_timeout]` / `lock` / Condvar-`wait` / blocking-`send`
+    /// sites, in source order per function — the raw material for the
+    /// lock/channel-order rule.
+    pub fn blocking_sites(&self) -> Vec<MethodCall> {
+        const BLOCKING: &[&str] = &["lock", "wait", "wait_timeout", "send", "recv", "recv_timeout"];
+        self.method_calls()
+            .into_iter()
+            .filter(|m| BLOCKING.contains(&m.name.as_str()))
+            .collect()
+    }
+
+    /// `recv`-style indexing sites `ident[...]` (panic-capable facts;
+    /// surfaced in `--json`, not a hard rule — see DESIGN.md S18).
+    pub fn index_sites(&self) -> Vec<(String, u32, bool)> {
+        let toks = self.toks();
+        let mut out = Vec::new();
+        for i in 0..toks.len().saturating_sub(1) {
+            if toks[i].kind == TokKind::Ident
+                && toks[i + 1].text == "["
+                // `#[attr]` and `<[T; N]>` never have an ident right
+                // before `[`, but `matches!(x, Some[..])` patterns do
+                // not exist — ident+`[` is an index or a slice pattern.
+                && !toks[i].in_test
+            {
+                out.push((toks[i].text.clone(), toks[i].line, toks[i].in_test));
+            }
+        }
+        out
+    }
+}
+
+/// The whole-repo fact table.
+#[derive(Debug, Clone, Default)]
+pub struct RepoModel {
+    pub files: Vec<SourceFile>,
+    /// Raw `Cargo.toml` lines (comments stripped) for the dependency
+    /// and feature rules.
+    pub cargo_toml: Vec<String>,
+    /// True when loaded from a real tree (`load`): presence anchors
+    /// (required files/tokens) apply. False for in-memory fixture
+    /// models, which only carry the files under test.
+    pub complete: bool,
+}
+
+/// Failure to build the model (unreadable tree). Rule violations are
+/// never errors — they are findings.
+#[derive(Debug)]
+pub struct ModelError {
+    pub detail: String,
+}
+
+impl fmt::Display for ModelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "analysis model: {}", self.detail)
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+impl RepoModel {
+    /// Walk the repo from `root` (the directory holding `Cargo.toml`).
+    pub fn load(root: &Path) -> Result<RepoModel, ModelError> {
+        let mut files = Vec::new();
+        for tree in ["rust/src", "rust/tests", "benches", "examples"] {
+            let dir = root.join(tree);
+            if dir.is_dir() {
+                walk(&dir, root, &mut files).map_err(|e| ModelError {
+                    detail: format!("walking {}: {e}", dir.display()),
+                })?;
+            }
+        }
+        if files.is_empty() {
+            return Err(ModelError {
+                detail: format!("no Rust sources under {} — wrong --root?", root.display()),
+            });
+        }
+        // Deterministic order whatever the filesystem returns.
+        files.sort();
+        let sources: Vec<(String, String)> = files
+            .into_iter()
+            .map(|p| {
+                let text = fs::read_to_string(root.join(&p)).map_err(|e| ModelError {
+                    detail: format!("reading {p}: {e}"),
+                })?;
+                Ok((p, text))
+            })
+            .collect::<Result<_, ModelError>>()?;
+        let cargo = fs::read_to_string(root.join("Cargo.toml")).unwrap_or_default();
+        let mut model = Self::from_parts(sources, &cargo);
+        model.complete = true;
+        Ok(model)
+    }
+
+    /// Build from in-memory sources (rule fixtures). Paths use the same
+    /// repo-relative shape as `load` produces.
+    pub fn from_sources(sources: Vec<(&str, &str)>) -> RepoModel {
+        Self::from_parts(
+            sources
+                .into_iter()
+                .map(|(p, s)| (p.to_string(), s.to_string()))
+                .collect(),
+            "",
+        )
+    }
+
+    /// As `from_sources`, with a Cargo.toml body.
+    pub fn from_sources_with_cargo(sources: Vec<(&str, &str)>, cargo: &str) -> RepoModel {
+        Self::from_parts(
+            sources
+                .into_iter()
+                .map(|(p, s)| (p.to_string(), s.to_string()))
+                .collect(),
+            cargo,
+        )
+    }
+
+    fn from_parts(sources: Vec<(String, String)>, cargo: &str) -> RepoModel {
+        let files = sources
+            .into_iter()
+            .map(|(path, text)| {
+                let module = module_of(&path);
+                SourceFile::new(path, module, &text)
+            })
+            .collect();
+        let cargo_toml = cargo
+            .lines()
+            .map(|l| l.split('#').next().unwrap_or("").to_string())
+            .collect();
+        RepoModel { files, cargo_toml, complete: false }
+    }
+
+    /// The file at a repo-relative path.
+    pub fn file(&self, path: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+
+    /// Files under a repo-relative prefix.
+    pub fn under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a SourceFile> {
+        self.files.iter().filter(move |f| f.path.starts_with(prefix))
+    }
+
+    /// Non-comment Cargo.toml text contains `needle`.
+    pub fn cargo_contains(&self, needle: &str) -> bool {
+        self.cargo_toml.iter().any(|l| l.contains(needle))
+    }
+}
+
+/// Top-level module classification from a repo-relative path.
+fn module_of(path: &str) -> String {
+    if let Some(rest) = path.strip_prefix("rust/src/") {
+        match rest {
+            "lib.rs" => "lib".into(),
+            "main.rs" => "bin".into(),
+            _ => rest.split('/').next().unwrap_or(rest).trim_end_matches(".rs").into(),
+        }
+    } else if path.starts_with("rust/tests/") {
+        "tests".into()
+    } else if path.starts_with("benches/") {
+        "benches".into()
+    } else if path.starts_with("examples/") {
+        "examples".into()
+    } else {
+        "external".into()
+    }
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            walk(&p, root, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(path: &str, src: &str) -> RepoModel {
+        RepoModel::from_sources(vec![(path, src)])
+    }
+
+    #[test]
+    fn module_classification() {
+        assert_eq!(module_of("rust/src/nn/simgnn.rs"), "nn");
+        assert_eq!(module_of("rust/src/lib.rs"), "lib");
+        assert_eq!(module_of("rust/src/main.rs"), "bin");
+        assert_eq!(module_of("rust/tests/golden.rs"), "tests");
+        assert_eq!(module_of("benches/kernels.rs"), "benches");
+    }
+
+    #[test]
+    fn crate_imports_direct_and_inline_and_braced() {
+        let m = one(
+            "rust/src/net/x.rs",
+            "use crate::coordinator::metrics::Metrics;\n\
+             use crate::{graph, nn::config::ModelConfig};\n\
+             fn f() { let r = crate::util::rng::Rng::new(1); }\n\
+             #[cfg(test)] mod tests { use crate::report::Table; }",
+        );
+        let f = m.file("rust/src/net/x.rs").unwrap();
+        let mods: Vec<String> = f.crate_imports().into_iter().map(|(m, _)| m).collect();
+        assert!(mods.contains(&"coordinator".into()));
+        assert!(mods.contains(&"graph".into()));
+        assert!(mods.contains(&"nn".into()));
+        assert!(mods.contains(&"util".into()));
+        // test-scope import is invisible to the layering rule
+        assert!(!mods.contains(&"report".into()));
+    }
+
+    #[test]
+    fn method_receiver_chains() {
+        let m = one(
+            "rust/src/a/b.rs",
+            "fn f() { self.state.lock(); ctx.buckets.admit(x); make().lock(); }",
+        );
+        let calls = m.file("rust/src/a/b.rs").unwrap().method_calls();
+        let lock = calls.iter().find(|c| c.name == "lock").unwrap();
+        assert_eq!(lock.receiver, vec!["self", "state"]);
+        let admit = calls.iter().find(|c| c.name == "admit").unwrap();
+        assert_eq!(admit.receiver, vec!["ctx", "buckets"]);
+        let expr = calls.iter().filter(|c| c.name == "lock").nth(1).unwrap();
+        assert!(expr.receiver.is_empty());
+        assert_eq!(lock.func.as_deref(), Some("f"));
+    }
+
+    #[test]
+    fn qualified_names_paths_and_braces() {
+        let m = one(
+            "rust/src/nn/x.rs",
+            "use super::linalg::{csr_spmm, onehot_gather};\n\
+             fn f() { kernels::ntn_bilinear(a, b); }",
+        );
+        let f = m.file("rust/src/nn/x.rs").unwrap();
+        let lin: Vec<String> = f
+            .qualified_names("linalg")
+            .into_iter()
+            .map(|q| q.name)
+            .collect();
+        assert_eq!(lin, vec!["csr_spmm", "onehot_gather"]);
+        let ker: Vec<String> = f
+            .qualified_names("kernels")
+            .into_iter()
+            .map(|q| q.name)
+            .collect();
+        assert_eq!(ker, vec!["ntn_bilinear"]);
+    }
+
+    #[test]
+    fn hashmap_bindings_and_iteration() {
+        let m = one(
+            "rust/src/a/b.rs",
+            "fn f(open: HashMap<u64, E>) {\n\
+               let mut tab: std::collections::HashMap<u64, E> = Default::default();\n\
+               for e in open.into_values() { use_it(e); }\n\
+               for k in keys_vec { other(k); }\n\
+               tab.insert(1, e);\n\
+             }",
+        );
+        let f = m.file("rust/src/a/b.rs").unwrap();
+        let names = f.hashmap_bindings();
+        assert!(names.contains(&"open".to_string()), "{names:?}");
+        assert!(names.contains(&"tab".to_string()), "{names:?}");
+        let iters = f.iteration_sites(&names);
+        assert_eq!(iters.len(), 1, "{iters:?}");
+        assert_eq!(iters[0].0, "open");
+    }
+
+    #[test]
+    fn find_seq_skips_comments_strings_tests() {
+        let m = one(
+            "rust/src/a/b.rs",
+            "// SendPolicy::DropNewest in a comment\n\
+             let s = \"SendPolicy::DropNewest\";\n\
+             #[cfg(test)] mod tests { fn t() { SendPolicy::DropNewest; } }",
+        );
+        let f = m.file("rust/src/a/b.rs").unwrap();
+        assert!(f
+            .find_seq(&["SendPolicy", ":", ":", "DropNewest"], false)
+            .is_empty());
+        assert_eq!(
+            f.find_seq(&["SendPolicy", ":", ":", "DropNewest"], true)
+                .len(),
+            1
+        );
+    }
+}

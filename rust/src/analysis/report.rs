@@ -1,0 +1,148 @@
+//! Render lint findings through the repo's report harness
+//! (`report::Table`) and to machine-readable JSON for the CI artifact.
+
+use crate::report::Table;
+use crate::util::json::{arr, obj, s, Json};
+
+use super::rules::{active, Finding, RULES};
+use super::LintOutcome;
+
+/// Findings as an aligned table: one row per finding, waived rows
+/// tagged so the full picture stays visible next to the verdict.
+pub fn findings_table(outcome: &LintOutcome) -> Table {
+    let mut t = Table::new("spa-gcn lint", &["location", "rule", "status", "detail"]);
+    for f in &outcome.findings {
+        let loc = if f.line > 0 {
+            format!("{}:{}", f.path, f.line)
+        } else {
+            f.path.clone()
+        };
+        let status = if f.waived.is_some() { "waived" } else { "FAIL" };
+        t.row(vec![loc, f.rule.to_string(), status.into(), f.message.clone()]);
+    }
+    let failing = active(&outcome.findings).count();
+    let waived = outcome.findings.len() - failing;
+    t.note(&format!(
+        "{} files scanned, {} rules, {failing} failing, {waived} waived",
+        outcome.files_scanned,
+        RULES.len(),
+    ));
+    t
+}
+
+/// Human-readable lint report: table when anything is failing, a
+/// one-line all-clear (with the waived count) otherwise — a tree that
+/// is clean *because of* waivers says so rather than dumping the table.
+pub fn render_text(outcome: &LintOutcome) -> String {
+    if active(&outcome.findings).next().is_some() {
+        findings_table(outcome).render()
+    } else {
+        let waived = outcome.findings.len();
+        let tail = if waived > 0 {
+            format!(", {waived} waived")
+        } else {
+            String::new()
+        };
+        format!(
+            "spa-gcn lint: clean ({} files, {} rules{tail})\n",
+            outcome.files_scanned,
+            RULES.len()
+        )
+    }
+}
+
+fn finding_json(f: &Finding) -> Json {
+    let mut fields = vec![
+        ("rule", s(f.rule)),
+        ("path", s(&f.path)),
+        ("line", Json::Num(f.line as f64)),
+        ("message", s(&f.message)),
+    ];
+    match &f.waived {
+        Some(j) => fields.push(("waived", s(j))),
+        None => fields.push(("waived", Json::Null)),
+    }
+    obj(fields)
+}
+
+/// Full machine-readable dump: verdict, rule catalog, every finding
+/// (waived included). Uploaded as the CI lint artifact.
+pub fn to_json(outcome: &LintOutcome) -> Json {
+    let failing = active(&outcome.findings).count();
+    obj(vec![
+        ("schema", s("spa-gcn-lint-v1")),
+        ("ok", Json::Bool(failing == 0)),
+        ("files_scanned", Json::Num(outcome.files_scanned as f64)),
+        ("failing", Json::Num(failing as f64)),
+        (
+            "waived",
+            Json::Num((outcome.findings.len() - failing) as f64),
+        ),
+        (
+            "rules",
+            arr(RULES
+                .iter()
+                .map(|(id, contract)| obj(vec![("id", s(id)), ("contract", s(contract))]))
+                .collect()),
+        ),
+        (
+            "findings",
+            arr(outcome.findings.iter().map(finding_json).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome_with(findings: Vec<Finding>) -> LintOutcome {
+        LintOutcome { findings, files_scanned: 3 }
+    }
+
+    fn one_finding(waived: Option<&str>) -> Finding {
+        Finding {
+            rule: "PANIC-FREE",
+            path: "rust/src/net/server.rs".into(),
+            line: 7,
+            message: "unwrap in serving code (fn serve)".into(),
+            waived: waived.map(str::to_string),
+        }
+    }
+
+    #[test]
+    fn clean_tree_renders_one_line() {
+        let text = render_text(&outcome_with(Vec::new()));
+        assert!(text.starts_with("spa-gcn lint: clean"), "{text}");
+    }
+
+    #[test]
+    fn waived_only_tree_renders_one_line_with_count() {
+        let text = render_text(&outcome_with(vec![one_finding(Some("poisoned-lock recovery"))]));
+        assert!(text.starts_with("spa-gcn lint: clean"), "{text}");
+        assert!(text.contains("1 waived"), "{text}");
+    }
+
+    #[test]
+    fn findings_render_with_status() {
+        let text = render_text(&outcome_with(vec![
+            one_finding(None),
+            one_finding(Some("poisoned-lock recovery")),
+        ]));
+        assert!(text.contains("rust/src/net/server.rs:7"), "{text}");
+        assert!(text.contains("FAIL"), "{text}");
+        assert!(text.contains("waived"), "{text}");
+        assert!(text.contains("1 failing, 1 waived"), "{text}");
+    }
+
+    #[test]
+    fn json_carries_verdict_and_catalog() {
+        let j = to_json(&outcome_with(vec![one_finding(None)])).to_string();
+        assert!(j.contains("\"schema\":\"spa-gcn-lint-v1\""), "{j}");
+        assert!(j.contains("\"ok\":false"), "{j}");
+        assert!(j.contains("PANIC-FREE"), "{j}");
+        assert!(j.contains("\"contract\""), "{j}");
+        let clean = to_json(&outcome_with(Vec::new())).to_string();
+        assert!(clean.contains("\"ok\":true"), "{clean}");
+    }
+}

@@ -1,0 +1,1063 @@
+//! The typed rule engine: every invariant the repo enforces, as a
+//! function over the [`RepoModel`] fact table, with `file:line`
+//! diagnostics and a checked-in waiver list.
+//!
+//! Rule ids are stable (DESIGN.md S18 maps each id to its contract and
+//! origin PR). A finding is *waived* — reported but not failing — when
+//! `waivers.txt` carries a matching `(rule, path, fragment)` entry with
+//! a justification; stale or malformed waivers are themselves findings.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::model::{RepoModel, SourceFile};
+
+/// Stable rule ids and their one-line contracts, in report order.
+pub const RULES: &[(&str, &str)] = &[
+    ("ENGINE-API-BUILD", "no string engine dispatch: build_engine() must not exist"),
+    ("ENGINE-API-TIMING", "no last_timing side-channel: engines report telemetry via typed QueryTiming"),
+    ("SPARSE-DENSE-SINGLE", "exactly one dense A'@X aggregation site (the SparsePolicy::Dense branch in nn/simgnn.rs)"),
+    ("SPARSE-DENSE-CONFINED", "dense aggregation never reaches runtime/, coordinator/ or sim/"),
+    ("SPARSE-DEFAULT-CSR", "the native engine defaults to SparsePolicy::Csr"),
+    ("CACHE-SPLIT-API", "cached scoring paths use embed_graph/pair_score, never the fused simgnn_forward"),
+    ("CACHE-CONSTRUCT", "both cache-bearing engines default-construct an Arc'd EmbedCache and expose with_cache"),
+    ("DET-RANK-SITE", "pipeline.rs grows no ranking implementation: no sort/BinaryHeap/total_cmp; gather merges via rank_sharded"),
+    ("DET-TIEBREAK", "exactly one ranking comparator (total_cmp) exists, in corpus.rs"),
+    ("DET-HASH-ITER", "no HashMap iteration order feeds scores or ranking in corpus.rs/pipeline.rs"),
+    ("ARCH-DAG", "module imports follow util -> graph -> {ged,nn} -> {sim,runtime} -> report -> coordinator -> net"),
+    ("ARCH-KERNEL-CALLER", "only nn/simgnn.rs calls the kernels::* dispatchers"),
+    ("ARCH-LINALG-CONFINED", "only nn/kernels.rs calls the guarded linalg reference kernels"),
+    ("ARCH-KERNEL-PRESENT", "nn/simgnn.rs scores through the kernels:: dispatch layer"),
+    ("KERNEL-DEFAULT-SIMD", "the simd feature stays default-on so serving builds ship the lanes path"),
+    ("NET-STD-ONLY", "no async runtime / HTTP stack / serde in Cargo.toml or rust/src/net"),
+    ("NET-STD-PINNED", "net/server.rs serves over the pinned std::net listener types"),
+    ("NET-SINGLE-SUBMITTER", "the listener submits only through the admission submit_handle"),
+    ("NET-QUERY-CONFINED", "only net/admission.rs constructs Query values"),
+    ("NET-DROP-NEWEST", "the admission queue keeps SendPolicy::DropNewest"),
+    ("PANIC-FREE", "serving threads (net/, coordinator pipeline/channel/batcher/router) carry no panic-capable tokens"),
+    ("LOCK-ORDER", "the per-function lock/channel acquisition graph has no cross-module cycle"),
+    ("WAIVER-MALFORMED", "every waiver entry parses and carries a justification"),
+    ("WAIVER-STALE", "every waiver entry suppresses at least one live finding"),
+];
+
+/// One diagnostic. `line == 0` means a file- or repo-level finding
+/// (a required token is absent).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: u32,
+    pub message: String,
+    /// Justification from the matching waiver, when one applies.
+    pub waived: Option<String>,
+}
+
+impl Finding {
+    fn new(rule: &'static str, path: &str, line: u32, message: String) -> Finding {
+        Finding { rule, path: path.to_string(), line, message, waived: None }
+    }
+
+    /// `rust/src/x.rs:12 [RULE] message` (line elided when 0).
+    pub fn render(&self) -> String {
+        let loc = if self.line > 0 {
+            format!("{}:{}", self.path, self.line)
+        } else {
+            self.path.clone()
+        };
+        let tag = match &self.waived {
+            Some(j) => format!(" (waived: {j})"),
+            None => String::new(),
+        };
+        format!("{loc} [{}] {}{tag}", self.rule, self.message)
+    }
+}
+
+/// One `waivers.txt` entry: `rule | path | line fragment | justification`.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub rule: String,
+    pub path: String,
+    pub fragment: String,
+    pub justification: String,
+    /// 1-based line in waivers.txt, for stale-waiver diagnostics.
+    pub line: u32,
+}
+
+const WAIVERS_PATH: &str = "rust/src/analysis/waivers.txt";
+
+/// Parse the waiver list; malformed lines become findings.
+pub fn parse_waivers(text: &str) -> (Vec<Waiver>, Vec<Finding>) {
+    let mut waivers = Vec::new();
+    let mut findings = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = (i + 1) as u32;
+        let l = raw.trim();
+        if l.is_empty() || l.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = l.splitn(4, '|').map(str::trim).collect();
+        if parts.len() != 4 || parts.iter().any(|p| p.is_empty()) {
+            findings.push(Finding::new(
+                "WAIVER-MALFORMED",
+                WAIVERS_PATH,
+                line,
+                format!("need `rule | path | fragment | justification`, got {l:?}"),
+            ));
+            continue;
+        }
+        waivers.push(Waiver {
+            rule: parts[0].to_string(),
+            path: parts[1].to_string(),
+            fragment: parts[2].to_string(),
+            justification: parts[3].to_string(),
+            line,
+        });
+    }
+    (waivers, findings)
+}
+
+/// Run every rule over the model, apply waivers, report stale ones.
+/// Waived findings stay in the output (marked) so `--json` shows the
+/// full picture; only unwaived findings fail the lint.
+pub fn run(model: &RepoModel, waivers_text: &str) -> Vec<Finding> {
+    let (waivers, mut findings) = parse_waivers(waivers_text);
+    let mut raw = Vec::new();
+    if model.complete {
+        // Files that rules anchor invariants to: deleting one must not
+        // silently retire its contract.
+        for path in [
+            "rust/src/nn/simgnn.rs",
+            "rust/src/nn/kernels.rs",
+            "rust/src/coordinator/pipeline.rs",
+            "rust/src/coordinator/corpus.rs",
+        ] {
+            if model.file(path).is_none() {
+                raw.push(Finding::new(
+                    "ARCH-KERNEL-PRESENT",
+                    path,
+                    0,
+                    "rule anchor file missing from the tree".into(),
+                ));
+            }
+        }
+    }
+    engine_api(model, &mut raw);
+    sparse_path(model, &mut raw);
+    cache_api(model, &mut raw);
+    determinism(model, &mut raw);
+    layering(model, &mut raw);
+    kernel_dispatch(model, &mut raw);
+    net_front_door(model, &mut raw);
+    panic_free(model, &mut raw);
+    lock_order(model, &mut raw);
+
+    let mut used = vec![false; waivers.len()];
+    for f in &mut raw {
+        let text = model.file(&f.path).map(|s| s.line_text(f.line)).unwrap_or("");
+        for (i, w) in waivers.iter().enumerate() {
+            if w.rule == f.rule && w.path == f.path && text.contains(w.fragment.as_str()) {
+                f.waived = Some(w.justification.clone());
+                used[i] = true;
+                break;
+            }
+        }
+    }
+    for (w, used) in waivers.iter().zip(&used) {
+        if !used {
+            findings.push(Finding::new(
+                "WAIVER-STALE",
+                WAIVERS_PATH,
+                w.line,
+                format!(
+                    "waiver for {} at {} ({:?}) matches no finding — delete it",
+                    w.rule, w.path, w.fragment
+                ),
+            ));
+        }
+    }
+    findings.extend(raw);
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    findings
+}
+
+/// The findings that actually fail the lint.
+pub fn active(findings: &[Finding]) -> impl Iterator<Item = &Finding> {
+    findings.iter().filter(|f| f.waived.is_none())
+}
+
+// ---------------------------------------------------------------- rules
+
+/// ENGINE-API-BUILD / ENGINE-API-TIMING (ported grep: "engine API v2
+/// guards"): the typed EngineBuilder/EngineKind API replaced string
+/// dispatch and the last_timing side-channel (DESIGN.md S6).
+fn engine_api(m: &RepoModel, out: &mut Vec<Finding>) {
+    for f in &m.files {
+        for line in f.find_seq(&["build_engine", "("], true) {
+            out.push(Finding::new(
+                "ENGINE-API-BUILD",
+                &f.path,
+                line,
+                "string engine dispatch reintroduced".into(),
+            ));
+        }
+        for line in f.ident_sites("last_timing", true) {
+            out.push(Finding::new(
+                "ENGINE-API-TIMING",
+                &f.path,
+                line,
+                "last_timing side-channel reintroduced".into(),
+            ));
+        }
+    }
+}
+
+const DENSE_AGG: &[&str] = &["matmul", "(", "&", "g", ".", "a_norm"];
+
+/// SPARSE-DENSE-SINGLE / SPARSE-DENSE-CONFINED / SPARSE-DEFAULT-CSR
+/// (ported grep: "sparse scoring-path guards", DESIGN.md S13).
+fn sparse_path(m: &RepoModel, out: &mut Vec<Finding>) {
+    if let Some(f) = m.file("rust/src/nn/simgnn.rs") {
+        let hits = f.find_seq(DENSE_AGG, true);
+        if hits.len() != 1 {
+            out.push(Finding::new(
+                "SPARSE-DENSE-SINGLE",
+                &f.path,
+                hits.get(1).copied().unwrap_or(0),
+                format!(
+                    "want exactly one dense aggregation matmul (the SparsePolicy::Dense branch), found {}",
+                    hits.len()
+                ),
+            ));
+        }
+    }
+    for f in m.files.iter().filter(|f| {
+        ["rust/src/runtime/", "rust/src/coordinator/", "rust/src/sim/"]
+            .iter()
+            .any(|p| f.path.starts_with(p))
+    }) {
+        for line in f.find_seq(DENSE_AGG, true) {
+            out.push(Finding::new(
+                "SPARSE-DENSE-CONFINED",
+                &f.path,
+                line,
+                "dense aggregation leaked into the serving path".into(),
+            ));
+        }
+    }
+    require_seq(
+        m,
+        "rust/src/runtime/native.rs",
+        &["policy", ":", "SparsePolicy", ":", ":", "Csr"],
+        "SPARSE-DEFAULT-CSR",
+        "native engine no longer defaults to the sparse policy",
+        out,
+    );
+}
+
+/// CACHE-SPLIT-API / CACHE-CONSTRUCT (ported grep: "embed cache
+/// guards", DESIGN.md S14/S15).
+fn cache_api(m: &RepoModel, out: &mut Vec<Finding>) {
+    for f in m.files.iter().filter(|f| {
+        f.path.starts_with("rust/src/runtime/")
+            || f.path.starts_with("rust/src/coordinator/")
+            || f.path == "rust/src/sim/engine.rs"
+    }) {
+        for line in f.ident_sites("simgnn_forward", true) {
+            out.push(Finding::new(
+                "CACHE-SPLIT-API",
+                &f.path,
+                line,
+                "full pairwise forward reached the cached scoring path".into(),
+            ));
+        }
+    }
+    for path in ["rust/src/runtime/native.rs", "rust/src/sim/engine.rs"] {
+        require_seq(
+            m,
+            path,
+            &["cache", ":", "Arc", ":", ":", "new", "(", "EmbedCache", ":", ":", "new"],
+            "CACHE-CONSTRUCT",
+            "engine stopped default-constructing a shared EmbedCache",
+            out,
+        );
+        require_seq(
+            m,
+            path,
+            &["pub", "fn", "with_cache"],
+            "CACHE-CONSTRUCT",
+            "cache injection point (with_cache) disappeared",
+            out,
+        );
+    }
+}
+
+/// DET-RANK-SITE / DET-TIEBREAK / DET-HASH-ITER (ported grep: "shard
+/// merge guards", DESIGN.md S15, plus the beyond-grep HashMap-order
+/// rule). Ordering must flow through the single `Corpus::rank`
+/// comparator; iteration over a HashMap anywhere near scores risks
+/// nondeterministic ranking.
+fn determinism(m: &RepoModel, out: &mut Vec<Finding>) {
+    if let Some(f) = m.file("rust/src/coordinator/pipeline.rs") {
+        for t in f.lex.toks.iter() {
+            let banned = t.text == "sort"
+                || t.text.starts_with("sort_")
+                || t.text == "BinaryHeap"
+                || t.text == "total_cmp";
+            if banned {
+                out.push(Finding::new(
+                    "DET-RANK-SITE",
+                    &f.path,
+                    t.line,
+                    format!("gather stage grew its own ranking implementation ({})", t.text),
+                ));
+            }
+        }
+        if f.ident_sites("rank_sharded", true).is_empty() {
+            out.push(Finding::new(
+                "DET-RANK-SITE",
+                &f.path,
+                0,
+                "gather stage no longer merges through Corpus::rank_sharded".into(),
+            ));
+        }
+    }
+    if let Some(f) = m.file("rust/src/coordinator/corpus.rs") {
+        let hits = f.ident_sites("total_cmp", true);
+        if hits.len() != 1 {
+            out.push(Finding::new(
+                "DET-TIEBREAK",
+                &f.path,
+                hits.get(1).copied().unwrap_or(0),
+                format!("want exactly one ranking comparator (total_cmp), found {}", hits.len()),
+            ));
+        }
+    }
+    for path in ["rust/src/coordinator/corpus.rs", "rust/src/coordinator/pipeline.rs"] {
+        if let Some(f) = m.file(path) {
+            let names = f.hashmap_bindings();
+            for (name, line, in_test) in f.iteration_sites(&names) {
+                if !in_test {
+                    out.push(Finding::new(
+                        "DET-HASH-ITER",
+                        path,
+                        line,
+                        format!("iteration over HashMap `{name}` — order is nondeterministic"),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Module ranks for ARCH-DAG. An import must point to a strictly lower
+/// rank; `sim` and `runtime` form one tier (the Engine trait lives in
+/// runtime, the cycle-model engine in sim, and the builder constructs
+/// both) whose internal edges are allowed.
+const RANKS: &[(&str, u32)] = &[
+    ("util", 0),
+    ("graph", 1),
+    ("ged", 2),
+    ("nn", 2),
+    ("sim", 3),
+    ("runtime", 3),
+    ("report", 4),
+    ("analysis", 5),
+    ("coordinator", 5),
+    ("net", 6),
+];
+
+fn rank(module: &str) -> Option<u32> {
+    RANKS.iter().find(|(m, _)| *m == module).map(|&(_, r)| r)
+}
+
+const SIM_TIER: &[&str] = &["sim", "runtime"];
+
+/// ARCH-DAG (beyond grep): layering over `use crate::X` and inline
+/// `crate::X::` edges, non-test scope. Crate roots (lib/bin) and
+/// out-of-tree code (tests/benches/examples) may see everything.
+fn layering(m: &RepoModel, out: &mut Vec<Finding>) {
+    for f in &m.files {
+        let Some(src_rank) = rank(&f.module) else { continue };
+        for (target, line) in f.crate_imports() {
+            if target == f.module {
+                continue;
+            }
+            let Some(dst_rank) = rank(&target) else { continue };
+            let same_tier =
+                SIM_TIER.contains(&f.module.as_str()) && SIM_TIER.contains(&target.as_str());
+            if dst_rank >= src_rank && !same_tier {
+                out.push(Finding::new(
+                    "ARCH-DAG",
+                    &f.path,
+                    line,
+                    format!(
+                        "layering violation: {} (rank {src_rank}) imports {} (rank {dst_rank})",
+                        f.module, target
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Names dispatched by nn/kernels.rs; calling them via `kernels::` is
+/// the privilege of nn/simgnn.rs alone, and calling the guarded linalg
+/// reference loops directly is the privilege of nn/kernels.rs alone.
+const GUARDED_LINALG: &[&str] =
+    &["csr_spmm", "onehot_gather", "sparse_row_matmul", "ntn_bilinear"];
+/// Non-dispatcher items other modules may import from nn/kernels.rs
+/// (bench plumbing, not scoring kernels).
+const KERNEL_NON_DISPATCH: &[&str] = &["set_kernel_path", "kernel_path", "KernelPath"];
+
+/// ARCH-KERNEL-CALLER / ARCH-LINALG-CONFINED / ARCH-KERNEL-PRESENT /
+/// KERNEL-DEFAULT-SIMD (ported grep: "kernel dispatch guards",
+/// DESIGN.md S16, widened from simgnn.rs to the whole tree).
+fn kernel_dispatch(m: &RepoModel, out: &mut Vec<Finding>) {
+    for f in m.files.iter().filter(|f| f.path.starts_with("rust/src/")) {
+        if !["rust/src/nn/simgnn.rs", "rust/src/nn/kernels.rs"].contains(&f.path.as_str()) {
+            for q in f.qualified_names("kernels") {
+                if !q.in_test && !KERNEL_NON_DISPATCH.contains(&q.name.as_str()) {
+                    out.push(Finding::new(
+                        "ARCH-KERNEL-CALLER",
+                        &f.path,
+                        q.line,
+                        format!("kernels::{} called outside nn/simgnn.rs", q.name),
+                    ));
+                }
+            }
+        }
+        if f.path != "rust/src/nn/kernels.rs" {
+            for q in f.qualified_names("linalg") {
+                if !q.in_test && GUARDED_LINALG.contains(&q.name.as_str()) {
+                    out.push(Finding::new(
+                        "ARCH-LINALG-CONFINED",
+                        &f.path,
+                        q.line,
+                        format!("linalg::{} bypassed the nn/kernels.rs dispatch layer", q.name),
+                    ));
+                }
+            }
+        }
+    }
+    if let Some(f) = m.file("rust/src/nn/simgnn.rs") {
+        let called: BTreeSet<String> =
+            f.qualified_names("kernels").into_iter().map(|q| q.name).collect();
+        for want in GUARDED_LINALG {
+            if !called.contains(*want) {
+                out.push(Finding::new(
+                    "ARCH-KERNEL-PRESENT",
+                    &f.path,
+                    0,
+                    format!("scoring no longer dispatches kernels::{want}"),
+                ));
+            }
+        }
+        if f.find_seq(&["use", "super", ":", ":", "kernels"], false).is_empty() {
+            out.push(Finding::new(
+                "ARCH-KERNEL-PRESENT",
+                &f.path,
+                0,
+                "nn/simgnn.rs no longer imports the kernels dispatch layer".into(),
+            ));
+        }
+    }
+    if !m.cargo_toml.is_empty() && !m.cargo_contains("default = [\"simd\"]") {
+        out.push(Finding::new(
+            "KERNEL-DEFAULT-SIMD",
+            "Cargo.toml",
+            0,
+            "the simd feature is no longer default-on".into(),
+        ));
+    }
+}
+
+/// NET-* (ported grep: "net front-door guards", DESIGN.md S17).
+fn net_front_door(m: &RepoModel, out: &mut Vec<Finding>) {
+    for dep in ["tokio", "hyper", "serde", "reqwest"] {
+        if m.cargo_contains(dep) {
+            out.push(Finding::new(
+                "NET-STD-ONLY",
+                "Cargo.toml",
+                0,
+                format!("net front door grew a non-std dependency ({dep})"),
+            ));
+        }
+    }
+    for f in m.under("rust/src/net/") {
+        for dep in ["tokio", "hyper", "reqwest", "async_std"] {
+            for line in f.ident_sites(dep, true) {
+                out.push(Finding::new(
+                    "NET-STD-ONLY",
+                    &f.path,
+                    line,
+                    format!("async/http stack ({dep}) reached rust/src/net"),
+                ));
+            }
+        }
+        if f.path != "rust/src/net/admission.rs" {
+            for line in f.find_seq(&["Query", ":", ":"], true) {
+                out.push(Finding::new(
+                    "NET-QUERY-CONFINED",
+                    &f.path,
+                    line,
+                    "query construction leaked out of admission.rs".into(),
+                ));
+            }
+        }
+    }
+    if let Some(f) = m.file("rust/src/net/server.rs") {
+        for t in &f.lex.toks {
+            if t.text.contains("submit") && t.text != "submit_handle" {
+                out.push(Finding::new(
+                    "NET-SINGLE-SUBMITTER",
+                    &f.path,
+                    t.line,
+                    format!("listener bypassed the admission front stage ({})", t.text),
+                ));
+            }
+        }
+    }
+    require_seq(
+        m,
+        "rust/src/net/server.rs",
+        &[
+            "use", "std", ":", ":", "net", ":", ":", "{", "SocketAddr", ",", "TcpListener", ",",
+            "TcpStream", "}",
+        ],
+        "NET-STD-PINNED",
+        "listener moved off the pinned std::net types",
+        out,
+    );
+    require_seq(
+        m,
+        "rust/src/net/server.rs",
+        &["SendPolicy", ":", ":", "DropNewest"],
+        "NET-DROP-NEWEST",
+        "admission queue lost its DropNewest overload policy",
+        out,
+    );
+}
+
+/// Panic-capable macro names (debug_assert* excluded: compiled out of
+/// release serving builds).
+const PANIC_MACROS: &[&str] = &[
+    "panic",
+    "assert",
+    "assert_eq",
+    "assert_ne",
+    "unreachable",
+    "todo",
+    "unimplemented",
+];
+
+fn panic_scope(path: &str) -> bool {
+    path.starts_with("rust/src/net/")
+        || [
+            "rust/src/coordinator/pipeline.rs",
+            "rust/src/coordinator/channel.rs",
+            "rust/src/coordinator/batcher.rs",
+            "rust/src/coordinator/router.rs",
+        ]
+        .contains(&path)
+}
+
+/// PANIC-FREE (beyond grep): serving threads must not panic — a panic
+/// in a stage thread wedges every in-flight query behind it. Lock
+/// poisoning and structural dispatch invariants are waivable with
+/// justification; everything else converts to typed errors.
+fn panic_free(m: &RepoModel, out: &mut Vec<Finding>) {
+    for f in m.files.iter().filter(|f| panic_scope(&f.path)) {
+        for c in f.method_calls() {
+            if !c.in_test && (c.name == "unwrap" || c.name == "expect") {
+                out.push(Finding::new(
+                    "PANIC-FREE",
+                    &f.path,
+                    c.line,
+                    format!(
+                        "{} in serving code (fn {})",
+                        c.name,
+                        c.func.as_deref().unwrap_or("<item>")
+                    ),
+                ));
+            }
+        }
+        for c in f.macro_calls() {
+            if !c.in_test && PANIC_MACROS.contains(&c.name.as_str()) {
+                out.push(Finding::new(
+                    "PANIC-FREE",
+                    &f.path,
+                    c.line,
+                    format!(
+                        "{}! in serving code (fn {})",
+                        c.name,
+                        c.func.as_deref().unwrap_or("<item>")
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// LOCK-ORDER (beyond grep): build a global acquisition graph — an
+/// edge `a -> b` whenever a function, having acquired `a`
+/// (`.lock()` / Condvar `.wait()`), later blocks on `b` (lock, wait,
+/// channel send/recv). Nodes are receiver idents shared across files;
+/// a strongly-connected component whose edges span two modules is a
+/// deadlock surface (front stage <-> responder tap <-> gather).
+fn lock_order(m: &RepoModel, out: &mut Vec<Finding>) {
+    const ACQUIRE: &[&str] = &["lock", "wait", "wait_timeout"];
+    // edge -> (module, path, line) witnesses
+    let mut edges: BTreeMap<(String, String), Vec<(String, String, u32)>> = BTreeMap::new();
+    for f in m.files.iter().filter(|f| f.path.starts_with("rust/src/")) {
+        let mut per_fn: BTreeMap<String, Vec<(String, String, u32)>> = BTreeMap::new();
+        for c in f.blocking_sites() {
+            if c.in_test {
+                continue;
+            }
+            let Some(func) = c.func else { continue };
+            let Some(recv) = c.receiver.last() else { continue };
+            per_fn.entry(func).or_default().push((c.name, recv.clone(), c.line));
+        }
+        for sites in per_fn.values() {
+            for (i, (name_a, recv_a, line_a)) in sites.iter().enumerate() {
+                if !ACQUIRE.contains(&name_a.as_str()) {
+                    continue;
+                }
+                for (_, recv_b, _) in &sites[i + 1..] {
+                    if recv_a != recv_b {
+                        edges
+                            .entry((recv_a.clone(), recv_b.clone()))
+                            .or_default()
+                            .push((f.module.clone(), f.path.clone(), *line_a));
+                    }
+                }
+            }
+        }
+    }
+    // Cross-module cycle = an edge a->b where b reaches a, and the
+    // witnesses along some return path include a second module.
+    let adj: BTreeMap<&str, BTreeSet<&str>> = edges.keys().fold(
+        BTreeMap::new(),
+        |mut adj, (a, b)| {
+            adj.entry(a.as_str()).or_default().insert(b.as_str());
+            adj
+        },
+    );
+    let reaches = |from: &str, to: &str| -> bool {
+        let mut seen = BTreeSet::new();
+        let mut stack = vec![from];
+        while let Some(n) = stack.pop() {
+            if n == to {
+                return true;
+            }
+            if seen.insert(n) {
+                if let Some(next) = adj.get(n) {
+                    stack.extend(next.iter().copied());
+                }
+            }
+        }
+        false
+    };
+    let mut reported = BTreeSet::new();
+    for ((a, b), witnesses) in &edges {
+        if !reaches(b, a) {
+            continue;
+        }
+        // Modules on any edge inside the cycle's SCC.
+        let mut mods: BTreeSet<&str> = witnesses.iter().map(|(m, _, _)| m.as_str()).collect();
+        for ((x, y), w) in &edges {
+            if reaches(b, x) && reaches(y, a) {
+                mods.extend(w.iter().map(|(m, _, _)| m.as_str()));
+            }
+        }
+        if mods.len() < 2 {
+            continue;
+        }
+        let key = if a < b { (a.clone(), b.clone()) } else { (b.clone(), a.clone()) };
+        if !reported.insert(key) {
+            continue;
+        }
+        let (_, path, line) = &witnesses[0];
+        out.push(Finding::new(
+            "LOCK-ORDER",
+            path,
+            *line,
+            format!(
+                "acquisition cycle `{a}` <-> `{b}` spans modules {:?} — lock-order deadlock surface",
+                mods
+            ),
+        ));
+    }
+}
+
+/// Presence check: the file must contain the token sequence somewhere
+/// (test scope included — these are structural anchors, not bans).
+/// Fixture models (`!m.complete`) are only held to anchors for files
+/// they actually contain; on the real tree a missing file fires too.
+fn require_seq(
+    m: &RepoModel,
+    path: &str,
+    seq: &[&str],
+    rule: &'static str,
+    message: &str,
+    out: &mut Vec<Finding>,
+) {
+    match m.file(path) {
+        Some(f) => {
+            if f.find_seq(seq, true).is_empty() {
+                out.push(Finding::new(rule, path, 0, message.to_string()));
+            }
+        }
+        None => {
+            if m.complete {
+                out.push(Finding::new(rule, path, 0, format!("{message} (file missing)")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(sources: Vec<(&str, &str)>) -> Vec<Finding> {
+        run(&RepoModel::from_sources(sources), "")
+    }
+
+    fn lint_cargo(sources: Vec<(&str, &str)>, cargo: &str) -> Vec<Finding> {
+        run(&RepoModel::from_sources_with_cargo(sources, cargo), "")
+    }
+
+    fn rules_fired(fs: &[Finding]) -> Vec<&str> {
+        let mut r: Vec<&str> = fs.iter().map(|f| f.rule).collect();
+        r.sort();
+        r.dedup();
+        r
+    }
+
+    #[test]
+    fn engine_api_fires_and_conforms() {
+        let bad = lint(vec![(
+            "rust/src/runtime/mod.rs",
+            "fn f() { let e = build_engine(\"sim\"); e.last_timing(); }",
+        )]);
+        assert!(rules_fired(&bad).contains(&"ENGINE-API-BUILD"), "{bad:?}");
+        assert!(rules_fired(&bad).contains(&"ENGINE-API-TIMING"), "{bad:?}");
+        // grep would flag all three decoys below; the lexer flags none.
+        let ok = lint(vec![(
+            "rust/src/runtime/mod.rs",
+            "// build_engine( was replaced by EngineBuilder\n\
+             const DOC: &str = \"build_engine( last_timing\";\n\
+             fn f() {}",
+        )]);
+        assert!(
+            !rules_fired(&ok).iter().any(|r| r.starts_with("ENGINE-API")),
+            "{ok:?}"
+        );
+    }
+
+    #[test]
+    fn sparse_single_site_counts() {
+        let simgnn_ok = "fn dense(g: &E) { matmul(&g.a_norm, x); } fn k() { kernels::csr_spmm(); kernels::onehot_gather(); kernels::sparse_row_matmul(); kernels::ntn_bilinear(); } use super::kernels;";
+        assert!(
+            !rules_fired(&lint(vec![("rust/src/nn/simgnn.rs", simgnn_ok)]))
+                .contains(&"SPARSE-DENSE-SINGLE")
+        );
+        let two = lint(vec![(
+            "rust/src/nn/simgnn.rs",
+            &format!("{simgnn_ok} fn extra(g: &E) {{ matmul(&g.a_norm, y); }}"),
+        )]);
+        assert!(rules_fired(&two).contains(&"SPARSE-DENSE-SINGLE"), "{two:?}");
+        let leak = lint(vec![(
+            "rust/src/coordinator/pipeline.rs",
+            "fn f(g: &E) { matmul(&g.a_norm, x); rank_sharded(); }",
+        )]);
+        assert!(rules_fired(&leak).contains(&"SPARSE-DENSE-CONFINED"), "{leak:?}");
+    }
+
+    #[test]
+    fn cache_split_api_fires() {
+        let bad = lint(vec![(
+            "rust/src/sim/engine.rs",
+            "fn score() { simgnn_forward(a, b); }",
+        )]);
+        assert!(rules_fired(&bad).contains(&"CACHE-SPLIT-API"), "{bad:?}");
+        // nn/ keeps the fused forward legally
+        let ok = lint(vec![("rust/src/nn/simgnn.rs", "pub fn simgnn_forward() {} fn k() { kernels::csr_spmm(); kernels::onehot_gather(); kernels::sparse_row_matmul(); kernels::ntn_bilinear(); } use super::kernels; fn d(g: &E) { matmul(&g.a_norm, x); }")]);
+        assert!(!rules_fired(&ok).contains(&"CACHE-SPLIT-API"), "{ok:?}");
+    }
+
+    #[test]
+    fn cache_construct_required_when_engine_exists() {
+        let missing = lint(vec![("rust/src/runtime/native.rs", "pub struct NativeEngine;")]);
+        assert!(rules_fired(&missing).contains(&"CACHE-CONSTRUCT"), "{missing:?}");
+        let ok = lint(vec![(
+            "rust/src/runtime/native.rs",
+            "impl NativeEngine { fn load() -> Self { Self { policy: SparsePolicy::Csr, cache: Arc::new(EmbedCache::new(N)) } } pub fn with_cache(self, c: Arc<EmbedCache>) -> Self { self } }",
+        )]);
+        assert!(!rules_fired(&ok).contains(&"CACHE-CONSTRUCT"), "{ok:?}");
+        assert!(!rules_fired(&ok).contains(&"SPARSE-DEFAULT-CSR"), "{ok:?}");
+    }
+
+    #[test]
+    fn det_rank_site_catches_bare_sort_too() {
+        // grep only knew sort_by/sort_unstable; `.sort()` evaded it.
+        let bad = lint(vec![(
+            "rust/src/coordinator/pipeline.rs",
+            "fn gather(mut v: Vec<f32>) { v.sort(); rank_sharded(); }",
+        )]);
+        assert!(rules_fired(&bad).contains(&"DET-RANK-SITE"), "{bad:?}");
+        let missing = lint(vec![("rust/src/coordinator/pipeline.rs", "fn gather() {}")]);
+        assert!(rules_fired(&missing).contains(&"DET-RANK-SITE"), "{missing:?}");
+        let ok = lint(vec![(
+            "rust/src/coordinator/pipeline.rs",
+            "// sort_by lives in corpus.rs, not here\nfn gather(c: &Corpus) { c.rank_sharded(); }",
+        )]);
+        assert!(!rules_fired(&ok).contains(&"DET-RANK-SITE"), "{ok:?}");
+    }
+
+    #[test]
+    fn det_tiebreak_exactly_one() {
+        let ok = lint(vec![(
+            "rust/src/coordinator/corpus.rs",
+            "fn rank() { v.sort_by(|a, b| b.1.total_cmp(&a.1)); }",
+        )]);
+        assert!(!rules_fired(&ok).contains(&"DET-TIEBREAK"), "{ok:?}");
+        let two = lint(vec![(
+            "rust/src/coordinator/corpus.rs",
+            "fn rank() { v.sort_by(|a, b| b.1.total_cmp(&a.1)); } fn other() { x.total_cmp(&y); }",
+        )]);
+        assert!(rules_fired(&two).contains(&"DET-TIEBREAK"), "{two:?}");
+    }
+
+    #[test]
+    fn det_hash_iter_fires_outside_tests_only() {
+        let bad = lint(vec![(
+            "rust/src/coordinator/pipeline.rs",
+            "fn gather(open: HashMap<u64, E>) { for e in open.into_values() { score(e); } rank_sharded(); }",
+        )]);
+        assert!(rules_fired(&bad).contains(&"DET-HASH-ITER"), "{bad:?}");
+        // the cfg(test) decoy grep would false-negative on is invisible here
+        let ok = lint(vec![(
+            "rust/src/coordinator/pipeline.rs",
+            "fn gather(open: HashMap<u64, E>) { let _ = open.get(&1); rank_sharded(); }\n\
+             #[cfg(test)] mod tests { fn t(open: HashMap<u64, E>) { for e in open.values() {} } }",
+        )]);
+        assert!(!rules_fired(&ok).contains(&"DET-HASH-ITER"), "{ok:?}");
+    }
+
+    #[test]
+    fn layering_dag_direction() {
+        let bad = lint(vec![(
+            "rust/src/nn/simgnn.rs",
+            "use crate::coordinator::pipeline::Pipeline; fn k() { kernels::csr_spmm(); kernels::onehot_gather(); kernels::sparse_row_matmul(); kernels::ntn_bilinear(); } use super::kernels; fn d(g: &E) { matmul(&g.a_norm, x); }",
+        )]);
+        assert!(rules_fired(&bad).contains(&"ARCH-DAG"), "{bad:?}");
+        let ok = lint(vec![(
+            "rust/src/net/server.rs",
+            "use std::net::{SocketAddr, TcpListener, TcpStream};\n\
+             use crate::coordinator::metrics::Metrics;\n\
+             fn f(q: Q) { front.submit_handle(q); }\n\
+             const P: SendPolicy = SendPolicy::DropNewest;",
+        )]);
+        assert!(!rules_fired(&ok).contains(&"ARCH-DAG"), "{ok:?}");
+        // sim <-> runtime is one tier: both directions legal
+        let tier = lint(vec![
+            ("rust/src/sim/engine.rs", "use crate::runtime::Engine; fn f() { let c: Arc<EmbedCache> = cache; } impl E { fn l() -> Self { Self { cache: Arc::new(EmbedCache::new(1)) } } pub fn with_cache(self) -> Self { self } }"),
+            ("rust/src/runtime/mod.rs", "fn build() { crate::sim::engine::SimEngine::load(); }"),
+        ]);
+        assert!(!rules_fired(&tier).contains(&"ARCH-DAG"), "{tier:?}");
+        // test-scoped upward import is legal (nn tests use the simulator)
+        let test_scoped = lint(vec![(
+            "rust/src/nn/simgnn.rs",
+            "fn k() { kernels::csr_spmm(); kernels::onehot_gather(); kernels::sparse_row_matmul(); kernels::ntn_bilinear(); } use super::kernels; fn d(g: &E) { matmul(&g.a_norm, x); }\n\
+             #[cfg(test)] mod tests { use crate::sim::ft::nonzero_stream; }",
+        )]);
+        assert!(!rules_fired(&test_scoped).contains(&"ARCH-DAG"), "{test_scoped:?}");
+    }
+
+    #[test]
+    fn kernel_caller_confined_to_simgnn() {
+        let bad = lint(vec![(
+            "rust/src/coordinator/pipeline.rs",
+            "fn f() { kernels::csr_spmm(p, i, w, x, r, c); rank_sharded(); }",
+        )]);
+        assert!(rules_fired(&bad).contains(&"ARCH-KERNEL-CALLER"), "{bad:?}");
+        // main.rs importing the path-pinning plumbing is not a dispatch call
+        let ok = lint(vec![(
+            "rust/src/main.rs",
+            "use spa_gcn::nn::kernels::{set_kernel_path, KernelPath};",
+        )]);
+        assert!(!rules_fired(&ok).contains(&"ARCH-KERNEL-CALLER"), "{ok:?}");
+    }
+
+    #[test]
+    fn linalg_confined_to_kernels() {
+        let bad = lint(vec![(
+            "rust/src/nn/simgnn.rs",
+            "use super::linalg::{csr_spmm, relu_inplace}; fn k() { kernels::csr_spmm(); kernels::onehot_gather(); kernels::sparse_row_matmul(); kernels::ntn_bilinear(); } use super::kernels; fn d(g: &E) { matmul(&g.a_norm, x); }",
+        )]);
+        assert!(rules_fired(&bad).contains(&"ARCH-LINALG-CONFINED"), "{bad:?}");
+        // unguarded linalg helpers (relu, sigmoid) stay importable
+        let ok = lint(vec![(
+            "rust/src/nn/simgnn.rs",
+            "use super::linalg::{matmul, relu_inplace, sigmoid}; fn k() { kernels::csr_spmm(); kernels::onehot_gather(); kernels::sparse_row_matmul(); kernels::ntn_bilinear(); } use super::kernels; fn d(g: &E) { matmul(&g.a_norm, x); }",
+        )]);
+        assert!(!rules_fired(&ok).contains(&"ARCH-LINALG-CONFINED"), "{ok:?}");
+        // kernels.rs itself calls the reference loops legally
+        let kernels = lint(vec![(
+            "rust/src/nn/kernels.rs",
+            "use super::linalg; fn scalar() { linalg::csr_spmm(p, i, w, x, r, c); }",
+        )]);
+        assert!(!rules_fired(&kernels).contains(&"ARCH-LINALG-CONFINED"), "{kernels:?}");
+    }
+
+    #[test]
+    fn kernel_present_and_simd_default() {
+        let stripped = lint(vec![("rust/src/nn/simgnn.rs", "fn forward(g: &E) { matmul(&g.a_norm, x); }")]);
+        assert!(rules_fired(&stripped).contains(&"ARCH-KERNEL-PRESENT"), "{stripped:?}");
+        let no_default =
+            lint_cargo(vec![("rust/src/util/mod.rs", "")], "[features]\ndefault = []\n");
+        assert!(rules_fired(&no_default).contains(&"KERNEL-DEFAULT-SIMD"), "{no_default:?}");
+        let ok = lint_cargo(
+            vec![("rust/src/util/mod.rs", "")],
+            "[features]\ndefault = [\"simd\"]\nsimd = []\n",
+        );
+        assert!(!rules_fired(&ok).contains(&"KERNEL-DEFAULT-SIMD"), "{ok:?}");
+    }
+
+    #[test]
+    fn net_std_only_and_query_confinement() {
+        let bad = lint_cargo(
+            vec![(
+                "rust/src/net/wire.rs",
+                "use tokio::net::TcpListener; fn f() { let q = Query::new(); }",
+            )],
+            "[dependencies]\nserde = \"1\"\n",
+        );
+        let fired = rules_fired(&bad);
+        assert!(fired.contains(&"NET-STD-ONLY"), "{bad:?}");
+        assert!(fired.contains(&"NET-QUERY-CONFINED"), "{bad:?}");
+        // admission.rs constructs queries legally; comment decoys ignored
+        let ok = lint(vec![(
+            "rust/src/net/admission.rs",
+            "// tokio would be banned here\nfn f() -> Query { Query::TopK { k: 8 } }",
+        )]);
+        assert!(!rules_fired(&ok).iter().any(|r| r.starts_with("NET-")), "{ok:?}");
+    }
+
+    #[test]
+    fn net_single_submitter_and_anchors() {
+        let bad = lint(vec![(
+            "rust/src/net/server.rs",
+            "use std::net::{SocketAddr, TcpListener, TcpStream};\n\
+             fn f(p: &Pipeline, q: Q) { p.submit(q); }\n\
+             const P: SendPolicy = SendPolicy::DropNewest;",
+        )]);
+        assert!(rules_fired(&bad).contains(&"NET-SINGLE-SUBMITTER"), "{bad:?}");
+        let unpinned = lint(vec![(
+            "rust/src/net/server.rs",
+            "use std::net::TcpListener;\nfn f(front: &F, q: Q) { front.submit_handle(q); }\nconst P: SendPolicy = SendPolicy::DropNewest;",
+        )]);
+        assert!(rules_fired(&unpinned).contains(&"NET-STD-PINNED"), "{unpinned:?}");
+        let no_policy = lint(vec![(
+            "rust/src/net/server.rs",
+            "use std::net::{SocketAddr, TcpListener, TcpStream};\nfn f(front: &F, q: Q) { front.submit_handle(q); }",
+        )]);
+        assert!(rules_fired(&no_policy).contains(&"NET-DROP-NEWEST"), "{no_policy:?}");
+    }
+
+    #[test]
+    fn panic_free_fires_outside_tests_waives_with_justification() {
+        let src = "fn serve(x: Option<u32>) { let _ = x.unwrap(); }\n\
+                   #[cfg(test)] mod tests { #[test] fn t() { Some(1).unwrap(); } }";
+        let bad = lint(vec![("rust/src/net/server.rs", src)]);
+        let panics: Vec<&Finding> =
+            bad.iter().filter(|f| f.rule == "PANIC-FREE").collect();
+        assert_eq!(panics.len(), 1, "{bad:?}"); // test-scope unwrap exempt
+        assert_eq!(panics[0].line, 1);
+        assert!(panics[0].message.contains("fn serve"), "{:?}", panics[0]);
+        // waive it: same rule/path + line fragment + justification
+        let model = RepoModel::from_sources(vec![("rust/src/net/server.rs", src)]);
+        let waived = run(
+            &model,
+            "PANIC-FREE | rust/src/net/server.rs | x.unwrap() | fixture: poisoned-lock recovery\n",
+        );
+        assert!(active(&waived).all(|f| f.rule != "PANIC-FREE"), "{waived:?}");
+        assert!(
+            waived.iter().any(|f| f.rule == "PANIC-FREE" && f.waived.is_some()),
+            "{waived:?}"
+        );
+    }
+
+    #[test]
+    fn panic_free_catches_macros_not_debug_asserts() {
+        let bad = lint(vec![(
+            "rust/src/coordinator/batcher.rs",
+            "fn push() { assert!(cap > 0); debug_assert!(cap < 10); }",
+        )]);
+        let panics: Vec<&Finding> = bad.iter().filter(|f| f.rule == "PANIC-FREE").collect();
+        assert_eq!(panics.len(), 1, "{bad:?}");
+        assert!(panics[0].message.starts_with("assert!"), "{:?}", panics[0]);
+    }
+
+    #[test]
+    fn waiver_hygiene() {
+        let model = RepoModel::from_sources(vec![("rust/src/util/mod.rs", "fn f() {}")]);
+        let fs = run(
+            &model,
+            "# comment\n\
+             PANIC-FREE | rust/src/net/server.rs | nothing here | stale entry\n\
+             PANIC-FREE | rust/src/net/server.rs | missing justification\n",
+        );
+        assert!(fs.iter().any(|f| f.rule == "WAIVER-STALE" && f.line == 2), "{fs:?}");
+        assert!(fs.iter().any(|f| f.rule == "WAIVER-MALFORMED" && f.line == 3), "{fs:?}");
+    }
+
+    #[test]
+    fn lock_order_cross_module_cycle() {
+        // net locks `a` then sends on `b`; coordinator locks `b` then
+        // waits on `a` — classic inverted order across modules.
+        let bad = lint(vec![
+            (
+                "rust/src/net/admission.rs",
+                "fn f(s: &S) { let g = s.a.lock(); s.b.send(1); }",
+            ),
+            (
+                "rust/src/coordinator/router.rs",
+                "fn g(s: &S) { let h = s.b.lock(); s.a.wait(h); }",
+            ),
+        ]);
+        assert!(rules_fired(&bad).contains(&"LOCK-ORDER"), "{bad:?}");
+        // same shape inside ONE module: not a cross-module surface
+        let intra = lint(vec![(
+            "rust/src/coordinator/router.rs",
+            "fn f(s: &S) { let g = s.a.lock(); s.b.send(1); }\n\
+             fn g(s: &S) { let h = s.b.lock(); s.a.wait(h); }",
+        )]);
+        assert!(!rules_fired(&intra).contains(&"LOCK-ORDER"), "{intra:?}");
+        // consistent order across modules: fine
+        let ok = lint(vec![
+            ("rust/src/net/admission.rs", "fn f(s: &S) { let g = s.a.lock(); s.b.send(1); }"),
+            ("rust/src/coordinator/router.rs", "fn g(s: &S) { let h = s.a.lock(); s.b.recv(); }"),
+        ]);
+        assert!(!rules_fired(&ok).contains(&"LOCK-ORDER"), "{ok:?}");
+    }
+
+    #[test]
+    fn every_rule_id_is_documented() {
+        let ids: BTreeSet<&str> = RULES.iter().map(|(id, _)| *id).collect();
+        for id in [
+            "ENGINE-API-BUILD",
+            "SPARSE-DENSE-SINGLE",
+            "DET-RANK-SITE",
+            "ARCH-DAG",
+            "PANIC-FREE",
+            "LOCK-ORDER",
+            "WAIVER-STALE",
+        ] {
+            assert!(ids.contains(id));
+        }
+    }
+}

@@ -172,6 +172,17 @@ pub struct NamedSender<T> {
     stats: Arc<ChannelStats>,
 }
 
+// Manual impl: prints the channel identity, not the payload type, so no
+// `T: Debug` bound leaks into every queue element.
+impl<T> std::fmt::Debug for NamedSender<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NamedSender")
+            .field("channel", &self.stats.name)
+            .field("policy", &self.policy)
+            .finish_non_exhaustive()
+    }
+}
+
 impl<T> Clone for NamedSender<T> {
     fn clone(&self) -> Self {
         NamedSender {
@@ -243,6 +254,14 @@ impl<T> NamedSender<T> {
 pub struct NamedReceiver<T> {
     rx: Receiver<T>,
     stats: Arc<ChannelStats>,
+}
+
+impl<T> std::fmt::Debug for NamedReceiver<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NamedReceiver")
+            .field("channel", &self.stats.name)
+            .finish_non_exhaustive()
+    }
 }
 
 impl<T> NamedReceiver<T> {

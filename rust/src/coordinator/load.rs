@@ -21,6 +21,7 @@ pub fn poisson_schedule(rng: &mut Rng, rate_qps: f64, count: usize) -> Vec<Durat
 }
 
 /// Busy-wait-free pacer: sleeps until each scheduled offset from `start`.
+#[derive(Debug)]
 pub struct Pacer {
     start: Instant,
 }

@@ -320,6 +320,7 @@ pub type ResultTap = Arc<dyn Fn(&QueryResult) + Send + Sync>;
 /// A running pipeline. `submit` queries, then `finish` to shut down and
 /// collect metrics. Dropping without `finish` detaches the stage threads
 /// (they drain and exit on their own).
+#[derive(Debug)]
 pub struct Pipeline {
     submit_tx: NamedSender<Query>,
     stages: Vec<JoinHandle<()>>,
@@ -335,6 +336,7 @@ pub struct Pipeline {
 /// cascade once every outstanding `SubmitHandle` has been dropped, so
 /// holders must be stopped (and their handles dropped) *before* calling
 /// `finish`, or `finish` will block indefinitely.
+#[derive(Debug)]
 pub struct SubmitHandle {
     tx: NamedSender<Query>,
 }

@@ -77,6 +77,7 @@ pub fn validate_payload(cfg: &ModelConfig, payload: &QueryPayload) -> Result<(),
 /// Admission-stage state: shape validation against the artifact limits.
 /// (Admit/reject counts live in `Metrics`, fed by the responder — no
 /// duplicate bookkeeping here.)
+#[derive(Debug)]
 pub struct Admission {
     cfg: ModelConfig,
 }
@@ -101,6 +102,7 @@ impl Admission {
 /// [`EngineCaps`] (or the construction [`EngineError`]) exactly once;
 /// the encoder blocks on [`LaneCaps::wait`], the router and the final
 /// metrics snapshot read it non-blockingly via [`LaneCaps::get`].
+#[derive(Debug)]
 pub struct LaneCaps {
     state: Mutex<Option<Result<EngineCaps, EngineError>>>,
     ready: Condvar,
@@ -175,6 +177,17 @@ impl LaneCaps {
 pub struct CapsRouter<T> {
     lanes: Vec<(NamedSender<T>, Arc<LaneCaps>)>,
     next: usize,
+}
+
+// Manual impl: no `T: Debug` bound — the router's identity is its lane
+// set and cursor, not the queued payloads.
+impl<T> std::fmt::Debug for CapsRouter<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CapsRouter")
+            .field("lanes", &self.lanes.len())
+            .field("next", &self.next)
+            .finish()
+    }
 }
 
 impl<T> CapsRouter<T> {

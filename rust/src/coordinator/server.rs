@@ -23,7 +23,6 @@ use std::collections::HashMap;
 
 use crate::graph::dataset::{random_pairs, GraphDb};
 use crate::graph::generate::{generate, Family};
-use crate::net::NetConfig;
 use crate::nn::config::ArtifactsMeta;
 use crate::runtime::embed_cache::{EmbedCache, DEFAULT_CAPACITY};
 use crate::runtime::{EngineBuilder, EngineFactory, EngineKind};
@@ -65,9 +64,6 @@ pub struct ServeConfig {
     pub corpus_size: usize,
     /// How many ranked candidates each corpus query returns (`--topk K`).
     pub topk: usize,
-    /// Front-door knobs for `serve --listen` (ignored by the in-process
-    /// workload entrypoints).
-    pub net: NetConfig,
 }
 
 impl Default for ServeConfig {
@@ -83,7 +79,6 @@ impl Default for ServeConfig {
             pipeline_depth: 2,
             corpus_size: 0,
             topk: 10,
-            net: NetConfig::default(),
         }
     }
 }

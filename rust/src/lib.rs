@@ -3,6 +3,15 @@
 //!
 //! Reproduction of Sohrabizadeh, Chi & Cong (2021) as a three-layer
 //! rust + JAX + Pallas system — see DESIGN.md for the architecture map.
+
+// The tree is unsafe-free and must stay that way: every kernel,
+// including the vectorized lanes path, is safe Rust (DESIGN.md S16/S18).
+#![forbid(unsafe_code)]
+// Every public type prints: engines, configs, metrics and wire frames
+// all land in logs and test failures, so Debug is part of the API.
+#![deny(missing_debug_implementations)]
+
+pub mod analysis;
 pub mod coordinator;
 pub mod ged;
 pub mod graph;

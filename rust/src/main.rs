@@ -5,6 +5,7 @@
 //!                   table5, table6, fig10, fig11, replication, sparsity,
 //!                   crosscheck, all)
 //!   serve           run the serving coordinator on a synthetic workload
+//!   lint            run the in-repo architecture linter over the tree
 //!   gen             synthesize a graph database and print its statistics
 //!   ged             exact-GED demo on tiny graphs
 //!
@@ -96,6 +97,11 @@ fn usage() -> ! {
          \t [--net-refill QPS] [--net-burst B] [--net-deadline-ms T])\n\
          \n  load --connect ADDR [--clients N] [--rate QPS] [--queries N]\n\
          \t[--topk K] [--seed S]  (drive a `serve --listen` front door)\n\
+         \n  lint [--json OUT.json] [--root DIR]\n\
+         \t(check the repo's architecture invariants — layering DAG,\n\
+         \t determinism, panic-freedom, lock order; see DESIGN.md S18.\n\
+         \t Exit 1 on any unwaived finding; --json writes the full\n\
+         \t machine-readable report)\n\
          \n  gen [--family aids|linux|imdb] [--count N]\n\
          \n  ged [--nodes N] [--pairs P]",
         kinds.join(", ")
@@ -112,6 +118,7 @@ fn main() -> anyhow::Result<()> {
         "report" => cmd_report(&args),
         "serve" => cmd_serve(&args),
         "load" => cmd_load(&args),
+        "lint" => cmd_lint(&args),
         "gen" => cmd_gen(&args),
         "ged" => cmd_ged(&args),
         _ => usage(),
@@ -178,7 +185,6 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "lanes" => set_kernel_path(KernelPath::Lanes),
         other => anyhow::bail!("--kernels must be scalar or lanes, got {other}"),
     }
-    let net_defaults = NetConfig::default();
     let cfg = ServeConfig {
         artifacts_dir: artifacts_dir(args),
         engines: EngineKind::parse_list(&args.flag("engine", "xla"))?,
@@ -190,17 +196,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         pipeline_depth: args.usize("pipeline-depth", 2),
         corpus_size: args.usize("corpus", 0),
         topk: args.usize("topk", 10),
-        net: NetConfig {
+    };
+    if let Some(listen) = args.flags.get("listen") {
+        // Front-door knobs stay a net-layer concern: ServeConfig is a
+        // coordinator type and must not carry a NetConfig (ARCH-DAG).
+        let net_defaults = NetConfig::default();
+        let ncfg = NetConfig {
             conn_cap: args.usize("net-conn-cap", net_defaults.conn_cap),
             admit_cap: args.usize("net-admit-cap", net_defaults.admit_cap),
             refill_per_s: args.f64("net-refill", net_defaults.refill_per_s),
             burst: args.f64("net-burst", net_defaults.burst),
             deadline_ms: args.usize("net-deadline-ms", net_defaults.deadline_ms as usize) as u64,
             ..net_defaults
-        },
-    };
-    if let Some(listen) = args.flags.get("listen") {
-        let server = serve_listen(&cfg, listen)?;
+        };
+        let server = serve_listen(&cfg, ncfg, listen)?;
         let ready = server.wait_ready();
         eprintln!(
             "spa-gcn front door listening on {} ({ready} lane(s) ready); press Enter to stop",
@@ -245,6 +254,20 @@ fn cmd_load(args: &Args) -> anyhow::Result<()> {
     };
     let report = run_load(&cfg)?;
     println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    let root = PathBuf::from(args.flag("root", "."));
+    let outcome = spa_gcn::analysis::run_lint(&root)?;
+    print!("{}", spa_gcn::analysis::report::render_text(&outcome));
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, spa_gcn::analysis::report::to_json(&outcome).to_string())?;
+        eprintln!("wrote {path}");
+    }
+    if !outcome.ok() {
+        std::process::exit(1);
+    }
     Ok(())
 }
 

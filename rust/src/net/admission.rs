@@ -5,7 +5,8 @@
 //! crosses one bounded `NamedChannel` (`net.admit`, policy
 //! [`SendPolicy::DropNewest`]) into the single front-stage thread, which
 //! is the only code in `net/` that constructs [`Query`]s and calls
-//! [`SubmitHandle::submit`] — CI grep-guards that topology. The front
+//! [`SubmitHandle::submit`] — the NET-QUERY-CONFINED and
+//! NET-SINGLE-SUBMITTER lint rules pin that topology. The front
 //! stage is where the overload taxonomy's inner layers live:
 //!
 //! * **Throttle** (connection thread, before the queue): a per-client
@@ -94,6 +95,7 @@ impl TokenBucket {
 /// past `max_clients` distinct ids, new clients share the anonymous
 /// (`""`) bucket, so hostile id churn can't grow the table without
 /// limit.
+#[derive(Debug)]
 pub struct BucketTable {
     rate: f64,
     burst: f64,
@@ -134,6 +136,7 @@ impl BucketTable {
 /// Queue-depth EWMA with hysteresis: degraded mode engages at `hi`,
 /// disengages below `lo`. Written by the front-stage thread only; the
 /// atomics exist so connection threads and reports can read it.
+#[derive(Debug)]
 pub struct LoadSignal {
     ewma_bits: AtomicU64,
     degraded: AtomicBool,
@@ -178,6 +181,7 @@ impl LoadSignal {
 }
 
 /// A frame that passed its token bucket, en route to the front stage.
+#[derive(Debug)]
 pub struct AdmittedFrame {
     /// Client id (telemetry only past this point).
     pub client: String,
@@ -193,6 +197,7 @@ pub struct AdmittedFrame {
     pub reply: SyncSender<ResponseFrame>,
 }
 
+#[derive(Debug)]
 struct PendingReply {
     request_id: u64,
     degraded: bool,
@@ -204,6 +209,7 @@ struct PendingReply {
 /// internal id (client ids from different connections may collide);
 /// the responder's [`ResultTap`] looks the internal id back up and
 /// forwards a [`ResponseFrame`] carrying the client's own id.
+#[derive(Debug)]
 pub struct ResultRouter {
     next: AtomicU64,
     routes: Mutex<HashMap<u64, PendingReply>>,

@@ -24,6 +24,7 @@ use super::wire::{
 };
 
 /// A blocking wire-protocol client over one connection.
+#[derive(Debug)]
 pub struct NetClient {
     stream: TcpStream,
     client_id: String,

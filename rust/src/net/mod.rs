@@ -12,7 +12,8 @@
 //!   error responses.
 //! * [`server`] — a blocking connection-per-thread accept loop bounded
 //!   by a connection cap, routing every request through [`admission`]
-//!   (never directly into the batcher — CI grep-guards this).
+//!   (never directly into the batcher — the NET-SINGLE-SUBMITTER
+//!   lint rule, DESIGN.md S18).
 //! * [`admission`] — per-client token buckets that answer
 //!   `retry_after_ms` instead of queueing; a bounded admission queue
 //!   with the [`SendPolicy::DropNewest`] shed policy; deadline shedding

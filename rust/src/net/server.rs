@@ -4,8 +4,9 @@
 //! Topology (DESIGN.md S17): connection threads decode frames, charge
 //! token buckets, and enqueue [`AdmittedFrame`]s onto the bounded
 //! `net.admit` channel — they never construct queries or touch the
-//! batcher (CI grep-guards this). The single admission front stage
-//! ([`admission::front_stage`]) is the only bridge into the pipeline;
+//! batcher (the NET-QUERY-CONFINED / NET-SINGLE-SUBMITTER lint rules).
+//! The single admission front stage ([`admission::front_stage`]) is
+//! the only bridge into the pipeline;
 //! results come back through the responder's [`ResultTap`] into
 //! per-request reply slots.
 //!
@@ -50,6 +51,7 @@ use super::{NetConfig, NetCounters};
 /// `net.admit` sender: once the accept loop and every connection thread
 /// have dropped their `Arc`, the front stage's receiver disconnects and
 /// the shutdown cascade proceeds.
+#[derive(Debug)]
 struct ConnCtx {
     shutdown: AtomicBool,
     cfg: NetConfig,
@@ -78,17 +80,18 @@ impl Drop for ConnSlot {
 /// A running front door: listener + connection threads + admission
 /// front stage + engine pipeline. `finish` for an ordered shutdown and
 /// the metrics report.
+#[derive(Debug)]
 pub struct NetServer {
     addr: SocketAddr,
     ctx: Arc<ConnCtx>,
-    accept: Option<JoinHandle<()>>,
-    front: Option<JoinHandle<()>>,
+    accept: JoinHandle<()>,
+    front: JoinHandle<()>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
     admit_stats: Arc<ChannelStats>,
     counters: Arc<NetCounters>,
     signal: Arc<LoadSignal>,
     router: Arc<ResultRouter>,
-    pipeline: Option<Pipeline>,
+    pipeline: Pipeline,
 }
 
 impl NetServer {
@@ -176,14 +179,14 @@ impl NetServer {
         Ok(NetServer {
             addr,
             ctx,
-            accept: Some(accept),
-            front: Some(front),
+            accept,
+            front,
             conns,
             admit_stats,
             counters,
             signal,
             router,
-            pipeline: Some(pipeline),
+            pipeline,
         })
     }
 
@@ -195,7 +198,7 @@ impl NetServer {
     /// Block until every engine lane's caps handshake has published;
     /// returns working-lane count (see [`Pipeline::wait_ready`]).
     pub fn wait_ready(&self) -> usize {
-        self.pipeline.as_ref().map_or(0, |p| p.wait_ready())
+        self.pipeline.wait_ready()
     }
 
     /// Live front-door counters (tests assert on these mid-run).
@@ -229,43 +232,49 @@ impl NetServer {
     /// Ordered shutdown: stop accepting, drain connections, let the
     /// front stage finish the admission queue, then collect pipeline
     /// metrics with the net counters and `net.admit` snapshot attached.
-    pub fn finish(mut self) -> Metrics {
-        self.ctx.shutdown.store(true, Ordering::Release);
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
-        }
+    pub fn finish(self) -> Metrics {
+        // Destructuring consumes every handle exactly once — `finish`
+        // takes `self` by value, so "runs once" is a type-level fact.
+        let NetServer {
+            ctx,
+            accept,
+            front,
+            conns,
+            admit_stats,
+            counters,
+            pipeline,
+            ..
+        } = self;
+        ctx.shutdown.store(true, Ordering::Release);
+        let _ = accept.join();
         // Connection threads notice the flag within read_timeout_ms (or
         // finish their in-flight request first) and drop their ConnCtx
         // Arcs; with the accept loop's Arc gone too, the front stage's
         // receiver disconnects after the queue drains.
         let handles: Vec<_> = {
-            let mut conns = self.conns.lock().unwrap_or_else(|p| p.into_inner());
+            let mut conns = conns.lock().unwrap_or_else(|p| p.into_inner());
             conns.drain(..).collect()
         };
         for h in handles {
             let _ = h.join();
         }
-        drop(self.ctx);
-        if let Some(h) = self.front.take() {
-            let _ = h.join();
-        }
+        drop(ctx);
+        let _ = front.join();
         // Only now is the front stage's SubmitHandle dropped, so
         // Pipeline::finish's drop cascade can start.
-        let mut metrics = self
-            .pipeline
-            .take()
-            .expect("finish runs once")
-            .finish();
-        metrics.net = Some(self.counters.snapshot());
-        metrics.channels.push(self.admit_stats.snapshot());
+        let mut metrics = pipeline.finish();
+        metrics.net = Some(counters.snapshot());
+        metrics.channels.push(admit_stats.snapshot());
         metrics
     }
 }
 
 /// CLI entrypoint (`spa-gcn serve --listen ADDR`): build engines from
 /// the artifacts directory per `cfg`, synthesize the corpus when
-/// `--corpus N` asked for one, and start the front door.
-pub fn serve_listen(cfg: &ServeConfig, listen: &str) -> Result<NetServer> {
+/// `--corpus N` asked for one, and start the front door. The net knobs
+/// arrive separately from the pipeline config: `ServeConfig` is a
+/// coordinator type and must not depend on this layer (ARCH-DAG).
+pub fn serve_listen(cfg: &ServeConfig, ncfg: NetConfig, listen: &str) -> Result<NetServer> {
     anyhow::ensure!(!cfg.engines.is_empty(), "serve needs at least one engine kind");
     let meta = ArtifactsMeta::load(&cfg.artifacts_dir)
         .context("loading artifacts (run `make artifacts`)")?;
@@ -291,7 +300,7 @@ pub fn serve_listen(cfg: &ServeConfig, listen: &str) -> Result<NetServer> {
         model,
         cfg.lane_factories(),
         cfg.pipeline_config(),
-        cfg.net.clone(),
+        ncfg,
         corpora,
         listen,
     )

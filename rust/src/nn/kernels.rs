@@ -22,8 +22,8 @@
 //! default) only selects which one the top-level dispatchers run, and
 //! [`set_kernel_path`] overrides that choice at runtime (the serving
 //! CLI's `--kernels scalar` escape hatch). `nn/simgnn.rs` calls the
-//! dispatchers exclusively — a CI grep-guard keeps direct scalar-kernel
-//! calls out of the hot path — so `NativeEngine`, the embed cache, and
+//! dispatchers exclusively — the ARCH-LINALG-CONFINED lint rule keeps
+//! direct scalar-kernel calls out of the hot path — so `NativeEngine`, the embed cache, and
 //! sharded corpus scoring all inherit the active path.
 //!
 //! # Numerical contracts (enforced by `rust/tests/simd_parity.rs`)

@@ -30,6 +30,7 @@ use crate::util::rng::Rng;
 use super::{fmt, Table};
 
 /// Everything the harness needs from `make artifacts`.
+#[derive(Debug)]
 pub struct Context {
     pub cfg: ModelConfig,
     pub weights: Weights,
@@ -65,6 +66,7 @@ impl Context {
 
 /// Mean steady-state kernel ms + mean query stats for an (arch, platform)
 /// over a workload.
+#[derive(Debug)]
 pub struct SimRun {
     pub kernel_ms: f64,
     pub mean_interval_cycles: f64,
@@ -233,6 +235,7 @@ pub fn table5(ctx: &Context, queries: usize) -> Table {
 }
 
 /// Measured engine timings (rust native + PJRT) on a workload.
+#[derive(Debug)]
 pub struct Measured {
     pub name: String,
     pub kernel_ms: f64,

@@ -60,6 +60,7 @@ pub struct CacheStats {
 
 /// One shard: key -> (recency tick, value) plus a tick-ordered index for
 /// O(log n) LRU eviction without unsafe pointer chasing.
+#[derive(Debug)]
 struct Shard {
     map: HashMap<u128, (u64, Arc<CachedEmbed>)>,
     lru: BTreeMap<u64, u128>,
@@ -114,6 +115,7 @@ impl Shard {
 /// and one cache can be shared across same-kind lanes behind an `Arc`
 /// (injected through `EngineBuilder::with_embed_cache` — DESIGN.md
 /// S15): corpus candidates warmed by one lane hit on every sibling.
+#[derive(Debug)]
 pub struct EmbedCache {
     shards: Vec<Mutex<Shard>>,
     hits: AtomicU64,

@@ -38,6 +38,7 @@ use super::{
 /// nonzero work counts as [`QueryTelemetry::macs`] (executed work only —
 /// cache hits contribute zero), and cache activity as
 /// [`QueryTelemetry::embed_cache`].
+#[derive(Debug)]
 pub struct NativeEngine {
     cfg: ModelConfig,
     weights: Weights,

@@ -36,6 +36,18 @@ pub struct XlaEngine {
     caps: EngineCaps,
 }
 
+// Manual impl: the xla FFI handles (`PjRtClient`, `PjRtLoadedExecutable`)
+// expose no `Debug`, so print the compiled ladder instead.
+impl std::fmt::Debug for XlaEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaEngine")
+            .field("artifacts_dir", &self.artifacts_dir)
+            .field("batch_sizes", &self.executables.keys().collect::<Vec<_>>())
+            .field("caps", &self.caps)
+            .finish_non_exhaustive()
+    }
+}
+
 impl XlaEngine {
     /// Load every simgnn_b*.hlo.txt listed in meta.json and compile them
     /// (the Pallas-kernel artifacts — the TPU-faithful path).

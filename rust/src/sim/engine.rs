@@ -89,6 +89,7 @@ impl SimStats {
 /// [`QueryTelemetry::cycles`] and accumulates [`SimStats`] across every
 /// query it scores — including batches served through the `dyn Engine`
 /// trait object.
+#[derive(Debug)]
 pub struct SimEngine {
     cfg: ModelConfig,
     weights: Weights,

@@ -1,0 +1,55 @@
+//! The repository lints itself: `cargo test` fails if any architectural
+//! invariant in `analysis::rules` is violated by the shipped tree
+//! (DESIGN.md S18). CI runs the same check as `spa-gcn lint`; this test
+//! makes it impossible to merge a violation even without CI.
+
+use std::path::Path;
+
+use spa_gcn::analysis::{report, run_lint, WAIVERS};
+
+#[test]
+fn shipped_tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let outcome = run_lint(root).expect("scanning the repository source tree");
+    assert!(
+        outcome.files_scanned > 50,
+        "lint scanned only {} files — wrong root?",
+        outcome.files_scanned
+    );
+    assert!(
+        outcome.ok(),
+        "repository lint found violations:\n{}",
+        report::render_text(&outcome)
+    );
+}
+
+#[test]
+fn no_waiver_is_stale_or_malformed() {
+    // `run_lint` turns stale/malformed waivers into findings, so the
+    // clean-tree assertion above covers them — but check directly too,
+    // with a message pointing at waivers.txt, so a dead waiver fails
+    // with "fix the waiver file" instead of a generic lint failure.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let outcome = run_lint(root).expect("scanning the repository source tree");
+    let waiver_problems: Vec<_> = outcome
+        .findings
+        .iter()
+        .filter(|f| f.rule.starts_with("WAIVER-"))
+        .collect();
+    assert!(
+        waiver_problems.is_empty(),
+        "rust/src/analysis/waivers.txt has dead entries:\n{}",
+        waiver_problems
+            .iter()
+            .map(|f| f.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    // And the waiver file itself is exercised: the shipped tree relies
+    // on waivers (the pipeline's structural expects), so an empty or
+    // unparsed file would be a silent regression.
+    assert!(
+        WAIVERS.lines().any(|l| l.trim_start().starts_with("PANIC-FREE")),
+        "waivers.txt lost its PANIC-FREE entries"
+    );
+}
