@@ -1,0 +1,69 @@
+//! Replay-driven serving benchmark (ISSUE 9 / DESIGN.md S19): record a
+//! 200-query serving workload as a `spa-gcn-trace-v1` trace, replay it
+//! twice (asserting byte-identical outcome dumps — the determinism
+//! gate), and emit a `bench-serving-v1` snapshot to `bench.json` for
+//! the CI perf trajectory. The committed `BENCH_9.json` is the
+//! estimated-analytic placeholder this bench overwrites with measured
+//! numbers; validate either with `spa-gcn bench-check FILE`.
+//!
+//!     cargo bench --bench bench_serving
+//!
+//! Needs `artifacts/` (run `make artifacts`); skips itself otherwise,
+//! matching the repo's artifact-gated test convention.
+
+use std::path::Path;
+
+use spa_gcn::coordinator::server::{run_replay, serve_workload, ServeConfig};
+use spa_gcn::coordinator::trace::{bench_snapshot, check_bench, Trace};
+use spa_gcn::runtime::EngineKind;
+
+fn main() -> anyhow::Result<()> {
+    if !Path::new("artifacts").is_dir() {
+        println!("bench_serving: artifacts/ not found (run `make artifacts`); skipping");
+        return Ok(());
+    }
+    let trace_path = std::env::temp_dir()
+        .join(format!("spa-gcn-bench-serving-{}.trace.jsonl", std::process::id()));
+
+    // The recorded workload: one-vs-many corpus search, the shape the
+    // paper's serving argument is about (many small graphs, §5.4.3).
+    let cfg = ServeConfig {
+        engines: vec![EngineKind::Native],
+        queries: 200,
+        corpus_size: 64,
+        topk: 10,
+        seed: 77,
+        record: Some(trace_path.clone()),
+        ..ServeConfig::default()
+    };
+    println!("== record: 200-query serving workload -> {} ==", trace_path.display());
+    let table = serve_workload(&cfg)?;
+    println!("{}", table.render());
+
+    let trace = Trace::read(&trace_path)
+        .map_err(|e| anyhow::anyhow!("reading recorded trace: {e}"))?;
+    println!("== replay x2 (flood) : determinism gate + snapshot ==");
+    let replay_cfg = ServeConfig { record: None, ..cfg };
+    let (metrics, wall_s, dump) = run_replay(&replay_cfg, &trace, None)?;
+    let (_, _, dump2) = run_replay(&replay_cfg, &trace, None)?;
+    anyhow::ensure!(
+        dump == dump2,
+        "replay determinism violated: two replays of {} produced different outcome dumps",
+        trace_path.display()
+    );
+
+    let snap = bench_snapshot(&metrics, wall_s, 9, "measured: benches/bench_serving.rs");
+    check_bench(&snap).map_err(|e| anyhow::anyhow!("snapshot fails its own schema: {e}"))?;
+    std::fs::write("bench.json", snap.to_string() + "\n")?;
+    let _ = std::fs::remove_file(&trace_path);
+
+    println!(
+        "replayed {} entries twice, dumps byte-identical; wrote bench.json",
+        trace.len()
+    );
+    println!(
+        "{}",
+        metrics.render_table("bench_serving: replayed 200-query workload").render()
+    );
+    Ok(())
+}

@@ -11,6 +11,8 @@
 
 use spa_gcn::coordinator::corpus::Corpus;
 use spa_gcn::coordinator::pipeline::PipelineConfig;
+use spa_gcn::coordinator::server::{run_replay, serve_workload, ServeConfig};
+use spa_gcn::coordinator::trace::{bench_p50_e2e, bench_snapshot, check_bench, Trace};
 use spa_gcn::graph::encode::{encode, PackedBatch};
 use spa_gcn::graph::generate::{generate, perturb, Family};
 use spa_gcn::graph::Graph;
@@ -142,6 +144,43 @@ fn main() -> anyhow::Result<()> {
         "front door: {} accepted, {} throttled, {} shed, {} degraded",
         net.accepted, net.throttled, net.shed_deadline, net.degraded
     );
+    // 8. Deterministic workload record/replay + the serving bench
+    // snapshot (DESIGN.md S19). Operationally:
+    //     spa-gcn serve  --engine native --queries 200 --corpus 64 --record trace.jsonl
+    //     spa-gcn replay --trace trace.jsonl --selfcheck --bench-out bench.json
+    //     spa-gcn bench-check bench.json --baseline BENCH_9.json
+    // Here in-process: record a small corpus-search workload, replay it
+    // twice (byte-identical outcome dumps — the CI determinism gate),
+    // and read the bench-serving-v1 snapshot off the replay's metrics.
+    let trace_path = std::env::temp_dir()
+        .join(format!("spa-gcn-quickstart-{}.trace.jsonl", std::process::id()));
+    let serve_cfg = ServeConfig {
+        engines: vec![EngineKind::Native],
+        queries: 24,
+        corpus_size: 16,
+        topk: 3,
+        seed: 7,
+        record: Some(trace_path.clone()),
+        ..ServeConfig::default()
+    };
+    serve_workload(&serve_cfg)?;
+    let trace =
+        Trace::read(&trace_path).map_err(|e| anyhow::anyhow!("reading recorded trace: {e}"))?;
+    let replay_cfg = ServeConfig { record: None, ..serve_cfg };
+    let (replay_metrics, wall_s, dump) = run_replay(&replay_cfg, &trace, None)?;
+    let (_, _, dump2) = run_replay(&replay_cfg, &trace, None)?;
+    anyhow::ensure!(dump == dump2, "replay determinism violated: outcome dumps differ");
+    let snap = bench_snapshot(&replay_metrics, wall_s, 9, "measured: quickstart step 8");
+    check_bench(&snap).map_err(|e| anyhow::anyhow!("bench snapshot schema: {e}"))?;
+    println!(
+        "record/replay: {} queries recorded, 2 replays byte-identical; \
+         bench p50 e2e {:.3} ms, throughput {:.0} q/s",
+        trace.len(),
+        bench_p50_e2e(&snap).unwrap_or(0.0),
+        snap.get("throughput_qps").as_f64().unwrap_or(0.0)
+    );
+    let _ = std::fs::remove_file(&trace_path);
+
     println!("quickstart OK");
     Ok(())
 }

@@ -33,6 +33,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("NET-SINGLE-SUBMITTER", "the listener submits only through the admission submit_handle"),
     ("NET-QUERY-CONFINED", "only net/admission.rs constructs Query values"),
     ("NET-DROP-NEWEST", "the admission queue keeps SendPolicy::DropNewest"),
+    ("TRACE-CONFINED", "only coordinator/trace.rs constructs TraceEntry values (TraceWriter/Trace::parse are the codec)"),
     ("PANIC-FREE", "serving threads (net/, coordinator pipeline/channel/batcher/router) carry no panic-capable tokens"),
     ("LOCK-ORDER", "the per-function lock/channel acquisition graph has no cross-module cycle"),
     ("WAIVER-MALFORMED", "every waiver entry parses and carries a justification"),
@@ -147,6 +148,7 @@ pub fn run(model: &RepoModel, waivers_text: &str) -> Vec<Finding> {
     layering(model, &mut raw);
     kernel_dispatch(model, &mut raw);
     net_front_door(model, &mut raw);
+    trace_confined(model, &mut raw);
     panic_free(model, &mut raw);
     lock_order(model, &mut raw);
 
@@ -535,6 +537,37 @@ fn net_front_door(m: &RepoModel, out: &mut Vec<Finding>) {
         &["SendPolicy", ":", ":", "DropNewest"],
         "NET-DROP-NEWEST",
         "admission queue lost its DropNewest overload policy",
+        out,
+    );
+}
+
+/// TRACE-CONFINED (DESIGN.md S19): trace entries are born in exactly
+/// one place — the parser/writer in coordinator/trace.rs. Everyone
+/// else records through `TraceRecorder`/`TraceWriter` and consumes
+/// through `Trace::read`, so the workload wire format has a single
+/// hostile-input-safe codec (type *mentions* stay legal; construction
+/// and associated-path calls are what's banned, test scope included —
+/// a test hand-rolling entries would bypass the codec's validation).
+fn trace_confined(m: &RepoModel, out: &mut Vec<Finding>) {
+    const TRACE_RS: &str = "rust/src/coordinator/trace.rs";
+    for f in m.files.iter().filter(|f| f.path != TRACE_RS) {
+        for seq in [&["TraceEntry", ":", ":"][..], &["TraceEntry", "{"][..]] {
+            for line in f.find_seq(seq, true) {
+                out.push(Finding::new(
+                    "TRACE-CONFINED",
+                    &f.path,
+                    line,
+                    "trace entry construction leaked out of coordinator/trace.rs".into(),
+                ));
+            }
+        }
+    }
+    require_seq(
+        m,
+        TRACE_RS,
+        &["impl", "TraceRecorder"],
+        "TRACE-CONFINED",
+        "the TraceRecorder tap disappeared from coordinator/trace.rs",
         out,
     );
 }
@@ -1046,6 +1079,36 @@ mod tests {
     }
 
     #[test]
+    fn trace_construction_confined() {
+        let literal = lint(vec![(
+            "rust/src/coordinator/server.rs",
+            "fn f() { let e = TraceEntry { id: 1 }; }",
+        )]);
+        assert!(rules_fired(&literal).contains(&"TRACE-CONFINED"), "{literal:?}");
+        let assoc = lint(vec![(
+            "rust/src/net/admission.rs",
+            "fn g() { let e = TraceEntry::synthetic(1); }",
+        )]);
+        assert!(rules_fired(&assoc).contains(&"TRACE-CONFINED"), "{assoc:?}");
+        // test scope is NOT exempt: hand-rolled entries bypass the codec
+        let in_test = lint(vec![(
+            "rust/src/coordinator/server.rs",
+            "#[cfg(test)] mod tests { fn t() { let e = TraceEntry { id: 1 }; } }",
+        )]);
+        assert!(rules_fired(&in_test).contains(&"TRACE-CONFINED"), "{in_test:?}");
+        // trace.rs itself constructs legally; type mentions stay legal
+        let ok = lint(vec![
+            (
+                "rust/src/coordinator/trace.rs",
+                "pub struct TraceEntry { id: u64 }\n\
+                 impl TraceRecorder { fn rec() { let e = TraceEntry { id: 1 }; } }",
+            ),
+            ("rust/src/coordinator/server.rs", "fn f(es: &[TraceEntry]) {}"),
+        ]);
+        assert!(!rules_fired(&ok).contains(&"TRACE-CONFINED"), "{ok:?}");
+    }
+
+    #[test]
     fn every_rule_id_is_documented() {
         let ids: BTreeSet<&str> = RULES.iter().map(|(id, _)| *id).collect();
         for id in [
@@ -1053,6 +1116,7 @@ mod tests {
             "SPARSE-DENSE-SINGLE",
             "DET-RANK-SITE",
             "ARCH-DAG",
+            "TRACE-CONFINED",
             "PANIC-FREE",
             "LOCK-ORDER",
             "WAIVER-STALE",

@@ -13,3 +13,4 @@ pub mod pipeline;
 pub mod query;
 pub mod router;
 pub mod server;
+pub mod trace;

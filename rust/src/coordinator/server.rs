@@ -28,12 +28,16 @@ use crate::runtime::embed_cache::{EmbedCache, DEFAULT_CAPACITY};
 use crate::runtime::{EngineBuilder, EngineFactory, EngineKind};
 use crate::util::rng::Rng;
 
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
 use super::batcher::BatchPolicy;
 use super::corpus::Corpus;
 use super::load::{poisson_schedule, Pacer};
 use super::metrics::Metrics;
-use super::pipeline::{Pipeline, PipelineConfig};
+use super::pipeline::{Pipeline, PipelineConfig, ResultTap};
 use super::query::Query;
+use super::trace::{outcome_line, Trace, TraceHeader, TraceRecorder};
 
 /// Serving configuration (CLI `spa-gcn serve`).
 #[derive(Debug, Clone)]
@@ -64,6 +68,9 @@ pub struct ServeConfig {
     pub corpus_size: usize,
     /// How many ranked candidates each corpus query returns (`--topk K`).
     pub topk: usize,
+    /// Record every admitted query (with its arrival offset) to this
+    /// trace file (`--record PATH`, DESIGN.md S19). `None` = no tap.
+    pub record: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -79,6 +86,7 @@ impl Default for ServeConfig {
             pipeline_depth: 2,
             corpus_size: 0,
             topk: 10,
+            record: None,
         }
     }
 }
@@ -188,6 +196,32 @@ fn run_serve(cfg: &ServeConfig, pace_qps: Option<f64>) -> Result<(Metrics, f64, 
     let model_cfg = meta.config.clone();
     let (n_max, num_labels) = (model_cfg.n_max, model_cfg.num_labels);
 
+    // The trace recorder taps the submit path (DESIGN.md S19): its
+    // header carries the synthesis recipe, so `spa-gcn replay` can
+    // rebuild the same corpus without embedding it in the trace.
+    let recorder = match &cfg.record {
+        Some(path) => Some(
+            TraceRecorder::create(
+                path,
+                &TraceHeader {
+                    seed: cfg.seed,
+                    corpus_size: cfg.corpus_size,
+                    topk: cfg.topk,
+                    n_max,
+                    num_labels,
+                },
+            )
+            .map_err(|e| anyhow::anyhow!("creating trace recorder: {e}"))?,
+        ),
+        None => None,
+    };
+    let tap_query = |q: Query| {
+        if let Some(rec) = &recorder {
+            rec.record_query("cli", &q);
+        }
+        q
+    };
+
     let mut rng = Rng::new(cfg.seed);
     let pipeline = Pipeline::start(model_cfg, cfg.lane_factories(), cfg.pipeline_config());
 
@@ -209,7 +243,8 @@ fn run_serve(cfg: &ServeConfig, pace_qps: Option<f64>) -> Result<(Metrics, f64, 
         let k = cfg.topk;
         let queries = graphs
             .into_iter()
-            .map(|(id, g)| Query::topk(id, g, Arc::clone(&corpus), k));
+            .map(|(id, g)| Query::topk(id, g, Arc::clone(&corpus), k))
+            .map(tap_query);
         // The Poisson schedule draws AFTER workload synthesis, keeping
         // the seed → workload mapping identical across paced and
         // unpaced runs (and across releases).
@@ -221,22 +256,121 @@ fn run_serve(cfg: &ServeConfig, pace_qps: Option<f64>) -> Result<(Metrics, f64, 
         // first query, not from whenever the slowest lane finished
         // loading. Failed lanes publish too: this never hangs.
         pipeline.wait_ready();
+        // Recorded offsets measure arrival into the serving window, the
+        // same clock the report's wall time uses.
+        if let Some(rec) = &recorder {
+            rec.rebase();
+        }
         let t0 = Instant::now();
         (pump(&pipeline, queries, schedule), t0)
     } else {
         // Classic workload: AIDS-like random pairs (paper §5.1).
         let db = GraphDb::synthesize(&mut rng, Family::Aids, 512, n_max, num_labels);
         let pairs = random_pairs(&mut rng, &db, cfg.queries);
-        let queries = pairs.into_iter().map(|q| Query::new(q.id, q.g1, q.g2));
+        let queries = pairs
+            .into_iter()
+            .map(|q| Query::new(q.id, q.g1, q.g2))
+            .map(tap_query);
         let schedule = pace_qps.map(|rate| poisson_schedule(&mut rng, rate, cfg.queries));
         // Same handshake wait as the corpus branch: steady-state
         // serving is what's measured, not engine construction.
         pipeline.wait_ready();
+        if let Some(rec) = &recorder {
+            rec.rebase();
+        }
         let t0 = Instant::now();
         (pump(&pipeline, queries, schedule), t0)
     };
     let metrics = pipeline.finish();
+    if let Some(rec) = &recorder {
+        anyhow::ensure!(rec.finish(), "trace recording failed (unwritable --record path?)");
+    }
     Ok((metrics, t0.elapsed().as_secs_f64(), max_late))
+}
+
+/// Replay a recorded trace through the serving pipeline: the recorded
+/// arrival schedule replaces `poisson_schedule` synthesis, the recorded
+/// payloads replace workload generation, and every outcome is collected
+/// through the responder tap into a deterministic dump (sorted
+/// [`outcome_line`]s) — two replays of the same trace must return
+/// byte-identical dumps (the CI determinism gate, DESIGN.md S19).
+///
+/// `speed` scales the recorded schedule (2.0 = twice as fast); `None`
+/// floods the pipeline as fast as it admits (closed-loop).
+pub fn run_replay(
+    cfg: &ServeConfig,
+    trace: &Trace,
+    speed: Option<f64>,
+) -> Result<(Metrics, f64, String)> {
+    anyhow::ensure!(!cfg.engines.is_empty(), "replay needs at least one engine kind");
+    let meta = ArtifactsMeta::load(&cfg.artifacts_dir)
+        .context("loading artifacts (run `make artifacts`)")?;
+    let model_cfg = meta.config.clone();
+    let (n_max, num_labels) = (model_cfg.n_max, model_cfg.num_labels);
+    let h = trace.header();
+
+    // Rebuild the recorded corpus from the header's recipe — the exact
+    // synthesis `run_serve` performs, so corpus ids and candidate
+    // contents match the recorded run.
+    let mut corpora: BTreeMap<String, Arc<Corpus>> = BTreeMap::new();
+    if h.corpus_size > 0 {
+        let mut rng = Rng::new(h.seed);
+        let db = GraphDb::synthesize(&mut rng, Family::Aids, h.corpus_size, n_max, num_labels);
+        let corpus = Arc::new(
+            Corpus::from_db("aids-synth", &db, n_max, num_labels)
+                .map_err(|e| anyhow::anyhow!("encoding corpus: {e}"))?,
+        );
+        corpora.insert(corpus.name().to_string(), corpus);
+    }
+    // Fail fast on unknown corpus names, so the schedule/query pairing
+    // below can't silently skip entries.
+    for e in trace.entries() {
+        if let Some(name) = e.corpus() {
+            anyhow::ensure!(
+                corpora.contains_key(name),
+                "trace entry {} names corpus '{name}' this replay can't rebuild",
+                e.id()
+            );
+        }
+    }
+
+    let outcomes: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::with_capacity(trace.len())));
+    let tap: ResultTap = {
+        let lines = Arc::clone(&outcomes);
+        Arc::new(move |r| {
+            lines
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push(outcome_line(r));
+        })
+    };
+    let pipeline =
+        Pipeline::start_with_tap(model_cfg, cfg.lane_factories(), cfg.pipeline_config(), Some(tap));
+
+    let schedule = match speed {
+        Some(s) => {
+            anyhow::ensure!(s > 0.0 && s.is_finite(), "replay speed must be a positive number");
+            Some(trace.entries().iter().map(|e| e.offset().div_f64(s)).collect())
+        }
+        None => None,
+    };
+    // Queries are rebuilt lazily at submit time (same reason run_serve
+    // builds them lazily: the `submitted` stamp is the arrival clock).
+    // to_query can't fail here — corpus names were checked above.
+    let queries = trace.entries().iter().filter_map(|e| e.to_query(&corpora).ok());
+    pipeline.wait_ready();
+    let t0 = Instant::now();
+    pump(&pipeline, queries, schedule);
+    let metrics = pipeline.finish();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut lines = std::mem::take(&mut *outcomes.lock().unwrap_or_else(|p| p.into_inner()));
+    lines.sort();
+    let mut dump = lines.join("\n");
+    if !dump.is_empty() {
+        dump.push('\n');
+    }
+    Ok((metrics, wall, dump))
 }
 
 /// Closed-loop serving: flood the pipeline with a synthetic workload and
@@ -469,6 +603,47 @@ mod tests {
         // builds.
         let p50: f64 = t.rows[5][1].parse().unwrap();
         assert!(p50 < 200.0, "p50 {p50} ms too high for light load");
+    }
+
+    #[test]
+    fn record_then_replay_is_deterministic() {
+        let Some(dir) = artifacts() else { return };
+        let trace_path = std::env::temp_dir()
+            .join(format!("spa-gcn-replay-test-{}.trace", std::process::id()));
+        let cfg = ServeConfig {
+            artifacts_dir: dir,
+            engines: vec![EngineKind::Native],
+            queries: 12,
+            workers: 2,
+            batch_max: 4,
+            batch_timeout_us: 100,
+            seed: 13,
+            corpus_size: 16,
+            topk: 3,
+            record: Some(trace_path.clone()),
+            ..ServeConfig::default()
+        };
+        serve_workload(&cfg).unwrap();
+        let trace = Trace::read(&trace_path).unwrap();
+        std::fs::remove_file(&trace_path).ok();
+        assert_eq!(trace.len(), 12, "every submitted query recorded");
+        assert_eq!(trace.header().corpus_size, 16);
+
+        let replay_cfg = ServeConfig { record: None, ..cfg };
+        let (m1, _, dump1) = run_replay(&replay_cfg, &trace, None).unwrap();
+        let (m2, _, dump2) = run_replay(&replay_cfg, &trace, None).unwrap();
+        assert_eq!(m1.scored, 12, "replay scores every recorded query");
+        assert_eq!(dump1, dump2, "same trace, byte-identical outcome dumps");
+        assert_eq!(
+            m1.gcn_forwards.mean(),
+            m2.gcn_forwards.mean(),
+            "identical forwards-per-query telemetry"
+        );
+        // The dump carries one line per recorded query, id-sorted.
+        assert_eq!(dump1.lines().count(), 12, "{dump1}");
+        // Paced replay serves the same outcomes as the flood replay.
+        let (_, _, dump3) = run_replay(&replay_cfg, &trace, Some(1000.0)).unwrap();
+        assert_eq!(dump1, dump3, "pacing must not change scores");
     }
 
     #[test]

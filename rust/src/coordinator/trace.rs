@@ -1,0 +1,1187 @@
+//! Deterministic workload traces: record what the serving path admitted,
+//! replay it bit-for-bit, snapshot the result (DESIGN.md S19).
+//!
+//! The paper's argument is measured speedup on a serving-shaped workload
+//! (Table 6 / Fig. 11), so the perf trajectory needs a *reproducible*
+//! workload, not a fresh Poisson draw per run. This module is the whole
+//! trace story in one place:
+//!
+//! * **Format** — line-delimited JSON (`spa-gcn-trace-v1`): one header
+//!   line carrying the synthesis recipe (seed, corpus size, model
+//!   shapes), then one object per admitted query with its arrival offset
+//!   (µs), client id, payload kind and inline graphs. Hand-rolled on
+//!   [`util::json`] like the wire protocol — no serde — and
+//!   hostile-input-safe the same way `net/wire.rs` is: every field is
+//!   validated before any [`Graph`] is constructed, line length is
+//!   bounded, and malformed input surfaces as a typed [`TraceError`],
+//!   never a panic.
+//! * **Record** — [`TraceRecorder`], the tap `run_serve` and the net
+//!   front stage write through (`serve --record PATH`). Append-only,
+//!   lock-per-line, and failure-latching: a full disk degrades the trace,
+//!   never the serving path.
+//! * **Replay** — [`Trace`] parses a recorded file back into entries;
+//!   [`TraceEntry::to_query`] rebuilds the exact [`Query`] stream for
+//!   `run_replay`, which substitutes the recorded schedule for
+//!   `poisson_schedule` synthesis. [`outcome_line`] renders each result
+//!   as a deterministic text line (`f32::to_bits`, zero-padded ids) so
+//!   two replays diff byte-for-byte.
+//! * **Snapshot** — [`bench_snapshot`] serializes a [`Metrics`] into the
+//!   `bench-serving-v1` JSON schema (`BENCH_<n>.json`, CI `bench.json`);
+//!   [`check_bench`] validates that schema for `spa-gcn bench-check`,
+//!   and [`bench_is_estimated`] keeps analytic estimates from ever
+//!   serving as regression baselines.
+//!
+//! Trace entries are constructed *only* here (the `TRACE-CONFINED` lint
+//! rule, DESIGN.md S18): consumers read entries through accessors and
+//! convert them with [`TraceEntry::to_query`], so the format can evolve
+//! without chasing construction sites across the tree.
+//!
+//! [`util::json`]: crate::util::json
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufRead as _, BufReader, BufWriter, Read as _, Write as _};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::graph::Graph;
+use crate::util::json::{self, Json};
+
+use super::corpus::Corpus;
+use super::metrics::Metrics;
+use super::query::{Outcome, Query, QueryPayload, QueryResult};
+
+/// Trace format version tag, first field checked on the header line.
+pub const TRACE_SCHEMA: &str = "spa-gcn-trace-v1";
+
+/// Serving-bench snapshot schema tag (`BENCH_<n>.json`, CI `bench.json`).
+pub const BENCH_SCHEMA: &str = "bench-serving-v1";
+
+/// Largest node count accepted from a trace graph — same spirit as the
+/// wire codec's node cap: bound allocation before construction.
+pub const MAX_TRACE_NODES: usize = 4096;
+
+/// Longest accepted trace line in bytes. Generous (a recorded graph near
+/// the wire frame cap re-encodes at about the same size) but bounded, so
+/// a hostile file can't make the reader buffer a gigabyte "line".
+pub const MAX_TRACE_LINE: usize = 4 << 20;
+
+/// Largest top-k depth accepted from a trace (the pipeline clamps to the
+/// corpus anyway; this bounds the field before it goes anywhere).
+pub const MAX_TRACE_TOPK: usize = 1 << 20;
+
+/// Exact-integer ceiling for JSON numbers (2^53): ids and offsets above
+/// this would silently lose precision in an f64, so the parser rejects
+/// them and the recorder clamps.
+const MAX_JSON_INT: f64 = 9_007_199_254_740_992.0;
+
+/// Typed trace codec failure. Like `WireError`: every variant names what
+/// was wrong and where, [`code`](TraceError::code) gives CI-greppable
+/// tags, and nothing in the parse path panics on hostile input.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceError {
+    /// Underlying file I/O failed.
+    Io(String),
+    /// The file ended before a header line was seen.
+    MissingHeader,
+    /// The header's `schema` field is missing or names another format.
+    BadSchema {
+        /// What the header actually said (empty if missing).
+        found: String,
+    },
+    /// A line exceeded [`MAX_TRACE_LINE`].
+    LineTooLong {
+        /// 1-based line number.
+        line: usize,
+        /// Observed length in bytes.
+        len: usize,
+    },
+    /// A line is not a well-formed JSON object (truncation lands here).
+    Parse {
+        /// 1-based line number.
+        line: usize,
+        /// Underlying parser message.
+        msg: String,
+    },
+    /// A field is missing, mistyped or out of range.
+    Field {
+        /// 1-based line number.
+        line: usize,
+        /// Field name.
+        field: &'static str,
+        /// What was wrong with it.
+        msg: String,
+    },
+    /// An inline graph failed validation (shape, labels, endpoints).
+    BadGraph {
+        /// 1-based line number.
+        line: usize,
+        /// What was wrong with it.
+        msg: String,
+    },
+    /// A top-k entry names a corpus the replay environment doesn't have.
+    UnknownCorpus {
+        /// The entry's query id.
+        id: u64,
+        /// The corpus name it asked for.
+        corpus: String,
+    },
+}
+
+impl TraceError {
+    /// Stable machine-readable tag per variant.
+    pub fn code(&self) -> &'static str {
+        match self {
+            TraceError::Io(_) => "io",
+            TraceError::MissingHeader => "missing_header",
+            TraceError::BadSchema { .. } => "bad_schema",
+            TraceError::LineTooLong { .. } => "line_too_long",
+            TraceError::Parse { .. } => "parse",
+            TraceError::Field { .. } => "field",
+            TraceError::BadGraph { .. } => "bad_graph",
+            TraceError::UnknownCorpus { .. } => "unknown_corpus",
+        }
+    }
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Io(e) => write!(f, "trace i/o: {e}"),
+            TraceError::MissingHeader => write!(f, "trace has no header line"),
+            TraceError::BadSchema { found } => {
+                write!(f, "trace schema is '{found}', expected '{TRACE_SCHEMA}'")
+            }
+            TraceError::LineTooLong { line, len } => {
+                write!(f, "line {line}: {len} bytes exceeds the {MAX_TRACE_LINE}-byte cap")
+            }
+            TraceError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+            TraceError::Field { line, field, msg } => {
+                write!(f, "line {line}: field '{field}': {msg}")
+            }
+            TraceError::BadGraph { line, msg } => write!(f, "line {line}: graph: {msg}"),
+            TraceError::UnknownCorpus { id, corpus } => {
+                write!(f, "entry {id} names unknown corpus '{corpus}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// Trace header: the synthesis recipe replay needs to rebuild the exact
+/// serving environment (the `aids-synth` corpus in particular) without
+/// embedding it in the trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceHeader {
+    /// Workload RNG seed of the recorded run.
+    pub seed: u64,
+    /// Corpus size of the recorded run (0 = pairwise workload, no
+    /// corpus to rebuild).
+    pub corpus_size: usize,
+    /// Default top-k depth of the recorded run (informational; each
+    /// entry carries its own `k`).
+    pub topk: usize,
+    /// Model `n_max` the recorded run served with.
+    pub n_max: usize,
+    /// Model label-vocabulary size of the recorded run.
+    pub num_labels: usize,
+}
+
+/// What one recorded query asked for. Private on purpose: construction
+/// stays inside this module (TRACE-CONFINED) and consumers go through
+/// [`TraceEntry`] accessors.
+#[derive(Debug, Clone)]
+enum Payload {
+    Pair { g1: Graph, g2: Graph },
+    TopK { graph: Graph, corpus: String, k: usize },
+}
+
+/// One recorded query: arrival offset, origin client, payload.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    id: u64,
+    offset_us: u64,
+    client: String,
+    payload: Payload,
+}
+
+impl TraceEntry {
+    /// The recorded query id (echoed into replayed results).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Arrival offset from the trace epoch, µs.
+    pub fn offset_us(&self) -> u64 {
+        self.offset_us
+    }
+
+    /// Arrival offset as a [`Duration`] (the replay schedule unit).
+    pub fn offset(&self) -> Duration {
+        Duration::from_micros(self.offset_us)
+    }
+
+    /// The recorded client id (`"cli"` for in-process serving).
+    pub fn client(&self) -> &str {
+        &self.client
+    }
+
+    /// Payload kind tag, `"pair"` or `"topk"`.
+    pub fn kind(&self) -> &'static str {
+        match self.payload {
+            Payload::Pair { .. } => "pair",
+            Payload::TopK { .. } => "topk",
+        }
+    }
+
+    /// The corpus a top-k entry ranks against (`None` for pairs).
+    pub fn corpus(&self) -> Option<&str> {
+        match &self.payload {
+            Payload::TopK { corpus, .. } => Some(corpus),
+            Payload::Pair { .. } => None,
+        }
+    }
+
+    /// Rebuild the pipeline [`Query`] this entry recorded. Top-k entries
+    /// resolve their corpus by name against `corpora`; the `submitted`
+    /// timestamp is stamped at call time, so convert at submit time to
+    /// keep queue-wait metrics honest (same reason `run_serve` builds
+    /// queries lazily).
+    pub fn to_query(
+        &self,
+        corpora: &BTreeMap<String, Arc<Corpus>>,
+    ) -> Result<Query, TraceError> {
+        match &self.payload {
+            Payload::Pair { g1, g2 } => Ok(Query::new(self.id, g1.clone(), g2.clone())),
+            Payload::TopK { graph, corpus, k } => match corpora.get(corpus) {
+                Some(c) => Ok(Query::topk(self.id, graph.clone(), Arc::clone(c), *k)),
+                None => Err(TraceError::UnknownCorpus {
+                    id: self.id,
+                    corpus: corpus.clone(),
+                }),
+            },
+        }
+    }
+}
+
+/// A parsed trace: header plus entries in recorded (arrival) order.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    header: TraceHeader,
+    entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    /// Parse a whole trace document (tests, in-memory round trips).
+    pub fn parse(text: &str) -> Result<Trace, TraceError> {
+        let mut b = TraceBuilder::default();
+        for (i, line) in text.lines().enumerate() {
+            b.line(i + 1, line)?;
+        }
+        b.finish()
+    }
+
+    /// Read a trace file, streaming line by line so memory stays bounded
+    /// by [`MAX_TRACE_LINE`] plus the parsed entries.
+    pub fn read(path: &Path) -> Result<Trace, TraceError> {
+        let file = File::open(path).map_err(|e| TraceError::Io(format!("{}: {e}", path.display())))?;
+        let mut reader = BufReader::new(file);
+        let mut b = TraceBuilder::default();
+        let mut buf = Vec::new();
+        let mut line_no = 0usize;
+        loop {
+            buf.clear();
+            // Bounded read: stop at the cap + 1 so an endless "line"
+            // can't grow the buffer past the documented limit.
+            let n = (&mut reader)
+                .take(MAX_TRACE_LINE as u64 + 1)
+                .read_until(b'\n', &mut buf)
+                .map_err(|e| TraceError::Io(e.to_string()))?;
+            if n == 0 {
+                break;
+            }
+            line_no += 1;
+            if buf.len() > MAX_TRACE_LINE {
+                return Err(TraceError::LineTooLong { line: line_no, len: buf.len() });
+            }
+            let text = std::str::from_utf8(&buf).map_err(|e| TraceError::Parse {
+                line: line_no,
+                msg: format!("not utf-8: {e}"),
+            })?;
+            b.line(line_no, text)?;
+        }
+        b.finish()
+    }
+
+    /// The synthesis recipe recorded on the header line.
+    pub fn header(&self) -> &TraceHeader {
+        &self.header
+    }
+
+    /// Entries in recorded arrival order.
+    pub fn entries(&self) -> &[TraceEntry] {
+        &self.entries
+    }
+
+    /// Entry count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the trace recorded no queries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Incremental line-at-a-time parser shared by [`Trace::parse`] and
+/// [`Trace::read`].
+#[derive(Debug, Default)]
+struct TraceBuilder {
+    header: Option<TraceHeader>,
+    entries: Vec<TraceEntry>,
+}
+
+impl TraceBuilder {
+    fn line(&mut self, line_no: usize, raw: &str) -> Result<(), TraceError> {
+        let text = raw.trim();
+        if text.is_empty() {
+            return Ok(());
+        }
+        if text.len() > MAX_TRACE_LINE {
+            return Err(TraceError::LineTooLong { line: line_no, len: text.len() });
+        }
+        let v = json::parse(text).map_err(|msg| TraceError::Parse { line: line_no, msg })?;
+        if v.as_obj().is_none() {
+            return Err(TraceError::Parse {
+                line: line_no,
+                msg: "line is not a JSON object".into(),
+            });
+        }
+        match self.header {
+            None => self.header = Some(header_from_json(&v)?),
+            Some(_) => self.entries.push(entry_from_json(&v, line_no)?),
+        }
+        Ok(())
+    }
+
+    fn finish(self) -> Result<Trace, TraceError> {
+        match self.header {
+            Some(header) => Ok(Trace { header, entries: self.entries }),
+            None => Err(TraceError::MissingHeader),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serialization (one canonical text form: BTreeMap key order + compact
+// writer, so identical entries always serialize to identical bytes).
+
+fn clamp_int(x: u64) -> f64 {
+    (x as f64).min(MAX_JSON_INT)
+}
+
+fn graph_to_json(g: &Graph) -> Json {
+    json::obj(vec![
+        ("n", json::num(g.num_nodes() as f64)),
+        (
+            "labels",
+            json::arr(g.labels().iter().map(|&l| json::num(l as f64)).collect()),
+        ),
+        (
+            "edges",
+            json::arr(
+                g.edges()
+                    .iter()
+                    .map(|&(u, v)| json::arr(vec![json::num(u as f64), json::num(v as f64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn header_line(h: &TraceHeader) -> String {
+    json::obj(vec![
+        ("corpus_size", json::num(h.corpus_size as f64)),
+        ("n_max", json::num(h.n_max as f64)),
+        ("num_labels", json::num(h.num_labels as f64)),
+        ("schema", json::s(TRACE_SCHEMA)),
+        ("seed", json::num(clamp_int(h.seed))),
+        ("topk", json::num(h.topk as f64)),
+    ])
+    .to_string()
+}
+
+fn pair_line(client: &str, id: u64, offset_us: u64, g1: &Graph, g2: &Graph) -> String {
+    json::obj(vec![
+        ("client", json::s(client)),
+        ("graphs", json::arr(vec![graph_to_json(g1), graph_to_json(g2)])),
+        ("id", json::num(clamp_int(id))),
+        ("kind", json::s("pair")),
+        ("offset_us", json::num(clamp_int(offset_us))),
+    ])
+    .to_string()
+}
+
+fn topk_line(client: &str, id: u64, offset_us: u64, g: &Graph, corpus: &str, k: usize) -> String {
+    json::obj(vec![
+        ("client", json::s(client)),
+        ("corpus", json::s(corpus)),
+        ("graphs", json::arr(vec![graph_to_json(g)])),
+        ("id", json::num(clamp_int(id))),
+        ("k", json::num(k as f64)),
+        ("kind", json::s("topk")),
+        ("offset_us", json::num(clamp_int(offset_us))),
+    ])
+    .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Parsing (validate everything before constructing anything).
+
+fn field_u64(v: &Json, field: &'static str, line: usize) -> Result<u64, TraceError> {
+    match v.get(field).as_f64() {
+        Some(x) if x >= 0.0 && x.fract() == 0.0 && x <= MAX_JSON_INT => Ok(x as u64),
+        Some(_) => Err(TraceError::Field {
+            line,
+            field,
+            msg: "not an exact nonnegative integer".into(),
+        }),
+        None => Err(TraceError::Field { line, field, msg: "missing or not a number".into() }),
+    }
+}
+
+fn field_usize(v: &Json, field: &'static str, line: usize) -> Result<usize, TraceError> {
+    Ok(field_u64(v, field, line)? as usize)
+}
+
+fn field_str(v: &Json, field: &'static str, line: usize) -> Result<String, TraceError> {
+    v.get(field)
+        .as_str()
+        .map(str::to_string)
+        .ok_or(TraceError::Field { line, field, msg: "missing or not a string".into() })
+}
+
+fn header_from_json(v: &Json) -> Result<TraceHeader, TraceError> {
+    let found = v.get("schema").as_str().unwrap_or_default();
+    if found != TRACE_SCHEMA {
+        return Err(TraceError::BadSchema { found: found.to_string() });
+    }
+    Ok(TraceHeader {
+        seed: field_u64(v, "seed", 1)?,
+        corpus_size: field_usize(v, "corpus_size", 1)?,
+        topk: field_usize(v, "topk", 1)?,
+        n_max: field_usize(v, "n_max", 1)?,
+        num_labels: field_usize(v, "num_labels", 1)?,
+    })
+}
+
+fn graph_from_json(v: &Json, line: usize) -> Result<Graph, TraceError> {
+    if v.as_obj().is_none() {
+        return Err(TraceError::BadGraph { line, msg: "graph must be an object".into() });
+    }
+    let n = match v.get("n").as_f64() {
+        Some(x) if x >= 0.0 && x.fract() == 0.0 && x <= MAX_TRACE_NODES as f64 => x as usize,
+        Some(_) => {
+            return Err(TraceError::BadGraph {
+                line,
+                msg: format!("n must be an integer in 0..={MAX_TRACE_NODES}"),
+            })
+        }
+        None => return Err(TraceError::BadGraph { line, msg: "n missing or not a number".into() }),
+    };
+    let labels_json = v.get("labels").as_arr().ok_or_else(|| TraceError::BadGraph {
+        line,
+        msg: "labels missing or not an array".into(),
+    })?;
+    if labels_json.len() != n {
+        return Err(TraceError::BadGraph {
+            line,
+            msg: format!("labels has {} entries, n is {n}", labels_json.len()),
+        });
+    }
+    let mut labels = Vec::with_capacity(n);
+    for l in labels_json {
+        match l.as_f64() {
+            Some(x) if x >= 0.0 && x.fract() == 0.0 && x <= f64::from(u16::MAX) => {
+                labels.push(x as u16)
+            }
+            _ => {
+                return Err(TraceError::BadGraph {
+                    line,
+                    msg: "label is not an integer in u16 range".into(),
+                })
+            }
+        }
+    }
+    let edges_json = v.get("edges").as_arr().ok_or_else(|| TraceError::BadGraph {
+        line,
+        msg: "edges missing or not an array".into(),
+    })?;
+    let mut edges = Vec::with_capacity(edges_json.len());
+    for e in edges_json {
+        let pair = match e.as_arr() {
+            Some(p) if p.len() == 2 => p,
+            _ => {
+                return Err(TraceError::BadGraph {
+                    line,
+                    msg: "edge must be a [u, v] pair".into(),
+                })
+            }
+        };
+        let mut uv = [0u16; 2];
+        for (slot, x) in uv.iter_mut().zip(pair) {
+            match x.as_f64() {
+                // Endpoint closure before construction: n <= 4096 so a
+                // valid endpoint always fits u16.
+                Some(f) if f >= 0.0 && f.fract() == 0.0 && (f as usize) < n => *slot = f as u16,
+                _ => {
+                    return Err(TraceError::BadGraph {
+                        line,
+                        msg: format!("edge endpoint out of range 0..{n}"),
+                    })
+                }
+            }
+        }
+        edges.push((uv[0], uv[1]));
+    }
+    // Only now is the data allowed to meet Graph::new's asserts.
+    Ok(Graph::new(n, edges, labels))
+}
+
+fn entry_from_json(v: &Json, line: usize) -> Result<TraceEntry, TraceError> {
+    let id = field_u64(v, "id", line)?;
+    let offset_us = field_u64(v, "offset_us", line)?;
+    let client = field_str(v, "client", line)?;
+    let kind = field_str(v, "kind", line)?;
+    let graphs = v.get("graphs").as_arr().ok_or(TraceError::Field {
+        line,
+        field: "graphs",
+        msg: "missing or not an array".into(),
+    })?;
+    let payload = match kind.as_str() {
+        "pair" => {
+            if graphs.len() != 2 {
+                return Err(TraceError::Field {
+                    line,
+                    field: "graphs",
+                    msg: format!("pair entry needs 2 graphs, has {}", graphs.len()),
+                });
+            }
+            Payload::Pair {
+                g1: graph_from_json(&graphs[0], line)?,
+                g2: graph_from_json(&graphs[1], line)?,
+            }
+        }
+        "topk" => {
+            if graphs.len() != 1 {
+                return Err(TraceError::Field {
+                    line,
+                    field: "graphs",
+                    msg: format!("topk entry needs 1 graph, has {}", graphs.len()),
+                });
+            }
+            let k = field_usize(v, "k", line)?;
+            if k == 0 || k > MAX_TRACE_TOPK {
+                return Err(TraceError::Field {
+                    line,
+                    field: "k",
+                    msg: format!("k must be in 1..={MAX_TRACE_TOPK}"),
+                });
+            }
+            Payload::TopK {
+                graph: graph_from_json(&graphs[0], line)?,
+                corpus: field_str(v, "corpus", line)?,
+                k,
+            }
+        }
+        other => {
+            return Err(TraceError::Field {
+                line,
+                field: "kind",
+                msg: format!("unknown kind '{other}'"),
+            })
+        }
+    };
+    Ok(TraceEntry { id, offset_us, client, payload })
+}
+
+// ---------------------------------------------------------------------------
+// Writing.
+
+/// In-memory trace writer (tests, benches, tools). The recorder below
+/// shares its line formatting, so a written trace and a recorded trace
+/// of the same queries are byte-identical apart from offsets.
+#[derive(Debug)]
+pub struct TraceWriter {
+    text: String,
+}
+
+impl TraceWriter {
+    /// Start a trace document with its header line.
+    pub fn new(header: &TraceHeader) -> TraceWriter {
+        let mut text = header_line(header);
+        text.push('\n');
+        TraceWriter { text }
+    }
+
+    /// Append a pair entry.
+    pub fn pair(&mut self, client: &str, id: u64, offset_us: u64, g1: &Graph, g2: &Graph) {
+        self.text.push_str(&pair_line(client, id, offset_us, g1, g2));
+        self.text.push('\n');
+    }
+
+    /// Append a top-k entry.
+    pub fn topk(&mut self, client: &str, id: u64, offset_us: u64, g: &Graph, corpus: &str, k: usize) {
+        self.text.push_str(&topk_line(client, id, offset_us, g, corpus, k));
+        self.text.push('\n');
+    }
+
+    /// The document so far.
+    pub fn as_text(&self) -> &str {
+        &self.text
+    }
+
+    /// Write the document to a file.
+    pub fn write_to(&self, path: &Path) -> Result<(), TraceError> {
+        std::fs::write(path, &self.text)
+            .map_err(|e| TraceError::Io(format!("{}: {e}", path.display())))
+    }
+}
+
+/// Inner recorder state behind the mutex: the sink, the arrival epoch
+/// and the failure latch.
+#[derive(Debug)]
+struct RecorderSink {
+    out: BufWriter<File>,
+    epoch: Instant,
+    failed: bool,
+}
+
+/// Live trace recorder, shared by the submit loop (`run_serve`) or the
+/// net front stage. One short lock per admitted query; record methods
+/// never block on anything but that lock and never panic (the callers
+/// sit in PANIC-FREE lint scope), and a write failure latches the
+/// recorder off instead of surfacing mid-serve.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    sink: Mutex<RecorderSink>,
+}
+
+impl TraceRecorder {
+    /// Create the trace file and write its header line. The arrival
+    /// epoch starts now; call [`rebase`](TraceRecorder::rebase) when the
+    /// serving window actually opens.
+    pub fn create(path: &Path, header: &TraceHeader) -> Result<TraceRecorder, TraceError> {
+        let file =
+            File::create(path).map_err(|e| TraceError::Io(format!("{}: {e}", path.display())))?;
+        let mut out = BufWriter::new(file);
+        writeln!(out, "{}", header_line(header)).map_err(|e| TraceError::Io(e.to_string()))?;
+        Ok(TraceRecorder {
+            sink: Mutex::new(RecorderSink { out, epoch: Instant::now(), failed: false }),
+        })
+    }
+
+    /// Reset the arrival epoch to now. `run_serve` calls this right
+    /// after the lane handshake, so recorded offsets measure arrival
+    /// into the *serving window*, not time spent synthesizing the
+    /// workload or loading engines.
+    pub fn rebase(&self) {
+        self.sink.lock().unwrap_or_else(|p| p.into_inner()).epoch = Instant::now();
+    }
+
+    /// Record an admitted pair query.
+    pub fn record_pair(&self, client: &str, id: u64, g1: &Graph, g2: &Graph) {
+        self.append(|off| pair_line(client, id, off, g1, g2));
+    }
+
+    /// Record an admitted top-k query.
+    pub fn record_topk(&self, client: &str, id: u64, g: &Graph, corpus: &str, k: usize) {
+        self.append(|off| topk_line(client, id, off, g, corpus, k));
+    }
+
+    /// Record an already-built pipeline query (the in-process serve
+    /// path; the net front stage records payload fields instead, before
+    /// its `Query` exists).
+    pub fn record_query(&self, client: &str, q: &Query) {
+        match &q.payload {
+            QueryPayload::Pair { g1, g2 } => self.record_pair(client, q.id, g1, g2),
+            QueryPayload::TopK { graph, corpus, k } => {
+                self.record_topk(client, q.id, graph, corpus.name(), *k)
+            }
+        }
+    }
+
+    /// Flush buffered lines. Returns false if any write failed along the
+    /// way (the trace file is incomplete).
+    pub fn finish(&self) -> bool {
+        let mut sink = self.sink.lock().unwrap_or_else(|p| p.into_inner());
+        if sink.out.flush().is_err() {
+            sink.failed = true;
+        }
+        !sink.failed
+    }
+
+    fn append(&self, build: impl FnOnce(u64) -> String) {
+        let mut sink = self.sink.lock().unwrap_or_else(|p| p.into_inner());
+        if sink.failed {
+            return;
+        }
+        let off = sink.epoch.elapsed().as_micros().min(MAX_JSON_INT as u128) as u64;
+        let line = build(off);
+        if writeln!(sink.out, "{line}").is_err() {
+            sink.failed = true;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replay outcome dump.
+
+/// Render one query result as a deterministic text line: zero-padded id
+/// first (so a lexicographic sort is an id sort), scores as `f32::to_bits`
+/// hex (bit-identity is the contract, not approximate equality), and the
+/// per-query GCN forward count from the embed-cache telemetry. Two
+/// replays of the same trace must produce byte-identical dumps.
+pub fn outcome_line(r: &QueryResult) -> String {
+    let forwards = r.telemetry.embed_cache.map(|c| c.gcn_forwards()).unwrap_or(0);
+    match &r.outcome {
+        Outcome::Score(s) => {
+            format!("{:020} pair score_bits={:08x} forwards={forwards}", r.id, s.to_bits())
+        }
+        Outcome::TopK(ranked) => {
+            let mut line = format!("{:020} topk forwards={forwards} ranked=", r.id);
+            for (i, (cid, score)) in ranked.iter().enumerate() {
+                if i > 0 {
+                    line.push(',');
+                }
+                let _ = write!(line, "{cid}:{:08x}", score.to_bits());
+            }
+            line
+        }
+        Outcome::Rejected(reason) => format!("{:020} rejected reason={reason}", r.id),
+        Outcome::EngineError(_) => format!("{:020} engine_error", r.id),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving bench snapshot (bench-serving-v1).
+
+/// Serialize a finished run's [`Metrics`] into the `bench-serving-v1`
+/// snapshot (`BENCH_<n>.json`, CI `bench.json`). `wall_s` is the
+/// measured serving window; `provenance` says how the numbers were
+/// obtained (`measured-replay: ...` vs `estimated-analytic: ...` — the
+/// latter is refused as a regression baseline, see
+/// [`bench_is_estimated`]).
+pub fn bench_snapshot(m: &Metrics, wall_s: f64, pr: u64, provenance: &str) -> Json {
+    let wall = wall_s.max(1e-9);
+    let net = m.net.clone().unwrap_or_default();
+    let looked_up = m.embed_hits + m.embed_misses;
+    let hit_rate = if looked_up == 0 { 0.0 } else { m.embed_hits as f64 / looked_up as f64 };
+    json::obj(vec![
+        ("schema", json::s(BENCH_SCHEMA)),
+        ("pr", json::num(pr as f64)),
+        ("provenance", json::s(provenance)),
+        ("scored", json::num(m.scored as f64)),
+        ("topk", json::num(m.topk as f64)),
+        ("rejected", json::num(m.rejected as f64)),
+        ("engine_errors", json::num(m.engine_errors as f64)),
+        ("throughput_qps", json::num(m.scored as f64 / wall)),
+        ("wall_s", json::num(wall_s)),
+        (
+            "latency_ms",
+            json::obj(vec![
+                ("e2e_p50", json::num(m.latency_us.percentile(50.0) / 1e3)),
+                ("e2e_p99", json::num(m.latency_us.percentile(99.0) / 1e3)),
+                ("queue_p50", json::num(m.queue_us.percentile(50.0) / 1e3)),
+                ("queue_p99", json::num(m.queue_us.percentile(99.0) / 1e3)),
+                ("encode_p50", json::num(m.encode_us.percentile(50.0) / 1e3)),
+                ("encode_p99", json::num(m.encode_us.percentile(99.0) / 1e3)),
+                ("execute_p50", json::num(m.execute_us.percentile(50.0) / 1e3)),
+                ("execute_p99", json::num(m.execute_us.percentile(99.0) / 1e3)),
+            ]),
+        ),
+        (
+            "embed_cache",
+            json::obj(vec![
+                ("hit_rate", json::num(hit_rate)),
+                ("entries", json::num(m.embed_entries as f64)),
+            ]),
+        ),
+        ("gcn_forwards_per_query", json::num(m.gcn_forwards.mean())),
+        ("topk_shards_mean", json::num(m.topk_shards.mean())),
+        ("topk_spread_ms_mean", json::num(m.topk_spread_us.mean() / 1e3)),
+        (
+            "net",
+            json::obj(vec![
+                ("accepted", json::num(net.accepted as f64)),
+                ("throttled", json::num(net.throttled as f64)),
+                ("shed_deadline", json::num(net.shed_deadline as f64)),
+                ("degraded", json::num(net.degraded as f64)),
+            ]),
+        ),
+    ])
+}
+
+const BENCH_NUM_FIELDS: &[&str] = &[
+    "pr",
+    "scored",
+    "topk",
+    "rejected",
+    "engine_errors",
+    "throughput_qps",
+    "wall_s",
+    "gcn_forwards_per_query",
+    "topk_shards_mean",
+    "topk_spread_ms_mean",
+];
+const BENCH_LATENCY_FIELDS: &[&str] = &[
+    "e2e_p50", "e2e_p99", "queue_p50", "queue_p99", "encode_p50", "encode_p99", "execute_p50",
+    "execute_p99",
+];
+const BENCH_CACHE_FIELDS: &[&str] = &["hit_rate", "entries"];
+const BENCH_NET_FIELDS: &[&str] = &["accepted", "throttled", "shed_deadline", "degraded"];
+
+/// Validate a `bench-serving-v1` snapshot (the `spa-gcn bench-check`
+/// subcommand). Returns the first schema violation as a message.
+pub fn check_bench(v: &Json) -> Result<(), String> {
+    if v.as_obj().is_none() {
+        return Err("snapshot must be a JSON object".into());
+    }
+    match v.get("schema").as_str() {
+        Some(s) if s == BENCH_SCHEMA => {}
+        Some(other) => return Err(format!("schema is '{other}', expected '{BENCH_SCHEMA}'")),
+        None => return Err("missing 'schema' string".into()),
+    }
+    if v.get("provenance").as_str().is_none() {
+        return Err("missing 'provenance' string".into());
+    }
+    for f in BENCH_NUM_FIELDS {
+        if v.get(f).as_f64().is_none() {
+            return Err(format!("missing numeric field '{f}'"));
+        }
+    }
+    for (section, fields) in [
+        ("latency_ms", BENCH_LATENCY_FIELDS),
+        ("embed_cache", BENCH_CACHE_FIELDS),
+        ("net", BENCH_NET_FIELDS),
+    ] {
+        let obj = v.get(section);
+        if obj.as_obj().is_none() {
+            return Err(format!("missing object field '{section}'"));
+        }
+        for f in fields {
+            if obj.get(f).as_f64().is_none() {
+                return Err(format!("missing numeric field '{section}.{f}'"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// True when the snapshot's numbers are analytic estimates, not
+/// measurements — such a snapshot documents expectations and must never
+/// anchor a regression comparison.
+pub fn bench_is_estimated(v: &Json) -> bool {
+    v.get("provenance")
+        .as_str()
+        .is_some_and(|p| p.starts_with("estimated-analytic"))
+}
+
+/// The snapshot's p50 end-to-end latency in ms (the soft-regression
+/// comparison key).
+pub fn bench_p50_e2e(v: &Json) -> Option<f64> {
+    v.get("latency_ms").get("e2e_p50").as_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{generate, Family};
+    use crate::runtime::{EmbedCacheTelemetry, QueryTelemetry};
+    use crate::util::rng::Rng;
+
+    use super::super::query::{RejectReason, StageTiming};
+
+    fn header() -> TraceHeader {
+        TraceHeader { seed: 42, corpus_size: 32, topk: 5, n_max: 10, num_labels: 8 }
+    }
+
+    fn tiny_graph() -> Graph {
+        Graph::new(3, vec![(0, 1), (1, 2)], vec![0, 1, 2])
+    }
+
+    fn sample_trace_text() -> String {
+        let mut rng = Rng::new(7);
+        let mut w = TraceWriter::new(&header());
+        let mut off = 0u64;
+        for id in 0..20u64 {
+            off += 1 + (rng.next_u64() % 5000);
+            let g1 = generate(&mut rng, Family::Aids, 10, 8);
+            if id % 3 == 0 {
+                w.topk("client-a", id, off, &g1, "aids-synth", 1 + (id as usize % 7));
+            } else {
+                let g2 = generate(&mut rng, Family::Aids, 10, 8);
+                w.pair("client-b", id, off, &g1, &g2);
+            }
+        }
+        w.as_text().to_string()
+    }
+
+    #[test]
+    fn round_trip_random_schedules_and_payloads() {
+        // Property over random workloads: parse(write(x)) == x, and
+        // re-serializing the parsed entries reproduces the exact bytes
+        // (one canonical text form).
+        for seed in [1u64, 9, 1234, 0xdead_beef] {
+            let mut rng = Rng::new(seed);
+            let mut w = TraceWriter::new(&header());
+            let mut off = 0u64;
+            let mut expect: Vec<(u64, u64, &'static str)> = Vec::new();
+            for id in 0..25u64 {
+                off += rng.next_u64() % 10_000;
+                let g1 = generate(&mut rng, Family::Aids, 10, 8);
+                if rng.next_u64() % 2 == 0 {
+                    let k = 1 + (rng.next_u64() % 9) as usize;
+                    w.topk("c", id, off, &g1, "aids-synth", k);
+                    expect.push((id, off, "topk"));
+                } else {
+                    let g2 = generate(&mut rng, Family::Aids, 10, 8);
+                    w.pair("c", id, off, &g1, &g2);
+                    expect.push((id, off, "pair"));
+                }
+            }
+            let t = Trace::parse(w.as_text()).unwrap();
+            assert_eq!(t.header(), &header());
+            assert_eq!(t.len(), expect.len());
+            let mut rewritten = TraceWriter::new(t.header());
+            for (e, (id, off, kind)) in t.entries().iter().zip(&expect) {
+                assert_eq!((e.id(), e.offset_us(), e.kind()), (*id, *off, *kind));
+                assert_eq!(e.offset(), Duration::from_micros(*off));
+                match &e.payload {
+                    Payload::Pair { g1, g2 } => rewritten.pair(e.client(), e.id, e.offset_us, g1, g2),
+                    Payload::TopK { graph, corpus, k } => {
+                        assert_eq!(e.corpus(), Some(corpus.as_str()));
+                        rewritten.topk(e.client(), e.id, e.offset_us, graph, corpus, *k)
+                    }
+                }
+            }
+            assert_eq!(rewritten.as_text(), w.as_text(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn entries_convert_to_queries() {
+        let g = tiny_graph();
+        let corpus =
+            Arc::new(Corpus::build("c1", &[(5, g.clone()), (6, g.clone())], 8, 4).unwrap());
+        let mut corpora = BTreeMap::new();
+        corpora.insert(corpus.name().to_string(), Arc::clone(&corpus));
+
+        let mut w = TraceWriter::new(&header());
+        w.pair("x", 1, 10, &g, &g);
+        w.topk("x", 2, 20, &g, "c1", 2);
+        w.topk("x", 3, 30, &g, "nope", 2);
+        let t = Trace::parse(w.as_text()).unwrap();
+
+        let q = t.entries()[0].to_query(&corpora).unwrap();
+        assert_eq!(q.id, 1);
+        assert!(matches!(q.payload, QueryPayload::Pair { .. }));
+        let q = t.entries()[1].to_query(&corpora).unwrap();
+        match &q.payload {
+            QueryPayload::TopK { corpus, k, .. } => {
+                assert_eq!(corpus.len(), 2);
+                assert_eq!(*k, 2);
+            }
+            other => panic!("expected TopK, got {other:?}"),
+        }
+        let err = t.entries()[2].to_query(&corpora).unwrap_err();
+        assert_eq!(err.code(), "unknown_corpus");
+        assert!(err.to_string().contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn malformed_zoo() {
+        let head = header_line(&header());
+        let g = tiny_graph();
+        let ok_pair = pair_line("c", 1, 5, &g, &g);
+        // Each case: (document, expected error code).
+        let cases: Vec<(String, &str)> = vec![
+            // Header problems.
+            (String::new(), "missing_header"),
+            ("\n\n".into(), "missing_header"),
+            ("{\"schema\":\"spa-gcn-trace-v2\"}".into(), "bad_schema"),
+            ("{\"seed\":1}".into(), "bad_schema"),
+            ("[1,2]".into(), "parse"),
+            ("{\"schema\":\"spa-gcn-trace-v1\",\"corpus_size\":0,\"topk\":1,\"n_max\":8}".into(), "field"),
+            // Truncated / garbage entry lines.
+            (format!("{head}\n{}", &ok_pair[..ok_pair.len() / 2]), "parse"),
+            (format!("{head}\n{ok_pair} trailing"), "parse"),
+            (format!("{head}\n42"), "parse"),
+            // Field problems.
+            (format!("{head}\n{}", ok_pair.replace("\"id\":1", "\"id\":-3")), "field"),
+            (format!("{head}\n{}", ok_pair.replace("\"id\":1", "\"id\":1.5")), "field"),
+            (format!("{head}\n{}", ok_pair.replace("\"offset_us\":5", "\"offset_us\":\"x\"")), "field"),
+            (format!("{head}\n{}", ok_pair.replace("\"kind\":\"pair\"", "\"kind\":\"zap\"")), "field"),
+            (format!("{head}\n{}", ok_pair.replace("\"client\":\"c\"", "\"client\":9")), "field"),
+            (
+                format!("{head}\n{}", topk_line("c", 1, 5, &g, "x", 3).replace("\"k\":3", "\"k\":0")),
+                "field",
+            ),
+            // Graph problems.
+            (format!("{head}\n{}", ok_pair.replace("\"n\":3", "\"n\":99")), "bad_graph"),
+            (format!("{head}\n{}", ok_pair.replace("\"n\":3", "\"n\":100000")), "bad_graph"),
+            (format!("{head}\n{}", ok_pair.replace("[0,1]", "[0,7]")), "bad_graph"),
+            (format!("{head}\n{}", ok_pair.replace("[0,1]", "[0,-1]")), "bad_graph"),
+            (format!("{head}\n{}", ok_pair.replace("[0,1]", "[0]")), "bad_graph"),
+            (format!("{head}\n{}", ok_pair.replace("[0,1,2]", "[0,1,70000]")), "bad_graph"),
+        ];
+        for (doc, code) in cases {
+            match Trace::parse(&doc) {
+                Err(e) => assert_eq!(e.code(), code, "doc {doc:?} gave {e}"),
+                Ok(t) => panic!("doc {doc:?} parsed: {} entries", t.len()),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_line_is_rejected() {
+        let doc = format!("{}\n{{\"pad\":\"{}\"}}", header_line(&header()), "x".repeat(MAX_TRACE_LINE));
+        let err = Trace::parse(&doc).unwrap_err();
+        assert_eq!(err.code(), "line_too_long");
+    }
+
+    #[test]
+    fn truncation_never_panics() {
+        // Hostile-input guarantee: any byte-level truncation of a valid
+        // trace either parses (fewer entries) or errors — never panics.
+        let text = sample_trace_text();
+        let full = Trace::parse(&text).unwrap().len();
+        for cut in (0..text.len()).step_by(97) {
+            if !text.is_char_boundary(cut) {
+                continue;
+            }
+            match Trace::parse(&text[..cut]) {
+                Ok(t) => assert!(t.len() <= full),
+                Err(e) => assert!(!e.code().is_empty()),
+            }
+        }
+    }
+
+    #[test]
+    fn recorder_writes_a_readable_trace() {
+        let path = std::env::temp_dir()
+            .join(format!("spa-gcn-trace-test-{}-{}", std::process::id(), line!()));
+        let rec = TraceRecorder::create(&path, &header()).unwrap();
+        rec.rebase();
+        let g = tiny_graph();
+        rec.record_query("cli", &Query::new(7, g.clone(), g.clone()));
+        let corpus = Arc::new(Corpus::build("c9", &[(1, g.clone())], 8, 4).unwrap());
+        rec.record_query("cli", &Query::topk(8, g.clone(), corpus, 4));
+        rec.record_pair("net", 9, &g, &g);
+        rec.record_topk("net", 10, &g, "c9", 2);
+        assert!(rec.finish());
+        let t = Trace::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(t.header(), &header());
+        assert_eq!(t.len(), 4);
+        assert_eq!(
+            t.entries().iter().map(|e| (e.id(), e.kind())).collect::<Vec<_>>(),
+            vec![(7, "pair"), (8, "topk"), (9, "pair"), (10, "topk")]
+        );
+        assert_eq!(t.entries()[1].corpus(), Some("c9"));
+        assert_eq!(t.entries()[2].client(), "net");
+        // Offsets are monotone (same clock, sequential records).
+        let offs: Vec<_> = t.entries().iter().map(TraceEntry::offset_us).collect();
+        let mut sorted = offs.clone();
+        sorted.sort_unstable();
+        assert_eq!(offs, sorted);
+    }
+
+    #[test]
+    fn read_rejects_missing_file() {
+        let err = Trace::read(Path::new("/nonexistent/spa-gcn.trace")).unwrap_err();
+        assert_eq!(err.code(), "io");
+    }
+
+    fn fake_result(id: u64, outcome: Outcome, forwards: u64) -> QueryResult {
+        QueryResult {
+            id,
+            outcome,
+            latency_us: 1000.0,
+            batch_size: 1,
+            stage: StageTiming { queue_us: 100.0, encode_us: 50.0, execute_us: 800.0 },
+            telemetry: QueryTelemetry {
+                embed_cache: Some(EmbedCacheTelemetry { hits: 1, misses: forwards, entries: 3 }),
+                ..QueryTelemetry::default()
+            },
+            engine: None,
+            sharding: None,
+        }
+    }
+
+    #[test]
+    fn outcome_lines_are_deterministic_and_sortable() {
+        let a = outcome_line(&fake_result(3, Outcome::Score(0.25), 2));
+        assert_eq!(a, outcome_line(&fake_result(3, Outcome::Score(0.25), 2)));
+        assert!(a.contains(&format!("score_bits={:08x}", 0.25f32.to_bits())), "{a}");
+        assert!(a.contains("forwards=2"), "{a}");
+        let b = outcome_line(&fake_result(10, Outcome::TopK(vec![(4, 0.5), (1, 0.125)]), 1));
+        assert!(b.contains(&format!("4:{:08x},1:{:08x}", 0.5f32.to_bits(), 0.125f32.to_bits())), "{b}");
+        let c = outcome_line(&fake_result(2, Outcome::Rejected(RejectReason::ShuttingDown), 0));
+        assert!(c.contains("rejected"), "{c}");
+        // Zero-padded ids: lexicographic sort == numeric id sort.
+        let mut lines = vec![b.clone(), a.clone(), c.clone()];
+        lines.sort();
+        assert_eq!(lines, vec![c, a, b]);
+    }
+
+    #[test]
+    fn bench_snapshot_passes_its_own_check() {
+        let mut m = Metrics::new();
+        m.record(&fake_result(0, Outcome::Score(0.5), 2));
+        m.record(&fake_result(1, Outcome::TopK(vec![(2, 0.75)]), 1));
+        m.record(&fake_result(2, Outcome::Rejected(RejectReason::ShuttingDown), 0));
+        let snap = bench_snapshot(&m, 1.5, 9, "measured-replay: test");
+        check_bench(&snap).unwrap();
+        assert!(!bench_is_estimated(&snap));
+        assert!(bench_p50_e2e(&snap).unwrap() > 0.0);
+        assert_eq!(snap.get("scored").as_f64(), Some(2.0));
+        assert_eq!(snap.get("rejected").as_f64(), Some(1.0));
+        // Round-trips through the JSON codec.
+        let parsed = json::parse(&snap.to_string()).unwrap();
+        check_bench(&parsed).unwrap();
+        assert_eq!(parsed, snap);
+    }
+
+    #[test]
+    fn bench_check_rejects_drift() {
+        let m = Metrics::new();
+        let good = bench_snapshot(&m, 1.0, 9, "measured-replay: test");
+        let text = good.to_string();
+        for (mutation, needle) in [
+            (text.replace("bench-serving-v1", "bench-serving-v2"), "schema"),
+            (text.replace("\"throughput_qps\"", "\"qps\""), "throughput_qps"),
+            (text.replace("\"e2e_p50\"", "\"p50\""), "e2e_p50"),
+            (text.replace("\"hit_rate\"", "\"hits\""), "hit_rate"),
+            (text.replace("\"shed_deadline\"", "\"shed\""), "shed_deadline"),
+            (text.replace("\"provenance\":\"measured-replay: test\",", ""), "provenance"),
+        ] {
+            let v = json::parse(&mutation).unwrap();
+            let err = check_bench(&v).unwrap_err();
+            assert!(err.contains(needle), "mutation {mutation:?} gave {err}");
+        }
+        assert!(check_bench(&Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn estimated_snapshots_are_flagged() {
+        let m = Metrics::new();
+        let est = bench_snapshot(&m, 1.0, 9, "estimated-analytic: authoring container has no rustc");
+        check_bench(&est).unwrap();
+        assert!(bench_is_estimated(&est));
+    }
+}

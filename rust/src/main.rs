@@ -5,6 +5,8 @@
 //!                   table5, table6, fig10, fig11, replication, sparsity,
 //!                   crosscheck, all)
 //!   serve           run the serving coordinator on a synthetic workload
+//!   replay          re-drive a recorded trace deterministically
+//!   bench-check     validate a bench-serving-v1 snapshot (CI gate)
 //!   lint            run the in-repo architecture linter over the tree
 //!   gen             synthesize a graph database and print its statistics
 //!   ged             exact-GED demo on tiny graphs
@@ -14,7 +16,10 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use spa_gcn::coordinator::server::{serve_paced, serve_workload, ServeConfig};
+use spa_gcn::coordinator::server::{run_replay, serve_paced, serve_workload, ServeConfig};
+use spa_gcn::coordinator::trace::{
+    bench_is_estimated, bench_p50_e2e, bench_snapshot, check_bench, Trace, BENCH_SCHEMA,
+};
 use spa_gcn::ged::{exact_ged, ged_similarity};
 use spa_gcn::graph::dataset::GraphDb;
 use spa_gcn::graph::generate::{generate, Family};
@@ -84,7 +89,7 @@ fn usage() -> ! {
          \t[--queries N] [--no-pjrt] [--artifacts DIR] [--json OUT.json]\n\
          \n  serve [--queries N] [--engine KINDS] [--workers K] [--batch-max B]\n\
          \t[--batch-timeout-us T] [--pipeline-depth D] [--rate QPS] [--artifacts DIR]\n\
-         \t[--corpus N] [--topk K] [--kernels scalar|lanes]\n\
+         \t[--corpus N] [--topk K] [--kernels scalar|lanes] [--record PATH]\n\
          \t(KINDS: comma-separated engine kinds from {{{}}};\n\
          \t a list runs heterogeneous lanes, e.g. --engine native,sim;\n\
          \t --pipeline-depth 0 = sequential encode+execute baseline;\n\
@@ -94,7 +99,24 @@ fn usage() -> ! {
          \t --listen ADDR serves the wire protocol instead of a synthetic\n\
          \t workload — press Enter (or close stdin) to stop and print metrics;\n\
          \t front-door knobs: [--net-conn-cap N] [--net-admit-cap N]\n\
-         \t [--net-refill QPS] [--net-burst B] [--net-deadline-ms T])\n\
+         \t [--net-refill QPS] [--net-burst B] [--net-deadline-ms T];\n\
+         \t --record PATH logs every admitted query with its arrival\n\
+         \t offset as a spa-gcn-trace-v1 line-delimited JSON trace)\n\
+         \n  replay --trace PATH [--speed X | --as-fast-as-possible]\n\
+         \t[--engine KINDS] [--workers K] [--artifacts DIR]\n\
+         \t[--out DUMP.txt] [--bench-out BENCH.json] [--selfcheck]\n\
+         \t(re-drive a recorded trace through the serving pipeline on the\n\
+         \t recorded arrival schedule — --speed 2 halves the gaps,\n\
+         \t --as-fast-as-possible floods closed-loop; --out writes the\n\
+         \t sorted outcome dump (byte-identical across replays of the\n\
+         \t same trace), --bench-out writes a bench-serving-v1 snapshot,\n\
+         \t --selfcheck replays twice in-process and exits 1 on any\n\
+         \t outcome mismatch — the CI determinism gate, DESIGN.md S19)\n\
+         \n  bench-check FILE [--baseline BASE.json]\n\
+         \t(validate FILE against the bench-serving-v1 schema, exit 1 on\n\
+         \t drift; with --baseline, emit a soft ::warning:: annotation —\n\
+         \t never a failure — when p50 e2e regresses >20%, refusing\n\
+         \t provenance=estimated-analytic baselines outright)\n\
          \n  load --connect ADDR [--clients N] [--rate QPS] [--queries N]\n\
          \t[--topk K] [--seed S]  (drive a `serve --listen` front door)\n\
          \n  lint [--json OUT.json] [--root DIR]\n\
@@ -117,6 +139,8 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "report" => cmd_report(&args),
         "serve" => cmd_serve(&args),
+        "replay" => cmd_replay(&args),
+        "bench-check" => cmd_bench_check(&args),
         "load" => cmd_load(&args),
         "lint" => cmd_lint(&args),
         "gen" => cmd_gen(&args),
@@ -175,17 +199,21 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    // Kernel-path override (DESIGN.md S16): the compiled default comes
-    // from the `simd` feature; `--kernels scalar` is the operational
-    // escape hatch, `--kernels lanes` forces the vectorized path on a
-    // scalar-default build.
+/// Kernel-path override (DESIGN.md S16): the compiled default comes
+/// from the `simd` feature; `--kernels scalar` is the operational
+/// escape hatch, `--kernels lanes` forces the vectorized path on a
+/// scalar-default build. Must run before any engine is constructed.
+fn apply_kernels_flag(args: &Args) -> anyhow::Result<()> {
     match args.flag("kernels", KernelPath::compiled_default().as_str()).as_str() {
         "scalar" => set_kernel_path(KernelPath::Scalar),
         "lanes" => set_kernel_path(KernelPath::Lanes),
         other => anyhow::bail!("--kernels must be scalar or lanes, got {other}"),
     }
-    let cfg = ServeConfig {
+    Ok(())
+}
+
+fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
+    Ok(ServeConfig {
         artifacts_dir: artifacts_dir(args),
         engines: EngineKind::parse_list(&args.flag("engine", "xla"))?,
         queries: args.usize("queries", 1000),
@@ -196,7 +224,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         pipeline_depth: args.usize("pipeline-depth", 2),
         corpus_size: args.usize("corpus", 0),
         topk: args.usize("topk", 10),
-    };
+        record: args.flags.get("record").map(PathBuf::from),
+    })
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    apply_kernels_flag(args)?;
+    let cfg = serve_config(args)?;
     if let Some(listen) = args.flags.get("listen") {
         // Front-door knobs stay a net-layer concern: ServeConfig is a
         // coordinator type and must not carry a NetConfig (ARCH-DAG).
@@ -239,6 +273,116 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         None => serve_workload(&cfg)?,
     };
     println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> anyhow::Result<()> {
+    apply_kernels_flag(args)?;
+    let trace_path = args
+        .flags
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("replay needs --trace PATH (record one with serve --record)"))?;
+    let trace = Trace::read(std::path::Path::new(trace_path))
+        .map_err(|e| anyhow::anyhow!("reading trace {trace_path}: {e}"))?;
+    anyhow::ensure!(!trace.is_empty(), "trace {trace_path} has no entries");
+    let speed = if args.bool("as-fast-as-possible") {
+        None
+    } else {
+        Some(args.f64("speed", 1.0))
+    };
+    let cfg = ServeConfig {
+        record: None, // replaying a recording of a replay is a loop, not a workload
+        ..serve_config(args)?
+    };
+    let (metrics, wall_s, dump) = run_replay(&cfg, &trace, speed)?;
+    if args.bool("selfcheck") {
+        // The CI determinism gate, in-process: same trace, second
+        // replay, byte-identical outcome dump or exit 1.
+        let (_, _, dump2) = run_replay(&cfg, &trace, speed)?;
+        if dump != dump2 {
+            eprintln!(
+                "replay selfcheck FAILED: two replays of {trace_path} produced different outcome dumps"
+            );
+            std::process::exit(1);
+        }
+        eprintln!(
+            "replay selfcheck: {} outcomes bit-identical across two replays",
+            trace.len()
+        );
+    }
+    if let Some(out) = args.flags.get("out") {
+        std::fs::write(out, &dump)?;
+        eprintln!("wrote {out}");
+    }
+    if let Some(out) = args.flags.get("bench-out") {
+        let snap = bench_snapshot(
+            &metrics,
+            wall_s,
+            args.usize("pr", 9) as u64,
+            "measured: spa-gcn replay",
+        );
+        std::fs::write(out, snap.to_string() + "\n")?;
+        eprintln!("wrote {out}");
+    }
+    let report = metrics.render_table(&format!(
+        "replay: trace={} entries={} engine={} speed={}",
+        trace_path,
+        trace.len(),
+        args.flag("engine", "xla"),
+        match speed {
+            Some(s) => format!("{s}x"),
+            None => "flood".into(),
+        }
+    ));
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
+    let Some(path) = args.positional.get(1) else {
+        usage()
+    };
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading snapshot {path}: {e}"))?;
+    let doc = spa_gcn::util::json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing snapshot {path}: {e}"))?;
+    if let Err(msg) = check_bench(&doc) {
+        eprintln!("bench-check: {path}: schema drift vs {BENCH_SCHEMA}: {msg}");
+        std::process::exit(1);
+    }
+    if let Some(base_path) = args.flags.get("baseline") {
+        let base_text = std::fs::read_to_string(base_path)
+            .map_err(|e| anyhow::anyhow!("reading baseline {base_path}: {e}"))?;
+        let base = spa_gcn::util::json::parse(&base_text)
+            .map_err(|e| anyhow::anyhow!("parsing baseline {base_path}: {e}"))?;
+        if let Err(msg) = check_bench(&base) {
+            eprintln!("bench-check: baseline {base_path}: schema drift vs {BENCH_SCHEMA}: {msg}");
+            std::process::exit(1);
+        }
+        if bench_is_estimated(&base) {
+            // Estimated snapshots carry analytic guesses, not measured
+            // latencies — comparing against them would manufacture
+            // regressions (or mask real ones). Refuse, loudly, softly.
+            println!(
+                "bench-check: baseline {base_path} has provenance=estimated-analytic; \
+                 refusing to use it as a regression baseline (no comparison made)"
+            );
+        } else {
+            match (bench_p50_e2e(&doc), bench_p50_e2e(&base)) {
+                (Some(cand), Some(base_p50)) if base_p50 > 0.0 && cand > base_p50 * 1.2 => {
+                    // GitHub annotation syntax: a soft warning on the
+                    // run, never a job failure (ISSUE 9 satellite 2).
+                    println!(
+                        "::warning title=serving p50 regression::p50 e2e {cand:.3} ms is \
+                         {:.0}% over baseline {base_p50:.3} ms ({base_path})",
+                        (cand / base_p50 - 1.0) * 100.0
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+    println!("bench-check: {path}: ok ({BENCH_SCHEMA})");
     Ok(())
 }
 

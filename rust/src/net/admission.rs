@@ -43,6 +43,7 @@ use crate::coordinator::corpus::Corpus;
 use crate::coordinator::pipeline::{ResultTap, SubmitHandle};
 use crate::coordinator::query::{Outcome, Query, QueryResult};
 use crate::coordinator::router::validate_graph;
+use crate::coordinator::trace::TraceRecorder;
 use crate::ged::ged_similarity;
 use crate::ged::heuristics::greedy_ged;
 use crate::nn::config::ModelConfig;
@@ -334,12 +335,13 @@ pub fn front_stage(
     counters: Arc<NetCounters>,
     model: ModelConfig,
     cfg: NetConfig,
+    recorder: Option<Arc<TraceRecorder>>,
 ) {
     let stats = rx.stats();
     let cap = stats.capacity().max(1);
     while let Ok(frame) = rx.recv() {
         let AdmittedFrame {
-            client: _,
+            client,
             request_id,
             req,
             deadline,
@@ -389,6 +391,21 @@ pub fn front_stage(
                 detail: reason.to_string(),
             });
             continue;
+        }
+        // Trace tap, after the shape gate and before lane selection: the
+        // trace holds exactly the admitted, servable workload — including
+        // pairs the degraded GED lane answers below, which are admitted
+        // work even though no engine sees them (DESIGN.md S19). Record
+        // methods latch failures internally and never panic or block
+        // beyond one short uncontended lock.
+        if let Some(rec) = &recorder {
+            match &req {
+                Request::Pair { g1, g2 } => rec.record_pair(&client, request_id, g1, g2),
+                Request::TopK { corpus, graph, k } => {
+                    rec.record_topk(&client, request_id, graph, corpus, *k)
+                }
+                Request::Hello => {}
+            }
         }
         // Load signal: queue depth right after this dequeue, as a
         // fraction of capacity. Sampled per frame, smoothed by the

@@ -38,6 +38,7 @@ use crate::coordinator::corpus::Corpus;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
 use crate::coordinator::server::ServeConfig;
+use crate::coordinator::trace::{TraceHeader, TraceRecorder};
 use crate::nn::config::{ArtifactsMeta, ModelConfig};
 use crate::runtime::EngineFactory;
 
@@ -92,6 +93,7 @@ pub struct NetServer {
     signal: Arc<LoadSignal>,
     router: Arc<ResultRouter>,
     pipeline: Pipeline,
+    recorder: Option<Arc<TraceRecorder>>,
 }
 
 impl NetServer {
@@ -104,6 +106,23 @@ impl NetServer {
         ncfg: NetConfig,
         corpora: Vec<Arc<Corpus>>,
         listen: &str,
+    ) -> Result<NetServer> {
+        Self::start_recorded(model, factories, pcfg, ncfg, corpora, listen, None)
+    }
+
+    /// [`NetServer::start`] with an optional workload [`TraceRecorder`]
+    /// (`spa-gcn serve --listen ... --record PATH`). The recorder is
+    /// handed to the admission front stage, which logs every admitted
+    /// query — including degraded-GED pairs — with its arrival offset
+    /// (DESIGN.md S19).
+    pub fn start_recorded(
+        model: ModelConfig,
+        factories: Vec<EngineFactory>,
+        pcfg: PipelineConfig,
+        ncfg: NetConfig,
+        corpora: Vec<Arc<Corpus>>,
+        listen: &str,
+        recorder: Option<Arc<TraceRecorder>>,
     ) -> Result<NetServer> {
         let router = Arc::new(ResultRouter::new());
         let counters = Arc::new(NetCounters::default());
@@ -141,6 +160,7 @@ impl NetServer {
             let router = Arc::clone(&router);
             let signal = Arc::clone(&signal);
             let counters = Arc::clone(&counters);
+            let recorder = recorder.clone();
             std::thread::Builder::new()
                 .name("spa-net-front".into())
                 .spawn(move || {
@@ -153,6 +173,7 @@ impl NetServer {
                         counters,
                         model,
                         ncfg,
+                        recorder,
                     )
                 })
                 .context("spawning net front stage")?
@@ -187,6 +208,7 @@ impl NetServer {
             signal,
             router,
             pipeline,
+            recorder,
         })
     }
 
@@ -198,7 +220,13 @@ impl NetServer {
     /// Block until every engine lane's caps handshake has published;
     /// returns working-lane count (see [`Pipeline::wait_ready`]).
     pub fn wait_ready(&self) -> usize {
-        self.pipeline.wait_ready()
+        let lanes = self.pipeline.wait_ready();
+        // Rebase the trace epoch to "lanes ready": recorded arrival
+        // offsets then measure the serving window, not engine warmup.
+        if let Some(rec) = &self.recorder {
+            rec.rebase();
+        }
+        lanes
     }
 
     /// Live front-door counters (tests assert on these mid-run).
@@ -243,6 +271,7 @@ impl NetServer {
             admit_stats,
             counters,
             pipeline,
+            recorder,
             ..
         } = self;
         ctx.shutdown.store(true, Ordering::Release);
@@ -265,6 +294,14 @@ impl NetServer {
         let mut metrics = pipeline.finish();
         metrics.net = Some(counters.snapshot());
         metrics.channels.push(admit_stats.snapshot());
+        // The front thread's recorder clone is gone by now; flush the
+        // trace. A PANIC-FREE scope can only warn on failure here —
+        // the CLI path surfaces it to stderr, tests read the file.
+        if let Some(rec) = recorder {
+            if !rec.finish() {
+                eprintln!("net: trace recording failed (unwritable --record path?)");
+            }
+        }
         metrics
     }
 }
@@ -296,13 +333,30 @@ pub fn serve_listen(cfg: &ServeConfig, ncfg: NetConfig, listen: &str) -> Result<
                 .map_err(|e| anyhow::anyhow!("encoding corpus: {e}"))?,
         ));
     }
-    NetServer::start(
+    let recorder = match &cfg.record {
+        Some(path) => Some(Arc::new(
+            TraceRecorder::create(
+                path,
+                &TraceHeader {
+                    seed: cfg.seed,
+                    corpus_size: cfg.corpus_size,
+                    topk: cfg.topk,
+                    n_max: model.n_max,
+                    num_labels: model.num_labels,
+                },
+            )
+            .map_err(|e| anyhow::anyhow!("opening --record {}: {e}", path.display()))?,
+        )),
+        None => None,
+    };
+    NetServer::start_recorded(
         model,
         cfg.lane_factories(),
         cfg.pipeline_config(),
         ncfg,
         corpora,
         listen,
+        recorder,
     )
 }
 

@@ -1,0 +1,198 @@
+//! Replay-determinism integration tests (ISSUE 9 / DESIGN.md S19).
+//!
+//! No artifacts needed: lanes run `NativeEngine` with synthetic
+//! weights (bit-deterministic), and the workload comes from a
+//! `spa-gcn-trace-v1` document built with `TraceWriter` and parsed
+//! back with `Trace::parse` — the exact codec path `spa-gcn replay`
+//! uses. The acceptance bar: replaying the same trace twice produces
+//! byte-identical sorted outcome dumps (score bits AND per-query gcn
+//! forward counts ride in every line) and identical forward-count
+//! telemetry in `Metrics`. This is the in-process half of the CI
+//! `replay` job; the workflow's CLI half exercises `run_replay`
+//! against real artifacts.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use spa_gcn::coordinator::corpus::Corpus;
+use spa_gcn::coordinator::metrics::Metrics;
+use spa_gcn::coordinator::pipeline::{Pipeline, PipelineConfig, ResultTap};
+use spa_gcn::coordinator::query::{Outcome, QueryResult};
+use spa_gcn::coordinator::trace::{outcome_line, Trace, TraceHeader, TraceWriter};
+use spa_gcn::graph::generate::{generate, Family};
+use spa_gcn::graph::Graph;
+use spa_gcn::nn::config::ModelConfig;
+use spa_gcn::nn::weights::Weights;
+use spa_gcn::runtime::native::NativeEngine;
+use spa_gcn::runtime::{Engine, EngineFactory};
+use spa_gcn::util::rng::Rng;
+
+fn model() -> ModelConfig {
+    ModelConfig {
+        n_max: 8,
+        num_labels: 4,
+        ..ModelConfig::default()
+    }
+}
+
+fn native_factory(cfg: &ModelConfig) -> EngineFactory {
+    let cfg = cfg.clone();
+    Arc::new(move || {
+        Ok(Box::new(NativeEngine::new(cfg.clone(), Weights::synthetic(&cfg, 2024)))
+            as Box<dyn Engine>)
+    })
+}
+
+fn graphs(cfg: &ModelConfig, seed: u64, count: usize) -> Vec<Graph> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels))
+        .collect()
+}
+
+/// A mixed pair/top-k trace over synthetic graphs, plus the corpus map
+/// its top-k entries reference — everything `to_query` needs.
+fn fixture(cfg: &ModelConfig) -> (Trace, BTreeMap<String, Arc<Corpus>>) {
+    let gs = graphs(cfg, 404, 14);
+    let corpus = Arc::new(
+        Corpus::build(
+            "trace-fixture",
+            &gs[8..].iter().cloned().enumerate().map(|(i, g)| (i as u64, g)).collect::<Vec<_>>(),
+            cfg.n_max,
+            cfg.num_labels,
+        )
+        .expect("fixture corpus encodes"),
+    );
+    let mut w = TraceWriter::new(&TraceHeader {
+        seed: 404,
+        corpus_size: 0, // corpus supplied in-process, not resynthesized
+        topk: 3,
+        n_max: cfg.n_max,
+        num_labels: cfg.num_labels,
+    });
+    // Interleave payload kinds; offsets are present but the replay
+    // below floods (schedule ignored), matching --as-fast-as-possible.
+    for i in 0..8u64 {
+        if i % 3 == 2 {
+            w.topk("it", 100 + i, i * 250, &gs[i as usize], "trace-fixture", 3);
+        } else {
+            w.pair("it", 100 + i, i * 250, &gs[i as usize], &gs[(i as usize + 1) % 8]);
+        }
+    }
+    let trace = Trace::parse(w.as_text()).expect("fixture trace parses");
+    let mut corpora = BTreeMap::new();
+    corpora.insert(corpus.name().to_string(), corpus);
+    (trace, corpora)
+}
+
+/// One flood replay of `trace` through a fresh pipeline: the sorted
+/// outcome dump (what `spa-gcn replay --out` writes) plus full metrics.
+fn replay_once(trace: &Trace, corpora: &BTreeMap<String, Arc<Corpus>>) -> (String, Metrics) {
+    let cfg = model();
+    let lines: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let tap: ResultTap = {
+        let lines = Arc::clone(&lines);
+        Arc::new(move |r: &QueryResult| {
+            lines.lock().unwrap().push(outcome_line(r));
+        })
+    };
+    let pipeline = Pipeline::start_with_tap(
+        cfg.clone(),
+        vec![native_factory(&cfg)],
+        PipelineConfig::default(),
+        Some(tap),
+    );
+    assert_eq!(pipeline.wait_ready(), 1, "native lane must construct");
+    for e in trace.entries() {
+        let q = e.to_query(corpora).expect("fixture entries convert");
+        assert!(pipeline.submit(q), "pipeline accepts the fixture load");
+    }
+    let metrics = pipeline.finish();
+    let mut dump = std::mem::take(&mut *lines.lock().unwrap());
+    dump.sort();
+    (dump.join("\n"), metrics)
+}
+
+#[test]
+fn same_trace_replays_bit_identical() {
+    let cfg = model();
+    let (trace, corpora) = fixture(&cfg);
+    let (dump1, m1) = replay_once(&trace, &corpora);
+    let (dump2, m2) = replay_once(&trace, &corpora);
+
+    assert!(!dump1.is_empty(), "replay produced no outcomes");
+    assert_eq!(dump1.lines().count(), trace.len(), "one outcome line per trace entry");
+    // The gate: score bits and per-query forward counts are embedded in
+    // every outcome line, so byte equality IS bit-identical scoring.
+    assert_eq!(dump1, dump2, "two replays of the same trace diverged");
+    assert!(dump1.contains("score_bits="), "pair outcomes carry score bits");
+    assert!(dump1.contains(" topk "), "topk outcomes present");
+
+    // Forward-count telemetry must agree sample-for-sample, not just in
+    // the dump: `gcn forwards per query` is the embed-cache witness.
+    assert_eq!(m1.scored, m2.scored);
+    assert_eq!(m1.topk, m2.topk);
+    assert_eq!(m1.rejected, m2.rejected);
+    assert_eq!(m1.engine_errors, 0);
+    assert_eq!(m2.engine_errors, 0);
+    assert_eq!(
+        m1.gcn_forwards.mean().to_bits(),
+        m2.gcn_forwards.mean().to_bits(),
+        "gcn forwards per query drifted between replays"
+    );
+    assert_eq!(m1.embed_misses, m2.embed_misses);
+    assert_eq!(m1.embed_hits, m2.embed_hits);
+}
+
+#[test]
+fn replayed_queries_score_like_direct_submission() {
+    // `to_query` must hand the pipeline the payloads that were recorded
+    // — a replayed pair scores bit-identically to the same pair
+    // submitted without a trace round-trip in the middle.
+    let cfg = model();
+    let gs = graphs(&cfg, 505, 4);
+
+    let mut w = TraceWriter::new(&TraceHeader {
+        seed: 505,
+        corpus_size: 0,
+        topk: 1,
+        n_max: cfg.n_max,
+        num_labels: cfg.num_labels,
+    });
+    w.pair("it", 7, 0, &gs[0], &gs[1]);
+    w.pair("it", 8, 10, &gs[2], &gs[3]);
+    let trace = Trace::parse(w.as_text()).expect("trace parses");
+    let (dump, _) = replay_once(&trace, &BTreeMap::new());
+
+    // Direct path: same pairs, same ids, no codec in the loop.
+    let scores: Arc<Mutex<BTreeMap<u64, u32>>> = Arc::new(Mutex::new(BTreeMap::new()));
+    let tap: ResultTap = {
+        let scores = Arc::clone(&scores);
+        Arc::new(move |r: &QueryResult| {
+            if let Outcome::Score(s) = r.outcome {
+                scores.lock().unwrap().insert(r.id, s.to_bits());
+            }
+        })
+    };
+    let pipeline = Pipeline::start_with_tap(
+        cfg.clone(),
+        vec![native_factory(&cfg)],
+        PipelineConfig::default(),
+        Some(tap),
+    );
+    assert_eq!(pipeline.wait_ready(), 1);
+    use spa_gcn::coordinator::query::Query;
+    assert!(pipeline.submit(Query::new(7, gs[0].clone(), gs[1].clone())));
+    assert!(pipeline.submit(Query::new(8, gs[2].clone(), gs[3].clone())));
+    pipeline.finish();
+
+    let scores = scores.lock().unwrap();
+    assert_eq!(scores.len(), 2);
+    for (id, bits) in scores.iter() {
+        let want = format!("{id:020} pair score_bits={bits:08x}");
+        assert!(
+            dump.lines().any(|l| l.starts_with(&want)),
+            "replayed dump missing direct-submission score: want `{want}` in\n{dump}"
+        );
+    }
+}
