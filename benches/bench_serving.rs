@@ -2,68 +2,143 @@
 //! 200-query serving workload as a `spa-gcn-trace-v1` trace, replay it
 //! twice (asserting byte-identical outcome dumps — the determinism
 //! gate), and emit a `bench-serving-v1` snapshot to `bench.json` for
-//! the CI perf trajectory. The committed `BENCH_9.json` is the
-//! estimated-analytic placeholder this bench overwrites with measured
-//! numbers; validate either with `spa-gcn bench-check FILE`.
+//! the CI perf trajectory. Since ISSUE 10 the bench runs two legs —
+//! exact and budgeted-cascade — and the snapshot comes from the
+//! cascade replay, so its `cascade` section carries a measured prune
+//! rate. The committed `BENCH_10.json` is the estimated-analytic
+//! placeholder this bench overwrites with measured numbers; validate
+//! either with `spa-gcn bench-check FILE`.
 //!
 //!     cargo bench --bench bench_serving
 //!
 //! Needs `artifacts/` (run `make artifacts`); skips itself otherwise,
 //! matching the repo's artifact-gated test convention.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
+use spa_gcn::coordinator::corpus::Corpus;
 use spa_gcn::coordinator::server::{run_replay, serve_workload, ServeConfig};
 use spa_gcn::coordinator::trace::{bench_snapshot, check_bench, Trace};
+use spa_gcn::graph::generate::{generate, Family};
+use spa_gcn::graph::Graph;
+use spa_gcn::nn::config::ModelConfig;
 use spa_gcn::runtime::EngineKind;
+use spa_gcn::util::rng::Rng;
+
+/// The scatter stage must read per-shard unique counts as plan fields,
+/// never hash candidates per query (ISSUE 10): `shard_plan` does its
+/// one linear pass at plan time over the `prev_same` links built at
+/// corpus construction, and the plan's counts must agree with the
+/// membership-based definition on a duplicate-heavy corpus.
+fn assert_scatter_reads_precomputed_uniques() -> anyhow::Result<()> {
+    let cfg = ModelConfig::default();
+    let mut rng = Rng::new(1010);
+    let mut entries: Vec<(u64, Graph)> = (0..48u64)
+        .map(|i| (i, generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels)))
+        .collect();
+    // Duplicate content under fresh ids, scattered across shard
+    // boundaries — the case per-query hashing used to pay for.
+    for d in 0..16u64 {
+        entries.push((48 + d, entries[(d as usize) * 3].1.clone()));
+    }
+    let corpus = Corpus::build("bench-plan", &entries, cfg.n_max, cfg.num_labels)
+        .map_err(|e| anyhow::anyhow!("building plan corpus: {e}"))?;
+    for lanes in [1usize, 2, 3, 4, 7] {
+        let plan = corpus.shard_plan(lanes);
+        anyhow::ensure!(
+            plan.shards.len() == plan.uniques.len(),
+            "plan uniques must be parallel to its shards"
+        );
+        for (shard, &precomputed) in plan.shards.iter().zip(&plan.uniques) {
+            anyhow::ensure!(
+                precomputed == corpus.unique_in(*shard),
+                "lanes={lanes}: precomputed unique count diverged for {shard:?}"
+            );
+        }
+        // A single shard sees every distinct fingerprint exactly once.
+        if lanes == 1 {
+            anyhow::ensure!(plan.uniques[0] == corpus.unique_graphs());
+        }
+    }
+    println!("scatter plan: per-shard unique counts precomputed, no per-query hashing");
+    Ok(())
+}
+
+/// Record `cfg`'s workload, replay it twice, and hand back the first
+/// replay's outcome (the byte-identical dump pair is the determinism
+/// gate both legs share).
+fn record_and_replay(
+    label: &str,
+    cfg: &ServeConfig,
+    trace_path: &PathBuf,
+) -> anyhow::Result<(spa_gcn::coordinator::metrics::Metrics, f64)> {
+    println!("== record ({label}): {}-query workload -> {} ==", cfg.queries, trace_path.display());
+    let table = serve_workload(cfg)?;
+    println!("{}", table.render());
+
+    let trace = Trace::read(trace_path)
+        .map_err(|e| anyhow::anyhow!("reading recorded trace: {e}"))?;
+    println!("== replay x2 ({label}) : determinism gate ==");
+    let replay_cfg = ServeConfig { record: None, ..cfg.clone() };
+    let (metrics, wall_s, dump) = run_replay(&replay_cfg, &trace, None)?;
+    let (_, _, dump2) = run_replay(&replay_cfg, &trace, None)?;
+    anyhow::ensure!(
+        dump == dump2,
+        "replay determinism violated ({label}): two replays of {} produced different dumps",
+        trace_path.display()
+    );
+    println!("replayed {} entries twice, dumps byte-identical", trace.len());
+    let _ = std::fs::remove_file(trace_path);
+    Ok((metrics, wall_s))
+}
 
 fn main() -> anyhow::Result<()> {
+    assert_scatter_reads_precomputed_uniques()?;
     if !Path::new("artifacts").is_dir() {
         println!("bench_serving: artifacts/ not found (run `make artifacts`); skipping");
         return Ok(());
     }
-    let trace_path = std::env::temp_dir()
-        .join(format!("spa-gcn-bench-serving-{}.trace.jsonl", std::process::id()));
+    let tmp = std::env::temp_dir();
+    let pid = std::process::id();
 
-    // The recorded workload: one-vs-many corpus search, the shape the
-    // paper's serving argument is about (many small graphs, §5.4.3).
-    let cfg = ServeConfig {
+    // Leg 1 — exact: one-vs-many corpus search, the shape the paper's
+    // serving argument is about (many small graphs, §5.4.3).
+    let exact_trace = tmp.join(format!("spa-gcn-bench-serving-{pid}.trace.jsonl"));
+    let exact_cfg = ServeConfig {
         engines: vec![EngineKind::Native],
         queries: 200,
         corpus_size: 64,
         topk: 10,
         seed: 77,
-        record: Some(trace_path.clone()),
+        record: Some(exact_trace.clone()),
         ..ServeConfig::default()
     };
-    println!("== record: 200-query serving workload -> {} ==", trace_path.display());
-    let table = serve_workload(&cfg)?;
-    println!("{}", table.render());
-
-    let trace = Trace::read(&trace_path)
-        .map_err(|e| anyhow::anyhow!("reading recorded trace: {e}"))?;
-    println!("== replay x2 (flood) : determinism gate + snapshot ==");
-    let replay_cfg = ServeConfig { record: None, ..cfg };
-    let (metrics, wall_s, dump) = run_replay(&replay_cfg, &trace, None)?;
-    let (_, _, dump2) = run_replay(&replay_cfg, &trace, None)?;
-    anyhow::ensure!(
-        dump == dump2,
-        "replay determinism violated: two replays of {} produced different outcome dumps",
-        trace_path.display()
-    );
-
-    let snap = bench_snapshot(&metrics, wall_s, 9, "measured: benches/bench_serving.rs");
-    check_bench(&snap).map_err(|e| anyhow::anyhow!("snapshot fails its own schema: {e}"))?;
-    std::fs::write("bench.json", snap.to_string() + "\n")?;
-    let _ = std::fs::remove_file(&trace_path);
-
-    println!(
-        "replayed {} entries twice, dumps byte-identical; wrote bench.json",
-        trace.len()
-    );
+    let (exact_metrics, _) = record_and_replay("exact", &exact_cfg, &exact_trace)?;
     println!(
         "{}",
-        metrics.render_table("bench_serving: replayed 200-query workload").render()
+        exact_metrics.render_table("bench_serving: exact replayed workload").render()
     );
+
+    // Leg 2 — budgeted cascade: same workload shape with the coarse
+    // stage pruning each query to a quarter of the corpus. Its replay
+    // feeds the snapshot, so the cascade prune-rate section is measured.
+    let cascade_trace = tmp.join(format!("spa-gcn-bench-cascade-{pid}.trace.jsonl"));
+    let cascade_cfg = ServeConfig {
+        budget: 16,
+        record: Some(cascade_trace.clone()),
+        ..exact_cfg
+    };
+    let (metrics, wall_s) = record_and_replay("cascade", &cascade_cfg, &cascade_trace)?;
+    let table = metrics.render_table("bench_serving: cascade replayed workload");
+    anyhow::ensure!(
+        table.get("cascade queries").is_some(),
+        "budgeted replay must report cascade rows"
+    );
+    println!("{}", table.render());
+
+    let snap = bench_snapshot(&metrics, wall_s, 10, "measured: benches/bench_serving.rs");
+    check_bench(&snap).map_err(|e| anyhow::anyhow!("snapshot fails its own schema: {e}"))?;
+    std::fs::write("bench.json", snap.to_string() + "\n")?;
+    println!("wrote bench.json (cascade leg, budget={})", cascade_cfg.budget);
     Ok(())
 }

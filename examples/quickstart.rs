@@ -9,7 +9,10 @@
 //! `cargo bench --bench kernels` — it rewrites the machine-readable
 //! `BENCH_6.json` snapshot; commit the refresh alongside kernel changes.
 
+use std::sync::Arc;
+
 use spa_gcn::coordinator::corpus::Corpus;
+use spa_gcn::coordinator::corpus_store::CorpusStore;
 use spa_gcn::coordinator::pipeline::PipelineConfig;
 use spa_gcn::coordinator::server::{run_replay, serve_workload, ServeConfig};
 use spa_gcn::coordinator::trace::{bench_p50_e2e, bench_snapshot, check_bench, Trace};
@@ -148,7 +151,7 @@ fn main() -> anyhow::Result<()> {
     // snapshot (DESIGN.md S19). Operationally:
     //     spa-gcn serve  --engine native --queries 200 --corpus 64 --record trace.jsonl
     //     spa-gcn replay --trace trace.jsonl --selfcheck --bench-out bench.json
-    //     spa-gcn bench-check bench.json --baseline BENCH_9.json
+    //     spa-gcn bench-check bench.json --baseline BENCH_10.json
     // Here in-process: record a small corpus-search workload, replay it
     // twice (byte-identical outcome dumps — the CI determinism gate),
     // and read the bench-serving-v1 snapshot off the replay's metrics.
@@ -170,7 +173,7 @@ fn main() -> anyhow::Result<()> {
     let (replay_metrics, wall_s, dump) = run_replay(&replay_cfg, &trace, None)?;
     let (_, _, dump2) = run_replay(&replay_cfg, &trace, None)?;
     anyhow::ensure!(dump == dump2, "replay determinism violated: outcome dumps differ");
-    let snap = bench_snapshot(&replay_metrics, wall_s, 9, "measured: quickstart step 8");
+    let snap = bench_snapshot(&replay_metrics, wall_s, 10, "measured: quickstart step 8");
     check_bench(&snap).map_err(|e| anyhow::anyhow!("bench snapshot schema: {e}"))?;
     println!(
         "record/replay: {} queries recorded, 2 replays byte-identical; \
@@ -180,6 +183,67 @@ fn main() -> anyhow::Result<()> {
         snap.get("throughput_qps").as_f64().unwrap_or(0.0)
     );
     let _ = std::fs::remove_file(&trace_path);
+
+    // 9. Live corpus + coarse-to-fine cascade over the wire (DESIGN.md
+    // S20). Operationally:
+    //     spa-gcn serve --listen 127.0.0.1:7700 --engine native --corpus 64
+    //     spa-gcn load  --connect 127.0.0.1:7700 --topk 3 --budget 8 --upserts 2
+    // Register the step-6 molecules as a live CorpusStore (generation
+    // 1), upsert a new molecule through the front door — the response
+    // acks the bumped epoch — then ask a budgeted top-k: the coarse
+    // stage prunes candidates with integer signal distances before the
+    // NTN+FCN tail runs, and the response pins the epoch the query was
+    // admitted against.
+    let store = Arc::new(CorpusStore::build(
+        "quickstart-live",
+        &entries,
+        cfg.n_max,
+        cfg.num_labels,
+    )?);
+    let server = NetServer::start(
+        cfg.clone(),
+        vec![EngineBuilder::new(EngineKind::Native, artifacts.clone()).into_factory()],
+        PipelineConfig::default(),
+        NetConfig::default(),
+        vec![Arc::clone(&store)],
+        "127.0.0.1:0",
+    )?;
+    server.wait_ready();
+    let mut client = NetClient::connect(&server.addr().to_string(), "quickstart")?;
+    let fresh = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    match client.upsert("quickstart-live", 100, fresh)?.resp {
+        Response::Mutated { epoch, size } => {
+            println!("upsert acked: corpus now {size} candidates at epoch {epoch}");
+            anyhow::ensure!(epoch == 2, "first mutation must publish generation 2");
+            anyhow::ensure!(size == entries.len() + 1, "upsert must grow the corpus by one");
+        }
+        other => anyhow::bail!("unexpected upsert response: {other:?}"),
+    }
+    match client.topk_budgeted("quickstart-live", g1.clone(), 3, 8)?.resp {
+        Response::TopK { ranked, epoch, .. } => {
+            println!(
+                "budgeted top-3 at epoch {epoch} (cheap signals keep 8 of {} candidates):",
+                entries.len() + 1
+            );
+            for (rank, (id, score)) in ranked.iter().enumerate() {
+                println!("  #{} corpus graph {id}: {score:.6}", rank + 1);
+            }
+            anyhow::ensure!(epoch == 2, "response must pin the post-upsert admission epoch");
+        }
+        other => anyhow::bail!("unexpected top-k response: {other:?}"),
+    }
+    drop(client);
+    let live_metrics = server.finish();
+    let live_table = live_metrics.render_table("quickstart live corpus");
+    anyhow::ensure!(
+        live_table.get("cascade queries").is_some(),
+        "budgeted query must leave cascade telemetry"
+    );
+    println!(
+        "cascade telemetry: {} budgeted queries, mean pruned {}",
+        live_table.get("cascade queries").unwrap_or_default(),
+        live_table.get("cascade pruned mean").unwrap_or_default()
+    );
 
     println!("quickstart OK");
     Ok(())

@@ -34,6 +34,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("NET-QUERY-CONFINED", "only net/admission.rs constructs Query values"),
     ("NET-DROP-NEWEST", "the admission queue keeps SendPolicy::DropNewest"),
     ("TRACE-CONFINED", "only coordinator/trace.rs constructs TraceEntry values (TraceWriter/Trace::parse are the codec)"),
+    ("EPOCH-SWAP-CONFINED", "only coordinator/corpus_store.rs Arc-wraps a Corpus (epoch generations swap through CorpusStore)"),
     ("PANIC-FREE", "serving threads (net/, coordinator pipeline/channel/batcher/router) carry no panic-capable tokens"),
     ("LOCK-ORDER", "the per-function lock/channel acquisition graph has no cross-module cycle"),
     ("WAIVER-MALFORMED", "every waiver entry parses and carries a justification"),
@@ -149,6 +150,7 @@ pub fn run(model: &RepoModel, waivers_text: &str) -> Vec<Finding> {
     kernel_dispatch(model, &mut raw);
     net_front_door(model, &mut raw);
     trace_confined(model, &mut raw);
+    epoch_swap_confined(model, &mut raw);
     panic_free(model, &mut raw);
     lock_order(model, &mut raw);
 
@@ -568,6 +570,36 @@ fn trace_confined(m: &RepoModel, out: &mut Vec<Finding>) {
         &["impl", "TraceRecorder"],
         "TRACE-CONFINED",
         "the TraceRecorder tap disappeared from coordinator/trace.rs",
+        out,
+    );
+}
+
+/// EPOCH-SWAP-CONFINED (DESIGN.md S20): live-corpus generations are
+/// born in exactly one place — the rebuild-and-swap commit in
+/// coordinator/corpus_store.rs. Any other non-test `Arc::new(Corpus...)`
+/// is a corpus outside the store's epoch ledger: queries admitted
+/// against it can't be pinned, replayed, or shard-merge-checked by
+/// epoch. Test scope stays legal (fixtures build corpora directly);
+/// `Arc::new(CorpusSnapshot ...)` never matches — `CorpusSnapshot` is
+/// a different token than `Corpus`.
+fn epoch_swap_confined(m: &RepoModel, out: &mut Vec<Finding>) {
+    const STORE_RS: &str = "rust/src/coordinator/corpus_store.rs";
+    for f in m.files.iter().filter(|f| f.path.starts_with("rust/src/") && f.path != STORE_RS) {
+        for line in f.find_seq(&["Arc", ":", ":", "new", "(", "Corpus"], false) {
+            out.push(Finding::new(
+                "EPOCH-SWAP-CONFINED",
+                &f.path,
+                line,
+                "corpus construction bypassed the epoch-snapshotted CorpusStore".into(),
+            ));
+        }
+    }
+    require_seq(
+        m,
+        STORE_RS,
+        &["impl", "CorpusStore"],
+        "EPOCH-SWAP-CONFINED",
+        "the CorpusStore snapshot swap disappeared from coordinator/corpus_store.rs",
         out,
     );
 }
@@ -1109,6 +1141,28 @@ mod tests {
     }
 
     #[test]
+    fn epoch_swap_confined_to_corpus_store() {
+        let bad = lint(vec![(
+            "rust/src/coordinator/server.rs",
+            "fn f() { let c = Arc::new(Corpus::from_db(\"x\", &db, 8, 4)?); }",
+        )]);
+        assert!(rules_fired(&bad).contains(&"EPOCH-SWAP-CONFINED"), "{bad:?}");
+        // Test scope stays legal: fixtures build corpora directly.
+        let in_test = lint(vec![(
+            "rust/src/coordinator/pipeline.rs",
+            "fn gather(c: &Corpus) { c.rank_sharded(); }\n\
+             #[cfg(test)] mod tests { fn t() { let c = Arc::new(Corpus::build(\"c\", &e, 8, 4).unwrap()); } }",
+        )]);
+        assert!(!rules_fired(&in_test).contains(&"EPOCH-SWAP-CONFINED"), "{in_test:?}");
+        // The store itself swaps legally, and CorpusSnapshot is not Corpus.
+        let ok = lint(vec![(
+            "rust/src/coordinator/corpus_store.rs",
+            "impl CorpusStore { fn commit(&self) { let s = Arc::new(CorpusSnapshot { epoch, corpus: Arc::new(corpus) }); } }",
+        )]);
+        assert!(!rules_fired(&ok).contains(&"EPOCH-SWAP-CONFINED"), "{ok:?}");
+    }
+
+    #[test]
     fn every_rule_id_is_documented() {
         let ids: BTreeSet<&str> = RULES.iter().map(|(id, _)| *id).collect();
         for id in [
@@ -1117,6 +1171,7 @@ mod tests {
             "DET-RANK-SITE",
             "ARCH-DAG",
             "TRACE-CONFINED",
+            "EPOCH-SWAP-CONFINED",
             "PANIC-FREE",
             "LOCK-ORDER",
             "WAIVER-STALE",

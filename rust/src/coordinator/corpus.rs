@@ -10,11 +10,51 @@
 //! engine-agnostic: embeddings depend on an engine's weights, so they
 //! live in each engine's cache, not here.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
 
 use crate::graph::dataset::GraphDb;
-use crate::graph::encode::{encode, EncodeError, EncodedGraph, GraphKey};
+use crate::graph::encode::{encode, CheapSignals, EncodeError, EncodedGraph, GraphKey};
 use crate::graph::Graph;
+
+/// Why a corpus could not be built or grown.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CorpusError {
+    /// Two entries claimed the same candidate id. [`Corpus::rank`]
+    /// documents a deterministic smaller-id tie-break; with duplicate
+    /// ids the same id could appear twice in one top-k response, so
+    /// they are rejected at build/upsert time instead of corrupting
+    /// rankings later.
+    DuplicateId { id: u64 },
+    /// A graph the artifact shapes cannot hold.
+    Encode(EncodeError),
+}
+
+impl std::fmt::Display for CorpusError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CorpusError::DuplicateId { id } => {
+                write!(f, "duplicate candidate id {id}")
+            }
+            CorpusError::Encode(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for CorpusError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CorpusError::Encode(e) => Some(e),
+            CorpusError::DuplicateId { .. } => None,
+        }
+    }
+}
+
+impl From<EncodeError> for CorpusError {
+    fn from(e: EncodeError) -> Self {
+        CorpusError::Encode(e)
+    }
+}
 
 /// A contiguous view over one slice of a corpus's candidates — the unit
 /// the scatter stage hands to one executor lane. Shards are cheap id
@@ -42,31 +82,103 @@ impl CorpusShard {
 
 /// Why a set of shard partials could not be merged back into one
 /// ranking: the shards must tile the corpus exactly, one score per
-/// candidate. The gather stage converts this into a typed engine error
-/// instead of panicking its thread.
+/// candidate, and every partial must have been scored against the same
+/// corpus generation as the merging corpus. The gather stage converts
+/// this into a typed engine error instead of panicking its thread.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct ShardCoverageError {
-    /// Human-readable description of the coverage violation.
-    pub detail: String,
+pub enum ShardCoverageError {
+    /// The shards do not tile the corpus (gap, overlap, out-of-range,
+    /// or a score-count mismatch).
+    Coverage {
+        /// Human-readable description of the coverage violation.
+        detail: String,
+    },
+    /// A partial was scored against a different corpus epoch than the
+    /// one merging it — a live-corpus mutation landed mid-flight and
+    /// two generations almost mixed into one ranking.
+    EpochMismatch { expected: u64, got: u64 },
 }
 
 impl std::fmt::Display for ShardCoverageError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "shard merge: {}", self.detail)
+        match self {
+            ShardCoverageError::Coverage { detail } => {
+                write!(f, "shard merge: {detail}")
+            }
+            ShardCoverageError::EpochMismatch { expected, got } => {
+                write!(
+                    f,
+                    "shard merge: partial from corpus epoch {got}, merging at epoch {expected}"
+                )
+            }
+        }
     }
 }
 
 impl std::error::Error for ShardCoverageError {}
 
+/// One lane's scored slice of a scattered top-k query, stamped with the
+/// epoch of the corpus snapshot the lane scored against.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPartial<'a> {
+    /// Epoch of the corpus the scores were computed against.
+    pub epoch: u64,
+    /// The candidate range the scores cover.
+    pub shard: CorpusShard,
+    /// One score per candidate in `shard`, corpus order.
+    pub scores: &'a [f32],
+}
+
+/// A balanced shard plan with its per-shard distinct-fingerprint counts
+/// precomputed — the scatter stage reads `uniques[i]` as a field
+/// instead of hashing candidates per query (see [`Corpus::shard_plan`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Contiguous shards tiling the corpus, sizes within ±1.
+    pub shards: Vec<CorpusShard>,
+    /// Distinct fingerprints per shard, parallel to `shards` — what a
+    /// cold lane pays in GCN forwards for that shard.
+    pub uniques: Vec<usize>,
+}
+
+/// The coarse stage's verdict for one budgeted top-k query: which
+/// candidates survive to the exact NTN+FCN tail (DESIGN.md S20).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrunePlan {
+    /// One flag per candidate, [`Corpus::graphs`] order.
+    pub keep: Vec<bool>,
+    /// Number of `true` flags.
+    pub survivors: usize,
+    /// Candidates ruled out by the cheap signals.
+    pub pruned: usize,
+    /// Wall time the coarse stage took, microseconds.
+    pub prune_us: u64,
+}
+
 /// An immutable named set of candidate graphs, encoded once at build
-/// time for the artifact shapes it will be served with.
+/// time for the artifact shapes it will be served with. Liveness comes
+/// from above: `CorpusStore` swaps whole immutable `Corpus` generations
+/// (each stamped with an epoch), it never mutates one in place.
 #[derive(Debug)]
 pub struct Corpus {
     name: String,
     ids: Vec<u64>,
     graphs: Vec<EncodedGraph>,
     keys: Vec<GraphKey>,
+    /// Cheap per-candidate signals (node/edge counts, label histogram),
+    /// parallel to `graphs` — the coarse stage of cascade retrieval.
+    signals: Vec<CheapSignals>,
+    /// `prev_same[i]` = index of the nearest earlier candidate with the
+    /// same fingerprint, if any. Lets [`Corpus::unique_in`] count
+    /// distinct graphs in any contiguous shard with a linear scan and
+    /// zero hashing on the per-query scatter path.
+    prev_same: Vec<Option<usize>>,
     unique: usize,
+    /// Generation stamp assigned by the owning `CorpusStore` (0 for a
+    /// standalone build). Queries resolve one epoch at admission and
+    /// carry it end-to-end; `rank_sharded` refuses partials from any
+    /// other epoch.
+    epoch: u64,
     /// The artifact shapes the candidates were encoded for; admission
     /// rejects a corpus whose shapes don't match the serving model.
     n_max: usize,
@@ -82,7 +194,7 @@ impl Corpus {
         entries: &[(u64, Graph)],
         n_max: usize,
         num_labels: usize,
-    ) -> Result<Self, EncodeError> {
+    ) -> Result<Self, CorpusError> {
         Self::build_from(
             name.into(),
             entries.iter().map(|(id, g)| (*id, g)),
@@ -98,7 +210,7 @@ impl Corpus {
         db: &GraphDb,
         n_max: usize,
         num_labels: usize,
-    ) -> Result<Self, EncodeError> {
+    ) -> Result<Self, CorpusError> {
         Self::build_from(
             name.into(),
             db.graphs.iter().enumerate().map(|(i, g)| (i as u64, g)),
@@ -114,26 +226,55 @@ impl Corpus {
         entries: impl Iterator<Item = (u64, &'a Graph)>,
         n_max: usize,
         num_labels: usize,
-    ) -> Result<Self, EncodeError> {
+    ) -> Result<Self, CorpusError> {
         let mut ids = Vec::new();
         let mut graphs = Vec::new();
         let mut keys = Vec::new();
+        let mut signals = Vec::new();
+        let mut seen_ids = HashSet::new();
         for (id, g) in entries {
+            if !seen_ids.insert(id) {
+                return Err(CorpusError::DuplicateId { id });
+            }
             let e = encode(g, n_max, num_labels)?;
+            signals.push(CheapSignals::from_graph(g, num_labels));
             keys.push(e.fingerprint());
             graphs.push(e);
             ids.push(id);
         }
-        let unique = keys.iter().map(|k| k.0).collect::<HashSet<u128>>().len();
+        // Build-time hashing is fine — this is the one place that may
+        // hash fingerprints; every per-query path reads `prev_same`.
+        let mut last: HashMap<u128, usize> = HashMap::new();
+        let mut prev_same = Vec::with_capacity(keys.len());
+        for (i, k) in keys.iter().enumerate() {
+            prev_same.push(last.insert(k.0, i));
+        }
+        let unique = prev_same.iter().filter(|p| p.is_none()).count();
         Ok(Corpus {
             name,
             ids,
             graphs,
             keys,
+            signals,
+            prev_same,
             unique,
+            epoch: 0,
             n_max,
             num_labels,
         })
+    }
+
+    /// Stamp this corpus with a generation number. Only `CorpusStore`
+    /// assigns non-zero epochs (the EPOCH-SWAP-CONFINED lint keeps
+    /// production snapshot construction in `corpus_store.rs`).
+    pub fn with_epoch(mut self, epoch: u64) -> Self {
+        self.epoch = epoch;
+        self
+    }
+
+    /// The generation this corpus belongs to (0 for standalone builds).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// The corpus name (reports, logs).
@@ -177,6 +318,12 @@ impl Corpus {
         &self.keys
     }
 
+    /// Cheap per-candidate signals, parallel to [`Corpus::graphs`] —
+    /// the coarse stage of cascade retrieval reads these.
+    pub fn signals(&self) -> &[CheapSignals] {
+        &self.signals
+    }
+
     /// Number of distinct graphs (by fingerprint) — the exact number of
     /// GCN forwards a cold top-k query over this corpus costs, query
     /// graph excluded.
@@ -218,29 +365,91 @@ impl Corpus {
     /// views over the same fingerprinted candidates, so dedup awareness
     /// costs no re-hashing.
     pub fn unique_in(&self, shard: CorpusShard) -> usize {
-        self.keys[shard.start..shard.end]
+        // A candidate is the shard-local first of its fingerprint
+        // exactly when its nearest earlier duplicate (if any) falls
+        // before the shard: a linear scan over the precomputed
+        // `prev_same` field, no per-query hashing.
+        self.prev_same[shard.start..shard.end]
             .iter()
-            .map(|k| k.0)
-            .collect::<HashSet<u128>>()
-            .len()
+            .filter(|p| p.map_or(true, |prev| prev < shard.start))
+            .count()
+    }
+
+    /// Build the balanced shard plan for `n` lanes with every shard's
+    /// distinct-fingerprint count precomputed — one linear pass at plan
+    /// time, so the scatter stage reads `uniques[i]` as a field.
+    pub fn shard_plan(&self, n: usize) -> ShardPlan {
+        let shards = self.shards(n);
+        let uniques = shards.iter().map(|s| self.unique_in(*s)).collect();
+        ShardPlan { shards, uniques }
+    }
+
+    /// Coarse stage of cascade retrieval: keep the `budget` candidates
+    /// whose [`CheapSignals`] are nearest the query's, rule out the
+    /// rest before any of them costs a GCN forward or an NTN+FCN tail.
+    /// Selection is deterministic — integer `(distance, index)` keys,
+    /// smaller index on ties — and a budget covering the whole corpus
+    /// degenerates to keep-everything (`Exact` never calls this).
+    pub fn prune(&self, query: &CheapSignals, budget: usize) -> PrunePlan {
+        let started = Instant::now();
+        let n = self.len();
+        let mut keep = vec![false; n];
+        let budget = budget.max(1);
+        if budget >= n {
+            keep.iter_mut().for_each(|f| *f = true);
+            return PrunePlan {
+                keep,
+                survivors: n,
+                pruned: 0,
+                prune_us: started.elapsed().as_micros() as u64,
+            };
+        }
+        let mut order: Vec<(u64, usize)> = self
+            .signals
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (query.distance(s), i))
+            .collect();
+        // O(n) selection; membership of the first `budget` entries is
+        // deterministic because every (distance, index) key is unique.
+        order.select_nth_unstable(budget - 1);
+        for &(_, i) in order.iter().take(budget) {
+            keep[i] = true;
+        }
+        PrunePlan {
+            keep,
+            survivors: budget,
+            pruned: n - budget,
+            prune_us: started.elapsed().as_micros() as u64,
+        }
     }
 
     /// Merge scattered shard partials back into one ranking. Each
-    /// partial is `(shard, scores-for-that-shard)`; together they must
-    /// tile the corpus exactly (no gap, no overlap, one score per
-    /// candidate). The merged ranking goes through [`Corpus::rank`] —
-    /// the one and only sort/tie-break implementation — so sharded and
-    /// unsharded results are bit-identical by construction.
+    /// [`ShardPartial`] must carry this corpus's epoch (a partial
+    /// scored against another generation is refused — mutations landing
+    /// mid-flight can never mix epochs into one ranking), and together
+    /// the shards must tile the corpus exactly (no gap, no overlap, one
+    /// score per candidate). The merged ranking goes through
+    /// [`Corpus::rank`] — the one and only sort/tie-break
+    /// implementation — so sharded and unsharded results are
+    /// bit-identical by construction.
     pub fn rank_sharded(
         &self,
-        partials: &[(CorpusShard, &[f32])],
+        partials: &[ShardPartial],
         k: usize,
     ) -> Result<Vec<(u64, f32)>, ShardCoverageError> {
         let mut scores = vec![0.0f32; self.len()];
         let mut covered = vec![false; self.len()];
-        for (shard, s) in partials {
+        for p in partials {
+            if p.epoch != self.epoch {
+                return Err(ShardCoverageError::EpochMismatch {
+                    expected: self.epoch,
+                    got: p.epoch,
+                });
+            }
+            let shard = p.shard;
             if shard.end > self.len() || shard.start > shard.end {
-                return Err(ShardCoverageError {
+                return Err(ShardCoverageError::Coverage {
                     detail: format!(
                         "shard {}..{} outside corpus of {} candidates",
                         shard.start,
@@ -249,21 +458,21 @@ impl Corpus {
                     ),
                 });
             }
-            if s.len() != shard.len() {
-                return Err(ShardCoverageError {
+            if p.scores.len() != shard.len() {
+                return Err(ShardCoverageError::Coverage {
                     detail: format!(
                         "shard {}..{} carries {} scores for {} candidates",
                         shard.start,
                         shard.end,
-                        s.len(),
+                        p.scores.len(),
                         shard.len()
                     ),
                 });
             }
-            for (i, &score) in s.iter().enumerate() {
+            for (i, &score) in p.scores.iter().enumerate() {
                 let at = shard.start + i;
                 if covered[at] {
-                    return Err(ShardCoverageError {
+                    return Err(ShardCoverageError::Coverage {
                         detail: format!("candidate {at} scored by two shards"),
                     });
                 }
@@ -272,7 +481,7 @@ impl Corpus {
             }
         }
         if let Some(gap) = covered.iter().position(|c| !c) {
-            return Err(ShardCoverageError {
+            return Err(ShardCoverageError::Coverage {
                 detail: format!("candidate {gap} not covered by any shard"),
             });
         }
@@ -338,7 +547,33 @@ mod tests {
     fn build_rejects_unservable_graphs() {
         let big = Graph::new(10, (1..10).map(|v| (0u16, v)).collect(), vec![0; 10]);
         let err = Corpus::build("bad", &[(0, big)], 8, 4).unwrap_err();
-        assert!(matches!(err, EncodeError::TooManyNodes { .. }));
+        assert!(matches!(
+            err,
+            CorpusError::Encode(EncodeError::TooManyNodes { .. })
+        ));
+    }
+
+    #[test]
+    fn build_rejects_duplicate_ids() {
+        let g = Graph::new(2, vec![(0, 1)], vec![0, 1]);
+        let h = Graph::new(3, vec![(0, 1)], vec![0, 1, 2]);
+        // Same id, different graphs: still a duplicate — ids are the
+        // ranking identity, not the content fingerprint.
+        let err = Corpus::build("dup-id", &[(7, g.clone()), (7, h)], 8, 4).unwrap_err();
+        assert_eq!(err, CorpusError::DuplicateId { id: 7 });
+        assert!(err.to_string().contains("duplicate candidate id 7"));
+        // Distinct ids over identical graphs are fine (that's the
+        // fingerprint-dedup case, not an id collision).
+        assert!(Corpus::build("ok", &[(1, g.clone()), (2, g)], 8, 4).is_ok());
+    }
+
+    #[test]
+    fn epoch_stamps_and_defaults() {
+        let g = Graph::new(2, vec![(0, 1)], vec![0, 1]);
+        let c = Corpus::build("e0", &[(0, g)], 8, 4).unwrap();
+        assert_eq!(c.epoch(), 0, "standalone builds are generation 0");
+        let c = c.with_epoch(41);
+        assert_eq!(c.epoch(), 41);
     }
 
     #[test]
@@ -391,6 +626,55 @@ mod tests {
         // original: both shards then count it as locally unique.
         let shards = c.shards(2); // 0..3, 3..6
         assert_eq!(c.unique_in(shards[0]) + c.unique_in(shards[1]), 6);
+        // A shard containing both copies counts the pair once.
+        let both = CorpusShard { start: 0, end: 6 };
+        assert_eq!(c.unique_in(both), 5);
+    }
+
+    #[test]
+    fn shard_plan_precomputes_per_shard_uniques() {
+        let c = corpus_with_dup();
+        for n in 1..=6 {
+            let plan = c.shard_plan(n);
+            assert_eq!(plan.shards, c.shards(n), "n={n}");
+            let expect: Vec<usize> =
+                plan.shards.iter().map(|s| c.unique_in(*s)).collect();
+            assert_eq!(plan.uniques, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn prune_keeps_nearest_by_cheap_signals_deterministically() {
+        // Candidates at increasing cheap-distance from a 2-node query:
+        // ids 0,1 are 2-node graphs (distance 0 to the query profile),
+        // then progressively larger graphs.
+        let mk = |n: usize| {
+            Graph::new(n, (1..n).map(|v| (0u16, v as u16)).collect(), vec![1; n])
+        };
+        let entries: Vec<(u64, Graph)> =
+            (0..8).map(|i| (i as u64, mk(2 + (i as usize) / 2))).collect();
+        let c = Corpus::build("prune", &entries, 16, 4).unwrap();
+        let q = CheapSignals::from_graph(&mk(2), 4);
+        let plan = c.prune(&q, 3);
+        assert_eq!(plan.survivors, 3);
+        assert_eq!(plan.pruned, 5);
+        assert_eq!(plan.keep.iter().filter(|&&k| k).count(), 3);
+        // ids 0,1 tie at distance 0; id 2 wins the next slot on the
+        // (distance, index) key over its equal-distance peer id 3.
+        assert_eq!(plan.keep[..4], [true, true, true, false]);
+        // Deterministic across calls (timing aside).
+        assert_eq!(c.prune(&q, 3).keep, plan.keep);
+        // Budget >= len keeps everything; budget 0 clamps to 1.
+        assert_eq!(c.prune(&q, 100).survivors, 8);
+        assert_eq!(c.prune(&q, 0).survivors, 1);
+    }
+
+    fn part<'a>(c: &Corpus, shard: CorpusShard, scores: &'a [f32]) -> ShardPartial<'a> {
+        ShardPartial {
+            epoch: c.epoch(),
+            shard,
+            scores,
+        }
     }
 
     #[test]
@@ -399,9 +683,9 @@ mod tests {
         let scores = [0.3, 0.9, 0.5, 0.9, 0.1, 0.5];
         for n in 1..=6 {
             let shards = c.shards(n);
-            let partials: Vec<(CorpusShard, &[f32])> = shards
+            let partials: Vec<ShardPartial> = shards
                 .iter()
-                .map(|s| (*s, &scores[s.start..s.end]))
+                .map(|s| part(&c, *s, &scores[s.start..s.end]))
                 .collect();
             for k in [0usize, 1, 3, 6, 13] {
                 assert_eq!(
@@ -414,15 +698,49 @@ mod tests {
         // A gap, an overlap, and a length mismatch are each rejected.
         let s02 = CorpusShard { start: 0, end: 2 };
         let s26 = CorpusShard { start: 2, end: 6 };
-        assert!(c.rank_sharded(&[(s02, &scores[0..2])], 3).is_err());
+        assert!(c.rank_sharded(&[part(&c, s02, &scores[0..2])], 3).is_err());
         assert!(c
-            .rank_sharded(&[(s02, &scores[0..2]), (s02, &scores[0..2]), (s26, &scores[2..6])], 3)
+            .rank_sharded(
+                &[
+                    part(&c, s02, &scores[0..2]),
+                    part(&c, s02, &scores[0..2]),
+                    part(&c, s26, &scores[2..6])
+                ],
+                3
+            )
             .is_err());
         assert!(c
-            .rank_sharded(&[(s02, &scores[0..1]), (s26, &scores[2..6])], 3)
+            .rank_sharded(
+                &[part(&c, s02, &scores[0..1]), part(&c, s26, &scores[2..6])],
+                3
+            )
             .is_err());
         let oob = CorpusShard { start: 4, end: 9 };
-        assert!(c.rank_sharded(&[(oob, &scores[0..5])], 3).is_err());
+        assert!(c.rank_sharded(&[part(&c, oob, &scores[0..5])], 3).is_err());
+    }
+
+    #[test]
+    fn rank_sharded_rejects_mixed_epoch_partials() {
+        let c = corpus_with_dup().with_epoch(3);
+        let scores = [0.3, 0.9, 0.5, 0.9, 0.1, 0.5];
+        let shards = c.shards(2);
+        // Both partials at the corpus epoch: fine.
+        let good: Vec<ShardPartial> = shards
+            .iter()
+            .map(|s| part(&c, *s, &scores[s.start..s.end]))
+            .collect();
+        assert!(c.rank_sharded(&good, 3).is_ok());
+        // One partial scored against an older generation: refused with
+        // the typed epoch error even though coverage would be perfect.
+        let mut mixed = good.clone();
+        mixed[1].epoch = 2;
+        assert_eq!(
+            c.rank_sharded(&mixed, 3).unwrap_err(),
+            ShardCoverageError::EpochMismatch {
+                expected: 3,
+                got: 2
+            }
+        );
     }
 
     #[test]

@@ -133,6 +133,13 @@ pub struct Metrics {
     /// Slowest-minus-fastest shard execute time per scattered query, µs
     /// — the Accel-GCN-style balance witness (`topk lane spread (ms)`).
     pub topk_spread_us: Samples,
+    /// Candidates pruned by the cheap-signal cascade per budgeted top-k
+    /// query (queries served `CascadeMode::Exact` contribute nothing).
+    pub cascade_pruned: Samples,
+    /// Candidates that survived the cascade and were scored.
+    pub cascade_survivors: Samples,
+    /// Prune-stage time per budgeted query, µs.
+    pub cascade_prune_us: Samples,
     /// Queries rejected at admission (or during shutdown).
     pub rejected: u64,
     /// Queries answered with an engine error.
@@ -179,6 +186,9 @@ impl Metrics {
             topk: 0,
             topk_shards: Samples::new(),
             topk_spread_us: Samples::new(),
+            cascade_pruned: Samples::new(),
+            cascade_survivors: Samples::new(),
+            cascade_prune_us: Samples::new(),
             rejected: 0,
             engine_errors: 0,
             channels: Vec::new(),
@@ -198,6 +208,11 @@ impl Metrics {
                     if let Some(sh) = r.sharding {
                         self.topk_shards.push(sh.shards as f64);
                         self.topk_spread_us.push(sh.spread_us);
+                    }
+                    if let Some(c) = r.cascade {
+                        self.cascade_pruned.push(c.pruned as f64);
+                        self.cascade_survivors.push(c.survivors as f64);
+                        self.cascade_prune_us.push(c.prune_us as f64);
                     }
                 } else {
                     // Pair queries only: see the `batch_sizes` field doc.
@@ -369,6 +384,26 @@ impl Metrics {
                     fmt(self.topk_spread_us.mean() / 1000.0),
                 ]);
             }
+            // Cascade rows: only budgeted queries feed these samples,
+            // so an all-Exact run renders no cascade rows at all.
+            if !self.cascade_pruned.is_empty() {
+                t.row(vec![
+                    "cascade queries".into(),
+                    format!("{}", self.cascade_pruned.len()),
+                ]);
+                t.row(vec![
+                    "cascade pruned mean".into(),
+                    fmt(self.cascade_pruned.mean()),
+                ]);
+                t.row(vec![
+                    "cascade survivors mean".into(),
+                    fmt(self.cascade_survivors.mean()),
+                ]);
+                t.row(vec![
+                    "cascade prune mean (ms)".into(),
+                    fmt(self.cascade_prune_us.mean() / 1000.0),
+                ]);
+            }
         }
         if self.embed_hits + self.embed_misses > 0 {
             t.row(vec![
@@ -454,7 +489,41 @@ mod tests {
             telemetry: QueryTelemetry::default(),
             engine: None,
             sharding: None,
+            cascade: None,
         }
+    }
+
+    #[test]
+    fn cascade_rows_render_only_for_budgeted_queries() {
+        use super::super::query::CascadeInfo;
+        let mut m = Metrics::new();
+        // An Exact top-k query contributes nothing to the cascade rows.
+        m.record(&res(Outcome::TopK(vec![(0, 0.9)])));
+        assert!(m.cascade_pruned.is_empty());
+        assert!(!m.render_table("t").render().contains("cascade"));
+        // Two budgeted queries.
+        let budgeted = res(Outcome::TopK(vec![(1, 0.8)])).with_cascade(CascadeInfo {
+            pruned: 3000,
+            survivors: 1096,
+            prune_us: 250,
+        });
+        m.record(&budgeted);
+        let budgeted2 = res(Outcome::TopK(vec![(2, 0.7)])).with_cascade(CascadeInfo {
+            pruned: 3100,
+            survivors: 996,
+            prune_us: 150,
+        });
+        m.record(&budgeted2);
+        assert_eq!(m.cascade_pruned.len(), 2);
+        assert_eq!(m.cascade_pruned.mean(), 3050.0);
+        assert_eq!(m.cascade_survivors.mean(), 1046.0);
+        assert_eq!(m.cascade_prune_us.mean(), 200.0);
+        let t = m.render_table("t");
+        assert_eq!(t.get("cascade queries"), Some("2"));
+        let rendered = t.render();
+        assert!(rendered.contains("cascade pruned mean"));
+        assert!(rendered.contains("cascade survivors mean"));
+        assert!(rendered.contains("cascade prune mean (ms)"));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 pub mod batcher;
 pub mod channel;
 pub mod corpus;
+pub mod corpus_store;
 pub mod load;
 pub mod metrics;
 pub mod pipeline;

@@ -67,10 +67,11 @@ use crate::runtime::{Engine, EngineCaps, EngineError, EngineFactory, QueryTeleme
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::channel::{channel, ChannelStats, NamedReceiver, NamedSender, SendPolicy, SendResult};
-use super::corpus::CorpusShard;
+use super::corpus::{Corpus, CorpusShard, PrunePlan, ShardPartial};
 use super::metrics::{LaneInfo, Metrics};
 use super::query::{
-    Outcome, Query, QueryPayload, QueryResult, RejectReason, ShardingInfo, StageTiming,
+    CascadeInfo, Outcome, Query, QueryPayload, QueryResult, RejectReason, ShardingInfo,
+    StageTiming,
 };
 use super::router::{Admission, CapsRouter, LaneCaps};
 
@@ -225,6 +226,11 @@ struct ShardOutcome {
 
 /// The success half of a [`ShardOutcome`].
 struct ShardDone {
+    /// Epoch of the corpus snapshot the lane scored against — stamped
+    /// from the payload's corpus (the one snapshot resolved at
+    /// admission), and re-checked by `rank_sharded` at merge time so
+    /// partials from two corpus generations can never blend.
+    epoch: u64,
     shard: CorpusShard,
     /// One score per shard candidate, shard order.
     scores: Vec<f32>,
@@ -1072,38 +1078,146 @@ fn encode_topk(
     }
 }
 
+/// The pruned-slot sentinel. Real similarities are sigmoid outputs
+/// (finite, non-negative), so a pruned candidate filled with `-inf`
+/// orders strictly after every scored one at the single rank site and
+/// is stripped by [`strip_pruned`] before the result leaves the
+/// pipeline.
+const PRUNED_SCORE: f32 = f32::NEG_INFINITY;
+
+/// Score one corpus-index window of a top-k query against a
+/// precomputed query embedding. Without a prune plan this is a single
+/// `score_corpus_with` call over the window; with one, each contiguous
+/// survivor run is scored separately — pruned candidates never reach
+/// the engine, which is the whole point of the cascade — and their
+/// slots are filled with [`PRUNED_SCORE`]. Returns one score per
+/// window candidate plus the serially-merged telemetry of the runs.
+fn score_window(
+    engine: &mut dyn Engine,
+    tag: &Arc<str>,
+    query_hg: &[f32],
+    corpus: &Corpus,
+    window: CorpusShard,
+    prune: Option<&PrunePlan>,
+) -> Result<(Vec<f32>, QueryTelemetry), EngineError> {
+    let run_scores = |engine: &mut dyn Engine, run: CorpusShard| {
+        let out = engine.score_corpus_with(query_hg, corpus.shard_graphs(run))?;
+        if out.scores.len() != run.len() {
+            // A misbehaving engine yields a typed error, not a gather
+            // coverage panic or a mis-shaped rank input.
+            return Err(EngineError::Backend {
+                engine: tag.to_string(),
+                detail: format!(
+                    "score_corpus_with returned {} scores for {} candidates",
+                    out.scores.len(),
+                    run.len()
+                ),
+            });
+        }
+        Ok(out)
+    };
+    let Some(plan) = prune else {
+        let out = run_scores(engine, window)?;
+        return Ok((out.scores, out.telemetry));
+    };
+    let mut scores = vec![PRUNED_SCORE; window.len()];
+    let mut telemetry = QueryTelemetry::default();
+    let mut i = window.start;
+    while i < window.end {
+        if !plan.keep[i] {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        while j < window.end && plan.keep[j] {
+            j += 1;
+        }
+        let run = CorpusShard { start: i, end: j };
+        let out = run_scores(engine, run)?;
+        scores[i - window.start..j - window.start].copy_from_slice(&out.scores);
+        telemetry.merge_serial(&out.telemetry);
+        i = j;
+    }
+    Ok((scores, telemetry))
+}
+
+/// Drop the pruned-slot sentinels from a ranking before it leaves the
+/// pipeline: a budgeted query answers with at most `survivors` entries,
+/// never with a candidate the cascade ruled out.
+fn strip_pruned(ranked: &mut Vec<(u64, f32)>, prune: Option<&Arc<PrunePlan>>) {
+    if prune.is_some() {
+        ranked.retain(|&(_, s)| s != PRUNED_SCORE);
+    }
+}
+
 /// Run one top-k query: the engine embeds the query once (cache-aware)
 /// and fans the NTN+FCN tail over the corpus; the ranking is assembled
 /// here, where the corpus ids live. Engines without corpus support
-/// answer with their typed error.
+/// answer with their typed error. Budgeted queries score survivor runs
+/// only (via [`score_window`]) on shard-capable engines; an engine
+/// with whole-corpus support but no shard API scores everything and
+/// masks afterwards — correct, just without the cascade's savings.
 fn execute_topk(
     engine: &mut dyn Engine,
     tag: &Arc<str>,
     job: TopKJob,
     results: &NamedSender<QueryResult>,
 ) {
-    let QueryPayload::TopK { corpus, k, .. } = &job.query.payload else {
+    let QueryPayload::TopK {
+        corpus, k, prune, ..
+    } = &job.query.payload
+    else {
         unreachable!("encode_topk only forwards top-k payloads");
     };
     let t0 = Instant::now();
-    match engine.score_corpus(&job.encoded, corpus.graphs()) {
-        Ok(out) if out.scores.len() != corpus.len() => {
-            // A misbehaving engine must yield a typed error, not panic
-            // the lane via rank()'s one-score-per-candidate contract.
-            let err = EngineError::Backend {
-                engine: tag.to_string(),
-                detail: format!(
-                    "score_corpus returned {} scores for {} candidates",
-                    out.scores.len(),
-                    corpus.len()
-                ),
-            };
-            let _ = results
-                .send(QueryResult::engine_error(&job.query, err, 1).with_engine(Arc::clone(tag)));
+    let whole = CorpusShard {
+        start: 0,
+        end: corpus.len(),
+    };
+    let scored: Result<(Vec<f32>, QueryTelemetry), EngineError> = match prune {
+        Some(plan) if engine.caps().supports_corpus_shards => {
+            engine.embed_query(&job.encoded).and_then(|q| {
+                let (scores, mut telemetry) =
+                    score_window(engine, tag, &q.embed.hg, corpus, whole, Some(plan))?;
+                let mut merged = q.telemetry;
+                merged.merge_serial(&telemetry);
+                telemetry = merged;
+                Ok((scores, telemetry))
+            })
         }
-        Ok(out) => {
-            let ranked = corpus.rank(&out.scores, *k);
-            let _ = results.send(QueryResult {
+        _ => engine.score_corpus(&job.encoded, corpus.graphs()).and_then(|out| {
+            if out.scores.len() != corpus.len() {
+                // A misbehaving engine must yield a typed error, not
+                // panic the lane via rank()'s one-score-per-candidate
+                // contract.
+                return Err(EngineError::Backend {
+                    engine: tag.to_string(),
+                    detail: format!(
+                        "score_corpus returned {} scores for {} candidates",
+                        out.scores.len(),
+                        corpus.len()
+                    ),
+                });
+            }
+            let mut scores = out.scores;
+            if let Some(plan) = prune {
+                // No shard API: everything was scored; mask the pruned
+                // slots so the contract (only survivors are ranked)
+                // still holds.
+                for (s, &keep) in scores.iter_mut().zip(&plan.keep) {
+                    if !keep {
+                        *s = PRUNED_SCORE;
+                    }
+                }
+            }
+            Ok((scores, out.telemetry))
+        }),
+    };
+    match scored {
+        Ok((scores, telemetry)) => {
+            let mut ranked = corpus.rank(&scores, *k);
+            strip_pruned(&mut ranked, prune.as_ref());
+            let mut result = QueryResult {
                 id: job.query.id,
                 outcome: Outcome::TopK(ranked),
                 latency_us: job.query.submitted.elapsed().as_secs_f64() * 1e6,
@@ -1114,14 +1228,23 @@ fn execute_topk(
                     encode_us: job.encode_us,
                     execute_us: t0.elapsed().as_secs_f64() * 1e6,
                 },
-                telemetry: out.telemetry,
+                telemetry,
                 engine: Some(Arc::clone(tag)),
                 // The whole-query path: one shard, nothing to spread.
                 sharding: Some(ShardingInfo {
                     shards: 1,
                     spread_us: 0.0,
                 }),
-            });
+                cascade: None,
+            };
+            if let Some(plan) = prune {
+                result = result.with_cascade(CascadeInfo {
+                    pruned: plan.pruned,
+                    survivors: plan.survivors,
+                    prune_us: plan.prune_us,
+                });
+            }
+            let _ = results.send(result);
         }
         Err(err) => {
             let _ = results.send(
@@ -1143,10 +1266,11 @@ fn execute_shard(engine: &mut dyn Engine, tag: &Arc<str>, job: ShardJob) {
         queue_us,
         encode_us,
     } = job;
-    let QueryPayload::TopK { corpus, .. } = &task.plan.query.payload else {
+    let QueryPayload::TopK { corpus, prune, .. } = &task.plan.query.payload else {
         unreachable!("shard tasks only carry top-k payloads");
     };
     let corpus = Arc::clone(corpus);
+    let prune = prune.clone();
     let t0 = Instant::now();
     let (embed, mut telemetry) = if task.is_embedder() {
         let encoded = encoded.expect("the embedder shard carries the encoded query");
@@ -1166,27 +1290,21 @@ fn execute_shard(engine: &mut dyn Engine, tag: &Arc<str>, job: ShardJob) {
             Err(err) => return fail_shard(task, err, Some(Arc::clone(tag))),
         }
     };
-    let graphs = corpus.shard_graphs(task.shard);
-    match engine.score_corpus_with(&embed.hg, graphs) {
-        Ok(out) if out.scores.len() != graphs.len() => {
-            // A misbehaving engine yields a typed error, not a gather
-            // coverage panic.
-            let err = EngineError::Backend {
-                engine: tag.to_string(),
-                detail: format!(
-                    "score_corpus_with returned {} scores for {} candidates",
-                    out.scores.len(),
-                    graphs.len()
-                ),
-            };
-            fail_shard(task, err, Some(Arc::clone(tag)));
-        }
-        Ok(out) => {
-            telemetry.merge_serial(&out.telemetry);
+    match score_window(
+        engine,
+        tag,
+        &embed.hg,
+        &corpus,
+        task.shard,
+        prune.as_deref(),
+    ) {
+        Ok((scores, shard_telemetry)) => {
+            telemetry.merge_serial(&shard_telemetry);
             task.report(
                 Ok(ShardDone {
+                    epoch: corpus.epoch(),
                     shard: task.shard,
-                    scores: out.scores,
+                    scores,
                     telemetry,
                     queue_us,
                     encode_us,
@@ -1277,7 +1395,10 @@ fn merge_shards(entry: GatherEntry) -> QueryResult {
         engines,
         ..
     } = entry;
-    let QueryPayload::TopK { corpus, k, .. } = &plan.query.payload else {
+    let QueryPayload::TopK {
+        corpus, k, prune, ..
+    } = &plan.query.payload
+    else {
         unreachable!("shard plans only carry top-k payloads");
     };
     let mut telemetry = QueryTelemetry::default();
@@ -1296,9 +1417,15 @@ fn merge_shards(entry: GatherEntry) -> QueryResult {
         exec_min = exec_min.min(p.execute_us);
         done.push(p);
     }
-    let partials: Vec<(CorpusShard, &[f32])> =
-        done.iter().map(|p| (p.shard, p.scores.as_slice())).collect();
-    let ranked = match corpus.rank_sharded(&partials, *k) {
+    let partials: Vec<ShardPartial> = done
+        .iter()
+        .map(|p| ShardPartial {
+            epoch: p.epoch,
+            shard: p.shard,
+            scores: p.scores.as_slice(),
+        })
+        .collect();
+    let mut ranked = match corpus.rank_sharded(&partials, *k) {
         Ok(ranked) => ranked,
         Err(e) => {
             // Unreachable through dispatch_topk (shards come from
@@ -1311,7 +1438,8 @@ fn merge_shards(entry: GatherEntry) -> QueryResult {
             return QueryResult::engine_error(&plan.query, err, 1);
         }
     };
-    QueryResult {
+    strip_pruned(&mut ranked, prune.as_ref());
+    let mut result = QueryResult {
         id: plan.query.id,
         outcome: Outcome::TopK(ranked),
         latency_us: plan.query.submitted.elapsed().as_secs_f64() * 1e6,
@@ -1329,7 +1457,16 @@ fn merge_shards(entry: GatherEntry) -> QueryResult {
             shards: plan.n_shards,
             spread_us: exec_max - exec_min,
         }),
+        cascade: None,
+    };
+    if let Some(plan) = prune {
+        result = result.with_cascade(CascadeInfo {
+            pruned: plan.pruned,
+            survivors: plan.survivors,
+            prune_us: plan.prune_us,
+        });
     }
+    result
 }
 
 fn execute_chunk(
@@ -1358,6 +1495,7 @@ fn execute_chunk(
                     telemetry: out.telemetry.get(i).cloned().unwrap_or_default(),
                     engine: Some(Arc::clone(tag)),
                     sharding: None,
+                    cascade: None,
                 });
             }
         }

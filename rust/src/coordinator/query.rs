@@ -6,7 +6,24 @@ use std::time::Instant;
 use crate::graph::Graph;
 use crate::runtime::{EngineError, QueryTelemetry};
 
-use super::corpus::Corpus;
+use super::corpus::{Corpus, PrunePlan};
+
+/// The exactness contract of a top-k query (DESIGN.md S20).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CascadeMode {
+    /// Score every candidate — bit-identical to the pre-cascade path.
+    Exact,
+    /// Coarse-to-fine: rule candidates out with cheap signals until at
+    /// most `budget` survive, then run the exact NTN+FCN tail over the
+    /// survivors only. Candidates whose cheap profile is far from the
+    /// query's can be ranked out without ever being scored, so the
+    /// returned ranking is best-effort below the survivor cut.
+    Budgeted {
+        /// Maximum candidates the exact stage may score (clamped to at
+        /// least 1).
+        budget: usize,
+    },
+}
 
 /// What one query asks for: an independent pair score (the original
 /// workload unit) or a one-vs-many ranking against a registered corpus
@@ -25,10 +42,21 @@ pub enum QueryPayload {
     TopK {
         /// The query graph (embedded once, cache-aware).
         graph: Graph,
-        /// Shared candidate set (pre-encoded, fingerprinted).
+        /// Shared candidate set (pre-encoded, fingerprinted). Resolved
+        /// exactly once at admission — every stage downstream scores
+        /// and merges against this same snapshot.
         corpus: Arc<Corpus>,
         /// How many ranked candidates to return (clamped to the corpus).
         k: usize,
+        /// Cached copy of `corpus.epoch()` — the generation this query
+        /// was admitted against, carried for traces and responses.
+        epoch: u64,
+        /// Exactness contract for this query.
+        mode: CascadeMode,
+        /// The coarse stage's verdict, computed once at admission for
+        /// `Budgeted` queries (`None` = score everything). Shared so a
+        /// scattered query's shards all read one plan.
+        prune: Option<Arc<PrunePlan>>,
     },
 }
 
@@ -53,11 +81,32 @@ impl Query {
         }
     }
 
-    /// Stamp a new top-k corpus query with the current time.
+    /// Stamp a new exact top-k corpus query with the current time.
     pub fn topk(id: u64, graph: Graph, corpus: Arc<Corpus>, k: usize) -> Self {
+        Self::topk_with(id, graph, corpus, k, CascadeMode::Exact)
+    }
+
+    /// Stamp a new top-k corpus query with an explicit exactness
+    /// contract. The epoch is pinned from the corpus snapshot here;
+    /// the prune plan (for `Budgeted`) is filled in at admission.
+    pub fn topk_with(
+        id: u64,
+        graph: Graph,
+        corpus: Arc<Corpus>,
+        k: usize,
+        mode: CascadeMode,
+    ) -> Self {
+        let epoch = corpus.epoch();
         Query {
             id,
-            payload: QueryPayload::TopK { graph, corpus, k },
+            payload: QueryPayload::TopK {
+                graph,
+                corpus,
+                k,
+                epoch,
+                mode,
+                prune: None,
+            },
             submitted: Instant::now(),
         }
     }
@@ -157,6 +206,18 @@ pub struct ShardingInfo {
     pub spread_us: f64,
 }
 
+/// What the coarse stage did for one budgeted top-k query — the
+/// cascade telemetry Metrics aggregates into `cascade *` rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CascadeInfo {
+    /// Candidates ruled out by cheap signals (never scored).
+    pub pruned: usize,
+    /// Candidates that reached the exact NTN+FCN tail.
+    pub survivors: usize,
+    /// Wall time of the coarse stage, µs.
+    pub prune_us: u64,
+}
+
 /// Completed query with timing and engine telemetry.
 #[derive(Debug, Clone)]
 pub struct QueryResult {
@@ -181,6 +242,9 @@ pub struct QueryResult {
     /// Scatter/gather shape for served top-k queries; `None` for pair
     /// queries, rejects and errors.
     pub sharding: Option<ShardingInfo>,
+    /// Coarse-stage telemetry for budgeted top-k queries; `None` when
+    /// the query ran `Exact` (or never reached the cascade).
+    pub cascade: Option<CascadeInfo>,
 }
 
 impl QueryResult {
@@ -195,6 +259,7 @@ impl QueryResult {
             telemetry: QueryTelemetry::default(),
             engine: None,
             sharding: None,
+            cascade: None,
         }
     }
 
@@ -209,6 +274,7 @@ impl QueryResult {
             telemetry: QueryTelemetry::default(),
             engine: None,
             sharding: None,
+            cascade: None,
         }
     }
 
@@ -221,6 +287,12 @@ impl QueryResult {
     /// Tag this result with its scatter/gather shape.
     pub fn with_sharding(mut self, sharding: ShardingInfo) -> Self {
         self.sharding = Some(sharding);
+        self
+    }
+
+    /// Tag this result with its coarse-stage telemetry.
+    pub fn with_cascade(mut self, cascade: CascadeInfo) -> Self {
+        self.cascade = Some(cascade);
         self
     }
 
@@ -260,6 +332,7 @@ mod tests {
             telemetry: QueryTelemetry::default(),
             engine: None,
             sharding: None,
+            cascade: None,
         }
     }
 
@@ -299,12 +372,36 @@ mod tests {
         let g = crate::graph::Graph::new(2, vec![(0, 1)], vec![0, 0]);
         let corpus =
             Arc::new(Corpus::build("c", &[(0, g.clone()), (7, g.clone())], 8, 4).unwrap());
-        let q = Query::topk(9, g, Arc::clone(&corpus), 1);
+        let q = Query::topk(9, g.clone(), Arc::clone(&corpus), 1);
         assert_eq!(q.id, 9);
         match &q.payload {
-            QueryPayload::TopK { corpus, k, .. } => {
+            QueryPayload::TopK {
+                corpus,
+                k,
+                epoch,
+                mode,
+                prune,
+                ..
+            } => {
                 assert_eq!(corpus.len(), 2);
                 assert_eq!(*k, 1);
+                assert_eq!(*epoch, 0, "standalone corpus pins epoch 0");
+                assert_eq!(*mode, CascadeMode::Exact, "4-arg constructor is exact");
+                assert!(prune.is_none(), "prune plans are admission's job");
+            }
+            other => panic!("expected TopK payload, got {other:?}"),
+        }
+        // topk_with pins the corpus's actual epoch and the given mode.
+        let stamped = Arc::new(
+            Corpus::build("c2", &[(0, g.clone())], 8, 4)
+                .unwrap()
+                .with_epoch(6),
+        );
+        let q = Query::topk_with(10, g, stamped, 1, CascadeMode::Budgeted { budget: 2 });
+        match &q.payload {
+            QueryPayload::TopK { epoch, mode, .. } => {
+                assert_eq!(*epoch, 6);
+                assert_eq!(*mode, CascadeMode::Budgeted { budget: 2 });
             }
             other => panic!("expected TopK payload, got {other:?}"),
         }

@@ -18,12 +18,13 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::graph::encode::CheapSignals;
 use crate::graph::Graph;
 use crate::nn::config::ModelConfig;
 use crate::runtime::{EngineCaps, EngineError};
 
 use super::channel::{NamedSender, SendResult};
-use super::query::{Query, QueryPayload, QueryResult, RejectReason};
+use super::query::{CascadeMode, Query, QueryPayload, QueryResult, RejectReason};
 
 /// Validate one graph against the model's static shapes. Public so the
 /// net front stage (`net/admission.rs`) can apply the *same* gate to
@@ -89,12 +90,30 @@ impl Admission {
     }
 
     /// Admit one query, or return the rejection result to send to the
-    /// responder.
+    /// responder. For a `Budgeted` top-k query this is also where the
+    /// cascade's coarse stage runs — once, against the same snapshot
+    /// the exact stage will score, before the query is ever enqueued —
+    /// so every downstream shard reads one shared [`PrunePlan`] and
+    /// the in-process and network paths prune identically.
     pub fn admit(&self, q: Query) -> Result<Query, QueryResult> {
-        match validate_payload(&self.cfg, &q.payload) {
-            Ok(()) => Ok(q),
-            Err(reason) => Err(QueryResult::rejected(&q, reason)),
+        if let Err(reason) = validate_payload(&self.cfg, &q.payload) {
+            return Err(QueryResult::rejected(&q, reason));
         }
+        let mut q = q;
+        if let QueryPayload::TopK {
+            graph,
+            corpus,
+            mode: CascadeMode::Budgeted { budget },
+            prune,
+            ..
+        } = &mut q.payload
+        {
+            if prune.is_none() {
+                let signals = CheapSignals::from_graph(graph, corpus.num_labels());
+                *prune = Some(Arc::new(corpus.prune(&signals, *budget)));
+            }
+        }
+        Ok(q)
     }
 }
 
@@ -384,6 +403,62 @@ mod tests {
                 model: (8, 4),
             })
         ));
+    }
+
+    #[test]
+    fn admission_computes_the_prune_plan_for_budgeted_queries() {
+        use super::super::corpus::Corpus;
+        use super::super::query::CascadeMode;
+        let adm = Admission::new(cfg());
+        let entries: Vec<(u64, Graph)> = (0..6)
+            .map(|i| (i as u64, graph(2 + (i as usize) / 2, 1)))
+            .collect();
+        let corpus = Arc::new(Corpus::build("c", &entries, 8, 4).unwrap());
+        // Exact queries pass through untouched — no plan, no pruning.
+        let q = adm
+            .admit(Query::topk(1, graph(2, 1), Arc::clone(&corpus), 3))
+            .unwrap();
+        match &q.payload {
+            QueryPayload::TopK { mode, prune, .. } => {
+                assert_eq!(*mode, CascadeMode::Exact);
+                assert!(prune.is_none());
+            }
+            other => panic!("expected TopK, got {other:?}"),
+        }
+        // Budgeted queries get their coarse verdict here, once.
+        let q = adm
+            .admit(Query::topk_with(
+                2,
+                graph(2, 1),
+                Arc::clone(&corpus),
+                3,
+                CascadeMode::Budgeted { budget: 2 },
+            ))
+            .unwrap();
+        match &q.payload {
+            QueryPayload::TopK { prune, .. } => {
+                let plan = prune.as_ref().expect("admission fills the plan");
+                assert_eq!(plan.survivors, 2);
+                assert_eq!(plan.pruned, 4);
+                // The 2-node candidates (ids 0, 1) are nearest the
+                // 2-node query.
+                assert_eq!(plan.keep[..3], [true, true, false]);
+            }
+            other => panic!("expected TopK, got {other:?}"),
+        }
+        // Validation still runs first: a budgeted query against an
+        // empty corpus is rejected before any pruning.
+        let empty = Arc::new(Corpus::build("e", &[], 8, 4).unwrap());
+        let res = adm
+            .admit(Query::topk_with(
+                3,
+                graph(2, 1),
+                empty,
+                3,
+                CascadeMode::Budgeted { budget: 2 },
+            ))
+            .unwrap_err();
+        assert!(res.is_rejected());
     }
 
     #[test]

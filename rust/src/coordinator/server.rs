@@ -33,10 +33,11 @@ use std::sync::Mutex;
 
 use super::batcher::BatchPolicy;
 use super::corpus::Corpus;
+use super::corpus_store::CorpusStore;
 use super::load::{poisson_schedule, Pacer};
 use super::metrics::Metrics;
 use super::pipeline::{Pipeline, PipelineConfig, ResultTap};
-use super::query::Query;
+use super::query::{CascadeMode, Query};
 use super::trace::{outcome_line, Trace, TraceHeader, TraceRecorder};
 
 /// Serving configuration (CLI `spa-gcn serve`).
@@ -68,6 +69,10 @@ pub struct ServeConfig {
     pub corpus_size: usize,
     /// How many ranked candidates each corpus query returns (`--topk K`).
     pub topk: usize,
+    /// Cascade candidate budget per top-k query (`--budget N`): 0 serves
+    /// `CascadeMode::Exact`; > 0 prunes to at most N candidates with
+    /// cheap signals before the NTN+FCN tail runs.
+    pub budget: usize,
     /// Record every admitted query (with its arrival offset) to this
     /// trace file (`--record PATH`, DESIGN.md S19). `None` = no tap.
     pub record: Option<PathBuf>,
@@ -86,6 +91,7 @@ impl Default for ServeConfig {
             pipeline_depth: 2,
             corpus_size: 0,
             topk: 10,
+            budget: 0,
             record: None,
         }
     }
@@ -151,9 +157,23 @@ impl ServeConfig {
     /// Title suffix describing the workload shape.
     fn workload_label(&self) -> String {
         if self.corpus_size > 0 {
-            format!(" corpus={} topk={}", self.corpus_size, self.topk)
+            let budget = if self.budget > 0 {
+                format!(" budget={}", self.budget)
+            } else {
+                String::new()
+            };
+            format!(" corpus={} topk={}{budget}", self.corpus_size, self.topk)
         } else {
             String::new()
+        }
+    }
+
+    /// The cascade mode top-k queries are built with.
+    pub(crate) fn cascade_mode(&self) -> CascadeMode {
+        if self.budget > 0 {
+            CascadeMode::Budgeted { budget: self.budget }
+        } else {
+            CascadeMode::Exact
         }
     }
 }
@@ -233,17 +253,20 @@ fn run_serve(cfg: &ServeConfig, pace_qps: Option<f64>) -> Result<(Metrics, f64, 
         // graphs of the same family (so each query embeds once and the
         // corpus embeds amortize across the run — DESIGN.md S14).
         let db = GraphDb::synthesize(&mut rng, Family::Aids, cfg.corpus_size, n_max, num_labels);
-        let corpus = Arc::new(
-            Corpus::from_db("aids-synth", &db, n_max, num_labels)
-                .map_err(|e| anyhow::anyhow!("encoding corpus: {e}"))?,
-        );
+        // Production corpora live behind a CorpusStore (EPOCH-SWAP-
+        // CONFINED): the snapshot is resolved once, before the submit
+        // loop, so every query of this run pins one epoch.
+        let store = CorpusStore::from_db("aids-synth", &db, n_max, num_labels)
+            .map_err(|e| anyhow::anyhow!("encoding corpus: {e}"))?;
+        let corpus = Arc::clone(&store.snapshot().corpus);
         let graphs: Vec<_> = (0..cfg.queries)
             .map(|id| (id as u64, generate(&mut rng, Family::Aids, n_max, num_labels)))
             .collect();
         let k = cfg.topk;
+        let mode = cfg.cascade_mode();
         let queries = graphs
             .into_iter()
-            .map(|(id, g)| Query::topk(id, g, Arc::clone(&corpus), k))
+            .map(|(id, g)| Query::topk_with(id, g, Arc::clone(&corpus), k, mode))
             .map(tap_query);
         // The Poisson schedule draws AFTER workload synthesis, keeping
         // the seed → workload mapping identical across paced and
@@ -316,10 +339,11 @@ pub fn run_replay(
     if h.corpus_size > 0 {
         let mut rng = Rng::new(h.seed);
         let db = GraphDb::synthesize(&mut rng, Family::Aids, h.corpus_size, n_max, num_labels);
-        let corpus = Arc::new(
-            Corpus::from_db("aids-synth", &db, n_max, num_labels)
-                .map_err(|e| anyhow::anyhow!("encoding corpus: {e}"))?,
-        );
+        // Same construction path as run_serve: the rebuilt corpus pins
+        // the same initial epoch, so epoch-stamped partials merge.
+        let store = CorpusStore::from_db("aids-synth", &db, n_max, num_labels)
+            .map_err(|e| anyhow::anyhow!("encoding corpus: {e}"))?;
+        let corpus = Arc::clone(&store.snapshot().corpus);
         corpora.insert(corpus.name().to_string(), corpus);
     }
     // Fail fast on unknown corpus names, so the schedule/query pairing
@@ -561,6 +585,76 @@ mod tests {
         let shards: f64 = t.get("topk shards mean").unwrap().parse().unwrap();
         assert_eq!(shards, 2.0, "{}", t.render());
         assert!(t.get("topk lane spread (ms)").is_some(), "{}", t.render());
+    }
+
+    #[test]
+    fn serve_budgeted_cascade_end_to_end() {
+        let Some(dir) = artifacts() else { return };
+        let cfg = ServeConfig {
+            artifacts_dir: dir,
+            engines: vec![EngineKind::Native],
+            queries: 10,
+            workers: 2,
+            batch_max: 4,
+            batch_timeout_us: 100,
+            seed: 17,
+            corpus_size: 32,
+            topk: 4,
+            budget: 8,
+            ..ServeConfig::default()
+        };
+        let t = serve_workload(&cfg).unwrap();
+        let scored: f64 = t.rows[0][1].parse().unwrap();
+        assert_eq!(scored, 10.0, "{}", t.render());
+        // Every query went through the cascade: exactly `budget`
+        // survivors, the rest pruned before the NTN+FCN tail.
+        assert_eq!(t.get("cascade queries"), Some("10"), "{}", t.render());
+        let survivors: f64 = t.get("cascade survivors mean").unwrap().parse().unwrap();
+        let pruned: f64 = t.get("cascade pruned mean").unwrap().parse().unwrap();
+        assert_eq!(survivors, 8.0, "{}", t.render());
+        assert_eq!(pruned, 24.0, "{}", t.render());
+        assert!(t.get("cascade prune mean (ms)").is_some(), "{}", t.render());
+    }
+
+    #[test]
+    fn budgeted_record_then_replay_is_deterministic() {
+        let Some(dir) = artifacts() else { return };
+        let trace_path = std::env::temp_dir()
+            .join(format!("spa-gcn-budget-replay-{}.trace", std::process::id()));
+        let cfg = ServeConfig {
+            artifacts_dir: dir,
+            engines: vec![EngineKind::Native],
+            queries: 8,
+            workers: 2,
+            batch_max: 4,
+            batch_timeout_us: 100,
+            seed: 19,
+            corpus_size: 16,
+            topk: 3,
+            budget: 6,
+            record: Some(trace_path.clone()),
+            ..ServeConfig::default()
+        };
+        serve_workload(&cfg).unwrap();
+        let trace = Trace::read(&trace_path).unwrap();
+        std::fs::remove_file(&trace_path).ok();
+        assert_eq!(trace.len(), 8);
+        // The recorder captured the cascade budget and the store's
+        // first-generation epoch on every entry.
+        assert!(trace.entries().iter().all(|e| e.budget() == 6), "budget recorded");
+        assert!(trace.entries().iter().all(|e| e.epoch() == 1), "epoch recorded");
+
+        let replay_cfg = ServeConfig { record: None, ..cfg };
+        let (m1, _, dump1) = run_replay(&replay_cfg, &trace, None).unwrap();
+        let (_, _, dump2) = run_replay(&replay_cfg, &trace, None).unwrap();
+        assert_eq!(m1.scored, 8, "replay scores every recorded query");
+        assert_eq!(dump1, dump2, "budgeted replays are byte-identical");
+        // Budgeted rankings never answer more than `budget` candidates.
+        for line in dump1.lines() {
+            let ranked = line.split("ranked=").nth(1).unwrap_or("");
+            let n = ranked.split(',').filter(|s| !s.is_empty()).count();
+            assert!(n <= 6, "{line}");
+        }
     }
 
     #[test]

@@ -51,7 +51,7 @@ use crate::util::json::{self, Json};
 
 use super::corpus::Corpus;
 use super::metrics::Metrics;
-use super::query::{Outcome, Query, QueryPayload, QueryResult};
+use super::query::{CascadeMode, Outcome, Query, QueryPayload, QueryResult};
 
 /// Trace format version tag, first field checked on the header line.
 pub const TRACE_SCHEMA: &str = "spa-gcn-trace-v1";
@@ -195,8 +195,22 @@ pub struct TraceHeader {
 /// [`TraceEntry`] accessors.
 #[derive(Debug, Clone)]
 enum Payload {
-    Pair { g1: Graph, g2: Graph },
-    TopK { graph: Graph, corpus: String, k: usize },
+    Pair {
+        g1: Graph,
+        g2: Graph,
+    },
+    TopK {
+        graph: Graph,
+        corpus: String,
+        k: usize,
+        /// Corpus epoch the query was admitted against (0 = pre-epoch
+        /// trace, or the corpus' initial generation). Informational on
+        /// replay — the rebuilt corpus pins its own epoch — but it
+        /// keeps recorded dumps attributable to one snapshot.
+        epoch: u64,
+        /// Cascade candidate budget (0 = `CascadeMode::Exact`).
+        budget: usize,
+    },
 }
 
 /// One recorded query: arrival offset, origin client, payload.
@@ -245,6 +259,23 @@ impl TraceEntry {
         }
     }
 
+    /// The corpus epoch a top-k entry was admitted against (0 for pairs
+    /// and for traces recorded before epochs existed).
+    pub fn epoch(&self) -> u64 {
+        match &self.payload {
+            Payload::TopK { epoch, .. } => *epoch,
+            Payload::Pair { .. } => 0,
+        }
+    }
+
+    /// The cascade candidate budget a top-k entry recorded (0 = exact).
+    pub fn budget(&self) -> usize {
+        match &self.payload {
+            Payload::TopK { budget, .. } => *budget,
+            Payload::Pair { .. } => 0,
+        }
+    }
+
     /// Rebuild the pipeline [`Query`] this entry recorded. Top-k entries
     /// resolve their corpus by name against `corpora`; the `submitted`
     /// timestamp is stamped at call time, so convert at submit time to
@@ -256,8 +287,24 @@ impl TraceEntry {
     ) -> Result<Query, TraceError> {
         match &self.payload {
             Payload::Pair { g1, g2 } => Ok(Query::new(self.id, g1.clone(), g2.clone())),
-            Payload::TopK { graph, corpus, k } => match corpora.get(corpus) {
-                Some(c) => Ok(Query::topk(self.id, graph.clone(), Arc::clone(c), *k)),
+            Payload::TopK {
+                graph,
+                corpus,
+                k,
+                budget,
+                ..
+            } => match corpora.get(corpus) {
+                // The rebuilt query pins the *replay* corpus' epoch:
+                // the recorded epoch documents the live run, it doesn't
+                // override the environment replay resolved.
+                Some(c) => {
+                    let mode = if *budget > 0 {
+                        CascadeMode::Budgeted { budget: *budget }
+                    } else {
+                        CascadeMode::Exact
+                    };
+                    Ok(Query::topk_with(self.id, graph.clone(), Arc::clone(c), *k, mode))
+                }
                 None => Err(TraceError::UnknownCorpus {
                     id: self.id,
                     corpus: corpus.clone(),
@@ -426,10 +473,22 @@ fn pair_line(client: &str, id: u64, offset_us: u64, g1: &Graph, g2: &Graph) -> S
     .to_string()
 }
 
-fn topk_line(client: &str, id: u64, offset_us: u64, g: &Graph, corpus: &str, k: usize) -> String {
+#[allow(clippy::too_many_arguments)]
+fn topk_line(
+    client: &str,
+    id: u64,
+    offset_us: u64,
+    g: &Graph,
+    corpus: &str,
+    k: usize,
+    epoch: u64,
+    budget: usize,
+) -> String {
     json::obj(vec![
+        ("budget", json::num(budget as f64)),
         ("client", json::s(client)),
         ("corpus", json::s(corpus)),
+        ("epoch", json::num(clamp_int(epoch))),
         ("graphs", json::arr(vec![graph_to_json(g)])),
         ("id", json::num(clamp_int(id))),
         ("k", json::num(k as f64)),
@@ -456,6 +515,15 @@ fn field_u64(v: &Json, field: &'static str, line: usize) -> Result<u64, TraceErr
 
 fn field_usize(v: &Json, field: &'static str, line: usize) -> Result<usize, TraceError> {
     Ok(field_u64(v, field, line)? as usize)
+}
+
+/// Optional nonnegative integer: absent fields default to 0 (traces
+/// recorded before the field existed), present fields still validate.
+fn field_u64_or_zero(v: &Json, field: &'static str, line: usize) -> Result<u64, TraceError> {
+    if matches!(v.get(field), Json::Null) {
+        return Ok(0);
+    }
+    field_u64(v, field, line)
 }
 
 fn field_str(v: &Json, field: &'static str, line: usize) -> Result<String, TraceError> {
@@ -596,6 +664,8 @@ fn entry_from_json(v: &Json, line: usize) -> Result<TraceEntry, TraceError> {
                 graph: graph_from_json(&graphs[0], line)?,
                 corpus: field_str(v, "corpus", line)?,
                 k,
+                epoch: field_u64_or_zero(v, "epoch", line)?,
+                budget: field_u64_or_zero(v, "budget", line)? as usize,
             }
         }
         other => {
@@ -634,9 +704,28 @@ impl TraceWriter {
         self.text.push('\n');
     }
 
-    /// Append a top-k entry.
+    /// Append a top-k entry (epoch 0, exact mode — the pre-cascade
+    /// shape tests and benches mostly want).
     pub fn topk(&mut self, client: &str, id: u64, offset_us: u64, g: &Graph, corpus: &str, k: usize) {
-        self.text.push_str(&topk_line(client, id, offset_us, g, corpus, k));
+        self.topk_at(client, id, offset_us, g, corpus, k, 0, 0);
+    }
+
+    /// Append a top-k entry pinned to a corpus epoch, with a cascade
+    /// budget (0 = exact).
+    #[allow(clippy::too_many_arguments)]
+    pub fn topk_at(
+        &mut self,
+        client: &str,
+        id: u64,
+        offset_us: u64,
+        g: &Graph,
+        corpus: &str,
+        k: usize,
+        epoch: u64,
+        budget: usize,
+    ) {
+        self.text
+            .push_str(&topk_line(client, id, offset_us, g, corpus, k, epoch, budget));
         self.text.push('\n');
     }
 
@@ -698,9 +787,20 @@ impl TraceRecorder {
         self.append(|off| pair_line(client, id, off, g1, g2));
     }
 
-    /// Record an admitted top-k query.
-    pub fn record_topk(&self, client: &str, id: u64, g: &Graph, corpus: &str, k: usize) {
-        self.append(|off| topk_line(client, id, off, g, corpus, k));
+    /// Record an admitted top-k query, pinned to the corpus epoch it
+    /// was admitted against (`budget` 0 = exact mode).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_topk(
+        &self,
+        client: &str,
+        id: u64,
+        g: &Graph,
+        corpus: &str,
+        k: usize,
+        epoch: u64,
+        budget: usize,
+    ) {
+        self.append(|off| topk_line(client, id, off, g, corpus, k, epoch, budget));
     }
 
     /// Record an already-built pipeline query (the in-process serve
@@ -709,8 +809,19 @@ impl TraceRecorder {
     pub fn record_query(&self, client: &str, q: &Query) {
         match &q.payload {
             QueryPayload::Pair { g1, g2 } => self.record_pair(client, q.id, g1, g2),
-            QueryPayload::TopK { graph, corpus, k } => {
-                self.record_topk(client, q.id, graph, corpus.name(), *k)
+            QueryPayload::TopK {
+                graph,
+                corpus,
+                k,
+                epoch,
+                mode,
+                ..
+            } => {
+                let budget = match mode {
+                    CascadeMode::Budgeted { budget } => *budget,
+                    CascadeMode::Exact => 0,
+                };
+                self.record_topk(client, q.id, graph, corpus.name(), *k, *epoch, budget)
             }
         }
     }
@@ -781,6 +892,9 @@ pub fn bench_snapshot(m: &Metrics, wall_s: f64, pr: u64, provenance: &str) -> Js
     let net = m.net.clone().unwrap_or_default();
     let looked_up = m.embed_hits + m.embed_misses;
     let hit_rate = if looked_up == 0 { 0.0 } else { m.embed_hits as f64 / looked_up as f64 };
+    // Cascade prune rate across budgeted queries (0 for all-Exact runs).
+    let cascade_seen = m.cascade_pruned.mean() + m.cascade_survivors.mean();
+    let prune_rate = if cascade_seen == 0.0 { 0.0 } else { m.cascade_pruned.mean() / cascade_seen };
     json::obj(vec![
         ("schema", json::s(BENCH_SCHEMA)),
         ("pr", json::num(pr as f64)),
@@ -823,6 +937,15 @@ pub fn bench_snapshot(m: &Metrics, wall_s: f64, pr: u64, provenance: &str) -> Js
                 ("degraded", json::num(net.degraded as f64)),
             ]),
         ),
+        (
+            "cascade",
+            json::obj(vec![
+                ("queries", json::num(m.cascade_pruned.len() as f64)),
+                ("prune_rate", json::num(prune_rate)),
+                ("survivors_mean", json::num(m.cascade_survivors.mean())),
+                ("prune_ms_mean", json::num(m.cascade_prune_us.mean() / 1e3)),
+            ]),
+        ),
     ])
 }
 
@@ -844,6 +967,7 @@ const BENCH_LATENCY_FIELDS: &[&str] = &[
 ];
 const BENCH_CACHE_FIELDS: &[&str] = &["hit_rate", "entries"];
 const BENCH_NET_FIELDS: &[&str] = &["accepted", "throttled", "shed_deadline", "degraded"];
+const BENCH_CASCADE_FIELDS: &[&str] = &["queries", "prune_rate", "survivors_mean", "prune_ms_mean"];
 
 /// Validate a `bench-serving-v1` snapshot (the `spa-gcn bench-check`
 /// subcommand). Returns the first schema violation as a message.
@@ -876,6 +1000,17 @@ pub fn check_bench(v: &Json) -> Result<(), String> {
         for f in fields {
             if obj.get(f).as_f64().is_none() {
                 return Err(format!("missing numeric field '{section}.{f}'"));
+            }
+        }
+    }
+    // The cascade section arrived with PR 10; snapshots committed
+    // before it (BENCH_9 and earlier) stay valid, but a snapshot that
+    // carries the section must carry it whole.
+    let cascade = v.get("cascade");
+    if cascade.as_obj().is_some() {
+        for f in BENCH_CASCADE_FIELDS {
+            if cascade.get(f).as_f64().is_none() {
+                return Err(format!("missing numeric field 'cascade.{f}'"));
             }
         }
     }
@@ -963,9 +1098,24 @@ mod tests {
                 assert_eq!(e.offset(), Duration::from_micros(*off));
                 match &e.payload {
                     Payload::Pair { g1, g2 } => rewritten.pair(e.client(), e.id, e.offset_us, g1, g2),
-                    Payload::TopK { graph, corpus, k } => {
+                    Payload::TopK {
+                        graph,
+                        corpus,
+                        k,
+                        epoch,
+                        budget,
+                    } => {
                         assert_eq!(e.corpus(), Some(corpus.as_str()));
-                        rewritten.topk(e.client(), e.id, e.offset_us, graph, corpus, *k)
+                        rewritten.topk_at(
+                            e.client(),
+                            e.id,
+                            e.offset_us,
+                            graph,
+                            corpus,
+                            *k,
+                            *epoch,
+                            *budget,
+                        )
                     }
                 }
             }
@@ -1028,7 +1178,26 @@ mod tests {
             (format!("{head}\n{}", ok_pair.replace("\"kind\":\"pair\"", "\"kind\":\"zap\"")), "field"),
             (format!("{head}\n{}", ok_pair.replace("\"client\":\"c\"", "\"client\":9")), "field"),
             (
-                format!("{head}\n{}", topk_line("c", 1, 5, &g, "x", 3).replace("\"k\":3", "\"k\":0")),
+                format!(
+                    "{head}\n{}",
+                    topk_line("c", 1, 5, &g, "x", 3, 0, 0).replace("\"k\":3", "\"k\":0")
+                ),
+                "field",
+            ),
+            // Present-but-mistyped epoch/budget still fail (only
+            // *absent* fields default to 0).
+            (
+                format!(
+                    "{head}\n{}",
+                    topk_line("c", 1, 5, &g, "x", 3, 0, 0).replace("\"epoch\":0", "\"epoch\":-2")
+                ),
+                "field",
+            ),
+            (
+                format!(
+                    "{head}\n{}",
+                    topk_line("c", 1, 5, &g, "x", 3, 0, 0).replace("\"budget\":0", "\"budget\":\"z\"")
+                ),
                 "field",
             ),
             // Graph problems.
@@ -1082,7 +1251,7 @@ mod tests {
         let corpus = Arc::new(Corpus::build("c9", &[(1, g.clone())], 8, 4).unwrap());
         rec.record_query("cli", &Query::topk(8, g.clone(), corpus, 4));
         rec.record_pair("net", 9, &g, &g);
-        rec.record_topk("net", 10, &g, "c9", 2);
+        rec.record_topk("net", 10, &g, "c9", 2, 4, 64);
         assert!(rec.finish());
         let t = Trace::read(&path).unwrap();
         std::fs::remove_file(&path).ok();
@@ -1094,6 +1263,9 @@ mod tests {
         );
         assert_eq!(t.entries()[1].corpus(), Some("c9"));
         assert_eq!(t.entries()[2].client(), "net");
+        // The recorder preserves epoch + budget per top-k entry.
+        assert_eq!((t.entries()[1].epoch(), t.entries()[1].budget()), (0, 0));
+        assert_eq!((t.entries()[3].epoch(), t.entries()[3].budget()), (4, 64));
         // Offsets are monotone (same clock, sequential records).
         let offs: Vec<_> = t.entries().iter().map(TraceEntry::offset_us).collect();
         let mut sorted = offs.clone();
@@ -1120,7 +1292,52 @@ mod tests {
             },
             engine: None,
             sharding: None,
+            cascade: None,
         }
+    }
+
+    #[test]
+    fn epoch_and_budget_round_trip_and_default_for_old_traces() {
+        let g = tiny_graph();
+        let corpus = Arc::new(
+            Corpus::build("c1", &[(5, g.clone()), (6, g.clone())], 8, 4)
+                .unwrap()
+                .with_epoch(3),
+        );
+        let mut corpora = BTreeMap::new();
+        corpora.insert(corpus.name().to_string(), Arc::clone(&corpus));
+
+        let mut w = TraceWriter::new(&header());
+        w.topk_at("x", 1, 10, &g, "c1", 2, 3, 128);
+        w.topk("x", 2, 20, &g, "c1", 2);
+        let t = Trace::parse(w.as_text()).unwrap();
+        assert_eq!((t.entries()[0].epoch(), t.entries()[0].budget()), (3, 128));
+        assert_eq!((t.entries()[1].epoch(), t.entries()[1].budget()), (0, 0));
+
+        // budget > 0 rebuilds a budgeted query; the epoch is pinned
+        // from the replay-resolved corpus, not the recorded number.
+        let q = t.entries()[0].to_query(&corpora).unwrap();
+        match &q.payload {
+            QueryPayload::TopK { epoch, mode, .. } => {
+                assert_eq!(*epoch, 3);
+                assert_eq!(*mode, CascadeMode::Budgeted { budget: 128 });
+            }
+            other => panic!("expected TopK, got {other:?}"),
+        }
+        let q = t.entries()[1].to_query(&corpora).unwrap();
+        match &q.payload {
+            QueryPayload::TopK { mode, .. } => assert_eq!(*mode, CascadeMode::Exact),
+            other => panic!("expected TopK, got {other:?}"),
+        }
+
+        // A pre-epoch trace line (no epoch/budget keys) still parses,
+        // defaulting both to 0.
+        let legacy = topk_line("c", 9, 5, &g, "c1", 2, 0, 0)
+            .replace("\"budget\":0,", "")
+            .replace("\"epoch\":0,", "");
+        let doc = format!("{}\n{legacy}", header_line(&header()));
+        let t = Trace::parse(&doc).unwrap();
+        assert_eq!((t.entries()[0].epoch(), t.entries()[0].budget()), (0, 0));
     }
 
     #[test]
@@ -1168,6 +1385,7 @@ mod tests {
             (text.replace("\"e2e_p50\"", "\"p50\""), "e2e_p50"),
             (text.replace("\"hit_rate\"", "\"hits\""), "hit_rate"),
             (text.replace("\"shed_deadline\"", "\"shed\""), "shed_deadline"),
+            (text.replace("\"prune_rate\"", "\"rate\""), "prune_rate"),
             (text.replace("\"provenance\":\"measured-replay: test\",", ""), "provenance"),
         ] {
             let v = json::parse(&mutation).unwrap();

@@ -118,6 +118,63 @@ pub struct EncodedGraph {
     pub key: GraphKey,
 }
 
+/// Cheap per-graph signals computed once at encode/ingest time — the
+/// coarse stage of cascade retrieval (DESIGN.md S20). Everything here is
+/// integer arithmetic over counts, so comparing a query against a
+/// million candidates costs a few adds per candidate, no floats, no
+/// hashing, no GCN forward.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheapSignals {
+    /// Real node count.
+    pub nodes: u32,
+    /// Undirected edge count (no self-loops).
+    pub edges: u32,
+    /// Label histogram, `num_labels` buckets.
+    pub hist: Vec<u32>,
+}
+
+impl CheapSignals {
+    /// Compute the signals from a raw graph. `num_labels` fixes the
+    /// histogram width so signals from the same artifact config are
+    /// directly comparable; labels outside the vocab are clamped into
+    /// the last bucket (encode rejects them separately).
+    pub fn from_graph(g: &Graph, num_labels: usize) -> Self {
+        let width = num_labels.max(1);
+        let mut hist = vec![0u32; width];
+        for &l in g.labels() {
+            hist[(l as usize).min(width - 1)] += 1;
+        }
+        CheapSignals {
+            nodes: g.num_nodes() as u32,
+            edges: g.num_edges() as u32,
+            hist,
+        }
+    }
+
+    /// Coarse dissimilarity: |Δnodes| + |Δedges| + label-histogram L1.
+    /// Each term bounds a family of edit operations from below (node
+    /// insert/delete, edge insert/delete, relabel — the same unit-cost
+    /// model `ged/heuristics.rs` upper-bounds), so graphs that are
+    /// cheap-close are the only ones that can be edit-close. Zero iff
+    /// the count profile matches exactly (not iff the graphs match —
+    /// this is a prune key, never a score).
+    pub fn distance(&self, other: &CheapSignals) -> u64 {
+        let dn = (self.nodes as i64 - other.nodes as i64).unsigned_abs();
+        let de = (self.edges as i64 - other.edges as i64).unsigned_abs();
+        let mut l1 = 0u64;
+        let (short, long) = if self.hist.len() <= other.hist.len() {
+            (&self.hist, &other.hist)
+        } else {
+            (&other.hist, &self.hist)
+        };
+        for (i, &b) in long.iter().enumerate() {
+            let a = short.get(i).copied().unwrap_or(0);
+            l1 += (a as i64 - b as i64).unsigned_abs();
+        }
+        dn + de + l1
+    }
+}
+
 /// Errors produced when a graph cannot be encoded for the fixed shapes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EncodeError {
@@ -665,6 +722,32 @@ mod tests {
             }
             seen.push((k, g));
         }
+    }
+
+    #[test]
+    fn cheap_signals_profile_and_distance() {
+        let g = Graph::new(3, vec![(0, 1), (1, 2)], vec![2, 0, 2]);
+        let s = CheapSignals::from_graph(&g, 8);
+        assert_eq!(s.nodes, 3);
+        assert_eq!(s.edges, 2);
+        assert_eq!(s.hist[0], 1);
+        assert_eq!(s.hist[2], 2);
+        assert_eq!(s.hist.iter().sum::<u32>(), 3);
+        // Zero to itself, symmetric, and positive under any count change.
+        assert_eq!(s.distance(&s), 0);
+        let bigger = Graph::new(4, vec![(0, 1), (1, 2), (2, 3)], vec![2, 0, 2, 5]);
+        let sb = CheapSignals::from_graph(&bigger, 8);
+        assert_eq!(s.distance(&sb), sb.distance(&s));
+        // +1 node, +1 edge, +1 histogram entry.
+        assert_eq!(s.distance(&sb), 3);
+        // Relabel-only change: nodes/edges agree, histogram moves by 2
+        // (one bucket loses a count, another gains one).
+        let relabeled = Graph::new(3, vec![(0, 1), (1, 2)], vec![2, 1, 2]);
+        assert_eq!(s.distance(&CheapSignals::from_graph(&relabeled, 8)), 2);
+        // Mismatched histogram widths still compare (missing buckets
+        // read as zero), so mixed-config signals never panic.
+        let narrow = CheapSignals::from_graph(&g, 3);
+        assert_eq!(s.distance(&narrow), 0);
     }
 
     #[test]

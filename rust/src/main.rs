@@ -89,13 +89,15 @@ fn usage() -> ! {
          \t[--queries N] [--no-pjrt] [--artifacts DIR] [--json OUT.json]\n\
          \n  serve [--queries N] [--engine KINDS] [--workers K] [--batch-max B]\n\
          \t[--batch-timeout-us T] [--pipeline-depth D] [--rate QPS] [--artifacts DIR]\n\
-         \t[--corpus N] [--topk K] [--kernels scalar|lanes] [--record PATH]\n\
+         \t[--corpus N] [--topk K] [--budget B] [--kernels scalar|lanes] [--record PATH]\n\
          \t(KINDS: comma-separated engine kinds from {{{}}};\n\
          \t a list runs heterogeneous lanes, e.g. --engine native,sim;\n\
          \t --pipeline-depth 0 = sequential encode+execute baseline;\n\
          \t --rate runs open-loop Poisson pacing instead of closed-loop flood;\n\
          \t --corpus N switches to one-vs-many search: each query ranks an\n\
          \t N-graph corpus through the embedding cache and returns its --topk best;\n\
+         \t --budget B > 0 runs the coarse-to-fine cascade: cheap signals\n\
+         \t prune each query to B candidates before NTN+FCN scoring;\n\
          \t --listen ADDR serves the wire protocol instead of a synthetic\n\
          \t workload — press Enter (or close stdin) to stop and print metrics;\n\
          \t front-door knobs: [--net-conn-cap N] [--net-admit-cap N]\n\
@@ -118,7 +120,9 @@ fn usage() -> ! {
          \t never a failure — when p50 e2e regresses >20%, refusing\n\
          \t provenance=estimated-analytic baselines outright)\n\
          \n  load --connect ADDR [--clients N] [--rate QPS] [--queries N]\n\
-         \t[--topk K] [--seed S]  (drive a `serve --listen` front door)\n\
+         \t[--topk K] [--budget B] [--upserts N] [--seed S]\n\
+         \t(drive a `serve --listen` front door; --upserts N interleaves\n\
+         \t live corpus mutations, --budget B asks for cascade retrieval)\n\
          \n  lint [--json OUT.json] [--root DIR]\n\
          \t(check the repo's architecture invariants — layering DAG,\n\
          \t determinism, panic-freedom, lock order; see DESIGN.md S18.\n\
@@ -224,6 +228,7 @@ fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
         pipeline_depth: args.usize("pipeline-depth", 2),
         corpus_size: args.usize("corpus", 0),
         topk: args.usize("topk", 10),
+        budget: args.usize("budget", 0),
         record: args.flags.get("record").map(PathBuf::from),
     })
 }
@@ -395,6 +400,8 @@ fn cmd_load(args: &Args) -> anyhow::Result<()> {
         queries: args.usize("queries", defaults.queries),
         seed: args.usize("seed", defaults.seed as usize) as u64,
         topk: args.usize("topk", defaults.topk),
+        budget: args.usize("budget", defaults.budget),
+        upserts: args.usize("upserts", defaults.upserts),
     };
     let report = run_load(&cfg)?;
     println!("{}", report.render());

@@ -39,9 +39,9 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::channel::NamedReceiver;
-use crate::coordinator::corpus::Corpus;
+use crate::coordinator::corpus_store::CorpusStore;
 use crate::coordinator::pipeline::{ResultTap, SubmitHandle};
-use crate::coordinator::query::{Outcome, Query, QueryResult};
+use crate::coordinator::query::{CascadeMode, Outcome, Query, QueryResult};
 use crate::coordinator::router::validate_graph;
 use crate::coordinator::trace::TraceRecorder;
 use crate::ged::ged_similarity;
@@ -202,6 +202,9 @@ pub struct AdmittedFrame {
 struct PendingReply {
     request_id: u64,
     degraded: bool,
+    /// Corpus epoch the query was admitted against (0 for pair
+    /// queries), echoed on the top-k response.
+    epoch: u64,
     reply: SyncSender<ResponseFrame>,
 }
 
@@ -231,10 +234,13 @@ impl ResultRouter {
     }
 
     /// Claim an internal query id and register where its result goes.
+    /// `epoch` is the corpus snapshot the query was admitted against
+    /// (0 for pair queries); it is echoed on the top-k response.
     pub fn register(
         &self,
         request_id: u64,
         degraded: bool,
+        epoch: u64,
         reply: SyncSender<ResponseFrame>,
     ) -> u64 {
         let id = self.next.fetch_add(1, Ordering::Relaxed);
@@ -246,6 +252,7 @@ impl ResultRouter {
                 PendingReply {
                     request_id,
                     degraded,
+                    epoch,
                     reply,
                 },
             );
@@ -272,7 +279,7 @@ impl ResultRouter {
         else {
             return false;
         };
-        let resp = outcome_response(&r.outcome, pending.degraded);
+        let resp = outcome_response(&r.outcome, pending.degraded, pending.epoch);
         // try_send into the capacity-1 slot: never blocks the responder;
         // a gone client (disconnect, reply timeout) makes this a no-op.
         let _ = pending.reply.try_send(ResponseFrame {
@@ -299,7 +306,7 @@ pub fn result_tap(router: &Arc<ResultRouter>) -> ResultTap {
     })
 }
 
-fn outcome_response(outcome: &Outcome, degraded: bool) -> Response {
+fn outcome_response(outcome: &Outcome, degraded: bool, epoch: u64) -> Response {
     match outcome {
         Outcome::Score(s) => Response::Score {
             score: *s,
@@ -308,6 +315,7 @@ fn outcome_response(outcome: &Outcome, degraded: bool) -> Response {
         Outcome::TopK(ranked) => Response::TopK {
             ranked: ranked.clone(),
             degraded,
+            epoch,
         },
         Outcome::Rejected(reason) => Response::Error {
             code: "rejected".into(),
@@ -330,7 +338,7 @@ pub fn front_stage(
     rx: NamedReceiver<AdmittedFrame>,
     submit: SubmitHandle,
     router: Arc<ResultRouter>,
-    corpora: BTreeMap<String, Arc<Corpus>>,
+    corpora: BTreeMap<String, Arc<CorpusStore>>,
     signal: Arc<LoadSignal>,
     counters: Arc<NetCounters>,
     model: ModelConfig,
@@ -382,6 +390,8 @@ pub fn front_stage(
                 .and_then(|()| validate_graph(&model, g2))
                 .err(),
             Request::TopK { graph, .. } => validate_graph(&model, graph).err(),
+            Request::Upsert { graph, .. } => validate_graph(&model, graph).err(),
+            Request::Remove { .. } => None,
         };
         if let Some(reason) = shape_err {
             // Same code + detail the pipeline's Outcome::Rejected maps
@@ -399,12 +409,11 @@ pub fn front_stage(
         // methods latch failures internally and never panic or block
         // beyond one short uncontended lock.
         if let Some(rec) = &recorder {
-            match &req {
-                Request::Pair { g1, g2 } => rec.record_pair(&client, request_id, g1, g2),
-                Request::TopK { corpus, graph, k } => {
-                    rec.record_topk(&client, request_id, graph, corpus, *k)
-                }
-                Request::Hello => {}
+            // TopK is recorded inside its dispatch arm below, where the
+            // snapshot epoch is in hand; mutations are not scoring
+            // workload and stay out of the trace.
+            if let Request::Pair { g1, g2 } = &req {
+                rec.record_pair(&client, request_id, g1, g2);
             }
         }
         // Load signal: queue depth right after this dequeue, as a
@@ -432,7 +441,7 @@ pub fn front_stage(
                 });
             }
             Request::Pair { g1, g2 } => {
-                let internal = router.register(request_id, false, reply_tx.clone());
+                let internal = router.register(request_id, false, 0, reply_tx.clone());
                 if !submit.submit(Query::new(internal, g1, g2)) {
                     router.cancel(internal);
                     reply(Response::Error {
@@ -441,8 +450,13 @@ pub fn front_stage(
                     });
                 }
             }
-            Request::TopK { corpus, graph, k } => {
-                let Some(corpus) = corpora.get(&corpus) else {
+            Request::TopK {
+                corpus,
+                graph,
+                k,
+                budget,
+            } => {
+                let Some(store) = corpora.get(&corpus) else {
                     reply(Response::Error {
                         code: "unknown_corpus".into(),
                         detail: format!(
@@ -451,6 +465,14 @@ pub fn front_stage(
                     });
                     continue;
                 };
+                // Snapshot exactly once at admission: the query, the
+                // response epoch, and the trace line all name the same
+                // corpus generation, no matter what upserts land while
+                // the query is in flight.
+                let snap = store.snapshot();
+                if let Some(rec) = &recorder {
+                    rec.record_topk(&client, request_id, &graph, &corpus, k, snap.epoch, budget);
+                }
                 // Degraded top-k: shrink the candidate depth the client
                 // pays for; the ranking head stays engine-accurate.
                 let (k_eff, shrunk) = if degraded && k > cfg.degraded_topk.max(1) {
@@ -461,13 +483,69 @@ pub fn front_stage(
                 if shrunk {
                     counters.note_degraded();
                 }
-                let internal = router.register(request_id, shrunk, reply_tx.clone());
-                if !submit.submit(Query::topk(internal, graph, Arc::clone(corpus), k_eff)) {
+                let mode = if budget > 0 {
+                    CascadeMode::Budgeted { budget }
+                } else {
+                    CascadeMode::Exact
+                };
+                let internal = router.register(request_id, shrunk, snap.epoch, reply_tx.clone());
+                if !submit.submit(Query::topk_with(
+                    internal,
+                    graph,
+                    Arc::clone(&snap.corpus),
+                    k_eff,
+                    mode,
+                )) {
                     router.cancel(internal);
                     reply(Response::Error {
                         code: "shutting_down".into(),
                         detail: "pipeline is shutting down".into(),
                     });
+                }
+            }
+            Request::Upsert { corpus, id, graph } => {
+                let Some(store) = corpora.get(&corpus) else {
+                    reply(Response::Error {
+                        code: "unknown_corpus".into(),
+                        detail: format!(
+                            "no corpus '{corpus}' registered (hello lists them)"
+                        ),
+                    });
+                    continue;
+                };
+                // Mutations are answered here, never submitted: the
+                // store swaps a fresh snapshot and in-flight queries
+                // keep the one they admitted against.
+                match store.upsert(id, graph) {
+                    Ok(o) => reply(Response::Mutated {
+                        epoch: o.epoch,
+                        size: o.size,
+                    }),
+                    Err(e) => reply(Response::Error {
+                        code: "rejected".into(),
+                        detail: e.to_string(),
+                    }),
+                }
+            }
+            Request::Remove { corpus, id } => {
+                let Some(store) = corpora.get(&corpus) else {
+                    reply(Response::Error {
+                        code: "unknown_corpus".into(),
+                        detail: format!(
+                            "no corpus '{corpus}' registered (hello lists them)"
+                        ),
+                    });
+                    continue;
+                };
+                match store.remove(id) {
+                    Ok(o) => reply(Response::Mutated {
+                        epoch: o.epoch,
+                        size: o.size,
+                    }),
+                    Err(e) => reply(Response::Error {
+                        code: "rejected".into(),
+                        detail: e.to_string(),
+                    }),
                 }
             }
         }
@@ -564,7 +642,7 @@ mod tests {
     fn router_delivers_by_internal_id_and_echoes_client_id() {
         let router = ResultRouter::new();
         let (tx, rx) = std::sync::mpsc::sync_channel(1);
-        let internal = router.register(777, true, tx);
+        let internal = router.register(777, true, 0, tx);
         assert_eq!(router.pending(), 1);
         let g = crate::graph::Graph::new(1, vec![], vec![0]);
         let q = Query::new(internal, g.clone(), g);
@@ -589,7 +667,7 @@ mod tests {
     fn router_survives_dropped_receiver() {
         let router = ResultRouter::new();
         let (tx, rx) = std::sync::mpsc::sync_channel(1);
-        let internal = router.register(1, false, tx);
+        let internal = router.register(1, false, 0, tx);
         drop(rx); // client disconnected mid-flight
         let g = crate::graph::Graph::new(1, vec![], vec![0]);
         let q = Query::new(internal, g.clone(), g);
@@ -605,21 +683,27 @@ mod tests {
         use crate::runtime::EngineError;
         match outcome_response(&Outcome::Rejected(
             crate::coordinator::query::RejectReason::EmptyCorpus,
-        ), false) {
+        ), false, 0) {
             Response::Error { code, .. } => assert_eq!(code, "rejected"),
             other => panic!("{other:?}"),
         }
         match outcome_response(
             &Outcome::EngineError(EngineError::Unavailable { reason: "x".into() }),
             false,
+            0,
         ) {
             Response::Error { code, .. } => assert_eq!(code, "engine"),
             other => panic!("{other:?}"),
         }
-        match outcome_response(&Outcome::TopK(vec![(1, 0.5)]), true) {
-            Response::TopK { ranked, degraded } => {
+        match outcome_response(&Outcome::TopK(vec![(1, 0.5)]), true, 9) {
+            Response::TopK {
+                ranked,
+                degraded,
+                epoch,
+            } => {
                 assert_eq!(ranked, vec![(1, 0.5)]);
                 assert!(degraded);
+                assert_eq!(epoch, 9, "admission-time snapshot epoch echoed");
             }
             other => panic!("{other:?}"),
         }

@@ -85,17 +85,52 @@ impl NetClient {
         self.call(Request::Pair { g1, g2 })
     }
 
-    /// Rank `corpus` against `graph`.
+    /// Rank `corpus` against `graph` (exact mode).
     pub fn topk(
         &mut self,
         corpus: &str,
         graph: crate::graph::Graph,
         k: usize,
     ) -> Result<ResponseFrame, WireError> {
+        self.topk_budgeted(corpus, graph, k, 0)
+    }
+
+    /// Rank `corpus` against `graph`; `budget > 0` asks the server for
+    /// the coarse-to-fine cascade with that candidate budget.
+    pub fn topk_budgeted(
+        &mut self,
+        corpus: &str,
+        graph: crate::graph::Graph,
+        k: usize,
+        budget: usize,
+    ) -> Result<ResponseFrame, WireError> {
         self.call(Request::TopK {
             corpus: corpus.into(),
             graph,
             k,
+            budget,
+        })
+    }
+
+    /// Insert or replace candidate `id` in `corpus`.
+    pub fn upsert(
+        &mut self,
+        corpus: &str,
+        id: u64,
+        graph: crate::graph::Graph,
+    ) -> Result<ResponseFrame, WireError> {
+        self.call(Request::Upsert {
+            corpus: corpus.into(),
+            id,
+            graph,
+        })
+    }
+
+    /// Remove candidate `id` from `corpus`.
+    pub fn remove(&mut self, corpus: &str, id: u64) -> Result<ResponseFrame, WireError> {
+        self.call(Request::Remove {
+            corpus: corpus.into(),
+            id,
         })
     }
 }
@@ -117,6 +152,12 @@ pub struct LoadConfig {
     /// 0 = pair queries; > 0 = top-k against the server's first
     /// advertised corpus at this depth.
     pub topk: usize,
+    /// 0 = exact top-k; > 0 = budgeted cascade with this candidate
+    /// budget (only meaningful with `topk > 0`).
+    pub budget: usize,
+    /// Corpus upserts to interleave into the workload (total across all
+    /// clients); exercises epoch swaps under live queries.
+    pub upserts: usize,
 }
 
 impl Default for LoadConfig {
@@ -128,6 +169,8 @@ impl Default for LoadConfig {
             queries: 1000,
             seed: 42,
             topk: 0,
+            budget: 0,
+            upserts: 0,
         }
     }
 }
@@ -144,6 +187,8 @@ pub struct LoadStats {
     pub shed: u64,
     pub errors: u64,
     pub io_errors: u64,
+    /// Acknowledged corpus mutations (upsert/remove).
+    pub mutated: u64,
     /// Response latencies for scored answers only, ms.
     pub latencies_ms: Vec<f64>,
     pub max_late: Duration,
@@ -158,6 +203,7 @@ impl LoadStats {
         self.shed += other.shed;
         self.errors += other.errors;
         self.io_errors += other.io_errors;
+        self.mutated += other.mutated;
         self.latencies_ms.extend(other.latencies_ms);
         self.max_late = self.max_late.max(other.max_late);
     }
@@ -171,6 +217,7 @@ impl LoadStats {
                     self.degraded += 1;
                 }
             }
+            Response::Mutated { .. } => self.mutated += 1,
             Response::Throttled { .. } => self.throttled += 1,
             Response::Error { code, .. } if code == "deadline" => self.shed += 1,
             Response::Error { .. } | Response::Hello { .. } => self.errors += 1,
@@ -189,7 +236,15 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 /// One client thread's loop: paced sends over its own connection. A
 /// wire-level error ends the thread (the stream is desynced); typed
 /// overload answers do not.
-fn load_client(cfg: &LoadConfig, idx: usize, n_max: usize, num_labels: usize, corpus: Option<String>, count: usize) -> LoadStats {
+fn load_client(
+    cfg: &LoadConfig,
+    idx: usize,
+    n_max: usize,
+    num_labels: usize,
+    corpus: Option<String>,
+    count: usize,
+    upserts: usize,
+) -> LoadStats {
     let mut stats = LoadStats::default();
     let mut client = match NetClient::connect(&cfg.connect, &format!("load.{idx}")) {
         Ok(c) => c,
@@ -207,14 +262,40 @@ fn load_client(cfg: &LoadConfig, idx: usize, n_max: usize, num_labels: usize, co
     let graphs: Vec<_> = (0..count * 2)
         .map(|_| generate(&mut rng, Family::Aids, n_max, num_labels))
         .collect();
+    let upsert_graphs: Vec<_> = (0..upserts)
+        .map(|_| generate(&mut rng, Family::Aids, n_max, num_labels))
+        .collect();
     let schedule = poisson_schedule(&mut rng, per_client_rate, count);
     let pacer = Pacer::new();
+    // Spread this client's upsert share across its schedule, so epoch
+    // swaps land while queries are in flight rather than in one burst.
+    let upsert_every = if upserts > 0 { (count / upserts).max(1) } else { 0 };
+    let mut sent_upserts = 0usize;
     for (i, at) in schedule.into_iter().enumerate() {
         stats.max_late = stats.max_late.max(pacer.wait_until(at));
+        if let Some(name) = &corpus {
+            if upsert_every > 0 && i % upsert_every == 0 && sent_upserts < upserts {
+                // Ids far above the synthesized corpus range (0..N), and
+                // disjoint per client, so clients never fight over one id.
+                let id = 1_000_000 + (idx as u64) * 100_000 + sent_upserts as u64;
+                let g = upsert_graphs[sent_upserts].clone();
+                match client.upsert(name, id, g) {
+                    Ok(frame) => {
+                        stats.sent += 1;
+                        stats.note(&frame.resp);
+                    }
+                    Err(_) => {
+                        stats.io_errors += 1;
+                        return stats;
+                    }
+                }
+                sent_upserts += 1;
+            }
+        }
         let sent_at = Instant::now();
         let result = match (&corpus, cfg.topk) {
             (Some(name), k) if k > 0 => {
-                client.topk(name, graphs[i * 2].clone(), k)
+                client.topk_budgeted(name, graphs[i * 2].clone(), k, cfg.budget)
             }
             _ => client.pair(graphs[i * 2].clone(), graphs[i * 2 + 1].clone()),
         };
@@ -258,8 +339,15 @@ pub fn run_load(cfg: &LoadConfig) -> Result<Table> {
         "server advertises no corpus; top-k load needs `serve --corpus N`"
     );
 
+    anyhow::ensure!(
+        cfg.upserts == 0 || corpus.is_some(),
+        "server advertises no corpus; --upserts needs `serve --corpus N`"
+    );
+
     let base = cfg.queries / cfg.clients;
     let extra = cfg.queries % cfg.clients;
+    let ubase = cfg.upserts / cfg.clients;
+    let uextra = cfg.upserts % cfg.clients;
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for idx in 0..cfg.clients {
@@ -267,10 +355,11 @@ pub fn run_load(cfg: &LoadConfig) -> Result<Table> {
         if count == 0 {
             continue;
         }
+        let upserts = ubase + usize::from(idx < uextra);
         let cfg = cfg.clone();
         let corpus = corpus.clone();
         handles.push(std::thread::spawn(move || {
-            load_client(&cfg, idx, n_max, num_labels, corpus, count)
+            load_client(&cfg, idx, n_max, num_labels, corpus, count, upserts)
         }));
     }
     let mut stats = LoadStats::default();
@@ -291,10 +380,9 @@ pub fn run_load(cfg: &LoadConfig) -> Result<Table> {
             cfg.clients,
             cfg.rate_qps,
             cfg.queries,
-            if cfg.topk > 0 {
-                format!(" topk={}", cfg.topk)
-            } else {
-                String::new()
+            match (cfg.topk, cfg.budget, cfg.upserts) {
+                (0, _, u) if u == 0 => String::new(),
+                (k, b, u) => format!(" topk={k} budget={b} upserts={u}"),
             }
         ),
         &["metric", "value"],
@@ -306,6 +394,7 @@ pub fn run_load(cfg: &LoadConfig) -> Result<Table> {
     t.row(vec!["shed (deadline)".into(), stats.shed.to_string()]);
     t.row(vec!["errors".into(), stats.errors.to_string()]);
     t.row(vec!["io errors".into(), stats.io_errors.to_string()]);
+    t.row(vec!["mutations acked".into(), stats.mutated.to_string()]);
     t.row(vec!["latency p50 (ms)".into(), fmt(percentile(&lat, 0.50))]);
     t.row(vec!["latency p95 (ms)".into(), fmt(percentile(&lat, 0.95))]);
     t.row(vec![
@@ -334,7 +423,9 @@ mod tests {
         s.note(&Response::TopK {
             ranked: vec![],
             degraded: true,
+            epoch: 3,
         });
+        s.note(&Response::Mutated { epoch: 4, size: 65 });
         s.note(&Response::Throttled { retry_after_ms: 5 });
         s.note(&Response::Error {
             code: "deadline".into(),
@@ -345,8 +436,8 @@ mod tests {
             detail: String::new(),
         });
         assert_eq!(
-            (s.ok, s.degraded, s.throttled, s.shed, s.errors),
-            (2, 1, 1, 1, 1)
+            (s.ok, s.degraded, s.mutated, s.throttled, s.shed, s.errors),
+            (2, 1, 1, 1, 1, 1)
         );
     }
 

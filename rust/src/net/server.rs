@@ -34,7 +34,7 @@ use anyhow::{Context as _, Result};
 use crate::coordinator::channel::{
     channel, ChannelStats, NamedSender, SendPolicy, SendResult,
 };
-use crate::coordinator::corpus::Corpus;
+use crate::coordinator::corpus_store::CorpusStore;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
 use crate::coordinator::server::ServeConfig;
@@ -104,7 +104,7 @@ impl NetServer {
         factories: Vec<EngineFactory>,
         pcfg: PipelineConfig,
         ncfg: NetConfig,
-        corpora: Vec<Arc<Corpus>>,
+        corpora: Vec<Arc<CorpusStore>>,
         listen: &str,
     ) -> Result<NetServer> {
         Self::start_recorded(model, factories, pcfg, ncfg, corpora, listen, None)
@@ -120,7 +120,7 @@ impl NetServer {
         factories: Vec<EngineFactory>,
         pcfg: PipelineConfig,
         ncfg: NetConfig,
-        corpora: Vec<Arc<Corpus>>,
+        corpora: Vec<Arc<CorpusStore>>,
         listen: &str,
         recorder: Option<Arc<TraceRecorder>>,
     ) -> Result<NetServer> {
@@ -138,7 +138,7 @@ impl NetServer {
             channel("net.admit", ncfg.admit_cap.max(1), SendPolicy::DropNewest);
         let admit_stats = admit_tx.stats();
 
-        let corpora: BTreeMap<String, Arc<Corpus>> = corpora
+        let corpora: BTreeMap<String, Arc<CorpusStore>> = corpora
             .into_iter()
             .map(|c| (c.name().to_string(), c))
             .collect();
@@ -329,7 +329,7 @@ pub fn serve_listen(cfg: &ServeConfig, ncfg: NetConfig, listen: &str) -> Result<
             model.num_labels,
         );
         corpora.push(Arc::new(
-            Corpus::from_db("aids-synth", &db, model.n_max, model.num_labels)
+            CorpusStore::from_db("aids-synth", &db, model.n_max, model.num_labels)
                 .map_err(|e| anyhow::anyhow!("encoding corpus: {e}"))?,
         ));
     }

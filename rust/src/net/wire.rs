@@ -169,7 +169,20 @@ pub enum Request {
     /// Score one graph pair.
     Pair { g1: Graph, g2: Graph },
     /// Rank a registered corpus (by id) against a query graph.
-    TopK { corpus: String, graph: Graph, k: usize },
+    /// `budget` 0 = exact ranking; > 0 prunes the candidate set to at
+    /// most that many with cheap signals before the model tail runs.
+    TopK {
+        corpus: String,
+        graph: Graph,
+        k: usize,
+        budget: usize,
+    },
+    /// Insert or replace one candidate in a live corpus. Publishes a
+    /// new epoch snapshot unless the graph is fingerprint-identical to
+    /// the current entry at that id (dedup no-op).
+    Upsert { corpus: String, id: u64, graph: Graph },
+    /// Remove one candidate from a live corpus (unknown ids are no-ops).
+    Remove { corpus: String, id: u64 },
 }
 
 /// A decoded request frame: routing header + payload.
@@ -197,11 +210,32 @@ impl RequestFrame {
                 fields.push(("g1", graph_to_json(g1)));
                 fields.push(("g2", graph_to_json(g2)));
             }
-            Request::TopK { corpus, graph, k } => {
+            Request::TopK {
+                corpus,
+                graph,
+                k,
+                budget,
+            } => {
                 fields.push(("kind", json::s("topk")));
                 fields.push(("corpus", json::s(corpus)));
                 fields.push(("graph", graph_to_json(graph)));
                 fields.push(("k", json::num(*k as f64)));
+                // Encoded only when set: exact-mode frames stay
+                // byte-identical to the pre-cascade protocol.
+                if *budget > 0 {
+                    fields.push(("budget", json::num(*budget as f64)));
+                }
+            }
+            Request::Upsert { corpus, id, graph } => {
+                fields.push(("kind", json::s("upsert")));
+                fields.push(("corpus", json::s(corpus)));
+                fields.push(("cid", json::num(*id as f64)));
+                fields.push(("graph", graph_to_json(graph)));
+            }
+            Request::Remove { corpus, id } => {
+                fields.push(("kind", json::s("remove")));
+                fields.push(("corpus", json::s(corpus)));
+                fields.push(("cid", json::num(*id as f64)));
             }
         }
         json::obj(fields).to_string().into_bytes()
@@ -227,12 +261,35 @@ impl RequestFrame {
                 if k == 0 {
                     return Err(WireError::Malformed("k must be >= 1".into()));
                 }
+                // Absent on pre-cascade frames: default to exact.
+                let budget = match v.get("budget") {
+                    Json::Null => 0,
+                    _ => field_u64(&v, "budget")? as usize,
+                };
                 Request::TopK {
                     corpus,
                     graph: graph_from_json(v.get("graph"), "graph")?,
                     k,
+                    budget,
                 }
             }
+            Some("upsert") => Request::Upsert {
+                corpus: v
+                    .get("corpus")
+                    .as_str()
+                    .ok_or_else(|| WireError::Malformed("upsert needs a corpus id".into()))?
+                    .to_string(),
+                id: field_u64(&v, "cid")?,
+                graph: graph_from_json(v.get("graph"), "graph")?,
+            },
+            Some("remove") => Request::Remove {
+                corpus: v
+                    .get("corpus")
+                    .as_str()
+                    .ok_or_else(|| WireError::Malformed("remove needs a corpus id".into()))?
+                    .to_string(),
+                id: field_u64(&v, "cid")?,
+            },
             Some(other) => {
                 return Err(WireError::Malformed(format!("unknown request kind '{other}'")))
             }
@@ -264,7 +321,14 @@ pub enum Response {
         ranked: Vec<(u64, f32)>,
         /// k was shrunk by the degraded mode.
         degraded: bool,
+        /// Corpus epoch the ranking was computed against (0 from
+        /// pre-epoch servers).
+        epoch: u64,
     },
+    /// A corpus mutation (upsert/remove) committed: the store's epoch
+    /// after the mutation and its candidate count. A dedup or
+    /// unknown-id no-op answers with the unchanged epoch.
+    Mutated { epoch: u64, size: usize },
     /// Token bucket empty or admission queue full: come back in
     /// `retry_after_ms`, nothing was queued.
     Throttled { retry_after_ms: u64 },
@@ -304,7 +368,11 @@ impl ResponseFrame {
                 fields.push(("score", json::num(*score as f64)));
                 fields.push(("degraded", Json::Bool(*degraded)));
             }
-            Response::TopK { ranked, degraded } => {
+            Response::TopK {
+                ranked,
+                degraded,
+                epoch,
+            } => {
                 fields.push(("kind", json::s("topk")));
                 fields.push((
                     "ranked",
@@ -318,6 +386,12 @@ impl ResponseFrame {
                     ),
                 ));
                 fields.push(("degraded", Json::Bool(*degraded)));
+                fields.push(("epoch", json::num(*epoch as f64)));
+            }
+            Response::Mutated { epoch, size } => {
+                fields.push(("kind", json::s("mutated")));
+                fields.push(("epoch", json::num(*epoch as f64)));
+                fields.push(("size", json::num(*size as f64)));
             }
             Response::Throttled { retry_after_ms } => {
                 fields.push(("kind", json::s("throttled")));
@@ -375,8 +449,16 @@ impl ResponseFrame {
                 Response::TopK {
                     ranked,
                     degraded: v.get("degraded").as_bool().unwrap_or(false),
+                    epoch: match v.get("epoch") {
+                        Json::Null => 0,
+                        _ => field_u64(&v, "epoch")?,
+                    },
                 }
             }
+            Some("mutated") => Response::Mutated {
+                epoch: field_u64(&v, "epoch")?,
+                size: field_u64(&v, "size")? as usize,
+            },
             Some("throttled") => Response::Throttled {
                 retry_after_ms: field_u64(&v, "retry_after_ms")?,
             },
@@ -539,16 +621,27 @@ mod tests {
         for trial in 0..50u64 {
             let g1 = generate(&mut rng, Family::Aids, 32, 29);
             let g2 = generate(&mut rng, Family::ErdosRenyi { n: 9, p_millis: 350 }, 32, 8);
-            let req = match trial % 3 {
+            let req = match trial % 5 {
                 0 => Request::Hello,
                 1 => Request::Pair {
                     g1: g1.clone(),
                     g2: g2.clone(),
                 },
+                2 => Request::Upsert {
+                    corpus: format!("corpus-{trial}"),
+                    id: trial * 31,
+                    graph: g2.clone(),
+                },
+                3 => Request::Remove {
+                    corpus: format!("corpus-{trial}"),
+                    id: trial * 7,
+                },
                 _ => Request::TopK {
                     corpus: format!("corpus-{trial}"),
                     graph: g1.clone(),
                     k: 1 + (trial as usize % 17),
+                    // Exercise both exact (0) and budgeted frames.
+                    budget: (trial as usize % 3) * 100,
                 },
             };
             let frame = RequestFrame {
@@ -580,7 +673,14 @@ mod tests {
             Response::TopK {
                 ranked: vec![(3, 0.9f32), (0, 0.12345678f32), (u32::MAX as u64, 0.0)],
                 degraded: true,
+                epoch: 0,
             },
+            Response::TopK {
+                ranked: vec![(8, 0.5f32)],
+                degraded: false,
+                epoch: 41,
+            },
+            Response::Mutated { epoch: 7, size: 4097 },
             Response::Throttled { retry_after_ms: 17 },
             Response::Error {
                 code: "deadline".into(),
@@ -593,6 +693,39 @@ mod tests {
                 resp,
             };
             assert_eq!(ResponseFrame::decode(&frame.encode()).unwrap(), frame);
+        }
+    }
+
+    #[test]
+    fn budget_field_is_backward_compatible() {
+        // A pre-cascade frame (no budget key) decodes as exact mode...
+        let legacy = br#"{"v":1,"client":"","id":3,"kind":"topk","corpus":"c","k":2,"graph":{"n":1,"labels":[0],"edges":[]}}"#;
+        match RequestFrame::decode(legacy).unwrap().req {
+            Request::TopK { budget, .. } => assert_eq!(budget, 0),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // ...and an exact-mode frame encodes without the budget key, so
+        // old servers still parse it.
+        let frame = RequestFrame {
+            client: String::new(),
+            id: 3,
+            req: Request::TopK {
+                corpus: "c".into(),
+                graph: Graph::new(1, vec![], vec![0]),
+                k: 2,
+                budget: 0,
+            },
+        };
+        let body = String::from_utf8(frame.encode()).unwrap();
+        assert!(!body.contains("budget"), "{body}");
+        // A mistyped budget is rejected, not defaulted.
+        let bad = br#"{"v":1,"client":"","id":3,"kind":"topk","corpus":"c","k":2,"budget":-5,"graph":{"n":1,"labels":[0],"edges":[]}}"#;
+        assert!(matches!(RequestFrame::decode(bad), Err(WireError::Malformed(_))));
+        // Same story for the response's epoch: absent defaults to 0.
+        let legacy_resp = br#"{"v":1,"id":1,"kind":"topk","ranked":[[2,0.5]],"degraded":false}"#;
+        match ResponseFrame::decode(legacy_resp).unwrap().resp {
+            Response::TopK { epoch, .. } => assert_eq!(epoch, 0),
+            other => panic!("wrong kind: {other:?}"),
         }
     }
 

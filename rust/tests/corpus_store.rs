@@ -1,0 +1,372 @@
+//! Live-corpus epochs and cascade retrieval (DESIGN.md S20),
+//! artifact-free.
+//!
+//! The acceptance bar this file pins:
+//!  * a query pinned to snapshot N returns bit-identical results no
+//!    matter how many upserts/removes land mid-flight — generations are
+//!    immutable and the store only ever swaps whole snapshots;
+//!  * shard partials from different epochs can never merge into one
+//!    ranking: `rank_sharded` refuses them with a typed
+//!    `EpochMismatch`, not a silent mis-rank;
+//!  * `CascadeMode::Exact` through the staged pipeline is bit-identical
+//!    to the direct `score_corpus` + `rank` path (the pre-cascade
+//!    contract);
+//!  * `CascadeMode::Budgeted` over a 4096-candidate corpus sends at
+//!    most 25% of the candidates through the exact scoring tail and
+//!    still returns the true top-1.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use spa_gcn::coordinator::corpus::{ShardCoverageError, ShardPartial};
+use spa_gcn::coordinator::corpus_store::CorpusStore;
+use spa_gcn::coordinator::pipeline::{Pipeline, PipelineConfig, ResultTap};
+use spa_gcn::coordinator::query::{CascadeMode, Query, QueryResult};
+use spa_gcn::graph::encode::{encode, CheapSignals, EncodedGraph, PackedBatch};
+use spa_gcn::graph::generate::{generate, Family};
+use spa_gcn::graph::Graph;
+use spa_gcn::nn::config::ModelConfig;
+use spa_gcn::nn::weights::Weights;
+use spa_gcn::runtime::embed_cache::CachedEmbed;
+use spa_gcn::runtime::native::NativeEngine;
+use spa_gcn::runtime::{
+    BatchOutput, CorpusOutput, Engine, EngineCaps, EngineError, EngineFactory, MacCounts,
+    QueryEmbed, QueryTelemetry,
+};
+use spa_gcn::util::rng::Rng;
+
+fn small_cfg() -> ModelConfig {
+    ModelConfig {
+        n_max: 8,
+        num_labels: 4,
+        ..ModelConfig::default()
+    }
+}
+
+fn engine(cfg: &ModelConfig) -> NativeEngine {
+    NativeEngine::new(cfg.clone(), Weights::synthetic(cfg, 2024))
+}
+
+fn entries(rng: &mut Rng, cfg: &ModelConfig, count: usize) -> Vec<(u64, Graph)> {
+    (0..count)
+        .map(|i| (i as u64, generate(rng, Family::Aids, cfg.n_max, cfg.num_labels)))
+        .collect()
+}
+
+/// A tap that clones every result off the responder thread.
+fn capture_tap() -> (Arc<Mutex<Vec<QueryResult>>>, ResultTap) {
+    let captured: Arc<Mutex<Vec<QueryResult>>> = Arc::new(Mutex::new(Vec::new()));
+    let tap: ResultTap = {
+        let captured = Arc::clone(&captured);
+        Arc::new(move |r: &QueryResult| captured.lock().unwrap().push(r.clone()))
+    };
+    (captured, tap)
+}
+
+#[test]
+fn pinned_snapshot_is_bit_identical_under_mid_flight_mutations() {
+    // Property: results of a query admitted against epoch N depend only
+    // on generation N. Mutations landing after admission publish new
+    // generations but never touch the one the query holds.
+    let cfg = small_cfg();
+    let mut rng = Rng::new(2026);
+    let store =
+        CorpusStore::build("live", &entries(&mut rng, &cfg, 12), cfg.n_max, cfg.num_labels)
+            .unwrap();
+    let pinned = store.snapshot();
+    assert_eq!(pinned.epoch, 1);
+
+    let qg = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    let query = encode(&qg, cfg.n_max, cfg.num_labels).unwrap();
+    let before_scores = engine(&cfg)
+        .score_corpus(&query, pinned.corpus.graphs())
+        .unwrap()
+        .scores;
+    let before = pinned.corpus.rank(&before_scores, 5);
+
+    // Mid-flight mutations: insert, replace, remove. Each publishes a
+    // new generation in the store.
+    store.upsert(50, generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels)).unwrap();
+    store.upsert(3, generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels)).unwrap();
+    store.remove(7).unwrap();
+    assert_eq!(store.epoch(), 4, "three committed mutations");
+    let latest = store.snapshot();
+    assert_eq!(latest.corpus.len(), 12, "one insert + one remove");
+    assert_ne!(latest.corpus.ids(), pinned.corpus.ids());
+
+    // The pinned snapshot re-serves the same bits, even from a fresh
+    // engine with a cold cache.
+    assert_eq!(pinned.epoch, 1);
+    assert_eq!(pinned.corpus.len(), 12);
+    let after_scores = engine(&cfg)
+        .score_corpus(&query, pinned.corpus.graphs())
+        .unwrap()
+        .scores;
+    assert_eq!(before_scores, after_scores, "pinned generation must be frozen");
+    assert_eq!(before, pinned.corpus.rank(&after_scores, 5));
+}
+
+#[test]
+fn mixed_epoch_partials_are_refused_by_rank_sharded() {
+    // A shard scored against a newer generation (an upsert landed
+    // between scatter and gather) must be a typed error, never a
+    // silently mixed ranking.
+    let cfg = small_cfg();
+    let mut rng = Rng::new(31);
+    let store =
+        CorpusStore::build("live", &entries(&mut rng, &cfg, 10), cfg.n_max, cfg.num_labels)
+            .unwrap();
+    let old = store.snapshot();
+    store.upsert(99, generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels)).unwrap();
+    let new = store.snapshot();
+    assert_eq!((old.epoch, new.epoch), (1, 2));
+
+    let shards = old.corpus.shards(2);
+    let scores: Vec<f32> = old
+        .corpus
+        .keys()
+        .iter()
+        .map(|key| (key.0 % 7) as f32 / 6.0)
+        .collect();
+    // Same-epoch partials merge fine...
+    let good: Vec<ShardPartial> = shards
+        .iter()
+        .map(|s| ShardPartial {
+            epoch: old.epoch,
+            shard: *s,
+            scores: &scores[s.start..s.end],
+        })
+        .collect();
+    assert_eq!(
+        old.corpus.rank_sharded(&good, 4).unwrap(),
+        old.corpus.rank(&scores, 4)
+    );
+    // ...but one partial stamped with the post-upsert epoch poisons the
+    // merge.
+    let mixed = [
+        ShardPartial {
+            epoch: old.epoch,
+            shard: shards[0],
+            scores: &scores[shards[0].start..shards[0].end],
+        },
+        ShardPartial {
+            epoch: new.epoch,
+            shard: shards[1],
+            scores: &scores[shards[1].start..shards[1].end],
+        },
+    ];
+    match old.corpus.rank_sharded(&mixed, 4) {
+        Err(ShardCoverageError::EpochMismatch { expected, got }) => {
+            assert_eq!((expected, got), (1, 2));
+        }
+        other => panic!("expected EpochMismatch, got {other:?}"),
+    }
+}
+
+#[test]
+fn exact_cascade_through_the_pipeline_matches_the_direct_path() {
+    // CascadeMode::Exact is the pre-cascade contract: the staged
+    // pipeline must return exactly what score_corpus + rank return
+    // directly, and the plain 4-arg topk constructor must behave
+    // identically (it IS Exact).
+    let cfg = ModelConfig::default();
+    let mut rng = Rng::new(55);
+    let store =
+        CorpusStore::build("live", &entries(&mut rng, &cfg, 16), cfg.n_max, cfg.num_labels)
+            .unwrap();
+    let snap = store.snapshot();
+    let qg = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    let query = encode(&qg, cfg.n_max, cfg.num_labels).unwrap();
+    let reference = {
+        let scores = engine(&cfg).score_corpus(&query, snap.corpus.graphs()).unwrap().scores;
+        snap.corpus.rank(&scores, 5)
+    };
+
+    let factory: EngineFactory = {
+        let cfg = cfg.clone();
+        Arc::new(move || {
+            Ok(Box::new(NativeEngine::new(cfg.clone(), Weights::synthetic(&cfg, 2024)))
+                as Box<dyn Engine>)
+        })
+    };
+    let (captured, tap) = capture_tap();
+    let pipeline =
+        Pipeline::start_with_tap(cfg.clone(), vec![factory], PipelineConfig::default(), Some(tap));
+    assert!(pipeline.submit(Query::topk(1, qg.clone(), Arc::clone(&snap.corpus), 5)));
+    assert!(pipeline.submit(Query::topk_with(
+        2,
+        qg,
+        Arc::clone(&snap.corpus),
+        5,
+        CascadeMode::Exact,
+    )));
+    let metrics = pipeline.finish();
+    assert_eq!(metrics.topk, 2);
+    assert_eq!(metrics.engine_errors, 0);
+
+    let results = captured.lock().unwrap();
+    for id in [1u64, 2] {
+        let r = results.iter().find(|r| r.id == id).expect("result delivered");
+        assert_eq!(
+            r.ranked().expect("ranked"),
+            &reference[..],
+            "query {id}: pipeline diverged from the direct path"
+        );
+        assert!(r.cascade.is_none(), "Exact queries carry no cascade telemetry");
+    }
+}
+
+/// A corpus-capable engine whose scores are a pure function of the
+/// cheap signals (`1 / (1 + distance)`) and which counts every
+/// candidate that reaches its exact scoring tail — the witness that a
+/// budgeted query never scores the candidates the coarse stage pruned.
+struct CountingCascadeEngine {
+    caps: EngineCaps,
+    num_labels: usize,
+    scored: Arc<AtomicUsize>,
+}
+
+impl CountingCascadeEngine {
+    fn new(cfg: &ModelConfig, scored: Arc<AtomicUsize>) -> Self {
+        CountingCascadeEngine {
+            caps: EngineCaps::new("counting-cascade", vec![1], cfg.n_max, cfg.num_labels)
+                .with_corpus_scoring()
+                .with_corpus_sharding(),
+            num_labels: cfg.num_labels,
+            scored,
+        }
+    }
+
+    fn signals_of(&self, g: &EncodedGraph) -> CheapSignals {
+        CheapSignals::from_graph(&g.decode().expect("test graphs decode"), self.num_labels)
+    }
+}
+
+fn signal_score(q: &CheapSignals, c: &CheapSignals) -> f32 {
+    1.0 / (1.0 + q.distance(c) as f32)
+}
+
+impl Engine for CountingCascadeEngine {
+    fn caps(&self) -> &EngineCaps {
+        &self.caps
+    }
+
+    fn score_batch(&mut self, _batch: &PackedBatch) -> Result<BatchOutput, EngineError> {
+        Err(EngineError::Unavailable {
+            reason: "corpus-only test engine".into(),
+        })
+    }
+
+    fn score_corpus(
+        &mut self,
+        query: &EncodedGraph,
+        corpus: &[EncodedGraph],
+    ) -> Result<CorpusOutput, EngineError> {
+        let q = self.signals_of(query);
+        self.scored.fetch_add(corpus.len(), Ordering::SeqCst);
+        let scores = corpus.iter().map(|g| signal_score(&q, &self.signals_of(g))).collect();
+        Ok(CorpusOutput {
+            scores,
+            telemetry: QueryTelemetry::default(),
+        })
+    }
+
+    fn embed_query(&mut self, query: &EncodedGraph) -> Result<QueryEmbed, EngineError> {
+        // The "embedding" is the signal vector: [nodes, edges, hist...].
+        let s = self.signals_of(query);
+        let mut hg = vec![s.nodes as f32, s.edges as f32];
+        hg.extend(s.hist.iter().map(|&b| b as f32));
+        Ok(QueryEmbed {
+            embed: Arc::new(CachedEmbed {
+                hg,
+                macs: MacCounts::default(),
+            }),
+            telemetry: QueryTelemetry::default(),
+        })
+    }
+
+    fn score_corpus_with(
+        &mut self,
+        query_hg: &[f32],
+        shard: &[EncodedGraph],
+    ) -> Result<CorpusOutput, EngineError> {
+        let q = CheapSignals {
+            nodes: query_hg[0] as u32,
+            edges: query_hg[1] as u32,
+            hist: query_hg[2..].iter().map(|&f| f as u32).collect(),
+        };
+        self.scored.fetch_add(shard.len(), Ordering::SeqCst);
+        let scores = shard.iter().map(|g| signal_score(&q, &self.signals_of(g))).collect();
+        Ok(CorpusOutput {
+            scores,
+            telemetry: QueryTelemetry::default(),
+        })
+    }
+}
+
+#[test]
+fn budgeted_cascade_scores_a_quarter_and_keeps_the_true_top1() {
+    // THE cascade acceptance bar: 4096 candidates, budget 1024 — at
+    // most 25% of the corpus may reach the exact scoring tail, and the
+    // true top-1 (the planted exact-profile match at id 0, which every
+    // full scan would rank first) must survive the coarse stage.
+    let cfg = small_cfg();
+    let mut rng = Rng::new(4096);
+    let qg = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    let mut corpus_entries = vec![(0u64, qg.clone())];
+    corpus_entries.extend(
+        (1..4096u64).map(|i| (i, generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels))),
+    );
+    let store =
+        CorpusStore::build("big", &corpus_entries, cfg.n_max, cfg.num_labels).unwrap();
+    let snap = store.snapshot();
+    assert_eq!(snap.corpus.len(), 4096);
+
+    // Ground truth under the engine's score function, full scan.
+    let q_sig = CheapSignals::from_graph(&qg, cfg.num_labels);
+    let all_scores: Vec<f32> = snap
+        .corpus
+        .signals()
+        .iter()
+        .map(|s| signal_score(&q_sig, s))
+        .collect();
+    let true_top1 = snap.corpus.rank(&all_scores, 1)[0];
+    assert_eq!(true_top1, (0, 1.0), "the planted match is the unambiguous best");
+
+    let scored = Arc::new(AtomicUsize::new(0));
+    let factory: EngineFactory = {
+        let cfg = cfg.clone();
+        let scored = Arc::clone(&scored);
+        Arc::new(move || {
+            Ok(Box::new(CountingCascadeEngine::new(&cfg, Arc::clone(&scored)))
+                as Box<dyn Engine>)
+        })
+    };
+    let (captured, tap) = capture_tap();
+    let pipeline =
+        Pipeline::start_with_tap(cfg.clone(), vec![factory], PipelineConfig::default(), Some(tap));
+    assert_eq!(pipeline.wait_ready(), 1);
+    assert!(pipeline.submit(Query::topk_with(
+        7,
+        qg,
+        Arc::clone(&snap.corpus),
+        10,
+        CascadeMode::Budgeted { budget: 1024 },
+    )));
+    let metrics = pipeline.finish();
+    assert_eq!(metrics.topk, 1);
+    assert_eq!(metrics.engine_errors, 0);
+
+    let results = captured.lock().unwrap();
+    let r = results.iter().find(|r| r.id == 7).expect("result delivered");
+    let ranked = r.ranked().expect("ranked");
+    assert_eq!(ranked.len(), 10);
+    assert_eq!(ranked[0], true_top1, "budgeted ranking lost the true top-1");
+    let cascade = r.cascade.expect("budgeted queries carry cascade telemetry");
+    assert_eq!(cascade.survivors, 1024);
+    assert_eq!(cascade.pruned, 4096 - 1024);
+    // The engine-side witness: exactly the survivors were scored.
+    let tallied = scored.load(Ordering::SeqCst);
+    assert_eq!(tallied, 1024, "pruned candidates must never reach the engine");
+    assert!(tallied * 4 <= snap.corpus.len(), "budget must stay at <= 25%");
+}

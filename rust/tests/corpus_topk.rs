@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use spa_gcn::coordinator::corpus::Corpus;
+use spa_gcn::coordinator::corpus::{Corpus, CorpusError};
 use spa_gcn::coordinator::pipeline::{Pipeline, PipelineConfig};
 use spa_gcn::coordinator::query::Query;
 use spa_gcn::graph::dataset::GraphDb;
@@ -133,6 +133,27 @@ fn ranking_matches_manual_sort_of_pairwise_scores() {
     }
     let max = out.scores.iter().copied().fold(f32::MIN, f32::max);
     assert_eq!(top3[0].1, max);
+}
+
+#[test]
+fn duplicate_candidate_ids_are_rejected_at_build() {
+    // Regression: duplicate ids used to slip through Corpus::build and
+    // could surface the same id twice in one top-k response. They are
+    // now a typed build-time error (CorpusError::DuplicateId), from
+    // both the entry-list and the GraphDb constructors.
+    let cfg = ModelConfig::default();
+    let mut rng = Rng::new(91);
+    let g1 = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    let g2 = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    let entries = vec![(0u64, g1.clone()), (1, g2.clone()), (0, g2)];
+    match Corpus::build("dup", &entries, cfg.n_max, cfg.num_labels) {
+        Err(CorpusError::DuplicateId { id }) => assert_eq!(id, 0),
+        other => panic!("expected DuplicateId {{ id: 0 }}, got {other:?}"),
+    }
+    // Distinct ids with duplicate *content* stay legal (the embed
+    // cache's whole reason to exist).
+    let ok = vec![(0u64, g1.clone()), (1, g1)];
+    assert!(Corpus::build("dup-content", &ok, cfg.n_max, cfg.num_labels).is_ok());
 }
 
 #[test]

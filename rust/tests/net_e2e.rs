@@ -16,6 +16,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use spa_gcn::coordinator::corpus::Corpus;
+use spa_gcn::coordinator::corpus_store::CorpusStore;
 use spa_gcn::coordinator::pipeline::{Pipeline, PipelineConfig};
 use spa_gcn::coordinator::query::{Outcome, Query};
 use spa_gcn::ged::ged_similarity;
@@ -76,12 +77,18 @@ fn pairs(cfg: &ModelConfig, seed: u64, count: usize) -> Vec<(Graph, Graph)> {
 
 fn start_server(ncfg: NetConfig, corpora: Vec<Arc<Corpus>>) -> NetServer {
     let cfg = model();
+    // Wrap pre-built corpora store-shaped: the front door serves epoch
+    // snapshots, never bare corpora.
+    let stores = corpora
+        .into_iter()
+        .map(|c| Arc::new(CorpusStore::adopt(c)))
+        .collect();
     let server = NetServer::start(
         cfg.clone(),
         vec![native_factory(&cfg)],
         PipelineConfig::default(),
         ncfg,
-        corpora,
+        stores,
         "127.0.0.1:0",
     )
     .expect("server binds loopback");
@@ -195,8 +202,13 @@ fn wire_topk_matches_in_process_ranking() {
     assert_eq!((n_max, num_labels), (cfg.n_max, cfg.num_labels));
     assert_eq!(corpora, vec!["aids-synth".to_string()]);
     match client.topk("aids-synth", query, k).unwrap().resp {
-        Response::TopK { ranked, degraded } => {
+        Response::TopK {
+            ranked,
+            degraded,
+            epoch,
+        } => {
             assert!(!degraded);
+            assert_eq!(epoch, 0, "adopted standalone corpus keeps its epoch (0)");
             assert_eq!(ranked.len(), baseline.len());
             for (wire, base) in ranked.iter().zip(&baseline) {
                 assert_eq!(wire.0, base.0, "candidate order must match");
@@ -213,6 +225,60 @@ fn wire_topk_matches_in_process_ranking() {
     }
     drop(client);
     server.finish();
+}
+
+#[test]
+fn wire_mutations_swap_epochs_and_budgeted_topk_prunes() {
+    let cfg = model();
+    let mut rng = Rng::new(505);
+    let db = GraphDb::synthesize(&mut rng, Family::Aids, 12, cfg.n_max, cfg.num_labels);
+    let corpus = Arc::new(Corpus::from_db("aids-synth", &db, cfg.n_max, cfg.num_labels).unwrap());
+    let server = start_server(generous_net(), vec![corpus]);
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, "mutator").unwrap();
+
+    // Upsert a fresh candidate: the adopted generation-0 corpus swaps
+    // to generation 1 with one more entry.
+    let g = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    match client.upsert("aids-synth", 100, g.clone()).unwrap().resp {
+        Response::Mutated { epoch, size } => assert_eq!((epoch, size), (1, 13)),
+        other => panic!("unexpected upsert response {other:?}"),
+    }
+    // Fingerprint-identical upsert: dedup no-op, no epoch bump.
+    match client.upsert("aids-synth", 100, g).unwrap().resp {
+        Response::Mutated { epoch, size } => assert_eq!((epoch, size), (1, 13)),
+        other => panic!("unexpected dedup response {other:?}"),
+    }
+    // Queries admitted after the swap are pinned to the new epoch, and
+    // a budget caps how deep the fine stage ranks.
+    let q = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    match client.topk_budgeted("aids-synth", q, 3, 4).unwrap().resp {
+        Response::TopK { ranked, epoch, .. } => {
+            assert_eq!(epoch, 1, "response pinned to the admission snapshot");
+            assert!(!ranked.is_empty() && ranked.len() <= 3);
+        }
+        other => panic!("unexpected budgeted response {other:?}"),
+    }
+    // Remove swaps again; removing an id the store never held is an
+    // acknowledged no-op at the same epoch.
+    match client.remove("aids-synth", 100).unwrap().resp {
+        Response::Mutated { epoch, size } => assert_eq!((epoch, size), (2, 12)),
+        other => panic!("unexpected remove response {other:?}"),
+    }
+    match client.remove("aids-synth", 100).unwrap().resp {
+        Response::Mutated { epoch, size } => assert_eq!((epoch, size), (2, 12)),
+        other => panic!("unexpected no-op remove response {other:?}"),
+    }
+    // Mutations against unknown corpora answer typed, like queries.
+    let g2 = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
+    match client.upsert("no-such-corpus", 1, g2).unwrap().resp {
+        Response::Error { code, .. } => assert_eq!(code, "unknown_corpus"),
+        other => panic!("unexpected response {other:?}"),
+    }
+    drop(client);
+    let metrics = server.finish();
+    let t = metrics.render_table("mutations");
+    assert_eq!(t.get("cascade queries"), Some("1"), "{}", t.render());
 }
 
 #[test]
@@ -326,7 +392,7 @@ fn degraded_mode_falls_back_to_ged_and_shrinks_k() {
     // Top-k depth shrinks to degraded_topk.
     let q = generate(&mut rng, Family::Aids, cfg.n_max, cfg.num_labels);
     match client.topk("aids-synth", q, 7).unwrap().resp {
-        Response::TopK { ranked, degraded } => {
+        Response::TopK { ranked, degraded, .. } => {
             assert!(degraded);
             assert_eq!(ranked.len(), 3, "k must shrink to degraded_topk");
         }

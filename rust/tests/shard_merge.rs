@@ -16,7 +16,7 @@
 use std::collections::HashSet;
 use std::sync::Arc;
 
-use spa_gcn::coordinator::corpus::{Corpus, CorpusShard};
+use spa_gcn::coordinator::corpus::{Corpus, CorpusShard, ShardPartial};
 use spa_gcn::coordinator::pipeline::{Pipeline, PipelineConfig};
 use spa_gcn::coordinator::query::Query;
 use spa_gcn::graph::encode::encode;
@@ -88,9 +88,13 @@ fn merged_sharded_topk_is_bit_identical_across_shard_counts_and_k() {
             let shards = corpus.shards(n);
             let covered: usize = shards.iter().map(CorpusShard::len).sum();
             assert_eq!(covered, corpus.len(), "trial {trial}: shards must tile");
-            let partials: Vec<(CorpusShard, &[f32])> = shards
+            let partials: Vec<ShardPartial> = shards
                 .iter()
-                .map(|s| (*s, &scores[s.start..s.end]))
+                .map(|s| ShardPartial {
+                    epoch: corpus.epoch(),
+                    shard: *s,
+                    scores: &scores[s.start..s.end],
+                })
                 .collect();
             for k in [0, 1, k_total / 2, k_total, k_total + 7] {
                 assert_eq!(
@@ -145,8 +149,14 @@ fn sharded_engine_scores_merge_bit_identical_to_score_corpus() {
                 (*s, out.scores)
             })
             .collect();
-        let borrowed: Vec<(CorpusShard, &[f32])> =
-            partials.iter().map(|(s, v)| (*s, v.as_slice())).collect();
+        let borrowed: Vec<ShardPartial> = partials
+            .iter()
+            .map(|(s, v)| ShardPartial {
+                epoch: corpus.epoch(),
+                shard: *s,
+                scores: v.as_slice(),
+            })
+            .collect();
         for k in [0usize, 1, 5, 10, 17] {
             assert_eq!(
                 corpus.rank_sharded(&borrowed, k).unwrap(),
